@@ -1,0 +1,63 @@
+//! Ablation sweep: every exported UTRC design point on one model — metric ×
+//! schedule × (q_hidden, q_residual) × ratio — in one run, printed as a
+//! sortable table. This is the exploratory companion to Tables 3/4/5.
+//!
+//! ```sh
+//! cargo run --release --example ablation_sweep -- --model mamba2-base --items 30
+//! ```
+
+use anyhow::Result;
+
+use tor_ssm::bench::Ctx;
+use tor_ssm::eval::scoring::Scheme;
+use tor_ssm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["fresh"]);
+    let artifacts = args.get_or("artifacts", &tor_ssm::artifacts_dir());
+    let model = args.get_or("model", "mamba2-base");
+    let items = args.usize_or("items", 30);
+    let mut ctx = Ctx::new(&artifacts, items, args.flag("fresh"))?;
+
+    let me = ctx.man.model(&model)?.clone();
+    let mut entries: Vec<_> = me
+        .hlo
+        .values()
+        .filter(|e| e.kind == "eval")
+        .cloned()
+        .collect();
+    entries.sort_by(|a, b| a.tag.cmp(&b.tag));
+    println!("{} eval variants exported for {model}\n", entries.len());
+
+    let mut rows = Vec::new();
+    for e in &entries {
+        let r = ctx.eval_variant(&model, e)?;
+        let red = e.reduction.clone().unwrap_or_default();
+        rows.push((
+            red.method.clone(),
+            red.flops_reduction,
+            red.metric.clone(),
+            red.q_hidden,
+            red.q_residual,
+            format!("{:?}", red.locations),
+            r.lambada_ppl(Scheme::Truncated),
+            r.avg_acc(Scheme::Truncated) * 100.0,
+            r.avg_acc(Scheme::Aligned) * 100.0,
+        ));
+    }
+    // Sort by avg accuracy (desc) to surface the best design points.
+    rows.sort_by(|a, b| b.7.partial_cmp(&a.7).unwrap());
+
+    println!(
+        "| {:<6} | {:>5} | {:<6} | {:>4} | {:>4} | {:<14} | {:>9} | {:>6} | {:>8} |",
+        "method", "FLOPs", "metric", "qh", "qr", "locations", "PPL", "avg", "avg(al)"
+    );
+    println!("|{}", "---|".repeat(9));
+    for (m, fr, metric, qh, qr, loc, ppl, acc, acc_a) in rows {
+        println!(
+            "| {m:<6} | {:>4.0}% | {metric:<6} | {qh:>4.1} | {qr:>4.1} | {loc:<14} | {ppl:>9.2} | {acc:>6.1} | {acc_a:>8.1} |",
+            fr * 100.0
+        );
+    }
+    Ok(())
+}

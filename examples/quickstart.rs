@@ -1,0 +1,79 @@
+//! Quickstart: load an AOT-compiled Mamba variant, run one reduced vs dense
+//! forward on a real task prompt, and print what token reduction did.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::{Context, Result};
+
+use tor_ssm::data::load_tasks;
+use tor_ssm::eval::scoring::SeqLogits;
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::{HostTensor, Runtime};
+use tor_ssm::tokenizer::Tokenizer;
+use tor_ssm::train::load_best_weights;
+
+fn main() -> Result<()> {
+    let man = Manifest::load(tor_ssm::artifacts_dir())?;
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+
+    let model = man.model("mamba-small")?.clone();
+    let (weights, trained) = load_best_weights(&man, &model)?;
+    println!(
+        "model: {} ({} params, {} weights)",
+        model.name,
+        model.param_count,
+        if trained { "trained" } else { "INIT — run `repro train --model mamba-small`" }
+    );
+    let dw = rt.upload_weights(&man, &model, &weights)?;
+
+    // A real task prompt from the benchmark set.
+    let tok = Tokenizer::load(man.path(&man.vocab_file))?;
+    let tasks = load_tasks(man.path(&man.tasks_file))?;
+    let item = &tasks[0].items[0]; // s-lambada cloze
+    println!("\nprompt: \"{} ...\"", &item.context[..item.context.len().min(120)]);
+    println!("cloze target: {:?}", item.target);
+
+    let ids: Vec<i32> = tok.encode(&item.context).iter().map(|&x| x as i32).collect();
+    let pos = ids.len(); // position whose prediction we inspect
+
+    for (label, method, ratio) in [
+        ("dense", "dense", 0.0),
+        ("UTRC @20% FLOPs", "utrc", 0.20),
+    ] {
+        let entry = model.find_eval(method, ratio, None, None, None, None)?;
+        let exe = rt.load_entry(&man, entry)?;
+        let mut tokens = ids.clone();
+        tokens.resize(entry.seq_len, 0);
+        let mut flat = Vec::new();
+        for _ in 0..entry.batch {
+            flat.extend_from_slice(&tokens);
+        }
+        let tok_buf = rt.upload(&HostTensor::i32(vec![entry.batch, entry.seq_len], flat))?;
+        let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
+        args.push(&tok_buf);
+
+        let t0 = std::time::Instant::now();
+        let outs = exe.run_b(&args).context("forward")?;
+        let dt = t0.elapsed();
+
+        let logits = outs[0].as_f32()?;
+        let kept = outs[1].as_i32()?;
+        let out_len = entry.out_len;
+        let v = model.vocab_size;
+        let sl = SeqLogits { logits: &logits[..out_len * v], out_len, vocab: v, kept: &kept[..out_len] };
+        let pred = sl.aligned_argmax(pos).unwrap_or(-1);
+        println!(
+            "\n[{label}] tokens {} -> {} surviving | forward {dt:?}\n  predicted next word: {:?} (target {:?})",
+            entry.seq_len,
+            out_len,
+            tok.word(pred.max(0) as u32).unwrap_or("?"),
+            item.target,
+        );
+    }
+
+    println!("\nSee `repro table all` / `repro figure all` for the paper's experiments.");
+    Ok(())
+}

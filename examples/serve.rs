@@ -1,0 +1,118 @@
+//! Serving demo: the full coordinator path — router → dynamic batcher →
+//! engine (prefill + decode) — on a synthetic request trace, reporting
+//! latency percentiles and throughput for dense vs token-reduced lanes.
+//!
+//! ```sh
+//! cargo run --release --example serve -- --requests 24 --gen-tokens 24
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use tor_ssm::coordinator::batcher::Batcher;
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::metrics::Metrics;
+use tor_ssm::coordinator::router::{Policy, Router};
+use tor_ssm::coordinator::Request;
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::Runtime;
+use tor_ssm::train::load_best_weights;
+use tor_ssm::util::cli::Args;
+use tor_ssm::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[]);
+    let artifacts = args.get_or("artifacts", &tor_ssm::artifacts_dir());
+    let model = args.get_or("model", "mamba-small");
+    let n_requests = args.usize_or("requests", 24);
+    let gen_tokens = args.usize_or("gen-tokens", 24);
+
+    let man = Manifest::load(&artifacts)?;
+    let rt = Runtime::cpu()?;
+    let me = man.model(&model)?.clone();
+    let (w, trained) = load_best_weights(&man, &me)?;
+    println!(
+        "serving {model} ({}; {} requests, {gen_tokens} gen tokens each)",
+        if trained { "trained weights" } else { "INIT weights" },
+        n_requests
+    );
+
+    let lanes = ["dense", "utrc@0.2"];
+    let engines: Vec<Engine> = lanes
+        .iter()
+        .map(|v| Engine::new(&rt, &man, &me, &w, v))
+        .collect::<Result<_>>()?;
+    println!("lanes: {lanes:?} (batch {}, prompt frame {})", engines[0].batch, engines[0].prefill_len);
+
+    let mut router = Router::new(Policy::CostAware { long_prompt: man.prefill_seq_len / 2 }, &lanes);
+    let mut batchers: Vec<Batcher> = engines
+        .iter()
+        .map(|e| Batcher::new(e.batch, Duration::from_millis(2)))
+        .collect();
+    let mut per_lane: Vec<Metrics> = lanes.iter().map(|_| Metrics::default()).collect();
+
+    let mut rng = Rng::new(11);
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        // Bimodal prompt lengths: short chat-like vs long document-like.
+        let plen = if rng.f64() < 0.5 { man.prefill_seq_len } else { man.prefill_seq_len / 4 };
+        let prompt: Vec<i32> = (4..4 + plen).map(|t| (t % me.vocab_size) as i32).collect();
+        let req = Request {
+            id: i as u64,
+            prompt,
+            gen_tokens,
+            variant: String::new(),
+            arrived_us: t0.elapsed().as_micros() as u64,
+        };
+        let lane = router.route(&req)?;
+        let li = lanes.iter().position(|l| *l == lane).unwrap();
+        router.note_enqueued(&lane);
+        batchers[li].push(req);
+
+        for (bi, b) in batchers.iter_mut().enumerate() {
+            while let Some(batch) = b.poll(Instant::now()) {
+                run_batch(&rt, &engines[bi], &batch, &mut per_lane[bi], &mut router, &lanes[bi], t0)?;
+            }
+        }
+    }
+    for (bi, b) in batchers.iter_mut().enumerate() {
+        while let Some(batch) = b.drain() {
+            run_batch(&rt, &engines[bi], &batch, &mut per_lane[bi], &mut router, &lanes[bi], t0)?;
+        }
+    }
+
+    let wall = t0.elapsed();
+    println!("\nper-lane results:");
+    for (lane, m) in lanes.iter().zip(per_lane.iter_mut()) {
+        m.wall = wall;
+        println!("  {lane:<10} {}", m.summary());
+    }
+    let total_gen: u64 = per_lane.iter().map(|m| m.generated_tokens).sum();
+    println!(
+        "\naggregate: {n_requests} requests, {total_gen} tokens generated in {:.2}s -> {:.1} tok/s",
+        wall.as_secs_f64(),
+        total_gen as f64 / wall.as_secs_f64()
+    );
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    rt: &Runtime,
+    engine: &Engine,
+    batch: &[Request],
+    metrics: &mut Metrics,
+    router: &mut Router,
+    lane: &str,
+    t0: Instant,
+) -> Result<()> {
+    let responses = engine.serve_batch(rt, batch)?;
+    for (req, resp) in batch.iter().zip(&responses) {
+        let queue_us = t0.elapsed().as_micros() as u64 - req.arrived_us;
+        metrics.requests += 1;
+        metrics.record(req.prompt.len(), resp.generated.len(), resp.prefill_us, resp.decode_us, queue_us);
+        router.note_done(lane);
+    }
+    Ok(())
+}

@@ -1,0 +1,409 @@
+"""AOT export: lower every model variant to HLO text + emit data artifacts.
+
+Interchange is HLO *text*, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Outputs under --out (default ../artifacts):
+
+    manifest.json            the single source of truth the rust side reads
+    vocab.json               tokenizer vocabulary
+    tasks.json               six benchmark task sets
+    train.bin / val.bin      int32 token streams
+    weights/<model>/init.bin concatenated f32 params (param_order layout)
+    hlo/<model>/<tag>.hlo.txt
+    golden.json              python-side logits fixture for the rust runtime
+
+Exports are cached: a variant is re-lowered only if its .hlo.txt is missing
+or --force is given (make artifacts stays a no-op on unchanged inputs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from .configs import (
+    DECODE_BATCH, DEFAULT_LOCATIONS, EVAL_BATCH, EVAL_LEN, MODELS,
+    PREFILL_BATCH, PREFILL_LEN, TABLE4_LOCATIONS, TRAIN_BATCH, TRAIN_LEN,
+    ModelConfig, ReductionConfig,
+)
+from .flops import SchedulePlan, peak_memory_bytes, solve_schedule
+from .layers import init_params, param_order, params_from_list, params_to_list
+from .model import decode_step, forward, init_decode_state, prefill_forward
+from .tokenizer import Tokenizer
+from .training import train_step
+
+SEED = 1234
+TRAIN_PASSAGES = 9000
+VAL_PASSAGES = 400
+ITEMS_PER_TASK = 60
+TOTAL_TRAIN_STEPS = 250  # baked into the train-step LR schedule
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(cfg: ModelConfig):
+    p = init_params(cfg, seed=0)
+    return [_spec(p[name].shape, p[name].dtype) for name in param_order(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Variant enumeration: exactly what the experiment index (DESIGN.md §5) needs.
+# ---------------------------------------------------------------------------
+
+RATIOS_SMALL = (0.10, 0.20)
+RATIOS_BASE = (0.10, 0.20, 0.30)
+
+
+def eval_variants(model: str, quick: bool = False) -> List[ReductionConfig]:
+    locs = DEFAULT_LOCATIONS[model]
+    out = [ReductionConfig("dense")]
+    if quick:
+        out += [
+            ReductionConfig(m, 0.20, locs) for m in ("utrc", "evit", "pumer")
+        ]
+        return out
+    ratios = RATIOS_BASE if model.endswith("base") else RATIOS_SMALL
+    for r in ratios:
+        for m in ("utrc", "evit", "pumer"):
+            out.append(ReductionConfig(m, r, locs))
+    if model == "mamba2-base":
+        # Table 6: LTMP baseline.
+        out += [ReductionConfig("ltmp", r, locs) for r in RATIOS_BASE]
+        # Table 3: importance-metric ablation @20%.
+        out += [ReductionConfig("utrc", 0.20, locs, metric=m) for m in ("l1", "l2", "noclip")]
+        # Table 4: reduction-location ablation @20%.
+        out += [
+            ReductionConfig("utrc", 0.20, tuple(l))
+            for l in TABLE4_LOCATIONS
+            if tuple(l) != locs
+        ]
+        # Table 5: design-choice grid @30% (default qh=0.5, qr=0 is in `out`).
+        for qh, qr in ((0.0, 0.0), (1.0, 1.0), (0.8, 0.2), (0.2, 0.8), (0.5, 0.5), (0.5, 1.0)):
+            out.append(ReductionConfig("utrc", 0.30, locs, q_hidden=qh, q_residual=qr))
+    if model == "mamba-base":
+        # Table 3 also reports Mamba-2.8B (our mamba-base).
+        out += [ReductionConfig("utrc", 0.20, locs, metric=m) for m in ("l1", "l2", "noclip")]
+    return out
+
+
+def prefill_variants(model: str, quick: bool = False) -> List[ReductionConfig]:
+    locs = DEFAULT_LOCATIONS[model]
+    out = [ReductionConfig("dense")]
+    ratios = (0.20,) if quick else (0.10, 0.20, 0.30)
+    out += [ReductionConfig("utrc", r, locs) for r in ratios]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Export helpers
+# ---------------------------------------------------------------------------
+
+
+def _plan_for(cfg: ModelConfig, red: ReductionConfig, seq_len: int) -> Optional[SchedulePlan]:
+    if red.method == "dense":
+        return None
+    return solve_schedule(cfg, seq_len, red.locations, red.flops_reduction)
+
+
+def _write_if_needed(path: str, producer, force: bool) -> bool:
+    if os.path.exists(path) and not force:
+        return False
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    text = producer()
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return True
+
+
+def export_eval(out_dir, cfg, red, plan, force) -> Dict:
+    tag = red.tag()
+    rel = f"hlo/{cfg.name}/{tag}.hlo.txt"
+    path = os.path.join(out_dir, rel)
+
+    def produce():
+        def fn(*args):
+            params = params_from_list(cfg, args[:-1])
+            logits, kept = forward(params, args[-1], cfg, red, plan, use_kernels=True)
+            return (logits, kept)
+
+        specs = _param_specs(cfg) + [_spec((EVAL_BATCH, EVAL_LEN), jnp.int32)]
+        return to_hlo_text(jax.jit(fn).lower(*specs))
+
+    wrote = _write_if_needed(path, produce, force)
+    out_len = plan.final_len if plan else EVAL_LEN
+    entry = {
+        "file": rel, "kind": "eval", "batch": EVAL_BATCH, "seq_len": EVAL_LEN,
+        "out_len": out_len, "reduction": dataclasses.asdict(red),
+    }
+    if plan:
+        entry["plan"] = dataclasses.asdict(plan)
+        entry["peak_memory_bytes"] = peak_memory_bytes(cfg, plan, EVAL_BATCH)
+    else:
+        dense_plan = solve_schedule(cfg, EVAL_LEN, (), 0.0)
+        entry["peak_memory_bytes"] = peak_memory_bytes(cfg, dense_plan, EVAL_BATCH)
+    return entry, wrote
+
+
+def export_prefill(out_dir, cfg, red, plan, force) -> Dict:
+    tag = f"prefill_{red.tag()}"
+    rel = f"hlo/{cfg.name}/{tag}.hlo.txt"
+    path = os.path.join(out_dir, rel)
+
+    def produce():
+        def fn(*args):
+            params = params_from_list(cfg, args[:-1])
+            return prefill_forward(params, args[-1], cfg, red, plan)
+
+        specs = _param_specs(cfg) + [_spec((PREFILL_BATCH, PREFILL_LEN), jnp.int32)]
+        return to_hlo_text(jax.jit(fn).lower(*specs))
+
+    wrote = _write_if_needed(path, produce, force)
+    entry = {
+        "file": rel, "kind": "prefill", "batch": PREFILL_BATCH,
+        "seq_len": PREFILL_LEN, "reduction": dataclasses.asdict(red),
+    }
+    if plan:
+        entry["plan"] = dataclasses.asdict(plan)
+    return entry, wrote
+
+
+def export_decode(out_dir, cfg, force) -> Dict:
+    rel = f"hlo/{cfg.name}/decode_step.hlo.txt"
+    path = os.path.join(out_dir, rel)
+    conv0, ssm0 = init_decode_state(cfg, DECODE_BATCH)
+
+    def produce():
+        def fn(*args):
+            n = len(param_order(cfg))
+            params = params_from_list(cfg, args[:n])
+            token, conv, ssm = args[n], args[n + 1], args[n + 2]
+            return decode_step(params, token, conv, ssm, cfg)
+
+        specs = _param_specs(cfg) + [
+            _spec((DECODE_BATCH,), jnp.int32),
+            _spec(conv0.shape, conv0.dtype),
+            _spec(ssm0.shape, ssm0.dtype),
+        ]
+        return to_hlo_text(jax.jit(fn).lower(*specs))
+
+    wrote = _write_if_needed(path, produce, force)
+    return {
+        "file": rel, "kind": "decode", "batch": DECODE_BATCH,
+        "conv_state_shape": list(conv0.shape), "ssm_state_shape": list(ssm0.shape),
+    }, wrote
+
+
+def export_train(out_dir, cfg, force) -> Dict:
+    rel = f"hlo/{cfg.name}/train_step.hlo.txt"
+    path = os.path.join(out_dir, rel)
+    n = len(param_order(cfg))
+
+    def produce():
+        def fn(*args):
+            p = list(args[:n])
+            m = list(args[n : 2 * n])
+            v = list(args[2 * n : 3 * n])
+            step, tokens = args[3 * n], args[3 * n + 1]
+            np_, nm, nv, nstep, loss = train_step(cfg, p, m, v, step, tokens, TOTAL_TRAIN_STEPS)
+            return tuple(np_) + tuple(nm) + tuple(nv) + (nstep, loss)
+
+        specs = _param_specs(cfg) * 3 + [
+            _spec((), jnp.int32),
+            _spec((TRAIN_BATCH, TRAIN_LEN + 1), jnp.int32),
+        ]
+        return to_hlo_text(jax.jit(fn).lower(*specs))
+
+    wrote = _write_if_needed(path, produce, force)
+    return {
+        "file": rel, "kind": "train", "batch": TRAIN_BATCH,
+        "seq_len": TRAIN_LEN + 1, "n_params": n, "total_steps": TOTAL_TRAIN_STEPS,
+    }, wrote
+
+
+def export_weights(out_dir, cfg, force) -> Tuple[List[Dict], str]:
+    rel = f"weights/{cfg.name}/init.bin"
+    path = os.path.join(out_dir, rel)
+    p = init_params(cfg, seed=SEED)
+    entries = []
+    offset = 0
+    for name in param_order(cfg):
+        arr = np.asarray(p[name], np.float32)
+        entries.append(
+            {"name": name, "shape": list(arr.shape), "dtype": "f32",
+             "offset": offset, "bytes": arr.nbytes}
+        )
+        offset += arr.nbytes
+    if not os.path.exists(path) or force:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "wb") as f:
+            for name in param_order(cfg):
+                f.write(np.asarray(p[name], np.float32).tobytes())
+    return entries, rel
+
+
+def export_golden(out_dir, cfg, force) -> Dict:
+    """Fixture pinning the rust runtime to python numerics (dense, init
+    weights, deterministic tokens; strided logits slice)."""
+    rel = "golden.json"
+    path = os.path.join(out_dir, rel)
+    if os.path.exists(path) and not force:
+        return {"file": rel}
+    p = init_params(cfg, seed=SEED)
+    tokens = (np.arange(EVAL_BATCH * EVAL_LEN, dtype=np.int32).reshape(EVAL_BATCH, EVAL_LEN) * 7) % cfg.vocab_size
+    logits, kept = forward(p, jnp.asarray(tokens), cfg, use_kernels=True)
+    logits = np.asarray(logits)
+    sl = logits[:, ::16, ::64]
+    out = {
+        "model": cfg.name,
+        "tokens_formula": "(arange(B*L)*7) % V, row-major",
+        "slice": "logits[:, ::16, ::64]",
+        "batch": EVAL_BATCH, "seq_len": EVAL_LEN,
+        "values": sl.flatten().tolist(),
+        "shape": list(sl.shape),
+    }
+    with open(path, "w") as f:
+        json.dump(out, f)
+    return {"file": rel}
+
+
+def export_data(out_dir, force) -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    vocab_path = os.path.join(out_dir, "vocab.json")
+    train_path = os.path.join(out_dir, "train.bin")
+    val_path = os.path.join(out_dir, "val.bin")
+    tasks_path = os.path.join(out_dir, "tasks.json")
+    if all(os.path.exists(p) for p in (vocab_path, train_path, val_path, tasks_path)) and not force:
+        return {"vocab": "vocab.json", "train": "train.bin", "val": "val.bin", "tasks": "tasks.json"}
+
+    words = data_mod.build_corpus(SEED, TRAIN_PASSAGES, "train")
+    tok = Tokenizer.build(words + data_mod.all_words(), size=MODELS["mamba-small"].vocab_size)
+    tok.save(vocab_path)
+
+    ids = np.asarray(tok.encode(" ".join(words)), np.int32)
+    ids.tofile(train_path)
+    val_words = data_mod.build_corpus(SEED + 1, VAL_PASSAGES, "val")
+    np.asarray(tok.encode(" ".join(val_words)), np.int32).tofile(val_path)
+
+    tasks = data_mod.build_tasks(SEED, ITEMS_PER_TASK)
+    with open(tasks_path, "w") as f:
+        f.write(data_mod.tasks_to_json(tasks))
+    # Vocab closure check: every task word must tokenize without <unk>.
+    for items in tasks.values():
+        for it in items:
+            for text in [it.context] + it.choices:
+                assert tok.unk_id not in tok.encode(text), f"OOV in task text: {text!r}"
+    return {"vocab": "vocab.json", "train": "train.bin", "val": "val.bin", "tasks": "tasks.json"}
+
+
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--quick", action="store_true", help="minimal export set (tests/dev)")
+    ap.add_argument("--models", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    t0 = time.time()
+
+    model_names = (
+        args.models.split(",") if args.models
+        else (["mamba-small"] if args.quick else ["mamba-small", "mamba-base", "mamba2-small", "mamba2-base"])
+    )
+
+    manifest: Dict = {
+        "data": export_data(out_dir, args.force),
+        "eval": {"batch": EVAL_BATCH, "seq_len": EVAL_LEN},
+        "prefill": {"batch": PREFILL_BATCH, "seq_len": PREFILL_LEN},
+        "decode": {"batch": DECODE_BATCH},
+        "train": {"batch": TRAIN_BATCH, "seq_len": TRAIN_LEN + 1, "total_steps": TOTAL_TRAIN_STEPS},
+        "models": {},
+    }
+
+    n_lowered = 0
+    for name in model_names:
+        cfg = MODELS[name]
+        params_meta, weights_rel = export_weights(out_dir, cfg, args.force)
+        hlos: Dict[str, Dict] = {}
+
+        for red in eval_variants(name, args.quick):
+            plan = _plan_for(cfg, red, EVAL_LEN)
+            entry, wrote = export_eval(out_dir, cfg, red, plan, args.force)
+            hlos[red.tag()] = entry
+            n_lowered += wrote
+            if wrote:
+                print(f"[aot] {name} eval {red.tag()} ({time.time()-t0:.0f}s)", flush=True)
+
+        for red in prefill_variants(name, args.quick):
+            plan = _plan_for(cfg, red, PREFILL_LEN)
+            entry, wrote = export_prefill(out_dir, cfg, red, plan, args.force)
+            hlos[f"prefill_{red.tag()}"] = entry
+            n_lowered += wrote
+            if wrote:
+                print(f"[aot] {name} prefill {red.tag()} ({time.time()-t0:.0f}s)", flush=True)
+
+        entry, wrote = export_decode(out_dir, cfg, args.force)
+        hlos["decode_step"] = entry
+        n_lowered += wrote
+        entry, wrote = export_train(out_dir, cfg, args.force)
+        hlos["train_step"] = entry
+        n_lowered += wrote
+
+        manifest["models"][name] = {
+            "config": dataclasses.asdict(cfg),
+            "arch": cfg.arch,
+            "param_count": cfg.param_count(),
+            "params": params_meta,
+            "init_weights": weights_rel,
+            "hlo": hlos,
+        }
+        print(f"[aot] {name} done ({time.time()-t0:.0f}s)", flush=True)
+
+    manifest["golden"] = export_golden(out_dir, MODELS["mamba-small"], args.force)
+
+    # Partial exports (--models) must MERGE into an existing manifest, not
+    # clobber the other models' entries.
+    man_path = os.path.join(out_dir, "manifest.json")
+    if args.models and os.path.exists(man_path):
+        with open(man_path) as f:
+            old = json.load(f)
+        merged = old.get("models", {})
+        merged.update(manifest["models"])
+        manifest["models"] = merged
+
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest; {n_lowered} modules lowered in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

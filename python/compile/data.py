@@ -1,0 +1,225 @@
+"""Synthetic world: corpus + the six benchmark analogues.
+
+This is the substitution substrate for the paper's evaluation data (DESIGN.md
+§3): a seeded grammar world whose passages state facts (who found what,
+where, which color, which tool serves which goal) and whose tasks query those
+facts with the same capability profile as the originals:
+
+    s-lambada    long-range cloze: the answer word is stated early in the
+                 passage, distractor facts intervene (PPL + accuracy)
+    s-hellaswag  4-way narrative continuation (place consistency)
+    s-piqa       2-way tool/goal affordance
+    s-arc-easy   4-way color QA, distractors absent from the passage
+    s-arc-chal   4-way color QA, distractors present in the passage (near)
+    s-wino       2-way pronoun-free coreference ("because <who> ...")
+
+All randomness flows from one seed; train/eval use disjoint
+(name, object, color) combinations so tasks are not memorized verbatim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import random
+from typing import Dict, List, Sequence, Tuple
+
+NAMES = [
+    "alice", "brock", "carol", "dylan", "elena", "felix", "gavin", "helen",
+    "irene", "jonas", "karen", "lewis", "maria", "nadia", "oscar", "paula",
+    "quinn", "ralph", "sofia", "tomas",
+]
+OBJECTS = [
+    "lantern", "compass", "ledger", "goblet", "mirror", "saddle", "anchor",
+    "bugle", "chisel", "dagger", "easel", "fiddle", "gavel", "hammock",
+    "inkwell", "kettle", "locket", "mortar", "needle", "organ", "pulley",
+    "quiver", "rudder", "sickle", "trowel", "urn", "vial", "whistle",
+]
+COLORS = [
+    "crimson", "amber", "violet", "emerald", "cobalt", "ivory", "charcoal",
+    "golden", "scarlet", "turquoise", "maroon", "silver",
+]
+SIZES = ["tiny", "small", "large", "huge", "narrow", "broad"]
+PLACES = [
+    "cellar", "attic", "orchard", "harbor", "meadow", "forge", "library",
+    "stable", "chapel", "market", "quarry", "mill", "tavern", "garden",
+]
+# goal -> tool, a fixed affordance map stated repeatedly in the corpus.
+AFFORDANCES = {
+    "dig": "shovel", "chop": "axe", "sew": "thread", "write": "quill",
+    "paint": "brush", "fish": "net", "climb": "rope", "sweep": "broom",
+    "carve": "knife", "weigh": "scale", "row": "oar", "plow": "yoke",
+    "grind": "pestle", "light": "torch", "pour": "jug", "hunt": "bow",
+    "bake": "oven", "drill": "auger", "reap": "scythe", "haul": "cart",
+}
+GOALS = sorted(AFFORDANCES)
+TOOLS = sorted(set(AFFORDANCES.values()))
+
+
+@dataclasses.dataclass
+class TaskItem:
+    context: str
+    choices: List[str]
+    answer: int
+    target: str = ""  # s-lambada only: the cloze word
+
+
+def _passage(rng: random.Random, names, objects, colors) -> Tuple[List[str], Dict]:
+    """One story: a key fact early, distractor facts, long-range restatement."""
+    name = rng.choice(names)
+    obj = rng.choice(objects)
+    color = rng.choice(colors)
+    place = rng.choice(PLACES)
+    sents = [
+        f"{name} found the {obj} in the {place} .",
+        f"the {obj} was {color} .",
+    ]
+    # Distractor middle: other facts with *other* objects and colors.
+    n_fill = rng.randint(2, 5)
+    used_objs = {obj}
+    fill_colors = []
+    for _ in range(n_fill):
+        kind = rng.randrange(4)
+        if kind == 0:
+            o2 = rng.choice([o for o in objects if o not in used_objs])
+            c2 = rng.choice([c for c in colors if c != color])
+            used_objs.add(o2)
+            fill_colors.append((o2, c2))
+            sents.append(f"the {o2} was {c2} .")
+        elif kind == 1:
+            g = rng.choice(GOALS)
+            sents.append(f"to {g} you use the {AFFORDANCES[g]} .")
+        elif kind == 2:
+            n2 = rng.choice(names)
+            sents.append(f"{n2} walked to the {rng.choice(PLACES)} .")
+        else:
+            sents.append(f"the {rng.choice(sorted(used_objs))} looked {rng.choice(SIZES)} .")
+    sents.append(f"in the end , the {obj} was {color} .")
+    meta = dict(name=name, obj=obj, color=color, place=place, fill_colors=fill_colors)
+    return sents, meta
+
+
+def _handoff(rng: random.Random, names, objects) -> str:
+    n1, n2 = rng.sample(names, 2)
+    obj = rng.choice(objects)
+    if rng.random() < 0.5:
+        return f"{n1} handed the {obj} to {n2} because {n1} wanted to give it away ."
+    return f"{n1} handed the {obj} to {n2} because {n2} asked for it ."
+
+
+def build_corpus(seed: int, n_passages: int, split: str = "train") -> List[str]:
+    """Word list for the training corpus. Train uses the first 3/4 of each
+    lexicon; eval items draw from held-out tails (see build_tasks)."""
+    rng = random.Random(seed if split == "train" else seed + 1)
+    names, objects, colors = _split_lexicons(split)
+    words: List[str] = []
+    for _ in range(n_passages):
+        if rng.random() < 0.2:
+            words.extend(_handoff(rng, names, objects).split())
+        sents, _ = _passage(rng, names, objects, colors)
+        for s in sents:
+            words.extend(s.split())
+    return words
+
+
+def _split_lexicons(split: str):
+    """Tasks reuse the whole lexicon (every word must be trained) but eval
+    *combinations* are freshly sampled with a different seed, so no passage
+    is seen verbatim."""
+    return NAMES, OBJECTS, COLORS
+
+
+def build_tasks(seed: int, items_per_task: int) -> Dict[str, List[TaskItem]]:
+    rng = random.Random(seed + 7919)
+    names, objects, colors = _split_lexicons("eval")
+    tasks: Dict[str, List[TaskItem]] = {k: [] for k in (
+        "s_lambada", "s_hellaswag", "s_piqa", "s_arc_easy", "s_arc_challenge", "s_wino",
+    )}
+
+    for _ in range(items_per_task):
+        # --- s-lambada: passage minus the final color word ------------------
+        sents, meta = _passage(rng, names, objects, colors)
+        full = " ".join(sents)
+        target = meta["color"]
+        stem = full.rsplit(f"{target} .", 1)[0].strip()
+        tasks["s_lambada"].append(TaskItem(context=stem, choices=[target], answer=0, target=target))
+
+        # --- s-hellaswag: 4-way place-consistent continuation ---------------
+        name = rng.choice(names)
+        place = rng.choice(PLACES)
+        goal = rng.choice(GOALS)
+        ctx = f"{name} walked to the {place} . {name} wanted to {goal} ."
+        wrong = rng.sample([p for p in PLACES if p != place], 3)
+        conts = [f"so {name} stayed in the {p} ." for p in [place] + wrong]
+        order = list(range(4))
+        rng.shuffle(order)
+        tasks["s_hellaswag"].append(
+            TaskItem(context=ctx, choices=[conts[i] for i in order], answer=order.index(0))
+        )
+
+        # --- s-piqa: 2-way affordance ---------------------------------------
+        goal = rng.choice(GOALS)
+        good = AFFORDANCES[goal]
+        bad = rng.choice([t for t in TOOLS if t != good])
+        pair = [f"to {goal} you use the {good} .", f"to {goal} you use the {bad} ."]
+        ans = rng.randrange(2)
+        if ans == 1:
+            pair.reverse()
+        tasks["s_piqa"].append(TaskItem(context="", choices=pair, answer=ans))
+
+        # --- s-arc-easy / s-arc-challenge: color QA --------------------------
+        sents, meta = _passage(rng, names, objects, colors)
+        ctx = " ".join(sents[:-1])  # drop the restatement: must recall mid-passage
+        q = f"question : what color was the {meta['obj']} ? answer :"
+        correct = meta["color"]
+        in_passage = [c for (_, c) in meta["fill_colors"]]
+        absent = [c for c in colors if c != correct and c not in in_passage]
+        rng.shuffle(absent)
+        easy = [correct] + absent[:3]
+        hard_pool = list(dict.fromkeys(in_passage)) + absent
+        hard = [correct] + [c for c in hard_pool if c != correct][:3]
+        for key, opts in (("s_arc_easy", easy), ("s_arc_challenge", hard)):
+            if len(opts) < 4:
+                opts = opts + [c for c in colors if c not in opts][: 4 - len(opts)]
+            order = list(range(4))
+            rng.shuffle(order)
+            tasks[key].append(
+                TaskItem(
+                    context=f"{ctx} {q}",
+                    choices=[opts[i] for i in order],
+                    answer=order.index(0),
+                )
+            )
+
+        # --- s-wino: who does "because <who> ..." refer to -------------------
+        n1, n2 = rng.sample(names, 2)
+        obj = rng.choice(objects)
+        giver_side = rng.random() < 0.5
+        ctx = f"{n1} handed the {obj} to {n2} because"
+        if giver_side:
+            choices = [f"{n1} wanted to give it away .", f"{n2} wanted to give it away ."]
+            ans = 0
+        else:
+            choices = [f"{n1} asked for it .", f"{n2} asked for it ."]
+            ans = 1
+        tasks["s_wino"].append(TaskItem(context=ctx, choices=choices, answer=ans))
+
+    return tasks
+
+
+def tasks_to_json(tasks: Dict[str, List[TaskItem]]) -> str:
+    return json.dumps(
+        {k: [dataclasses.asdict(it) for it in v] for k, v in tasks.items()}, indent=0
+    )
+
+
+def all_words() -> List[str]:
+    """Every word the grammar can emit (vocab closure check)."""
+    words = set(NAMES + OBJECTS + COLORS + SIZES + PLACES + GOALS + TOOLS)
+    words |= {
+        "found", "the", "in", "was", "to", "you", "use", "walked", "looked",
+        "end", ",", ".", "so", "stayed", "wanted", "give", "it", "away",
+        "asked", "for", "handed", "because", "question", ":", "what", "color",
+        "answer", "?",
+    }
+    return sorted(words)

@@ -1,0 +1,203 @@
+"""FLOPs model, schedule solver, and peak-memory model.
+
+This module is the python mirror of ``rust/src/reduction/`` (the rust side is
+the one used at runtime for reporting; this one bakes static keep-counts into
+the exported HLO graphs). The two implementations are cross-checked by a
+golden JSON test (``python/tests/test_flops.py`` writes fixtures that
+``rust/tests/schedule_golden.rs`` re-derives).
+
+FLOPs conventions: one multiply-accumulate = 2 FLOPs; elementwise = 1.
+Token reduction keeps per-layer cost linear in the live token count, so the
+schedule solver only needs per-layer per-token constants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+from .configs import ModelConfig
+
+
+def layer_flops_per_token(cfg: ModelConfig) -> float:
+    """FLOPs for one token through one block (projections + scan)."""
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    if cfg.arch == "mamba":
+        f = 2.0 * d * 2 * di  # in_proj
+        f += 2.0 * di * cfg.d_conv  # depthwise conv
+        f += 2.0 * di * (cfg.dt_rank_ + 2 * n)  # x_proj
+        f += 2.0 * cfg.dt_rank_ * di  # dt_proj
+        f += 9.0 * di * n  # selective scan: discretize + update + emit
+        f += 2.0 * di * d  # out_proj
+        f += 5.0 * di  # gate/silu/skip
+    else:
+        h = cfg.n_heads
+        d_in_proj = 2 * di + 2 * n + h
+        f = 2.0 * d * d_in_proj  # in_proj
+        f += 2.0 * (di + 2 * n) * cfg.d_conv  # conv over x,B,C
+        # SSD: intra-chunk "attention" (L_c x L_c per head) + state path.
+        c = cfg.chunk
+        f += 2.0 * c * n * 2  # C@B^T row + masked weights, amortized/token
+        f += 2.0 * c * cfg.headdim * h / max(h, 1) * h  # (CB)·x intra
+        f += 8.0 * di * n  # inter-chunk state update/emit
+        f += 2.0 * di * d  # out_proj
+        f += 6.0 * di  # gated norm / skip
+    return f
+
+
+def head_flops_per_token(cfg: ModelConfig) -> float:
+    return 2.0 * cfg.d_model * cfg.vocab_size
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePlan:
+    """Static token-count plan for one reduction variant.
+
+    seg_lens[i] is the live token count for layers in segment i; segment i
+    covers layers (locations[i-1], locations[i]] boundaries — concretely
+    layers 0..=locations[0] see seg_lens[0] tokens, layers
+    locations[0]+1..=locations[1] see seg_lens[1], etc.
+    removed[i] tokens are removed right after layer locations[i].
+    """
+
+    seq_len: int
+    locations: Tuple[int, ...]
+    seg_lens: Tuple[int, ...]
+    removed: Tuple[int, ...]
+    flops_reduction: float  # achieved (after integer rounding)
+
+    @property
+    def final_len(self) -> int:
+        return self.seg_lens[-1]
+
+    def len_at_layer(self, layer: int) -> int:
+        seg = 0
+        for i, loc in enumerate(self.locations):
+            if layer > loc:
+                seg = i + 1
+        return self.seg_lens[seg]
+
+
+def _even(x: float) -> int:
+    """Round to the nearest even integer, at least 2."""
+    return max(2, int(round(x / 2.0)) * 2)
+
+
+def _plan_for_ratio(
+    cfg: ModelConfig, seq_len: int, locations: Sequence[int], rho: float
+) -> SchedulePlan:
+    lens: List[int] = [seq_len]
+    removed: List[int] = []
+    cur = seq_len
+    for _ in locations:
+        nxt = _even(cur * rho)
+        nxt = min(nxt, cur)  # never grow
+        # at most half the tokens (the M_A set) can be removed at one site
+        nxt = max(nxt, cur - cur // 2)
+        removed.append(cur - nxt)
+        lens.append(nxt)
+        cur = nxt
+    dense = _total_flops(cfg, seq_len, locations, [seq_len] * (len(locations) + 1))
+    got = _total_flops(cfg, seq_len, locations, lens)
+    return SchedulePlan(
+        seq_len=seq_len,
+        locations=tuple(locations),
+        seg_lens=tuple(lens),
+        removed=tuple(removed),
+        flops_reduction=1.0 - got / dense,
+    )
+
+
+def _total_flops(
+    cfg: ModelConfig, seq_len: int, locations: Sequence[int], seg_lens: Sequence[int]
+) -> float:
+    per = layer_flops_per_token(cfg)
+    total = 0.0
+    seg = 0
+    for layer in range(cfg.n_layer):
+        if seg < len(locations) and layer > locations[seg]:
+            seg += 1
+        total += per * seg_lens[seg]
+    total += head_flops_per_token(cfg) * seg_lens[-1]
+    # embedding lookup is ~free (gather); exclude, as the paper's FLOPS do.
+    return total
+
+
+def solve_schedule(
+    cfg: ModelConfig,
+    seq_len: int,
+    locations: Sequence[int],
+    flops_reduction: float,
+    tol: float = 5e-4,
+) -> SchedulePlan:
+    """Find the fixed per-location keep-ratio hitting the FLOPs target.
+
+    The paper uses "a fixed compression ratio for each prune layer"; we
+    bisect on that ratio, then round live counts to even integers (the
+    importance classification needs an even split into M_A/M_B).
+    """
+    if flops_reduction <= 0.0 or not locations:
+        return _plan_for_ratio(cfg, seq_len, locations, 1.0)
+    for loc in locations:
+        if not (0 <= loc < cfg.n_layer):
+            raise ValueError(f"reduction location {loc} outside model ({cfg.n_layer} layers)")
+    lo, hi = 0.5, 1.0  # keep-ratio bounds; <=0.5 is the M_A-set limit
+    best = _plan_for_ratio(cfg, seq_len, locations, 1.0)
+    for _ in range(64):
+        mid = (lo + hi) / 2.0
+        plan = _plan_for_ratio(cfg, seq_len, locations, mid)
+        if abs(plan.flops_reduction - flops_reduction) < abs(
+            best.flops_reduction - flops_reduction
+        ):
+            best = plan
+        if plan.flops_reduction > flops_reduction:
+            lo = mid  # removing too much -> keep more
+        else:
+            hi = mid
+        if hi - lo < 1e-6:
+            break
+    if abs(best.flops_reduction - flops_reduction) > max(tol, 2.0 / seq_len):
+        # Integer rounding on short sequences can miss tight targets; that is
+        # fine for reporting (we record the achieved value), but surface
+        # gross misses loudly.
+        if abs(best.flops_reduction - flops_reduction) > 0.05:
+            raise ValueError(
+                f"schedule solver missed target {flops_reduction:.3f}: "
+                f"achieved {best.flops_reduction:.3f} for {cfg.name} L={seq_len}"
+            )
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Peak-memory model (Figures 3/5 substrate).
+# ---------------------------------------------------------------------------
+
+BYTES = 4  # f32 activations
+
+
+def activation_bytes_per_layer(cfg: ModelConfig, live_len: int, batch: int) -> int:
+    """Peak *live* set while computing one block at `live_len` tokens:
+    residual stream + the widest simultaneously-alive transients (the
+    in-projection output plus the conv output; later stages are narrower
+    and the earlier buffers are dead by then)."""
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    if cfg.arch == "mamba":
+        per_tok = d + 2 * di + di  # T + xz + conv(x)
+    else:
+        per_tok = d + (2 * di + 2 * n + cfg.n_heads) + (di + 2 * n)
+    state = di * n  # scan carry
+    return BYTES * (batch * live_len * per_tok + batch * state)
+
+
+def peak_memory_bytes(cfg: ModelConfig, plan: SchedulePlan, batch: int) -> int:
+    """Analytic peak for a full forward: weights + residual stream + the
+    widest layer working set + final logits buffer."""
+    weights = BYTES * cfg.param_count()
+    widest = 0
+    for layer in range(cfg.n_layer):
+        ll = plan.len_at_layer(layer)
+        residual = BYTES * batch * ll * cfg.d_model
+        widest = max(widest, residual + activation_bytes_per_layer(cfg, ll, batch))
+    logits = BYTES * batch * plan.final_len * cfg.vocab_size
+    return weights + max(widest, logits + BYTES * batch * plan.final_len * cfg.d_model)

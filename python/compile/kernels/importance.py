@@ -1,0 +1,58 @@
+"""Pallas token-importance kernel (paper Eq. 5 and the Table-3 ablations).
+
+A bandwidth-bound reduction: stream (TILE_L, Dp) tiles of the SSM hidden
+states through VMEM and emit one importance scalar per token. On TPU this is
+purely VPU work (no MXU); the tile height is a multiple of 8 sublanes and Dp
+is lane-aligned by construction (d_inner multiples of 128 for our configs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_L = 64
+
+_METRICS = ("clip", "noclip", "l1", "l2")
+
+
+def _make_kernel(metric: str):
+    def kernel(y_ref, o_ref):
+        y = y_ref[...]  # (tile, Dp)
+        if metric == "clip":
+            s = jnp.maximum(y, 0.0).mean(-1)
+        elif metric == "noclip":
+            s = y.mean(-1)
+        elif metric == "l1":
+            s = jnp.abs(y).mean(-1)
+        else:  # l2
+            s = jnp.sqrt(jnp.square(y).mean(-1))
+        o_ref[...] = s
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def token_importance(y, metric: str = "clip"):
+    """y (Bt, L, Dp) -> S (Bt, L); matches ``ref.importance_ref``."""
+    if metric not in _METRICS:
+        raise ValueError(f"unknown metric {metric!r}")
+    bt, L, dp = y.shape
+    tile = min(TILE_L, L)
+    if L % tile != 0:
+        pad = tile - L % tile
+        y = jnp.pad(y, ((0, 0), (0, pad), (0, 0)))
+    lp = y.shape[1]
+
+    kernel = pl.pallas_call(
+        _make_kernel(metric),
+        grid=(lp // tile,),
+        in_specs=[pl.BlockSpec((tile, dp), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((lp,), jnp.float32),
+        interpret=True,
+    )
+    return jax.vmap(kernel)(y)[:, :L]

@@ -1,0 +1,64 @@
+"""Pallas bipartite-matching kernel (paper Eq. 6-7).
+
+For each token a_i in the less-important set M_A, find its most
+cosine-similar counterpart in M_B. The whole (normalized) M_B tile stays
+resident in VMEM (Nb ≤ L/2 ≤ a few hundred rows — small), while M_A streams
+through in (TILE, D) tiles; each grid step is one (TILE, Nb) MXU matmul
+followed by a row-wise max/argmax on the VPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_A = 64
+
+
+def _match_kernel(a_ref, b_ref, f_ref, g_ref):
+    a = a_ref[...]  # (tile, D) — pre-normalized
+    b = b_ref[...]  # (Nb, D) — pre-normalized, resident
+    sim = a @ b.T  # (tile, Nb) MXU
+    f_ref[...] = jnp.argmax(sim, axis=-1).astype(jnp.int32)
+    g_ref[...] = jnp.max(sim, axis=-1)
+
+
+@jax.jit
+def cosine_match(a, b):
+    """a (Bt, Na, D), b (Bt, Nb, D) -> (f int32 (Bt, Na), g (Bt, Na));
+    matches ``ref.cosine_match_ref``."""
+    bt, na, d = a.shape
+    nb = b.shape[1]
+    an = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + 1e-6)
+    bn = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + 1e-6)
+
+    tile = min(TILE_A, na)
+    pad = (tile - na % tile) % tile
+    if pad:
+        an = jnp.pad(an, ((0, 0), (0, pad), (0, 0)))
+    lp = an.shape[1]
+
+    kernel = pl.pallas_call(
+        _match_kernel,
+        grid=(lp // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((nb, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lp,), jnp.int32),
+            jax.ShapeDtypeStruct((lp,), jnp.float32),
+        ],
+        interpret=True,
+    )
+
+    def one(ab, bb):
+        f, g = kernel(ab, bb)
+        return f[:na], g[:na]
+
+    return jax.vmap(one)(an, bn)

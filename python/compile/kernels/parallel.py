@@ -1,0 +1,113 @@
+"""Parallel (work-efficient) scan formulations in pure jnp.
+
+The sequential ``lax.scan`` oracles in ref.py lower to XLA while-loops whose
+per-step overhead dominates on CPU (measured ~10-30x slower end-to-end; see
+EXPERIMENTS.md §Perf L2). These formulations compute the same recurrences
+with log-depth / chunked-matmul parallelism and are what the TRAINING and
+PREFILL graphs use. They are validated against ref.py like the Pallas
+kernels.
+
+* ``selective_scan_par``: first-order recurrence h_t = a_t h_{t-1} + b_t via
+  ``lax.associative_scan`` on (a, b) pairs (Blelloch composition).
+* ``ssd_par``: Mamba-2 SSD in chunked form — intra-chunk masked matmuls, a
+  tiny inter-chunk associative scan on chunk summaries (same math as the
+  Pallas kernel in ssd_scan.py, vectorized over all chunks at once).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _first_order_combine(l, r):
+    """Compose two affine maps h -> a*h + b."""
+    al, bl = l
+    ar, br = r
+    return ar * al, ar * bl + br
+
+
+def selective_scan_par_with_state(x, dt, A, B, C, D):
+    """Same contract as ref.selective_scan_with_state_ref.
+
+    x, dt: (Bt, L, Di); A: (Di, N); B, C: (Bt, L, N); D: (Di,).
+    Returns (y (Bt, L, Di), h_final (Bt, Di, N)).
+    """
+    dA = jnp.exp(dt[..., None] * A[None, None])  # (Bt, L, Di, N)
+    dBx = (dt * x)[..., None] * B[:, :, None, :]  # (Bt, L, Di, N)
+    cumA, h = jax.lax.associative_scan(_first_order_combine, (dA, dBx), axis=1)
+    del cumA
+    y = (h * C[:, :, None, :]).sum(-1)  # (Bt, L, Di)
+    return y + x * D[None, None, :], h[:, -1]
+
+
+def selective_scan_par(x, dt, A, B, C, D):
+    return selective_scan_par_with_state(x, dt, A, B, C, D)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_par_with_state(x, dt, A, B, C, D, chunk: int = 64):
+    """Same contract as ref.ssd_with_state_ref, chunked-parallel.
+
+    x: (Bt, L, H, P); dt: (Bt, L, H); A: (H,); B, C: (Bt, L, N); D: (H,).
+    """
+    bt, L, H, P = x.shape
+    n = B.shape[-1]
+    c = min(chunk, L)
+    pad = (c - L % c) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    lp = x.shape[1]
+    nc = lp // c
+
+    xr = x.reshape(bt, nc, c, H, P)
+    dtr = dt.reshape(bt, nc, c, H)
+    Br = B.reshape(bt, nc, c, n)
+    Cr = C.reshape(bt, nc, c, n)
+
+    la = dtr * A[None, None, None, :]  # (bt, nc, c, H), <= 0
+    s = jnp.cumsum(la, axis=2)  # within-chunk cumulative log-decay
+
+    # Intra-chunk: (c, c) masked matmul per chunk (all chunks at once).
+    # Exponent clamped to <=0: the masked upper triangle otherwise overflows
+    # to inf at large dt and poisons the product with NaN (= the kept
+    # triangle is <=0, so the clamp is exact). Same fix as ssd_scan.py.
+    G = jnp.einsum("bkin,bkjn->bkij", Cr, Br)  # (bt, nc, c, c)
+    decay = jnp.exp(jnp.minimum(s[:, :, :, None, :] - s[:, :, None, :, :], 0.0))
+    mask = jnp.tril(jnp.ones((c, c), dtype=x.dtype))
+    M = G[..., None] * decay * mask[None, None, :, :, None]
+    xdt = xr * dtr[..., None]  # (bt, nc, c, H, P)
+    y_intra = jnp.einsum("bkijh,bkjhp->bkihp", M, xdt)
+
+    # Chunk summaries: contribution of chunk k to the state after chunk k.
+    w = jnp.exp(s[:, :, -1:, :] - s)  # (bt, nc, c, H) decay j -> chunk end
+    chunk_b = jnp.einsum("bkjh,bkjhp,bkjn->bkhpn", w, xdt, Br)  # (bt,nc,H,P,N)
+    chunk_a = jnp.exp(s[:, :, -1, :])  # (bt, nc, H) total chunk decay
+
+    # Inter-chunk: h_after_k = a_k * h_after_{k-1} + b_k (tiny scan, nc steps).
+    a_full = chunk_a[..., None, None]  # broadcast over (P, N)
+    a_full = jnp.broadcast_to(a_full, chunk_b.shape)
+    cumA, h_after = jax.lax.associative_scan(_first_order_combine, (a_full, chunk_b), axis=1)
+    del cumA
+    # State ENTERING chunk k = h_after_{k-1}; chunk 0 enters with zeros.
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_after[:, :1]), h_after[:, :-1]], axis=1
+    )  # (bt, nc, H, P, N)
+
+    # Inter-chunk output: read the entering state with within-chunk decay.
+    y_inter = jnp.einsum("bkhpn,bkin->bkihp", h_prev, Cr) * jnp.exp(s)[..., None]
+
+    y = (y_intra + y_inter).reshape(bt, lp, H, P)[:, :L]
+    h_final = h_after[:, -1]  # (bt, H, P, N)
+    # NOTE: with right-padding, pads decay the state but add ~0 (x=0, dt=0 ->
+    # la=0, xdt=0): a=exp(0)=1, b=0, so h_final is exact.
+    return y + x[:, :L] * D[None, None, :, None], h_final
+
+
+def ssd_par(x, dt, A, B, C, D, chunk: int = 64):
+    return ssd_par_with_state(x, dt, A, B, C, D, chunk=chunk)[0]

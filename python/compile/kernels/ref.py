@@ -1,0 +1,132 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness contract).
+
+Each function here is the semantic definition; the Pallas kernels in this
+package must match these to float tolerance under pytest/hypothesis sweeps
+(python/tests/test_kernels.py). Keep these dumb and obviously correct —
+``lax.scan`` over time, no chunking tricks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, A, B, C, D):
+    """Mamba-1 selective scan (Eq. 2 discretization, ZOH-simplified dB).
+
+    Shapes: x (B,L,Di), dt (B,L,Di) post-softplus, A (Di,N) negative,
+    B (B,L,N), C (B,L,N), D (Di). Returns y (B,L,Di).
+    """
+
+    def one(xb, dtb, Bb, Cb):
+        def step(h, inp):
+            x_t, dt_t, B_t, C_t = inp
+            dA = jnp.exp(dt_t[:, None] * A)  # (Di,N)
+            dBx = (dt_t * x_t)[:, None] * B_t[None, :]  # (Di,N)
+            h = dA * h + dBx
+            y_t = (h * C_t[None, :]).sum(-1)  # (Di,)
+            return h, y_t
+
+        h0 = jnp.zeros((x.shape[-1], A.shape[-1]), dtype=jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb, dtb, Bb, Cb))
+        return ys
+
+    y = jax.vmap(one)(x, dt, B, C)
+    return y + x * D[None, None, :]
+
+
+def ssd_ref(x, dt, A, B, C, D):
+    """Mamba-2 SSD recurrence (scalar decay per head).
+
+    Shapes: x (B,L,H,P), dt (B,L,H) post-softplus, A (H) negative,
+    B (B,L,N), C (B,L,N), D (H). Returns y (B,L,H,P).
+    """
+
+    def one(xb, dtb, Bb, Cb):
+        H, P = xb.shape[-2], xb.shape[-1]
+        N = Bb.shape[-1]
+
+        def step(h, inp):
+            x_t, dt_t, B_t, C_t = inp  # (H,P), (H,), (N,), (N,)
+            a = jnp.exp(dt_t * A)  # (H,)
+            upd = (dt_t[:, None] * x_t)[:, :, None] * B_t[None, None, :]
+            h = a[:, None, None] * h + upd  # (H,P,N)
+            y_t = (h * C_t[None, None, :]).sum(-1)  # (H,P)
+            return h, y_t
+
+        h0 = jnp.zeros((H, P, N), dtype=jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb, dtb, Bb, Cb))
+        return ys
+
+    y = jax.vmap(one)(x, dt, B, C)
+    return y + x * D[None, None, :, None]
+
+
+def importance_ref(y, metric: str = "clip"):
+    """Token importance S over hidden states y (..., L, Dp) -> (..., L).
+
+    "clip" is the paper's Eq. 5: mean over channels of max(0, y).
+    """
+    if metric == "clip":
+        return jnp.maximum(y, 0.0).mean(-1)
+    if metric == "noclip":
+        return y.mean(-1)
+    if metric == "l1":
+        return jnp.abs(y).mean(-1)
+    if metric == "l2":
+        return jnp.sqrt(jnp.square(y).mean(-1))
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def cosine_match_ref(a, b):
+    """Best-match under cosine similarity (Eq. 6-7).
+
+    a (..., Na, D), b (..., Nb, D) -> (f, g): f (..., Na) int32 argmax index
+    into b's rows, g (..., Na) the max similarity.
+    """
+    an = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + 1e-6)
+    bn = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + 1e-6)
+    sim = an @ jnp.swapaxes(bn, -1, -2)  # (..., Na, Nb)
+    return jnp.argmax(sim, axis=-1).astype(jnp.int32), jnp.max(sim, axis=-1)
+
+
+def selective_scan_with_state_ref(x, dt, A, B, C, D):
+    """selective_scan_ref that also returns the final state (B, Di, N) —
+    the prefill→decode handoff needs it."""
+
+    def one(xb, dtb, Bb, Cb):
+        def step(h, inp):
+            x_t, dt_t, B_t, C_t = inp
+            dA = jnp.exp(dt_t[:, None] * A)
+            h = dA * h + (dt_t * x_t)[:, None] * B_t[None, :]
+            return h, (h * C_t[None, :]).sum(-1)
+
+        h0 = jnp.zeros((x.shape[-1], A.shape[-1]), dtype=jnp.float32)
+        hT, ys = jax.lax.scan(step, h0, (xb, dtb, Bb, Cb))
+        return ys, hT
+
+    y, hT = jax.vmap(one)(x, dt, B, C)
+    return y + x * D[None, None, :], hT
+
+
+def ssd_with_state_ref(x, dt, A, B, C, D):
+    """ssd_ref that also returns the final state (B, H, P, N)."""
+
+    def one(xb, dtb, Bb, Cb):
+        H, P = xb.shape[-2], xb.shape[-1]
+        N = Bb.shape[-1]
+
+        def step(h, inp):
+            x_t, dt_t, B_t, C_t = inp
+            a = jnp.exp(dt_t * A)
+            upd = (dt_t[:, None] * x_t)[:, :, None] * B_t[None, None, :]
+            h = a[:, None, None] * h + upd
+            return h, (h * C_t[None, None, :]).sum(-1)
+
+        h0 = jnp.zeros((H, P, N), dtype=jnp.float32)
+        hT, ys = jax.lax.scan(step, h0, (xb, dtb, Bb, Cb))
+        return ys, hT
+
+    y, hT = jax.vmap(one)(x, dt, B, C)
+    return y + x * D[None, None, :, None], hT

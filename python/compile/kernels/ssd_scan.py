@@ -1,0 +1,113 @@
+"""Pallas SSD chunked-scan kernel (Mamba-2 hot spot).
+
+This is the paper's (and Mamba-2's) core insight restated for the MXU
+(DESIGN.md §8): within a chunk the recurrence is a *masked matmul*
+("attention-like" C·Bᵀ with a decay mask), which maps onto the 128×128
+systolic array; across chunks only a tiny (H, P, N) state recurrence
+survives, carried in a VMEM scratch accumulator. Grid steps walk the chunks
+sequentially, so HBM→VMEM staging of x/dt/B/C tiles is expressed by
+BlockSpec and double-buffered by the Pallas pipeline emitter.
+
+Math per chunk of length c (head h, log-decay la_t = dt_t · A_h ≤ 0,
+s = cumsum(la)):
+
+    Y_intra[i] = Σ_{j≤i} (C_i·B_j) · exp(s_i − s_j) · dt_j x_j      (masked matmul)
+    Y_inter[i] = exp(s_i) · (h_prev · C_i)                          (state read)
+    h_next     = exp(s_c) h_prev + Σ_j exp(s_c − s_j) dt_j x_j ⊗ B_j (state write)
+
+interpret=True on this image (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, o_ref, h_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...]  # (c, H, P)
+    dt = dt_ref[...]  # (c, H)
+    Bc = b_ref[...]  # (c, N)
+    Cc = c_ref[...]  # (c, N)
+    A = a_ref[...]  # (H,)
+    c = x.shape[0]
+
+    la = dt * A[None, :]  # (c, H) log-decays, <= 0
+    s = jnp.cumsum(la, axis=0)  # (c, H)
+
+    # Intra-chunk: MXU-shaped (c, c) matmul + decay mask. The exponent is
+    # clamped to <=0 BEFORE exp: the upper triangle (j > i) has positive
+    # s_i - s_j that overflows to inf at large dt, and inf * mask(0) = NaN
+    # (real divergence observed in training); the kept triangle is <=0
+    # anyway, so the clamp is exact.
+    G = Cc @ Bc.T  # (c, c)
+    decay = jnp.exp(jnp.minimum(s[:, None, :] - s[None, :, :], 0.0))  # (c, c, H)
+    mask = jnp.tril(jnp.ones((c, c), dtype=jnp.float32))
+    M = G[:, :, None] * decay * mask[:, :, None]  # (c, c, H)
+    xdt = x * dt[:, :, None]  # (c, H, P)
+    y_intra = jnp.einsum("ijh,jhp->ihp", M, xdt)
+
+    # Inter-chunk: read the carried state.
+    h = h_ref[...]  # (H, P, N)
+    y_inter = jnp.einsum("hpn,in->ihp", h, Cc) * jnp.exp(s)[:, :, None]
+
+    o_ref[...] = y_intra + y_inter
+
+    # State update for the next chunk.
+    w = jnp.exp(s[-1][None, :] - s)  # (c, H): decay from j to chunk end
+    h_ref[...] = (
+        jnp.exp(s[-1])[:, None, None] * h
+        + jnp.einsum("jh,jhp,jn->hpn", w, xdt, Bc)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B, C, D, chunk: int = DEFAULT_CHUNK):
+    """Batched SSD; matches ``ref.ssd_ref``.
+
+    x: (Bt, L, H, P); dt: (Bt, L, H); A: (H,); B, C: (Bt, L, N); D: (H,).
+    """
+    bt, L, H, P = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, L)
+    if L % chunk != 0:
+        pad = chunk - L % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    lp = x.shape[1]
+
+    kernel = pl.pallas_call(
+        _ssd_kernel,
+        grid=(lp // chunk,),
+        in_specs=[
+            pl.BlockSpec((chunk, H, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((chunk, H), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, n), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, n), lambda i: (i, 0)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((chunk, H, P), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((lp, H, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((H, P, n), jnp.float32)],
+        interpret=True,
+    )
+
+    def one(xb, dtb, Bb, Cb):
+        return kernel(xb, dtb, Bb, Cb, A)
+
+    y = jax.vmap(one)(x, dt, B, C)[:, :L]
+    return y + x[:, :L] * D[None, None, :, None]

@@ -1,0 +1,103 @@
+"""Pallas selective-scan kernel (Mamba-1 hot spot).
+
+TPU-shaped restatement of the CUDA hardware-aware scan (DESIGN.md §8):
+the sequence is chunked along L; each grid step stages a ``(CHUNK, ·)`` tile
+of x/dt/B/C from HBM into VMEM via BlockSpec, sweeps it with a fori_loop
+over time (the CUDA threadblock sweep), and carries the ``(Di, N)`` state in
+a VMEM scratch accumulator across grid steps. interpret=True everywhere on
+this image — real-TPU lowering would emit a Mosaic custom-call the CPU PJRT
+plugin cannot execute.
+
+VMEM footprint per grid step (f32): CHUNK*(2*Di + 2*N) + Di*N + CHUNK*Di
+(out tile). For Di=640, N=16, CHUNK=64 that is ~0.5 MB — far under the
+~16 MB VMEM budget, leaving room for the pipeline's double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, o_ref, h_ref):
+    """One (CHUNK, Di) tile. h_ref: (Di, N) VMEM scratch carried across grid.
+
+    The within-chunk recurrence h_t = a_t∘h_{t-1} + b_t is computed with a
+    log-depth associative scan over (a, b) pairs rather than a time loop —
+    on TPU that keeps the VPU lanes full instead of serializing 8-element
+    steps; on the CPU interpret path it avoids a 64-iteration while-loop
+    per tile (EXPERIMENTS.md §Perf L1)."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...]  # (Di, N), resident every step (small)
+    x = x_ref[...]  # (c, Di)
+    dt = dt_ref[...]  # (c, Di)
+    Bm = b_ref[...]  # (c, N)
+    Cm = c_ref[...]  # (c, N)
+
+    dA = jnp.exp(dt[:, :, None] * A[None])  # (c, Di, N)
+    dBx = (dt * x)[:, :, None] * Bm[:, None, :]  # (c, Di, N)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return ar * al, ar * bl + br
+
+    cumA, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=0)
+    h = hs + cumA * h_ref[...][None]  # add the carried state
+    o_ref[...] = (h * Cm[:, None, :]).sum(-1)
+    h_ref[...] = h[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def selective_scan(x, dt, A, B, C, D, chunk: int = DEFAULT_CHUNK):
+    """Batched selective scan via the Pallas kernel; matches
+    ``ref.selective_scan_ref`` bit-for-tolerance.
+
+    x, dt: (Bt, L, Di); A: (Di, N); B, C: (Bt, L, N); D: (Di,).
+    """
+    bt, L, di = x.shape
+    n = A.shape[-1]
+    chunk = min(chunk, L)
+    if L % chunk != 0:
+        # Pad to a chunk multiple; state simply keeps evolving over pads,
+        # and we slice the valid prefix back out.
+        pad = chunk - L % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    lp = x.shape[1]
+
+    grid = (lp // chunk,)
+    kernel = pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, di), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, di), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, n), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, n), lambda i: (i, 0)),
+            pl.BlockSpec((di, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((chunk, di), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lp, di), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((di, n), jnp.float32)],
+        interpret=True,
+    )
+
+    def one(xb, dtb, Bb, Cb):
+        return kernel(xb, dtb, Bb, Cb, A)
+
+    y = jax.vmap(one)(x, dt, B, C)[:, :L, :]
+    return y + x[:, :L, :] * D[None, None, :]

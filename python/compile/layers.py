@@ -1,0 +1,119 @@
+"""Parameter initialization and layer primitives for the Mamba / Mamba-2 LMs.
+
+Parameters are a flat dict of arrays stacked over layers (leading n_layer
+axis) so every exported executable takes a small, fixed argument list; the
+ordering contract with the rust runtime lives in ``param_order`` and is
+recorded in the artifact manifest.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    return x * jax.lax.rsqrt(jnp.square(x).mean(-1, keepdims=True) + eps) * w
+
+
+def gated_rmsnorm(y: jnp.ndarray, z: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Mamba-2's norm-before-out_proj: RMSNorm(y * silu(z)) * w."""
+    yg = y * jax.nn.silu(z)
+    return yg * jax.lax.rsqrt(jnp.square(yg).mean(-1, keepdims=True) + 1e-5) * w
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x (B, L, C), w (C, K), b (C,)."""
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    L = x.shape[1]
+    acc = jnp.zeros_like(x)
+    for i in range(k):
+        acc = acc + xp[:, i : i + L, :] * w[None, None, :, i]
+    return acc + b[None, None, :]
+
+
+def conv1d_step(x_t, conv_state, w, b):
+    """Single decode step. x_t (B, C); conv_state (B, C, K-1) holds the last
+    K-1 inputs (oldest first). Returns (y_t (B, C), new_state)."""
+    window = jnp.concatenate([conv_state, x_t[:, :, None]], axis=-1)  # (B,C,K)
+    y = (window * w[None]).sum(-1) + b[None]
+    return y, window[:, :, 1:]
+
+
+def _dt_init(key, shape, dt_min=1e-3, dt_max=1e-1):
+    """Sample dt biases so softplus(bias) lands log-uniform in [dt_min, dt_max]
+    (the Mamba init)."""
+    u = jax.random.uniform(key, shape)
+    dt = jnp.exp(u * (math.log(dt_max) - math.log(dt_min)) + math.log(dt_min))
+    # inverse softplus
+    return dt + jnp.log(-jnp.expm1(-dt))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    k = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(k, 32))
+    d, di, n, nl = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_layer
+    V = cfg.vocab_size
+
+    def dense(key, fan_in, shape):
+        return jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+
+    p: Params = {
+        "embed": jax.random.normal(next(keys), (V, d), jnp.float32) * 0.02,
+        "norm_f": jnp.ones((d,), jnp.float32),
+        "norm_w": jnp.ones((nl, d), jnp.float32),
+    }
+    if cfg.arch == "mamba":
+        r = cfg.dt_rank_
+        p.update(
+            in_proj=dense(next(keys), d, (nl, d, 2 * di)),
+            conv_w=dense(next(keys), cfg.d_conv, (nl, di, cfg.d_conv)),
+            conv_b=jnp.zeros((nl, di), jnp.float32),
+            x_proj=dense(next(keys), di, (nl, di, r + 2 * n)),
+            dt_w=dense(next(keys), r, (nl, r, di)),
+            dt_b=_dt_init(next(keys), (nl, di)),
+            A_log=jnp.log(
+                jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (nl, di, n))
+            ),
+            D=jnp.ones((nl, di), jnp.float32),
+            out_proj=dense(next(keys), di, (nl, di, d)),
+        )
+    else:
+        h = cfg.n_heads
+        d_in_proj = 2 * di + 2 * n + h
+        conv_dim = di + 2 * n
+        p.update(
+            in_proj=dense(next(keys), d, (nl, d, d_in_proj)),
+            conv_w=dense(next(keys), cfg.d_conv, (nl, conv_dim, cfg.d_conv)),
+            conv_b=jnp.zeros((nl, conv_dim), jnp.float32),
+            dt_b=_dt_init(next(keys), (nl, h)),
+            A_log=jnp.log(jnp.broadcast_to(jnp.linspace(1.0, 8.0, h), (nl, h))),
+            D=jnp.ones((nl, h), jnp.float32),
+            gn_w=jnp.ones((nl, di), jnp.float32),
+            out_proj=dense(next(keys), di, (nl, di, d)),
+        )
+    return p
+
+
+def param_order(cfg: ModelConfig) -> List[str]:
+    """The argument-ordering contract shared with the rust runtime."""
+    common = ["embed", "norm_f", "norm_w", "in_proj", "conv_w", "conv_b"]
+    if cfg.arch == "mamba":
+        return common + ["x_proj", "dt_w", "dt_b", "A_log", "D", "out_proj"]
+    return common + ["dt_b", "A_log", "D", "gn_w", "out_proj"]
+
+
+def params_to_list(cfg: ModelConfig, p: Params) -> List[jnp.ndarray]:
+    return [p[name] for name in param_order(cfg)]
+
+
+def params_from_list(cfg: ModelConfig, xs) -> Params:
+    return dict(zip(param_order(cfg), xs))

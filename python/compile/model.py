@@ -1,0 +1,262 @@
+"""L2: Mamba / Mamba-2 language models in JAX, with token reduction inserted
+at schedule boundaries.
+
+The forward is built per (model, reduction, schedule-plan) variant and
+AOT-lowered by ``aot.py``; token counts per segment are static (see
+DESIGN.md "Static shapes under token reduction"). The SSM hot spots call the
+L1 Pallas kernels; ``use_kernels=False`` swaps in the pure-jnp oracles,
+which the model-equivalence tests use to pin the kernels in-context.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, ReductionConfig
+from .flops import SchedulePlan
+from .layers import Params, causal_conv1d, conv1d_step, gated_rmsnorm, rmsnorm
+from .kernels import parallel, ref
+from .kernels.ssm_scan import selective_scan
+from .kernels.ssd_scan import ssd_scan
+from .reduction import reduce_tokens
+
+
+def _mamba_block(p: Params, l: int, T: jnp.ndarray, cfg: ModelConfig, use_kernels: bool):
+    """Returns (out, y): out is the hidden-state branch in model dim (to be
+    added to the residual), y the raw SSM output used as importance features."""
+    di, n, r = cfg.d_inner, cfg.d_state, cfg.dt_rank_
+    h = rmsnorm(T, p["norm_w"][l])
+    xz = h @ p["in_proj"][l]
+    x, z = jnp.split(xz, [di], axis=-1)
+    x = jax.nn.silu(causal_conv1d(x, p["conv_w"][l], p["conv_b"][l]))
+    dbl = x @ p["x_proj"][l]
+    dt_low, Bm, Cm = jnp.split(dbl, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_w"][l] + p["dt_b"][l])
+    A = -jnp.exp(p["A_log"][l])
+    scan = selective_scan if use_kernels else parallel.selective_scan_par
+    y = scan(x, dt, A, Bm, Cm, p["D"][l])
+    out = (y * jax.nn.silu(z)) @ p["out_proj"][l]
+    return out, y
+
+
+def _mamba2_block(p: Params, l: int, T: jnp.ndarray, cfg: ModelConfig, use_kernels: bool):
+    di, n, nh, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
+    B, L, _ = T.shape
+    h = rmsnorm(T, p["norm_w"][l])
+    zxbcdt = h @ p["in_proj"][l]
+    z, xBC, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xBC = jax.nn.silu(causal_conv1d(xBC, p["conv_w"][l], p["conv_b"][l]))
+    x, Bm, Cm = jnp.split(xBC, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw + p["dt_b"][l])
+    A = -jnp.exp(p["A_log"][l])
+    xh = x.reshape(B, L, nh, hd)
+    scan = ssd_scan if use_kernels else parallel.ssd_par
+    y = scan(xh, dt, A, Bm, Cm, p["D"][l]).reshape(B, L, di)
+    out = gated_rmsnorm(y, z, p["gn_w"][l]) @ p["out_proj"][l]
+    return out, y
+
+
+def forward(
+    params: Params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    red: Optional[ReductionConfig] = None,
+    plan: Optional[SchedulePlan] = None,
+    use_kernels: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward. tokens (B, L) int32.
+
+    Returns (logits (B, L', V), kept_idx (B, L') int32): kept_idx maps each
+    surviving position back to its ORIGINAL sequence position, the contract
+    the rust eval harness uses to align labels (and to implement the paper's
+    truncated-label scoring as a fallback).
+    """
+    block = _mamba_block if cfg.arch == "mamba" else _mamba2_block
+    B, L = tokens.shape
+    T = params["embed"][tokens]
+    kept = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    reduce_at = {}
+    if red is not None and plan is not None and red.method != "dense":
+        reduce_at = {loc: plan.removed[i] for i, loc in enumerate(plan.locations)}
+
+    for l in range(cfg.n_layer):
+        out, y = block(params, l, T, cfg, use_kernels)
+        n_remove = reduce_at.get(l, 0)
+        if n_remove > 0:
+            out2, resid2, local = reduce_tokens(
+                y, out, T,
+                method=red.method, n_remove=n_remove, metric=red.metric,
+                q_hidden=red.q_hidden, q_residual=red.q_residual,
+            )
+            T = out2 + resid2
+            kept = jnp.take_along_axis(kept, local, axis=1)
+        else:
+            T = out + T
+
+    h = rmsnorm(T, params["norm_f"])
+    logits = h @ params["embed"].T
+    return logits, kept
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode step (the generation path; reduction acts at prefill).
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int):
+    """(conv_states, ssm_states) stacked over layers."""
+    nl, di, n, k = cfg.n_layer, cfg.d_inner, cfg.d_state, cfg.d_conv
+    if cfg.arch == "mamba":
+        conv = jnp.zeros((nl, batch, di, k - 1), jnp.float32)
+        ssm = jnp.zeros((nl, batch, di, n), jnp.float32)
+    else:
+        conv = jnp.zeros((nl, batch, di + 2 * n, k - 1), jnp.float32)
+        ssm = jnp.zeros((nl, batch, cfg.n_heads, cfg.headdim, n), jnp.float32)
+    return conv, ssm
+
+
+def _mamba_step(p, l, t, conv_s, ssm_s, cfg):
+    di, n, r = cfg.d_inner, cfg.d_state, cfg.dt_rank_
+    h = rmsnorm(t, p["norm_w"][l])
+    xz = h @ p["in_proj"][l]
+    x, z = jnp.split(xz, [di], axis=-1)
+    x, conv_s = conv1d_step(x, conv_s, p["conv_w"][l], p["conv_b"][l])
+    x = jax.nn.silu(x)
+    dbl = x @ p["x_proj"][l]
+    dt_low, Bm, Cm = jnp.split(dbl, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_w"][l] + p["dt_b"][l])  # (B, di)
+    A = -jnp.exp(p["A_log"][l])  # (di, n)
+    dA = jnp.exp(dt[:, :, None] * A[None])  # (B, di, n)
+    ssm_s = dA * ssm_s + (dt * x)[:, :, None] * Bm[:, None, :]
+    y = (ssm_s * Cm[:, None, :]).sum(-1) + x * p["D"][l][None]
+    out = (y * jax.nn.silu(z)) @ p["out_proj"][l]
+    return out, conv_s, ssm_s
+
+
+def _mamba2_step(p, l, t, conv_s, ssm_s, cfg):
+    di, n, nh, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
+    B = t.shape[0]
+    h = rmsnorm(t, p["norm_w"][l])
+    zxbcdt = h @ p["in_proj"][l]
+    z, xBC, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xBC, conv_s = conv1d_step(xBC, conv_s, p["conv_w"][l], p["conv_b"][l])
+    xBC = jax.nn.silu(xBC)
+    x, Bm, Cm = jnp.split(xBC, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw + p["dt_b"][l])  # (B, nh)
+    A = -jnp.exp(p["A_log"][l])  # (nh,)
+    a = jnp.exp(dt * A[None])  # (B, nh)
+    xh = x.reshape(B, nh, hd)
+    upd = (dt[:, :, None] * xh)[:, :, :, None] * Bm[:, None, None, :]
+    ssm_s = a[:, :, None, None] * ssm_s + upd
+    y = (ssm_s * Cm[:, None, None, :]).sum(-1) + xh * p["D"][l][None, :, None]
+    out = gated_rmsnorm(y.reshape(B, di), z, p["gn_w"][l]) @ p["out_proj"][l]
+    return out, conv_s, ssm_s
+
+
+def decode_step(params: Params, token: jnp.ndarray, conv, ssm, cfg: ModelConfig):
+    """One generation step. token (B,) int32 -> (logits (B, V), conv', ssm')."""
+    step = _mamba_step if cfg.arch == "mamba" else _mamba2_step
+    T = params["embed"][token]
+    new_conv, new_ssm = [], []
+    for l in range(cfg.n_layer):
+        out, cs, ss = step(params, l, T, conv[l], ssm[l], cfg)
+        T = T + out
+        new_conv.append(cs)
+        new_ssm.append(ss)
+    h = rmsnorm(T, params["norm_f"])
+    logits = h @ params["embed"].T
+    return logits, jnp.stack(new_conv), jnp.stack(new_ssm)
+
+
+def lm_loss(params: Params, tokens: jnp.ndarray, cfg: ModelConfig, use_kernels: bool = True):
+    """Next-token cross-entropy over (B, L) token windows."""
+    logits, _ = forward(params, tokens[:, :-1], cfg, use_kernels=use_kernels)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, :, None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also hands off decode states.
+# ---------------------------------------------------------------------------
+
+
+def _mamba_block_prefill(p, l, T, cfg):
+    di, n, r, k = cfg.d_inner, cfg.d_state, cfg.dt_rank_, cfg.d_conv
+    h = rmsnorm(T, p["norm_w"][l])
+    xz = h @ p["in_proj"][l]
+    x_pre, z = jnp.split(xz, [di], axis=-1)
+    x = jax.nn.silu(causal_conv1d(x_pre, p["conv_w"][l], p["conv_b"][l]))
+    dbl = x @ p["x_proj"][l]
+    dt_low, Bm, Cm = jnp.split(dbl, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_w"][l] + p["dt_b"][l])
+    A = -jnp.exp(p["A_log"][l])
+    y, hT = parallel.selective_scan_par_with_state(x, dt, A, Bm, Cm, p["D"][l])
+    out = (y * jax.nn.silu(z)) @ p["out_proj"][l]
+    conv_tail = jnp.swapaxes(x_pre[:, -(k - 1):, :], 1, 2)  # (B, di, k-1)
+    return out, y, conv_tail, hT
+
+
+def _mamba2_block_prefill(p, l, T, cfg):
+    di, n, nh, hd, k = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim, cfg.d_conv
+    B, L, _ = T.shape
+    h = rmsnorm(T, p["norm_w"][l])
+    zxbcdt = h @ p["in_proj"][l]
+    z, xBC_pre, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xBC = jax.nn.silu(causal_conv1d(xBC_pre, p["conv_w"][l], p["conv_b"][l]))
+    x, Bm, Cm = jnp.split(xBC, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw + p["dt_b"][l])
+    A = -jnp.exp(p["A_log"][l])
+    xh = x.reshape(B, L, nh, hd)
+    y, hT = parallel.ssd_par_with_state(xh, dt, A, Bm, Cm, p["D"][l])
+    y = y.reshape(B, L, di)
+    out = gated_rmsnorm(y, z, p["gn_w"][l]) @ p["out_proj"][l]
+    conv_tail = jnp.swapaxes(xBC_pre[:, -(k - 1):, :], 1, 2)  # (B, di+2n, k-1)
+    return out, y, conv_tail, hT
+
+
+def prefill_forward(
+    params: Params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    red: Optional[ReductionConfig] = None,
+    plan: Optional[SchedulePlan] = None,
+):
+    """Prompt processing for the serving path: returns (last_logits (B, V),
+    conv_states (nl, B, ·, k-1), ssm_states (nl, B, ...)). Token reduction
+    shortens the live sequence mid-network (the throughput win); states come
+    out exactly where the decode loop resumes.
+
+    Uses the with-state PARALLEL scans (the decode handoff needs the scan
+    carry, which the Pallas kernels deliberately keep in scratch)."""
+    block = _mamba_block_prefill if cfg.arch == "mamba" else _mamba2_block_prefill
+    T = params["embed"][tokens]
+
+    reduce_at = {}
+    if red is not None and plan is not None and red.method != "dense":
+        reduce_at = {loc: plan.removed[i] for i, loc in enumerate(plan.locations)}
+
+    convs, ssms = [], []
+    for l in range(cfg.n_layer):
+        out, y, conv_tail, hT = block(params, l, T, cfg)
+        convs.append(conv_tail)
+        ssms.append(hT)
+        n_remove = reduce_at.get(l, 0)
+        if n_remove > 0:
+            out2, resid2, _ = reduce_tokens(
+                y, out, T,
+                method=red.method, n_remove=n_remove, metric=red.metric,
+                q_hidden=red.q_hidden, q_residual=red.q_residual,
+            )
+            T = out2 + resid2
+        else:
+            T = out + T
+
+    h = rmsnorm(T[:, -1, :], params["norm_f"])
+    logits = h @ params["embed"].T
+    return logits, jnp.stack(convs), jnp.stack(ssms)

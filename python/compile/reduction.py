@@ -1,0 +1,191 @@
+"""Token-reduction methods as static-shape JAX graph transforms.
+
+Implements the paper's UTRC (§4) plus the baselines it compares against:
+
+    utrc   — importance classification (Eq. 5) into M_A/M_B, bipartite
+             cosine matching M_A→M_B (Eq. 6-7), top-r connections removed;
+             per-branch hybrid: a q-fraction pruned, the rest merged
+             (paper winner: hidden q=0.5, residual merge-only).
+    evit   — prune-only: drop the r least-important tokens (EViT adapted to
+             SSMs exactly as the paper's baseline: importance sort + drop).
+    pumer  — ToMe/PuMer bipartite merge-only: alternating-position sets,
+             merge the r most similar pairs, importance-blind.
+    ltmp   — naive prune+merge combination (LTMP adapted): prune r/2 least
+             important, then bipartite-merge r-r/2 most similar survivors.
+
+All methods remove the SAME indices from the hidden-state branch and the
+residual branch (the paper's index-misalignment fix), and return the kept
+ORIGINAL positions so the logits map composes across layers. Counts are
+static (baked by the schedule solver); only *which* tokens is data-dependent,
+so everything lowers to sort/gather/scatter HLO with fixed shapes.
+
+Within UTRC's removed set, the MOST-similar connections are pruned and the
+less-similar ones merged: a token nearly identical to its match is already
+represented (pruning loses least), while a less-similar token still carries
+unique signal worth folding in. (The paper fixes the fractions q but not the
+assignment; this is our design choice, ablated in ablation_sweep.)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.importance import token_importance
+from .kernels.matching import cosine_match
+
+
+def _kept_from_removed(removed_mask: jnp.ndarray, n_keep: int) -> jnp.ndarray:
+    """Original positions of kept tokens, ascending. removed_mask (L,) bool."""
+    L = removed_mask.shape[0]
+    score = jnp.arange(L) + L * removed_mask.astype(jnp.int32)
+    return jnp.sort(jnp.argsort(score)[:n_keep])
+
+
+def _merge_into(feats: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray) -> jnp.ndarray:
+    """Fold feats[src] into feats[dst] by averaging: target becomes
+    (target + sum(contribs)) / (1 + count). Single pair == paper's (a+f)/2.
+    feats (L, D); src, dst (m,) positions. m may be 0."""
+    if src.shape[0] == 0:
+        return feats
+    L = feats.shape[0]
+    contrib = jnp.zeros_like(feats).at[dst].add(feats[src])
+    cnt = jnp.zeros((L,), feats.dtype).at[dst].add(1.0)
+    return (feats + contrib) / (1.0 + cnt)[:, None]
+
+
+def _one_utrc(y, out, resid, n_remove: int, metric: str, q_hidden: float, q_residual: float):
+    """Per-example UTRC. y (L, Dp) SSM hidden states (importance/matching
+    features); out (L, D) hidden-state branch; resid (L, D) residual branch."""
+    L = y.shape[0]
+    half = L // 2
+    n_keep = L - n_remove
+
+    s = token_importance(y[None], metric)[0]  # (L,)
+    order = jnp.argsort(s)  # ascending importance
+    idx_a, idx_b = order[:half], order[half:]  # M_A less / M_B more important
+
+    f, g = cosine_match(y[idx_a][None], y[idx_b][None])
+    f, g = f[0], g[0]  # (half,) match index into M_B, similarity
+
+    conn = jnp.argsort(-g)  # connections by similarity, desc
+    removed_conn = conn[:n_remove]
+    a_pos = idx_a[removed_conn]  # original positions being removed
+    b_pos = idx_b[f[removed_conn]]  # their merge targets
+
+    removed_mask = jnp.zeros((L,), bool).at[a_pos].set(True)
+    kept = _kept_from_removed(removed_mask, n_keep)
+
+    def branch(feats, q):
+        n_prune = int(round(q * n_remove))  # static
+        # removed_conn is similarity-descending: prune the most similar,
+        # merge the rest (see module docstring).
+        m_src, m_dst = a_pos[n_prune:], b_pos[n_prune:]
+        return _merge_into(feats, m_src, m_dst)[kept]
+
+    return branch(out, q_hidden), branch(resid, q_residual), kept.astype(jnp.int32)
+
+
+def _one_evit(y, out, resid, n_remove: int, metric: str):
+    L = y.shape[0]
+    n_keep = L - n_remove
+    s = token_importance(y[None], metric)[0]
+    removed_mask = jnp.zeros((L,), bool).at[jnp.argsort(s)[:n_remove]].set(True)
+    kept = _kept_from_removed(removed_mask, n_keep)
+    return out[kept], resid[kept], kept.astype(jnp.int32)
+
+
+def _one_pumer(y, out, resid, n_remove: int):
+    """ToMe-style alternating bipartite merge, importance-blind."""
+    L = y.shape[0]
+    n_keep = L - n_remove
+    idx_a = jnp.arange(0, L, 2)  # even positions
+    idx_b = jnp.arange(1, L, 2)  # odd positions
+    f, g = cosine_match(y[idx_a][None], y[idx_b][None])
+    f, g = f[0], g[0]
+    conn = jnp.argsort(-g)[:n_remove]
+    a_pos = idx_a[conn]
+    b_pos = idx_b[f[conn]]
+    removed_mask = jnp.zeros((L,), bool).at[a_pos].set(True)
+    kept = _kept_from_removed(removed_mask, n_keep)
+    out2 = _merge_into(out, a_pos, b_pos)[kept]
+    resid2 = _merge_into(resid, a_pos, b_pos)[kept]
+    return out2, resid2, kept.astype(jnp.int32)
+
+
+def _one_ltmp(y, out, resid, n_remove: int, metric: str):
+    """Naive prune+merge: prune half by importance, merge half by similarity
+    among survivors — no importance classification of the merge sets."""
+    L = y.shape[0]
+    n_prune = n_remove // 2
+    n_merge = n_remove - n_prune
+    n_keep = L - n_remove
+
+    s = token_importance(y[None], metric)[0]
+    prune_pos = jnp.argsort(s)[:n_prune]
+    pruned_mask = jnp.zeros((L,), bool).at[prune_pos].set(True)
+
+    idx_a = jnp.arange(0, L, 2)
+    idx_b = jnp.arange(1, L, 2)
+    f, g = cosine_match(y[idx_a][None], y[idx_b][None])
+    f, g = f[0], g[0]
+    # a connection is invalid if either endpoint was pruned
+    a_dead = pruned_mask[idx_a]
+    b_dead = pruned_mask[idx_b[f]]
+    g = jnp.where(a_dead | b_dead, -jnp.inf, g)
+    conn = jnp.argsort(-g)[:n_merge]
+    a_pos = idx_a[conn]
+    b_pos = idx_b[f[conn]]
+
+    removed_mask = pruned_mask.at[a_pos].set(True)
+    kept = _kept_from_removed(removed_mask, n_keep)
+    out2 = _merge_into(out, a_pos, b_pos)[kept]
+    resid2 = _merge_into(resid, a_pos, b_pos)[kept]
+    return out2, resid2, kept.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("method", "n_remove", "metric", "q_hidden", "q_residual"),
+)
+def reduce_tokens(
+    y: jnp.ndarray,
+    out: jnp.ndarray,
+    resid: jnp.ndarray,
+    method: str,
+    n_remove: int,
+    metric: str = "clip",
+    q_hidden: float = 0.5,
+    q_residual: float = 0.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Batched token reduction at one layer boundary.
+
+    y (B, L, Dp): SSM hidden states (features for importance + matching).
+    out (B, L, D): hidden-state branch (Linear(y)).
+    resid (B, L, D): residual branch (T_{l-1}).
+    Returns (out', resid', kept_idx) with L' = L - n_remove tokens; the new
+    layer output is out' + resid'.
+    """
+    if n_remove <= 0 or method == "dense":
+        B, L = y.shape[0], y.shape[1]
+        kept = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+        return out, resid, kept
+    if n_remove > y.shape[1] // 2:
+        raise ValueError(
+            f"n_remove={n_remove} exceeds the M_A set (L/2={y.shape[1] // 2})"
+        )
+
+    if method == "utrc":
+        fn = lambda yy, oo, rr: _one_utrc(yy, oo, rr, n_remove, metric, q_hidden, q_residual)
+    elif method == "evit":
+        fn = lambda yy, oo, rr: _one_evit(yy, oo, rr, n_remove, metric)
+    elif method == "pumer":
+        fn = lambda yy, oo, rr: _one_pumer(yy, oo, rr, n_remove)
+    elif method == "ltmp":
+        fn = lambda yy, oo, rr: _one_ltmp(yy, oo, rr, n_remove, metric)
+    else:
+        raise ValueError(f"unknown reduction method {method!r}")
+    return jax.vmap(fn)(y, out, resid)

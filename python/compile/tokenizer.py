@@ -1,0 +1,67 @@
+"""Word-level tokenizer shared (by artifact) with the rust runtime.
+
+The vocabulary is closed over the synthetic world's lexicon (data.py), so a
+plain whitespace word tokenizer is lossless here. The vocab is written to
+``artifacts/vocab.json`` and re-loaded by ``rust/src/tokenizer/``; both sides
+must agree exactly — tested by a golden fixture.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+PAD = "<pad>"
+UNK = "<unk>"
+BOS = "<bos>"
+EOS = "<eos>"
+SPECIALS = [PAD, UNK, BOS, EOS]
+
+
+class Tokenizer:
+    def __init__(self, vocab: List[str]):
+        assert vocab[: len(SPECIALS)] == SPECIALS, "specials must lead the vocab"
+        self.vocab = vocab
+        self.index: Dict[str, int] = {w: i for i, w in enumerate(vocab)}
+
+    @classmethod
+    def build(cls, corpus_words: List[str], size: int) -> "Tokenizer":
+        from collections import Counter
+
+        counts = Counter(corpus_words)
+        # Deterministic: by count desc, then lexicographic.
+        ordered = sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))
+        words = [w for w, _ in ordered[: size - len(SPECIALS)]]
+        return cls(SPECIALS + words)
+
+    @property
+    def pad_id(self) -> int:
+        return 0
+
+    @property
+    def unk_id(self) -> int:
+        return 1
+
+    @property
+    def bos_id(self) -> int:
+        return 2
+
+    @property
+    def eos_id(self) -> int:
+        return 3
+
+    def encode(self, text: str, bos: bool = False) -> List[int]:
+        ids = [self.index.get(w, self.unk_id) for w in text.split()]
+        return ([self.bos_id] + ids) if bos else ids
+
+    def decode(self, ids: List[int]) -> str:
+        return " ".join(self.vocab[i] for i in ids if i >= len(SPECIALS))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"vocab": self.vocab}, f)
+
+    @classmethod
+    def load(cls, path: str) -> "Tokenizer":
+        with open(path) as f:
+            return cls(json.load(f)["vocab"])

@@ -1,0 +1,85 @@
+"""AdamW training step, exported as a single AOT executable.
+
+The rust trainer (rust/src/train/, examples/train_e2e.rs) owns the loop:
+it feeds (params, opt_state, batch) buffers through the train-step
+executable and keeps everything device-resident between steps. Training is
+dense-only (token reduction is post-training), and uses the pure-jnp scan
+refs: XLA differentiates those directly, while the Pallas interpret calls
+are forward-only by design.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .layers import Params, init_params, param_order, params_from_list, params_to_list
+from .model import lm_loss
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.1
+LR = 3e-4
+WARMUP = 50
+
+
+def lr_schedule(step: jnp.ndarray, total_steps: int) -> jnp.ndarray:
+    """Linear warmup then cosine decay to 10%."""
+    warm = jnp.minimum(step / WARMUP, 1.0)
+    prog = jnp.clip((step - WARMUP) / jnp.maximum(total_steps - WARMUP, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return LR * warm * cos
+
+
+def init_opt_state(params: Params) -> Tuple[Params, Params]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, zeros  # (m, v)
+
+
+def train_step(
+    cfg: ModelConfig,
+    params_list: List[jnp.ndarray],
+    m_list: List[jnp.ndarray],
+    v_list: List[jnp.ndarray],
+    step: jnp.ndarray,
+    tokens: jnp.ndarray,
+    total_steps: int,
+):
+    """One fused fwd+bwd+AdamW update over flat param lists (the export ABI).
+
+    Returns (params', m', v', step+1, loss)."""
+    params = params_from_list(cfg, params_list)
+    m = params_from_list(cfg, m_list)
+    v = params_from_list(cfg, v_list)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: lm_loss(p, tokens, cfg, use_kernels=False)
+    )(params)
+
+    step_f = step.astype(jnp.float32) + 1.0
+    lr = lr_schedule(step_f, total_steps)
+    b1c = 1.0 - ADAM_B1 ** step_f
+    b2c = 1.0 - ADAM_B2 ** step_f
+
+    new_p, new_m, new_v = {}, {}, {}
+    for name in param_order(cfg):
+        g = grads[name]
+        nm = ADAM_B1 * m[name] + (1 - ADAM_B1) * g
+        nv = ADAM_B2 * v[name] + (1 - ADAM_B2) * jnp.square(g)
+        upd = (nm / b1c) / (jnp.sqrt(nv / b2c) + ADAM_EPS)
+        decay = 0.0 if name in ("norm_f", "norm_w", "gn_w", "conv_b", "dt_b", "D") else WEIGHT_DECAY
+        new_p[name] = params[name] - lr * (upd + decay * params[name])
+        new_m[name] = nm
+        new_v[name] = nv
+
+    return (
+        params_to_list(cfg, new_p),
+        params_to_list(cfg, new_m),
+        params_to_list(cfg, new_v),
+        step + 1,
+        loss,
+    )

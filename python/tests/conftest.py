@@ -1,0 +1,14 @@
+"""Shared pytest config: hypothesis example budget via env.
+
+The default (12 examples/sweep) is thorough for development; CI-style final
+runs on the 1-core image can set HYPOTHESIS_MAX_EXAMPLES=6 to halve runtime
+without losing shape coverage.
+"""
+
+import os
+
+from hypothesis import settings
+
+_profile = int(os.environ.get("HYPOTHESIS_MAX_EXAMPLES", "12"))
+settings.register_profile("repro", max_examples=_profile, deadline=None)
+settings.load_profile("repro")

@@ -1,0 +1,77 @@
+"""AOT exporter logic tests (cheap: enumeration/config only — lowering is
+covered by `make artifacts` + the rust golden cross-check)."""
+
+import pytest
+
+from compile.aot import eval_variants, prefill_variants, to_hlo_text
+from compile.configs import DEFAULT_LOCATIONS, MODELS, ReductionConfig
+
+
+def test_variant_tags_unique_per_model():
+    for model in ("mamba-small", "mamba-base", "mamba2-small", "mamba2-base"):
+        tags = [r.tag() for r in eval_variants(model)]
+        assert len(tags) == len(set(tags)), f"duplicate tags for {model}"
+
+
+def test_core_grid_present():
+    """Every model must export dense + {utrc,evit,pumer} at its table ratios."""
+    for model in ("mamba-small", "mamba-base", "mamba2-small", "mamba2-base"):
+        vs = eval_variants(model)
+        methods = {(v.method, round(v.flops_reduction, 2)) for v in vs}
+        assert ("dense", 0.0) in methods
+        ratios = (0.1, 0.2, 0.3) if model.endswith("base") else (0.1, 0.2)
+        for r in ratios:
+            for m in ("utrc", "evit", "pumer"):
+                assert (m, r) in methods, (model, m, r)
+
+
+def test_ablation_variants_only_on_flagship():
+    """Tables 3/4/5/6 ablations live on mamba2-base (plus table-3 rows on
+    mamba-base), not on the small models."""
+    vs = eval_variants("mamba2-base")
+    assert any(v.method == "ltmp" for v in vs)
+    assert any(v.metric == "l2" for v in vs)
+    assert any(v.q_hidden == 0.8 for v in vs)
+    locsets = {v.locations for v in vs if v.method == "utrc"}
+    assert len(locsets) >= 6  # table 4 schedules
+    small = eval_variants("mamba2-small")
+    assert not any(v.method == "ltmp" for v in small)
+    assert all(v.metric == "clip" for v in small)
+
+
+def test_quick_mode_is_minimal():
+    vs = eval_variants("mamba-small", quick=True)
+    assert len(vs) == 4  # dense + 3 methods @20%
+
+
+def test_prefill_variants():
+    vs = prefill_variants("mamba-base")
+    assert vs[0].method == "dense"
+    assert [v.flops_reduction for v in vs[1:]] == [0.10, 0.20, 0.30]
+
+
+def test_reduction_locations_inside_models():
+    for model, locs in DEFAULT_LOCATIONS.items():
+        nl = MODELS[model].n_layer
+        assert all(0 <= l < nl for l in locs), (model, locs, nl)
+
+
+def test_to_hlo_text_tiny_function():
+    """End-to-end text lowering on a trivial function: must parse as HLO
+    text (contains ENTRY) and round-trip through the same path the models
+    use."""
+    import jax
+    import jax.numpy as jnp
+
+    lowered = jax.jit(lambda x: (x * 2.0 + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[4]" in text
+
+
+def test_tag_encodes_design_point():
+    r = ReductionConfig("utrc", 0.2, (8, 11), metric="l2", q_hidden=0.8, q_residual=0.2)
+    t = r.tag()
+    assert "utrc" in t and "r20" in t and "ml2" in t and "qh0.8" in t and "L8-11" in t
+    assert ReductionConfig("dense").tag() == "dense"

@@ -1,0 +1,93 @@
+"""Synthetic world + tokenizer: determinism, vocab closure, task sanity."""
+
+import json
+
+from compile import data as D
+from compile.tokenizer import SPECIALS, Tokenizer
+
+
+def test_corpus_deterministic():
+    a = D.build_corpus(7, 50)
+    b = D.build_corpus(7, 50)
+    assert a == b
+    c = D.build_corpus(8, 50)
+    assert a != c
+
+
+def test_corpus_contains_recall_pattern():
+    words = D.build_corpus(1, 200)
+    text = " ".join(words)
+    assert "in the end , the" in text
+    assert "you use the" in text
+
+
+def test_tasks_structure():
+    tasks = D.build_tasks(3, 20)
+    assert set(tasks) == {
+        "s_lambada", "s_hellaswag", "s_piqa", "s_arc_easy", "s_arc_challenge", "s_wino",
+    }
+    for name, items in tasks.items():
+        assert len(items) == 20
+        for it in items:
+            if name == "s_lambada":
+                assert len(it.choices) == 1 and it.target
+                assert not it.context.endswith(it.target)
+            elif name in ("s_piqa", "s_wino"):
+                assert len(it.choices) == 2
+            else:
+                assert len(it.choices) == 4
+            assert 0 <= it.answer < len(it.choices)
+            # answer choice must be unique among choices
+            assert it.choices.count(it.choices[it.answer]) == 1
+
+
+def test_arc_challenge_harder_than_easy():
+    """Challenge distractors must come from the passage when available."""
+    tasks = D.build_tasks(5, 40)
+    harder = 0
+    for easy, chal in zip(tasks["s_arc_easy"], tasks["s_arc_challenge"]):
+        ctx = chal.context
+        in_ctx_chal = sum(1 for i, c in enumerate(chal.choices) if i != chal.answer and f" {c} " in ctx)
+        in_ctx_easy = sum(1 for i, c in enumerate(easy.choices) if i != easy.answer and f" {c} " in easy.context)
+        if in_ctx_chal > in_ctx_easy:
+            harder += 1
+    assert harder > 10, f"challenge distractors should usually be in-passage ({harder}/40)"
+
+
+def test_tokenizer_roundtrip_and_closure():
+    words = D.build_corpus(1, 300)
+    tok = Tokenizer.build(words + D.all_words(), size=2048)
+    assert tok.vocab[: len(SPECIALS)] == SPECIALS
+    tasks = D.build_tasks(1, 30)
+    for items in tasks.values():
+        for it in items:
+            for text in [it.context] + it.choices:
+                if not text:
+                    continue
+                ids = tok.encode(text)
+                assert tok.unk_id not in ids, text
+                assert tok.decode(ids) == text
+
+
+def test_tasks_json_serializable():
+    tasks = D.build_tasks(2, 5)
+    j = json.loads(D.tasks_to_json(tasks))
+    assert len(j["s_piqa"]) == 5
+    assert "context" in j["s_wino"][0]
+
+
+def test_handoff_grammar():
+    """The s_wino corpus pattern must be self-consistent: giver-side clause
+    repeats name1, asked-side repeats name2."""
+    import random
+
+    rng = random.Random(0)
+    for _ in range(50):
+        s = D._handoff(rng, D.NAMES, D.OBJECTS)
+        w = s.split()
+        n1, n2 = w[0], w[5]
+        assert w[1] == "handed" and w[4] == "to"
+        if "wanted" in s:
+            assert w[7] == n1, s
+        else:
+            assert w[7] == n2, s

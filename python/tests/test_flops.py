@@ -1,0 +1,106 @@
+"""Schedule solver + FLOPs/memory model properties, and the fixtures that
+lock the python and rust mirrors together (rust/tests/integration.rs
+re-derives the manifest plans with its own solver)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import MODELS, ModelConfig
+from compile.flops import (
+    layer_flops_per_token, peak_memory_bytes, solve_schedule,
+)
+
+
+def test_dense_schedule_identity():
+    cfg = MODELS["mamba-small"]
+    p = solve_schedule(cfg, 128, (), 0.0)
+    assert p.seg_lens == (128,)
+    assert p.flops_reduction == 0.0
+    assert p.final_len == 128
+
+
+@pytest.mark.parametrize("model", list(MODELS))
+@pytest.mark.parametrize("target", [0.10, 0.20, 0.30])
+def test_targets_hit(model, target):
+    from compile.configs import DEFAULT_LOCATIONS
+
+    cfg = MODELS[model]
+    locs = DEFAULT_LOCATIONS[model]
+    if target > 0.25 and len(locs) < 3:
+        pytest.skip("30% is infeasible with two late locations (small models "
+                    "are only evaluated at 10/20%, as in the paper's tables)")
+    p = solve_schedule(cfg, 128, locs, target)
+    assert abs(p.flops_reduction - target) < 0.05
+    # even, monotone non-increasing
+    assert all(l % 2 == 0 for l in p.seg_lens)
+    assert all(a >= b for a, b in zip(p.seg_lens, p.seg_lens[1:]))
+    # removal counts consistent
+    for i, r in enumerate(p.removed):
+        assert p.seg_lens[i] - p.seg_lens[i + 1] == r
+        assert r <= p.seg_lens[i] // 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seq=st.sampled_from([64, 128, 256, 512, 2048]),
+    start=st.integers(4, 14),
+    k=st.integers(1, 3),
+    target=st.sampled_from([0.1, 0.15, 0.2, 0.25, 0.3]),
+)
+def test_solver_invariants(seq, start, k, target):
+    cfg = MODELS["mamba2-base"]
+    locs = tuple(start + 5 * i for i in range(k) if start + 5 * i < cfg.n_layer)
+    if not locs:
+        return
+    try:
+        p = solve_schedule(cfg, seq, locs, target)
+    except ValueError:
+        return  # legitimately infeasible (few late locations, tight target)
+    assert p.seg_lens[0] == seq
+    assert len(p.seg_lens) == len(locs) + 1
+    assert p.len_at_layer(0) == seq
+    # The last layer computes at its segment's length; if a reduction site
+    # sits at the last layer, the OUTPUT (final_len) is shorter still.
+    assert p.len_at_layer(cfg.n_layer - 1) >= p.final_len
+
+
+def test_location_out_of_range():
+    cfg = MODELS["mamba-small"]
+    with pytest.raises(ValueError):
+        solve_schedule(cfg, 128, (cfg.n_layer,), 0.2)
+
+
+def test_flops_per_token_positive_and_scales():
+    small = layer_flops_per_token(MODELS["mamba-small"])
+    base = layer_flops_per_token(MODELS["mamba-base"])
+    assert 0 < small < base
+
+
+# Paper-scale dims: the regime Figure 3 describes (V >> d + 3*d_inner, so
+# the full-position logits buffer dominates peak memory and shrinks with the
+# surviving token count). Our tiny substrates have V ~ d + 3*d_inner, where
+# layer-0 activations co-dominate and savings are smaller — both regimes are
+# reported by `repro figure 3`.
+PAPER_28B = ModelConfig("paper-2.8b", "mamba", 50280, 2560, 64)
+
+
+def test_memory_model_monotone_in_reduction_paper_dims():
+    locs = (12, 17, 22, 27, 32, 37, 42)
+    dense = solve_schedule(PAPER_28B, 2048, (), 0.0)
+    prev = peak_memory_bytes(PAPER_28B, dense, 96)
+    for target in (0.1, 0.2, 0.3):
+        p = solve_schedule(PAPER_28B, 2048, locs, target)
+        cur = peak_memory_bytes(PAPER_28B, p, 96)
+        assert cur < prev, f"memory must shrink with reduction ({target})"
+        prev = cur
+
+
+def test_memory_reduction_shape_matches_paper():
+    """Paper Fig. 3: 30% FLOPs reduction yields ~30-45% peak-memory
+    reduction on Mamba-2.8B. Check the analytic model reproduces the
+    qualitative shape at the paper's dims."""
+    locs = (12, 17, 22, 27, 32, 37, 42)
+    dense = peak_memory_bytes(PAPER_28B, solve_schedule(PAPER_28B, 2048, (), 0.0), 96)
+    p30 = solve_schedule(PAPER_28B, 2048, locs, 0.30)
+    red = 1.0 - peak_memory_bytes(PAPER_28B, p30, 96) / dense
+    assert 0.20 < red < 0.60, f"30% FLOPs -> expected ~0.3-0.45 memory saving, got {red:.2%}"

@@ -1,0 +1,221 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes/dtypes with hypothesis. This is the CORE kernel correctness signal."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.importance import token_importance
+from compile.kernels.matching import cosine_match
+from compile.kernels.ssd_scan import ssd_scan
+from compile.kernels.ssm_scan import selective_scan
+
+import os
+SETTINGS = dict(max_examples=int(os.environ.get("HYPOTHESIS_MAX_EXAMPLES", "12")), deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@settings(**SETTINGS)
+@given(
+    bt=st.integers(1, 3),
+    L=st.integers(1, 70),
+    di=st.sampled_from([8, 32, 48]),
+    n=st.sampled_from([4, 8, 16]),
+    chunk=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_selective_scan_matches_ref(bt, L, di, n, chunk, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(bt, L, di)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.01, 0.3, size=(bt, L, di)), jnp.float32)
+    A = -jnp.asarray(r.uniform(0.3, 2.0, size=(di, n)), jnp.float32)
+    B = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    C = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    D = jnp.asarray(r.normal(size=(di,)), jnp.float32)
+    got = selective_scan(x, dt, A, B, C, D, chunk=chunk)
+    want = ref.selective_scan_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bt=st.integers(1, 2),
+    L=st.integers(1, 70),
+    h=st.sampled_from([1, 2, 4]),
+    p=st.sampled_from([8, 16]),
+    n=st.sampled_from([4, 8]),
+    chunk=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_ssd_matches_ref(bt, L, h, p, n, chunk, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(bt, L, h, p)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.01, 0.3, size=(bt, L, h)), jnp.float32)
+    A = -jnp.asarray(r.uniform(0.3, 2.0, size=(h,)), jnp.float32)
+    B = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    C = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    D = jnp.asarray(r.normal(size=(h,)), jnp.float32)
+    got = ssd_scan(x, dt, A, B, C, D, chunk=chunk)
+    want = ref.ssd_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bt=st.integers(1, 3),
+    L=st.integers(1, 130),
+    dp=st.sampled_from([16, 64, 128]),
+    metric=st.sampled_from(["clip", "noclip", "l1", "l2"]),
+    seed=st.integers(0, 2**16),
+)
+def test_importance_matches_ref(bt, L, dp, metric, seed):
+    r = _rng(seed)
+    y = jnp.asarray(r.normal(size=(bt, L, dp)), jnp.float32)
+    got = token_importance(y, metric)
+    want = ref.importance_ref(y, metric)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    bt=st.integers(1, 2),
+    na=st.integers(1, 90),
+    nb=st.integers(1, 90),
+    d=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_matching_matches_ref(bt, na, nb, d, seed):
+    r = _rng(seed)
+    a = jnp.asarray(r.normal(size=(bt, na, d)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(bt, nb, d)), jnp.float32)
+    f1, g1 = cosine_match(a, b)
+    f0, g0 = ref.cosine_match_ref(a, b)
+    np.testing.assert_allclose(g1, g0, rtol=1e-5, atol=1e-5)
+    # argmax may legitimately differ on near-ties; check the achieved sim.
+    picked = jnp.take_along_axis(
+        jnp.einsum("bad,bcd->bac",
+                   a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + 1e-6),
+                   b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + 1e-6)),
+        f1[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    np.testing.assert_allclose(picked, g0, rtol=1e-4, atol=1e-4)
+
+
+def test_scan_state_continuity_across_chunks():
+    """Chunked kernel must carry state exactly across chunk boundaries:
+    a scan over L tokens equals two scans stitched with explicit state."""
+    r = _rng(0)
+    bt, L, di, n = 1, 64, 16, 8
+    x = jnp.asarray(r.normal(size=(bt, L, di)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.01, 0.3, size=(bt, L, di)), jnp.float32)
+    A = -jnp.asarray(r.uniform(0.3, 2.0, size=(di, n)), jnp.float32)
+    B = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    C = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    D = jnp.zeros((di,), jnp.float32)
+    full = selective_scan(x, dt, A, B, C, D, chunk=16)
+    whole = selective_scan(x, dt, A, B, C, D, chunk=64)
+    np.testing.assert_allclose(full, whole, rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_decay_bounds():
+    """With A<0, dt>0, SSD intra-chunk decay weights are in (0, 1]; outputs
+    must stay finite even at long L."""
+    r = _rng(1)
+    bt, L, h, p, n = 1, 256, 2, 8, 4
+    x = jnp.asarray(r.normal(size=(bt, L, h, p)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.2, 1.0, size=(bt, L, h)), jnp.float32)
+    A = -jnp.asarray([3.0, 0.5], jnp.float32)
+    B = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    C = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    D = jnp.zeros((h,), jnp.float32)
+    y = ssd_scan(x, dt, A, B, C, D, chunk=64)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_with_state_refs_match_plain():
+    r = _rng(2)
+    bt, L, di, n = 2, 33, 8, 4
+    x = jnp.asarray(r.normal(size=(bt, L, di)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.01, 0.3, size=(bt, L, di)), jnp.float32)
+    A = -jnp.asarray(r.uniform(0.3, 2.0, size=(di, n)), jnp.float32)
+    B = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    C = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    D = jnp.asarray(r.normal(size=(di,)), jnp.float32)
+    y0 = ref.selective_scan_ref(x, dt, A, B, C, D)
+    y1, hT = ref.selective_scan_with_state_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(y0, y1, rtol=1e-6, atol=1e-6)
+    assert hT.shape == (bt, di, n)
+
+
+# ---------------------------------------------------------------------------
+# Parallel (training/prefill) scan formulations vs the sequential oracles.
+# ---------------------------------------------------------------------------
+
+from compile.kernels import parallel
+
+
+@settings(**SETTINGS)
+@given(
+    bt=st.integers(1, 2),
+    L=st.integers(1, 70),
+    di=st.sampled_from([8, 32]),
+    n=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_parallel_selective_scan_matches_ref(bt, L, di, n, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(bt, L, di)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.01, 0.3, size=(bt, L, di)), jnp.float32)
+    A = -jnp.asarray(r.uniform(0.3, 2.0, size=(di, n)), jnp.float32)
+    B = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    C = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    D = jnp.asarray(r.normal(size=(di,)), jnp.float32)
+    got, h = parallel.selective_scan_par_with_state(x, dt, A, B, C, D)
+    want, h0 = ref.selective_scan_with_state_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(h, h0, rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bt=st.integers(1, 2),
+    L=st.integers(1, 70),
+    h=st.sampled_from([1, 4]),
+    p=st.sampled_from([8, 16]),
+    n=st.sampled_from([4, 8]),
+    chunk=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_parallel_ssd_matches_ref(bt, L, h, p, n, chunk, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(bt, L, h, p)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.01, 0.3, size=(bt, L, h)), jnp.float32)
+    A = -jnp.asarray(r.uniform(0.3, 2.0, size=(h,)), jnp.float32)
+    B = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    C = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    D = jnp.asarray(r.normal(size=(h,)), jnp.float32)
+    got, hT = parallel.ssd_par_with_state(x, dt, A, B, C, D, chunk=chunk)
+    want, hT0 = ref.ssd_with_state_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(hT, hT0, rtol=5e-5, atol=5e-5)
+
+
+def test_parallel_scan_is_differentiable():
+    """Training path goes through the parallel scans; grads must be finite
+    and match the sequential path's grads."""
+    r = _rng(3)
+    bt, L, di, n = 1, 24, 8, 4
+    x = jnp.asarray(r.normal(size=(bt, L, di)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.01, 0.3, size=(bt, L, di)), jnp.float32)
+    A = -jnp.asarray(r.uniform(0.3, 2.0, size=(di, n)), jnp.float32)
+    B = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    C = jnp.asarray(r.normal(size=(bt, L, n)), jnp.float32)
+    D = jnp.asarray(r.normal(size=(di,)), jnp.float32)
+    g_par = jax.grad(lambda xx: parallel.selective_scan_par(xx, dt, A, B, C, D).sum())(x)
+    g_ref = jax.grad(lambda xx: ref.selective_scan_ref(xx, dt, A, B, C, D).sum())(x)
+    np.testing.assert_allclose(g_par, g_ref, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,159 @@
+"""UTRC + baseline reduction methods: semantic unit tests and invariants."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.reduction import reduce_tokens
+
+import os
+SETTINGS = dict(max_examples=int(os.environ.get("HYPOTHESIS_MAX_EXAMPLES", "10")), deadline=None)
+
+
+def _mk(seed, B=2, L=16, dp=12, d=8):
+    r = np.random.default_rng(seed)
+    y = jnp.asarray(r.normal(size=(B, L, dp)), jnp.float32)
+    out = jnp.asarray(r.normal(size=(B, L, d)), jnp.float32)
+    resid = jnp.asarray(r.normal(size=(B, L, d)), jnp.float32)
+    return y, out, resid
+
+
+@settings(**SETTINGS)
+@given(
+    method=st.sampled_from(["utrc", "evit", "pumer", "ltmp"]),
+    L=st.sampled_from([8, 16, 32, 64]),
+    frac=st.sampled_from([0.125, 0.25, 0.5]),
+    seed=st.integers(0, 2**16),
+)
+def test_shapes_and_kept_map(method, L, frac, seed):
+    n_remove = int(L * frac)
+    y, out, resid = _mk(seed, L=L)
+    o2, r2, kept = reduce_tokens(y, out, resid, method=method, n_remove=n_remove)
+    K = L - n_remove
+    assert o2.shape == (2, K, 8)
+    assert r2.shape == (2, K, 8)
+    assert kept.shape == (2, K)
+    k = np.asarray(kept)
+    for b in range(2):
+        row = k[b]
+        assert (np.diff(row) > 0).all(), "kept must be strictly ascending"
+        assert row.min() >= 0 and row.max() < L
+        assert len(set(row.tolist())) == K, "kept must be unique"
+
+
+def test_dense_is_identity():
+    y, out, resid = _mk(0)
+    o2, r2, kept = reduce_tokens(y, out, resid, method="dense", n_remove=0)
+    np.testing.assert_array_equal(o2, out)
+    np.testing.assert_array_equal(r2, resid)
+    np.testing.assert_array_equal(np.asarray(kept)[0], np.arange(16))
+
+
+def test_n_remove_beyond_half_rejected():
+    y, out, resid = _mk(1)
+    with pytest.raises(ValueError):
+        reduce_tokens(y, out, resid, method="utrc", n_remove=9)  # L=16, half=8
+
+
+def test_evit_removes_least_important():
+    """EViT must drop exactly the n least-important tokens (clip metric)."""
+    B, L, dp = 1, 8, 4
+    # Importance is mean(relu(y)): token i has importance i.
+    y = jnp.stack([jnp.full((dp,), float(i)) for i in range(L)])[None]
+    out = jnp.arange(L, dtype=jnp.float32)[None, :, None] * jnp.ones((1, L, 3))
+    o2, r2, kept = reduce_tokens(y, out, out, method="evit", n_remove=3)
+    np.testing.assert_array_equal(np.asarray(kept)[0], [3, 4, 5, 6, 7])
+    # surviving branch values untouched (prune-only)
+    np.testing.assert_allclose(np.asarray(o2)[0, :, 0], [3, 4, 5, 6, 7])
+
+
+def test_utrc_merge_only_averages_pairs():
+    """With q_hidden=q_residual=0 (merge-only) and a single removal, the
+    merge target must become (a + f) / 2 — the paper's Eq. in §4.2."""
+    B, L, dp = 1, 4, 4
+    # Construct importance: tokens 0,1 less important (M_A), 2,3 more (M_B).
+    y = jnp.asarray(
+        [[[0.1] * dp, [0.2] * dp, [1.0] * dp, [2.0] * dp]], jnp.float32
+    )
+    # Make token 1 nearly identical in features to token 3 -> strongest
+    # connection is 1->3 (cosine of constant vectors is 1 for all pairs...
+    # constant vectors are all parallel). Instead give directions:
+    y = jnp.asarray(
+        [[[1, 0, 0, 0.1], [0, 1, 0, 0.1], [1, 0.2, 0, 0], [0, 1, 0.2, 0]]],
+        jnp.float32,
+    )
+    # importance (clip-mean): t0=0.275, t1=0.275... make t2,t3 clearly bigger
+    y = y.at[0, 2].multiply(10.0).at[0, 3].multiply(10.0)
+    out = jnp.asarray([[[10.0], [20.0], [30.0], [40.0]]], jnp.float32)
+    o2, r2, kept = reduce_tokens(
+        y, out, out, method="utrc", n_remove=1, q_hidden=0.0, q_residual=0.0
+    )
+    k = np.asarray(kept)[0]
+    o = np.asarray(o2)[0, :, 0]
+    # One of tokens {0,1} was removed and merged into its match in {2,3}:
+    removed = set(range(4)) - set(k.tolist())
+    assert len(removed) == 1 and removed.pop() in (0, 1)
+    # Exactly one surviving token's value is the average of a removed token
+    # and its own: check some surviving value equals (a + f)/2.
+    vals = {0: 10.0, 1: 20.0, 2: 30.0, 3: 40.0}
+    removed_tok = (set(range(4)) - set(k.tolist())).pop()
+    expected_any = {(vals[removed_tok] + vals[t]) / 2 for t in (2, 3)}
+    assert any(abs(x - e) < 1e-5 for x in o for e in expected_any), (o, expected_any)
+
+
+def test_utrc_prune_only_leaves_targets_untouched():
+    y, out, resid = _mk(3, L=16)
+    o2, r2, kept = reduce_tokens(
+        y, out, resid, method="utrc", n_remove=4, q_hidden=1.0, q_residual=1.0
+    )
+    k = np.asarray(kept)[0]
+    np.testing.assert_allclose(
+        np.asarray(o2)[0], np.asarray(out)[0][k], rtol=1e-6,
+        err_msg="prune-only must be a pure gather",
+    )
+
+
+def test_branches_share_removed_indices():
+    """The paper's index-misalignment fix: hidden and residual branches must
+    remove the SAME positions (whatever q each uses)."""
+    y, out, resid = _mk(4, L=32)
+    o2, r2, kept = reduce_tokens(
+        y, out, resid, method="utrc", n_remove=8, q_hidden=0.5, q_residual=0.0
+    )
+    # kept is shared by construction; verify both outputs align with it:
+    assert o2.shape == r2.shape
+    # positions NOT merged into (pure gather rows) must match originals
+    k = np.asarray(kept)[0]
+    ob = np.asarray(out)[0][k]
+    rb = np.asarray(resid)[0][k]
+    # every row differs from the gathered original only if it was a merge
+    # target; in all cases shapes/selection agree:
+    assert ob.shape == np.asarray(o2)[0].shape
+    assert rb.shape == np.asarray(r2)[0].shape
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_pumer_merge_conserves_mass_of_pairs(seed):
+    """PuMer/ToMe merging averages pairs; the merged token must lie between
+    the two sources elementwise min/max."""
+    y, out, resid = _mk(seed, B=1, L=16)
+    o2, r2, kept = reduce_tokens(y, out, resid, method="pumer", n_remove=4)
+    o = np.asarray(out)[0]
+    lo, hi = o.min(), o.max()
+    assert np.asarray(o2).min() >= lo - 1e-5
+    assert np.asarray(o2).max() <= hi + 1e-5
+
+
+def test_metrics_change_selection():
+    """Different importance metrics must be able to produce different kept
+    sets (sanity that the metric is actually wired through)."""
+    r = np.random.default_rng(7)
+    y = jnp.asarray(r.normal(size=(1, 32, 16)) - 0.5, jnp.float32)  # mixed signs
+    out = jnp.asarray(r.normal(size=(1, 32, 8)), jnp.float32)
+    kepts = {}
+    for m in ("clip", "noclip", "l1", "l2"):
+        _, _, kept = reduce_tokens(y, out, out, method="utrc", n_remove=8, metric=m)
+        kepts[m] = tuple(np.asarray(kept)[0].tolist())
+    assert len(set(kepts.values())) >= 2, kepts

@@ -1,0 +1,92 @@
+//! L3 coordinator micro-benchmarks (pure host path — no XLA): batcher,
+//! router, state pool, JSON substrate, scoring math. These are the pieces
+//! that must never be the serving bottleneck (DESIGN.md §9).
+
+use std::time::Duration;
+
+use tor_ssm::bench::harness::Bench;
+use tor_ssm::coordinator::batcher::Batcher;
+use tor_ssm::coordinator::router::{Policy, Router};
+use tor_ssm::coordinator::state_pool::StatePool;
+use tor_ssm::coordinator::Request;
+use tor_ssm::eval::scoring::SeqLogits;
+use tor_ssm::util::json::Json;
+use tor_ssm::util::rng::Rng;
+
+fn req(id: u64, plen: usize) -> Request {
+    Request { id, prompt: vec![1; plen], gen_tokens: 8, variant: String::new(), arrived_us: 0 }
+}
+
+fn main() {
+    let mut b = Bench::new("coordinator");
+
+    b.bench_throughput("batcher_push_poll_1k", 1000, || {
+        let mut batcher = Batcher::new(8, Duration::from_millis(1));
+        for i in 0..1000u64 {
+            batcher.push(req(i, 16));
+            while batcher.poll(std::time::Instant::now()).is_some() {}
+        }
+        while batcher.drain().is_some() {}
+        assert_eq!(batcher.dispatched, 1000);
+    });
+
+    b.bench_throughput("router_cost_aware_10k", 10_000, || {
+        let mut r = Router::new(Policy::CostAware { long_prompt: 256 }, &["dense", "utrc@0.2"]);
+        let long = req(0, 512);
+        let short = req(1, 32);
+        for i in 0..10_000 {
+            let lane = r.route(if i % 2 == 0 { &long } else { &short }).unwrap();
+            r.note_enqueued(&lane);
+            r.note_done(&lane);
+        }
+    });
+
+    b.bench_throughput("state_pool_alloc_release_10k", 10_000, || {
+        let mut p = StatePool::new(128, 1 << 20);
+        let mut live = Vec::new();
+        for i in 0..10_000 {
+            if i % 3 == 2 {
+                if let Some(s) = live.pop() {
+                    p.release(s).unwrap();
+                }
+            } else if let Ok(s) = p.alloc() {
+                live.push(s);
+            }
+        }
+        for s in live {
+            p.release(s).unwrap();
+        }
+    });
+
+    // Scoring hot path: log-softmax span scoring over realistic shapes.
+    let vocab = 2048;
+    let out_len = 115;
+    let mut rng = Rng::new(5);
+    let logits: Vec<f32> = (0..out_len * vocab).map(|_| rng.f32()).collect();
+    let kept: Vec<i32> = (0..out_len as i32).map(|i| i + (i / 10)).collect();
+    let tokens: Vec<i32> = (0..140).map(|_| rng.below(vocab) as i32).collect();
+    b.bench("score_one_sequence_span16", || {
+        let sl = SeqLogits { logits: &logits, out_len, vocab, kept: &kept };
+        let (lp, n) = sl.aligned_span_lp(&tokens, (100, 116));
+        assert!(lp.is_finite() && n > 0);
+    });
+
+    // JSON substrate on a manifest-sized document.
+    let doc = {
+        let mut items = Vec::new();
+        for i in 0..200 {
+            items.push(format!(
+                r#"{{"name":"t{i}","shape":[{i},128],"offset":{},"bytes":{}}}"#,
+                i * 512,
+                i * 4096
+            ));
+        }
+        format!(r#"{{"params":[{}]}}"#, items.join(","))
+    };
+    b.bench("json_parse_manifest_sized", || {
+        let v = Json::parse(&doc).unwrap();
+        assert_eq!(v.expect("params").as_arr().unwrap().len(), 200);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,83 @@
+//! Runtime-layer benchmarks against real artifacts: HLO compile time,
+//! weight upload, dense vs reduced eval forward, decode step. Skips (with a
+//! message) if artifacts are missing so `cargo bench` stays runnable.
+
+use tor_ssm::bench::harness::Bench;
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::{HostTensor, Runtime, Weights};
+
+fn main() {
+    let artifacts = tor_ssm::artifacts_dir();
+    let man = match Manifest::load(&artifacts) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("SKIP runtime bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    let model = man.model("mamba-small").expect("mamba-small").clone();
+    let weights = Weights::load_init(&man, &model).expect("init weights");
+
+    let mut b = Bench::with_iters("runtime", 2, 10);
+
+    b.bench("upload_weights_mamba_small", || {
+        let dw = rt.upload_weights(&man, &model, &weights).unwrap();
+        assert_eq!(dw.buffers.len(), model.params.len());
+    });
+
+    let dw = rt.upload_weights(&man, &model, &weights).unwrap();
+    let dense = model.find_eval("dense", 0.0, None, None, None, None).unwrap().clone();
+    let reduced = model.find_eval("utrc", 0.20, None, None, None, None).unwrap().clone();
+
+    let exe_dense = rt.load_entry(&man, &dense).unwrap();
+    let exe_red = rt.load_entry(&man, &reduced).unwrap();
+    let tokens: Vec<i32> = (0..dense.batch * dense.seq_len)
+        .map(|i| (i % model.vocab_size) as i32)
+        .collect();
+    let tok = HostTensor::i32(vec![dense.batch, dense.seq_len], tokens);
+
+    b.bench("eval_forward_dense_b8_l128", || {
+        let tok_buf = rt.upload(&tok).unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
+        args.push(&tok_buf);
+        let outs = exe_dense.run_b(&args).unwrap();
+        assert_eq!(outs.len(), 2);
+    });
+
+    b.bench("eval_forward_utrc20_b8_l128", || {
+        let tok_buf = rt.upload(&tok).unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
+        args.push(&tok_buf);
+        let outs = exe_red.run_b(&args).unwrap();
+        assert_eq!(outs.len(), 2);
+    });
+
+    // Decode step.
+    let dec = model.decode_entry().unwrap().clone();
+    let exe_dec = rt.load_entry(&man, &dec).unwrap();
+    let nl = model.n_layer;
+    let di = model.d_inner;
+    let n = model.d_state;
+    let conv = HostTensor::zeros_f32(vec![nl, dec.batch, di, 3]);
+    let ssm = HostTensor::zeros_f32(vec![nl, dec.batch, di, n]);
+    let step_tok = HostTensor::i32(vec![dec.batch], vec![5; dec.batch]);
+    b.bench("decode_step_b4", || {
+        let tb = rt.upload(&step_tok).unwrap();
+        let cb = rt.upload(&conv).unwrap();
+        let sb = rt.upload(&ssm).unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
+        args.push(&tb);
+        args.push(&cb);
+        args.push(&sb);
+        let outs = exe_dec.run_b(&args).unwrap();
+        assert_eq!(outs.len(), 3);
+    });
+
+    b.finish();
+    println!("\ncompile log:");
+    for (path, s) in rt.compile_log.borrow().iter() {
+        let short = path.rsplit('/').next().unwrap_or(path);
+        println!("  {short:<50} {s:.2}s");
+    }
+}

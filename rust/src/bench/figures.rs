@@ -1,0 +1,198 @@
+//! Regenerate the paper's Figures 1, 3, 4, 5, 6.
+//!
+//! Figure 1  — accuracy collapse of EViT/PuMer vs ours across FLOPs ratios.
+//! Figure 3/5 — GPU peak-memory reduction (analytic activation-memory model
+//!              at the paper's geometry: generate 2048 tokens, batch 96).
+//! Figure 4/6 — generation throughput, MEASURED end-to-end on the serving
+//!              engine (prompt 512 = paper's 2048 scaled by the same 1/4 as
+//!              the models; batch = prefill batch; greedy decode).
+
+use anyhow::Result;
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::Request;
+use crate::eval::scoring::Scheme;
+use crate::reduction::{peak_memory_bytes, solve_schedule, Arch, ModelDims, SchedulePlan};
+use crate::train::load_best_weights;
+
+use super::{emit_report, Ctx};
+
+/// Figure 1: EViT / PuMer / UTRC average accuracy vs FLOPs reduction on the
+/// Mamba-2.8B substrate (mamba-base).
+pub fn figure1(ctx: &mut Ctx) -> Result<()> {
+    let model = "mamba-base";
+    let mut body = String::from(
+        "# Figure 1 — direct application of Transformer token reduction fails on SSMs\n\n\
+         Average accuracy (%) on mamba-base (paper: Mamba-2.8B), truncated-label scoring.\n\n\
+         | FLOPs reduction | EViT (prune) | PuMer (merge) | Ours (UTRC) | dense |\n|---|---|---|---|---|\n",
+    );
+    let dense_e = ctx.find_eval_entry(model, "dense", 0.0, None, None, None, None)?;
+    let dense = ctx.eval_variant(model, &dense_e)?.avg_acc(Scheme::Truncated) * 100.0;
+    for &ratio in &[0.10, 0.20, 0.30] {
+        let mut cells = Vec::new();
+        for method in ["evit", "pumer", "utrc"] {
+            let e = ctx.find_eval_entry(model, method, ratio, None, None, None, None)?;
+            let r = ctx.eval_variant(model, &e)?;
+            cells.push(format!("{:.1}", r.avg_acc(Scheme::Truncated) * 100.0));
+        }
+        body += &format!(
+            "| {:.0}% | {} | {} | {} | {dense:.1} |\n",
+            ratio * 100.0,
+            cells[0],
+            cells[1],
+            cells[2]
+        );
+    }
+    emit_report(&ctx.man, "figure1.md", &body)
+}
+
+/// The paper's actual checkpoints, for evaluating the analytic memory model
+/// at the scale where its logits/late-layer dominance appears (our tiny
+/// substrates have V < d+3di, so layer-0 activations dominate instead —
+/// both scales are reported; see DESIGN.md §3).
+fn paper_dims(name: &str) -> (ModelDims, Vec<usize>) {
+    let (arch, d, nl, locs): (Arch, usize, usize, Vec<usize>) = match name {
+        "Mamba-1.4B" => (Arch::Mamba, 2048, 48, vec![10, 15, 20, 25, 30, 35]),
+        "Mamba-2.8B" => (Arch::Mamba, 2560, 64, vec![12, 17, 22, 27, 32, 37, 42]),
+        "Mamba-2-1.3B" => (Arch::Mamba2, 2048, 48, vec![10, 15, 20, 25, 30, 35]),
+        _ => (Arch::Mamba2, 2560, 64, vec![12, 17, 22, 27, 32, 37, 42]),
+    };
+    (
+        ModelDims {
+            name: name.to_string(),
+            arch,
+            vocab_size: 50280,
+            d_model: d,
+            n_layer: nl,
+            d_state: if arch == Arch::Mamba2 { 128 } else { 16 },
+            expand: 2,
+            d_conv: 4,
+            headdim: 64,
+            chunk: 256,
+        },
+        locs,
+    )
+}
+
+/// Figures 3 (base models) and 5 (small models): peak-memory reduction.
+pub fn figure_memory(ctx: &mut Ctx, small: bool) -> Result<()> {
+    // Paper geometry: generating 2048 tokens with batch 96 — peak memory is
+    // dominated by the full-position logits buffer + late-layer activations,
+    // both of which shrink with the surviving token count. The analytic
+    // model is evaluated (a) at the PAPER's model dims — the headline, the
+    // regime the figure describes — and (b) at our substrate dims.
+    let (models, paper_models, fig) = if small {
+        (["mamba-small", "mamba2-small"], ["Mamba-1.4B", "Mamba-2-1.3B"], "figure5")
+    } else {
+        (["mamba-base", "mamba2-base"], ["Mamba-2.8B", "Mamba-2-2.7B"], "figure3")
+    };
+    let batch = 96;
+    let seq = 2048;
+    let mut body = format!(
+        "# {} — GPU peak-memory reduction vs FLOPs reduction\n\n\
+         Analytic live-set+logits peak at generation geometry (batch {batch}, {seq} tokens).\n\n\
+         ## At the paper's model dims (headline)\n\n\
+         | Model | FLOPs reduction | peak GB | reduction vs dense |\n|---|---|---|---|\n",
+        if small { "Figure 5" } else { "Figure 3" },
+    );
+    for name in paper_models {
+        let (dims, locations) = paper_dims(name);
+        let dense: SchedulePlan = solve_schedule(&dims, seq, &[], 0.0)?;
+        let dense_bytes = peak_memory_bytes(&dims, &dense, batch);
+        body += &format!("| {name} | 0% | {:.1} | 0.0% |\n", dense_bytes as f64 / 1e9);
+        for &ratio in &[0.10, 0.20, 0.30] {
+            let plan = solve_schedule(&dims, seq, &locations, ratio)?;
+            let bytes = peak_memory_bytes(&dims, &plan, batch);
+            body += &format!(
+                "| {name} | {:.0}% | {:.1} | {:.1}% |\n",
+                ratio * 100.0,
+                bytes as f64 / 1e9,
+                (1.0 - bytes as f64 / dense_bytes as f64) * 100.0
+            );
+        }
+    }
+    body += "\n## At our substrate dims (V≈d+3·d_inner: layer-0 activations co-dominate)\n\n\
+             | Model | FLOPs reduction | peak MB | reduction vs dense |\n|---|---|---|---|\n";
+    for model in models {
+        let me = ctx.man.model(model)?.clone();
+        let dims = ModelDims::from_manifest(&me);
+        let locations = me.default_locations().unwrap_or_default();
+        let dense: SchedulePlan = solve_schedule(&dims, seq, &[], 0.0)?;
+        let dense_bytes = peak_memory_bytes(&dims, &dense, batch);
+        body += &format!("| {model} | 0% | {:.1} | 0.0% |\n", dense_bytes as f64 / 1e6);
+        for &ratio in &[0.10, 0.20, 0.30] {
+            let plan = solve_schedule(&dims, seq, &locations, ratio)?;
+            let bytes = peak_memory_bytes(&dims, &plan, batch);
+            body += &format!(
+                "| {model} | {:.0}% | {:.1} | {:.1}% |\n",
+                ratio * 100.0,
+                bytes as f64 / 1e6,
+                (1.0 - bytes as f64 / dense_bytes as f64) * 100.0
+            );
+        }
+    }
+    emit_report(&ctx.man, &format!("{fig}.md"), &body)
+}
+
+/// Figures 4 (base) and 6 (small): measured generation throughput.
+pub fn figure_throughput(ctx: &mut Ctx, small: bool, gen_tokens: usize) -> Result<()> {
+    let (models, fig, paper_models) = if small {
+        (["mamba-small", "mamba2-small"], "figure6", "Mamba-1.4B / Mamba-2-1.3B")
+    } else {
+        (["mamba-base", "mamba2-base"], "figure4", "Mamba-2.8B / Mamba-2-2.7B")
+    };
+    let mut body = format!(
+        "# {} — generation throughput vs FLOPs reduction (paper: {paper_models})\n\n\
+         Measured on the rust serving engine (prompt {}, {gen_tokens} generated, batch {}).\n\n\
+         | Model | Variant | prefill ms | decode ms | tok/s (gen) | speedup |\n|---|---|---|---|---|---|\n",
+        if small { "Figure 6" } else { "Figure 4" },
+        ctx.man.prefill_seq_len,
+        ctx.man.prefill_batch,
+    );
+    for model in models {
+        let me = ctx.man.model(model)?.clone();
+        let (w, _) = load_best_weights(&ctx.man, &me)?;
+        let mut baseline_tps = 0.0f64;
+        for variant in ["dense", "utrc@0.1", "utrc@0.2", "utrc@0.3"] {
+            let engine = Engine::new(&ctx.rt, &ctx.man, &me, &w, variant)?;
+            let reqs: Vec<Request> = (0..engine.batch)
+                .map(|i| Request {
+                    id: i as u64,
+                    prompt: synth_prompt(ctx, engine.prefill_len),
+                    gen_tokens,
+                    variant: variant.to_string(),
+                    arrived_us: 0,
+                })
+                .collect();
+            // Warmup (compile+cache), then measure.
+            engine.serve_batch(&ctx.rt, &reqs)?;
+            let t0 = std::time::Instant::now();
+            let resp = engine.serve_batch(&ctx.rt, &reqs)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let gen_total: usize = resp.iter().map(|r| r.generated.len()).sum();
+            let tps = gen_total as f64 / wall;
+            if variant == "dense" {
+                baseline_tps = tps;
+            }
+            body += &format!(
+                "| {model} | {variant} | {:.0} | {:.0} | {tps:.2} | {:.2}x |\n",
+                resp[0].prefill_us as f64 / 1000.0,
+                resp[0].decode_us as f64 / 1000.0,
+                tps / baseline_tps.max(1e-9)
+            );
+        }
+    }
+    emit_report(&ctx.man, &format!("{fig}.md"), &body)
+}
+
+fn synth_prompt(ctx: &Ctx, len: usize) -> Vec<i32> {
+    // A real task context repeated to fill the prompt frame.
+    let text = &ctx.tasks[0].items[0].context;
+    let ids: Vec<i32> = ctx.tok.encode(text).iter().map(|&x| x as i32).collect();
+    let mut out = Vec::with_capacity(len);
+    while out.len() < len {
+        out.extend_from_slice(&ids);
+    }
+    out.truncate(len);
+    out
+}

@@ -1,0 +1,136 @@
+//! Micro-benchmark harness (criterion substitute for `cargo bench`).
+//!
+//! Usage in a `[[bench]] harness = false` target:
+//!
+//! ```ignore
+//! let mut b = Bench::new("coordinator");
+//! b.bench("batcher_push_poll", 1000, || { ... });
+//! b.finish();
+//! ```
+
+use crate::util::stats::{bench as run_bench, human, Summary};
+
+pub struct Bench {
+    pub group: String,
+    pub results: Vec<(String, Summary)>,
+    warmup: usize,
+    iters: usize,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        // Allow quick runs: REPRO_BENCH_ITERS=10 cargo bench
+        let iters = std::env::var("REPRO_BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(50);
+        let warmup = (iters / 5).max(2);
+        println!("== bench group: {group} (warmup {warmup}, iters {iters}) ==");
+        Bench { group: group.to_string(), results: Vec::new(), warmup, iters }
+    }
+
+    pub fn with_iters(group: &str, warmup: usize, iters: usize) -> Bench {
+        println!("== bench group: {group} (warmup {warmup}, iters {iters}) ==");
+        Bench { group: group.to_string(), results: Vec::new(), warmup, iters }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
+        let s = run_bench(self.warmup, self.iters, f);
+        println!(
+            "{:<40} mean {:>12}  p50 {:>12}  p99 {:>12}  (n={})",
+            format!("{}/{}", self.group, name),
+            human(s.mean_ns),
+            human(s.p50_ns),
+            human(s.p99_ns),
+            s.n
+        );
+        self.results.push((name.to_string(), s));
+    }
+
+    /// Report throughput given items processed per iteration.
+    pub fn bench_throughput<F: FnMut()>(&mut self, name: &str, items_per_iter: usize, f: F) {
+        let s = run_bench(self.warmup, self.iters, f);
+        let per_s = items_per_iter as f64 / (s.mean_ns / 1e9);
+        println!(
+            "{:<40} mean {:>12}  {:>14.1} items/s  (n={})",
+            format!("{}/{}", self.group, name),
+            human(s.mean_ns),
+            per_s,
+            s.n
+        );
+        self.results.push((name.to_string(), s));
+    }
+
+    pub fn finish(self) {
+        println!("== {} done: {} benches ==", self.group, self.results.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden numerics check: rust runtime vs python-side logits fixture.
+// ---------------------------------------------------------------------------
+
+use anyhow::{ensure, Context, Result};
+
+use crate::manifest::Manifest;
+use crate::runtime::{HostTensor, Runtime, Weights};
+
+/// Execute the dense eval module with init weights on the deterministic
+/// token pattern from `aot.export_golden` and compare the strided logits
+/// slice bit-tolerantly. This pins the whole AOT bridge: HLO text parse,
+/// compile, param upload order, and numerics.
+pub fn golden_check(rt: &Runtime, man: &Manifest) -> Result<String> {
+    let text = std::fs::read_to_string(man.path("golden.json")).context("golden.json")?;
+    let g = crate::util::json::Json::parse(&text)?;
+    let model = g.str_of("model");
+    let batch = g.usize_of("batch");
+    let seq_len = g.usize_of("seq_len");
+    let want: Vec<f64> = g
+        .expect("values")
+        .as_arr()
+        .context("values")?
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    let shape = g.usize_arr_of("shape");
+
+    let me = man.model(&model)?.clone();
+    let entry = me.find_eval("dense", 0.0, None, None, None, None)?;
+    let exe = rt.load_entry(man, entry)?;
+    let w = Weights::load_init(man, &me)?;
+    let dw = rt.upload_weights(man, &me, &w)?;
+
+    let tokens: Vec<i32> = (0..batch * seq_len)
+        .map(|i| ((i as i64 * 7) % me.vocab_size as i64) as i32)
+        .collect();
+    let tok = rt.upload(&HostTensor::i32(vec![batch, seq_len], tokens))?;
+    let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
+    args.push(&tok);
+    let outs = exe.run_b(&args)?;
+    let logits = outs[0].as_f32()?;
+    let v = me.vocab_size;
+
+    // Slice logits[:, ::16, ::64] in row-major order.
+    let mut got = Vec::with_capacity(want.len());
+    for b in 0..shape[0] {
+        for li in 0..shape[1] {
+            for vi in 0..shape[2] {
+                got.push(logits[(b * seq_len + li * 16) * v + vi * 64] as f64);
+            }
+        }
+    }
+    ensure!(got.len() == want.len(), "slice size mismatch {} vs {}", got.len(), want.len());
+    let mut max_err = 0.0f64;
+    for (a, b) in got.iter().zip(&want) {
+        max_err = max_err.max((a - b).abs() / (1.0 + b.abs()));
+    }
+    ensure!(
+        max_err < 2e-4,
+        "golden mismatch: max relative error {max_err:.2e} (rust runtime vs python lowering)"
+    );
+    Ok(format!(
+        "golden OK: {} values, max rel err {max_err:.2e} (model {model}, platform {})",
+        want.len(),
+        rt.platform()
+    ))
+}

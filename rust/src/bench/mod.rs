@@ -1,0 +1,179 @@
+//! Experiment harness: shared context + result cache for regenerating every
+//! table and figure in the paper (DESIGN.md §5 experiment index).
+//!
+//! Results are cached under `artifacts/results/` keyed by
+//! (model, variant tag, item count, weights fingerprint) so tables that
+//! share variants (e.g. Table 1 and Figure 1) don't recompute; `--fresh`
+//! bypasses the cache.
+
+pub mod figures;
+pub mod harness;
+pub mod tables;
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::data::{load_tasks, Task};
+use crate::eval::{evaluate, EvalResult, TaskResult};
+use crate::manifest::{HloEntry, Manifest};
+use crate::runtime::{DeviceWeights, Runtime};
+use crate::tokenizer::Tokenizer;
+use crate::train::load_best_weights;
+use crate::util::json::{num, obj, s, Json};
+
+pub struct Ctx {
+    pub rt: Runtime,
+    pub man: Manifest,
+    pub tok: Tokenizer,
+    pub tasks: Vec<Task>,
+    pub max_items: usize,
+    pub fresh: bool,
+    weights: HashMap<String, (DeviceWeights, String)>, // model -> (buffers, fingerprint)
+}
+
+impl Ctx {
+    pub fn new(artifacts: &str, max_items: usize, fresh: bool) -> Result<Ctx> {
+        let man = Manifest::load(artifacts)?;
+        let rt = Runtime::cpu()?;
+        let tok = Tokenizer::load(man.path(&man.vocab_file))?;
+        let tasks = load_tasks(man.path(&man.tasks_file))?;
+        Ok(Ctx { rt, man, tok, tasks, max_items, fresh, weights: HashMap::new() })
+    }
+
+    fn ensure_weights(&mut self, model: &str) -> Result<String> {
+        if !self.weights.contains_key(model) {
+            let me = self.man.model(model)?.clone();
+            let (w, trained) = load_best_weights(&self.man, &me)?;
+            if !trained {
+                eprintln!(
+                    "[warn] no checkpoint for {model}; evaluating INIT weights. \
+                     Run `repro train --model {model}` first for meaningful tables."
+                );
+            }
+            let fp = format!("{}:{:.6}", if trained { "ckpt" } else { "init" }, w.mean_abs());
+            let dw = self.rt.upload_weights(&self.man, &me, &w)?;
+            self.weights.insert(model.to_string(), (dw, fp));
+        }
+        Ok(self.weights[model].1.clone())
+    }
+
+    /// Evaluate one exported variant (cached).
+    pub fn eval_variant(&mut self, model: &str, entry: &HloEntry) -> Result<EvalResult> {
+        let fp = self.ensure_weights(model)?;
+        let key = format!("{model}__{}__{}__{}", entry.tag, self.max_items, fp);
+        let cache = self.man.root.join("results").join(format!("{}.json", sanitize(&key)));
+        if !self.fresh && cache.exists() {
+            if let Ok(r) = read_result(&cache) {
+                return Ok(r);
+            }
+        }
+        let me = self.man.model(model)?.clone();
+        let (dw, _) = self.weights.get(model).expect("weights ensured");
+        let r = evaluate(
+            &self.rt, &self.man, &me, entry, dw, &self.tok, &self.tasks, self.max_items,
+        )
+        .with_context(|| format!("evaluating {model}/{}", entry.tag))?;
+        write_result(&cache, &r).ok();
+        eprintln!(
+            "[eval] {model:<13} {:<42} avg_acc={:.3} ppl={:>10.2} ({:.1}s, {} seqs)",
+            entry.tag,
+            r.avg_acc(crate::eval::scoring::Scheme::Truncated),
+            r.lambada_ppl(crate::eval::scoring::Scheme::Truncated),
+            r.wall_s,
+            r.sequences
+        );
+        Ok(r)
+    }
+
+    pub fn find_eval_entry(
+        &self,
+        model: &str,
+        method: &str,
+        ratio: f64,
+        metric: Option<&str>,
+        qh: Option<f64>,
+        qr: Option<f64>,
+        locations: Option<&[usize]>,
+    ) -> Result<HloEntry> {
+        Ok(self
+            .man
+            .model(model)?
+            .find_eval(method, ratio, metric, qh, qr, locations)?
+            .clone())
+    }
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' })
+        .collect()
+}
+
+fn result_to_json(r: &EvalResult) -> Json {
+    obj(vec![
+        ("model", s(&r.model)),
+        ("variant", s(&r.variant)),
+        ("wall_s", num(r.wall_s)),
+        ("sequences", num(r.sequences as f64)),
+        (
+            "tasks",
+            Json::Arr(
+                r.tasks
+                    .iter()
+                    .map(|t| {
+                        obj(vec![
+                            ("name", s(&t.name)),
+                            ("n_items", num(t.n_items as f64)),
+                            ("acc_aligned", num(t.acc_aligned)),
+                            ("acc_truncated", num(t.acc_truncated)),
+                            ("ppl_aligned", num(t.ppl_aligned)),
+                            ("ppl_truncated", num(t.ppl_truncated)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn write_result(path: &std::path::Path, r: &EvalResult) -> Result<()> {
+    if let Some(d) = path.parent() {
+        std::fs::create_dir_all(d)?;
+    }
+    std::fs::write(path, result_to_json(r).to_string())?;
+    Ok(())
+}
+
+fn read_result(path: &std::path::Path) -> Result<EvalResult> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)?;
+    Ok(EvalResult {
+        model: j.str_of("model"),
+        variant: j.str_of("variant"),
+        wall_s: j.f64_of("wall_s"),
+        sequences: j.usize_of("sequences"),
+        tasks: j
+            .expect("tasks")
+            .as_arr()
+            .context("tasks not array")?
+            .iter()
+            .map(|t| TaskResult {
+                name: t.str_of("name"),
+                n_items: t.usize_of("n_items"),
+                acc_aligned: t.f64_of("acc_aligned"),
+                acc_truncated: t.f64_of("acc_truncated"),
+                ppl_aligned: t.f64_of("ppl_aligned"),
+                ppl_truncated: t.f64_of("ppl_truncated"),
+            })
+            .collect(),
+    })
+}
+
+/// Write a report file under artifacts/results and echo it to stdout.
+pub fn emit_report(man: &Manifest, name: &str, body: &str) -> Result<()> {
+    let dir = man.root.join("results");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(name), body)?;
+    println!("{body}");
+    Ok(())
+}

@@ -1,0 +1,203 @@
+//! Regenerate the paper's Tables 1-6 (DESIGN.md §5).
+//!
+//! Rows mirror the paper's layout: LAMBADA-analogue PPL, per-task accuracy,
+//! and the six-task average, under the paper's truncated-label scoring (the
+//! aligned-scheme average is appended as an extra column for context).
+
+use anyhow::Result;
+
+use crate::data::TASK_ORDER;
+use crate::eval::scoring::Scheme;
+use crate::eval::EvalResult;
+
+use super::{emit_report, Ctx};
+
+const T: Scheme = Scheme::Truncated;
+const A: Scheme = Scheme::Aligned;
+
+fn task_acc(r: &EvalResult, name: &str, scheme: Scheme) -> f64 {
+    r.tasks
+        .iter()
+        .find(|t| t.name == name)
+        .map(|t| match scheme {
+            Scheme::Aligned => t.acc_aligned,
+            Scheme::Truncated => t.acc_truncated,
+        })
+        .unwrap_or(f64::NAN)
+}
+
+fn header() -> String {
+    let mut h = format!("| {:<22} | {:>6} | {:>10} |", "Method", "FLOPS↓", "PPL↓");
+    for t in TASK_ORDER {
+        h += &format!(" {:>8} |", t.trim_start_matches("s_"));
+    }
+    h += &format!(" {:>6} | {:>8} |\n", "Avg↑", "Avg(al)↑");
+    let cols = 3 + TASK_ORDER.len() + 2;
+    h += &format!("|{}\n", "---|".repeat(cols));
+    h
+}
+
+fn row(label: &str, ratio: f64, r: &EvalResult) -> String {
+    let mut s = format!(
+        "| {:<22} | {:>5.0}% | {:>10.2} |",
+        label,
+        ratio * 100.0,
+        r.lambada_ppl(T)
+    );
+    for t in TASK_ORDER {
+        s += &format!(" {:>8.1} |", task_acc(r, t, T) * 100.0);
+    }
+    s += &format!(" {:>6.1} | {:>8.1} |\n", r.avg_acc(T) * 100.0, r.avg_acc(A) * 100.0);
+    s
+}
+
+fn main_table(ctx: &mut Ctx, models: &[&str], title: &str, file: &str) -> Result<()> {
+    let mut body = format!("# {title}\n\n");
+    for model in models {
+        let ratios: &[f64] = if model.ends_with("base") { &[0.10, 0.20, 0.30] } else { &[0.10, 0.20] };
+        body += &format!("## {model}\n\n{}", header());
+        let dense = ctx.find_eval_entry(model, "dense", 0.0, None, None, None, None)?;
+        let r = ctx.eval_variant(model, &dense)?;
+        body += &row(&format!("{model} (dense)"), 0.0, &r);
+        for &ratio in ratios {
+            for method in ["pumer", "evit", "utrc"] {
+                let e = ctx.find_eval_entry(model, method, ratio, None, None, None, None)?;
+                let r = ctx.eval_variant(model, &e)?;
+                let label = if method == "utrc" { "+ Ours (UTRC)" } else if method == "evit" { "+ EViT" } else { "+ PuMer" };
+                body += &row(label, ratio, &r);
+            }
+        }
+        body += "\n";
+    }
+    emit_report(&ctx.man, file, &body)
+}
+
+/// Table 1: Mamba-2 family (substrates for Mamba-2-1.3B / Mamba-2-2.7B).
+pub fn table1(ctx: &mut Ctx) -> Result<()> {
+    main_table(
+        ctx,
+        &["mamba2-small", "mamba2-base"],
+        "Table 1 — post-training token reduction on Mamba-2 (paper: Mamba-2-1.3B/2.7B)",
+        "table1.md",
+    )
+}
+
+/// Table 2: Mamba family (substrates for Mamba-1.4B / Mamba-2.8B).
+pub fn table2(ctx: &mut Ctx) -> Result<()> {
+    main_table(
+        ctx,
+        &["mamba-small", "mamba-base"],
+        "Table 2 — post-training token reduction on Mamba (paper: Mamba-1.4B/2.8B)",
+        "table2.md",
+    )
+}
+
+/// Table 3: importance-metric ablation @20%.
+pub fn table3(ctx: &mut Ctx) -> Result<()> {
+    let mut body = String::from(
+        "# Table 3 — token-importance metric ablation (UTRC @20% FLOPs)\n\n\
+         | Model | Metric | PPL↓ | Avg Acc↑ | Avg Acc (aligned)↑ |\n|---|---|---|---|---|\n",
+    );
+    for model in ["mamba2-base", "mamba-base"] {
+        for metric in ["l1", "l2", "noclip", "clip"] {
+            let e = ctx.find_eval_entry(model, "utrc", 0.20, Some(metric), None, None, None)?;
+            let r = ctx.eval_variant(model, &e)?;
+            body += &format!(
+                "| {model} | {metric}{} | {:.2} | {:.1} | {:.1} |\n",
+                if metric == "clip" { " (ours)" } else { "" },
+                r.lambada_ppl(T),
+                r.avg_acc(T) * 100.0,
+                r.avg_acc(A) * 100.0
+            );
+        }
+    }
+    emit_report(&ctx.man, "table3.md", &body)
+}
+
+/// Table 4: reduction-location ablation on mamba2-base @20%.
+pub fn table4(ctx: &mut Ctx) -> Result<()> {
+    let model = "mamba2-base";
+    let mut body = String::from(
+        "# Table 4 — reduction-location ablation (mamba2-base, UTRC @20%)\n\n\
+         | Locations | PPL↓ | Avg Acc↑ | Avg Acc (aligned)↑ |\n|---|---|---|---|\n",
+    );
+    // Every exported UTRC@20%/clip/default-q variant differing only in schedule.
+    let me = ctx.man.model(model)?.clone();
+    let mut schedules: Vec<Vec<usize>> = me
+        .hlo
+        .values()
+        .filter(|e| e.kind == "eval")
+        .filter_map(|e| e.reduction.as_ref())
+        .filter(|r| {
+            r.method == "utrc"
+                && (r.flops_reduction - 0.20).abs() < 1e-6
+                && r.metric == "clip"
+                && (r.q_hidden - 0.5).abs() < 1e-6
+                && r.q_residual.abs() < 1e-6
+        })
+        .map(|r| r.locations.clone())
+        .collect();
+    schedules.sort();
+    schedules.dedup();
+    for loc in schedules {
+        let e = ctx.find_eval_entry(model, "utrc", 0.20, None, None, None, Some(&loc))?;
+        let r = ctx.eval_variant(model, &e)?;
+        body += &format!(
+            "| {loc:?} | {:.2} | {:.1} | {:.1} |\n",
+            r.lambada_ppl(T),
+            r.avg_acc(T) * 100.0,
+            r.avg_acc(A) * 100.0
+        );
+    }
+    emit_report(&ctx.man, "table4.md", &body)
+}
+
+/// Table 5: hidden/residual design choices on mamba2-base @30%.
+pub fn table5(ctx: &mut Ctx) -> Result<()> {
+    let model = "mamba2-base";
+    let mut body = String::from(
+        "# Table 5 — UTR design choices (mamba2-base, @30% FLOPs)\n\n\
+         | Hidden states | Residual | PPL↓ | Avg Acc↑ | Avg Acc (aligned)↑ |\n|---|---|---|---|---|\n",
+    );
+    let combos: &[(f64, f64, &str, &str)] = &[
+        (0.0, 0.0, "M-only", "M-only"),
+        (1.0, 1.0, "P-only", "P-only"),
+        (0.8, 0.2, "q = 0.8", "q = 0.2"),
+        (0.2, 0.8, "q = 0.2", "q = 0.8"),
+        (0.5, 0.5, "q = 0.5", "q = 0.5"),
+        (0.5, 1.0, "q = 0.5", "P-only"),
+        (0.5, 0.0, "q = 0.5", "M-only (ours)"),
+    ];
+    for &(qh, qr, lh, lr) in combos {
+        let e = ctx.find_eval_entry(model, "utrc", 0.30, None, Some(qh), Some(qr), None)?;
+        let r = ctx.eval_variant(model, &e)?;
+        body += &format!(
+            "| {lh} | {lr} | {:.2} | {:.1} | {:.1} |\n",
+            r.lambada_ppl(T),
+            r.avg_acc(T) * 100.0,
+            r.avg_acc(A) * 100.0
+        );
+    }
+    emit_report(&ctx.man, "table5.md", &body)
+}
+
+/// Table 6: LTMP baseline comparison on mamba2-base.
+pub fn table6(ctx: &mut Ctx) -> Result<()> {
+    let model = "mamba2-base";
+    let mut body = format!(
+        "# Table 6 — LTMP vs UTRC (mamba2-base)\n\n{}",
+        header()
+    );
+    let dense = ctx.find_eval_entry(model, "dense", 0.0, None, None, None, None)?;
+    let r = ctx.eval_variant(model, &dense)?;
+    body += &row("mamba2-base (dense)", 0.0, &r);
+    for &ratio in &[0.10, 0.20, 0.30] {
+        for method in ["ltmp", "utrc"] {
+            let e = ctx.find_eval_entry(model, method, ratio, None, None, None, None)?;
+            let r = ctx.eval_variant(model, &e)?;
+            let label = if method == "utrc" { "+ Ours (UTRC)" } else { "+ LTMP" };
+            body += &row(label, ratio, &r);
+        }
+    }
+    emit_report(&ctx.man, "table6.md", &body)
+}

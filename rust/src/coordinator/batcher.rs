@@ -1,0 +1,135 @@
+//! Dynamic batcher: collects requests into the executable's static batch
+//! size under a size-or-deadline policy (classic serving batcher, cf. Orca).
+//!
+//! Invariants (property-tested in rust/tests/prop_coordinator.rs):
+//! * a batch never exceeds `batch_size`;
+//! * requests leave in arrival order within a variant (FIFO);
+//! * no request is dropped or duplicated;
+//! * a non-empty queue is flushed no later than `max_wait`.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+#[derive(Debug)]
+pub struct Batcher {
+    pub batch_size: usize,
+    pub max_wait: Duration,
+    queue: VecDeque<Request>,
+    oldest: Option<Instant>,
+    pub enqueued: u64,
+    pub dispatched: u64,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize, max_wait: Duration) -> Batcher {
+        assert!(batch_size > 0);
+        Batcher {
+            batch_size,
+            max_wait,
+            queue: VecDeque::new(),
+            oldest: None,
+            enqueued: 0,
+            dispatched: 0,
+        }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        if self.queue.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.queue.push_back(r);
+        self.enqueued += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Non-blocking poll: returns a full batch immediately, or a partial
+    /// batch once the oldest request has waited `max_wait`, else None.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<Request>> {
+        if self.queue.len() >= self.batch_size {
+            return Some(self.take(self.batch_size));
+        }
+        match self.oldest {
+            Some(t0) if !self.queue.is_empty() && now.duration_since(t0) >= self.max_wait => {
+                Some(self.take(self.queue.len()))
+            }
+            _ => None,
+        }
+    }
+
+    /// Forced flush (shutdown/drain).
+    pub fn drain(&mut self) -> Option<Vec<Request>> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.take(self.queue.len().min(self.batch_size)))
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Vec<Request> {
+        let out: Vec<Request> = self.queue.drain(..n).collect();
+        self.dispatched += out.len() as u64;
+        self.oldest = if self.queue.is_empty() { None } else { Some(Instant::now()) };
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request { id, prompt: vec![1], gen_tokens: 1, variant: String::new(), arrived_us: 0 }
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let mut b = Batcher::new(4, Duration::from_secs(10));
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let batch = b.poll(Instant::now()).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_waits_for_deadline() {
+        let mut b = Batcher::new(4, Duration::from_millis(50));
+        b.push(req(0));
+        assert!(b.poll(Instant::now()).is_none());
+        let later = Instant::now() + Duration::from_millis(60);
+        let batch = b.poll(later).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn overfull_queue_leaves_remainder() {
+        let mut b = Batcher::new(2, Duration::from_secs(10));
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        assert_eq!(b.poll(Instant::now()).unwrap().len(), 2);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.poll(Instant::now()).unwrap().len(), 2);
+        assert_eq!(b.len(), 1);
+        assert!(b.poll(Instant::now()).is_none()); // partial, not yet due
+    }
+
+    #[test]
+    fn drain_flushes() {
+        let mut b = Batcher::new(8, Duration::from_secs(10));
+        b.push(req(0));
+        b.push(req(1));
+        assert_eq!(b.drain().unwrap().len(), 2);
+        assert!(b.drain().is_none());
+    }
+}

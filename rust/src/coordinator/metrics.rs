@@ -1,0 +1,92 @@
+//! Serving metrics: counters + streaming latency percentiles.
+
+use std::time::Duration;
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub requests: u64,
+    pub completed: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub prefill_us: Vec<u64>,
+    pub decode_us: Vec<u64>,
+    pub queue_us: Vec<u64>,
+    pub e2e_us: Vec<u64>,
+    pub wall: Duration,
+}
+
+impl Metrics {
+    pub fn record(&mut self, prompt: usize, generated: usize, prefill_us: u64, decode_us: u64, queue_us: u64) {
+        self.completed += 1;
+        self.prompt_tokens += prompt as u64;
+        self.generated_tokens += generated as u64;
+        self.prefill_us.push(prefill_us);
+        self.decode_us.push(decode_us);
+        self.queue_us.push(queue_us);
+        self.e2e_us.push(prefill_us + decode_us + queue_us);
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.wall.as_secs_f64()
+    }
+
+    /// End-to-end token throughput including prompt processing (the paper's
+    /// generation-throughput metric counts generated tokens over wall time
+    /// including prefill; both are reported).
+    pub fn total_tok_s(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        (self.prompt_tokens + self.generated_tokens) as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn pct(xs: &[u64], p: f64) -> u64 {
+        if xs.is_empty() {
+            return 0;
+        }
+        let mut v = xs.to_vec();
+        v.sort_unstable();
+        v[((v.len() as f64 - 1.0) * p).round() as usize]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} gen_tok={} wall={:.2}s gen_tok/s={:.1} p50_e2e={}ms p99_e2e={}ms p50_prefill={}ms p50_decode={}ms",
+            self.completed,
+            self.generated_tokens,
+            self.wall.as_secs_f64(),
+            self.throughput_tok_s(),
+            Self::pct(&self.e2e_us, 0.5) / 1000,
+            Self::pct(&self.e2e_us, 0.99) / 1000,
+            Self::pct(&self.prefill_us, 0.5) / 1000,
+            Self::pct(&self.decode_us, 0.5) / 1000,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<u64> = (1..=100).collect();
+        // nearest-rank on 0-based index: round(99*0.5)=50 -> value 51
+        assert_eq!(Metrics::pct(&xs, 0.5), 51);
+        assert_eq!(Metrics::pct(&xs, 0.99), 99);
+        assert_eq!(Metrics::pct(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut m = Metrics::default();
+        m.record(512, 100, 1000, 2000, 10);
+        m.record(512, 100, 1000, 2000, 10);
+        m.wall = Duration::from_secs(2);
+        assert!((m.throughput_tok_s() - 100.0).abs() < 1e-9);
+        assert!((m.total_tok_s() - 612.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,44 @@
+//! L3 serving coordinator: the vLLM-router analogue for reduced-token Mamba
+//! serving.
+//!
+//! Pieces:
+//! * [`batcher`] — dynamic batching of incoming generation requests into the
+//!   executables' static batch shape (size-or-deadline policy).
+//! * [`state_pool`] — slot manager for per-sequence SSM decode states (the
+//!   KV-cache analogue: conv tail + scan state per layer, fixed size).
+//! * [`router`] — routes requests across model variants (dense vs reduction
+//!   ratios) by policy: explicit variant, or load-aware least-queued.
+//! * [`engine`] — one model variant's execution lane: prefill → decode loop,
+//!   weights device-resident, everything else streaming.
+//! * [`metrics`] — counters + latency recorder shared by the serve loop.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod state_pool;
+
+/// A generation request entering the system.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt token ids (will be right-padded/truncated to the prefill frame).
+    pub prompt: Vec<i32>,
+    /// Number of tokens to generate.
+    pub gen_tokens: usize,
+    /// Requested variant key ("dense", "utrc@0.2", ...), or empty for router
+    /// choice.
+    pub variant: String,
+    pub arrived_us: u64,
+}
+
+/// A completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub generated: Vec<i32>,
+    pub prefill_us: u64,
+    pub decode_us: u64,
+    pub queue_us: u64,
+    pub variant: String,
+}

@@ -1,0 +1,147 @@
+//! Variant router: assigns requests to model-variant lanes.
+//!
+//! Policies:
+//! * explicit — the request names its variant;
+//! * least-loaded — pick the lane with the shortest queue (ties broken by
+//!   declaration order, making the policy deterministic and testable);
+//! * cost-aware — prefer reduced variants for long prompts (they save
+//!   proportionally more prefill FLOPs), dense for short ones.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Explicit,
+    LeastLoaded,
+    CostAware { long_prompt: usize },
+}
+
+#[derive(Debug)]
+pub struct Router {
+    pub policy: Policy,
+    /// lane name -> current queue depth (maintained by the serve loop).
+    depths: BTreeMap<String, usize>,
+    /// lanes in declaration order (deterministic tie-break).
+    order: Vec<String>,
+    pub routed: u64,
+}
+
+impl Router {
+    pub fn new(policy: Policy, lanes: &[&str]) -> Router {
+        Router {
+            policy,
+            depths: lanes.iter().map(|l| (l.to_string(), 0)).collect(),
+            order: lanes.iter().map(|s| s.to_string()).collect(),
+            routed: 0,
+        }
+    }
+
+    pub fn lanes(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn note_enqueued(&mut self, lane: &str) {
+        *self.depths.get_mut(lane).expect("unknown lane") += 1;
+    }
+
+    pub fn note_done(&mut self, lane: &str) {
+        let d = self.depths.get_mut(lane).expect("unknown lane");
+        *d = d.saturating_sub(1);
+    }
+
+    pub fn depth(&self, lane: &str) -> usize {
+        self.depths.get(lane).copied().unwrap_or(0)
+    }
+
+    pub fn route(&mut self, req: &Request) -> Result<String> {
+        self.routed += 1;
+        if !req.variant.is_empty() {
+            if !self.depths.contains_key(&req.variant) {
+                bail!("unknown variant {:?} (lanes: {:?})", req.variant, self.order);
+            }
+            return Ok(req.variant.clone());
+        }
+        match self.policy {
+            Policy::Explicit => bail!("explicit policy requires request.variant"),
+            Policy::LeastLoaded => Ok(self
+                .order
+                .iter()
+                .min_by_key(|l| self.depths[*l])
+                .expect("no lanes")
+                .clone()),
+            Policy::CostAware { long_prompt } => {
+                // Long prompts gain most from token reduction; short prompts
+                // keep full fidelity.
+                let reduced: Vec<&String> =
+                    self.order.iter().filter(|l| l.as_str() != "dense").collect();
+                if req.prompt.len() >= long_prompt && !reduced.is_empty() {
+                    Ok(reduced
+                        .into_iter()
+                        .min_by_key(|l| self.depths[*l])
+                        .unwrap()
+                        .clone())
+                } else if self.depths.contains_key("dense") {
+                    Ok("dense".to_string())
+                } else {
+                    Ok(self.order[0].clone())
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(variant: &str, prompt_len: usize) -> Request {
+        Request {
+            id: 0,
+            prompt: vec![1; prompt_len],
+            gen_tokens: 1,
+            variant: variant.to_string(),
+            arrived_us: 0,
+        }
+    }
+
+    #[test]
+    fn explicit_route() {
+        let mut r = Router::new(Policy::Explicit, &["dense", "utrc@0.2"]);
+        assert_eq!(r.route(&req("utrc@0.2", 4)).unwrap(), "utrc@0.2");
+        assert!(r.route(&req("nope", 4)).is_err());
+        assert!(r.route(&req("", 4)).is_err());
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::new(Policy::LeastLoaded, &["a", "b"]);
+        let l1 = r.route(&req("", 4)).unwrap();
+        r.note_enqueued(&l1);
+        let l2 = r.route(&req("", 4)).unwrap();
+        assert_ne!(l1, l2);
+    }
+
+    #[test]
+    fn cost_aware_prefers_reduction_for_long() {
+        let mut r = Router::new(Policy::CostAware { long_prompt: 100 }, &["dense", "utrc@0.2"]);
+        assert_eq!(r.route(&req("", 200)).unwrap(), "utrc@0.2");
+        assert_eq!(r.route(&req("", 10)).unwrap(), "dense");
+    }
+
+    #[test]
+    fn depth_tracking() {
+        let mut r = Router::new(Policy::LeastLoaded, &["a"]);
+        r.note_enqueued("a");
+        r.note_enqueued("a");
+        assert_eq!(r.depth("a"), 2);
+        r.note_done("a");
+        assert_eq!(r.depth("a"), 1);
+        r.note_done("a");
+        r.note_done("a"); // saturates, no underflow
+        assert_eq!(r.depth("a"), 0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Data loaders: the token corpus (train.bin/val.bin), the six benchmark
+//! task sets (tasks.json), and a batch sampler for the trainer.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TaskItem {
+    pub context: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+    pub target: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: String,
+    pub items: Vec<TaskItem>,
+}
+
+pub const TASK_ORDER: [&str; 6] = [
+    "s_lambada", "s_hellaswag", "s_piqa", "s_arc_easy", "s_arc_challenge", "s_wino",
+];
+
+pub fn load_tasks(path: impl AsRef<Path>) -> Result<Vec<Task>> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading tasks {:?}", path.as_ref()))?;
+    let j = Json::parse(&text).context("parsing tasks.json")?;
+    let obj = j.as_obj().context("tasks.json not an object")?;
+    let mut out = Vec::new();
+    for name in TASK_ORDER {
+        let items = obj
+            .get(name)
+            .with_context(|| format!("missing task {name}"))?
+            .as_arr()
+            .context("task not an array")?
+            .iter()
+            .map(|it| TaskItem {
+                context: it.str_of("context"),
+                choices: it
+                    .expect("choices")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|c| c.as_str().unwrap().to_string())
+                    .collect(),
+                answer: it.usize_of("answer"),
+                target: it.str_or("target", ""),
+            })
+            .collect();
+        out.push(Task { name: name.to_string(), items });
+    }
+    Ok(out)
+}
+
+/// Memory-mapped-style token stream (we just read it; ~2MB).
+pub struct Corpus {
+    pub tokens: Vec<i32>,
+}
+
+impl Corpus {
+    pub fn load(path: impl AsRef<Path>) -> Result<Corpus> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading corpus {:?}", path.as_ref()))?;
+        ensure!(bytes.len() % 4 == 0, "corpus not a multiple of 4 bytes");
+        let tokens = bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Corpus { tokens })
+    }
+
+    /// Sample a (batch, seq_len) window batch as a flat row-major buffer.
+    pub fn sample_batch(&self, rng: &mut Rng, batch: usize, seq_len: usize) -> Vec<i32> {
+        assert!(self.tokens.len() > seq_len + 1, "corpus shorter than a window");
+        let mut out = Vec::with_capacity(batch * seq_len);
+        for _ in 0..batch {
+            let start = rng.below(self.tokens.len() - seq_len - 1);
+            out.extend_from_slice(&self.tokens[start..start + seq_len]);
+        }
+        out
+    }
+
+    pub fn validate(&self, vocab_size: usize) -> Result<()> {
+        for (i, &t) in self.tokens.iter().enumerate() {
+            ensure!(
+                (0..vocab_size as i32).contains(&t),
+                "token {t} at {i} outside vocab {vocab_size}"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Sanity-check that task texts tokenize without <unk> (vocab closure —
+/// mirrors the python-side assertion).
+pub fn check_tasks_closed(tasks: &[Task], tok: &Tokenizer) -> Result<()> {
+    for task in tasks {
+        for it in &task.items {
+            for text in std::iter::once(&it.context).chain(it.choices.iter()) {
+                ensure!(
+                    !tok.encode(text).contains(&crate::tokenizer::UNK),
+                    "OOV in task {} text {:?}",
+                    task.name,
+                    text
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_batch_shapes() {
+        let c = Corpus { tokens: (0..1000).collect() };
+        let mut rng = Rng::new(1);
+        let b = c.sample_batch(&mut rng, 4, 64);
+        assert_eq!(b.len(), 4 * 64);
+        // windows are contiguous slices
+        for row in b.chunks(64) {
+            for w in row.windows(2) {
+                assert_eq!(w[1], w[0] + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn corpus_validate_bounds() {
+        let c = Corpus { tokens: vec![0, 5, 10] };
+        assert!(c.validate(11).is_ok());
+        assert!(c.validate(10).is_err());
+    }
+}

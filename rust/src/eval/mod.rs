@@ -1,0 +1,299 @@
+//! Zero-shot evaluation harness: the lm-eval-harness analogue driving the
+//! six synthetic benchmarks through an AOT-compiled model variant.
+//!
+//! Per task item, each choice becomes one padded sequence (context ++
+//! choice); sequences are batched to the executable's static (B, L) and the
+//! choice with the best length-normalized log-prob wins. s-lambada is scored
+//! as cloze: PPL of the target token + greedy accuracy.
+
+pub mod scoring;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::{Task, TaskItem};
+use crate::manifest::{HloEntry, Manifest, ModelEntry};
+use crate::runtime::{DeviceWeights, HostTensor, Runtime};
+use crate::tokenizer::Tokenizer;
+use crate::util::pool::par_map;
+use scoring::{Scheme, SeqLogits};
+
+/// One encoded scoring request: a fixed-length token buffer plus the span
+/// of positions (original frame) belonging to the choice.
+#[derive(Debug, Clone)]
+pub struct EncodedSeq {
+    pub tokens: Vec<i32>,
+    pub span: (usize, usize),
+    /// (task_idx, item_idx, choice_idx)
+    pub key: (usize, usize, usize),
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TaskResult {
+    pub name: String,
+    pub n_items: usize,
+    pub acc_aligned: f64,
+    pub acc_truncated: f64,
+    /// s-lambada only (else 0): target-token perplexity.
+    pub ppl_aligned: f64,
+    pub ppl_truncated: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalResult {
+    pub model: String,
+    pub variant: String,
+    pub tasks: Vec<TaskResult>,
+    pub wall_s: f64,
+    pub sequences: usize,
+}
+
+impl EvalResult {
+    pub fn avg_acc(&self, scheme: Scheme) -> f64 {
+        let accs: Vec<f64> = self
+            .tasks
+            .iter()
+            .map(|t| match scheme {
+                Scheme::Aligned => t.acc_aligned,
+                Scheme::Truncated => t.acc_truncated,
+            })
+            .collect();
+        accs.iter().sum::<f64>() / accs.len().max(1) as f64
+    }
+
+    pub fn lambada_ppl(&self, scheme: Scheme) -> f64 {
+        self.tasks
+            .iter()
+            .find(|t| t.name == "s_lambada")
+            .map(|t| match scheme {
+                Scheme::Aligned => t.ppl_aligned,
+                Scheme::Truncated => t.ppl_truncated,
+            })
+            .unwrap_or(f64::NAN)
+    }
+}
+
+pub fn encode_tasks(
+    tok: &Tokenizer,
+    tasks: &[Task],
+    seq_len: usize,
+    max_items: usize,
+) -> Result<Vec<EncodedSeq>> {
+    let mut out = Vec::new();
+    for (ti, task) in tasks.iter().enumerate() {
+        for (ii, item) in task.items.iter().take(max_items).enumerate() {
+            for (ci, seq) in encode_item(tok, item, seq_len, (ti, ii))?.into_iter().enumerate() {
+                debug_assert_eq!(seq.key.2, ci);
+                out.push(seq);
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn encode_item(
+    tok: &Tokenizer,
+    item: &TaskItem,
+    seq_len: usize,
+    key2: (usize, usize),
+) -> Result<Vec<EncodedSeq>> {
+    let ctx: Vec<i32> = tok.encode(&item.context).iter().map(|&x| x as i32).collect();
+    let mut out = Vec::new();
+    for (ci, choice) in item.choices.iter().enumerate() {
+        let ch: Vec<i32> = tok.encode(choice).iter().map(|&x| x as i32).collect();
+        ensure!(!ch.is_empty(), "empty choice");
+        let mut tokens = ctx.clone();
+        let start = tokens.len();
+        tokens.extend_from_slice(&ch);
+        let end = tokens.len();
+        ensure!(
+            end <= seq_len,
+            "sequence too long for eval frame: {} > {seq_len}",
+            end
+        );
+        tokens.resize(seq_len, crate::tokenizer::PAD as i32);
+        out.push(EncodedSeq { tokens, span: (start, end), key: (key2.0, key2.1, ci) });
+    }
+    Ok(out)
+}
+
+/// Raw per-choice scores, indexed like the task items.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChoiceScore {
+    pub lp_aligned: f64,
+    pub n_aligned: usize,
+    pub lp_truncated: f64,
+    pub n_truncated: usize,
+    pub greedy_hit_aligned: bool,
+    pub greedy_hit_truncated: bool,
+}
+
+/// Run every sequence through the executable in static batches; return one
+/// ChoiceScore per sequence (same order).
+pub fn run_scoring(
+    rt: &Runtime,
+    man: &Manifest,
+    entry: &HloEntry,
+    weights: &DeviceWeights,
+    seqs: &[EncodedSeq],
+    vocab: usize,
+) -> Result<Vec<ChoiceScore>> {
+    let exe = rt.load_entry(man, entry)?;
+    let (b, l, out_len) = (entry.batch, entry.seq_len, entry.out_len);
+    let mut scores = vec![ChoiceScore::default(); seqs.len()];
+
+    for (chunk_idx, chunk) in seqs.chunks(b).enumerate() {
+        let mut flat = Vec::with_capacity(b * l);
+        for s in chunk {
+            flat.extend_from_slice(&s.tokens);
+        }
+        flat.resize(b * l, crate::tokenizer::PAD as i32); // ragged tail batch
+        let tokens = HostTensor::i32(vec![b, l], flat).to_literal()?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = weights.buffers.iter().collect();
+        let tok_buf = rt.upload(&HostTensor::from_literal(&tokens)?)?;
+        args.push(&tok_buf);
+        let outs = exe.run_b(&args).context("eval forward")?;
+        ensure!(outs.len() == 2, "eval executable must return (logits, kept)");
+        let logits = outs[0].as_f32()?;
+        let kept = outs[1].as_i32()?;
+        ensure!(outs[0].shape == vec![b, out_len, vocab], "bad logits shape {:?}", outs[0].shape);
+
+        // Score this chunk's sequences in parallel (pure host math).
+        let chunk_scores = par_map(chunk.len(), 8, |i| {
+            let sl = SeqLogits {
+                logits: &logits[i * out_len * vocab..(i + 1) * out_len * vocab],
+                out_len,
+                vocab,
+                kept: &kept[i * out_len..(i + 1) * out_len],
+            };
+            let s = &chunk[i];
+            let (la, na) = sl.aligned_span_lp(&s.tokens, s.span);
+            let (lt, nt) = sl.truncated_span_lp(&s.tokens, s.span);
+            // Greedy hit on the span's first token (cloze accuracy).
+            let ga = sl.aligned_argmax(s.span.0) == Some(s.tokens[s.span.0]);
+            let gt = s.span.0 >= 1 && s.span.0 < out_len && {
+                let row = &logits[(i * out_len + s.span.0 - 1) * vocab
+                    ..(i * out_len + s.span.0) * vocab];
+                let mut best = 0usize;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                best as i32 == s.tokens[s.span.0]
+            };
+            ChoiceScore {
+                lp_aligned: la,
+                n_aligned: na,
+                lp_truncated: lt,
+                n_truncated: nt,
+                greedy_hit_aligned: ga,
+                greedy_hit_truncated: gt,
+            }
+        });
+        for (i, cs) in chunk_scores.into_iter().enumerate() {
+            scores[chunk_idx * b + i] = cs;
+        }
+    }
+    Ok(scores)
+}
+
+/// Aggregate per-sequence scores into per-task accuracy / PPL.
+pub fn aggregate(
+    tasks: &[Task],
+    seqs: &[EncodedSeq],
+    scores: &[ChoiceScore],
+    max_items: usize,
+) -> Vec<TaskResult> {
+    // Group scores per (task, item).
+    let mut per_item: Vec<Vec<Vec<(usize, ChoiceScore)>>> = tasks
+        .iter()
+        .map(|t| vec![Vec::new(); t.items.len().min(max_items)])
+        .collect();
+    for (s, sc) in seqs.iter().zip(scores) {
+        let (ti, ii, ci) = s.key;
+        per_item[ti][ii].push((ci, *sc));
+    }
+
+    tasks
+        .iter()
+        .enumerate()
+        .map(|(ti, task)| {
+            let items = &per_item[ti];
+            let mut hit_a = 0usize;
+            let mut hit_t = 0usize;
+            let mut nll_a = 0.0f64;
+            let mut nll_t = 0.0f64;
+            let mut nll_na = 0usize;
+            let mut nll_nt = 0usize;
+            let is_cloze = task.name == "s_lambada";
+
+            for (ii, choices) in items.iter().enumerate() {
+                let answer = task.items[ii].answer;
+                if is_cloze {
+                    // Single choice: PPL of the target + greedy accuracy.
+                    let (_, sc) = choices[0];
+                    if sc.n_aligned > 0 {
+                        nll_a += -sc.lp_aligned;
+                        nll_na += sc.n_aligned;
+                    }
+                    if sc.n_truncated > 0 {
+                        nll_t += -sc.lp_truncated;
+                        nll_nt += sc.n_truncated;
+                    }
+                    hit_a += sc.greedy_hit_aligned as usize;
+                    hit_t += sc.greedy_hit_truncated as usize;
+                } else {
+                    // Length-normalized choice comparison.
+                    let norm = |lp: f64, n: usize| if n == 0 { f64::NEG_INFINITY } else { lp / n as f64 };
+                    let pick = |f: &dyn Fn(&ChoiceScore) -> f64| {
+                        choices
+                            .iter()
+                            .max_by(|(_, a), (_, b)| f(a).partial_cmp(&f(b)).unwrap())
+                            .map(|(ci, _)| *ci)
+                    };
+                    if pick(&|sc| norm(sc.lp_aligned, sc.n_aligned)) == Some(answer) {
+                        hit_a += 1;
+                    }
+                    if pick(&|sc| norm(sc.lp_truncated, sc.n_truncated)) == Some(answer) {
+                        hit_t += 1;
+                    }
+                }
+            }
+
+            let n = items.len().max(1);
+            TaskResult {
+                name: task.name.clone(),
+                n_items: items.len(),
+                acc_aligned: hit_a as f64 / n as f64,
+                acc_truncated: hit_t as f64 / n as f64,
+                ppl_aligned: if nll_na > 0 { (nll_a / nll_na as f64).exp() } else { 0.0 },
+                ppl_truncated: if nll_nt > 0 { (nll_t / nll_nt as f64).exp() } else { 0.0 },
+            }
+        })
+        .collect()
+}
+
+/// Full evaluation of one model variant.
+pub fn evaluate(
+    rt: &Runtime,
+    man: &Manifest,
+    model: &ModelEntry,
+    entry: &HloEntry,
+    weights: &DeviceWeights,
+    tok: &Tokenizer,
+    tasks: &[Task],
+    max_items: usize,
+) -> Result<EvalResult> {
+    let t0 = std::time::Instant::now();
+    let seqs = encode_tasks(tok, tasks, entry.seq_len, max_items)?;
+    let scores = run_scoring(rt, man, entry, weights, &seqs, model.vocab_size)?;
+    let tasks_out = aggregate(tasks, &seqs, &scores, max_items);
+    Ok(EvalResult {
+        model: model.name.clone(),
+        variant: entry.tag.clone(),
+        tasks: tasks_out,
+        wall_s: t0.elapsed().as_secs_f64(),
+        sequences: seqs.len(),
+    })
+}

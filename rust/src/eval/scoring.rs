@@ -1,0 +1,161 @@
+//! Logit scoring under token reduction.
+//!
+//! Two schemes (DESIGN.md, "Evaluation Details" in the paper):
+//!
+//! * `truncated` — the paper's: with m% of output positions gone, labels are
+//!   truncated to the first (1-m)% and compared index-to-index against the
+//!   reduced logits. Misalignment is intentional: it is exactly how the
+//!   paper evaluates, and why weak reduction methods explode in PPL.
+//! * `aligned` — uses the kept-index map the executables emit: the token at
+//!   original position p is scored with the logits at the last surviving
+//!   position strictly before p (the model's best available prediction).
+//!
+//! Both are reported; tables print the paper's scheme for comparability.
+
+/// Log-softmax denominator for one row of logits.
+fn log_z(row: &[f32]) -> f32 {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let s: f32 = row.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+pub struct SeqLogits<'a> {
+    /// (out_len, vocab) row-major logits for one sequence.
+    pub logits: &'a [f32],
+    pub out_len: usize,
+    pub vocab: usize,
+    /// Original position of each surviving output row (ascending).
+    pub kept: &'a [i32],
+}
+
+impl<'a> SeqLogits<'a> {
+    fn row(&self, i: usize) -> &'a [f32] {
+        &self.logits[i * self.vocab..(i + 1) * self.vocab]
+    }
+
+    /// Log-prob of `token` at logits row `i`.
+    fn lp(&self, i: usize, token: i32) -> f32 {
+        let row = self.row(i);
+        row[token as usize] - log_z(row)
+    }
+
+    /// Aligned scheme: logits row predicting ORIGINAL position `pos`
+    /// (i.e. the last surviving row with kept[i] < pos).
+    pub fn row_predicting(&self, pos: usize) -> Option<usize> {
+        // kept is ascending; binary search for the last kept < pos.
+        let mut lo = 0usize;
+        let mut hi = self.out_len;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if (self.kept[mid] as usize) < pos {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo.checked_sub(1)
+    }
+
+    /// Sum of aligned log-probs of `tokens[span.0..span.1]` (original
+    /// positions). Returns (sum, count_scored).
+    pub fn aligned_span_lp(&self, tokens: &[i32], span: (usize, usize)) -> (f64, usize) {
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for pos in span.0..span.1 {
+            if let Some(row) = self.row_predicting(pos) {
+                sum += self.lp(row, tokens[pos]) as f64;
+                n += 1;
+            }
+        }
+        (sum, n)
+    }
+
+    /// Paper's truncated scheme: logits row i scores the token at index i+1
+    /// of the truncated label sequence (labels cut to out_len). Span is in
+    /// original positions; positions beyond out_len are unscoreable.
+    pub fn truncated_span_lp(&self, tokens: &[i32], span: (usize, usize)) -> (f64, usize) {
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for pos in span.0..span.1 {
+            if pos == 0 || pos >= self.out_len {
+                continue; // row pos-1 must exist in the reduced frame
+            }
+            sum += self.lp(pos - 1, tokens[pos]) as f64;
+            n += 1;
+        }
+        (sum, n)
+    }
+
+    /// Greedy prediction for original position `pos` under the aligned map.
+    pub fn aligned_argmax(&self, pos: usize) -> Option<i32> {
+        let row = self.row_predicting(pos)?;
+        let r = self.row(row);
+        let mut best = 0usize;
+        for (i, &v) in r.iter().enumerate() {
+            if v > r[best] {
+                best = i;
+            }
+        }
+        Some(best as i32)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    Aligned,
+    Truncated,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(out_len: usize, vocab: usize, kept: Vec<i32>) -> (Vec<f32>, Vec<i32>) {
+        // logits row i puts mass on token (i % vocab)
+        let mut logits = vec![0.0f32; out_len * vocab];
+        for i in 0..out_len {
+            logits[i * vocab + (i % vocab)] = 5.0;
+        }
+        (logits, kept)
+    }
+
+    #[test]
+    fn row_predicting_dense() {
+        let (logits, kept) = mk(4, 3, vec![0, 1, 2, 3]);
+        let s = SeqLogits { logits: &logits, out_len: 4, vocab: 3, kept: &kept };
+        assert_eq!(s.row_predicting(0), None); // nothing precedes pos 0
+        assert_eq!(s.row_predicting(1), Some(0));
+        assert_eq!(s.row_predicting(4), Some(3));
+    }
+
+    #[test]
+    fn row_predicting_reduced() {
+        // kept original positions 0,2,5
+        let (logits, kept) = mk(3, 3, vec![0, 2, 5]);
+        let s = SeqLogits { logits: &logits, out_len: 3, vocab: 3, kept: &kept };
+        assert_eq!(s.row_predicting(1), Some(0));
+        assert_eq!(s.row_predicting(2), Some(0));
+        assert_eq!(s.row_predicting(3), Some(1));
+        assert_eq!(s.row_predicting(6), Some(2));
+    }
+
+    #[test]
+    fn span_lp_counts() {
+        let (logits, kept) = mk(4, 3, vec![0, 1, 2, 3]);
+        let s = SeqLogits { logits: &logits, out_len: 4, vocab: 3, kept: &kept };
+        let tokens = vec![0, 1, 2, 0, 1];
+        let (_, n_a) = s.aligned_span_lp(&tokens, (1, 5));
+        assert_eq!(n_a, 4);
+        let (_, n_t) = s.truncated_span_lp(&tokens, (1, 5));
+        assert_eq!(n_t, 3); // pos 4 >= out_len
+    }
+
+    #[test]
+    fn lp_is_log_prob() {
+        let (logits, kept) = mk(2, 4, vec![0, 1]);
+        let s = SeqLogits { logits: &logits, out_len: 2, vocab: 4, kept: &kept };
+        // sum over vocab of exp(lp) == 1
+        let total: f32 = (0..4).map(|t| s.lp(0, t).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+}

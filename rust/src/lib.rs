@@ -1,0 +1,34 @@
+//! # tor-ssm — Rethinking Token Reduction for State Space Models
+//!
+//! Rust + JAX + Pallas reproduction of Zhan et al., EMNLP 2024
+//! (DOI 10.18653/V1/2024.EMNLP-MAIN.100).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L1** Pallas kernels (selective scan, SSD, importance, matching) —
+//!   `python/compile/kernels/`, build-time only.
+//! * **L2** JAX Mamba/Mamba-2 models with the UTRC token-reduction graph
+//!   transform — `python/compile/`, AOT-lowered to HLO text.
+//! * **L3** this crate: PJRT runtime, serving coordinator (router/batcher/
+//!   state pool), zero-shot eval harness, trainer, and the bench harness
+//!   that regenerates every table and figure in the paper.
+//!
+//! Python never runs at request time: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + data once, and the `repro` binary is then
+//! self-contained.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod manifest;
+pub mod reduction;
+pub mod runtime;
+pub mod tokenizer;
+pub mod train;
+pub mod util;
+
+/// Default artifacts directory (overridable with --artifacts or
+/// REPRO_ARTIFACTS).
+pub fn artifacts_dir() -> String {
+    std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}

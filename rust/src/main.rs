@@ -1,0 +1,302 @@
+//! `repro` — leader binary: train, evaluate, serve, and regenerate every
+//! table/figure of the paper.
+//!
+//! ```text
+//! repro info                                # artifact + model inventory
+//! repro train --model mamba-small --steps 400
+//! repro train-all --steps 400               # all four models
+//! repro eval  --model mamba2-base --method utrc --ratio 0.2
+//! repro table 1|2|3|4|5|6 [--items 60] [--fresh]
+//! repro table all
+//! repro figure 1|3|4|5|6
+//! repro golden                               # rust-vs-python numerics check
+//! repro serve --requests 16 --policy cost-aware
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use tor_ssm::bench::{figures, tables, Ctx};
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::router::{Policy, Router};
+use tor_ssm::coordinator::{batcher::Batcher, metrics::Metrics, Request};
+use tor_ssm::eval::scoring::Scheme;
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::Runtime;
+use tor_ssm::train::load_best_weights;
+use tor_ssm::util::cli::Args;
+use tor_ssm::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["fresh", "aligned", "quiet"]);
+    let artifacts = args.get_or("artifacts", &tor_ssm::artifacts_dir());
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+
+    match cmd {
+        "info" => info(&artifacts),
+        "train" => train(&args, &artifacts),
+        "train-all" => train_all(&args, &artifacts),
+        "eval" => eval_one(&args, &artifacts),
+        "table" => table(&args, &artifacts),
+        "figure" => figure(&args, &artifacts),
+        "golden" => golden(&artifacts),
+        "serve" => serve(&args, &artifacts),
+        "help" | _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "repro — Rethinking Token Reduction for SSMs (EMNLP 2024) reproduction
+commands:
+  info                         artifact inventory
+  train --model M --steps N    train one model via the AOT train step
+  train-all --steps N          train all four models
+  eval --model M --method X --ratio R [--items N]
+  table 1..6|all [--items N] [--fresh]
+  figure 1|3|4|5|6 [--gen-tokens N]
+  golden                       rust-vs-python numerics cross-check
+  serve --requests N [--policy explicit|least-loaded|cost-aware]
+common: --artifacts DIR (default ./artifacts, or $REPRO_ARTIFACTS)";
+
+fn info(artifacts: &str) -> Result<()> {
+    let man = Manifest::load(artifacts)?;
+    println!("artifacts: {:?}", man.root);
+    println!(
+        "eval frame: B={} L={}; prefill: B={} L={}; decode B={}; train: B={} L={}",
+        man.eval_batch, man.eval_seq_len, man.prefill_batch, man.prefill_seq_len,
+        man.decode_batch, man.train_batch, man.train_seq_len
+    );
+    for (name, m) in &man.models {
+        let ckpt = tor_ssm::train::checkpoint_path(&man, name);
+        println!(
+            "  {name:<13} arch={:<6} layers={:>2} d_model={:>3} params={:>9} hlo_variants={:>2} trained={}",
+            m.arch,
+            m.n_layer,
+            m.d_model,
+            m.param_count,
+            m.hlo.len(),
+            ckpt.exists()
+        );
+    }
+    Ok(())
+}
+
+fn train(args: &Args, artifacts: &str) -> Result<()> {
+    let man = Manifest::load(artifacts)?;
+    let model = args.get("model").context("--model required")?;
+    let steps = args.usize_or("steps", man.train_total_steps);
+    let rt = Runtime::cpu()?;
+    let me = man.model(model)?.clone();
+    let report = tor_ssm::train::train(&rt, &man, &me, steps, 42, 20)?;
+    println!(
+        "trained {model}: {} steps, loss {:.4} -> {:.4}, {:.1}s, checkpoint {:?}",
+        report.steps,
+        report.losses.first().unwrap_or(&f32::NAN),
+        report.losses.last().unwrap_or(&f32::NAN),
+        report.wall_s,
+        report.checkpoint
+    );
+    Ok(())
+}
+
+fn train_all(args: &Args, artifacts: &str) -> Result<()> {
+    let man = Manifest::load(artifacts)?;
+    let steps = args.usize_or("steps", man.train_total_steps);
+    let rt = Runtime::cpu()?;
+    for name in man.models.keys().cloned().collect::<Vec<_>>() {
+        let me = man.model(&name)?.clone();
+        let ckpt = tor_ssm::train::checkpoint_path(&man, &name);
+        if ckpt.exists() && !args.flag("fresh") {
+            println!("skip {name}: checkpoint exists");
+            continue;
+        }
+        let report = tor_ssm::train::train(&rt, &man, &me, steps, 42, 20)?;
+        println!(
+            "trained {name}: loss {:.4} -> {:.4} in {:.1}s",
+            report.losses.first().unwrap_or(&f32::NAN),
+            report.losses.last().unwrap_or(&f32::NAN),
+            report.wall_s
+        );
+    }
+    Ok(())
+}
+
+fn eval_one(args: &Args, artifacts: &str) -> Result<()> {
+    let model = args.get("model").context("--model required")?.to_string();
+    let method = args.get_or("method", "dense");
+    let ratio = args.f64_or("ratio", 0.0);
+    let items = args.usize_or("items", 16);
+    let mut ctx = Ctx::new(artifacts, items, args.flag("fresh"))?;
+    let entry = ctx.find_eval_entry(&model, &method, ratio, args.get("metric"), None, None, None)?;
+    let r = ctx.eval_variant(&model, &entry)?;
+    let scheme = if args.flag("aligned") { Scheme::Aligned } else { Scheme::Truncated };
+    println!("model={model} variant={}", r.variant);
+    for t in &r.tasks {
+        println!(
+            "  {:<16} acc(trunc)={:.3} acc(aligned)={:.3} ppl(trunc)={:.2} ppl(aligned)={:.2}",
+            t.name, t.acc_truncated, t.acc_aligned, t.ppl_truncated, t.ppl_aligned
+        );
+    }
+    println!("  avg acc = {:.3} ({:?})", r.avg_acc(scheme), scheme);
+    Ok(())
+}
+
+fn table(args: &Args, artifacts: &str) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let items = args.usize_or("items", 16);
+    let mut ctx = Ctx::new(artifacts, items, args.flag("fresh"))?;
+    let run = |ctx: &mut Ctx, n: &str| -> Result<()> {
+        match n {
+            "1" => tables::table1(ctx),
+            "2" => tables::table2(ctx),
+            "3" => tables::table3(ctx),
+            "4" => tables::table4(ctx),
+            "5" => tables::table5(ctx),
+            "6" => tables::table6(ctx),
+            _ => bail!("unknown table {n}"),
+        }
+    };
+    if which == "all" {
+        // Core results first, ablations after (partial runs stay useful; the
+        // per-variant result cache makes re-runs incremental).
+        for n in ["1", "2", "6", "3", "5", "4"] {
+            run(&mut ctx, n)?;
+        }
+        Ok(())
+    } else {
+        run(&mut ctx, which)
+    }
+}
+
+fn figure(args: &Args, artifacts: &str) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let items = args.usize_or("items", 16);
+    let gen_tokens = args.usize_or("gen-tokens", 100);
+    let mut ctx = Ctx::new(artifacts, items, args.flag("fresh"))?;
+    let run = |ctx: &mut Ctx, n: &str| -> Result<()> {
+        match n {
+            "1" => figures::figure1(ctx),
+            "3" => figures::figure_memory(ctx, false),
+            "5" => figures::figure_memory(ctx, true),
+            "4" => figures::figure_throughput(ctx, false, gen_tokens),
+            "6" => figures::figure_throughput(ctx, true, gen_tokens),
+            _ => bail!("unknown figure {n}"),
+        }
+    };
+    if which == "all" {
+        for n in ["1", "3", "5", "4", "6"] {
+            run(&mut ctx, n)?;
+        }
+        Ok(())
+    } else {
+        run(&mut ctx, which)
+    }
+}
+
+fn golden(artifacts: &str) -> Result<()> {
+    let man = Manifest::load(artifacts)?;
+    let rt = Runtime::cpu()?;
+    let report = tor_ssm::bench::harness::golden_check(&rt, &man)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn serve(args: &Args, artifacts: &str) -> Result<()> {
+    let man = Manifest::load(artifacts)?;
+    let rt = Runtime::cpu()?;
+    let model = args.get_or("model", "mamba-small");
+    let n_requests = args.usize_or("requests", 16);
+    let gen_tokens = args.usize_or("gen-tokens", 16);
+    let policy = match args.get_or("policy", "cost-aware").as_str() {
+        "explicit" => Policy::Explicit,
+        "least-loaded" => Policy::LeastLoaded,
+        _ => Policy::CostAware { long_prompt: man.prefill_seq_len / 2 },
+    };
+
+    let me = man.model(&model)?.clone();
+    let (w, trained) = load_best_weights(&man, &me)?;
+    if !trained {
+        eprintln!("[warn] serving INIT weights (no checkpoint)");
+    }
+    let lanes = ["dense", "utrc@0.2"];
+    println!("building engines for {lanes:?}...");
+    let engines: Vec<Engine> = lanes
+        .iter()
+        .map(|v| Engine::new(&rt, &man, &me, &w, v))
+        .collect::<Result<_>>()?;
+    let mut router = Router::new(policy, &lanes);
+    let mut batchers: Vec<Batcher> = engines
+        .iter()
+        .map(|e| Batcher::new(e.batch, std::time::Duration::from_millis(5)))
+        .collect();
+    let mut metrics = Metrics::default();
+
+    // Synthetic open-loop workload: mixed prompt lengths.
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        let plen = if rng.f64() < 0.5 { man.prefill_seq_len } else { man.prefill_seq_len / 4 };
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(me.vocab_size) as i32).collect();
+        let req = Request {
+            id: i as u64,
+            prompt,
+            gen_tokens,
+            variant: String::new(),
+            arrived_us: t0.elapsed().as_micros() as u64,
+        };
+        let lane = router.route(&req)?;
+        let li = lanes.iter().position(|l| *l == lane).unwrap();
+        router.note_enqueued(&lane);
+        batchers[li].push(req);
+        metrics.requests += 1;
+
+        // Drain ready batches.
+        for (bi, b) in batchers.iter_mut().enumerate() {
+            while let Some(batch) = b.poll(std::time::Instant::now()) {
+                dispatch(&rt, &engines[bi], &batch, &mut metrics, &mut router, &lanes[bi], t0)?;
+            }
+        }
+    }
+    // Final drain.
+    for (bi, b) in batchers.iter_mut().enumerate() {
+        while let Some(batch) = b.drain() {
+            dispatch(&rt, &engines[bi], &batch, &mut metrics, &mut router, &lanes[bi], t0)?;
+        }
+    }
+    metrics.wall = t0.elapsed();
+    println!("routing: {} requests over {:?}", router.routed, lanes);
+    println!("{}", metrics.summary());
+    Ok(())
+}
+
+fn dispatch(
+    rt: &Runtime,
+    engine: &Engine,
+    batch: &[Request],
+    metrics: &mut Metrics,
+    router: &mut Router,
+    lane: &str,
+    t0: std::time::Instant,
+) -> Result<()> {
+    let responses = engine.serve_batch(rt, batch)?;
+    for (req, resp) in batch.iter().zip(&responses) {
+        let queue_us = t0.elapsed().as_micros() as u64 - req.arrived_us;
+        metrics.record(
+            req.prompt.len(),
+            resp.generated.len(),
+            resp.prefill_us,
+            resp.decode_us,
+            queue_us,
+        );
+        router.note_done(lane);
+    }
+    Ok(())
+}

@@ -1,0 +1,296 @@
+//! Typed view of `artifacts/manifest.json` — the contract written by
+//! `python/compile/aot.py`. Everything the runtime needs (param layout, HLO
+//! module inventory, schedule plans, data file locations) flows through here;
+//! the rust side never re-derives shapes from HLO text.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Reduction {
+    pub method: String,
+    pub flops_reduction: f64,
+    pub locations: Vec<usize>,
+    pub metric: String,
+    pub q_hidden: f64,
+    pub q_residual: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub seq_len: usize,
+    pub locations: Vec<usize>,
+    pub seg_lens: Vec<usize>,
+    pub removed: Vec<usize>,
+    pub flops_reduction: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct HloEntry {
+    pub tag: String,
+    pub file: String,
+    pub kind: String, // eval | prefill | decode | train
+    pub batch: usize,
+    pub seq_len: usize,
+    pub out_len: usize,
+    pub reduction: Option<Reduction>,
+    pub plan: Option<Plan>,
+    pub peak_memory_bytes: Option<u64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub arch: String, // mamba | mamba2
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub d_state: usize,
+    pub d_inner: usize,
+    pub vocab_size: usize,
+    pub param_count: u64,
+    pub params: Vec<ParamMeta>,
+    pub init_weights: String,
+    pub hlo: BTreeMap<String, HloEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub vocab_file: String,
+    pub tasks_file: String,
+    pub train_file: String,
+    pub val_file: String,
+    pub eval_batch: usize,
+    pub eval_seq_len: usize,
+    pub prefill_batch: usize,
+    pub prefill_seq_len: usize,
+    pub decode_batch: usize,
+    pub train_batch: usize,
+    pub train_seq_len: usize,
+    pub train_total_steps: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+fn parse_reduction(j: &Json) -> Reduction {
+    Reduction {
+        method: j.str_of("method"),
+        flops_reduction: j.f64_of("flops_reduction"),
+        locations: j.usize_arr_of("locations"),
+        metric: j.str_or("metric", "clip"),
+        q_hidden: j.f64_of("q_hidden"),
+        q_residual: j.f64_of("q_residual"),
+    }
+}
+
+fn parse_plan(j: &Json) -> Plan {
+    Plan {
+        seq_len: j.usize_of("seq_len"),
+        locations: j.usize_arr_of("locations"),
+        seg_lens: j.usize_arr_of("seg_lens"),
+        removed: j.usize_arr_of("removed"),
+        flops_reduction: j.f64_of("flops_reduction"),
+    }
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let data = j.expect("data");
+        let eval = j.expect("eval");
+        let prefill = j.expect("prefill");
+        let decode = j.expect("decode");
+        let train = j.expect("train");
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.expect("models").as_obj().context("models not an object")? {
+            let cfg = m.expect("config");
+            let expand = cfg.usize_of("expand");
+            let d_model = cfg.usize_of("d_model");
+            let params = m
+                .expect("params")
+                .as_arr()
+                .context("params not an array")?
+                .iter()
+                .map(|p| ParamMeta {
+                    name: p.str_of("name"),
+                    shape: p.usize_arr_of("shape"),
+                    offset: p.usize_of("offset"),
+                    bytes: p.usize_of("bytes"),
+                })
+                .collect();
+
+            let mut hlo = BTreeMap::new();
+            for (tag, h) in m.expect("hlo").as_obj().context("hlo not an object")? {
+                let kind = h.str_of("kind");
+                let seq_len = h.get("seq_len").and_then(|v| v.as_usize()).unwrap_or(1);
+                let entry = HloEntry {
+                    tag: tag.clone(),
+                    file: h.str_of("file"),
+                    kind: kind.clone(),
+                    batch: h.usize_of("batch"),
+                    seq_len,
+                    out_len: h.get("out_len").and_then(|v| v.as_usize()).unwrap_or(seq_len),
+                    reduction: h.get("reduction").map(parse_reduction),
+                    plan: h.get("plan").map(parse_plan),
+                    peak_memory_bytes: h
+                        .get("peak_memory_bytes")
+                        .and_then(|v| v.as_f64())
+                        .map(|v| v as u64),
+                };
+                hlo.insert(tag.clone(), entry);
+            }
+
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    arch: m.str_of("arch"),
+                    n_layer: cfg.usize_of("n_layer"),
+                    d_model,
+                    d_state: cfg.usize_of("d_state"),
+                    d_inner: expand * d_model,
+                    vocab_size: cfg.usize_of("vocab_size"),
+                    param_count: m.f64_of("param_count") as u64,
+                    params,
+                    init_weights: m.str_of("init_weights"),
+                    hlo,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            root,
+            vocab_file: data.str_of("vocab"),
+            tasks_file: data.str_of("tasks"),
+            train_file: data.str_of("train"),
+            val_file: data.str_of("val"),
+            eval_batch: eval.usize_of("batch"),
+            eval_seq_len: eval.usize_of("seq_len"),
+            prefill_batch: prefill.usize_of("batch"),
+            prefill_seq_len: prefill.usize_of("seq_len"),
+            decode_batch: decode.usize_of("batch"),
+            train_batch: train.usize_of("batch"),
+            train_seq_len: train.usize_of("seq_len"),
+            train_total_steps: train.usize_of("total_steps"),
+            models,
+        })
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+impl ModelEntry {
+    /// Find the eval HLO variant matching a (method, ratio, metric, q, locations)
+    /// query; `None` fields are wildcards matched against the export defaults.
+    pub fn find_eval(
+        &self,
+        method: &str,
+        flops_reduction: f64,
+        metric: Option<&str>,
+        q_hidden: Option<f64>,
+        q_residual: Option<f64>,
+        locations: Option<&[usize]>,
+    ) -> Result<&HloEntry> {
+        let close_f = |a: f64, b: f64| (a - b).abs() < 1e-6;
+        for e in self.hlo.values() {
+            if e.kind != "eval" {
+                continue;
+            }
+            let Some(r) = &e.reduction else { continue };
+            if r.method != method {
+                continue;
+            }
+            if method == "dense" {
+                return Ok(e);
+            }
+            if !close_f(r.flops_reduction, flops_reduction) {
+                continue;
+            }
+            if metric.map_or(r.metric == "clip", |m| r.metric == m)
+                && q_hidden.map_or(close_f(r.q_hidden, 0.5), |q| close_f(r.q_hidden, q))
+                && q_residual.map_or(close_f(r.q_residual, 0.0), |q| close_f(r.q_residual, q))
+                && locations.map_or(true, |l| r.locations == l)
+            {
+                // Default-location check when locations not specified: prefer
+                // entries whose tag has no custom suffix — handled by matching
+                // against *every* candidate; ambiguity resolved by exactness.
+                if locations.is_none() {
+                    // Accept only the default-schedule export: the ablation
+                    // schedules all specify locations explicitly.
+                    if let Some(dflt) = self.default_locations() {
+                        if r.locations != dflt {
+                            continue;
+                        }
+                    }
+                }
+                return Ok(e);
+            }
+        }
+        bail!(
+            "no eval HLO for model={} method={} ratio={} metric={:?} qh={:?} qr={:?} loc={:?}",
+            self.name, method, flops_reduction, metric, q_hidden, q_residual, locations
+        )
+    }
+
+    /// The default schedule = locations of the dense-adjacent standard export
+    /// (most frequent across utrc exports).
+    pub fn default_locations(&self) -> Option<Vec<usize>> {
+        let mut counts: BTreeMap<Vec<usize>, usize> = BTreeMap::new();
+        for e in self.hlo.values() {
+            if let Some(r) = &e.reduction {
+                if r.method == "utrc" && r.metric == "clip" {
+                    *counts.entry(r.locations.clone()).or_default() += 1;
+                }
+            }
+        }
+        counts.into_iter().max_by_key(|(_, c)| *c).map(|(l, _)| l)
+    }
+
+    pub fn decode_entry(&self) -> Result<&HloEntry> {
+        self.hlo.get("decode_step").context("no decode_step HLO")
+    }
+
+    pub fn train_entry(&self) -> Result<&HloEntry> {
+        self.hlo.get("train_step").context("no train_step HLO")
+    }
+
+    pub fn prefill_entry(&self, method: &str, flops_reduction: f64) -> Result<&HloEntry> {
+        for e in self.hlo.values() {
+            if e.kind != "prefill" {
+                continue;
+            }
+            let Some(r) = &e.reduction else { continue };
+            if r.method == method
+                && (method == "dense" || (r.flops_reduction - flops_reduction).abs() < 1e-6)
+            {
+                return Ok(e);
+            }
+        }
+        bail!("no prefill HLO for {} method={method} ratio={flops_reduction}", self.name)
+    }
+}

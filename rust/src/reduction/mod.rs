@@ -1,0 +1,323 @@
+//! FLOPs model, schedule solver, and peak-memory model — the rust mirror of
+//! `python/compile/flops.py`. The python side bakes static keep-counts into
+//! HLO exports; this side re-derives the same plans for reporting (tables,
+//! figures) and validates them against the manifest (integration test
+//! `schedule_golden`).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub name: String,
+    pub arch: Arch,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub d_state: usize,
+    pub expand: usize,
+    pub d_conv: usize,
+    pub headdim: usize,
+    pub chunk: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Mamba,
+    Mamba2,
+}
+
+impl ModelDims {
+    pub fn from_manifest(m: &crate::manifest::ModelEntry) -> ModelDims {
+        ModelDims {
+            name: m.name.clone(),
+            arch: if m.arch == "mamba" { Arch::Mamba } else { Arch::Mamba2 },
+            vocab_size: m.vocab_size,
+            d_model: m.d_model,
+            n_layer: m.n_layer,
+            d_state: m.d_state,
+            expand: m.d_inner / m.d_model,
+            d_conv: 4,
+            headdim: 64,
+            chunk: 64,
+        }
+    }
+
+    pub fn d_inner(&self) -> usize {
+        self.expand * self.d_model
+    }
+
+    pub fn dt_rank(&self) -> usize {
+        (self.d_model + 15) / 16
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.d_inner() / self.headdim
+    }
+
+    /// FLOPs for one token through one block; mirrors
+    /// `flops.layer_flops_per_token` exactly (keep in lockstep!).
+    pub fn layer_flops_per_token(&self) -> f64 {
+        let (d, di, n) = (self.d_model as f64, self.d_inner() as f64, self.d_state as f64);
+        match self.arch {
+            Arch::Mamba => {
+                let r = self.dt_rank() as f64;
+                2.0 * d * 2.0 * di
+                    + 2.0 * di * self.d_conv as f64
+                    + 2.0 * di * (r + 2.0 * n)
+                    + 2.0 * r * di
+                    + 9.0 * di * n
+                    + 2.0 * di * d
+                    + 5.0 * di
+            }
+            Arch::Mamba2 => {
+                let h = self.n_heads() as f64;
+                let c = self.chunk as f64;
+                let d_in_proj = 2.0 * di + 2.0 * n + h;
+                2.0 * d * d_in_proj
+                    + 2.0 * (di + 2.0 * n) * self.d_conv as f64
+                    + 2.0 * c * n * 2.0
+                    + 2.0 * c * self.headdim as f64 * h / h.max(1.0) * h
+                    + 8.0 * di * n
+                    + 2.0 * di * d
+                    + 6.0 * di
+            }
+        }
+    }
+
+    pub fn head_flops_per_token(&self) -> f64 {
+        2.0 * self.d_model as f64 * self.vocab_size as f64
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        // f32; matches configs.ModelConfig.param_count * 4 (validated in tests
+        // against manifest.param_count).
+        let (d, di, n) = (self.d_model, self.d_inner(), self.d_state);
+        let per = match self.arch {
+            Arch::Mamba => {
+                d + d * 2 * di
+                    + di * self.d_conv + di
+                    + di * (self.dt_rank() + 2 * n)
+                    + self.dt_rank() * di + di
+                    + di * n + di + di * d
+            }
+            Arch::Mamba2 => {
+                let h = self.n_heads();
+                let d_in_proj = 2 * di + 2 * n + h;
+                d + d * d_in_proj
+                    + (di + 2 * n) * self.d_conv + (di + 2 * n)
+                    + h + h + h + di + di * d
+            }
+        };
+        ((self.vocab_size * d + self.n_layer * per + d) * 4) as u64
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulePlan {
+    pub seq_len: usize,
+    pub locations: Vec<usize>,
+    pub seg_lens: Vec<usize>,
+    pub removed: Vec<usize>,
+    pub flops_reduction: f64,
+}
+
+impl SchedulePlan {
+    pub fn final_len(&self) -> usize {
+        *self.seg_lens.last().unwrap()
+    }
+
+    pub fn len_at_layer(&self, layer: usize) -> usize {
+        let mut seg = 0;
+        for (i, &loc) in self.locations.iter().enumerate() {
+            if layer > loc {
+                seg = i + 1;
+            }
+        }
+        self.seg_lens[seg]
+    }
+}
+
+fn even(x: f64) -> usize {
+    (((x / 2.0).round() as isize).max(1) * 2) as usize
+}
+
+fn plan_for_ratio(dims: &ModelDims, seq_len: usize, locations: &[usize], rho: f64) -> SchedulePlan {
+    let mut lens = vec![seq_len];
+    let mut removed = Vec::new();
+    let mut cur = seq_len;
+    for _ in locations {
+        let mut nxt = even(cur as f64 * rho).min(cur);
+        nxt = nxt.max(cur - cur / 2); // M_A-set limit: at most half removable
+        removed.push(cur - nxt);
+        lens.push(nxt);
+        cur = nxt;
+    }
+    let dense_lens = vec![seq_len; locations.len() + 1];
+    let dense = total_flops(dims, locations, &dense_lens);
+    let got = total_flops(dims, locations, &lens);
+    SchedulePlan {
+        seq_len,
+        locations: locations.to_vec(),
+        seg_lens: lens,
+        removed,
+        flops_reduction: 1.0 - got / dense,
+    }
+}
+
+pub fn total_flops(dims: &ModelDims, locations: &[usize], seg_lens: &[usize]) -> f64 {
+    let per = dims.layer_flops_per_token();
+    let mut total = 0.0;
+    let mut seg = 0;
+    for layer in 0..dims.n_layer {
+        if seg < locations.len() && layer > locations[seg] {
+            seg += 1;
+        }
+        total += per * seg_lens[seg] as f64;
+    }
+    total + dims.head_flops_per_token() * *seg_lens.last().unwrap() as f64
+}
+
+/// Bisect the fixed per-location keep-ratio to hit the FLOPs target
+/// (mirrors `flops.solve_schedule`).
+pub fn solve_schedule(
+    dims: &ModelDims,
+    seq_len: usize,
+    locations: &[usize],
+    flops_reduction: f64,
+) -> Result<SchedulePlan> {
+    if flops_reduction <= 0.0 || locations.is_empty() {
+        return Ok(plan_for_ratio(dims, seq_len, locations, 1.0));
+    }
+    for &loc in locations {
+        if loc >= dims.n_layer {
+            bail!("reduction location {loc} outside model ({} layers)", dims.n_layer);
+        }
+    }
+    let (mut lo, mut hi) = (0.5f64, 1.0f64);
+    let mut best = plan_for_ratio(dims, seq_len, locations, 1.0);
+    for _ in 0..64 {
+        let mid = (lo + hi) / 2.0;
+        let plan = plan_for_ratio(dims, seq_len, locations, mid);
+        if (plan.flops_reduction - flops_reduction).abs()
+            < (best.flops_reduction - flops_reduction).abs()
+        {
+            best = plan;
+        }
+        if plan_for_ratio(dims, seq_len, locations, mid).flops_reduction > flops_reduction {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo < 1e-6 {
+            break;
+        }
+    }
+    if (best.flops_reduction - flops_reduction).abs() > 0.05 {
+        bail!(
+            "schedule solver missed target {flops_reduction:.3}: achieved {:.3} for {} L={seq_len}",
+            best.flops_reduction,
+            dims.name
+        );
+    }
+    Ok(best)
+}
+
+// ---------------------------------------------------------------------------
+// Peak-memory model (Figures 3/5), mirror of flops.peak_memory_bytes.
+// ---------------------------------------------------------------------------
+
+const BYTES: u64 = 4;
+
+/// Peak *live* set while computing one block (mirror of
+/// `flops.activation_bytes_per_layer`): residual + in-projection output +
+/// conv output; later stages are narrower.
+pub fn activation_bytes_per_layer(dims: &ModelDims, live_len: usize, batch: usize) -> u64 {
+    let (d, di, n) = (dims.d_model as u64, dims.d_inner() as u64, dims.d_state as u64);
+    let per_tok = match dims.arch {
+        Arch::Mamba => d + 2 * di + di,
+        Arch::Mamba2 => d + (2 * di + 2 * n + dims.n_heads() as u64) + (di + 2 * n),
+    };
+    let state = di * n;
+    BYTES * (batch as u64 * live_len as u64 * per_tok + batch as u64 * state)
+}
+
+pub fn peak_memory_bytes(dims: &ModelDims, plan: &SchedulePlan, batch: usize) -> u64 {
+    let weights = dims.param_bytes();
+    let mut widest = 0u64;
+    for layer in 0..dims.n_layer {
+        let ll = plan.len_at_layer(layer);
+        let residual = BYTES * (batch * ll * dims.d_model) as u64;
+        widest = widest.max(residual + activation_bytes_per_layer(dims, ll, batch));
+    }
+    let logits = BYTES * (batch * plan.final_len() * dims.vocab_size) as u64;
+    weights + widest.max(logits + BYTES * (batch * plan.final_len() * dims.d_model) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "t".into(),
+            arch: Arch::Mamba,
+            vocab_size: 2048,
+            d_model: 256,
+            n_layer: 20,
+            d_state: 16,
+            expand: 2,
+            d_conv: 4,
+            headdim: 64,
+            chunk: 64,
+        }
+    }
+
+    #[test]
+    fn dense_plan_is_identity() {
+        let p = solve_schedule(&dims(), 128, &[], 0.0).unwrap();
+        assert_eq!(p.seg_lens, vec![128]);
+        assert_eq!(p.flops_reduction, 0.0);
+    }
+
+    #[test]
+    fn targets_hit_within_tolerance() {
+        let d = dims();
+        for target in [0.10, 0.20, 0.30] {
+            let p = solve_schedule(&d, 128, &[10, 15], target).unwrap();
+            assert!(
+                (p.flops_reduction - target).abs() < 0.05,
+                "target {target}: got {}",
+                p.flops_reduction
+            );
+            // monotone non-increasing live lengths, all even
+            for w in p.seg_lens.windows(2) {
+                assert!(w[1] <= w[0]);
+            }
+            for &l in &p.seg_lens {
+                assert_eq!(l % 2, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn removal_respects_half_limit() {
+        let d = dims();
+        let p = solve_schedule(&d, 128, &[10, 15], 0.30).unwrap();
+        for (i, &r) in p.removed.iter().enumerate() {
+            assert!(r <= p.seg_lens[i] / 2, "removed {r} of {}", p.seg_lens[i]);
+        }
+    }
+
+    #[test]
+    fn memory_decreases_with_reduction() {
+        let d = dims();
+        let dense = solve_schedule(&d, 128, &[], 0.0).unwrap();
+        let red = solve_schedule(&d, 128, &[10, 15], 0.30).unwrap();
+        assert!(peak_memory_bytes(&d, &red, 96) < peak_memory_bytes(&d, &dense, 96));
+    }
+
+    #[test]
+    fn location_out_of_range_rejected() {
+        assert!(solve_schedule(&dims(), 128, &[25], 0.2).is_err());
+    }
+}

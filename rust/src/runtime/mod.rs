@@ -1,0 +1,123 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once, execute many.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`/`execute_b`. HLO *text* is the interchange
+//! format (the 0.5.1 extension rejects jax≥0.5 64-bit-id protos).
+//!
+//! Hot-path discipline: weights are uploaded to device once
+//! (`DeviceWeights`) and passed by reference to `execute_b`; only the small
+//! activations (tokens in, logits out) cross the host boundary per request.
+
+pub mod tensor;
+pub mod weights;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::manifest::{HloEntry, Manifest, ModelEntry};
+pub use tensor::{HostTensor, TensorData};
+pub use weights::{DeviceWeights, Weights};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    /// Compiled executable cache keyed by HLO file path.
+    cache: std::cell::RefCell<HashMap<String, Arc<Executable>>>,
+    pub compile_log: std::cell::RefCell<Vec<(String, f64)>>,
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: Default::default(),
+            compile_log: Default::default(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text module (cached by path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
+        let key = path.as_ref().to_string_lossy().to_string();
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(Arc::clone(e));
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.compile_log.borrow_mut().push((key.clone(), dt));
+        let e = Arc::new(Executable { exe, name: key.clone() });
+        self.cache.borrow_mut().insert(key, Arc::clone(&e));
+        Ok(e)
+    }
+
+    pub fn load_entry(&self, man: &Manifest, entry: &HloEntry) -> Result<Arc<Executable>> {
+        self.load(man.path(&entry.file))
+    }
+
+    /// Upload a host tensor to a device-resident buffer.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        match &t.data {
+            TensorData::F32(v) => self
+                .client
+                .buffer_from_host_buffer(v, &t.shape, None)
+                .context("uploading f32 buffer"),
+            TensorData::I32(v) => self
+                .client
+                .buffer_from_host_buffer(v, &t.shape, None)
+                .context("uploading i32 buffer"),
+        }
+    }
+
+    pub fn upload_weights(&self, man: &Manifest, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights> {
+        weights::upload(self, man, model, w)
+    }
+}
+
+impl Executable {
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(&self, args: &[L]) -> Result<Vec<HostTensor>> {
+        let bufs = self.exe.execute(args).context("execute")?;
+        Self::collect(bufs)
+    }
+
+    /// Execute with device-resident buffers (the hot path).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        let bufs = self.exe.execute_b(args).context("execute_b")?;
+        Self::collect(bufs)
+    }
+
+    /// Execute with device buffers but keep outputs on device (tuple buffer).
+    pub fn run_b_raw(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut bufs = self.exe.execute_b(args).context("execute_b")?;
+        ensure!(!bufs.is_empty(), "no outputs");
+        Ok(bufs.remove(0))
+    }
+
+    fn collect(bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        ensure!(!bufs.is_empty() && !bufs[0].is_empty(), "empty execution result");
+        // Single replica; the root is a tuple (lowered with return_tuple=True).
+        let lit = bufs[0][0].to_literal_sync().context("download result")?;
+        let parts = lit.to_tuple().context("decompose result tuple")?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}

@@ -1,0 +1,102 @@
+//! Weight blobs: load/save the concatenated f32 layout written by
+//! `aot.py::export_weights` (param_order contract), and device residency.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::manifest::{Manifest, ModelEntry};
+use crate::runtime::{HostTensor, Runtime};
+
+/// Host-side parameter set, ordered per the manifest's param layout.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub tensors: Vec<HostTensor>,
+}
+
+impl Weights {
+    pub fn load(man: &Manifest, model: &ModelEntry, rel_path: &str) -> Result<Weights> {
+        let path = man.path(rel_path);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading weights {path:?}"))?;
+        Self::from_bytes(model, &bytes)
+    }
+
+    pub fn load_init(man: &Manifest, model: &ModelEntry) -> Result<Weights> {
+        Self::load(man, model, &model.init_weights)
+    }
+
+    pub fn from_bytes(model: &ModelEntry, bytes: &[u8]) -> Result<Weights> {
+        let total: usize = model.params.iter().map(|p| p.bytes).sum();
+        ensure!(
+            bytes.len() == total,
+            "weight blob is {} bytes, manifest expects {total}",
+            bytes.len()
+        );
+        let mut tensors = Vec::with_capacity(model.params.len());
+        for p in &model.params {
+            let chunk = &bytes[p.offset..p.offset + p.bytes];
+            let data: Vec<f32> = chunk
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            ensure!(
+                data.len() == p.shape.iter().product::<usize>(),
+                "param {} size mismatch",
+                p.name
+            );
+            tensors.push(HostTensor::f32(p.shape.clone(), data));
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn save(&self, model: &ModelEntry, path: impl AsRef<Path>) -> Result<()> {
+        let mut out: Vec<u8> = Vec::new();
+        for (t, p) in self.tensors.iter().zip(&model.params) {
+            let data = t.as_f32()?;
+            ensure!(data.len() * 4 == p.bytes, "param {} changed size", p.name);
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path.as_ref(), out)
+            .with_context(|| format!("writing weights {:?}", path.as_ref()))
+    }
+
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.tensors.iter().map(|t| t.to_literal()).collect()
+    }
+
+    /// Mean of |w| across all params — a cheap training-progress fingerprint.
+    pub fn mean_abs(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for t in &self.tensors {
+            if let Ok(v) = t.as_f32() {
+                sum += v.iter().map(|x| x.abs() as f64).sum::<f64>();
+                n += v.len();
+            }
+        }
+        sum / n.max(1) as f64
+    }
+}
+
+/// Device-resident parameter buffers (uploaded once, reused per request).
+pub struct DeviceWeights {
+    pub buffers: Vec<xla::PjRtBuffer>,
+}
+
+pub fn upload(rt: &Runtime, _man: &Manifest, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights> {
+    ensure!(
+        w.tensors.len() == model.params.len(),
+        "weights/model param count mismatch"
+    );
+    let buffers = w
+        .tensors
+        .iter()
+        .map(|t| rt.upload(t))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(DeviceWeights { buffers })
+}

@@ -1,0 +1,116 @@
+//! Word-level tokenizer — the runtime mirror of `python/compile/tokenizer.py`.
+//! The vocabulary artifact (`vocab.json`) is the shared contract; both sides
+//! must agree exactly (pinned by the vocab-golden integration test).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+pub const BOS: u32 = 2;
+pub const EOS: u32 = 3;
+const SPECIALS: [&str; 4] = ["<pad>", "<unk>", "<bos>", "<eos>"];
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl Tokenizer {
+    pub fn from_vocab(vocab: Vec<String>) -> Result<Tokenizer> {
+        ensure!(vocab.len() >= SPECIALS.len(), "vocab too small");
+        for (i, sp) in SPECIALS.iter().enumerate() {
+            ensure!(vocab[i] == *sp, "vocab[{i}] must be {sp}, got {}", vocab[i]);
+        }
+        let index = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Ok(Tokenizer { vocab, index })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Tokenizer> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading vocab {:?}", path.as_ref()))?;
+        let j = Json::parse(&text).context("parsing vocab.json")?;
+        let vocab = j
+            .expect("vocab")
+            .as_arr()
+            .context("vocab not an array")?
+            .iter()
+            .map(|v| v.as_str().context("vocab entry not a string").map(String::from))
+            .collect::<Result<Vec<_>>>()?;
+        Tokenizer::from_vocab(vocab)
+    }
+
+    pub fn len(&self) -> usize {
+        self.vocab.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vocab.is_empty()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace()
+            .map(|w| self.index.get(w).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .filter(|&&i| i as usize >= SPECIALS.len() && (i as usize) < self.vocab.len())
+            .map(|&i| self.vocab[i as usize].as_str())
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn word(&self, id: u32) -> Option<&str> {
+        self.vocab.get(id as usize).map(|s| s.as_str())
+    }
+
+    pub fn id(&self, word: &str) -> Option<u32> {
+        self.index.get(word).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        Tokenizer::from_vocab(
+            ["<pad>", "<unk>", "<bos>", "<eos>", "the", "lantern", "was", "crimson"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn encode_decode() {
+        let t = toy();
+        let ids = t.encode("the lantern was crimson");
+        assert_eq!(ids, vec![4, 5, 6, 7]);
+        assert_eq!(t.decode(&ids), "the lantern was crimson");
+    }
+
+    #[test]
+    fn unk_for_oov() {
+        let t = toy();
+        assert_eq!(t.encode("the zebra"), vec![4, UNK]);
+    }
+
+    #[test]
+    fn specials_enforced() {
+        let bad = vec!["<unk>".to_string(), "<pad>".to_string()];
+        assert!(Tokenizer::from_vocab(bad).is_err());
+    }
+}

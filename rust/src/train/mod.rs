@@ -1,0 +1,143 @@
+//! Rust training loop over the AOT train-step executable.
+//!
+//! Python never runs here: the fused fwd+bwd+AdamW step was lowered once by
+//! `aot.py`; this loop just streams (params, opt state, batch) through it,
+//! samples corpus windows, logs the loss curve, and writes checkpoints that
+//! the eval/serve paths consume. ABI: inputs `p[0..n], m[0..n], v[0..n],
+//! step, tokens`, outputs the same plus the scalar loss (see
+//! training.train_step).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::Corpus;
+use crate::manifest::{Manifest, ModelEntry};
+use crate::runtime::{HostTensor, Runtime, Weights};
+use crate::util::rng::Rng;
+
+pub struct TrainReport {
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub wall_s: f64,
+    pub checkpoint: PathBuf,
+    pub tokens_seen: u64,
+}
+
+pub fn checkpoint_path(man: &Manifest, model: &str) -> PathBuf {
+    man.root.join("checkpoints").join(format!("{model}.bin"))
+}
+
+pub fn loss_log_path(man: &Manifest, model: &str) -> PathBuf {
+    man.root.join("logs").join(format!("train_{model}.csv"))
+}
+
+/// Load trained weights if a checkpoint exists, else the init blob.
+pub fn load_best_weights(man: &Manifest, model: &ModelEntry) -> Result<(Weights, bool)> {
+    let ckpt = checkpoint_path(man, &model.name);
+    if ckpt.exists() {
+        let bytes = std::fs::read(&ckpt)?;
+        Ok((Weights::from_bytes(model, &bytes)?, true))
+    } else {
+        Ok((Weights::load_init(man, model)?, false))
+    }
+}
+
+pub fn train(
+    rt: &Runtime,
+    man: &Manifest,
+    model: &ModelEntry,
+    steps: usize,
+    seed: u64,
+    log_every: usize,
+) -> Result<TrainReport> {
+    let entry = model.train_entry()?;
+    let exe = rt.load_entry(man, entry)?;
+    let n = model.params.len();
+    let corpus = Corpus::load(man.path(&man.train_file))?;
+    corpus.validate(model.vocab_size)?;
+    let mut rng = Rng::new(seed);
+
+    let weights = Weights::load_init(man, model)?;
+    let mut params: Vec<xla::Literal> = weights.to_literals()?;
+    let mut m: Vec<xla::Literal> = weights
+        .tensors
+        .iter()
+        .map(|t| HostTensor::zeros_f32(t.shape.clone()).to_literal())
+        .collect::<Result<_>>()?;
+    let mut v: Vec<xla::Literal> = weights
+        .tensors
+        .iter()
+        .map(|t| HostTensor::zeros_f32(t.shape.clone()).to_literal())
+        .collect::<Result<_>>()?;
+    let mut step_lit = HostTensor::scalar_i32(0).to_literal()?;
+
+    let t0 = Instant::now();
+    let mut losses = Vec::with_capacity(steps);
+    let mut tokens_seen = 0u64;
+
+    for step in 0..steps {
+        let batch = corpus.sample_batch(&mut rng, entry.batch, entry.seq_len);
+        tokens_seen += batch.len() as u64;
+        let tokens = HostTensor::i32(vec![entry.batch, entry.seq_len], batch).to_literal()?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 2);
+        args.extend(params.iter());
+        args.extend(m.iter());
+        args.extend(v.iter());
+        args.push(&step_lit);
+        args.push(&tokens);
+
+        let outs = exe.run(&args).context("train step")?;
+        ensure!(outs.len() == 3 * n + 2, "train step returned {} outputs", outs.len());
+
+        let loss = outs[3 * n + 1].as_f32()?[0];
+        ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
+        losses.push(loss);
+
+        params = outs[..n].iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        m = outs[n..2 * n].iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        v = outs[2 * n..3 * n].iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        step_lit = outs[3 * n].to_literal()?;
+
+        if log_every > 0 && (step % log_every == 0 || step + 1 == steps) {
+            println!(
+                "[train {}] step {step:4} loss {loss:.4} ({:.2}s, {:.0} tok/s)",
+                model.name,
+                t0.elapsed().as_secs_f64(),
+                tokens_seen as f64 / t0.elapsed().as_secs_f64().max(1e-9),
+            );
+            use std::io::Write;
+            std::io::stdout().flush().ok(); // visible through pipes
+        }
+    }
+
+    // Save checkpoint (params only).
+    let final_tensors: Result<Vec<HostTensor>> = params
+        .iter()
+        .map(|l| HostTensor::from_literal(l))
+        .collect();
+    let trained = Weights { tensors: final_tensors? };
+    let ckpt = checkpoint_path(man, &model.name);
+    trained.save(model, &ckpt)?;
+
+    // Loss-curve CSV.
+    let log = loss_log_path(man, &model.name);
+    if let Some(dir) = log.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut csv = String::from("step,loss\n");
+    for (i, l) in losses.iter().enumerate() {
+        csv.push_str(&format!("{i},{l}\n"));
+    }
+    std::fs::write(&log, csv)?;
+
+    Ok(TrainReport {
+        steps,
+        losses,
+        wall_s: t0.elapsed().as_secs_f64(),
+        checkpoint: ckpt,
+        tokens_seen,
+    })
+}

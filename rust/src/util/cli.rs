@@ -1,0 +1,97 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(
+            &["table", "--ratio", "0.2", "--model=mamba-small", "--verbose", "1"],
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["table", "1"]);
+        assert_eq!(a.get("ratio"), Some("0.2"));
+        assert_eq!(a.get("model"), Some("mamba-small"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--force"], &[]);
+        assert!(a.flag("force"));
+    }
+
+    #[test]
+    fn numeric_option_value() {
+        // "--steps 300": 300 must bind to steps even though it looks positional.
+        let a = parse(&["--steps", "300"], &[]);
+        assert_eq!(a.usize_or("steps", 0), 300);
+    }
+}

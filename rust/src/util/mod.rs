@@ -1,0 +1,10 @@
+//! Dependency-light substrates: JSON, CLI parsing, RNG, thread pool, stats.
+//!
+//! These replace serde_json / clap / rand / rayon, none of which are
+//! resolvable in this offline image (see Cargo.toml header note).
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,140 @@
+//! Fixed-size worker thread pool with a scoped `map` — the slice of rayon
+//! we actually need (parallel batch scoring, workload generation).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+/// Run `f(i)` for i in 0..n on up to `workers` threads; collect results in
+/// order. Panics in workers propagate.
+pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    // Work-stealing via an atomic index; each worker returns its (index,
+    // value) pairs and we reassemble in order afterwards.
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    thread::scope(|scope| {
+        let f = &f;
+        let next = &next;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("worker panicked") {
+                slots[i] = Some(v);
+            }
+        }
+    });
+
+    slots.into_iter().map(|v| v.expect("worker hole")).collect()
+}
+
+/// A persistent pool for request-loop style work: submit closures, they run
+/// FIFO on the workers. Used by the coordinator's execution lanes.
+pub struct Pool {
+    tx: Option<std::sync::mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl Pool {
+    pub fn new(workers: usize) -> Self {
+        let (tx, rx) = std::sync::mpsc::channel::<Job>();
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Pool { tx: Some(tx), handles }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_map_order_and_coverage() {
+        let out = par_map(1000, 8, |i| i * 2);
+        assert_eq!(out.len(), 1000);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 2);
+        }
+    }
+
+    #[test]
+    fn par_map_single_worker() {
+        assert_eq!(par_map(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let out: Vec<usize> = par_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = Pool::new(4);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // drop waits for completion
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+}

@@ -1,0 +1,89 @@
+//! Timing statistics for the bench harness (criterion substitute).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Summary {
+    pub fn from_durations(mut ns: Vec<f64>) -> Summary {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let q = |p: f64| ns[((n as f64 - 1.0) * p).round() as usize];
+        Summary {
+            n,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: ns[0],
+            p50_ns: q(0.5),
+            p99_ns: q(0.99),
+            max_ns: ns[n - 1],
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+pub fn human(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` with warmup, then measure `iters` iterations (each possibly
+/// batched internally by the caller). Returns per-iteration stats.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    Summary::from_durations(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_quantiles() {
+        let s = Summary::from_durations((1..=100).map(|x| x as f64).collect());
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 100.0);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+        assert!((s.p50_ns - 50.0).abs() <= 1.0);
+        assert!(s.p99_ns >= 98.0);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human(500.0), "500 ns");
+        assert!(human(1.5e3).contains("µs"));
+        assert!(human(2.0e6).contains("ms"));
+        assert!(human(3.0e9).contains("s"));
+    }
+}

