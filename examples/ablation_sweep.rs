@@ -17,7 +17,9 @@ fn main() -> Result<()> {
     let artifacts = args.get_or("artifacts", &tor_ssm::artifacts_dir());
     let model = args.get_or("model", "mamba2-base");
     let items = args.usize_or("items", 30);
-    let mut ctx = Ctx::new(&artifacts, items, args.flag("fresh"))?;
+    // The sweep needs real AOT exports, so it defaults to the pjrt backend.
+    let backend = args.get_or("backend", "pjrt");
+    let mut ctx = Ctx::with_backend(&artifacts, items, args.flag("fresh"), &backend)?;
 
     let me = ctx.man.model(&model)?.clone();
     let mut entries: Vec<_> = me

@@ -1,33 +1,52 @@
-//! Quickstart: load an AOT-compiled Mamba variant, run one reduced vs dense
+//! Quickstart: load a compiled Mamba variant, run one reduced vs dense
 //! forward on a real task prompt, and print what token reduction did.
 //!
+//! Hermetic by default: when no `artifacts/` directory exists this
+//! generates a deterministic synthetic fixture and runs it on the pure-Rust
+//! reference backend — no Python, no XLA.
+//!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
+//! # or against real AOT artifacts:
+//! make artifacts && cargo run --release --features pjrt --example quickstart -- --backend pjrt
 //! ```
 
 use anyhow::{Context, Result};
 
 use tor_ssm::data::load_tasks;
 use tor_ssm::eval::scoring::SeqLogits;
-use tor_ssm::manifest::Manifest;
+use tor_ssm::fixtures;
 use tor_ssm::runtime::{HostTensor, Runtime};
 use tor_ssm::tokenizer::Tokenizer;
 use tor_ssm::train::load_best_weights;
+use tor_ssm::util::cli::Args;
 
 fn main() -> Result<()> {
-    let man = Manifest::load(tor_ssm::artifacts_dir())?;
-    let rt = Runtime::cpu()?;
-    println!("platform: {}", rt.platform());
+    let args = Args::from_env(&[]);
+    // An explicitly passed --artifacts must load (a typo'd path should be an
+    // error, not a silent fall-back to the toy fixture); only the default
+    // location falls back to the synthetic fixture.
+    let (man, synthetic) = match args.get("artifacts") {
+        Some(dir) => (tor_ssm::manifest::Manifest::load(dir)?, false),
+        None => fixtures::manifest_or_fixture(&tor_ssm::artifacts_dir())?,
+    };
+    let rt = Runtime::from_name(&args.get_or("backend", "reference"))?;
+    println!(
+        "platform: {} ({})",
+        rt.platform(),
+        if synthetic { "synthetic fixture" } else { "real artifacts" }
+    );
 
-    let model = man.model("mamba-small")?.clone();
+    let default_model = man.models.keys().next().context("manifest has no models")?.clone();
+    let model = man.model(&args.get_or("model", &default_model))?.clone();
     let (weights, trained) = load_best_weights(&man, &model)?;
     println!(
         "model: {} ({} params, {} weights)",
         model.name,
         model.param_count,
-        if trained { "trained" } else { "INIT — run `repro train --model mamba-small`" }
+        if trained { "trained" } else { "INIT — run `repro train` for meaningful predictions" }
     );
-    let dw = rt.upload_weights(&man, &model, &weights)?;
+    let dw = rt.upload_weights(&model, &weights)?;
 
     // A real task prompt from the benchmark set.
     let tok = Tokenizer::load(man.path(&man.vocab_file))?;
@@ -44,26 +63,25 @@ fn main() -> Result<()> {
         ("UTRC @20% FLOPs", "utrc", 0.20),
     ] {
         let entry = model.find_eval(method, ratio, None, None, None, None)?;
-        let exe = rt.load_entry(&man, entry)?;
+        let exe = rt.load_entry(&man, &model, entry)?;
         let mut tokens = ids.clone();
         tokens.resize(entry.seq_len, 0);
         let mut flat = Vec::new();
         for _ in 0..entry.batch {
             flat.extend_from_slice(&tokens);
         }
-        let tok_buf = rt.upload(&HostTensor::i32(vec![entry.batch, entry.seq_len], flat))?;
-        let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
-        args.push(&tok_buf);
+        let tok_t = HostTensor::i32(vec![entry.batch, entry.seq_len], flat);
 
         let t0 = std::time::Instant::now();
-        let outs = exe.run_b(&args).context("forward")?;
+        let outs = exe.execute(&dw, &[tok_t]).context("forward")?;
         let dt = t0.elapsed();
 
         let logits = outs[0].as_f32()?;
         let kept = outs[1].as_i32()?;
         let out_len = entry.out_len;
         let v = model.vocab_size;
-        let sl = SeqLogits { logits: &logits[..out_len * v], out_len, vocab: v, kept: &kept[..out_len] };
+        let sl =
+            SeqLogits { logits: &logits[..out_len * v], out_len, vocab: v, kept: &kept[..out_len] };
         let pred = sl.aligned_argmax(pos).unwrap_or(-1);
         println!(
             "\n[{label}] tokens {} -> {} surviving | forward {dt:?}\n  predicted next word: {:?} (target {:?})",
@@ -74,6 +92,6 @@ fn main() -> Result<()> {
         );
     }
 
-    println!("\nSee `repro table all` / `repro figure all` for the paper's experiments.");
+    println!("\nSee `repro demo` for the hermetic serve+eval loop, `repro table all` for the paper's experiments.");
     Ok(())
 }

@@ -2,20 +2,23 @@
 //! engine (prefill + decode) — on a synthetic request trace, reporting
 //! latency percentiles and throughput for dense vs token-reduced lanes.
 //!
+//! Hermetic by default: with no `artifacts/` directory it generates a
+//! synthetic fixture and serves it on the reference backend.
+//!
 //! ```sh
 //! cargo run --release --example serve -- --requests 24 --gen-tokens 24
 //! ```
 
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use tor_ssm::coordinator::batcher::Batcher;
 use tor_ssm::coordinator::engine::Engine;
 use tor_ssm::coordinator::metrics::Metrics;
 use tor_ssm::coordinator::router::{Policy, Router};
 use tor_ssm::coordinator::Request;
-use tor_ssm::manifest::Manifest;
+use tor_ssm::fixtures;
 use tor_ssm::runtime::Runtime;
 use tor_ssm::train::load_best_weights;
 use tor_ssm::util::cli::Args;
@@ -23,18 +26,25 @@ use tor_ssm::util::rng::Rng;
 
 fn main() -> Result<()> {
     let args = Args::from_env(&[]);
-    let artifacts = args.get_or("artifacts", &tor_ssm::artifacts_dir());
-    let model = args.get_or("model", "mamba-small");
     let n_requests = args.usize_or("requests", 24);
     let gen_tokens = args.usize_or("gen-tokens", 24);
 
-    let man = Manifest::load(&artifacts)?;
-    let rt = Runtime::cpu()?;
+    // An explicitly passed --artifacts must load (a typo'd path should be an
+    // error, not a silent fall-back to the toy fixture); only the default
+    // location falls back to the synthetic fixture.
+    let (man, synthetic) = match args.get("artifacts") {
+        Some(dir) => (tor_ssm::manifest::Manifest::load(dir)?, false),
+        None => fixtures::manifest_or_fixture(&tor_ssm::artifacts_dir())?,
+    };
+    let rt = Runtime::from_name(&args.get_or("backend", "reference"))?;
+    let default_model = man.models.keys().next().context("manifest has no models")?.clone();
+    let model = args.get_or("model", &default_model);
     let me = man.model(&model)?.clone();
     let (w, trained) = load_best_weights(&man, &me)?;
     println!(
-        "serving {model} ({}; {} requests, {gen_tokens} gen tokens each)",
+        "serving {model} ({}; {}; {} requests, {gen_tokens} gen tokens each)",
         if trained { "trained weights" } else { "INIT weights" },
+        if synthetic { "synthetic fixture" } else { "real artifacts" },
         n_requests
     );
 
@@ -43,7 +53,10 @@ fn main() -> Result<()> {
         .iter()
         .map(|v| Engine::new(&rt, &man, &me, &w, v))
         .collect::<Result<_>>()?;
-    println!("lanes: {lanes:?} (batch {}, prompt frame {})", engines[0].batch, engines[0].prefill_len);
+    println!(
+        "lanes: {lanes:?} (batch {}, prompt frame {})",
+        engines[0].batch, engines[0].prefill_len
+    );
 
     let mut router = Router::new(Policy::CostAware { long_prompt: man.prefill_seq_len / 2 }, &lanes);
     let mut batchers: Vec<Batcher> = engines
@@ -72,13 +85,13 @@ fn main() -> Result<()> {
 
         for (bi, b) in batchers.iter_mut().enumerate() {
             while let Some(batch) = b.poll(Instant::now()) {
-                run_batch(&rt, &engines[bi], &batch, &mut per_lane[bi], &mut router, &lanes[bi], t0)?;
+                run_batch(&engines[bi], &batch, &mut per_lane[bi], &mut router, &lanes[bi], t0)?;
             }
         }
     }
     for (bi, b) in batchers.iter_mut().enumerate() {
         while let Some(batch) = b.drain() {
-            run_batch(&rt, &engines[bi], &batch, &mut per_lane[bi], &mut router, &lanes[bi], t0)?;
+            run_batch(&engines[bi], &batch, &mut per_lane[bi], &mut router, &lanes[bi], t0)?;
         }
     }
 
@@ -97,9 +110,7 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_batch(
-    rt: &Runtime,
     engine: &Engine,
     batch: &[Request],
     metrics: &mut Metrics,
@@ -107,11 +118,17 @@ fn run_batch(
     lane: &str,
     t0: Instant,
 ) -> Result<()> {
-    let responses = engine.serve_batch(rt, batch)?;
+    let responses = engine.serve_batch(batch)?;
     for (req, resp) in batch.iter().zip(&responses) {
         let queue_us = t0.elapsed().as_micros() as u64 - req.arrived_us;
         metrics.requests += 1;
-        metrics.record(req.prompt.len(), resp.generated.len(), resp.prefill_us, resp.decode_us, queue_us);
+        metrics.record(
+            req.prompt.len(),
+            resp.generated.len(),
+            resp.prefill_us,
+            resp.decode_us,
+            queue_us,
+        );
         router.note_done(lane);
     }
     Ok(())

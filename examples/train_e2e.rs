@@ -5,8 +5,11 @@
 //! three layers composing on a real workload, with python nowhere at runtime.
 //!
 //! ```sh
-//! cargo run --release --example train_e2e -- --model mamba-small --steps 300
+//! cargo run --release --features pjrt --example train_e2e -- --model mamba-small --steps 300
 //! ```
+//!
+//! The fused train step only exists on the pjrt backend, so `--backend`
+//! defaults to `pjrt` here (requires the cargo feature + real artifacts).
 
 use anyhow::Result;
 
@@ -20,6 +23,7 @@ fn main() -> Result<()> {
     let args = Args::from_env(&["skip-train"]);
     let artifacts = args.get_or("artifacts", &tor_ssm::artifacts_dir());
     let model = args.get_or("model", "mamba-small");
+    let backend = args.get_or("backend", "pjrt");
     let man = Manifest::load(&artifacts)?;
     let steps = args.usize_or("steps", man.train_total_steps);
     let items = args.usize_or("items", 40);
@@ -27,7 +31,7 @@ fn main() -> Result<()> {
     // ---- phase 1: train ----------------------------------------------------
     let me = man.model(&model)?.clone();
     if !args.flag("skip-train") {
-        let rt = Runtime::cpu()?;
+        let rt = Runtime::from_name(&backend)?;
         println!(
             "training {model} ({} params) for {steps} steps on the synthetic corpus...",
             me.param_count
@@ -51,7 +55,7 @@ fn main() -> Result<()> {
     }
 
     // ---- phase 2: zero-shot eval dense vs reduced ---------------------------
-    let mut ctx = Ctx::new(&artifacts, items, false)?;
+    let mut ctx = Ctx::with_backend(&artifacts, items, false, &backend)?;
     println!("\nzero-shot evaluation ({items} items/task):");
     let mut rows = Vec::new();
     for (label, method, ratio) in [

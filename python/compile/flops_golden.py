@@ -1,0 +1,98 @@
+"""Emit the FLOPs/param golden fixture consumed by rust/tests/flops_golden.rs.
+
+The rust `reduction::ModelDims` mirrors `flops.layer_flops_per_token` /
+`configs.ModelConfig.param_count` ("keep in lockstep!"); this script freezes
+the python side's values for the paper's Mamba-130m and Mamba2-130m dims
+into a checked-in JSON so CI enforces the lockstep instead of a comment.
+
+Usage (from the repo root; stdlib only, no jax needed):
+
+    python3 -m compile.flops_golden            # run inside python/
+    # or
+    PYTHONPATH=python python3 python/compile/flops_golden.py
+
+Regenerate and commit the JSON whenever either FLOPs model changes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+if __package__ in (None, ""):
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from compile.configs import ModelConfig
+    from compile.flops import head_flops_per_token, layer_flops_per_token
+else:
+    from .configs import ModelConfig
+    from .flops import head_flops_per_token, layer_flops_per_token
+
+# The paper's smallest public checkpoints, at their real dims (GPT-NeoX
+# vocab rounded to 50280 as released). These are NOT the scaled substrates
+# in configs.MODELS — the golden pins the formulas at full scale, where a
+# drifted term is numerically obvious.
+GOLDEN_CONFIGS = [
+    ModelConfig(
+        name="mamba-130m",
+        arch="mamba",
+        vocab_size=50280,
+        d_model=768,
+        n_layer=24,
+        d_state=16,
+        expand=2,
+        d_conv=4,
+        headdim=64,
+        chunk=64,
+    ),
+    ModelConfig(
+        name="mamba2-130m",
+        arch="mamba2",
+        vocab_size=50280,
+        d_model=768,
+        n_layer=24,
+        d_state=128,
+        expand=2,
+        d_conv=4,
+        headdim=64,
+        chunk=256,
+    ),
+]
+
+
+def golden() -> dict:
+    models = []
+    for cfg in GOLDEN_CONFIGS:
+        models.append(
+            {
+                "name": cfg.name,
+                "arch": cfg.arch,
+                "vocab_size": cfg.vocab_size,
+                "d_model": cfg.d_model,
+                "n_layer": cfg.n_layer,
+                "d_state": cfg.d_state,
+                "expand": cfg.expand,
+                "d_conv": cfg.d_conv,
+                "headdim": cfg.headdim,
+                "chunk": cfg.chunk,
+                "dt_rank": cfg.dt_rank_,
+                "layer_flops_per_token": layer_flops_per_token(cfg),
+                "head_flops_per_token": head_flops_per_token(cfg),
+                "param_count": cfg.param_count(),
+            }
+        )
+    return {"source": "python/compile/flops_golden.py", "models": models}
+
+
+def main() -> None:
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out = os.path.join(repo, "rust", "tests", "data", "flops_golden.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(golden(), f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,76 +1,76 @@
-//! Runtime-layer benchmarks against real artifacts: HLO compile time,
-//! weight upload, dense vs reduced eval forward, decode step. Skips (with a
-//! message) if artifacts are missing so `cargo bench` stays runnable.
+//! Runtime-layer benchmarks: compile (or interpreter-bind) time, weight
+//! upload, dense vs reduced eval forward, decode step. Runs against real
+//! artifacts when present, else against the synthetic fixture on the
+//! reference backend — `cargo bench` is hermetic either way.
 
 use tor_ssm::bench::harness::Bench;
-use tor_ssm::manifest::Manifest;
+use tor_ssm::fixtures;
 use tor_ssm::runtime::{HostTensor, Runtime, Weights};
 
 fn main() {
     let artifacts = tor_ssm::artifacts_dir();
-    let man = match Manifest::load(&artifacts) {
-        Ok(m) => m,
+    let (man, synthetic) = match fixtures::manifest_or_fixture(&artifacts) {
+        Ok(v) => v,
         Err(e) => {
-            println!("SKIP runtime bench: {e:#} (run `make artifacts`)");
+            println!("SKIP runtime bench: {e:#}");
             return;
         }
     };
-    let rt = Runtime::cpu().expect("pjrt cpu");
-    let model = man.model("mamba-small").expect("mamba-small").clone();
+    let rt = Runtime::cpu().expect("default backend");
+    println!(
+        "runtime bench on {} ({})",
+        rt.platform(),
+        if synthetic { "synthetic fixture" } else { "real artifacts" }
+    );
+    let model_name = man.models.keys().next().expect("models").clone();
+    let model = man.model(&model_name).expect("model").clone();
     let weights = Weights::load_init(&man, &model).expect("init weights");
+
+    let dw = match rt.upload_weights(&model, &weights) {
+        Ok(dw) => dw,
+        Err(e) => {
+            println!("SKIP runtime bench (weights/backend mismatch): {e:#}");
+            return;
+        }
+    };
 
     let mut b = Bench::with_iters("runtime", 2, 10);
 
-    b.bench("upload_weights_mamba_small", || {
-        let dw = rt.upload_weights(&man, &model, &weights).unwrap();
-        assert_eq!(dw.buffers.len(), model.params.len());
+    b.bench("upload_weights", || {
+        let dw = rt.upload_weights(&model, &weights).unwrap();
+        drop(dw);
     });
-
-    let dw = rt.upload_weights(&man, &model, &weights).unwrap();
     let dense = model.find_eval("dense", 0.0, None, None, None, None).unwrap().clone();
     let reduced = model.find_eval("utrc", 0.20, None, None, None, None).unwrap().clone();
 
-    let exe_dense = rt.load_entry(&man, &dense).unwrap();
-    let exe_red = rt.load_entry(&man, &reduced).unwrap();
+    let exe_dense = rt.load_entry(&man, &model, &dense).unwrap();
+    let exe_red = rt.load_entry(&man, &model, &reduced).unwrap();
     let tokens: Vec<i32> = (0..dense.batch * dense.seq_len)
         .map(|i| (i % model.vocab_size) as i32)
         .collect();
     let tok = HostTensor::i32(vec![dense.batch, dense.seq_len], tokens);
 
-    b.bench("eval_forward_dense_b8_l128", || {
-        let tok_buf = rt.upload(&tok).unwrap();
-        let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
-        args.push(&tok_buf);
-        let outs = exe_dense.run_b(&args).unwrap();
+    b.bench(&format!("eval_forward_dense_b{}_l{}", dense.batch, dense.seq_len), || {
+        let outs = exe_dense.execute(&dw, std::slice::from_ref(&tok)).unwrap();
         assert_eq!(outs.len(), 2);
     });
 
-    b.bench("eval_forward_utrc20_b8_l128", || {
-        let tok_buf = rt.upload(&tok).unwrap();
-        let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
-        args.push(&tok_buf);
-        let outs = exe_red.run_b(&args).unwrap();
+    b.bench(&format!("eval_forward_utrc20_b{}_l{}", reduced.batch, reduced.seq_len), || {
+        let outs = exe_red.execute(&dw, std::slice::from_ref(&tok)).unwrap();
         assert_eq!(outs.len(), 2);
     });
 
     // Decode step.
     let dec = model.decode_entry().unwrap().clone();
-    let exe_dec = rt.load_entry(&man, &dec).unwrap();
-    let nl = model.n_layer;
-    let di = model.d_inner;
-    let n = model.d_state;
-    let conv = HostTensor::zeros_f32(vec![nl, dec.batch, di, 3]);
-    let ssm = HostTensor::zeros_f32(vec![nl, dec.batch, di, n]);
+    let exe_dec = rt.load_entry(&man, &model, &dec).unwrap();
+    let (conv_shape, ssm_shape) = tor_ssm::runtime::decode_state_shapes(&model, dec.batch);
+    let conv = HostTensor::zeros_f32(conv_shape);
+    let ssm = HostTensor::zeros_f32(ssm_shape);
     let step_tok = HostTensor::i32(vec![dec.batch], vec![5; dec.batch]);
-    b.bench("decode_step_b4", || {
-        let tb = rt.upload(&step_tok).unwrap();
-        let cb = rt.upload(&conv).unwrap();
-        let sb = rt.upload(&ssm).unwrap();
-        let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
-        args.push(&tb);
-        args.push(&cb);
-        args.push(&sb);
-        let outs = exe_dec.run_b(&args).unwrap();
+    b.bench(&format!("decode_step_b{}", dec.batch), || {
+        let outs = exe_dec
+            .execute(&dw, &[step_tok.clone(), conv.clone(), ssm.clone()])
+            .unwrap();
         assert_eq!(outs.len(), 3);
     });
 

@@ -1,21 +1,22 @@
 //! End-to-end serving throughput (Figures 4/6 machinery as a bench target):
 //! prefill + decode through the Engine for dense vs UTRC variants.
 //! REPRO_BENCH_GEN controls generated tokens (default 16 — keep `cargo
-//! bench` fast; the figures use 100 via `repro figure 4`).
+//! bench` fast; the figures use 100 via `repro figure 4`). Runs against the
+//! synthetic fixture on the reference backend when no artifacts exist.
 
 use tor_ssm::bench::harness::Bench;
 use tor_ssm::coordinator::engine::Engine;
 use tor_ssm::coordinator::Request;
-use tor_ssm::manifest::Manifest;
+use tor_ssm::fixtures;
 use tor_ssm::runtime::Runtime;
 use tor_ssm::train::load_best_weights;
 
 fn main() {
     let artifacts = tor_ssm::artifacts_dir();
-    let man = match Manifest::load(&artifacts) {
-        Ok(m) => m,
+    let (man, synthetic) = match fixtures::manifest_or_fixture(&artifacts) {
+        Ok(v) => v,
         Err(e) => {
-            println!("SKIP throughput bench: {e:#} (run `make artifacts`)");
+            println!("SKIP throughput bench: {e:#}");
             return;
         }
     };
@@ -23,17 +24,31 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(16);
-    let rt = Runtime::cpu().expect("pjrt cpu");
-    let model = man.model("mamba-small").expect("model").clone();
+    let rt = Runtime::cpu().expect("default backend");
+    println!(
+        "throughput bench on {} ({})",
+        rt.platform(),
+        if synthetic { "synthetic fixture" } else { "real artifacts" }
+    );
+    let model_name = man.models.keys().next().expect("models").clone();
+    let model = man.model(&model_name).expect("model").clone();
     let (w, _) = load_best_weights(&man, &model).expect("weights");
 
     let mut b = Bench::with_iters("throughput", 1, 5);
     for variant in ["dense", "utrc@0.1", "utrc@0.2", "utrc@0.3"] {
-        let engine = Engine::new(&rt, &man, &model, &w, variant).expect("engine");
+        let engine = match Engine::new(&rt, &man, &model, &w, variant) {
+            Ok(e) => e,
+            Err(err) => {
+                println!("skip {variant}: {err:#}");
+                continue;
+            }
+        };
         let reqs: Vec<Request> = (0..engine.batch)
             .map(|i| Request {
                 id: i as u64,
-                prompt: (0..engine.prefill_len).map(|t| (t % 1000) as i32).collect(),
+                prompt: (0..engine.prefill_len)
+                    .map(|t| (t % model.vocab_size) as i32)
+                    .collect(),
                 gen_tokens,
                 variant: variant.to_string(),
                 arrived_us: 0,
@@ -41,7 +56,7 @@ fn main() {
             .collect();
         let total_tokens = engine.batch * (engine.prefill_len + gen_tokens);
         b.bench_throughput(&format!("serve_batch_{variant}"), total_tokens, || {
-            let resp = engine.serve_batch(&rt, &reqs).unwrap();
+            let resp = engine.serve_batch(&reqs).unwrap();
             assert_eq!(resp.len(), reqs.len());
         });
     }

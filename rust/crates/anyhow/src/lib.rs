@@ -1,0 +1,225 @@
+//! Vendored minimal subset of the `anyhow` API.
+//!
+//! This offline image cannot reach crates.io, so the workspace vendors the
+//! slice of `anyhow` the codebase actually uses: [`Error`], [`Result`],
+//! the [`Context`] extension trait for `Result` and `Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Semantics follow the real crate:
+//!
+//! * `Display` prints the outermost context only;
+//! * alternate `Display` (`{:#}`) prints the whole chain, outermost first,
+//!   separated by `": "`;
+//! * any `E: std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?`.
+//!
+//! Not implemented (unused here): backtraces, downcasting, `Error::chain`.
+
+use std::fmt;
+
+/// A context-carrying error. Frames are ordered outermost-first; the last
+/// frame is the root cause.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+/// `anyhow`-style result alias with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.frames.join(": "))
+        } else {
+            f.write_str(self.frames.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.frames.join(": "))
+    }
+}
+
+// Like the real crate: a blanket conversion from any std error. `Error`
+// itself deliberately does NOT implement `std::error::Error`, which is what
+// keeps this impl coherent next to core's reflexive `From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+mod private {
+    /// Sealed helper unifying "a std error" and "an anyhow::Error" so that
+    /// `Context` can be implemented for `Result` over both (the same trick
+    /// the real crate uses with its internal `ext::StdError`).
+    pub trait ErrLike {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E> ErrLike for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::msg(self)
+        }
+    }
+
+    impl ErrLike for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: private::ErrLike> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().context(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err()
+            .context("loading manifest");
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: reading config: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("key absent").unwrap_err();
+        assert_eq!(format!("{e}"), "key absent");
+        let w: Option<u32> = Some(7);
+        assert_eq!(w.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{:#}", inner().unwrap_err()), "missing file");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+        let e = anyhow!("coded {}", 42);
+        assert_eq!(format!("{e}"), "coded 42");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("root")
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root");
+    }
+}

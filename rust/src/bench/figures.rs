@@ -165,9 +165,9 @@ pub fn figure_throughput(ctx: &mut Ctx, small: bool, gen_tokens: usize) -> Resul
                 })
                 .collect();
             // Warmup (compile+cache), then measure.
-            engine.serve_batch(&ctx.rt, &reqs)?;
+            engine.serve_batch(&reqs)?;
             let t0 = std::time::Instant::now();
-            let resp = engine.serve_batch(&ctx.rt, &reqs)?;
+            let resp = engine.serve_batch(&reqs)?;
             let wall = t0.elapsed().as_secs_f64();
             let gen_total: usize = resp.iter().map(|r| r.generated.len()).sum();
             let tps = gen_total as f64 / wall;

@@ -78,7 +78,10 @@ use crate::runtime::{HostTensor, Runtime, Weights};
 /// Execute the dense eval module with init weights on the deterministic
 /// token pattern from `aot.export_golden` and compare the strided logits
 /// slice bit-tolerantly. This pins the whole AOT bridge: HLO text parse,
-/// compile, param upload order, and numerics.
+/// compile, param upload order, and numerics — so it is meaningful on the
+/// `pjrt` backend (`repro golden --backend pjrt`); the reference backend
+/// computes a different (interpreted) model and will not match a
+/// python-lowered fixture.
 pub fn golden_check(rt: &Runtime, man: &Manifest) -> Result<String> {
     let text = std::fs::read_to_string(man.path("golden.json")).context("golden.json")?;
     let g = crate::util::json::Json::parse(&text)?;
@@ -96,17 +99,15 @@ pub fn golden_check(rt: &Runtime, man: &Manifest) -> Result<String> {
 
     let me = man.model(&model)?.clone();
     let entry = me.find_eval("dense", 0.0, None, None, None, None)?;
-    let exe = rt.load_entry(man, entry)?;
+    let exe = rt.load_entry(man, &me, entry)?;
     let w = Weights::load_init(man, &me)?;
-    let dw = rt.upload_weights(man, &me, &w)?;
+    let dw = rt.upload_weights(&me, &w)?;
 
     let tokens: Vec<i32> = (0..batch * seq_len)
         .map(|i| ((i as i64 * 7) % me.vocab_size as i64) as i32)
         .collect();
-    let tok = rt.upload(&HostTensor::i32(vec![batch, seq_len], tokens))?;
-    let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
-    args.push(&tok);
-    let outs = exe.run_b(&args)?;
+    let tok = HostTensor::i32(vec![batch, seq_len], tokens);
+    let outs = exe.execute(&dw, &[tok])?;
     let logits = outs[0].as_f32()?;
     let v = me.vocab_size;
 

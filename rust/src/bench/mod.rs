@@ -33,9 +33,20 @@ pub struct Ctx {
 }
 
 impl Ctx {
+    /// Context on the default (reference) backend.
     pub fn new(artifacts: &str, max_items: usize, fresh: bool) -> Result<Ctx> {
+        Ctx::with_backend(artifacts, max_items, fresh, "reference")
+    }
+
+    /// Context on a named backend ("reference" | "pjrt").
+    pub fn with_backend(
+        artifacts: &str,
+        max_items: usize,
+        fresh: bool,
+        backend: &str,
+    ) -> Result<Ctx> {
         let man = Manifest::load(artifacts)?;
-        let rt = Runtime::cpu()?;
+        let rt = Runtime::from_name(backend)?;
         let tok = Tokenizer::load(man.path(&man.vocab_file))?;
         let tasks = load_tasks(man.path(&man.tasks_file))?;
         Ok(Ctx { rt, man, tok, tasks, max_items, fresh, weights: HashMap::new() })
@@ -52,7 +63,7 @@ impl Ctx {
                 );
             }
             let fp = format!("{}:{:.6}", if trained { "ckpt" } else { "init" }, w.mean_abs());
-            let dw = self.rt.upload_weights(&self.man, &me, &w)?;
+            let dw = self.rt.upload_weights(&me, &w)?;
             self.weights.insert(model.to_string(), (dw, fp));
         }
         Ok(self.weights[model].1.clone())

@@ -1,11 +1,13 @@
-//! Execution lane for one model variant: prefill → decode loop.
+//! Execution lane for one model variant: prefill → decode loop, generic
+//! over the runtime [`Backend`](crate::runtime::Backend).
 //!
-//! Weights are uploaded once and stay device-resident (`execute_b`); the
-//! decode loop round-trips the (small, fixed-size) SSM states through the
-//! host each step — see DESIGN.md §Perf for the measured cost and why this
-//! is acceptable on the CPU PJRT client (the crate's execute API returns the
-//! root tuple as a single buffer, so state cannot stay device-side without
-//! input/output aliasing, which our HLO does not declare).
+//! Weights are uploaded once at engine construction and stay backend-
+//! resident; the decode loop round-trips the (small, fixed-size) SSM states
+//! through the host each step — see DESIGN.md §Perf for the measured cost
+//! and why this is acceptable on the CPU paths (the PJRT execute API
+//! returns the root tuple as a single buffer, so state cannot stay
+//! device-side without input/output aliasing, which our HLO does not
+//! declare; the reference backend is host-resident anyway).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -20,8 +22,8 @@ use super::{Request, Response};
 pub struct Engine {
     pub variant: String,
     pub model_name: String,
-    prefill: Arc<Executable>,
-    decode: Arc<Executable>,
+    prefill: Arc<dyn Executable>,
+    decode: Arc<dyn Executable>,
     weights: DeviceWeights,
     pub batch: usize,
     pub prefill_len: usize,
@@ -42,12 +44,10 @@ impl Engine {
         let (method, ratio) = parse_variant(variant)?;
         let pf = model.prefill_entry(&method, ratio)?;
         let dec = model.decode_entry()?;
-        let prefill = rt.load_entry(man, pf)?;
-        let decode = rt.load_entry(man, dec)?;
-        let dw = rt.upload_weights(man, model, weights)?;
-        // Decode-state shapes come from the manifest's decode entry metadata.
-        let conv_shape = decode_state_shape(man, model, true)?;
-        let ssm_shape = decode_state_shape(man, model, false)?;
+        let prefill = rt.load_entry(man, model, pf)?;
+        let decode = rt.load_entry(man, model, dec)?;
+        let dw = rt.upload_weights(model, weights)?;
+        let (conv_shape, ssm_shape) = crate::runtime::decode_state_shapes(model, dec.batch);
         Ok(Engine {
             variant: variant.to_string(),
             model_name: model.name.clone(),
@@ -64,7 +64,7 @@ impl Engine {
 
     /// Serve one batch of requests (padded internally to the static batch).
     /// Returns one Response per request, in order.
-    pub fn serve_batch(&self, rt: &Runtime, reqs: &[Request]) -> Result<Vec<Response>> {
+    pub fn serve_batch(&self, reqs: &[Request]) -> Result<Vec<Response>> {
         ensure!(!reqs.is_empty(), "empty batch");
         ensure!(reqs.len() <= self.batch, "batch overflow: {} > {}", reqs.len(), self.batch);
         let now = Instant::now();
@@ -78,22 +78,23 @@ impl Engine {
         }
         flat.resize(self.batch * self.prefill_len, crate::tokenizer::PAD as i32);
         let tokens = HostTensor::i32(vec![self.batch, self.prefill_len], flat);
-        let tok_buf = rt.upload(&tokens)?;
-        let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
-        args.push(&tok_buf);
-        let outs = self.prefill.run_b(&args).context("prefill")?;
+        let mut outs = self.prefill.execute(&self.weights, &[tokens]).context("prefill")?;
         ensure!(outs.len() == 3, "prefill must return (logits, conv, ssm)");
+        let mut ssm = outs.pop().unwrap();
+        let mut conv = outs.pop().unwrap();
+        let mut logits = outs.pop().unwrap();
+        ensure!(
+            conv.shape == self.conv_shape,
+            "conv state shape {:?} != {:?}",
+            conv.shape,
+            self.conv_shape
+        );
+        ensure!(ssm.shape == self.ssm_shape, "ssm state shape mismatch");
         let prefill_us = now.elapsed().as_micros() as u64;
 
         // ---- decode loop ----
         let t_dec = Instant::now();
         let gen_tokens = reqs.iter().map(|r| r.gen_tokens).max().unwrap_or(0);
-        let mut logits = outs[0].clone();
-        let mut conv = outs[1].clone();
-        let mut ssm = outs[2].clone();
-        ensure!(conv.shape == self.conv_shape, "conv state shape {:?} != {:?}", conv.shape, self.conv_shape);
-        ensure!(ssm.shape == self.ssm_shape, "ssm state shape mismatch");
-
         let mut generated: Vec<Vec<i32>> = vec![Vec::new(); reqs.len()];
         for _step in 0..gen_tokens {
             // Greedy sample from last logits.
@@ -116,18 +117,14 @@ impl Engine {
             }
             // Step.
             let tok_t = HostTensor::i32(vec![self.batch], next);
-            let tok_b = rt.upload(&tok_t)?;
-            let conv_b = rt.upload(&conv)?;
-            let ssm_b = rt.upload(&ssm)?;
-            let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
-            args.push(&tok_b);
-            args.push(&conv_b);
-            args.push(&ssm_b);
-            let outs = self.decode.run_b(&args).context("decode step")?;
+            let mut outs = self
+                .decode
+                .execute(&self.weights, &[tok_t, conv, ssm])
+                .context("decode step")?;
             ensure!(outs.len() == 3, "decode must return (logits, conv, ssm)");
-            logits = outs[0].clone();
-            conv = outs[1].clone();
-            ssm = outs[2].clone();
+            ssm = outs.pop().unwrap();
+            conv = outs.pop().unwrap();
+            logits = outs.pop().unwrap();
         }
         let decode_us = t_dec.elapsed().as_micros() as u64;
 
@@ -154,27 +151,6 @@ pub fn parse_variant(variant: &str) -> Result<(String, f64)> {
         .split_once('@')
         .with_context(|| format!("variant {variant:?} must be 'dense' or 'method@ratio'"))?;
     Ok((m.to_string(), r.parse::<f64>().context("bad ratio")?))
-}
-
-fn decode_state_shape(_man: &Manifest, model: &ModelEntry, conv: bool) -> Result<Vec<usize>> {
-    let e = model.decode_entry()?;
-    // Shapes recorded by aot.py in the decode entry.
-    let key = if conv { "conv_state_shape" } else { "ssm_state_shape" };
-    // HloEntry doesn't carry arbitrary fields; re-read from the raw manifest
-    // is avoidable: reconstruct from dims instead.
-    let _ = key;
-    let nl = model.n_layer;
-    let b = e.batch;
-    let di = model.d_inner;
-    let n = model.d_state;
-    let k = 4; // d_conv
-    Ok(if model.arch == "mamba" {
-        if conv { vec![nl, b, di, k - 1] } else { vec![nl, b, di, n] }
-    } else if conv {
-        vec![nl, b, di + 2 * n, k - 1]
-    } else {
-        vec![nl, b, di / 64, 64, n]
-    })
 }
 
 #[cfg(test)]

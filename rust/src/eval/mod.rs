@@ -17,6 +17,10 @@ use crate::tokenizer::Tokenizer;
 use crate::util::pool::par_map;
 use scoring::{Scheme, SeqLogits};
 
+// The harness is backend-agnostic: every forward goes through
+// `Executable::execute` with backend-resident weights, so the same code
+// drives AOT-compiled modules (pjrt) and the hermetic reference backend.
+
 /// One encoded scoring request: a fixed-length token buffer plus the span
 /// of positions (original frame) belonging to the choice.
 #[derive(Debug, Clone)]
@@ -132,12 +136,13 @@ pub struct ChoiceScore {
 pub fn run_scoring(
     rt: &Runtime,
     man: &Manifest,
+    model: &ModelEntry,
     entry: &HloEntry,
     weights: &DeviceWeights,
     seqs: &[EncodedSeq],
     vocab: usize,
 ) -> Result<Vec<ChoiceScore>> {
-    let exe = rt.load_entry(man, entry)?;
+    let exe = rt.load_entry(man, model, entry)?;
     let (b, l, out_len) = (entry.batch, entry.seq_len, entry.out_len);
     let mut scores = vec![ChoiceScore::default(); seqs.len()];
 
@@ -147,12 +152,8 @@ pub fn run_scoring(
             flat.extend_from_slice(&s.tokens);
         }
         flat.resize(b * l, crate::tokenizer::PAD as i32); // ragged tail batch
-        let tokens = HostTensor::i32(vec![b, l], flat).to_literal()?;
-
-        let mut args: Vec<&xla::PjRtBuffer> = weights.buffers.iter().collect();
-        let tok_buf = rt.upload(&HostTensor::from_literal(&tokens)?)?;
-        args.push(&tok_buf);
-        let outs = exe.run_b(&args).context("eval forward")?;
+        let tokens = HostTensor::i32(vec![b, l], flat);
+        let outs = exe.execute(weights, &[tokens]).context("eval forward")?;
         ensure!(outs.len() == 2, "eval executable must return (logits, kept)");
         let logits = outs[0].as_f32()?;
         let kept = outs[1].as_i32()?;
@@ -287,7 +288,7 @@ pub fn evaluate(
 ) -> Result<EvalResult> {
     let t0 = std::time::Instant::now();
     let seqs = encode_tasks(tok, tasks, entry.seq_len, max_items)?;
-    let scores = run_scoring(rt, man, entry, weights, &seqs, model.vocab_size)?;
+    let scores = run_scoring(rt, man, model, entry, weights, &seqs, model.vocab_size)?;
     let tasks_out = aggregate(tasks, &seqs, &scores, max_items);
     Ok(EvalResult {
         model: model.name.clone(),

@@ -1,0 +1,483 @@
+//! Deterministic synthetic fixtures: a complete, self-contained artifact
+//! directory (manifest, vocab, task sets, corpus, reference-layout weights)
+//! generated from a seed via [`crate::util::rng::Rng`] — no Python, no
+//! `make artifacts`, no network.
+//!
+//! The generated manifest speaks the exact same contract as
+//! `python/compile/aot.py`'s, but its weight blobs follow the **reference
+//! param layout** (`embedding`, `layers.{l}.*`, `norm_f`) interpreted by
+//! [`crate::runtime::reference`]. That makes the coordinator's
+//! prefill→decode loop, the eval harness, and the bench harness runnable
+//! hermetically; it does NOT make fixtures drop-in artifacts for the pjrt
+//! backend (those need real AOT exports).
+//!
+//! Two substrate models are emitted: `ref-mamba` (arch `mamba`) and
+//! `ref-mamba2` (arch `mamba2`), each with dense + UTRC eval variants,
+//! dense + UTRC prefill variants, a decode step, and a train-step entry
+//! (the latter compiles but only executes on the pjrt backend).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::manifest::Manifest;
+use crate::reduction::{solve_schedule, Arch, ModelDims, SchedulePlan};
+use crate::runtime::reference::D_CONV;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Rng;
+
+/// Geometry of one synthetic fixture set. The defaults are sized so the
+/// whole hermetic test suite stays fast in debug builds.
+#[derive(Debug, Clone)]
+pub struct FixtureSpec {
+    pub seed: u64,
+    /// Non-special vocabulary words (total vocab = this + 4 specials).
+    pub vocab_words: usize,
+    pub items_per_task: usize,
+    pub corpus_tokens: usize,
+    pub eval_batch: usize,
+    pub eval_seq_len: usize,
+    pub prefill_batch: usize,
+    pub prefill_seq_len: usize,
+    pub train_batch: usize,
+    pub train_seq_len: usize,
+}
+
+impl Default for FixtureSpec {
+    fn default() -> FixtureSpec {
+        FixtureSpec {
+            seed: 42,
+            vocab_words: 120,
+            items_per_task: 3,
+            corpus_tokens: 8192,
+            eval_batch: 4,
+            eval_seq_len: 48,
+            prefill_batch: 2,
+            prefill_seq_len: 32,
+            train_batch: 2,
+            train_seq_len: 32,
+        }
+    }
+}
+
+/// The two fixture substrates: (name, arch). Dims are shared: d_model 32,
+/// 4 layers, d_state 8, expand 2 (d_inner 64 — one mamba2 head).
+const MODELS: [(&str, &str); 2] = [("ref-mamba", "mamba"), ("ref-mamba2", "mamba2")];
+const D_MODEL: usize = 32;
+const N_LAYER: usize = 4;
+const D_STATE: usize = 8;
+const LOCATIONS: [usize; 2] = [1, 2];
+const EVAL_RATIOS: [f64; 2] = [0.10, 0.20];
+const PREFILL_RATIOS: [f64; 3] = [0.10, 0.20, 0.30];
+
+/// Generate a fixture set under `dir` (created if needed) and load it back
+/// through the ordinary [`Manifest`] path.
+pub fn generate(dir: &Path, spec: &FixtureSpec) -> Result<Manifest> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating fixture dir {dir:?}"))?;
+    let vocab_size = 4 + spec.vocab_words;
+    let mut rng = Rng::new(spec.seed);
+
+    // -- vocab ---------------------------------------------------------------
+    let words: Vec<String> = (0..spec.vocab_words).map(|i| format!("w{i:03}")).collect();
+    let mut vocab: Vec<Json> = ["<pad>", "<unk>", "<bos>", "<eos>"]
+        .iter()
+        .map(|w| s(w))
+        .collect();
+    vocab.extend(words.iter().map(|w| s(w)));
+    let vocab_json = obj(vec![("vocab", Json::Arr(vocab))]);
+    std::fs::write(dir.join("vocab.json"), vocab_json.to_string())?;
+
+    // -- task sets -----------------------------------------------------------
+    let tasks_json = gen_tasks(&mut rng, &words, spec.items_per_task);
+    std::fs::write(dir.join("tasks.json"), tasks_json.to_string())?;
+
+    // -- corpus --------------------------------------------------------------
+    for file in ["train.bin", "val.bin"] {
+        let mut bytes = Vec::with_capacity(spec.corpus_tokens * 4);
+        for _ in 0..spec.corpus_tokens {
+            let t = 4 + rng.below(vocab_size - 4) as i32;
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        std::fs::write(dir.join(file), bytes)?;
+    }
+
+    // -- models: weights + manifest entries ---------------------------------
+    let mut models = BTreeMap::new();
+    for (name, arch) in MODELS {
+        let (params_json, param_count) = write_weights(dir, &mut rng, name, arch, vocab_size)?;
+        let hlo = gen_hlo_entries(name, arch, vocab_size, spec)?;
+        let config = obj(vec![
+            ("d_model", num(D_MODEL as f64)),
+            ("n_layer", num(N_LAYER as f64)),
+            ("d_state", num(D_STATE as f64)),
+            ("expand", num(2.0)),
+            ("vocab_size", num(vocab_size as f64)),
+        ]);
+        let model = obj(vec![
+            ("arch", s(arch)),
+            ("config", config),
+            ("param_count", num(param_count as f64)),
+            ("init_weights", s(&format!("init_{name}.bin"))),
+            ("params", params_json),
+            ("hlo", hlo),
+        ]);
+        models.insert(name.to_string(), model);
+    }
+
+    let manifest = obj(vec![
+        (
+            "data",
+            obj(vec![
+                ("vocab", s("vocab.json")),
+                ("tasks", s("tasks.json")),
+                ("train", s("train.bin")),
+                ("val", s("val.bin")),
+            ]),
+        ),
+        (
+            "eval",
+            obj(vec![
+                ("batch", num(spec.eval_batch as f64)),
+                ("seq_len", num(spec.eval_seq_len as f64)),
+            ]),
+        ),
+        (
+            "prefill",
+            obj(vec![
+                ("batch", num(spec.prefill_batch as f64)),
+                ("seq_len", num(spec.prefill_seq_len as f64)),
+            ]),
+        ),
+        ("decode", obj(vec![("batch", num(spec.prefill_batch as f64))])),
+        (
+            "train",
+            obj(vec![
+                ("batch", num(spec.train_batch as f64)),
+                ("seq_len", num(spec.train_seq_len as f64)),
+                ("total_steps", num(100.0)),
+            ]),
+        ),
+        ("models", Json::Obj(models)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
+
+    Manifest::load(dir).context("reloading generated fixture manifest")
+}
+
+/// [`generate`] with the default [`FixtureSpec`].
+pub fn generate_default(dir: &Path) -> Result<Manifest> {
+    generate(dir, &FixtureSpec::default())
+}
+
+/// Load the artifacts manifest if present; otherwise generate (once) and use
+/// a synthetic fixture under the system temp dir. Returns `(manifest, true)`
+/// when running on the synthetic fixture.
+pub fn manifest_or_fixture(artifacts: &str) -> Result<(Manifest, bool)> {
+    if let Ok(man) = Manifest::load(artifacts) {
+        return Ok((man, false));
+    }
+    let dir = default_fixture_dir();
+    let man = if dir.join("manifest.json").exists() {
+        Manifest::load(&dir).or_else(|_| generate_default(&dir))?
+    } else {
+        generate_default(&dir)?
+    };
+    Ok((man, true))
+}
+
+/// Fixture layout format: BUMP THIS whenever `reference_params`, the model
+/// dims/consts, or the `FixtureSpec` defaults change shape — it keys the
+/// shared temp-dir cache below, so stale fixtures from older code are never
+/// silently reused.
+pub const FIXTURE_FORMAT: u32 = 1;
+
+/// Shared location for the on-demand fixture used by benches/examples. The
+/// crate version + [`FIXTURE_FORMAT`] in the name bust the cache across
+/// layout changes; tests wanting full isolation generate into their own
+/// directories instead.
+pub fn default_fixture_dir() -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "tor-ssm-synthetic-fixture-{}-f{FIXTURE_FORMAT}",
+        env!("CARGO_PKG_VERSION")
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// internals
+// ---------------------------------------------------------------------------
+
+fn arr_usize(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| num(x as f64)).collect())
+}
+
+fn gen_tasks(rng: &mut Rng, words: &[String], items: usize) -> Json {
+    let mut map = BTreeMap::new();
+    for name in crate::data::TASK_ORDER {
+        let mut arr = Vec::new();
+        for _ in 0..items {
+            let ctx_len = 6 + rng.below(6);
+            let context: Vec<&str> = (0..ctx_len)
+                .map(|_| words[rng.below(words.len())].as_str())
+                .collect();
+            let context = context.join(" ");
+            let item = if name == "s_lambada" {
+                let target = words[rng.below(words.len())].clone();
+                obj(vec![
+                    ("context", s(&context)),
+                    ("choices", Json::Arr(vec![s(&target)])),
+                    ("answer", num(0.0)),
+                    ("target", s(&target)),
+                ])
+            } else {
+                let nc = 2 + rng.below(2);
+                let choices: Vec<Json> = (0..nc)
+                    .map(|_| {
+                        let cl = 1 + rng.below(2);
+                        let c: Vec<&str> =
+                            (0..cl).map(|_| words[rng.below(words.len())].as_str()).collect();
+                        s(&c.join(" "))
+                    })
+                    .collect();
+                let answer = rng.below(nc);
+                obj(vec![
+                    ("context", s(&context)),
+                    ("choices", Json::Arr(choices)),
+                    ("answer", num(answer as f64)),
+                    ("target", s("")),
+                ])
+            };
+            arr.push(item);
+        }
+        map.insert(name.to_string(), Json::Arr(arr));
+    }
+    Json::Obj(map)
+}
+
+/// The reference backend's param layout for one model, in blob order.
+fn reference_params(arch: &str, vocab: usize) -> Vec<(String, Vec<usize>)> {
+    let (d, n) = (D_MODEL, D_STATE);
+    let di = 2 * d;
+    let mamba2 = arch != "mamba";
+    let conv_ch = if mamba2 { di + 2 * n } else { di };
+    let pw = if mamba2 { 2 * di + 2 * n } else { 2 * di };
+    let mut out: Vec<(String, Vec<usize>)> = vec![("embedding".to_string(), vec![vocab, d])];
+    for l in 0..N_LAYER {
+        out.push((format!("layers.{l}.norm"), vec![d]));
+        out.push((format!("layers.{l}.in_proj"), vec![d, pw]));
+        out.push((format!("layers.{l}.conv_w"), vec![conv_ch, D_CONV]));
+        out.push((format!("layers.{l}.conv_b"), vec![conv_ch]));
+        if !mamba2 {
+            out.push((format!("layers.{l}.bc_proj"), vec![di, 2 * n]));
+        }
+        out.push((format!("layers.{l}.a_log"), vec![di, n]));
+        out.push((format!("layers.{l}.d_skip"), vec![di]));
+        out.push((format!("layers.{l}.out_proj"), vec![di, d]));
+    }
+    out.push(("norm_f".to_string(), vec![d]));
+    out
+}
+
+fn init_values(rng: &mut Rng, name: &str, shape: &[usize]) -> Vec<f32> {
+    let count: usize = shape.iter().product();
+    if name.ends_with(".norm") || name == "norm_f" {
+        return vec![1.0; count];
+    }
+    if name.ends_with("conv_b") {
+        return vec![0.0; count];
+    }
+    if name.ends_with("d_skip") {
+        return vec![0.1; count];
+    }
+    if name.ends_with("a_log") {
+        return (0..count).map(|_| rng.normal() as f32).collect();
+    }
+    let scale = if name.ends_with("conv_w") {
+        0.3
+    } else {
+        // projections + embedding: variance-preserving in the fan-in
+        1.0 / (shape[0] as f64).sqrt()
+    };
+    (0..count).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+/// Write the init weight blob for one model; returns (params metadata json,
+/// total param count).
+fn write_weights(
+    dir: &Path,
+    rng: &mut Rng,
+    name: &str,
+    arch: &str,
+    vocab: usize,
+) -> Result<(Json, u64)> {
+    let defs = reference_params(arch, vocab);
+    let mut blob: Vec<u8> = Vec::new();
+    let mut params = Vec::with_capacity(defs.len());
+    let mut offset = 0usize;
+    let mut count = 0u64;
+    for (pname, shape) in &defs {
+        let values = init_values(rng, pname, shape);
+        let bytes = values.len() * 4;
+        for v in &values {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        params.push(obj(vec![
+            ("name", s(pname)),
+            ("shape", arr_usize(shape)),
+            ("offset", num(offset as f64)),
+            ("bytes", num(bytes as f64)),
+        ]));
+        offset += bytes;
+        count += values.len() as u64;
+    }
+    std::fs::write(dir.join(format!("init_{name}.bin")), blob)?;
+    Ok((Json::Arr(params), count))
+}
+
+fn dims_for(name: &str, arch: &str, vocab: usize) -> ModelDims {
+    ModelDims {
+        name: name.to_string(),
+        arch: if arch == "mamba" { Arch::Mamba } else { Arch::Mamba2 },
+        vocab_size: vocab,
+        d_model: D_MODEL,
+        n_layer: N_LAYER,
+        d_state: D_STATE,
+        expand: 2,
+        d_conv: D_CONV,
+        headdim: 64,
+        chunk: 64,
+    }
+}
+
+fn reduction_json(method: &str, ratio: f64, locations: &[usize]) -> Json {
+    obj(vec![
+        ("method", s(method)),
+        ("flops_reduction", num(ratio)),
+        ("locations", arr_usize(locations)),
+        ("metric", s("clip")),
+        ("q_hidden", num(0.5)),
+        ("q_residual", num(0.0)),
+    ])
+}
+
+fn plan_json(plan: &SchedulePlan) -> Json {
+    obj(vec![
+        ("seq_len", num(plan.seq_len as f64)),
+        ("locations", arr_usize(&plan.locations)),
+        ("seg_lens", arr_usize(&plan.seg_lens)),
+        ("removed", arr_usize(&plan.removed)),
+        ("flops_reduction", num(plan.flops_reduction)),
+    ])
+}
+
+fn gen_hlo_entries(name: &str, arch: &str, vocab: usize, spec: &FixtureSpec) -> Result<Json> {
+    let dims = dims_for(name, arch, vocab);
+    let mut hlo = BTreeMap::new();
+
+    // Eval: dense + UTRC ratios.
+    hlo.insert(
+        "dense".to_string(),
+        obj(vec![
+            ("file", s(&format!("hlo/{name}.dense.hlo.txt"))),
+            ("kind", s("eval")),
+            ("batch", num(spec.eval_batch as f64)),
+            ("seq_len", num(spec.eval_seq_len as f64)),
+            ("out_len", num(spec.eval_seq_len as f64)),
+            ("reduction", reduction_json("dense", 0.0, &[])),
+        ]),
+    );
+    for ratio in EVAL_RATIOS {
+        let plan = solve_schedule(&dims, spec.eval_seq_len, &LOCATIONS, ratio)
+            .with_context(|| format!("{name}: eval schedule @{ratio}"))?;
+        let tag = format!("utrc_r{:02}", (ratio * 100.0).round() as usize);
+        hlo.insert(
+            tag.clone(),
+            obj(vec![
+                ("file", s(&format!("hlo/{name}.{tag}.hlo.txt"))),
+                ("kind", s("eval")),
+                ("batch", num(spec.eval_batch as f64)),
+                ("seq_len", num(spec.eval_seq_len as f64)),
+                ("out_len", num(plan.final_len() as f64)),
+                ("reduction", reduction_json("utrc", ratio, &LOCATIONS)),
+                ("plan", plan_json(&plan)),
+            ]),
+        );
+    }
+
+    // Prefill: dense + UTRC ratios.
+    hlo.insert(
+        "prefill_dense".to_string(),
+        obj(vec![
+            ("file", s(&format!("hlo/{name}.prefill_dense.hlo.txt"))),
+            ("kind", s("prefill")),
+            ("batch", num(spec.prefill_batch as f64)),
+            ("seq_len", num(spec.prefill_seq_len as f64)),
+            ("reduction", reduction_json("dense", 0.0, &[])),
+        ]),
+    );
+    for ratio in PREFILL_RATIOS {
+        let plan = solve_schedule(&dims, spec.prefill_seq_len, &LOCATIONS, ratio)
+            .with_context(|| format!("{name}: prefill schedule @{ratio}"))?;
+        let tag = format!("prefill_utrc_r{:02}", (ratio * 100.0).round() as usize);
+        hlo.insert(
+            tag.clone(),
+            obj(vec![
+                ("file", s(&format!("hlo/{name}.{tag}.hlo.txt"))),
+                ("kind", s("prefill")),
+                ("batch", num(spec.prefill_batch as f64)),
+                ("seq_len", num(spec.prefill_seq_len as f64)),
+                ("reduction", reduction_json("utrc", ratio, &LOCATIONS)),
+                ("plan", plan_json(&plan)),
+            ]),
+        );
+    }
+
+    // Decode + train steps.
+    hlo.insert(
+        "decode_step".to_string(),
+        obj(vec![
+            ("file", s(&format!("hlo/{name}.decode.hlo.txt"))),
+            ("kind", s("decode")),
+            ("batch", num(spec.prefill_batch as f64)),
+            ("seq_len", num(1.0)),
+        ]),
+    );
+    hlo.insert(
+        "train_step".to_string(),
+        obj(vec![
+            ("file", s(&format!("hlo/{name}.train.hlo.txt"))),
+            ("kind", s("train")),
+            ("batch", num(spec.train_batch as f64)),
+            ("seq_len", num(spec.train_seq_len as f64)),
+        ]),
+    );
+    Ok(Json::Obj(hlo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_param_layouts_cover_both_archs() {
+        let mamba = reference_params("mamba", 124);
+        let mamba2 = reference_params("mamba2", 124);
+        assert!(mamba.iter().any(|(n, _)| n == "layers.0.bc_proj"));
+        assert!(!mamba2.iter().any(|(n, _)| n.contains("bc_proj")));
+        // mamba2 widens conv + in_proj by 2*d_state
+        let conv = |defs: &[(String, Vec<usize>)]| {
+            defs.iter().find(|(n, _)| n == "layers.0.conv_w").unwrap().1[0]
+        };
+        assert_eq!(conv(&mamba2) - conv(&mamba), 2 * D_STATE);
+    }
+
+    #[test]
+    fn init_values_are_finite_and_scaled() {
+        let mut rng = Rng::new(1);
+        let v = init_values(&mut rng, "layers.0.in_proj", &[32, 128]);
+        assert_eq!(v.len(), 32 * 128);
+        assert!(v.iter().all(|x| x.is_finite()));
+        let norm = init_values(&mut rng, "layers.0.norm", &[32]);
+        assert!(norm.iter().all(|&x| x == 1.0));
+    }
+}

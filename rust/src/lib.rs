@@ -8,18 +8,41 @@
 //!   `python/compile/kernels/`, build-time only.
 //! * **L2** JAX Mamba/Mamba-2 models with the UTRC token-reduction graph
 //!   transform — `python/compile/`, AOT-lowered to HLO text.
-//! * **L3** this crate: PJRT runtime, serving coordinator (router/batcher/
-//!   state pool), zero-shot eval harness, trainer, and the bench harness
-//!   that regenerates every table and figure in the paper.
+//! * **L3** this crate: the pluggable execution layer ([`runtime`]), the
+//!   serving coordinator (router/batcher/state pool), zero-shot eval
+//!   harness, trainer, and the bench harness that regenerates every table
+//!   and figure in the paper.
 //!
-//! Python never runs at request time: `make artifacts` produces
-//! `artifacts/*.hlo.txt` + data once, and the `repro` binary is then
-//! self-contained.
+//! ## Backends
+//!
+//! Execution is abstracted behind [`runtime::Backend`] (compile a program
+//! spec → [`runtime::Executable`]; own weight residency):
+//!
+//! * `reference` *(default)* — a pure-Rust interpreter of the op set our
+//!   models need ([`runtime::reference`]). Fully hermetic: the whole test
+//!   suite, `repro demo`, and the bench harness run with **no `artifacts/`
+//!   directory, no Python, and no XLA**, against deterministic synthetic
+//!   fixtures from [`fixtures`].
+//! * `pjrt` *(cargo feature `pjrt`)* — the production AOT path
+//!   ([`runtime::pjrt`]): Python lowers models to HLO text once
+//!   (`make artifacts`), the PJRT client compiles and executes them.
+//!   Python never runs at request time; the `repro` binary is then
+//!   self-contained.
+//!
+//! Select at the CLI with `--backend reference|pjrt`. See README §Backends
+//! for the full testing story.
+
+// Lint policy: numeric-kernel style. The interpreter and scoring code index
+// heavily into flat buffers where explicit `for i in 0..n` loops mirror the
+// math; keep clippy strict everywhere else.
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_range_contains)]
+#![allow(clippy::inherent_to_string)] // util::json::Json::to_string predates the refactor
 
 pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod fixtures;
 pub mod manifest;
 pub mod reduction;
 pub mod runtime;

@@ -3,15 +3,20 @@
 //!
 //! ```text
 //! repro info                                # artifact + model inventory
-//! repro train --model mamba-small --steps 400
+//! repro demo                                # hermetic serve+eval on a synthetic fixture
+//! repro train --model mamba-small --steps 400 --backend pjrt
 //! repro train-all --steps 400               # all four models
 //! repro eval  --model mamba2-base --method utrc --ratio 0.2
 //! repro table 1|2|3|4|5|6 [--items 60] [--fresh]
 //! repro table all
 //! repro figure 1|3|4|5|6
-//! repro golden                               # rust-vs-python numerics check
+//! repro golden --backend pjrt               # rust-vs-python numerics check
 //! repro serve --requests 16 --policy cost-aware
 //! ```
+//!
+//! `--backend reference|pjrt` selects the execution backend (default:
+//! reference — pure Rust, hermetic). The pjrt backend additionally needs
+//! the `pjrt` cargo feature and real `make artifacts` exports.
 
 use anyhow::{bail, Context, Result};
 
@@ -40,14 +45,15 @@ fn run() -> Result<()> {
 
     match cmd {
         "info" => info(&artifacts),
+        "demo" => demo(&args),
         "train" => train(&args, &artifacts),
         "train-all" => train_all(&args, &artifacts),
         "eval" => eval_one(&args, &artifacts),
         "table" => table(&args, &artifacts),
         "figure" => figure(&args, &artifacts),
-        "golden" => golden(&artifacts),
+        "golden" => golden(&args, &artifacts),
         "serve" => serve(&args, &artifacts),
-        "help" | _ => {
+        _ => {
             println!("{}", HELP);
             Ok(())
         }
@@ -57,14 +63,20 @@ fn run() -> Result<()> {
 const HELP: &str = "repro — Rethinking Token Reduction for SSMs (EMNLP 2024) reproduction
 commands:
   info                         artifact inventory
-  train --model M --steps N    train one model via the AOT train step
+  demo                         hermetic serve+eval on a synthetic fixture (no artifacts)
+  train --model M --steps N    train one model via the AOT train step (pjrt backend)
   train-all --steps N          train all four models
   eval --model M --method X --ratio R [--items N]
   table 1..6|all [--items N] [--fresh]
   figure 1|3|4|5|6 [--gen-tokens N]
-  golden                       rust-vs-python numerics cross-check
+  golden                       rust-vs-python numerics cross-check (pjrt backend)
   serve --requests N [--policy explicit|least-loaded|cost-aware]
-common: --artifacts DIR (default ./artifacts, or $REPRO_ARTIFACTS)";
+common: --artifacts DIR (default ./artifacts, or $REPRO_ARTIFACTS)
+        --backend reference|pjrt (default reference; pjrt needs the cargo feature)";
+
+fn backend_of(args: &Args) -> String {
+    args.get_or("backend", "reference")
+}
 
 fn info(artifacts: &str) -> Result<()> {
     let man = Manifest::load(artifacts)?;
@@ -89,11 +101,71 @@ fn info(artifacts: &str) -> Result<()> {
     Ok(())
 }
 
+/// Hermetic end-to-end demo: generate a synthetic fixture, run the
+/// coordinator (router → batcher → engine prefill/decode) and the zero-shot
+/// eval harness on the reference backend. No artifacts, no Python, no XLA.
+fn demo(args: &Args) -> Result<()> {
+    let dir = match args.get("dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => tor_ssm::fixtures::default_fixture_dir(),
+    };
+    let man = tor_ssm::fixtures::generate_default(&dir)?;
+    println!("synthetic fixture: {:?} ({} models)", man.root, man.models.len());
+
+    let rt = Runtime::reference()?;
+    let model = args.get_or("model", "ref-mamba");
+    let me = man.model(&model)?.clone();
+    let (w, _) = load_best_weights(&man, &me)?;
+
+    // ---- serve a small trace through both lanes ----
+    let lanes = ["dense", "utrc@0.2"];
+    let engines: Vec<Engine> = lanes
+        .iter()
+        .map(|v| Engine::new(&rt, &man, &me, &w, v))
+        .collect::<Result<_>>()?;
+    let mut router = Router::new(Policy::CostAware { long_prompt: man.prefill_seq_len / 2 }, &lanes);
+    let mut batchers: Vec<Batcher> = engines
+        .iter()
+        .map(|e| Batcher::new(e.batch, std::time::Duration::from_millis(1)))
+        .collect();
+    let mut metrics = Metrics::default();
+    let n_requests = args.usize_or("requests", 6);
+    let gen_tokens = args.usize_or("gen-tokens", 4);
+    serve_trace(
+        &engines,
+        &lanes,
+        &mut router,
+        &mut batchers,
+        &mut metrics,
+        n_requests,
+        gen_tokens,
+        man.prefill_seq_len,
+        me.vocab_size,
+    )?;
+    println!("serve: {}", metrics.summary());
+
+    // ---- zero-shot eval, dense vs reduced ----
+    let items = args.usize_or("items", 2);
+    let mut ctx = Ctx::new(&dir.to_string_lossy(), items, true)?;
+    for (label, method, ratio) in [("dense", "dense", 0.0), ("utrc@0.2", "utrc", 0.20)] {
+        let e = ctx.find_eval_entry(&model, method, ratio, None, None, None, None)?;
+        let r = ctx.eval_variant(&model, &e)?;
+        println!(
+            "eval {label:<9} avg_acc={:.3} ppl={:.2} ({} seqs)",
+            r.avg_acc(Scheme::Truncated),
+            r.lambada_ppl(Scheme::Truncated),
+            r.sequences
+        );
+    }
+    println!("demo OK: coordinator + eval harness ran hermetically on the reference backend");
+    Ok(())
+}
+
 fn train(args: &Args, artifacts: &str) -> Result<()> {
     let man = Manifest::load(artifacts)?;
     let model = args.get("model").context("--model required")?;
     let steps = args.usize_or("steps", man.train_total_steps);
-    let rt = Runtime::cpu()?;
+    let rt = Runtime::from_name(&backend_of(args))?;
     let me = man.model(model)?.clone();
     let report = tor_ssm::train::train(&rt, &man, &me, steps, 42, 20)?;
     println!(
@@ -110,7 +182,7 @@ fn train(args: &Args, artifacts: &str) -> Result<()> {
 fn train_all(args: &Args, artifacts: &str) -> Result<()> {
     let man = Manifest::load(artifacts)?;
     let steps = args.usize_or("steps", man.train_total_steps);
-    let rt = Runtime::cpu()?;
+    let rt = Runtime::from_name(&backend_of(args))?;
     for name in man.models.keys().cloned().collect::<Vec<_>>() {
         let me = man.model(&name)?.clone();
         let ckpt = tor_ssm::train::checkpoint_path(&man, &name);
@@ -134,7 +206,7 @@ fn eval_one(args: &Args, artifacts: &str) -> Result<()> {
     let method = args.get_or("method", "dense");
     let ratio = args.f64_or("ratio", 0.0);
     let items = args.usize_or("items", 16);
-    let mut ctx = Ctx::new(artifacts, items, args.flag("fresh"))?;
+    let mut ctx = Ctx::with_backend(artifacts, items, args.flag("fresh"), &backend_of(args))?;
     let entry = ctx.find_eval_entry(&model, &method, ratio, args.get("metric"), None, None, None)?;
     let r = ctx.eval_variant(&model, &entry)?;
     let scheme = if args.flag("aligned") { Scheme::Aligned } else { Scheme::Truncated };
@@ -152,7 +224,7 @@ fn eval_one(args: &Args, artifacts: &str) -> Result<()> {
 fn table(args: &Args, artifacts: &str) -> Result<()> {
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let items = args.usize_or("items", 16);
-    let mut ctx = Ctx::new(artifacts, items, args.flag("fresh"))?;
+    let mut ctx = Ctx::with_backend(artifacts, items, args.flag("fresh"), &backend_of(args))?;
     let run = |ctx: &mut Ctx, n: &str| -> Result<()> {
         match n {
             "1" => tables::table1(ctx),
@@ -180,7 +252,7 @@ fn figure(args: &Args, artifacts: &str) -> Result<()> {
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let items = args.usize_or("items", 16);
     let gen_tokens = args.usize_or("gen-tokens", 100);
-    let mut ctx = Ctx::new(artifacts, items, args.flag("fresh"))?;
+    let mut ctx = Ctx::with_backend(artifacts, items, args.flag("fresh"), &backend_of(args))?;
     let run = |ctx: &mut Ctx, n: &str| -> Result<()> {
         match n {
             "1" => figures::figure1(ctx),
@@ -201,9 +273,9 @@ fn figure(args: &Args, artifacts: &str) -> Result<()> {
     }
 }
 
-fn golden(artifacts: &str) -> Result<()> {
+fn golden(args: &Args, artifacts: &str) -> Result<()> {
     let man = Manifest::load(artifacts)?;
-    let rt = Runtime::cpu()?;
+    let rt = Runtime::from_name(&backend_of(args))?;
     let report = tor_ssm::bench::harness::golden_check(&rt, &man)?;
     println!("{report}");
     Ok(())
@@ -211,7 +283,7 @@ fn golden(artifacts: &str) -> Result<()> {
 
 fn serve(args: &Args, artifacts: &str) -> Result<()> {
     let man = Manifest::load(artifacts)?;
-    let rt = Runtime::cpu()?;
+    let rt = Runtime::from_name(&backend_of(args))?;
     let model = args.get_or("model", "mamba-small");
     let n_requests = args.usize_or("requests", 16);
     let gen_tokens = args.usize_or("gen-tokens", 16);
@@ -238,13 +310,42 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
         .map(|e| Batcher::new(e.batch, std::time::Duration::from_millis(5)))
         .collect();
     let mut metrics = Metrics::default();
+    serve_trace(
+        &engines,
+        &lanes,
+        &mut router,
+        &mut batchers,
+        &mut metrics,
+        n_requests,
+        gen_tokens,
+        man.prefill_seq_len,
+        me.vocab_size,
+    )?;
+    println!("routing: {} requests over {:?}", router.routed, lanes);
+    println!("{}", metrics.summary());
+    Ok(())
+}
 
-    // Synthetic open-loop workload: mixed prompt lengths.
+/// The shared open-loop serving trace (used by `serve` and `demo`): feed a
+/// synthetic mixed-length workload through router → batchers → engines,
+/// draining ready batches as it goes and flushing at the end.
+fn serve_trace(
+    engines: &[Engine],
+    lanes: &[&str],
+    router: &mut Router,
+    batchers: &mut [Batcher],
+    metrics: &mut Metrics,
+    n_requests: usize,
+    gen_tokens: usize,
+    prefill_seq_len: usize,
+    vocab_size: usize,
+) -> Result<()> {
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
-        let plen = if rng.f64() < 0.5 { man.prefill_seq_len } else { man.prefill_seq_len / 4 };
-        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(me.vocab_size) as i32).collect();
+        // Bimodal prompt lengths: short chat-like vs long document-like.
+        let plen = if rng.f64() < 0.5 { prefill_seq_len } else { prefill_seq_len / 4 };
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab_size) as i32).collect();
         let req = Request {
             id: i as u64,
             prompt,
@@ -261,24 +362,21 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
         // Drain ready batches.
         for (bi, b) in batchers.iter_mut().enumerate() {
             while let Some(batch) = b.poll(std::time::Instant::now()) {
-                dispatch(&rt, &engines[bi], &batch, &mut metrics, &mut router, &lanes[bi], t0)?;
+                dispatch(&engines[bi], &batch, metrics, router, lanes[bi], t0)?;
             }
         }
     }
     // Final drain.
     for (bi, b) in batchers.iter_mut().enumerate() {
         while let Some(batch) = b.drain() {
-            dispatch(&rt, &engines[bi], &batch, &mut metrics, &mut router, &lanes[bi], t0)?;
+            dispatch(&engines[bi], &batch, metrics, router, lanes[bi], t0)?;
         }
     }
     metrics.wall = t0.elapsed();
-    println!("routing: {} requests over {:?}", router.routed, lanes);
-    println!("{}", metrics.summary());
     Ok(())
 }
 
 fn dispatch(
-    rt: &Runtime,
     engine: &Engine,
     batch: &[Request],
     metrics: &mut Metrics,
@@ -286,7 +384,7 @@ fn dispatch(
     lane: &str,
     t0: std::time::Instant,
 ) -> Result<()> {
-    let responses = engine.serve_batch(rt, batch)?;
+    let responses = engine.serve_batch(batch)?;
     for (req, resp) in batch.iter().zip(&responses) {
         let queue_us = t0.elapsed().as_micros() as u64 - req.arrived_us;
         metrics.record(

@@ -122,11 +122,37 @@ pub struct SchedulePlan {
 }
 
 impl SchedulePlan {
+    /// Live token count after the last reduction site.
+    ///
+    /// Panics (with a diagnosable message) on a degenerate plan with empty
+    /// `seg_lens` — such a plan can only be constructed by hand;
+    /// [`solve_schedule`] always emits `locations.len() + 1` segments.
     pub fn final_len(&self) -> usize {
+        assert!(
+            !self.seg_lens.is_empty(),
+            "SchedulePlan.seg_lens is empty (degenerate plan: seq_len={}, locations={:?})",
+            self.seq_len,
+            self.locations
+        );
         *self.seg_lens.last().unwrap()
     }
 
+    /// Live token count seen by `layer`. Same degenerate-plan panic
+    /// contract as [`SchedulePlan::final_len`].
     pub fn len_at_layer(&self, layer: usize) -> usize {
+        assert!(
+            !self.seg_lens.is_empty(),
+            "SchedulePlan.seg_lens is empty (degenerate plan: seq_len={}, locations={:?})",
+            self.seq_len,
+            self.locations
+        );
+        assert_eq!(
+            self.seg_lens.len(),
+            self.locations.len() + 1,
+            "SchedulePlan has {} seg_lens for {} locations",
+            self.seg_lens.len(),
+            self.locations.len()
+        );
         let mut seg = 0;
         for (i, &loc) in self.locations.iter().enumerate() {
             if layer > loc {
@@ -185,6 +211,13 @@ pub fn solve_schedule(
     locations: &[usize],
     flops_reduction: f64,
 ) -> Result<SchedulePlan> {
+    if seq_len == 0 {
+        bail!(
+            "cannot solve a schedule for seq_len=0 ({}, locations {:?})",
+            dims.name,
+            locations
+        );
+    }
     if flops_reduction <= 0.0 || locations.is_empty() {
         return Ok(plan_for_ratio(dims, seq_len, locations, 1.0));
     }
@@ -197,13 +230,14 @@ pub fn solve_schedule(
     let mut best = plan_for_ratio(dims, seq_len, locations, 1.0);
     for _ in 0..64 {
         let mid = (lo + hi) / 2.0;
+        // One plan per bisection step: compare against the incumbent and
+        // steer on the same achieved ratio.
         let plan = plan_for_ratio(dims, seq_len, locations, mid);
-        if (plan.flops_reduction - flops_reduction).abs()
-            < (best.flops_reduction - flops_reduction).abs()
-        {
+        let achieved = plan.flops_reduction;
+        if (achieved - flops_reduction).abs() < (best.flops_reduction - flops_reduction).abs() {
             best = plan;
         }
-        if plan_for_ratio(dims, seq_len, locations, mid).flops_reduction > flops_reduction {
+        if achieved > flops_reduction {
             lo = mid;
         } else {
             hi = mid;
@@ -319,5 +353,48 @@ mod tests {
     #[test]
     fn location_out_of_range_rejected() {
         assert!(solve_schedule(&dims(), 128, &[25], 0.2).is_err());
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected_or_identity() {
+        let d = dims();
+        // seq_len = 0 is an error regardless of locations or target.
+        assert!(solve_schedule(&d, 0, &[], 0.0).is_err());
+        assert!(solve_schedule(&d, 0, &[10], 0.2).is_err());
+        // Empty locations with a positive seq_len degrade to the identity
+        // (dense) plan, never to an empty/NaN one.
+        let p = solve_schedule(&d, 64, &[], 0.3).unwrap();
+        assert_eq!(p.seg_lens, vec![64]);
+        assert!(p.removed.is_empty());
+        assert_eq!(p.flops_reduction, 0.0);
+        assert_eq!(p.final_len(), 64);
+        assert_eq!(p.len_at_layer(0), 64);
+        assert_eq!(p.len_at_layer(d.n_layer - 1), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "seg_lens is empty")]
+    fn empty_plan_final_len_panics_with_message() {
+        let p = SchedulePlan {
+            seq_len: 0,
+            locations: vec![],
+            seg_lens: vec![],
+            removed: vec![],
+            flops_reduction: 0.0,
+        };
+        let _ = p.final_len();
+    }
+
+    #[test]
+    #[should_panic(expected = "seg_lens is empty")]
+    fn empty_plan_len_at_layer_panics_with_message() {
+        let p = SchedulePlan {
+            seq_len: 0,
+            locations: vec![],
+            seg_lens: vec![],
+            removed: vec![],
+            flops_reduction: 0.0,
+        };
+        let _ = p.len_at_layer(3);
     }
 }

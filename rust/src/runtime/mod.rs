@@ -1,123 +1,223 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once, execute many.
+//! Execution layer: the pluggable [`Backend`] trait and the [`Runtime`]
+//! front-end the rest of the crate talks to.
 //!
-//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`/`execute_b`. HLO *text* is the interchange
-//! format (the 0.5.1 extension rejects jax≥0.5 64-bit-id protos).
+//! A backend turns a [`ProgramSpec`] (one manifest HLO entry plus the model
+//! metadata it belongs to) into an [`Executable`], and owns weight
+//! residency via [`DeviceWeights`]. Two implementations exist:
 //!
-//! Hot-path discipline: weights are uploaded to device once
-//! (`DeviceWeights`) and passed by reference to `execute_b`; only the small
-//! activations (tokens in, logits out) cross the host boundary per request.
+//! * [`reference`] — the **default**: a pure-Rust interpreter of the small
+//!   op set our Mamba/Mamba-2 models need (embedding, RMSNorm, depthwise
+//!   causal conv, selective scan, gated output projection, tied head) with
+//!   plan-driven intra-layer token reduction. Hermetic: no `artifacts/`,
+//!   no Python, no XLA. Used by the zero-artifact test suite and
+//!   `repro demo`.
+//! * [`pjrt`] *(cargo feature `pjrt`)* — the AOT path: parse
+//!   `artifacts/*.hlo.txt`, compile once via the PJRT CPU client, execute
+//!   many. Weights are uploaded to device once and passed by reference;
+//!   only small activations cross the host boundary per request.
+//!
+//! Hot-path discipline is part of the trait contract: `Executable::execute`
+//! takes device-resident weights plus host activations, and backends must
+//! keep per-call host traffic proportional to activations, not parameters.
 
+pub mod reference;
 pub mod tensor;
 pub mod weights;
 
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::manifest::{HloEntry, Manifest, ModelEntry};
+use crate::manifest::{HloEntry, Manifest, ModelEntry, Plan};
+
 pub use tensor::{HostTensor, TensorData};
-pub use weights::{DeviceWeights, Weights};
+pub use weights::Weights;
 
-pub struct Runtime {
-    client: xla::PjRtClient,
-    /// Compiled executable cache keyed by HLO file path.
-    cache: std::cell::RefCell<HashMap<String, Arc<Executable>>>,
-    pub compile_log: std::cell::RefCell<Vec<(String, f64)>>,
+/// What a compiled program computes. Mirrors `HloEntry::kind`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProgramKind {
+    /// Full-sequence forward: `(tokens[B,L]) -> (logits[B,out,V], kept[B,out])`.
+    Eval,
+    /// Prompt ingestion: `(tokens[B,L]) -> (logits[B,V], conv_state, ssm_state)`.
+    Prefill,
+    /// One decode step: `(tokens[B], conv, ssm) -> (logits[B,V], conv, ssm)`.
+    Decode,
+    /// Fused train step (params/opt-state threading); PJRT-only today.
+    Train,
 }
 
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
+/// Everything a backend needs to materialise one executable: the manifest
+/// entry's geometry and reduction plan plus the owning model's metadata.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub tag: String,
+    pub kind: ProgramKind,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub out_len: usize,
+    /// Static token-reduction plan (None for dense programs).
+    pub plan: Option<Plan>,
+    /// Path to the AOT-lowered HLO text (used by the pjrt backend only).
+    pub hlo_path: PathBuf,
+    /// Owning model: dims + param layout contract.
+    pub model: ModelEntry,
+}
+
+impl ProgramSpec {
+    pub fn from_entry(man: &Manifest, model: &ModelEntry, entry: &HloEntry) -> Result<ProgramSpec> {
+        let kind = match entry.kind.as_str() {
+            "eval" => ProgramKind::Eval,
+            "prefill" => ProgramKind::Prefill,
+            "decode" => ProgramKind::Decode,
+            "train" => ProgramKind::Train,
+            other => bail!("unknown HLO kind {other:?} for entry {}", entry.tag),
+        };
+        Ok(ProgramSpec {
+            tag: entry.tag.clone(),
+            kind,
+            batch: entry.batch,
+            seq_len: entry.seq_len,
+            out_len: entry.out_len,
+            plan: entry.plan.clone(),
+            hlo_path: man.path(&entry.file),
+            model: model.clone(),
+        })
+    }
+}
+
+/// Backend-owned parameter residency. The reference backend keeps weights on
+/// the host; the pjrt backend keeps per-param device buffers.
+pub enum DeviceWeights {
+    Host(Weights),
+    #[cfg(feature = "pjrt")]
+    Pjrt(Vec<xla::PjRtBuffer>),
+}
+
+impl DeviceWeights {
+    /// Host view, for backends that execute on the CPU directly.
+    // unreachable_patterns: the `_` arm only exists for the pjrt variant.
+    #[allow(unreachable_patterns)]
+    pub fn host(&self) -> Result<&Weights> {
+        match self {
+            DeviceWeights::Host(w) => Ok(w),
+            _ => bail!("weights are device-resident, not host-resident"),
+        }
+    }
+}
+
+/// A compiled program, ready to execute many times.
+pub trait Executable: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Hot path: device-resident weights + host activation tensors in,
+    /// host tensors out.
+    fn execute(&self, weights: &DeviceWeights, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Raw path (the fused train step): every argument streamed from the
+    /// host (by reference — params/opt state can be large), outputs
+    /// returned to the host.
+    fn execute_raw(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// An execution substrate: compiles [`ProgramSpec`]s and owns weight upload.
+pub trait Backend: Send + Sync {
+    fn platform(&self) -> String;
+    fn compile(&self, spec: &ProgramSpec) -> Result<Arc<dyn Executable>>;
+    fn upload_weights(&self, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights>;
+}
+
+/// Front-end owned by callers: a boxed backend plus a compile cache keyed by
+/// `model/tag`, with compile timing kept for reporting.
+pub struct Runtime {
+    backend: Box<dyn Backend>,
+    cache: RefCell<HashMap<String, Arc<dyn Executable>>>,
+    pub compile_log: RefCell<Vec<(String, f64)>>,
 }
 
 impl Runtime {
+    pub fn with_backend(backend: Box<dyn Backend>) -> Runtime {
+        Runtime { backend, cache: Default::default(), compile_log: Default::default() }
+    }
+
+    /// The default hermetic backend.
+    pub fn reference() -> Result<Runtime> {
+        Ok(Runtime::with_backend(Box::new(reference::ReferenceBackend::new())))
+    }
+
+    /// Back-compat constructor: the default backend (reference).
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            cache: Default::default(),
-            compile_log: Default::default(),
-        })
+        Runtime::reference()
+    }
+
+    /// PJRT CPU client (requires the `pjrt` cargo feature and the real XLA
+    /// extension at link time).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt_cpu() -> Result<Runtime> {
+        Ok(Runtime::with_backend(Box::new(pjrt::PjrtBackend::cpu()?)))
+    }
+
+    /// Select a backend by name: `"reference"` or `"pjrt"`.
+    pub fn from_name(name: &str) -> Result<Runtime> {
+        match name {
+            "reference" | "" => Runtime::reference(),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Runtime::pjrt_cpu(),
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => bail!("this binary was built without the `pjrt` feature"),
+            other => bail!("unknown backend {other:?} (expected reference|pjrt)"),
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
-    /// Load + compile an HLO text module (cached by path).
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
-        let key = path.as_ref().to_string_lossy().to_string();
+    /// Compile (cached) the executable for one manifest entry of `model`.
+    pub fn load_entry(
+        &self,
+        man: &Manifest,
+        model: &ModelEntry,
+        entry: &HloEntry,
+    ) -> Result<Arc<dyn Executable>> {
+        let key = format!("{}/{}", model.name, entry.tag);
         if let Some(e) = self.cache.borrow().get(&key) {
             return Ok(Arc::clone(e));
         }
+        let spec = ProgramSpec::from_entry(man, model, entry)?;
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&key)
-            .with_context(|| format!("parsing HLO text {key}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {key}"))?;
-        let dt = t0.elapsed().as_secs_f64();
-        self.compile_log.borrow_mut().push((key.clone(), dt));
-        let e = Arc::new(Executable { exe, name: key.clone() });
-        self.cache.borrow_mut().insert(key, Arc::clone(&e));
-        Ok(e)
+        let exe = self.backend.compile(&spec)?;
+        self.compile_log.borrow_mut().push((key.clone(), t0.elapsed().as_secs_f64()));
+        self.cache.borrow_mut().insert(key, Arc::clone(&exe));
+        Ok(exe)
     }
 
-    pub fn load_entry(&self, man: &Manifest, entry: &HloEntry) -> Result<Arc<Executable>> {
-        self.load(man.path(&entry.file))
-    }
-
-    /// Upload a host tensor to a device-resident buffer.
-    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        match &t.data {
-            TensorData::F32(v) => self
-                .client
-                .buffer_from_host_buffer(v, &t.shape, None)
-                .context("uploading f32 buffer"),
-            TensorData::I32(v) => self
-                .client
-                .buffer_from_host_buffer(v, &t.shape, None)
-                .context("uploading i32 buffer"),
-        }
-    }
-
-    pub fn upload_weights(&self, man: &Manifest, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights> {
-        weights::upload(self, man, model, w)
+    pub fn upload_weights(&self, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights> {
+        self.backend.upload_weights(model, w)
     }
 }
 
-impl Executable {
-    /// Execute with host literals; returns the decomposed output tuple.
-    pub fn run<L: std::borrow::Borrow<xla::Literal>>(&self, args: &[L]) -> Result<Vec<HostTensor>> {
-        let bufs = self.exe.execute(args).context("execute")?;
-        Self::collect(bufs)
-    }
-
-    /// Execute with device-resident buffers (the hot path).
-    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
-        let bufs = self.exe.execute_b(args).context("execute_b")?;
-        Self::collect(bufs)
-    }
-
-    /// Execute with device buffers but keep outputs on device (tuple buffer).
-    pub fn run_b_raw(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
-        let mut bufs = self.exe.execute_b(args).context("execute_b")?;
-        ensure!(!bufs.is_empty(), "no outputs");
-        Ok(bufs.remove(0))
-    }
-
-    fn collect(bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
-        ensure!(!bufs.is_empty() && !bufs[0].is_empty(), "empty execution result");
-        // Single replica; the root is a tuple (lowered with return_tuple=True).
-        let lit = bufs[0][0].to_literal_sync().context("download result")?;
-        let parts = lit.to_tuple().context("decompose result tuple")?;
-        parts.iter().map(HostTensor::from_literal).collect()
+/// Per-layer decode-state shapes for one model — THE shape convention
+/// shared by the serving engine, the reference backend, and the benches
+/// (aot.py records the same):
+/// mamba  → conv `[nl, B, d_inner, d_conv-1]`, ssm `[nl, B, d_inner, d_state]`;
+/// mamba2 → conv `[nl, B, d_inner+2·d_state, d_conv-1]`,
+///          ssm `[nl, B, d_inner/headdim, headdim, d_state]`.
+pub fn decode_state_shapes(model: &ModelEntry, batch: usize) -> (Vec<usize>, Vec<usize>) {
+    let k1 = reference::D_CONV - 1;
+    let (nl, di, n) = (model.n_layer, model.d_inner, model.d_state);
+    if model.arch == "mamba" {
+        (vec![nl, batch, di, k1], vec![nl, batch, di, n])
+    } else {
+        (
+            vec![nl, batch, di + 2 * n, k1],
+            vec![nl, batch, di / reference::HEADDIM, reference::HEADDIM, n],
+        )
     }
 }

@@ -1,0 +1,153 @@
+//! PJRT/XLA backend (cargo feature `pjrt`): load `artifacts/*.hlo.txt`,
+//! compile once, execute many.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`/`execute_b`. HLO *text* is the interchange
+//! format (the 0.5.1 extension rejects jax≥0.5 64-bit-id protos).
+//!
+//! Hot-path discipline: weights are uploaded to device once
+//! ([`DeviceWeights::Pjrt`]) and passed by reference to `execute_b`; only
+//! the small activations (tokens in, logits out) cross the host boundary
+//! per request.
+//!
+//! NOTE: in this offline image `crates/xla` is a type-compatible stub, so
+//! `PjrtBackend::cpu()` fails at runtime with a clear message. Link the
+//! real bindings crate (swap the path dependency in `rust/Cargo.toml`) to
+//! use this backend.
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::manifest::ModelEntry;
+use crate::runtime::{
+    Backend, DeviceWeights, Executable, HostTensor, ProgramSpec, TensorData, Weights,
+};
+
+pub struct PjrtBackend {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl PjrtBackend {
+    pub fn cpu() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client: Arc::new(client) })
+    }
+}
+
+fn upload(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+    match &t.data {
+        TensorData::F32(v) => client
+            .buffer_from_host_buffer(v, &t.shape, None)
+            .context("uploading f32 buffer"),
+        TensorData::I32(v) => client
+            .buffer_from_host_buffer(v, &t.shape, None)
+            .context("uploading i32 buffer"),
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, spec: &ProgramSpec) -> Result<Arc<dyn Executable>> {
+        let path = spec.hlo_path.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        Ok(Arc::new(PjrtExecutable {
+            exe,
+            tag: spec.tag.clone(),
+            client: Arc::clone(&self.client),
+        }))
+    }
+
+    fn upload_weights(&self, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights> {
+        ensure!(
+            w.tensors.len() == model.params.len(),
+            "weights/model param count mismatch"
+        );
+        let buffers = w
+            .tensors
+            .iter()
+            .map(|t| upload(&self.client, t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeviceWeights::Pjrt(buffers))
+    }
+}
+
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    tag: String,
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Executable for PjrtExecutable {
+    fn name(&self) -> &str {
+        &self.tag
+    }
+
+    fn execute(&self, weights: &DeviceWeights, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let DeviceWeights::Pjrt(buffers) = weights else {
+            bail!("pjrt executable needs device-resident (pjrt) weights");
+        };
+        // Weights stay device-resident; activations are uploaded per call.
+        let owned: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| upload(&self.client, t))
+            .collect::<Result<Vec<_>>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> = buffers.iter().collect();
+        args.extend(owned.iter());
+        let bufs = self.exe.execute_b(&args).context("execute_b")?;
+        collect(bufs)
+    }
+
+    fn execute_raw(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals = inputs.iter().map(|t| to_literal(t)).collect::<Result<Vec<_>>>()?;
+        let bufs = self.exe.execute(&literals).context("execute")?;
+        collect(bufs)
+    }
+}
+
+fn collect(bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+    ensure!(!bufs.is_empty() && !bufs[0].is_empty(), "empty execution result");
+    // Single replica; the root is a tuple (lowered with return_tuple=True).
+    let lit = bufs[0][0].to_literal_sync().context("download result")?;
+    let parts = lit.to_tuple().context("decompose result tuple")?;
+    parts.iter().map(from_literal).collect()
+}
+
+pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        TensorData::F32(v) => xla::Literal::vec1(v),
+        TensorData::I32(v) => xla::Literal::vec1(v),
+    };
+    lit.reshape(&dims).context("reshaping literal")
+}
+
+pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape().context("literal has no array shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = match shape.ty() {
+        xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+        other => bail!("unsupported element type {other:?}"),
+    };
+    let t = HostTensor { shape: dims, data };
+    ensure!(
+        t.len()
+            == match &t.data {
+                TensorData::F32(v) => v.len(),
+                TensorData::I32(v) => v.len(),
+            },
+        "element count mismatch"
+    );
+    Ok(t)
+}

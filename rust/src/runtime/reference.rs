@@ -1,0 +1,641 @@
+//! Pure-Rust reference backend: a deterministic interpreter for the small
+//! op set our Mamba/Mamba-2 models need, with plan-driven intra-layer token
+//! reduction. This is the hermetic execution path — no `artifacts/`
+//! directory, no Python, no XLA — used by the zero-artifact test suite,
+//! `repro demo`, and the bench harness on synthetic fixtures.
+//!
+//! ## Model semantics
+//!
+//! Per block (layer), on the residual stream `x ∈ R^d`:
+//!
+//! 1. `xn = RMSNorm(x) ⊙ norm`
+//! 2. in-projection: mamba → `[u_pre(di), z(di)]`; mamba2 →
+//!    `[u_pre(di), z(di), b_pre(n), c_pre(n)]`
+//! 3. depthwise causal conv (width `d_conv`) over `u_pre` (mamba) or over
+//!    `u_pre ++ b_pre ++ c_pre` (mamba2, matching the wider conv state the
+//!    real architecture carries), then `u = silu(conv)`
+//! 4. selectivity: mamba derives `B, C ∈ R^n` from `u` via `bc_proj`;
+//!    mamba2 takes them from the conv output channels
+//! 5. selective scan `h[i][j] = λ[i][j]·h[i][j] + u[i]·B[j]` with
+//!    `λ = sigmoid(a_log)`, emit `y[i] = Σ_j h[i][j]·C[j] + D[i]·u[i]`
+//! 6. gate `y ⊙ silu(z)`, out-project back into the residual stream
+//!
+//! Logits use a final RMSNorm and the tied embedding head.
+//!
+//! ## Token reduction
+//!
+//! Eval/prefill programs with a [`Plan`](crate::manifest::Plan) reduce the
+//! live set right after each `locations[i]` layer down to `seg_lens[i+1]`
+//! positions: importance = residual-state energy (the reference analogue of
+//! the paper's clipped-L1 metric), pruned positions are **merged** into the
+//! nearest surviving earlier position by running weighted mean (UTRC's
+//! prune+merge hybrid), and the surviving original positions are reported
+//! through the `kept` output exactly like the AOT-lowered graphs do.
+//!
+//! ## Parameter layout
+//!
+//! The backend binds weights **by name** from the manifest's param list
+//! (`embedding`, `layers.{l}.in_proj`, ..., `norm_f` — see
+//! [`crate::fixtures`], which emits this layout). Pointing it at real AOT
+//! artifacts fails with a clear error: those blobs follow the `aot.py`
+//! layout and belong to the `pjrt` backend.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::manifest::{ModelEntry, Plan};
+use crate::runtime::{
+    Backend, DeviceWeights, Executable, HostTensor, ProgramKind, ProgramSpec, Weights,
+};
+
+/// Conv window width; matches the d_conv=4 convention used across the repo.
+pub const D_CONV: usize = 4;
+/// Mamba-2 head width used for the ssm-state shape convention.
+pub const HEADDIM: usize = 64;
+
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    pub fn new() -> ReferenceBackend {
+        ReferenceBackend
+    }
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        ReferenceBackend::new()
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn platform(&self) -> String {
+        "reference-cpu".to_string()
+    }
+
+    fn compile(&self, spec: &ProgramSpec) -> Result<Arc<dyn Executable>> {
+        let m = &spec.model;
+        if m.arch != "mamba" {
+            ensure!(
+                m.d_inner % HEADDIM == 0,
+                "reference backend: {} d_inner {} not divisible by headdim {HEADDIM}",
+                m.name,
+                m.d_inner
+            );
+        }
+        if let Some(plan) = &spec.plan {
+            ensure!(
+                plan.seg_lens.len() == plan.locations.len() + 1,
+                "plan for {} has {} seg_lens for {} locations",
+                spec.tag,
+                plan.seg_lens.len(),
+                plan.locations.len()
+            );
+        }
+        Ok(Arc::new(ReferenceExecutable { spec: spec.clone() }))
+    }
+
+    fn upload_weights(&self, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights> {
+        // Validate the layout eagerly so failures name the model, not a
+        // later execute call.
+        RefModel::bind(model, w)
+            .with_context(|| format!("binding reference-layout weights for {}", model.name))?;
+        Ok(DeviceWeights::Host(w.clone()))
+    }
+}
+
+pub struct ReferenceExecutable {
+    spec: ProgramSpec,
+}
+
+impl Executable for ReferenceExecutable {
+    fn name(&self) -> &str {
+        &self.spec.tag
+    }
+
+    fn execute(&self, weights: &DeviceWeights, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let w = weights.host().context("reference backend executes host weights")?;
+        // Re-binding per call is O(param-count) metadata work plus the
+        // decay sigmoids — negligible next to the scan at fixture dims,
+        // and it keeps DeviceWeights free of self-referential borrows.
+        let model = RefModel::bind(&self.spec.model, w)?;
+        match self.spec.kind {
+            ProgramKind::Eval => self.eval(&model, inputs),
+            ProgramKind::Prefill => self.prefill(&model, inputs),
+            ProgramKind::Decode => self.decode(&model, inputs),
+            ProgramKind::Train => bail!(
+                "the reference backend does not implement the fused train step; \
+                 train with the pjrt backend and real artifacts"
+            ),
+        }
+    }
+
+    fn execute_raw(&self, _inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        bail!(
+            "raw (train-step) execution is not supported by the reference backend; \
+             build with --features pjrt and run against real artifacts"
+        )
+    }
+}
+
+impl ReferenceExecutable {
+    fn eval(&self, m: &RefModel, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = &self.spec;
+        ensure!(inputs.len() == 1, "eval executable expects one (tokens) input");
+        let toks = inputs[0].as_i32()?;
+        let (b, l, out_len, v) = (spec.batch, spec.seq_len, spec.out_len, m.vocab);
+        ensure!(
+            inputs[0].shape == vec![b, l],
+            "tokens shape {:?} != [{b}, {l}]",
+            inputs[0].shape
+        );
+        let mut logits = vec![0.0f32; b * out_len * v];
+        let mut kept_out = vec![0i32; b * out_len];
+        let mut xn = vec![0.0f32; m.d];
+        for bi in 0..b {
+            let fwd = forward(m, &toks[bi * l..(bi + 1) * l], spec.plan.as_ref())?;
+            ensure!(
+                fwd.kept.len() == out_len,
+                "{}: reduction left {} surviving positions, spec says {out_len}",
+                spec.tag,
+                fwd.kept.len()
+            );
+            for (t, &pos) in fwd.kept.iter().enumerate() {
+                kept_out[bi * out_len + t] = pos as i32;
+                let row = (bi * out_len + t) * v;
+                head_logits(m, &fwd.xs[t * m.d..(t + 1) * m.d], &mut xn, &mut logits[row..row + v]);
+            }
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, out_len, v], logits),
+            HostTensor::i32(vec![b, out_len], kept_out),
+        ])
+    }
+
+    fn prefill(&self, m: &RefModel, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = &self.spec;
+        ensure!(inputs.len() == 1, "prefill executable expects one (tokens) input");
+        let toks = inputs[0].as_i32()?;
+        let (b, l, v) = (spec.batch, spec.seq_len, m.vocab);
+        ensure!(
+            inputs[0].shape == vec![b, l],
+            "tokens shape {:?} != [{b}, {l}]",
+            inputs[0].shape
+        );
+        let (conv_shape, ssm_shape) = crate::runtime::decode_state_shapes(&self.spec.model, b);
+        let k1 = D_CONV - 1;
+        let mut logits = vec![0.0f32; b * v];
+        let mut conv = vec![0.0f32; m.n_layer * b * m.conv_ch * k1];
+        let mut ssm = vec![0.0f32; m.n_layer * b * m.di * m.n];
+        let mut xn = vec![0.0f32; m.d];
+        for bi in 0..b {
+            let fwd = forward(m, &toks[bi * l..(bi + 1) * l], spec.plan.as_ref())?;
+            ensure!(!fwd.kept.is_empty(), "prefill reduced the sequence to nothing");
+            let last = fwd.kept.len() - 1;
+            head_logits(m, &fwd.xs[last * m.d..(last + 1) * m.d], &mut xn, &mut logits[bi * v..(bi + 1) * v]);
+            for (li, (tail, h)) in fwd.states.iter().enumerate() {
+                let cstart = (li * b + bi) * m.conv_ch * k1;
+                conv[cstart..cstart + m.conv_ch * k1].copy_from_slice(tail);
+                let sstart = (li * b + bi) * m.di * m.n;
+                ssm[sstart..sstart + m.di * m.n].copy_from_slice(h);
+            }
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, v], logits),
+            HostTensor::f32(conv_shape, conv),
+            HostTensor::f32(ssm_shape, ssm),
+        ])
+    }
+
+    fn decode(&self, m: &RefModel, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = &self.spec;
+        ensure!(inputs.len() == 3, "decode executable expects (tokens, conv, ssm)");
+        let tokens = inputs[0].as_i32()?;
+        let b = spec.batch;
+        let v = m.vocab;
+        ensure!(
+            inputs[0].shape == vec![b],
+            "decode tokens shape {:?} != [{b}]",
+            inputs[0].shape
+        );
+        let (conv_shape, ssm_shape) = crate::runtime::decode_state_shapes(&self.spec.model, b);
+        ensure!(
+            inputs[1].shape == conv_shape,
+            "conv state shape {:?} != {:?}",
+            inputs[1].shape,
+            conv_shape
+        );
+        ensure!(
+            inputs[2].shape == ssm_shape,
+            "ssm state shape {:?} != {:?}",
+            inputs[2].shape,
+            ssm_shape
+        );
+        let mut conv = inputs[1].as_f32()?.to_vec();
+        let mut ssm = inputs[2].as_f32()?.to_vec();
+        let k1 = D_CONV - 1;
+        let mut logits = vec![0.0f32; b * v];
+        let mut xn = vec![0.0f32; m.d];
+        let mut scratch = Scratch::new(m);
+        for bi in 0..b {
+            let t = tokens[bi];
+            ensure!(t >= 0 && (t as usize) < v, "decode token {t} outside vocab {v}");
+            let mut x: Vec<f32> = m.embed[t as usize * m.d..(t as usize + 1) * m.d].to_vec();
+            for li in 0..m.n_layer {
+                let cstart = (li * b + bi) * m.conv_ch * k1;
+                let sstart = (li * b + bi) * m.di * m.n;
+                let tail = &mut conv[cstart..cstart + m.conv_ch * k1];
+                let h = &mut ssm[sstart..sstart + m.di * m.n];
+                layer_step(m, li, &mut x, tail, h, &mut scratch);
+            }
+            head_logits(m, &x, &mut xn, &mut logits[bi * v..(bi + 1) * v]);
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, v], logits),
+            HostTensor::f32(conv_shape, conv),
+            HostTensor::f32(ssm_shape, ssm),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bound model view + math kernels
+// ---------------------------------------------------------------------------
+
+struct RefLayer<'a> {
+    norm: &'a [f32],
+    in_proj: &'a [f32],
+    conv_w: &'a [f32],
+    conv_b: &'a [f32],
+    /// mamba only: maps post-conv `u` to `[B, C]`.
+    bc_proj: Option<&'a [f32]>,
+    d_skip: &'a [f32],
+    out_proj: &'a [f32],
+    /// sigmoid(a_log), precomputed: per-(channel, state) decay in (0, 1).
+    decay: Vec<f32>,
+}
+
+struct RefModel<'a> {
+    d: usize,
+    di: usize,
+    n: usize,
+    vocab: usize,
+    n_layer: usize,
+    mamba2: bool,
+    /// conv channels: di (mamba) or di + 2n (mamba2).
+    conv_ch: usize,
+    /// in-projection width: 2di (mamba) or 2di + 2n (mamba2).
+    proj_w: usize,
+    embed: &'a [f32],
+    norm_f: &'a [f32],
+    layers: Vec<RefLayer<'a>>,
+}
+
+impl<'a> RefModel<'a> {
+    fn bind(me: &ModelEntry, w: &'a Weights) -> Result<RefModel<'a>> {
+        ensure!(
+            w.tensors.len() == me.params.len(),
+            "{}: {} weight tensors for {} manifest params",
+            me.name,
+            w.tensors.len(),
+            me.params.len()
+        );
+        let mut index: HashMap<&str, usize> = HashMap::new();
+        for (i, p) in me.params.iter().enumerate() {
+            index.insert(p.name.as_str(), i);
+        }
+        let get = |name: &str, shape: &[usize]| -> Result<&'a [f32]> {
+            let i = *index.get(name).with_context(|| {
+                format!(
+                    "param {name:?} not in {}'s layout — the reference backend needs \
+                     reference-layout weights (see fixtures); AOT artifact blobs \
+                     belong to the pjrt backend",
+                    me.name
+                )
+            })?;
+            let t = &w.tensors[i];
+            ensure!(
+                t.shape == shape,
+                "param {name}: shape {:?} != expected {shape:?}",
+                t.shape
+            );
+            t.as_f32()
+        };
+
+        let (d, di, n, vocab, nl) = (me.d_model, me.d_inner, me.d_state, me.vocab_size, me.n_layer);
+        let mamba2 = me.arch != "mamba";
+        let conv_ch = if mamba2 { di + 2 * n } else { di };
+        let proj_w = if mamba2 { 2 * di + 2 * n } else { 2 * di };
+
+        let embed = get("embedding", &[vocab, d])?;
+        let norm_f = get("norm_f", &[d])?;
+        let mut layers = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let a_log = get(&format!("layers.{l}.a_log"), &[di, n])?;
+            layers.push(RefLayer {
+                norm: get(&format!("layers.{l}.norm"), &[d])?,
+                in_proj: get(&format!("layers.{l}.in_proj"), &[d, proj_w])?,
+                conv_w: get(&format!("layers.{l}.conv_w"), &[conv_ch, D_CONV])?,
+                conv_b: get(&format!("layers.{l}.conv_b"), &[conv_ch])?,
+                bc_proj: if mamba2 {
+                    None
+                } else {
+                    Some(get(&format!("layers.{l}.bc_proj"), &[di, 2 * n])?)
+                },
+                d_skip: get(&format!("layers.{l}.d_skip"), &[di])?,
+                out_proj: get(&format!("layers.{l}.out_proj"), &[di, d])?,
+                decay: a_log.iter().map(|&a| sigmoid(a)).collect(),
+            });
+        }
+        Ok(RefModel { d, di, n, vocab, n_layer: nl, mamba2, conv_ch, proj_w, embed, norm_f, layers })
+    }
+}
+
+struct Scratch {
+    xn: Vec<f32>,
+    proj: Vec<f32>,
+    conv: Vec<f32>,
+    u: Vec<f32>,
+    b: Vec<f32>,
+    c: Vec<f32>,
+    y: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(m: &RefModel) -> Scratch {
+        Scratch {
+            xn: vec![0.0; m.d],
+            proj: vec![0.0; m.proj_w],
+            conv: vec![0.0; m.conv_ch],
+            u: vec![0.0; m.di],
+            b: vec![0.0; m.n],
+            c: vec![0.0; m.n],
+            y: vec![0.0; m.di],
+        }
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * g[i];
+    }
+}
+
+/// One token through one layer, updating the residual `x`, the conv tail,
+/// and the scan state in place.
+fn layer_step(m: &RefModel, l: usize, x: &mut [f32], tail: &mut [f32], h: &mut [f32], s: &mut Scratch) {
+    let (d, di, n) = (m.d, m.di, m.n);
+    let layer = &m.layers[l];
+    let k1 = D_CONV - 1;
+
+    rmsnorm(x, layer.norm, &mut s.xn);
+
+    // in-projection
+    let pw = m.proj_w;
+    for p in s.proj.iter_mut() {
+        *p = 0.0;
+    }
+    for c in 0..d {
+        let xc = s.xn[c];
+        let row = &layer.in_proj[c * pw..(c + 1) * pw];
+        for j in 0..pw {
+            s.proj[j] += xc * row[j];
+        }
+    }
+
+    // depthwise causal conv + tail update
+    for ch in 0..m.conv_ch {
+        let cur = if ch < di { s.proj[ch] } else { s.proj[2 * di + (ch - di)] };
+        let w = &layer.conv_w[ch * D_CONV..(ch + 1) * D_CONV];
+        let t = &mut tail[ch * k1..(ch + 1) * k1];
+        let mut acc = layer.conv_b[ch] + w[k1] * cur;
+        for j in 0..k1 {
+            acc += w[j] * t[j];
+        }
+        for j in 0..k1 - 1 {
+            t[j] = t[j + 1];
+        }
+        t[k1 - 1] = cur;
+        s.conv[ch] = acc;
+    }
+
+    // activations + selectivity parameters
+    for i in 0..di {
+        s.u[i] = silu(s.conv[i]);
+    }
+    if m.mamba2 {
+        s.b.copy_from_slice(&s.conv[di..di + n]);
+        s.c.copy_from_slice(&s.conv[di + n..di + 2 * n]);
+    } else {
+        let bc = layer.bc_proj.expect("mamba layer carries bc_proj");
+        for j in 0..n {
+            s.b[j] = 0.0;
+            s.c[j] = 0.0;
+        }
+        for i in 0..di {
+            let ui = s.u[i];
+            let row = &bc[i * 2 * n..(i + 1) * 2 * n];
+            for j in 0..n {
+                s.b[j] += ui * row[j];
+                s.c[j] += ui * row[n + j];
+            }
+        }
+    }
+
+    // selective scan + emit, gated by silu(z)
+    for i in 0..di {
+        let ui = s.u[i];
+        let hrow = &mut h[i * n..(i + 1) * n];
+        let drow = &layer.decay[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            hrow[j] = drow[j] * hrow[j] + ui * s.b[j];
+            acc += hrow[j] * s.c[j];
+        }
+        let z = s.proj[di + i];
+        s.y[i] = (acc + layer.d_skip[i] * ui) * silu(z);
+    }
+
+    // out-projection back into the residual stream
+    for i in 0..di {
+        let yi = s.y[i];
+        let row = &layer.out_proj[i * d..(i + 1) * d];
+        for c in 0..d {
+            x[c] += yi * row[c];
+        }
+    }
+}
+
+/// Final RMSNorm + tied embedding head for one residual row.
+fn head_logits(m: &RefModel, x: &[f32], xn: &mut [f32], out: &mut [f32]) {
+    rmsnorm(x, m.norm_f, xn);
+    for v in 0..m.vocab {
+        let row = &m.embed[v * m.d..(v + 1) * m.d];
+        let mut acc = 0.0f32;
+        for c in 0..m.d {
+            acc += xn[c] * row[c];
+        }
+        out[v] = acc;
+    }
+}
+
+struct ForwardOut {
+    /// Final residual stream: `kept.len() × d`, row-major.
+    xs: Vec<f32>,
+    /// Surviving original positions, ascending.
+    kept: Vec<usize>,
+    /// Per-layer final (conv tail, scan state) for decode continuation.
+    states: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+/// Layer-major forward over one sequence, applying the reduction plan at its
+/// layer boundaries.
+fn forward(m: &RefModel, tokens: &[i32], plan: Option<&Plan>) -> Result<ForwardOut> {
+    let d = m.d;
+    ensure!(!tokens.is_empty(), "empty token sequence");
+    let mut xs: Vec<f32> = Vec::with_capacity(tokens.len() * d);
+    for &t in tokens {
+        ensure!(t >= 0 && (t as usize) < m.vocab, "token {t} outside vocab {}", m.vocab);
+        xs.extend_from_slice(&m.embed[t as usize * d..(t as usize + 1) * d]);
+    }
+    let mut kept: Vec<usize> = (0..tokens.len()).collect();
+    let mut merged: Vec<f32> = vec![1.0; tokens.len()];
+    let mut states = Vec::with_capacity(m.n_layer);
+    let mut scratch = Scratch::new(m);
+    let k1 = D_CONV - 1;
+    for l in 0..m.n_layer {
+        let mut tail = vec![0.0f32; m.conv_ch * k1];
+        let mut h = vec![0.0f32; m.di * m.n];
+        for t in 0..kept.len() {
+            layer_step(m, l, &mut xs[t * d..(t + 1) * d], &mut tail, &mut h, &mut scratch);
+        }
+        states.push((tail, h));
+        if let Some(p) = plan {
+            if let Some(i) = p.locations.iter().position(|&loc| loc == l) {
+                let target = *p
+                    .seg_lens
+                    .get(i + 1)
+                    .with_context(|| format!("plan seg_lens too short at location {l}"))?;
+                reduce_live_set(&mut xs, &mut kept, &mut merged, target, d);
+            }
+        }
+    }
+    Ok(ForwardOut { xs, kept, states })
+}
+
+/// Shrink the live set to `target` rows: keep the highest-energy positions
+/// (ties to earlier positions), merge every dropped row into the nearest
+/// surviving row at or before it by running weighted mean.
+fn reduce_live_set(
+    xs: &mut Vec<f32>,
+    kept: &mut Vec<usize>,
+    merged: &mut Vec<f32>,
+    target: usize,
+    d: usize,
+) {
+    let live = kept.len();
+    if target >= live || target == 0 {
+        return;
+    }
+    let scores: Vec<f32> = (0..live)
+        .map(|t| xs[t * d..(t + 1) * d].iter().map(|v| v * v).sum::<f32>())
+        .collect();
+    let mut order: Vec<usize> = (0..live).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut selected: Vec<usize> = order[..target].to_vec();
+    selected.sort_unstable();
+    let mut dropped: Vec<usize> = order[target..].to_vec();
+    dropped.sort_unstable();
+
+    for t in dropped {
+        let q = match selected.partition_point(|&sel| sel < t).checked_sub(1) {
+            Some(i) => selected[i],
+            None => selected[0],
+        };
+        let (wq, wt) = (merged[q], merged[t]);
+        let tot = wq + wt;
+        let (lo, hi) = (q.min(t), q.max(t));
+        let (s1, s2) = xs.split_at_mut(hi * d);
+        let row_lo = &mut s1[lo * d..(lo + 1) * d];
+        let row_hi = &mut s2[..d];
+        if q < t {
+            for c in 0..d {
+                row_lo[c] = (row_lo[c] * wq + row_hi[c] * wt) / tot;
+            }
+        } else {
+            for c in 0..d {
+                row_hi[c] = (row_hi[c] * wq + row_lo[c] * wt) / tot;
+            }
+        }
+        merged[q] = tot;
+    }
+
+    let mut new_xs = Vec::with_capacity(target * d);
+    let mut new_kept = Vec::with_capacity(target);
+    let mut new_merged = Vec::with_capacity(target);
+    for &t in &selected {
+        new_xs.extend_from_slice(&xs[t * d..(t + 1) * d]);
+        new_kept.push(kept[t]);
+        new_merged.push(merged[t]);
+    }
+    *xs = new_xs;
+    *kept = new_kept;
+    *merged = new_merged;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_keeps_order_and_count() {
+        let d = 2;
+        // 5 rows with energies 1, 100, 4, 100, 0 -> top-3 = rows 1, 3, 2
+        let mut xs = vec![1.0, 0.0, 10.0, 0.0, 2.0, 0.0, 10.0, 0.0, 0.0, 0.0];
+        let mut kept = vec![0, 1, 2, 3, 4];
+        let mut merged = vec![1.0; 5];
+        reduce_live_set(&mut xs, &mut kept, &mut merged, 3, d);
+        assert_eq!(kept, vec![1, 2, 3]);
+        assert_eq!(xs.len(), 3 * d);
+        // row 0 merged into row 1 (nearest kept at/before is none -> first),
+        // row 4 merged into row 3
+        assert_eq!(merged, vec![2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn reduce_is_noop_at_or_above_live() {
+        let mut xs = vec![1.0, 2.0, 3.0, 4.0];
+        let mut kept = vec![0, 1];
+        let mut merged = vec![1.0, 1.0];
+        reduce_live_set(&mut xs, &mut kept, &mut merged, 2, 2);
+        assert_eq!(kept, vec![0, 1]);
+        assert_eq!(xs, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn activations_behave() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+        assert!(sigmoid(10.0) > 0.999 && sigmoid(-10.0) < 0.001);
+        assert!(silu(0.0).abs() < 1e-6);
+        let mut out = [0.0f32; 3];
+        rmsnorm(&[3.0, 0.0, -4.0], &[1.0, 1.0, 1.0], &mut out);
+        let ms: f32 = out.iter().map(|v| v * v).sum::<f32>() / 3.0;
+        assert!((ms - 1.0).abs() < 1e-3, "rmsnorm should normalise energy, got {ms}");
+    }
+}

@@ -1,6 +1,10 @@
-//! Host-side tensors and conversions to/from XLA literals.
+//! Host-side tensors: the currency of the [`Backend`](super::Backend) API.
+//!
+//! Backends convert these to whatever device representation they need (the
+//! pjrt backend turns them into XLA literals/buffers; the reference backend
+//! reads them in place).
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{bail, Result};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
@@ -55,31 +59,6 @@ impl HostTensor {
             _ => bail!("tensor is not i32"),
         }
     }
-
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        let lit = match &self.data {
-            TensorData::F32(v) => xla::Literal::vec1(v),
-            TensorData::I32(v) => xla::Literal::vec1(v),
-        };
-        lit.reshape(&dims).context("reshaping literal")
-    }
-
-    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-        let shape = lit.array_shape().context("literal has no array shape")?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = match shape.ty() {
-            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
-            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
-            other => bail!("unsupported element type {other:?}"),
-        };
-        let t = HostTensor { shape: dims, data };
-        ensure!(
-            t.len() == match &t.data { TensorData::F32(v) => v.len(), TensorData::I32(v) => v.len() },
-            "element count mismatch"
-        );
-        Ok(t)
-    }
 }
 
 #[cfg(test)]
@@ -87,18 +66,18 @@ mod tests {
     use super::*;
 
     #[test]
-    fn roundtrip_f32() {
+    fn construction_and_accessors() {
         let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
-        let lit = t.to_literal().unwrap();
-        let back = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(t, back);
-    }
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.as_f32().unwrap()[4], 5.0);
+        assert!(t.as_i32().is_err());
 
-    #[test]
-    fn roundtrip_i32() {
-        let t = HostTensor::i32(vec![4], vec![7, -1, 0, 3]);
-        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
-        assert_eq!(t, back);
+        let s = HostTensor::scalar_i32(9);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.as_i32().unwrap(), &[9]);
+
+        let z = HostTensor::zeros_f32(vec![4, 2]);
+        assert!(z.as_f32().unwrap().iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -1,12 +1,15 @@
-//! Weight blobs: load/save the concatenated f32 layout written by
-//! `aot.py::export_weights` (param_order contract), and device residency.
+//! Weight blobs: load/save the concatenated f32 layout described by the
+//! manifest's `params` metadata (param_order contract, written by
+//! `aot.py::export_weights` for real artifacts and by
+//! [`crate::fixtures`] for synthetic ones). Device residency lives behind
+//! [`super::Backend::upload_weights`].
 
 use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::manifest::{Manifest, ModelEntry};
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::HostTensor;
 
 /// Host-side parameter set, ordered per the manifest's param layout.
 #[derive(Debug, Clone)]
@@ -65,10 +68,6 @@ impl Weights {
             .with_context(|| format!("writing weights {:?}", path.as_ref()))
     }
 
-    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
-        self.tensors.iter().map(|t| t.to_literal()).collect()
-    }
-
     /// Mean of |w| across all params — a cheap training-progress fingerprint.
     pub fn mean_abs(&self) -> f64 {
         let mut sum = 0.0;
@@ -81,22 +80,4 @@ impl Weights {
         }
         sum / n.max(1) as f64
     }
-}
-
-/// Device-resident parameter buffers (uploaded once, reused per request).
-pub struct DeviceWeights {
-    pub buffers: Vec<xla::PjRtBuffer>,
-}
-
-pub fn upload(rt: &Runtime, _man: &Manifest, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights> {
-    ensure!(
-        w.tensors.len() == model.params.len(),
-        "weights/model param count mismatch"
-    );
-    let buffers = w
-        .tensors
-        .iter()
-        .map(|t| rt.upload(t))
-        .collect::<Result<Vec<_>>>()?;
-    Ok(DeviceWeights { buffers })
 }

@@ -6,6 +6,11 @@
 //! the eval/serve paths consume. ABI: inputs `p[0..n], m[0..n], v[0..n],
 //! step, tokens`, outputs the same plus the scalar loss (see
 //! training.train_step).
+//!
+//! Training runs through [`Executable::execute_raw`], which only the `pjrt`
+//! backend implements today — the reference backend rejects it with a clear
+//! error (interpreting the fused backward pass is out of scope for the
+//! hermetic path; see runtime/reference.rs).
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -53,25 +58,25 @@ pub fn train(
     log_every: usize,
 ) -> Result<TrainReport> {
     let entry = model.train_entry()?;
-    let exe = rt.load_entry(man, entry)?;
+    let exe = rt.load_entry(man, model, entry)?;
     let n = model.params.len();
     let corpus = Corpus::load(man.path(&man.train_file))?;
     corpus.validate(model.vocab_size)?;
     let mut rng = Rng::new(seed);
 
     let weights = Weights::load_init(man, model)?;
-    let mut params: Vec<xla::Literal> = weights.to_literals()?;
-    let mut m: Vec<xla::Literal> = weights
+    let mut params: Vec<HostTensor> = weights.tensors.clone();
+    let mut m: Vec<HostTensor> = weights
         .tensors
         .iter()
-        .map(|t| HostTensor::zeros_f32(t.shape.clone()).to_literal())
-        .collect::<Result<_>>()?;
-    let mut v: Vec<xla::Literal> = weights
+        .map(|t| HostTensor::zeros_f32(t.shape.clone()))
+        .collect();
+    let mut v: Vec<HostTensor> = weights
         .tensors
         .iter()
-        .map(|t| HostTensor::zeros_f32(t.shape.clone()).to_literal())
-        .collect::<Result<_>>()?;
-    let mut step_lit = HostTensor::scalar_i32(0).to_literal()?;
+        .map(|t| HostTensor::zeros_f32(t.shape.clone()))
+        .collect();
+    let mut step_t = HostTensor::scalar_i32(0);
 
     let t0 = Instant::now();
     let mut losses = Vec::with_capacity(steps);
@@ -80,26 +85,28 @@ pub fn train(
     for step in 0..steps {
         let batch = corpus.sample_batch(&mut rng, entry.batch, entry.seq_len);
         tokens_seen += batch.len() as u64;
-        let tokens = HostTensor::i32(vec![entry.batch, entry.seq_len], batch).to_literal()?;
+        let tokens = HostTensor::i32(vec![entry.batch, entry.seq_len], batch);
 
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 2);
+        // Borrow, don't clone: params/opt state stay owned across steps and
+        // only references cross the trait boundary.
+        let mut args: Vec<&HostTensor> = Vec::with_capacity(3 * n + 2);
         args.extend(params.iter());
         args.extend(m.iter());
         args.extend(v.iter());
-        args.push(&step_lit);
+        args.push(&step_t);
         args.push(&tokens);
 
-        let outs = exe.run(&args).context("train step")?;
+        let outs = exe.execute_raw(&args).context("train step")?;
         ensure!(outs.len() == 3 * n + 2, "train step returned {} outputs", outs.len());
 
         let loss = outs[3 * n + 1].as_f32()?[0];
         ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
         losses.push(loss);
 
-        params = outs[..n].iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        m = outs[n..2 * n].iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        v = outs[2 * n..3 * n].iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        step_lit = outs[3 * n].to_literal()?;
+        params = outs[..n].to_vec();
+        m = outs[n..2 * n].to_vec();
+        v = outs[2 * n..3 * n].to_vec();
+        step_t = outs[3 * n].clone();
 
         if log_every > 0 && (step % log_every == 0 || step + 1 == steps) {
             println!(
@@ -114,11 +121,7 @@ pub fn train(
     }
 
     // Save checkpoint (params only).
-    let final_tensors: Result<Vec<HostTensor>> = params
-        .iter()
-        .map(|l| HostTensor::from_literal(l))
-        .collect();
-    let trained = Weights { tensors: final_tensors? };
+    let trained = Weights { tensors: params };
     let ckpt = checkpoint_path(man, &model.name);
     trained.save(model, &ckpt)?;
 

@@ -1,0 +1,300 @@
+//! Hermetic integration tests: the synthetic-fixture generator plus the
+//! pure-Rust reference backend, end to end — no `artifacts/` directory, no
+//! Python, no XLA. This is the suite that keeps tier-1 green from a clean
+//! checkout.
+//!
+//! Covered here:
+//! * fixture generation round-trips through the ordinary Manifest /
+//!   Tokenizer / Corpus / Weights loaders and honours their contracts;
+//! * the reference backend's eval programs honour the kept-map contract
+//!   (dense = identity; reduced = strictly ascending, `out_len` survivors);
+//! * the serving coordinator (router → batcher → engine) runs its
+//!   prefill → decode loop end to end on the reference backend;
+//! * the zero-shot eval harness produces six task results hermetically;
+//! * decode is deterministic and consumes exactly the states prefill
+//!   produced;
+//! * the reference backend rejects the (pjrt-only) train step loudly.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use tor_ssm::coordinator::batcher::Batcher;
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::router::{Policy, Router};
+use tor_ssm::coordinator::Request;
+use tor_ssm::data::{check_tasks_closed, load_tasks, Corpus};
+use tor_ssm::fixtures::{generate_default, FixtureSpec};
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::{HostTensor, Runtime, Weights};
+use tor_ssm::tokenizer::Tokenizer;
+
+/// Unique per-test fixture dir (tests run in parallel threads).
+fn fixture(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!("tor-ssm-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let man = generate_default(&dir).expect("fixture generation");
+    (dir, man)
+}
+
+fn cleanup(dir: &PathBuf) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn fixture_roundtrips_through_loaders() {
+    let (dir, man) = fixture("roundtrip");
+    assert_eq!(man.models.len(), 2, "fixture exports two substrates");
+
+    let tok = Tokenizer::load(man.path(&man.vocab_file)).unwrap();
+    assert!(tok.len() >= 100);
+    let tasks = load_tasks(man.path(&man.tasks_file)).unwrap();
+    assert_eq!(tasks.len(), 6);
+    for t in &tasks {
+        assert!(!t.items.is_empty(), "{} empty", t.name);
+        for it in &t.items {
+            assert!(it.answer < it.choices.len().max(1));
+        }
+    }
+    check_tasks_closed(&tasks, &tok).unwrap();
+
+    let corpus = Corpus::load(man.path(&man.train_file)).unwrap();
+    corpus.validate(tok.len()).unwrap();
+
+    for (name, m) in &man.models {
+        assert_eq!(name, &m.name);
+        // Param metadata contiguous + weights blob loadable.
+        let mut expect_offset = 0usize;
+        for p in &m.params {
+            assert_eq!(p.offset, expect_offset, "{name}:{} offset", p.name);
+            assert_eq!(p.bytes, p.shape.iter().product::<usize>() * 4);
+            expect_offset += p.bytes;
+        }
+        let w = Weights::load_init(&man, m).unwrap();
+        assert_eq!(w.tensors.len(), m.params.len());
+        // Every model exports the core variants.
+        assert!(m.hlo.contains_key("dense"), "{name} missing dense");
+        assert!(m.hlo.contains_key("decode_step"));
+        assert!(m.hlo.contains_key("train_step"));
+        assert!(m.find_eval("utrc", 0.20, None, None, None, None).is_ok());
+        assert!(m.prefill_entry("dense", 0.0).is_ok());
+        assert!(m.prefill_entry("utrc", 0.20).is_ok());
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn reference_eval_honours_kept_contract() {
+    let (dir, man) = fixture("kept");
+    let rt = Runtime::reference().unwrap();
+    for model_name in ["ref-mamba", "ref-mamba2"] {
+        let model = man.model(model_name).unwrap().clone();
+        let w = Weights::load_init(&man, &model).unwrap();
+        let dw = rt.upload_weights(&model, &w).unwrap();
+
+        // Dense: kept is the identity, logits full-length and finite.
+        let dense = model.find_eval("dense", 0.0, None, None, None, None).unwrap().clone();
+        let tokens: Vec<i32> = (0..dense.batch * dense.seq_len)
+            .map(|i| ((i * 13 + 5) % model.vocab_size) as i32)
+            .collect();
+        let tok = HostTensor::i32(vec![dense.batch, dense.seq_len], tokens);
+        let exe = rt.load_entry(&man, &model, &dense).unwrap();
+        let outs = exe.execute(&dw, &[tok.clone()]).unwrap();
+        assert_eq!(outs[0].shape, vec![dense.batch, dense.seq_len, model.vocab_size]);
+        let kept = outs[1].as_i32().unwrap();
+        for b in 0..dense.batch {
+            for i in 0..dense.seq_len {
+                assert_eq!(kept[b * dense.seq_len + i], i as i32, "{model_name} dense kept");
+            }
+        }
+        assert!(outs[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+
+        // Reduced: out_len < seq_len survivors, strictly ascending positions.
+        let red = model.find_eval("utrc", 0.20, None, None, None, None).unwrap().clone();
+        assert!(red.out_len < red.seq_len, "{model_name} utrc out_len");
+        let exe = rt.load_entry(&man, &model, &red).unwrap();
+        let outs = exe.execute(&dw, &[tok]).unwrap();
+        assert_eq!(outs[0].shape, vec![red.batch, red.out_len, model.vocab_size]);
+        assert_eq!(outs[1].shape, vec![red.batch, red.out_len]);
+        let kept = outs[1].as_i32().unwrap();
+        for b in 0..red.batch {
+            let row = &kept[b * red.out_len..(b + 1) * red.out_len];
+            assert!(row[0] >= 0);
+            for w2 in row.windows(2) {
+                assert!(w2[0] < w2[1], "{model_name} kept not ascending: {w2:?}");
+            }
+            assert!(*row.last().unwrap() < red.seq_len as i32);
+        }
+        assert!(outs[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn coordinator_prefill_decode_loop_end_to_end() {
+    // The acceptance path: router → batcher → engine prefill → decode loop,
+    // entirely on the reference backend, from a clean checkout.
+    let (dir, man) = fixture("e2e");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+
+    let lanes = ["dense", "utrc@0.2"];
+    let engines: Vec<Engine> = lanes
+        .iter()
+        .map(|v| Engine::new(&rt, &man, &model, &w, v).unwrap())
+        .collect();
+    let mut router = Router::new(Policy::CostAware { long_prompt: man.prefill_seq_len / 2 }, &lanes);
+    let mut batchers: Vec<Batcher> =
+        engines.iter().map(|e| Batcher::new(e.batch, Duration::from_millis(0))).collect();
+
+    let gen_tokens: usize = 4;
+    let n_requests: usize = 5;
+    let mut served = 0usize;
+    for i in 0..n_requests {
+        // Mixed prompt lengths so the cost-aware router uses both lanes.
+        let plen = if i % 2 == 0 { man.prefill_seq_len } else { man.prefill_seq_len / 4 };
+        let prompt: Vec<i32> = (0..plen).map(|t| ((t * 7 + i) % model.vocab_size) as i32).collect();
+        let req = Request {
+            id: i as u64,
+            prompt,
+            gen_tokens,
+            variant: String::new(),
+            arrived_us: 0,
+        };
+        let lane = router.route(&req).unwrap();
+        let li = lanes.iter().position(|l| *l == lane).unwrap();
+        router.note_enqueued(&lane);
+        batchers[li].push(req);
+        for (bi, b) in batchers.iter_mut().enumerate() {
+            while let Some(batch) = b.poll(std::time::Instant::now()) {
+                let responses = engines[bi].serve_batch(&batch).unwrap();
+                assert_eq!(responses.len(), batch.len());
+                for (req, resp) in batch.iter().zip(&responses) {
+                    assert_eq!(resp.id, req.id);
+                    assert_eq!(resp.generated.len(), gen_tokens, "full generation");
+                    for &t in &resp.generated {
+                        assert!(t >= 0 && (t as usize) < model.vocab_size);
+                    }
+                    assert_eq!(resp.variant, lanes[bi]);
+                    router.note_done(&lanes[bi]);
+                    served += 1;
+                }
+            }
+        }
+    }
+    for (bi, b) in batchers.iter_mut().enumerate() {
+        while let Some(batch) = b.drain() {
+            let responses = engines[bi].serve_batch(&batch).unwrap();
+            for resp in &responses {
+                assert_eq!(resp.generated.len(), gen_tokens);
+                router.note_done(&lanes[bi]);
+                served += 1;
+            }
+        }
+    }
+    assert_eq!(served, n_requests, "every request served exactly once");
+    // Both lanes drained back to empty.
+    for lane in &lanes {
+        assert_eq!(router.depth(lane), 0);
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn eval_harness_runs_hermetically() {
+    let (dir, _man) = fixture("eval");
+    let items = 2;
+    let mut ctx = tor_ssm::bench::Ctx::new(&dir.to_string_lossy(), items, true).unwrap();
+    for (method, ratio) in [("dense", 0.0), ("utrc", 0.20)] {
+        let e = ctx
+            .find_eval_entry("ref-mamba", method, ratio, None, None, None, None)
+            .unwrap();
+        let r = ctx.eval_variant("ref-mamba", &e).unwrap();
+        assert_eq!(r.tasks.len(), 6);
+        assert!(r.sequences > 0);
+        for t in &r.tasks {
+            assert!(t.n_items > 0 && t.n_items <= items);
+            assert!((0.0..=1.0).contains(&t.acc_truncated), "{method} {}", t.name);
+            assert!((0.0..=1.0).contains(&t.acc_aligned));
+        }
+        // s-lambada reports a finite perplexity.
+        let ppl = r.lambada_ppl(tor_ssm::eval::scoring::Scheme::Truncated);
+        assert!(ppl.is_finite() && ppl > 0.0, "{method} ppl = {ppl}");
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn decode_is_deterministic_and_continues_prefill() {
+    let (dir, man) = fixture("decode");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba2").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let dw = rt.upload_weights(&model, &w).unwrap();
+
+    let pf = model.prefill_entry("dense", 0.0).unwrap().clone();
+    let dec = model.decode_entry().unwrap().clone();
+    let prefill = rt.load_entry(&man, &model, &pf).unwrap();
+    let decode = rt.load_entry(&man, &model, &dec).unwrap();
+
+    let tokens: Vec<i32> = (0..pf.batch * pf.seq_len)
+        .map(|i| ((i * 11 + 3) % model.vocab_size) as i32)
+        .collect();
+    let tok = HostTensor::i32(vec![pf.batch, pf.seq_len], tokens);
+    let outs = prefill.execute(&dw, &[tok]).unwrap();
+    assert_eq!(outs.len(), 3, "prefill returns (logits, conv, ssm)");
+    let (logits, conv, ssm) = (&outs[0], &outs[1], &outs[2]);
+    assert_eq!(logits.shape, vec![pf.batch, model.vocab_size]);
+    // States are non-trivial after a real prompt.
+    assert!(ssm.as_f32().unwrap().iter().any(|&x| x != 0.0), "ssm state all zero");
+
+    let step_tok = HostTensor::i32(vec![pf.batch], vec![9; pf.batch]);
+    let a = decode
+        .execute(&dw, &[step_tok.clone(), conv.clone(), ssm.clone()])
+        .unwrap();
+    let b = decode
+        .execute(&dw, &[step_tok, conv.clone(), ssm.clone()])
+        .unwrap();
+    assert_eq!(a.len(), 3);
+    // Deterministic: identical inputs → identical outputs.
+    assert_eq!(a[0], b[0]);
+    assert_eq!(a[1], b[1]);
+    assert_eq!(a[2], b[2]);
+    // State evolves: the new ssm differs from the input ssm.
+    assert_ne!(a[2].as_f32().unwrap(), ssm.as_f32().unwrap());
+    // Shapes preserved for the next step.
+    assert_eq!(a[1].shape, conv.shape);
+    assert_eq!(a[2].shape, ssm.shape);
+    cleanup(&dir);
+}
+
+#[test]
+fn reference_backend_rejects_train_step() {
+    let (dir, man) = fixture("train");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let err = tor_ssm::train::train(&rt, &man, &model, 1, 1, 0).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pjrt"), "error should point at the pjrt backend: {msg}");
+    cleanup(&dir);
+}
+
+#[test]
+fn fixture_spec_is_deterministic() {
+    // Same seed → byte-identical weight blobs (the whole hermetic suite
+    // depends on this reproducibility).
+    let dir_a = std::env::temp_dir().join(format!("tor-ssm-det-a-{}", std::process::id()));
+    let dir_b = std::env::temp_dir().join(format!("tor-ssm-det-b-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+    let spec = FixtureSpec::default();
+    tor_ssm::fixtures::generate(&dir_a, &spec).unwrap();
+    tor_ssm::fixtures::generate(&dir_b, &spec).unwrap();
+    for file in ["manifest.json", "init_ref-mamba.bin", "train.bin", "tasks.json"] {
+        let a = std::fs::read(dir_a.join(file)).unwrap();
+        let b = std::fs::read(dir_b.join(file)).unwrap();
+        assert_eq!(a, b, "{file} not deterministic");
+    }
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}

@@ -1,6 +1,11 @@
 //! Integration tests over real artifacts (require `make artifacts`, or at
 //! least `make artifacts-quick`). Each test that needs artifacts skips
 //! gracefully when they are absent so `cargo test` works in any state.
+//! The execution tests additionally need a backend that can run real AOT
+//! exports (the pjrt feature + extension); on the default reference backend
+//! they skip when weight binding rejects the AOT param layout.
+//!
+//! The hermetic (artifact-free) suite lives in `tests/fixtures.rs`.
 
 use tor_ssm::data::{check_tasks_closed, load_tasks, Corpus};
 use tor_ssm::manifest::Manifest;
@@ -114,6 +119,17 @@ fn param_count_matches_dims_model() {
 fn golden_numerics_cross_check() {
     let man = need!(manifest());
     let rt = Runtime::cpu().unwrap();
+    // The golden fixture pins AOT numerics; it is only meaningful on a
+    // backend that executes the AOT exports.
+    if rt.upload_weights(
+        man.model("mamba-small").unwrap(),
+        &Weights::load_init(&man, man.model("mamba-small").unwrap()).unwrap(),
+    )
+    .is_err()
+    {
+        eprintln!("SKIP: default backend cannot execute AOT artifacts (build with --features pjrt)");
+        return;
+    }
     let report = tor_ssm::bench::harness::golden_check(&rt, &man).unwrap();
     assert!(report.contains("golden OK"), "{report}");
 }
@@ -129,15 +145,16 @@ fn reduced_forward_shapes_and_kept_map() {
     assert!(entry.out_len < entry.seq_len);
 
     let w = Weights::load_init(&man, &model).unwrap();
-    let dw = rt.upload_weights(&man, &model, &w).unwrap();
-    let exe = rt.load_entry(&man, &entry).unwrap();
+    let Ok(dw) = rt.upload_weights(&model, &w) else {
+        eprintln!("SKIP: default backend cannot execute AOT artifacts (build with --features pjrt)");
+        return;
+    };
+    let exe = rt.load_entry(&man, &model, &entry).unwrap();
     let tokens: Vec<i32> = (0..entry.batch * entry.seq_len)
         .map(|i| ((i * 13 + 5) % model.vocab_size) as i32)
         .collect();
-    let tok = rt.upload(&HostTensor::i32(vec![entry.batch, entry.seq_len], tokens)).unwrap();
-    let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
-    args.push(&tok);
-    let outs = exe.run_b(&args).unwrap();
+    let tok = HostTensor::i32(vec![entry.batch, entry.seq_len], tokens);
+    let outs = exe.execute(&dw, &[tok]).unwrap();
 
     assert_eq!(outs[0].shape, vec![entry.batch, entry.out_len, model.vocab_size]);
     assert_eq!(outs[1].shape, vec![entry.batch, entry.out_len]);
@@ -157,26 +174,20 @@ fn reduced_forward_shapes_and_kept_map() {
 
 #[test]
 fn dense_and_reduced_agree_on_prefix() {
-    // Before the first reduction layer the computation is identical, and
-    // reduction keeps early positions' logits close for the surviving
-    // positions BEFORE the first reduction boundary? (They pass through
-    // identical layers until layer 10; afterwards values differ.) We check
-    // a weaker, still meaningful invariant: position 0 survives in every
-    // method (it can be merged-into but never removed by construction? not
-    // guaranteed) — so instead: at least half the positions survive and the
-    // dense run's kept map is the identity.
+    // The dense run's kept map must be the identity (no position removed).
     let man = need!(manifest());
     let rt = Runtime::cpu().unwrap();
     let model = man.model("mamba-small").unwrap().clone();
     let entry = model.find_eval("dense", 0.0, None, None, None, None).unwrap().clone();
     let w = Weights::load_init(&man, &model).unwrap();
-    let dw = rt.upload_weights(&man, &model, &w).unwrap();
-    let exe = rt.load_entry(&man, &entry).unwrap();
+    let Ok(dw) = rt.upload_weights(&model, &w) else {
+        eprintln!("SKIP: default backend cannot execute AOT artifacts (build with --features pjrt)");
+        return;
+    };
+    let exe = rt.load_entry(&man, &model, &entry).unwrap();
     let tokens: Vec<i32> = vec![7; entry.batch * entry.seq_len];
-    let tok = rt.upload(&HostTensor::i32(vec![entry.batch, entry.seq_len], tokens)).unwrap();
-    let mut args: Vec<&xla::PjRtBuffer> = dw.buffers.iter().collect();
-    args.push(&tok);
-    let outs = exe.run_b(&args).unwrap();
+    let tok = HostTensor::i32(vec![entry.batch, entry.seq_len], tokens);
+    let outs = exe.execute(&dw, &[tok]).unwrap();
     let kept = outs[1].as_i32().unwrap();
     for b in 0..entry.batch {
         for i in 0..entry.seq_len {

@@ -1,0 +1,141 @@
+//! Property tests for the schedule solver, in the style of
+//! `prop_coordinator.rs` (seeded random-case runner with failure-seed
+//! reporting): random `ModelDims` and location sets, broader than the
+//! coordinator suite's solver property — it also randomises expand/vocab
+//! geometry, covers the dense/degenerate paths, and pins the
+//! tolerance-or-error contract.
+//!
+//! Invariants, for every feasible solve:
+//! * `seg_lens` has exactly `locations.len() + 1` entries, starts at
+//!   `seq_len`, is monotone non-increasing, and every post-reduction
+//!   segment length is even;
+//! * `removed[i] == seg_lens[i] - seg_lens[i+1]` and never exceeds half the
+//!   incoming segment (the M_A-set limit);
+//! * the achieved FLOPs reduction lands within the 0.05 tolerance of the
+//!   target — or `solve_schedule` returns an error (never a silently-bad
+//!   plan);
+//! * `final_len`/`len_at_layer` agree with the segment structure.
+
+use tor_ssm::reduction::{solve_schedule, total_flops, Arch, ModelDims};
+use tor_ssm::util::rng::Rng;
+
+const CASES: u64 = 300;
+
+fn for_cases(name: &str, mut f: impl FnMut(&mut Rng)) {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_dims(rng: &mut Rng) -> ModelDims {
+    let arch = if rng.f64() < 0.5 { Arch::Mamba } else { Arch::Mamba2 };
+    ModelDims {
+        name: "prop-schedule".into(),
+        arch,
+        vocab_size: 256 + rng.below(8192),
+        d_model: 64 * (1 + rng.below(10)),
+        n_layer: 8 + rng.below(56),
+        d_state: 8 * (1 + rng.below(16)),
+        expand: 1 + rng.below(2),
+        d_conv: 4,
+        headdim: 64,
+        chunk: 64 * (1 + rng.below(4)),
+    }
+}
+
+#[test]
+fn prop_solver_invariants_and_tolerance() {
+    for_cases("solver", |rng| {
+        let dims = random_dims(rng);
+        let seq_len = 32 * (1 + rng.below(64));
+        let start = 2 + rng.below(dims.n_layer / 2);
+        let stride = 2 + rng.below(5);
+        let k = 1 + rng.below(6);
+        let locations: Vec<usize> = (0..k)
+            .map(|i| start + stride * i)
+            .filter(|&l| l < dims.n_layer)
+            .collect();
+        if locations.is_empty() {
+            return;
+        }
+        let target = 0.05 + rng.f64() * 0.30;
+
+        let plan = match solve_schedule(&dims, seq_len, &locations, target) {
+            Ok(p) => p,
+            // The error path IS the contract for infeasible targets: the
+            // solver must refuse rather than return an off-target plan.
+            Err(_) => return,
+        };
+
+        assert_eq!(plan.seq_len, seq_len);
+        assert_eq!(plan.locations, locations);
+        assert_eq!(plan.seg_lens.len(), locations.len() + 1, "one segment per site + entry");
+        assert_eq!(plan.seg_lens[0], seq_len, "first segment sees the full sequence");
+        for w in plan.seg_lens.windows(2) {
+            assert!(w[1] <= w[0], "seg lens must not grow: {:?}", plan.seg_lens);
+            assert_eq!(w[1] % 2, 0, "post-reduction lens must be even: {:?}", plan.seg_lens);
+        }
+        assert_eq!(plan.removed.len(), locations.len());
+        for (i, &r) in plan.removed.iter().enumerate() {
+            assert_eq!(plan.seg_lens[i] - plan.seg_lens[i + 1], r, "removed bookkeeping");
+            assert!(
+                r <= plan.seg_lens[i] / 2,
+                "half-removal limit violated: removed {r} of {}",
+                plan.seg_lens[i]
+            );
+        }
+        assert!(
+            (plan.flops_reduction - target).abs() <= 0.05,
+            "solver returned an off-target plan: achieved {} for target {target}",
+            plan.flops_reduction
+        );
+
+        // len_at_layer is consistent with the segment structure + total
+        // FLOPs recomputed from it matches the plan's achieved reduction.
+        assert_eq!(plan.final_len(), *plan.seg_lens.last().unwrap());
+        assert_eq!(plan.len_at_layer(0), seq_len);
+        let last_layer = dims.n_layer - 1;
+        if let Some(&last_loc) = locations.last() {
+            if last_layer > last_loc {
+                assert_eq!(plan.len_at_layer(last_layer), plan.final_len());
+            }
+        }
+        let dense_lens = vec![seq_len; locations.len() + 1];
+        let dense = total_flops(&dims, &locations, &dense_lens);
+        let got = total_flops(&dims, &locations, &plan.seg_lens);
+        let recomputed = 1.0 - got / dense;
+        assert!(
+            (recomputed - plan.flops_reduction).abs() < 1e-12,
+            "plan's achieved ratio must match its own seg_lens"
+        );
+    });
+}
+
+#[test]
+fn prop_dense_and_degenerate_paths() {
+    for_cases("dense-degenerate", |rng| {
+        let dims = random_dims(rng);
+        let seq_len = 32 * (1 + rng.below(32));
+
+        // Zero target or no locations → identity plan.
+        let dense = solve_schedule(&dims, seq_len, &[], 0.0).unwrap();
+        assert_eq!(dense.seg_lens, vec![seq_len]);
+        assert_eq!(dense.flops_reduction, 0.0);
+        assert!(dense.removed.is_empty());
+
+        let no_sites = solve_schedule(&dims, seq_len, &[], 0.25).unwrap();
+        assert_eq!(no_sites.seg_lens, vec![seq_len], "no sites → nothing to remove");
+
+        // seq_len = 0 always errors, whatever the rest of the input.
+        let locs = [2 + rng.below(dims.n_layer - 2)];
+        assert!(solve_schedule(&dims, 0, &locs, 0.2).is_err());
+        assert!(solve_schedule(&dims, 0, &[], 0.0).is_err());
+
+        // Out-of-range locations always error.
+        assert!(solve_schedule(&dims, seq_len, &[dims.n_layer], 0.2).is_err());
+    });
+}
