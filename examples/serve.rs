@@ -1,6 +1,8 @@
-//! Serving demo: the full coordinator path — router → dynamic batcher →
-//! engine (prefill + decode) — on a synthetic request trace, reporting
-//! latency percentiles and throughput for dense vs token-reduced lanes.
+//! Serving demo: the full coordinator path — router → continuous-batching
+//! scheduler (iteration-level prefill admission + decode) — on a synthetic
+//! request trace with mixed generation lengths, reporting per-lane latency
+//! percentiles, throughput, and the decode-step count against the lock-step
+//! baseline (`Engine::serve_batch`).
 //!
 //! Hermetic by default: with no `artifacts/` directory it generates a
 //! synthetic fixture and serves it on the reference backend.
@@ -9,14 +11,15 @@
 //! cargo run --release --example serve -- --requests 24 --gen-tokens 24
 //! ```
 
-use std::time::{Duration, Instant};
+use std::sync::atomic::Ordering;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use tor_ssm::coordinator::batcher::Batcher;
 use tor_ssm::coordinator::engine::Engine;
 use tor_ssm::coordinator::metrics::Metrics;
 use tor_ssm::coordinator::router::{Policy, Router};
+use tor_ssm::coordinator::scheduler::Scheduler;
 use tor_ssm::coordinator::Request;
 use tor_ssm::fixtures;
 use tor_ssm::runtime::Runtime;
@@ -27,7 +30,7 @@ use tor_ssm::util::rng::Rng;
 fn main() -> Result<()> {
     let args = Args::from_env(&[]);
     let n_requests = args.usize_or("requests", 24);
-    let gen_tokens = args.usize_or("gen-tokens", 24);
+    let max_gen = args.usize_or("gen-tokens", 24);
 
     // An explicitly passed --artifacts must load (a typo'd path should be an
     // error, not a silent fall-back to the toy fixture); only the default
@@ -42,7 +45,7 @@ fn main() -> Result<()> {
     let me = man.model(&model)?.clone();
     let (w, trained) = load_best_weights(&man, &me)?;
     println!(
-        "serving {model} ({}; {}; {} requests, {gen_tokens} gen tokens each)",
+        "serving {model} ({}; {}; {} requests, 1..={max_gen} gen tokens uniform)",
         if trained { "trained weights" } else { "INIT weights" },
         if synthetic { "synthetic fixture" } else { "real artifacts" },
         n_requests
@@ -54,52 +57,61 @@ fn main() -> Result<()> {
         .map(|v| Engine::new(&rt, &man, &me, &w, v))
         .collect::<Result<_>>()?;
     println!(
-        "lanes: {lanes:?} (batch {}, prompt frame {})",
-        engines[0].batch, engines[0].prefill_len
+        "lanes: {lanes:?} (prefill batch {}, decode lanes {}, prompt frame {})",
+        engines[0].batch, engines[0].decode_batch, engines[0].prefill_len
     );
 
-    let mut router = Router::new(Policy::CostAware { long_prompt: man.prefill_seq_len / 2 }, &lanes);
-    let mut batchers: Vec<Batcher> = engines
-        .iter()
-        .map(|e| Batcher::new(e.batch, Duration::from_millis(2)))
-        .collect();
-    let mut per_lane: Vec<Metrics> = lanes.iter().map(|_| Metrics::default()).collect();
-
+    // Build the trace once so the continuous and lock-step runs serve the
+    // exact same requests (shared workload shape — see fixtures::synth_requests).
     let mut rng = Rng::new(11);
+    let trace: Vec<Request> = fixtures::synth_requests(
+        &mut rng,
+        n_requests,
+        max_gen,
+        man.prefill_seq_len,
+        me.vocab_size,
+    );
+
+    // ---- continuous batching ------------------------------------------
+    let mut router = Router::new(Policy::CostAware { long_prompt: man.prefill_seq_len / 2 }, &lanes);
+    let mut schedulers: Vec<Scheduler> = engines.iter().map(Scheduler::new).collect();
+    let mut per_lane: Vec<Metrics> = lanes.iter().map(|_| Metrics::default()).collect();
+    let mut assignment: Vec<Vec<Request>> = lanes.iter().map(|_| Vec::new()).collect();
+
+    let cont_calls0: u64 = engines.iter().map(|e| e.decode_calls.load(Ordering::Relaxed)).sum();
     let t0 = Instant::now();
-    for i in 0..n_requests {
-        // Bimodal prompt lengths: short chat-like vs long document-like.
-        let plen = if rng.f64() < 0.5 { man.prefill_seq_len } else { man.prefill_seq_len / 4 };
-        let prompt: Vec<i32> = (4..4 + plen).map(|t| (t % me.vocab_size) as i32).collect();
-        let req = Request {
-            id: i as u64,
-            prompt,
-            gen_tokens,
-            variant: String::new(),
-            arrived_us: t0.elapsed().as_micros() as u64,
-        };
+    for req in trace.iter().cloned() {
         let lane = router.route(&req)?;
         let li = lanes.iter().position(|l| *l == lane).unwrap();
         router.note_enqueued(&lane);
-        batchers[li].push(req);
-
-        for (bi, b) in batchers.iter_mut().enumerate() {
-            while let Some(batch) = b.poll(Instant::now()) {
-                run_batch(&engines[bi], &batch, &mut per_lane[bi], &mut router, &lanes[bi], t0)?;
+        per_lane[li].requests += 1;
+        assignment[li].push(req.clone());
+        schedulers[li].submit(req);
+        for (si, s) in schedulers.iter_mut().enumerate() {
+            for resp in s.step()? {
+                per_lane[si].record_response(&resp);
+                router.note_done(lanes[si]);
             }
         }
     }
-    for (bi, b) in batchers.iter_mut().enumerate() {
-        while let Some(batch) = b.drain() {
-            run_batch(&engines[bi], &batch, &mut per_lane[bi], &mut router, &lanes[bi], t0)?;
+    for (si, s) in schedulers.iter_mut().enumerate() {
+        for resp in s.drain()? {
+            per_lane[si].record_response(&resp);
+            router.note_done(lanes[si]);
         }
     }
-
     let wall = t0.elapsed();
-    println!("\nper-lane results:");
-    for (lane, m) in lanes.iter().zip(per_lane.iter_mut()) {
+    let cont_steps: u64 =
+        engines.iter().map(|e| e.decode_calls.load(Ordering::Relaxed)).sum::<u64>() - cont_calls0;
+
+    println!("\nper-lane results (continuous batching):");
+    for ((lane, m), s) in lanes.iter().zip(per_lane.iter_mut()).zip(&schedulers) {
         m.wall = wall;
         println!("  {lane:<10} {}", m.summary());
+        println!(
+            "  {:<10} prefills={} decode_steps={} peak_state={} slots ({} B)",
+            "", s.prefill_calls, s.decode_steps, s.store().high_water(), s.store().peak_bytes()
+        );
     }
     let total_gen: u64 = per_lane.iter().map(|m| m.generated_tokens).sum();
     println!(
@@ -107,29 +119,27 @@ fn main() -> Result<()> {
         wall.as_secs_f64(),
         total_gen as f64 / wall.as_secs_f64()
     );
-    Ok(())
-}
 
-fn run_batch(
-    engine: &Engine,
-    batch: &[Request],
-    metrics: &mut Metrics,
-    router: &mut Router,
-    lane: &str,
-    t0: Instant,
-) -> Result<()> {
-    let responses = engine.serve_batch(batch)?;
-    for (req, resp) in batch.iter().zip(&responses) {
-        let queue_us = t0.elapsed().as_micros() as u64 - req.arrived_us;
-        metrics.requests += 1;
-        metrics.record(
-            req.prompt.len(),
-            resp.generated.len(),
-            resp.prefill_us,
-            resp.decode_us,
-            queue_us,
-        );
-        router.note_done(lane);
+    // ---- lock-step baseline on the same per-lane assignment -----------
+    let lock_calls0: u64 = engines.iter().map(|e| e.decode_calls.load(Ordering::Relaxed)).sum();
+    let t1 = Instant::now();
+    let mut lock_gen: u64 = 0;
+    for (li, reqs) in assignment.iter().enumerate() {
+        for chunk in reqs.chunks(engines[li].max_batch()) {
+            for resp in engines[li].serve_batch(chunk)? {
+                lock_gen += resp.generated.len() as u64;
+            }
+        }
     }
+    let lock_wall = t1.elapsed();
+    let lock_steps: u64 =
+        engines.iter().map(|e| e.decode_calls.load(Ordering::Relaxed)).sum::<u64>() - lock_calls0;
+    println!(
+        "\nlock-step baseline: {lock_gen} tokens in {:.2}s -> {:.1} tok/s; \
+         decode steps {lock_steps} vs {cont_steps} continuous ({:.2}x fewer)",
+        lock_wall.as_secs_f64(),
+        lock_gen as f64 / lock_wall.as_secs_f64(),
+        lock_steps as f64 / (cont_steps.max(1)) as f64
+    );
     Ok(())
 }

@@ -1,20 +1,38 @@
-//! L3 coordinator micro-benchmarks (pure host path — no XLA): batcher,
-//! router, state pool, JSON substrate, scoring math. These are the pieces
-//! that must never be the serving bottleneck (DESIGN.md §9).
+//! L3 coordinator benchmarks (pure host path — no XLA): batcher, router,
+//! state pool, JSON substrate, scoring math — the pieces that must never be
+//! the serving bottleneck (DESIGN.md §9) — plus the headline serving
+//! comparison: lock-step `serve_batch` vs the continuous-batching
+//! [`Scheduler`] on a mixed-generation-length trace, emitted to
+//! `BENCH_coordinator.json` so CI accumulates the perf trajectory.
+//!
+//! Env knobs: `REPRO_BENCH_ITERS` (micro-bench iterations, default 50),
+//! `REPRO_BENCH_REQS` (serving-trace requests, default 48),
+//! `REPRO_BENCH_GEN` (max generation length, uniform 1..=N, default 24).
 
-use std::time::Duration;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
 
 use tor_ssm::bench::harness::Bench;
 use tor_ssm::coordinator::batcher::Batcher;
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::metrics::Metrics;
 use tor_ssm::coordinator::router::{Policy, Router};
+use tor_ssm::coordinator::scheduler::Scheduler;
 use tor_ssm::coordinator::state_pool::StatePool;
 use tor_ssm::coordinator::Request;
 use tor_ssm::eval::scoring::SeqLogits;
-use tor_ssm::util::json::Json;
+use tor_ssm::fixtures;
+use tor_ssm::runtime::Runtime;
+use tor_ssm::train::load_best_weights;
+use tor_ssm::util::json::{num, obj, s, Json};
 use tor_ssm::util::rng::Rng;
 
 fn req(id: u64, plen: usize) -> Request {
     Request { id, prompt: vec![1; plen], gen_tokens: 8, variant: String::new(), arrived_us: 0 }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
 fn main() {
@@ -89,4 +107,105 @@ fn main() {
     });
 
     b.finish();
+
+    serving_comparison();
+}
+
+/// Lock-step vs continuous batching on an identical mixed-gen-length trace,
+/// end to end on the reference backend + synthetic fixture. Writes the
+/// headline numbers (tokens/s, p50/p95 e2e latency, decode-step counts) to
+/// BENCH_coordinator.json.
+fn serving_comparison() {
+    let n_requests = env_usize("REPRO_BENCH_REQS", 48);
+    let max_gen = env_usize("REPRO_BENCH_GEN", 24).max(1);
+
+    let (man, _) = match fixtures::manifest_or_fixture(&tor_ssm::artifacts_dir()) {
+        Ok(v) => v,
+        Err(e) => {
+            println!("SKIP serving comparison: {e:#}");
+            return;
+        }
+    };
+    let rt = Runtime::reference().expect("reference backend");
+    let model_name = man.models.keys().next().expect("models").clone();
+    let model = man.model(&model_name).expect("model").clone();
+    let (w, _) = load_best_weights(&man, &model).expect("weights");
+    let engine = Engine::new(&rt, &man, &model, &w, "dense").expect("engine");
+
+    let mut rng = Rng::new(17);
+    let trace: Vec<Request> = fixtures::synth_requests(
+        &mut rng,
+        n_requests,
+        max_gen,
+        man.prefill_seq_len,
+        model.vocab_size,
+    );
+
+    // ---- lock-step: arrival-order batches, every batch decodes max(gen) --
+    let calls0 = engine.decode_calls.load(Ordering::Relaxed);
+    let mut lock = Metrics::default();
+    let t0 = Instant::now();
+    for chunk in trace.chunks(engine.max_batch()) {
+        for resp in engine.serve_batch(chunk).expect("lock-step serve") {
+            lock.record_response(&resp);
+        }
+    }
+    lock.wall = t0.elapsed();
+    let lock_steps = engine.decode_calls.load(Ordering::Relaxed) - calls0;
+
+    // ---- continuous: iteration-level scheduler over the same trace -------
+    let calls1 = engine.decode_calls.load(Ordering::Relaxed);
+    let mut cont = Metrics::default();
+    let mut sched = Scheduler::new(&engine);
+    let t1 = Instant::now();
+    let responses = sched.run(trace.clone()).expect("continuous serve");
+    cont.wall = t1.elapsed();
+    for resp in &responses {
+        cont.record_response(resp);
+    }
+    let cont_steps = engine.decode_calls.load(Ordering::Relaxed) - calls1;
+    assert_eq!(cont_steps, sched.decode_steps, "scheduler step counter drifted");
+    assert_eq!(responses.len(), n_requests);
+    assert!(
+        cont_steps <= lock_steps,
+        "continuous used MORE decode steps ({cont_steps}) than lock-step ({lock_steps})"
+    );
+
+    println!(
+        "coordinator/serving: {n_requests} reqs, gen 1..={max_gen}: lock-step {} tok/s \
+         ({lock_steps} steps) vs continuous {} tok/s ({cont_steps} steps)",
+        lock.throughput_tok_s().round(),
+        cont.throughput_tok_s().round()
+    );
+
+    let section = |m: &Metrics, steps: u64| {
+        obj(vec![
+            ("decode_steps", num(steps as f64)),
+            ("wall_s", num(m.wall.as_secs_f64())),
+            ("gen_tok_s", num(m.throughput_tok_s())),
+            ("total_tok_s", num(m.total_tok_s())),
+            ("p50_e2e_us", num(Metrics::pct(&m.e2e_us, 0.5) as f64)),
+            ("p95_e2e_us", num(Metrics::pct(&m.e2e_us, 0.95) as f64)),
+            ("p50_decode_us", num(Metrics::pct(&m.decode_us, 0.5) as f64)),
+        ])
+    };
+    let report = obj(vec![
+        ("bench", s("coordinator_serving")),
+        ("model", s(&model_name)),
+        ("requests", num(n_requests as f64)),
+        ("max_gen_tokens", num(max_gen as f64)),
+        ("gen_distribution", s("uniform 1..=max_gen")),
+        ("lockstep", section(&lock, lock_steps)),
+        ("continuous", section(&cont, cont_steps)),
+        (
+            "step_reduction",
+            num(1.0 - cont_steps as f64 / (lock_steps.max(1)) as f64),
+        ),
+    ]);
+    // Cargo runs bench binaries with CWD = the package root (rust/);
+    // REPRO_BENCH_OUT overrides the destination.
+    let out = std::env::var("REPRO_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_coordinator.json".to_string());
+    std::fs::write(&out, report.to_string()).expect("writing BENCH_coordinator.json");
+    println!("wrote {out}");
 }

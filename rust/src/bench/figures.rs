@@ -49,7 +49,7 @@ pub fn figure1(ctx: &mut Ctx) -> Result<()> {
 /// The paper's actual checkpoints, for evaluating the analytic memory model
 /// at the scale where its logits/late-layer dominance appears (our tiny
 /// substrates have V < d+3di, so layer-0 activations dominate instead —
-/// both scales are reported; see DESIGN.md §3).
+/// both scales are reported; see DESIGN.md §5).
 fn paper_dims(name: &str) -> (ModelDims, Vec<usize>) {
     let (arch, d, nl, locs): (Arch, usize, usize, Vec<usize>) = match name {
         "Mamba-1.4B" => (Arch::Mamba, 2048, 48, vec![10, 15, 20, 25, 30, 35]),

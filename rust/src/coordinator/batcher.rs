@@ -1,11 +1,15 @@
 //! Dynamic batcher: collects requests into the executable's static batch
 //! size under a size-or-deadline policy (classic serving batcher, cf. Orca).
+//! The continuous scheduler admits directly; this feeds the lock-step path.
 //!
-//! Invariants (property-tested in rust/tests/prop_coordinator.rs):
+//! Invariants (property-tested in rust/tests/prop_coordinator.rs, DESIGN.md
+//! §7):
 //! * a batch never exceeds `batch_size`;
 //! * requests leave in arrival order within a variant (FIFO);
 //! * no request is dropped or duplicated;
-//! * a non-empty queue is flushed no later than `max_wait`.
+//! * a non-empty queue is flushed no later than `max_wait` after its oldest
+//!   request **arrived** — dispatching a full batch must not restart the
+//!   clock for requests left behind (each entry keeps its own enqueue time).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -16,8 +20,9 @@ use super::Request;
 pub struct Batcher {
     pub batch_size: usize,
     pub max_wait: Duration,
-    queue: VecDeque<Request>,
-    oldest: Option<Instant>,
+    /// FIFO of (request, enqueue time): the front entry is always the
+    /// oldest, so the deadline check is just a peek.
+    queue: VecDeque<(Request, Instant)>,
     pub enqueued: u64,
     pub dispatched: u64,
 }
@@ -29,17 +34,18 @@ impl Batcher {
             batch_size,
             max_wait,
             queue: VecDeque::new(),
-            oldest: None,
             enqueued: 0,
             dispatched: 0,
         }
     }
 
     pub fn push(&mut self, r: Request) {
-        if self.queue.is_empty() {
-            self.oldest = Some(Instant::now());
-        }
-        self.queue.push_back(r);
+        self.push_at(r, Instant::now());
+    }
+
+    /// Enqueue with an explicit arrival time (deterministic tests).
+    fn push_at(&mut self, r: Request, at: Instant) {
+        self.queue.push_back((r, at));
         self.enqueued += 1;
     }
 
@@ -52,13 +58,14 @@ impl Batcher {
     }
 
     /// Non-blocking poll: returns a full batch immediately, or a partial
-    /// batch once the oldest request has waited `max_wait`, else None.
+    /// batch once the oldest queued request has waited `max_wait`, else
+    /// None.
     pub fn poll(&mut self, now: Instant) -> Option<Vec<Request>> {
         if self.queue.len() >= self.batch_size {
             return Some(self.take(self.batch_size));
         }
-        match self.oldest {
-            Some(t0) if !self.queue.is_empty() && now.duration_since(t0) >= self.max_wait => {
+        match self.queue.front() {
+            Some((_, t0)) if now.duration_since(*t0) >= self.max_wait => {
                 Some(self.take(self.queue.len()))
             }
             _ => None,
@@ -75,9 +82,8 @@ impl Batcher {
     }
 
     fn take(&mut self, n: usize) -> Vec<Request> {
-        let out: Vec<Request> = self.queue.drain(..n).collect();
+        let out: Vec<Request> = self.queue.drain(..n).map(|(r, _)| r).collect();
         self.dispatched += out.len() as u64;
-        self.oldest = if self.queue.is_empty() { None } else { Some(Instant::now()) };
         out
     }
 }
@@ -131,5 +137,47 @@ mod tests {
         b.push(req(1));
         assert_eq!(b.drain().unwrap().len(), 2);
         assert!(b.drain().is_none());
+    }
+
+    /// Regression: dispatching a full batch used to reset the wait timer
+    /// for the requests left in the queue (`oldest = Instant::now()`),
+    /// silently re-starting the deadline for requests that had already
+    /// waited. The remainder must flush `max_wait` after its own arrival.
+    #[test]
+    fn remainder_keeps_original_deadline() {
+        let wait = Duration::from_millis(50);
+        let mut b = Batcher::new(2, wait);
+        // All three arrived 10ms ago; a full batch leaves one behind.
+        let t0 = Instant::now() - Duration::from_millis(10);
+        for i in 0..3 {
+            b.push_at(req(i), t0);
+        }
+        assert_eq!(b.poll(t0 + Duration::from_millis(10)).unwrap().len(), 2);
+        // Just before t0 + max_wait: not due yet.
+        assert!(b.poll(t0 + wait - Duration::from_millis(1)).is_none());
+        // At t0 + max_wait the leftover must flush, measured from its TRUE
+        // arrival t0 — the buggy reset would have pushed the deadline past
+        // the dispatch time instead.
+        let batch = b.poll(t0 + wait).expect("remainder flush missed");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 2);
+        assert!(b.is_empty());
+    }
+
+    /// The deadline always tracks the oldest *remaining* request even when
+    /// arrivals are staggered.
+    #[test]
+    fn staggered_arrivals_flush_on_oldest() {
+        let wait = Duration::from_millis(50);
+        let mut b = Batcher::new(8, wait);
+        let t0 = Instant::now();
+        b.push_at(req(0), t0);
+        b.push_at(req(1), t0 + Duration::from_millis(30));
+        // Oldest is req 0 (arrived t0): due at t0+50 even though req 1 has
+        // only waited 20ms by then.
+        let batch = b.poll(t0 + wait).expect("deadline flush missed");
+        assert_eq!(batch.len(), 2);
+        // After the flush the queue is empty; nothing more is due.
+        assert!(b.poll(t0 + Duration::from_secs(10)).is_none());
     }
 }

@@ -1,22 +1,36 @@
-//! Execution lane for one model variant: prefill → decode loop, generic
-//! over the runtime [`Backend`](crate::runtime::Backend).
+//! Execution lane for one model variant, split into the two phases the
+//! continuous-batching scheduler composes (DESIGN.md §6):
+//!
+//! * [`Engine::prefill`] — ingest up to `batch` prompts through the static
+//!   prefill frame and slice the resulting `[n_layer, B, ...]` state frame
+//!   into per-sequence states ready for
+//!   [`StateStore::admit`](super::state_store::StateStore::admit);
+//! * [`Engine::decode_step`] — advance every lane of a [`DecodeFrame`] by
+//!   one token.
+//!
+//! [`Engine::serve_batch`] keeps the legacy lock-step path (prefill a whole
+//! batch, decode everyone for `max(gen_tokens)` steps) on top of the same
+//! two phases; it is the baseline the scheduler is benchmarked against.
 //!
 //! Weights are uploaded once at engine construction and stay backend-
 //! resident; the decode loop round-trips the (small, fixed-size) SSM states
-//! through the host each step — see DESIGN.md §Perf for the measured cost
-//! and why this is acceptable on the CPU paths (the PJRT execute API
+//! through the host each step — see DESIGN.md §9 (Perf) for the measured
+//! cost and why this is acceptable on the CPU paths (the PJRT execute API
 //! returns the root tuple as a single buffer, so state cannot stay
 //! device-side without input/output aliasing, which our HLO does not
 //! declare; the reference backend is host-resident anyway).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::manifest::{Manifest, ModelEntry};
-use crate::runtime::{DeviceWeights, Executable, HostTensor, Runtime, Weights};
+use crate::runtime::tensor::{read_lane, write_lane};
+use crate::runtime::{DeviceWeights, Executable, HostTensor, Runtime, TensorData, Weights};
 
+use super::state_store::StateStore;
 use super::{Request, Response};
 
 pub struct Engine {
@@ -25,11 +39,44 @@ pub struct Engine {
     prefill: Arc<dyn Executable>,
     decode: Arc<dyn Executable>,
     weights: DeviceWeights,
+    /// Static prefill frame: at most this many prompts per prefill call.
     pub batch: usize,
     pub prefill_len: usize,
+    /// Decode frame width: how many sequences one decode step advances.
+    pub decode_batch: usize,
+    n_layer: usize,
+    /// Per-layer, per-sequence element counts of the two decode states.
+    conv_row: usize,
+    ssm_row: usize,
+    /// Decode-frame state shapes (`[n_layer, decode_batch, ...]`).
     conv_shape: Vec<usize>,
     ssm_shape: Vec<usize>,
+    /// Prefill-output state shapes (`[n_layer, batch, ...]`).
+    pf_conv_shape: Vec<usize>,
+    pf_ssm_shape: Vec<usize>,
     vocab: usize,
+    /// Decode-frame executions since construction. This is the iteration
+    /// count continuous batching minimises; relaxed ordering — a counter,
+    /// not a synchronisation point.
+    pub decode_calls: AtomicU64,
+}
+
+/// One prompt's prefill result: the per-sequence decode state (contiguous
+/// `[n_layer, row]`, ready for the state store) plus the last-position
+/// logits row the first generated token is sampled from.
+pub struct PrefilledSeq {
+    pub conv: Vec<f32>,
+    pub ssm: Vec<f32>,
+    pub logits: Vec<f32>,
+}
+
+/// The mutable decode frame a serve loop steps: one input token and one
+/// conv/ssm state lane per slot, laid out `[n_layer, decode_batch, ...]`.
+/// Idle lanes hold PAD + zero state and are simply ignored by callers.
+pub struct DecodeFrame {
+    pub tokens: Vec<i32>,
+    pub conv: Vec<f32>,
+    pub ssm: Vec<f32>,
 }
 
 impl Engine {
@@ -48,6 +95,9 @@ impl Engine {
         let decode = rt.load_entry(man, model, dec)?;
         let dw = rt.upload_weights(model, weights)?;
         let (conv_shape, ssm_shape) = crate::runtime::decode_state_shapes(model, dec.batch);
+        let (pf_conv_shape, pf_ssm_shape) = crate::runtime::decode_state_shapes(model, pf.batch);
+        let conv_row = conv_shape[2..].iter().product();
+        let ssm_row = ssm_shape[2..].iter().product();
         Ok(Engine {
             variant: variant.to_string(),
             model_name: model.name.clone(),
@@ -56,20 +106,54 @@ impl Engine {
             weights: dw,
             batch: pf.batch,
             prefill_len: pf.seq_len,
+            decode_batch: dec.batch,
+            n_layer: model.n_layer,
+            conv_row,
+            ssm_row,
             conv_shape,
             ssm_shape,
+            pf_conv_shape,
+            pf_ssm_shape,
             vocab: model.vocab_size,
+            decode_calls: AtomicU64::new(0),
         })
     }
 
-    /// Serve one batch of requests (padded internally to the static batch).
-    /// Returns one Response per request, in order.
-    pub fn serve_batch(&self, reqs: &[Request]) -> Result<Vec<Response>> {
-        ensure!(!reqs.is_empty(), "empty batch");
-        ensure!(reqs.len() <= self.batch, "batch overflow: {} > {}", reqs.len(), self.batch);
-        let now = Instant::now();
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
 
-        // ---- prefill ----
+    /// `(n_layer, conv_row, ssm_row)` — the per-sequence state geometry.
+    pub fn state_dims(&self) -> (usize, usize, usize) {
+        (self.n_layer, self.conv_row, self.ssm_row)
+    }
+
+    /// A [`StateStore`] sized for this engine's state geometry.
+    pub fn new_store(&self, capacity: usize) -> StateStore {
+        StateStore::new(capacity, self.n_layer, self.conv_row, self.ssm_row)
+    }
+
+    /// A zeroed decode frame (every lane idle).
+    pub fn new_frame(&self) -> DecodeFrame {
+        DecodeFrame {
+            tokens: vec![crate::tokenizer::PAD as i32; self.decode_batch],
+            conv: vec![0.0; self.conv_shape.iter().product()],
+            ssm: vec![0.0; self.ssm_shape.iter().product()],
+        }
+    }
+
+    /// Phase 1: run the static prefill frame over up to `self.batch` prompts
+    /// (right-padded/truncated to `prefill_len`). Returns one per-sequence
+    /// state + first-logits row per request, plus the call's wall time in µs.
+    ///
+    /// Each prompt flows through the model independently, so a prompt's
+    /// returned state is bit-identical whether it was prefilled alone or
+    /// alongside others — the property the continuous scheduler's
+    /// "identical output to lock-step" guarantee rests on.
+    pub fn prefill(&self, reqs: &[Request]) -> Result<(Vec<PrefilledSeq>, u64)> {
+        ensure!(!reqs.is_empty(), "empty prefill batch");
+        ensure!(reqs.len() <= self.batch, "prefill overflow: {} > {}", reqs.len(), self.batch);
+        let t0 = Instant::now();
         let mut flat = Vec::with_capacity(self.batch * self.prefill_len);
         for r in reqs {
             let mut p = r.prompt.clone();
@@ -80,51 +164,143 @@ impl Engine {
         let tokens = HostTensor::i32(vec![self.batch, self.prefill_len], flat);
         let mut outs = self.prefill.execute(&self.weights, &[tokens]).context("prefill")?;
         ensure!(outs.len() == 3, "prefill must return (logits, conv, ssm)");
-        let mut ssm = outs.pop().unwrap();
-        let mut conv = outs.pop().unwrap();
-        let mut logits = outs.pop().unwrap();
+        let ssm_t = outs.pop().unwrap();
+        let conv_t = outs.pop().unwrap();
+        let logits_t = outs.pop().unwrap();
         ensure!(
-            conv.shape == self.conv_shape,
-            "conv state shape {:?} != {:?}",
-            conv.shape,
+            conv_t.shape == self.pf_conv_shape,
+            "prefill conv state shape {:?} != {:?}",
+            conv_t.shape,
+            self.pf_conv_shape
+        );
+        ensure!(
+            ssm_t.shape == self.pf_ssm_shape,
+            "prefill ssm state shape {:?} != {:?}",
+            ssm_t.shape,
+            self.pf_ssm_shape
+        );
+        ensure!(
+            logits_t.shape == vec![self.batch, self.vocab],
+            "prefill logits shape {:?} != [{}, {}]",
+            logits_t.shape,
+            self.batch,
+            self.vocab
+        );
+        let lv = logits_t.as_f32()?;
+        let conv_f = conv_t.as_f32()?;
+        let ssm_f = ssm_t.as_f32()?;
+        let mut seqs = Vec::with_capacity(reqs.len());
+        for i in 0..reqs.len() {
+            let mut conv = vec![0.0f32; self.n_layer * self.conv_row];
+            let mut ssm = vec![0.0f32; self.n_layer * self.ssm_row];
+            read_lane(conv_f, self.n_layer, self.batch, self.conv_row, i, &mut conv);
+            read_lane(ssm_f, self.n_layer, self.batch, self.ssm_row, i, &mut ssm);
+            seqs.push(PrefilledSeq {
+                conv,
+                ssm,
+                logits: lv[i * self.vocab..(i + 1) * self.vocab].to_vec(),
+            });
+        }
+        Ok((seqs, t0.elapsed().as_micros() as u64))
+    }
+
+    /// Phase 2: advance every lane of `frame` one token. The new conv/ssm
+    /// states are written back into the frame; the `[decode_batch × vocab]`
+    /// logits are returned row-major. On error the frame's original states
+    /// are restored, so a long-lived frame stays structurally valid.
+    pub fn decode_step(&self, frame: &mut DecodeFrame) -> Result<Vec<f32>> {
+        ensure!(
+            frame.tokens.len() == self.decode_batch,
+            "decode frame has {} token lanes, engine expects {}",
+            frame.tokens.len(),
+            self.decode_batch
+        );
+        let tok = HostTensor::i32(vec![self.decode_batch], frame.tokens.clone());
+        let conv_in = HostTensor::f32(self.conv_shape.clone(), std::mem::take(&mut frame.conv));
+        let ssm_in = HostTensor::f32(self.ssm_shape.clone(), std::mem::take(&mut frame.ssm));
+        let inputs = [tok, conv_in, ssm_in];
+        match self.run_decode(&inputs) {
+            Ok((logits, conv, ssm)) => {
+                frame.conv = conv;
+                frame.ssm = ssm;
+                Ok(logits)
+            }
+            Err(e) => {
+                let [_, conv_in, ssm_in] = inputs;
+                frame.conv = into_f32(conv_in)?;
+                frame.ssm = into_f32(ssm_in)?;
+                Err(e)
+            }
+        }
+    }
+
+    /// Execute + validate one decode call; returns owned (logits, conv, ssm).
+    fn run_decode(&self, inputs: &[HostTensor; 3]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mut outs = self.decode.execute(&self.weights, inputs).context("decode step")?;
+        self.decode_calls.fetch_add(1, Ordering::Relaxed);
+        ensure!(outs.len() == 3, "decode must return (logits, conv, ssm)");
+        let ssm_t = outs.pop().unwrap();
+        let conv_t = outs.pop().unwrap();
+        let logits_t = outs.pop().unwrap();
+        ensure!(
+            conv_t.shape == self.conv_shape,
+            "decode conv state shape {:?} != {:?}",
+            conv_t.shape,
             self.conv_shape
         );
-        ensure!(ssm.shape == self.ssm_shape, "ssm state shape mismatch");
-        let prefill_us = now.elapsed().as_micros() as u64;
+        ensure!(ssm_t.shape == self.ssm_shape, "decode ssm state shape mismatch");
+        Ok((into_f32(logits_t)?, into_f32(conv_t)?, into_f32(ssm_t)?))
+    }
 
-        // ---- decode loop ----
+    /// The largest request batch the lock-step `serve_batch` path accepts:
+    /// bounded by both the static prefill frame and the decode frame.
+    pub fn max_batch(&self) -> usize {
+        self.batch.min(self.decode_batch)
+    }
+
+    /// Lock-step baseline: serve one batch of requests (padded internally to
+    /// the static frames), decoding every lane for `max(gen_tokens)` steps.
+    /// Returns one Response per request, in order. Kept as the comparison
+    /// path for the continuous scheduler (same phases, so identical tokens).
+    pub fn serve_batch(&self, reqs: &[Request]) -> Result<Vec<Response>> {
+        ensure!(!reqs.is_empty(), "empty batch");
+        ensure!(reqs.len() <= self.batch, "batch overflow: {} > {}", reqs.len(), self.batch);
+        ensure!(
+            reqs.len() <= self.decode_batch,
+            "decode frame overflow: {} > {}",
+            reqs.len(),
+            self.decode_batch
+        );
+        let (seqs, prefill_us) = self.prefill(reqs)?;
+
         let t_dec = Instant::now();
+        let mut frame = self.new_frame();
+        let mut logits = vec![0.0f32; self.decode_batch * self.vocab];
+        for (i, s) in seqs.iter().enumerate() {
+            write_lane(&mut frame.conv, self.n_layer, self.decode_batch, self.conv_row, i, &s.conv);
+            write_lane(&mut frame.ssm, self.n_layer, self.decode_batch, self.ssm_row, i, &s.ssm);
+            logits[i * self.vocab..(i + 1) * self.vocab].copy_from_slice(&s.logits);
+        }
         let gen_tokens = reqs.iter().map(|r| r.gen_tokens).max().unwrap_or(0);
         let mut generated: Vec<Vec<i32>> = vec![Vec::new(); reqs.len()];
-        for _step in 0..gen_tokens {
-            // Greedy sample from last logits.
-            let lv = logits.as_f32()?;
-            let mut next = vec![0i32; self.batch];
-            for (b, nx) in next.iter_mut().enumerate() {
-                let row = &lv[b * self.vocab..(b + 1) * self.vocab];
-                let mut best = 0usize;
-                for (i, &v) in row.iter().enumerate() {
-                    if v > row[best] {
-                        best = i;
-                    }
-                }
-                *nx = best as i32;
-            }
+        for step in 0..gen_tokens {
+            // Greedy-sample every lane from the last logits, then step the
+            // whole frame once — even lanes that already finished (that is
+            // the lock-step waste the scheduler eliminates).
             for (i, g) in generated.iter_mut().enumerate() {
+                let next = argmax(&logits[i * self.vocab..(i + 1) * self.vocab]) as i32;
                 if g.len() < reqs[i].gen_tokens {
-                    g.push(next[i]);
+                    g.push(next);
                 }
+                frame.tokens[i] = next;
             }
-            // Step.
-            let tok_t = HostTensor::i32(vec![self.batch], next);
-            let mut outs = self
-                .decode
-                .execute(&self.weights, &[tok_t, conv, ssm])
-                .context("decode step")?;
-            ensure!(outs.len() == 3, "decode must return (logits, conv, ssm)");
-            ssm = outs.pop().unwrap();
-            conv = outs.pop().unwrap();
-            logits = outs.pop().unwrap();
+            // The final iteration only samples; its decode output would
+            // never be consumed, so skip it (a batch needs max(gen)-1
+            // decode executions, matching the continuous path's per-request
+            // gen-1 count).
+            if step + 1 < gen_tokens {
+                logits = self.decode_step(&mut frame)?;
+            }
         }
         let decode_us = t_dec.elapsed().as_micros() as u64;
 
@@ -134,6 +310,7 @@ impl Engine {
             .map(|(r, g)| Response {
                 id: r.id,
                 generated: g,
+                prompt_tokens: r.prompt.len(),
                 prefill_us,
                 decode_us,
                 queue_us: 0,
@@ -143,6 +320,28 @@ impl Engine {
     }
 }
 
+fn into_f32(t: HostTensor) -> Result<Vec<f32>> {
+    match t.data {
+        TensorData::F32(v) => Ok(v),
+        TensorData::I32(_) => bail!("expected an f32 tensor"),
+    }
+}
+
+/// Greedy sampling: index of the maximum logit. First occurrence wins —
+/// every serving path uses this same tie-break so outputs stay comparable.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Parse "dense" or "method@ratio". Reduction ratios must be a real FLOPs
+/// fraction — finite and strictly inside (0, 1); `utrc@0` is spelled
+/// "dense", and `utrc@1` would reduce the sequence to nothing.
 pub fn parse_variant(variant: &str) -> Result<(String, f64)> {
     if variant == "dense" || variant.is_empty() {
         return Ok(("dense".to_string(), 0.0));
@@ -150,7 +349,16 @@ pub fn parse_variant(variant: &str) -> Result<(String, f64)> {
     let (m, r) = variant
         .split_once('@')
         .with_context(|| format!("variant {variant:?} must be 'dense' or 'method@ratio'"))?;
-    Ok((m.to_string(), r.parse::<f64>().context("bad ratio")?))
+    ensure!(!m.is_empty(), "variant {variant:?} has an empty method");
+    let ratio: f64 = r
+        .parse()
+        .ok()
+        .with_context(|| format!("variant {variant:?}: ratio {r:?} is not a number"))?;
+    ensure!(
+        ratio.is_finite() && ratio > 0.0 && ratio < 1.0,
+        "variant {variant:?}: reduction ratio must be in (0, 1), got {ratio}"
+    );
+    Ok((m.to_string(), ratio))
 }
 
 #[cfg(test)]
@@ -160,7 +368,30 @@ mod tests {
     #[test]
     fn variant_parse() {
         assert_eq!(parse_variant("dense").unwrap(), ("dense".into(), 0.0));
+        assert_eq!(parse_variant("").unwrap(), ("dense".into(), 0.0));
         assert_eq!(parse_variant("utrc@0.2").unwrap(), ("utrc".into(), 0.2));
         assert!(parse_variant("nope").is_err());
+    }
+
+    #[test]
+    fn variant_ratio_must_be_in_unit_interval() {
+        let bad = ["utrc@-0.5", "utrc@0", "utrc@1", "utrc@7", "utrc@NaN", "utrc@inf", "utrc@-inf"];
+        for b in bad {
+            let err = parse_variant(b).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("(0, 1)"), "{b}: expected a ratio-range error, got {msg}");
+        }
+        assert!(parse_variant("utrc@abc").is_err());
+        assert!(parse_variant("@0.2").is_err(), "empty method accepted");
+        // boundary-adjacent values are fine
+        assert!(parse_variant("utrc@0.01").is_ok());
+        assert!(parse_variant("utrc@0.99").is_ok());
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0, -3.0]), 1);
     }
 }

@@ -16,6 +16,12 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Record one completed [`Response`](super::Response) — the usual entry
+    /// point for serve loops (continuous or lock-step).
+    pub fn record_response(&mut self, r: &super::Response) {
+        self.record(r.prompt_tokens, r.generated.len(), r.prefill_us, r.decode_us, r.queue_us);
+    }
+
     pub fn record(&mut self, prompt: usize, generated: usize, prefill_us: u64, decode_us: u64, queue_us: u64) {
         self.completed += 1;
         self.prompt_tokens += prompt as u64;

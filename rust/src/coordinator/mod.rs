@@ -3,20 +3,28 @@
 //!
 //! Pieces:
 //! * [`batcher`] — dynamic batching of incoming generation requests into the
-//!   executables' static batch shape (size-or-deadline policy).
+//!   executables' static batch shape (size-or-deadline policy); used by the
+//!   lock-step comparison path.
 //! * [`state_pool`] — slot manager for per-sequence SSM decode states (the
 //!   KV-cache analogue: conv tail + scan state per layer, fixed size).
+//! * [`state_store`] — the pool's slots backed by the actual per-sequence
+//!   conv/ssm tensors, with gather/scatter into the decode frame.
 //! * [`router`] — routes requests across model variants (dense vs reduction
 //!   ratios) by policy: explicit variant, or load-aware least-queued.
-//! * [`engine`] — one model variant's execution lane: prefill → decode loop,
-//!   weights device-resident, everything else streaming.
+//! * [`engine`] — one model variant's execution lane, split into
+//!   `prefill` / `decode_step` phases (plus the lock-step `serve_batch`
+//!   baseline built on them).
+//! * [`scheduler`] — the continuous-batching serve loop: iteration-level
+//!   admission into decode-frame lanes, immediate retirement (DESIGN.md §6).
 //! * [`metrics`] — counters + latency recorder shared by the serve loop.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod router;
+pub mod scheduler;
 pub mod state_pool;
+pub mod state_store;
 
 /// A generation request entering the system.
 #[derive(Debug, Clone)]
@@ -29,6 +37,9 @@ pub struct Request {
     /// Requested variant key ("dense", "utrc@0.2", ...), or empty for router
     /// choice.
     pub variant: String,
+    /// Caller-side arrival timestamp (µs since the caller's epoch) — carried
+    /// as trace metadata only. Serving queue latency is measured by the
+    /// scheduler itself, from [`scheduler::Scheduler::submit`].
     pub arrived_us: u64,
 }
 
@@ -37,6 +48,8 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub generated: Vec<i32>,
+    /// Prompt length as submitted (pre-padding), for throughput accounting.
+    pub prompt_tokens: usize,
     pub prefill_us: u64,
     pub decode_us: u64,
     pub queue_us: u64,

@@ -1,0 +1,269 @@
+//! Iteration-level (continuous) batching — the Orca-style serve loop the
+//! fixed-size SSM decode state makes cheap (DESIGN.md §6).
+//!
+//! Each [`Scheduler::step`] iteration:
+//!
+//! 1. **admit** — while decode lanes want work, prefill queued prompts in
+//!    chunks of up to the engine's prefill batch and copy each sequence's
+//!    state into the slot-backed [`StateStore`];
+//! 2. **place** — move prefilled sequences into free decode-frame lanes;
+//! 3. **decode** — gather the occupied lanes' slots into the
+//!    `[n_layer, B, ...]` decode frame, step the frame ONCE, scatter the
+//!    updated states back;
+//! 4. **retire** — any sequence that just hit its `gen_tokens` returns its
+//!    [`Response`] and releases its slot immediately, so the next arrival
+//!    can take the lane on the very next iteration.
+//!
+//! Requests with `gen_tokens <= 1` complete at admission (their only token
+//! is sampled from the prefill logits) and never consume a slot.
+//!
+//! Unlike the lock-step [`Engine::serve_batch`], no lane ever decodes a
+//! finished sequence, and timing is honest per request: `queue_us` is
+//! submit→prefill-start plus any post-prefill wait for a free decode lane,
+//! `prefill_us` is the request's actual prefill call, `decode_us`
+//! accumulates exactly the frame steps the request was resident for.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::engine::{argmax, DecodeFrame, Engine};
+use super::state_pool::Slot;
+use super::state_store::StateStore;
+use super::{Request, Response};
+
+/// One admitted sequence: identity, progress, and per-request timing.
+struct Seq {
+    id: u64,
+    slot: Slot,
+    gen_tokens: usize,
+    generated: Vec<i32>,
+    /// Token to feed on this sequence's next decode step (already recorded
+    /// in `generated`).
+    next_token: i32,
+    prompt_tokens: usize,
+    /// When prefill finished — lane-wait in `ready` is added to `queue_us`
+    /// at placement so no latency phase goes unreported.
+    prefilled: Instant,
+    queue_us: u64,
+    prefill_us: u64,
+    decode_us: u64,
+}
+
+pub struct Scheduler<'e> {
+    engine: &'e Engine,
+    store: StateStore,
+    /// Decode-frame lanes; `None` = idle.
+    lanes: Vec<Option<Seq>>,
+    frame: DecodeFrame,
+    /// Submitted, not yet prefilled.
+    queue: VecDeque<(Request, Instant)>,
+    /// Prefilled (state in the store), waiting for a decode lane.
+    ready: VecDeque<Seq>,
+    /// Decode-frame executions — the iteration count minimised vs lock-step.
+    pub decode_steps: u64,
+    /// Prefill-frame executions.
+    pub prefill_calls: u64,
+    pub submitted: u64,
+    pub completed: u64,
+}
+
+impl<'e> Scheduler<'e> {
+    /// A scheduler whose store holds one slot per decode lane plus one
+    /// prefill batch of ready-ahead sequences.
+    pub fn new(engine: &'e Engine) -> Scheduler<'e> {
+        Scheduler::with_store_slots(engine, engine.decode_batch + engine.batch)
+    }
+
+    /// A scheduler with an explicit state-store capacity (at least one slot
+    /// per decode lane).
+    pub fn with_store_slots(engine: &'e Engine, store_slots: usize) -> Scheduler<'e> {
+        let cap = store_slots.max(engine.decode_batch);
+        Scheduler {
+            engine,
+            store: engine.new_store(cap),
+            lanes: (0..engine.decode_batch).map(|_| None).collect(),
+            frame: engine.new_frame(),
+            queue: VecDeque::new(),
+            ready: VecDeque::new(),
+            decode_steps: 0,
+            prefill_calls: 0,
+            submitted: 0,
+            completed: 0,
+        }
+    }
+
+    /// Enqueue a request (FIFO admission; queue time starts now).
+    pub fn submit(&mut self, req: Request) {
+        self.submitted += 1;
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    /// True when nothing is queued, ready, or decoding.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.ready.is_empty() && self.lanes.iter().all(|l| l.is_none())
+    }
+
+    /// Everything submitted but not yet completed (router depth accounting).
+    pub fn in_flight(&self) -> usize {
+        self.queue.len() + self.ready.len() + self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// The slot-backed state store (capacity / live / peak inspection).
+    pub fn store(&self) -> &StateStore {
+        &self.store
+    }
+
+    /// One scheduler iteration (admit → place → decode → retire). Returns
+    /// the responses completed during this iteration; returns quickly with
+    /// an empty vec when fully idle.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+
+        // ---- admit: prefill queued prompts while lanes want work --------
+        // Budget: enough prefill chunks to fill every lane once, plus one.
+        // Without it a burst of gen_tokens<=1 requests (which complete at
+        // admission and never enter `ready`) would keep this loop prefilling
+        // the whole queue while resident sequences starve for their next
+        // decode step.
+        let mut admit_budget = self.lanes.len() / self.engine.batch.max(1) + 1;
+        loop {
+            let free_lanes = self.lanes.iter().filter(|l| l.is_none()).count();
+            if admit_budget == 0 || self.queue.is_empty() || self.ready.len() >= free_lanes {
+                break;
+            }
+            admit_budget -= 1;
+            let n = self.queue.len().min(self.engine.batch).min(self.store.free_slots());
+            if n == 0 {
+                break; // store full: wait for a retirement
+            }
+            // Copy the chunk out but leave it queued until prefill succeeds:
+            // a failing backend must not silently drop requests from a
+            // long-lived scheduler.
+            let queue_us: Vec<u64> = self
+                .queue
+                .iter()
+                .take(n)
+                .map(|(_, t)| t.elapsed().as_micros() as u64)
+                .collect();
+            let reqs: Vec<Request> = self.queue.iter().take(n).map(|(r, _)| r.clone()).collect();
+            let (seqs, prefill_us) = self.engine.prefill(&reqs)?;
+            self.prefill_calls += 1;
+            let _ = self.queue.drain(..n);
+            let prefilled_at = Instant::now();
+            for ((req, seq), q_us) in reqs.iter().zip(seqs).zip(queue_us) {
+                let first = argmax(&seq.logits) as i32;
+                let mut generated = Vec::new();
+                if req.gen_tokens > 0 {
+                    generated.push(first);
+                }
+                if generated.len() >= req.gen_tokens {
+                    // 0/1-token requests never need a decode lane or a slot.
+                    self.completed += 1;
+                    done.push(Response {
+                        id: req.id,
+                        generated,
+                        prompt_tokens: req.prompt.len(),
+                        prefill_us,
+                        decode_us: 0,
+                        queue_us: q_us,
+                        variant: self.engine.variant.clone(),
+                    });
+                    continue;
+                }
+                let slot = self.store.admit(&seq.conv, &seq.ssm)?;
+                self.ready.push_back(Seq {
+                    id: req.id,
+                    slot,
+                    gen_tokens: req.gen_tokens,
+                    generated,
+                    next_token: first,
+                    prompt_tokens: req.prompt.len(),
+                    prefilled: prefilled_at,
+                    queue_us: q_us,
+                    prefill_us,
+                    decode_us: 0,
+                });
+            }
+        }
+
+        // ---- place: fill free lanes from the ready queue ----------------
+        for lane in self.lanes.iter_mut() {
+            if lane.is_none() {
+                match self.ready.pop_front() {
+                    Some(mut seq) => {
+                        // Waiting in `ready` for a lane is queueing too —
+                        // fold it into queue_us so every latency phase is
+                        // reported.
+                        seq.queue_us += seq.prefilled.elapsed().as_micros() as u64;
+                        *lane = Some(seq);
+                    }
+                    None => break,
+                }
+            }
+        }
+
+        // ---- decode one frame step + retire finished lanes --------------
+        if self.lanes.iter().any(|l| l.is_some()) {
+            let slots: Vec<Option<Slot>> =
+                self.lanes.iter().map(|l| l.as_ref().map(|s| s.slot)).collect();
+            self.store.gather(&slots, &mut self.frame.conv, &mut self.frame.ssm);
+            for (i, lane) in self.lanes.iter().enumerate() {
+                self.frame.tokens[i] = match lane {
+                    Some(seq) => seq.next_token,
+                    None => crate::tokenizer::PAD as i32,
+                };
+            }
+            let t0 = Instant::now();
+            let logits = self.engine.decode_step(&mut self.frame)?;
+            let dt = t0.elapsed().as_micros() as u64;
+            self.decode_steps += 1;
+            // Write updated states back before any retirement frees a slot.
+            self.store.scatter(&slots, &self.frame.conv, &self.frame.ssm);
+
+            let vocab = self.engine.vocab();
+            for i in 0..self.lanes.len() {
+                let Some(mut seq) = self.lanes[i].take() else { continue };
+                seq.decode_us += dt;
+                let tok = argmax(&logits[i * vocab..(i + 1) * vocab]) as i32;
+                seq.generated.push(tok);
+                seq.next_token = tok;
+                if seq.generated.len() >= seq.gen_tokens {
+                    self.store.retire(seq.slot)?;
+                    self.completed += 1;
+                    done.push(Response {
+                        id: seq.id,
+                        generated: seq.generated,
+                        prompt_tokens: seq.prompt_tokens,
+                        prefill_us: seq.prefill_us,
+                        decode_us: seq.decode_us,
+                        queue_us: seq.queue_us,
+                        variant: self.engine.variant.clone(),
+                    });
+                } else {
+                    self.lanes[i] = Some(seq);
+                }
+            }
+        }
+
+        Ok(done)
+    }
+
+    /// Step until idle, collecting every response produced on the way.
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    /// Submit a whole trace and drive it to completion.
+    pub fn run(&mut self, reqs: Vec<Request>) -> Result<Vec<Response>> {
+        for r in reqs {
+            self.submit(r);
+        }
+        self.drain()
+    }
+}

@@ -43,6 +43,10 @@ impl StatePool {
         self.live.len()
     }
 
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
     pub fn alloc(&mut self) -> Result<Slot> {
         match self.free.pop() {
             Some(i) => {
@@ -69,6 +73,14 @@ impl StatePool {
     pub fn peak_bytes(&self) -> usize {
         self.high_water * self.slot_bytes
     }
+}
+
+/// Size in bytes (f32) of one slot holding `n_layer × (conv_row + ssm_row)`
+/// state elements — the element-count twin of [`slot_bytes`], used by the
+/// [`StateStore`](super::state_store::StateStore) which already knows its
+/// per-layer row widths.
+pub fn slot_bytes_raw(n_layer: usize, conv_row: usize, ssm_row: usize) -> usize {
+    n_layer * (conv_row + ssm_row) * 4
 }
 
 /// Size of one sequence's decode state in bytes (f32), from model dims.

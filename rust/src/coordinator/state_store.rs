@@ -1,0 +1,220 @@
+//! Slot-backed SSM state store: [`StatePool`] slots bound to the actual
+//! per-sequence decode tensors (conv tail + scan state), so admission into
+//! the continuous-batching scheduler is slot allocation plus two memcpys —
+//! the Mamba analogue of vLLM's KV-cache block table, minus the paging
+//! (DESIGN.md §6).
+//!
+//! Layouts:
+//! * stored per sequence: conv `[n_layer, conv_row]`, ssm `[n_layer,
+//!   ssm_row]`, both contiguous (`conv_row`/`ssm_row` are the per-layer
+//!   per-sequence element counts of the model's decode-state shapes, see
+//!   [`crate::runtime::decode_state_shapes`]);
+//! * the decode frame the engine steps: `[n_layer, n_lanes, row]`,
+//!   layer-major. [`StateStore::gather`] / [`StateStore::scatter`] convert
+//!   between the two via the lane helpers in [`crate::runtime::tensor`].
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::tensor::{read_lane, write_lane, zero_lane};
+
+use super::state_pool::{slot_bytes_raw, Slot, StatePool};
+
+#[derive(Debug)]
+pub struct StateStore {
+    pool: StatePool,
+    n_layer: usize,
+    conv_row: usize,
+    ssm_row: usize,
+    /// `capacity × n_layer × conv_row`, slot-major.
+    conv: Vec<f32>,
+    /// `capacity × n_layer × ssm_row`, slot-major.
+    ssm: Vec<f32>,
+}
+
+impl StateStore {
+    pub fn new(capacity: usize, n_layer: usize, conv_row: usize, ssm_row: usize) -> StateStore {
+        StateStore {
+            pool: StatePool::new(capacity, slot_bytes_raw(n_layer, conv_row, ssm_row)),
+            n_layer,
+            conv_row,
+            ssm_row,
+            conv: vec![0.0; capacity * n_layer * conv_row],
+            ssm: vec![0.0; capacity * n_layer * ssm_row],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    pub fn live(&self) -> usize {
+        self.pool.live()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.pool.free_slots()
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.pool.high_water
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        self.pool.live_bytes()
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.pool.peak_bytes()
+    }
+
+    fn conv_range(&self, slot: Slot) -> std::ops::Range<usize> {
+        let per = self.n_layer * self.conv_row;
+        slot.0 * per..(slot.0 + 1) * per
+    }
+
+    fn ssm_range(&self, slot: Slot) -> std::ops::Range<usize> {
+        let per = self.n_layer * self.ssm_row;
+        slot.0 * per..(slot.0 + 1) * per
+    }
+
+    /// Allocate a slot and copy one prefilled sequence's decode state into
+    /// it. Fails (without copying) when the pool is exhausted.
+    pub fn admit(&mut self, conv: &[f32], ssm: &[f32]) -> Result<Slot> {
+        ensure!(
+            conv.len() == self.n_layer * self.conv_row,
+            "conv state has {} elems, store expects {}",
+            conv.len(),
+            self.n_layer * self.conv_row
+        );
+        ensure!(
+            ssm.len() == self.n_layer * self.ssm_row,
+            "ssm state has {} elems, store expects {}",
+            ssm.len(),
+            self.n_layer * self.ssm_row
+        );
+        let slot = self.pool.alloc()?;
+        self.conv[self.conv_range(slot)].copy_from_slice(conv);
+        self.ssm[self.ssm_range(slot)].copy_from_slice(ssm);
+        Ok(slot)
+    }
+
+    /// Release a finished sequence's slot (double-free rejected).
+    pub fn retire(&mut self, slot: Slot) -> Result<()> {
+        self.pool.release(slot)
+    }
+
+    /// Gather the mapped lanes' slot states into the decode-frame buffers
+    /// (`[n_layer, lanes.len(), row]`); unmapped lanes are zeroed.
+    pub fn gather(&self, lanes: &[Option<Slot>], conv_frame: &mut [f32], ssm_frame: &mut [f32]) {
+        let b = lanes.len();
+        for (lane, slot) in lanes.iter().enumerate() {
+            match slot {
+                Some(s) => {
+                    write_lane(
+                        conv_frame,
+                        self.n_layer,
+                        b,
+                        self.conv_row,
+                        lane,
+                        &self.conv[self.conv_range(*s)],
+                    );
+                    write_lane(
+                        ssm_frame,
+                        self.n_layer,
+                        b,
+                        self.ssm_row,
+                        lane,
+                        &self.ssm[self.ssm_range(*s)],
+                    );
+                }
+                None => {
+                    zero_lane(conv_frame, self.n_layer, b, self.conv_row, lane);
+                    zero_lane(ssm_frame, self.n_layer, b, self.ssm_row, lane);
+                }
+            }
+        }
+    }
+
+    /// Scatter the stepped decode-frame lanes back into their slots; lanes
+    /// without a slot are ignored.
+    pub fn scatter(&mut self, lanes: &[Option<Slot>], conv_frame: &[f32], ssm_frame: &[f32]) {
+        let b = lanes.len();
+        for (lane, slot) in lanes.iter().enumerate() {
+            if let Some(s) = slot {
+                let cr = self.conv_range(*s);
+                read_lane(conv_frame, self.n_layer, b, self.conv_row, lane, &mut self.conv[cr]);
+                let sr = self.ssm_range(*s);
+                read_lane(ssm_frame, self.n_layer, b, self.ssm_row, lane, &mut self.ssm[sr]);
+            }
+        }
+    }
+
+    /// Read one slot's stored (conv, ssm) state — inspection/test aid.
+    pub fn state_of(&self, slot: Slot) -> (&[f32], &[f32]) {
+        (&self.conv[self.conv_range(slot)], &self.ssm[self.ssm_range(slot)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> StateStore {
+        // 3 slots, 2 layers, conv_row 3, ssm_row 2.
+        StateStore::new(3, 2, 3, 2)
+    }
+
+    #[test]
+    fn admit_retire_recycles_without_corruption() {
+        let mut st = store();
+        let a = st.admit(&[1.0; 6], &[10.0; 4]).unwrap();
+        let b = st.admit(&[2.0; 6], &[20.0; 4]).unwrap();
+        st.retire(a).unwrap();
+        let c = st.admit(&[3.0; 6], &[30.0; 4]).unwrap();
+        // b untouched by the recycle of a's slot into c.
+        assert!(st.state_of(b).0.iter().all(|&x| x == 2.0));
+        assert!(st.state_of(c).1.iter().all(|&x| x == 30.0));
+        assert!(st.retire(a).is_err(), "double free accepted");
+        assert_eq!(st.live(), 2);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_with_holes() {
+        let mut st = store();
+        let a = st.admit(&[1.0; 6], &[10.0; 4]).unwrap();
+        let b = st.admit(&[2.0; 6], &[20.0; 4]).unwrap();
+        let lanes = [Some(a), None, Some(b)];
+        let mut conv = vec![7.0f32; 2 * 3 * 3]; // [nl=2, lanes=3, row=3], stale
+        let mut ssm = vec![7.0f32; 2 * 3 * 2];
+        st.gather(&lanes, &mut conv, &mut ssm);
+        // lane 1 zeroed, lanes 0/2 hold the stored states.
+        assert_eq!(&conv[0..3], &[1.0; 3]);
+        assert_eq!(&conv[3..6], &[0.0; 3]);
+        assert_eq!(&conv[6..9], &[2.0; 3]);
+        // mutate the frame as a decode step would, scatter back.
+        for v in conv.iter_mut() {
+            *v += 0.5;
+        }
+        for v in ssm.iter_mut() {
+            *v -= 1.0;
+        }
+        st.scatter(&lanes, &conv, &ssm);
+        assert!(st.state_of(a).0.iter().all(|&x| x == 1.5));
+        assert!(st.state_of(b).0.iter().all(|&x| x == 2.5));
+        assert!(st.state_of(a).1.iter().all(|&x| x == 9.0));
+        assert!(st.state_of(b).1.iter().all(|&x| x == 19.0));
+    }
+
+    #[test]
+    fn capacity_and_accounting() {
+        let mut st = store();
+        for _ in 0..3 {
+            st.admit(&[0.0; 6], &[0.0; 4]).unwrap();
+        }
+        assert!(st.admit(&[0.0; 6], &[0.0; 4]).is_err());
+        assert_eq!(st.free_slots(), 0);
+        assert_eq!(st.high_water(), 3);
+        // (2 layers × (3 + 2) rows) × 4 bytes per slot
+        assert_eq!(st.live_bytes(), 3 * 2 * 5 * 4);
+    }
+}

@@ -186,6 +186,32 @@ pub fn manifest_or_fixture(artifacts: &str) -> Result<(Manifest, bool)> {
     Ok((man, true))
 }
 
+/// Synthetic serving workload shared by `repro serve`/`repro demo`, the
+/// serve example, and the coordinator bench (keeps the three surfaces
+/// measuring the same trace shape): bimodal prompt lengths — full prefill
+/// frame vs a quarter of it (short chat-like vs long document-like) — and
+/// uniform 1..=max_gen generation lengths.
+pub fn synth_requests(
+    rng: &mut Rng,
+    n_requests: usize,
+    max_gen: usize,
+    prefill_seq_len: usize,
+    vocab_size: usize,
+) -> Vec<crate::coordinator::Request> {
+    (0..n_requests)
+        .map(|i| {
+            let plen = if rng.f64() < 0.5 { prefill_seq_len } else { prefill_seq_len / 4 };
+            crate::coordinator::Request {
+                id: i as u64,
+                prompt: (0..plen).map(|_| rng.below(vocab_size) as i32).collect(),
+                gen_tokens: 1 + rng.below(max_gen.max(1)),
+                variant: String::new(),
+                arrived_us: 0,
+            }
+        })
+        .collect()
+}
+
 /// Fixture layout format: BUMP THIS whenever `reference_params`, the model
 /// dims/consts, or the `FixtureSpec` defaults change shape — it keys the
 /// shared temp-dir cache below, so stale fixtures from older code are never

@@ -23,7 +23,8 @@ use anyhow::{bail, Context, Result};
 use tor_ssm::bench::{figures, tables, Ctx};
 use tor_ssm::coordinator::engine::Engine;
 use tor_ssm::coordinator::router::{Policy, Router};
-use tor_ssm::coordinator::{batcher::Batcher, metrics::Metrics, Request};
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::metrics::Metrics;
 use tor_ssm::eval::scoring::Scheme;
 use tor_ssm::manifest::Manifest;
 use tor_ssm::runtime::Runtime;
@@ -102,8 +103,9 @@ fn info(artifacts: &str) -> Result<()> {
 }
 
 /// Hermetic end-to-end demo: generate a synthetic fixture, run the
-/// coordinator (router → batcher → engine prefill/decode) and the zero-shot
-/// eval harness on the reference backend. No artifacts, no Python, no XLA.
+/// coordinator (router → continuous scheduler prefill/decode) and the
+/// zero-shot eval harness on the reference backend. No artifacts, no
+/// Python, no XLA.
 fn demo(args: &Args) -> Result<()> {
     let dir = match args.get("dir") {
         Some(d) => std::path::PathBuf::from(d),
@@ -124,18 +126,14 @@ fn demo(args: &Args) -> Result<()> {
         .map(|v| Engine::new(&rt, &man, &me, &w, v))
         .collect::<Result<_>>()?;
     let mut router = Router::new(Policy::CostAware { long_prompt: man.prefill_seq_len / 2 }, &lanes);
-    let mut batchers: Vec<Batcher> = engines
-        .iter()
-        .map(|e| Batcher::new(e.batch, std::time::Duration::from_millis(1)))
-        .collect();
+    let mut schedulers: Vec<Scheduler> = engines.iter().map(Scheduler::new).collect();
     let mut metrics = Metrics::default();
     let n_requests = args.usize_or("requests", 6);
     let gen_tokens = args.usize_or("gen-tokens", 4);
     serve_trace(
-        &engines,
         &lanes,
         &mut router,
-        &mut batchers,
+        &mut schedulers,
         &mut metrics,
         n_requests,
         gen_tokens,
@@ -143,6 +141,15 @@ fn demo(args: &Args) -> Result<()> {
         me.vocab_size,
     )?;
     println!("serve: {}", metrics.summary());
+    for (lane, s) in lanes.iter().zip(&schedulers) {
+        println!(
+            "  {lane:<9} prefills={} decode_steps={} peak_state={} slots ({} B)",
+            s.prefill_calls,
+            s.decode_steps,
+            s.store().high_water(),
+            s.store().peak_bytes()
+        );
+    }
 
     // ---- zero-shot eval, dense vs reduced ----
     let items = args.usize_or("items", 2);
@@ -305,16 +312,12 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
         .map(|v| Engine::new(&rt, &man, &me, &w, v))
         .collect::<Result<_>>()?;
     let mut router = Router::new(policy, &lanes);
-    let mut batchers: Vec<Batcher> = engines
-        .iter()
-        .map(|e| Batcher::new(e.batch, std::time::Duration::from_millis(5)))
-        .collect();
+    let mut schedulers: Vec<Scheduler> = engines.iter().map(Scheduler::new).collect();
     let mut metrics = Metrics::default();
     serve_trace(
-        &engines,
         &lanes,
         &mut router,
-        &mut batchers,
+        &mut schedulers,
         &mut metrics,
         n_requests,
         gen_tokens,
@@ -323,78 +326,65 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
     )?;
     println!("routing: {} requests over {:?}", router.routed, lanes);
     println!("{}", metrics.summary());
+    for (lane, s) in lanes.iter().zip(&schedulers) {
+        println!(
+            "  {lane:<10} prefills={} decode_steps={} peak_state={} slots ({} B)",
+            s.prefill_calls,
+            s.decode_steps,
+            s.store().high_water(),
+            s.store().peak_bytes()
+        );
+    }
     Ok(())
 }
 
 /// The shared open-loop serving trace (used by `serve` and `demo`): feed a
-/// synthetic mixed-length workload through router → batchers → engines,
-/// draining ready batches as it goes and flushing at the end.
+/// synthetic mixed-length workload (bimodal prompt lengths, uniform
+/// 1..=max_gen generation lengths) through router → continuous schedulers,
+/// stepping every scheduler once per arrival and draining at the end.
 fn serve_trace(
-    engines: &[Engine],
     lanes: &[&str],
     router: &mut Router,
-    batchers: &mut [Batcher],
+    schedulers: &mut [Scheduler<'_>],
     metrics: &mut Metrics,
     n_requests: usize,
-    gen_tokens: usize,
+    max_gen: usize,
     prefill_seq_len: usize,
     vocab_size: usize,
 ) -> Result<()> {
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
-    for i in 0..n_requests {
-        // Bimodal prompt lengths: short chat-like vs long document-like.
-        let plen = if rng.f64() < 0.5 { prefill_seq_len } else { prefill_seq_len / 4 };
-        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab_size) as i32).collect();
-        let req = Request {
-            id: i as u64,
-            prompt,
-            gen_tokens,
-            variant: String::new(),
-            arrived_us: t0.elapsed().as_micros() as u64,
-        };
+    let trace = tor_ssm::fixtures::synth_requests(
+        &mut rng,
+        n_requests,
+        max_gen,
+        prefill_seq_len,
+        vocab_size,
+    );
+    for req in trace {
         let lane = router.route(&req)?;
         let li = lanes.iter().position(|l| *l == lane).unwrap();
         router.note_enqueued(&lane);
-        batchers[li].push(req);
+        schedulers[li].submit(req);
         metrics.requests += 1;
 
-        // Drain ready batches.
-        for (bi, b) in batchers.iter_mut().enumerate() {
-            while let Some(batch) = b.poll(std::time::Instant::now()) {
-                dispatch(&engines[bi], &batch, metrics, router, lanes[bi], t0)?;
+        // Iteration-level progress: one scheduler step per arrival keeps
+        // decode interleaved with admission (requests retire and free their
+        // lane while later arrivals are still queueing).
+        for (si, s) in schedulers.iter_mut().enumerate() {
+            for resp in s.step()? {
+                metrics.record_response(&resp);
+                router.note_done(lanes[si]);
             }
         }
     }
-    // Final drain.
-    for (bi, b) in batchers.iter_mut().enumerate() {
-        while let Some(batch) = b.drain() {
-            dispatch(&engines[bi], &batch, metrics, router, lanes[bi], t0)?;
+    // Drain everything still in flight.
+    for (si, s) in schedulers.iter_mut().enumerate() {
+        for resp in s.drain()? {
+            metrics.record_response(&resp);
+            router.note_done(lanes[si]);
         }
     }
     metrics.wall = t0.elapsed();
-    Ok(())
-}
-
-fn dispatch(
-    engine: &Engine,
-    batch: &[Request],
-    metrics: &mut Metrics,
-    router: &mut Router,
-    lane: &str,
-    t0: std::time::Instant,
-) -> Result<()> {
-    let responses = engine.serve_batch(batch)?;
-    for (req, resp) in batch.iter().zip(&responses) {
-        let queue_us = t0.elapsed().as_micros() as u64 - req.arrived_us;
-        metrics.record(
-            req.prompt.len(),
-            resp.generated.len(),
-            resp.prefill_us,
-            resp.decode_us,
-            queue_us,
-        );
-        router.note_done(lane);
-    }
     Ok(())
 }

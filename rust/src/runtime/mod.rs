@@ -19,6 +19,8 @@
 //! Hot-path discipline is part of the trait contract: `Executable::execute`
 //! takes device-resident weights plus host activations, and backends must
 //! keep per-call host traffic proportional to activations, not parameters.
+//! See DESIGN.md §2 (backend split), §4 (decode-state shape convention),
+//! and §9 (perf) for the full contracts.
 
 pub mod reference;
 pub mod tensor;

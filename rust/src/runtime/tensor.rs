@@ -61,6 +61,65 @@ impl HostTensor {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Lane gather/scatter: moving per-sequence decode state between slot storage
+// and the `[n_layer, n_lanes, row]` decode frame (DESIGN.md §6).
+//
+// The decode executables take state frames laid out layer-major
+// (`[n_layer, batch, ...]`), while the state store keeps each sequence
+// contiguous (`[n_layer, row]`). These helpers are the only place the
+// frame stride math lives.
+// ---------------------------------------------------------------------------
+
+/// Copy a contiguous per-sequence state (`[n_layer, row]`) into lane `lane`
+/// of a `[n_layer, n_lanes, row]` frame buffer.
+pub fn write_lane(
+    frame: &mut [f32],
+    n_layer: usize,
+    n_lanes: usize,
+    row: usize,
+    lane: usize,
+    seq: &[f32],
+) {
+    assert_eq!(frame.len(), n_layer * n_lanes * row, "frame/layout mismatch");
+    assert_eq!(seq.len(), n_layer * row, "sequence-state size mismatch");
+    assert!(lane < n_lanes, "lane {lane} out of range (frame has {n_lanes})");
+    for l in 0..n_layer {
+        let dst = (l * n_lanes + lane) * row;
+        frame[dst..dst + row].copy_from_slice(&seq[l * row..(l + 1) * row]);
+    }
+}
+
+/// Zero lane `lane` of a `[n_layer, n_lanes, row]` frame buffer (idle-lane
+/// reset).
+pub fn zero_lane(frame: &mut [f32], n_layer: usize, n_lanes: usize, row: usize, lane: usize) {
+    assert_eq!(frame.len(), n_layer * n_lanes * row, "frame/layout mismatch");
+    assert!(lane < n_lanes, "lane {lane} out of range (frame has {n_lanes})");
+    for l in 0..n_layer {
+        let dst = (l * n_lanes + lane) * row;
+        frame[dst..dst + row].fill(0.0);
+    }
+}
+
+/// Copy lane `lane` of a `[n_layer, n_lanes, row]` frame buffer out into a
+/// contiguous per-sequence state (`[n_layer, row]`).
+pub fn read_lane(
+    frame: &[f32],
+    n_layer: usize,
+    n_lanes: usize,
+    row: usize,
+    lane: usize,
+    seq: &mut [f32],
+) {
+    assert_eq!(frame.len(), n_layer * n_lanes * row, "frame/layout mismatch");
+    assert_eq!(seq.len(), n_layer * row, "sequence-state size mismatch");
+    assert!(lane < n_lanes, "lane {lane} out of range (frame has {n_lanes})");
+    for l in 0..n_layer {
+        let src = (l * n_lanes + lane) * row;
+        seq[l * row..(l + 1) * row].copy_from_slice(&frame[src..src + row]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -84,5 +143,43 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn lane_roundtrip() {
+        // frame [n_layer=2, n_lanes=3, row=2]
+        let mut frame = vec![0.0f32; 2 * 3 * 2];
+        let seq = vec![1.0, 2.0, 3.0, 4.0]; // [2, 2]: layer0=[1,2], layer1=[3,4]
+        write_lane(&mut frame, 2, 3, 2, 1, &seq);
+        // layer-major layout: layer 0 lanes [_, (1,2), _], layer 1 [_, (3,4), _]
+        assert_eq!(frame, vec![0., 0., 1., 2., 0., 0., 0., 0., 3., 4., 0., 0.]);
+        let mut back = vec![0.0f32; 4];
+        read_lane(&frame, 2, 3, 2, 1, &mut back);
+        assert_eq!(back, seq);
+        // neighbouring lanes untouched
+        let mut lane0 = vec![9.0f32; 4];
+        read_lane(&frame, 2, 3, 2, 0, &mut lane0);
+        assert_eq!(lane0, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn lanes_are_disjoint() {
+        let mut frame = vec![0.0f32; 6]; // [n_layer=1, n_lanes=2, row=3]
+        write_lane(&mut frame, 1, 2, 3, 0, &[1.0, 1.0, 1.0]);
+        write_lane(&mut frame, 1, 2, 3, 1, &[2.0, 2.0, 2.0]);
+        assert_eq!(frame, vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+        let mut a = vec![0.0f32; 3];
+        read_lane(&frame, 1, 2, 3, 0, &mut a);
+        assert_eq!(a, vec![1.0; 3]);
+        // Zeroing one lane leaves its neighbour intact.
+        zero_lane(&mut frame, 1, 2, 3, 1);
+        assert_eq!(frame, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn write_lane_rejects_out_of_range() {
+        let mut frame = vec![0.0f32; 4];
+        write_lane(&mut frame, 1, 2, 2, 2, &[1.0, 1.0]);
     }
 }

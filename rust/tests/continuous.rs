@@ -1,0 +1,213 @@
+//! Continuous-batching end-to-end tests on the reference backend (hermetic:
+//! synthetic fixture, no artifacts). What they pin down (DESIGN.md §6):
+//!
+//! * staggered arrivals: short requests complete and release their slot the
+//!   moment they hit `gen_tokens`, while long ones keep decoding;
+//! * the scheduler's responses are bit-identical to the lock-step
+//!   `Engine::serve_batch` path for identical inputs, on the dense and the
+//!   token-reduced lane alike;
+//! * with mixed generation lengths a 64-request trace completes in strictly
+//!   fewer decode-frame executions than lock-step (the acceptance number
+//!   reported in BENCH_coordinator.json).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::{Request, Response};
+use tor_ssm::fixtures::generate_default;
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::{Runtime, Weights};
+use tor_ssm::util::rng::Rng;
+
+/// Unique per-test fixture dir (tests run in parallel threads).
+fn fixture(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!("tor-ssm-cont-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let man = generate_default(&dir).expect("fixture generation");
+    (dir, man)
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn req(id: u64, plen: usize, gen_tokens: usize, vocab: usize) -> Request {
+    Request {
+        id,
+        prompt: (0..plen).map(|t| ((t * 7 + id as usize) % vocab) as i32).collect(),
+        gen_tokens,
+        variant: String::new(),
+        arrived_us: 0,
+    }
+}
+
+fn by_id(resps: &[Response]) -> BTreeMap<u64, Vec<i32>> {
+    let map: BTreeMap<u64, Vec<i32>> =
+        resps.iter().map(|r| (r.id, r.generated.clone())).collect();
+    assert_eq!(map.len(), resps.len(), "duplicate response ids");
+    map
+}
+
+#[test]
+fn staggered_arrivals_retire_short_requests_early() {
+    let (dir, man) = fixture("stagger");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let engine = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+    assert!(engine.decode_batch >= 2, "fixture decode frame too narrow for this test");
+
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    let mut sched = Scheduler::new(&engine);
+    sched.submit(req(0, plen, 12, vocab)); // long
+    sched.submit(req(1, plen / 2, 2, vocab)); // short
+
+    // First step: both prefilled + placed, one decode step; the short
+    // request hits gen_tokens=2 and must retire immediately.
+    let done = sched.step().unwrap();
+    assert_eq!(done.len(), 1, "short request should complete on the first decode step");
+    assert_eq!(done[0].id, 1);
+    assert_eq!(done[0].generated.len(), 2);
+    // Its slot is already free while the long request still decodes.
+    assert_eq!(sched.store().live(), 1, "finished slot must be released immediately");
+    assert!(!sched.is_idle());
+
+    // A new arrival takes the freed lane while the long request continues.
+    sched.submit(req(2, plen / 2, 3, vocab));
+    let mut rest = sched.step().unwrap();
+    // (id 2 needs two more decode steps after admission; nothing may have
+    // finished yet this step, depending on interleave — just drain.)
+    rest.extend(sched.drain().unwrap());
+    assert!(sched.is_idle());
+    assert_eq!(sched.store().live(), 0, "all slots released at drain");
+    assert_eq!(sched.completed, 3);
+
+    let all = by_id(&rest);
+    assert_eq!(all[&0].len(), 12);
+    assert_eq!(all[&2].len(), 3);
+    // Honest timing: the long request accumulated decode time over many
+    // steps; queue time was measured (not hardcoded 0 — it may legitimately
+    // round to 0µs only for instant admission).
+    let long = rest.iter().find(|r| r.id == 0).unwrap();
+    assert!(long.decode_us > 0);
+    assert_eq!(long.prompt_tokens, plen);
+    cleanup(&dir);
+}
+
+#[test]
+fn continuous_matches_lockstep_bit_for_bit() {
+    let (dir, man) = fixture("identical");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba2").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+
+    for variant in ["dense", "utrc@0.2"] {
+        let engine = Engine::new(&rt, &man, &model, &w, variant).unwrap();
+        // More requests than decode lanes, mixed prompt + generation
+        // lengths, including a 1-token request that never takes a slot.
+        let gens = [5usize, 1, 8, 3, 6];
+        let reqs: Vec<Request> = gens
+            .iter()
+            .enumerate()
+            .map(|(i, &g)| {
+                req(i as u64, if i % 2 == 0 { plen } else { plen / 4 }, g, vocab)
+            })
+            .collect();
+
+        // Lock-step reference: arrival-order batches.
+        let mut lock = Vec::new();
+        for chunk in reqs.chunks(engine.max_batch()) {
+            lock.extend(engine.serve_batch(chunk).unwrap());
+        }
+
+        // Continuous: same trace, staggered submission (submit one, step
+        // once) to exercise admission interleaving.
+        let mut sched = Scheduler::new(&engine);
+        let mut cont = Vec::new();
+        for r in reqs.iter().cloned() {
+            sched.submit(r);
+            cont.extend(sched.step().unwrap());
+        }
+        cont.extend(sched.drain().unwrap());
+
+        let lock_map = by_id(&lock);
+        let cont_map = by_id(&cont);
+        assert_eq!(lock_map.len(), reqs.len());
+        for (id, gen) in &lock_map {
+            assert_eq!(
+                cont_map.get(id),
+                Some(gen),
+                "{variant}: request {id} generated different tokens under continuous batching"
+            );
+            assert_eq!(gen.len(), gens[*id as usize], "{variant}: wrong generation length");
+        }
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn mixed_gen_trace_uses_fewer_decode_steps_than_lockstep() {
+    // The acceptance trace: 64 requests, gen_tokens uniform in 1..=16.
+    // Lock-step decodes every batch for max(gen) steps; continuous retires
+    // lanes the moment they finish, so the same trace must need strictly
+    // fewer decode-frame executions — with identical outputs.
+    let (dir, man) = fixture("steps");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let engine = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+
+    let mut rng = Rng::new(3);
+    let reqs: Vec<Request> = (0..64)
+        .map(|i| {
+            req(
+                i as u64,
+                if rng.f64() < 0.5 { plen } else { plen / 4 },
+                1 + rng.below(16),
+                vocab,
+            )
+        })
+        .collect();
+
+    // Lock-step pass, counted via the engine's decode-call counter.
+    let calls0 = engine.decode_calls.load(Ordering::Relaxed);
+    let mut lock = Vec::new();
+    for chunk in reqs.chunks(engine.max_batch()) {
+        lock.extend(engine.serve_batch(chunk).unwrap());
+    }
+    let lock_steps = engine.decode_calls.load(Ordering::Relaxed) - calls0;
+
+    // Continuous pass over the identical trace.
+    let calls1 = engine.decode_calls.load(Ordering::Relaxed);
+    let mut sched = Scheduler::new(&engine);
+    let cont = sched.run(reqs.clone()).unwrap();
+    let cont_steps = engine.decode_calls.load(Ordering::Relaxed) - calls1;
+
+    assert_eq!(cont_steps, sched.decode_steps, "scheduler step counter drifted");
+    assert!(
+        cont_steps < lock_steps,
+        "continuous must finish the mixed-gen trace in fewer decode steps: \
+         continuous={cont_steps} lock-step={lock_steps}"
+    );
+
+    // And with identical generated tokens per request.
+    let lock_map = by_id(&lock);
+    let cont_map = by_id(&cont);
+    assert_eq!(lock_map, cont_map, "continuous changed generated tokens");
+    // Exactly the requested number of tokens for every request.
+    for (r, (_, gen)) in reqs.iter().zip(&lock_map) {
+        assert_eq!(gen.len(), r.gen_tokens);
+    }
+    // No state leaked.
+    assert_eq!(sched.store().live(), 0);
+    assert_eq!(sched.completed, 64);
+    cleanup(&dir);
+}

@@ -5,6 +5,8 @@
 //! * batcher: no loss, no duplication, FIFO order, capacity bound, deadline;
 //! * state pool: never exceeds capacity, alloc/free balanced, no double-free
 //!   acceptance, high-water correctness;
+//! * state store: slot-backed tensors survive arbitrary admit/retire churn
+//!   uncorrupted — no leaks, no double-frees, no cross-slot bleed;
 //! * router: always routes to a known lane; cost-aware respects thresholds;
 //! * schedule solver: hits targets, monotone/even seg_lens, half-limit;
 //! * JSON: parse∘serialize is identity on random documents.
@@ -14,6 +16,7 @@ use std::time::Duration;
 use tor_ssm::coordinator::batcher::Batcher;
 use tor_ssm::coordinator::router::{Policy, Router};
 use tor_ssm::coordinator::state_pool::StatePool;
+use tor_ssm::coordinator::state_store::StateStore;
 use tor_ssm::coordinator::Request;
 use tor_ssm::reduction::{solve_schedule, Arch, ModelDims};
 use tor_ssm::util::json::Json;
@@ -113,6 +116,97 @@ fn prop_state_pool_invariants() {
             assert_eq!(p.live(), live.len());
         }
         assert_eq!(p.high_water, peak);
+    });
+}
+
+#[test]
+fn prop_state_store_no_leak_no_double_free_no_corruption() {
+    for_cases("state_store", |rng| {
+        let cap = 1 + rng.below(8);
+        let n_layer = 1 + rng.below(3);
+        let conv_row = 1 + rng.below(6);
+        let ssm_row = 1 + rng.below(6);
+        let mut store = StateStore::new(cap, n_layer, conv_row, ssm_row);
+        // Each live slot remembers the unique tag it was admitted with so
+        // recycling can never silently corrupt a neighbour.
+        let mut live: Vec<(tor_ssm::coordinator::state_pool::Slot, f32)> = Vec::new();
+        let mut next_tag = 1.0f32;
+        for _ in 0..300 {
+            if rng.f64() < 0.55 {
+                let conv = vec![next_tag; n_layer * conv_row];
+                let ssm = vec![-next_tag; n_layer * ssm_row];
+                match store.admit(&conv, &ssm) {
+                    Ok(slot) => {
+                        assert!(live.len() < cap, "admitted past capacity");
+                        live.push((slot, next_tag));
+                        next_tag += 1.0;
+                    }
+                    Err(_) => assert_eq!(live.len(), cap, "spurious exhaustion"),
+                }
+            } else if !live.is_empty() {
+                let i = rng.below(live.len());
+                let (slot, _) = live.swap_remove(i);
+                store.retire(slot).unwrap();
+                assert!(store.retire(slot).is_err(), "double free accepted");
+            }
+            assert_eq!(store.live(), live.len(), "live-count drift (leak or lost slot)");
+            assert_eq!(store.free_slots(), cap - live.len());
+            for (slot, tag) in &live {
+                let (c, s) = store.state_of(*slot);
+                assert!(c.iter().all(|&x| x == *tag), "conv state corrupted for tag {tag}");
+                assert!(s.iter().all(|&x| x == -*tag), "ssm state corrupted for tag {tag}");
+            }
+        }
+        // Full drain: everything still releasable exactly once.
+        for (slot, _) in live.drain(..) {
+            store.retire(slot).unwrap();
+        }
+        assert_eq!(store.live(), 0);
+        assert_eq!(store.free_slots(), cap);
+    });
+}
+
+#[test]
+fn prop_state_store_gather_scatter_roundtrip() {
+    for_cases("state_store_frames", |rng| {
+        let n_layer = 1 + rng.below(3);
+        let conv_row = 1 + rng.below(5);
+        let ssm_row = 1 + rng.below(5);
+        let lanes_n = 1 + rng.below(4);
+        let mut store = StateStore::new(lanes_n + 2, n_layer, conv_row, ssm_row);
+        // Random lane map: each lane occupied (fresh slot) or idle.
+        let lanes: Vec<Option<tor_ssm::coordinator::state_pool::Slot>> = (0..lanes_n)
+            .map(|i| {
+                (rng.f64() < 0.7).then(|| {
+                    let v = (i + 1) as f32;
+                    store
+                        .admit(&vec![v; n_layer * conv_row], &vec![-v; n_layer * ssm_row])
+                        .unwrap()
+                })
+            })
+            .collect();
+        let mut conv_frame = vec![f32::NAN; n_layer * lanes_n * conv_row];
+        let mut ssm_frame = vec![f32::NAN; n_layer * lanes_n * ssm_row];
+        store.gather(&lanes, &mut conv_frame, &mut ssm_frame);
+        // Frame holds per-lane values; idle lanes zeroed (never stale NaN).
+        assert!(conv_frame.iter().all(|x| x.is_finite()));
+        assert!(ssm_frame.iter().all(|x| x.is_finite()));
+        // A "decode step": shift every value, scatter back, re-gather.
+        for x in conv_frame.iter_mut() {
+            *x += 10.0;
+        }
+        for x in ssm_frame.iter_mut() {
+            *x -= 10.0;
+        }
+        store.scatter(&lanes, &conv_frame, &ssm_frame);
+        for (i, slot) in lanes.iter().enumerate() {
+            if let Some(s) = slot {
+                let v = (i + 1) as f32;
+                let (c, m) = store.state_of(*s);
+                assert!(c.iter().all(|&x| x == v + 10.0), "lane {i} conv roundtrip");
+                assert!(m.iter().all(|&x| x == -v - 10.0), "lane {i} ssm roundtrip");
+            }
+        }
     });
 }
 
