@@ -70,6 +70,7 @@ fn main() -> Result<()> {
         max_gen,
         man.prefill_seq_len,
         me.vocab_size,
+        &[], // fully router-driven: keeps the two serving modes comparable
     );
 
     // ---- continuous batching ------------------------------------------

@@ -1,0 +1,124 @@
+"""Emit the reduction-kernel golden fixture consumed by rust/tests/reduction_golden.rs.
+
+The rust policy subsystem (`rust/src/reduction/policy.rs`) mirrors the
+Pallas reduction kernels' semantics — `kernels/importance.py` (paper Eq. 5,
+Table-3 metrics) and `kernels/matching.py` (Eq. 6-7 bipartite cosine
+matching), whose jnp oracles live in `kernels/ref.py`. This script freezes
+those semantics into a checked-in JSON (inputs AND expected outputs) so CI
+enforces the lockstep, the same pattern as `flops_golden.py`.
+
+Pure stdlib on purpose: the formulas below are transliterations of
+``ref.importance_ref`` / ``ref.cosine_match_ref`` (float64, no jax), so the
+fixture regenerates in any environment. Inputs come from a seeded PRNG and
+are rounded before use, so the JSON is the single source of truth for both
+sides.
+
+Usage (from the repo root; stdlib only, no jax needed):
+
+    PYTHONPATH=python python3 python/compile/reduction_golden.py
+
+Regenerate and commit the JSON whenever either side's formulas change.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import random
+
+METRICS = ("clip", "noclip", "l1", "l2")
+
+
+def importance_ref(rows: list[list[float]], metric: str) -> list[float]:
+    """Transliteration of kernels/ref.py::importance_ref (one example)."""
+    out = []
+    for row in rows:
+        d = len(row)
+        if metric == "clip":
+            out.append(sum(max(v, 0.0) for v in row) / d)
+        elif metric == "noclip":
+            out.append(sum(row) / d)
+        elif metric == "l1":
+            out.append(sum(abs(v) for v in row) / d)
+        elif metric == "l2":
+            out.append(math.sqrt(sum(v * v for v in row) / d))
+        else:
+            raise ValueError(metric)
+    return out
+
+
+def cosine_match_ref(a: list[list[float]], b: list[list[float]]):
+    """Transliteration of kernels/ref.py::cosine_match_ref (one example):
+    rows normalized with a +1e-6 guard; first maximal match wins."""
+
+    def normalize(rows):
+        out = []
+        for row in rows:
+            norm = math.sqrt(sum(v * v for v in row)) + 1e-6
+            out.append([v / norm for v in row])
+        return out
+
+    an, bn = normalize(a), normalize(b)
+    f, g = [], []
+    for ar in an:
+        best, best_sim = 0, -math.inf
+        for j, br in enumerate(bn):
+            sim = sum(x * y for x, y in zip(ar, br))
+            if sim > best_sim:
+                best, best_sim = j, sim
+        f.append(best)
+        g.append(best_sim)
+    return f, g
+
+
+def rounded_matrix(rng: random.Random, n: int, d: int) -> list[list[float]]:
+    # Round to 4 decimals so the JSON text (not the generator) is the ground
+    # truth both sides compute from; f32 representation error on values of
+    # this magnitude is ~1e-7, far under the test tolerances.
+    return [[round(rng.uniform(-2.0, 2.0), 4) for _ in range(d)] for _ in range(n)]
+
+
+def golden() -> dict:
+    rng = random.Random(0xE9_2024)
+
+    # --- importance: one (L, Dp) tile, all four metrics -------------------
+    imp_rows = rounded_matrix(rng, 12, 16)
+    importance = {m: importance_ref(imp_rows, m) for m in METRICS}
+
+    # --- matching: (Na, D) vs (Nb, D) ------------------------------------
+    a = rounded_matrix(rng, 10, 8)
+    b = rounded_matrix(rng, 5, 8)
+    f, g = cosine_match_ref(a, b)
+
+    # The argmax indices must be unambiguous under f32 arithmetic: require a
+    # clear top-1 margin per row (resample-free by construction; assert so a
+    # future edit cannot silently bake in a tie).
+    for i, ar in enumerate(a):
+        sims = []
+        for br in b:
+            na = math.sqrt(sum(v * v for v in ar)) + 1e-6
+            nb = math.sqrt(sum(v * v for v in br)) + 1e-6
+            sims.append(sum(x * y for x, y in zip(ar, br)) / (na * nb))
+        top = sorted(sims, reverse=True)
+        assert top[0] - top[1] > 1e-3, f"a-row {i}: ambiguous match ({top[0]} vs {top[1]})"
+
+    return {
+        "source": "python/compile/reduction_golden.py",
+        "importance": {"d": 16, "rows": imp_rows, **importance},
+        "matching": {"d": 8, "a": a, "b": b, "f": f, "g": g},
+    }
+
+
+def main() -> None:
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out = os.path.join(repo, "rust", "tests", "data", "reduction_golden.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(golden(), fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

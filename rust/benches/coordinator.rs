@@ -139,6 +139,7 @@ fn serving_comparison() {
         max_gen,
         man.prefill_seq_len,
         model.vocab_size,
+        &[], // single-lane comparison: no explicit variant pinning
     );
 
     // ---- lock-step: arrival-order batches, every batch decodes max(gen) --

@@ -1,0 +1,170 @@
+//! Token-reduction policy benchmark (DESIGN.md §10): every policy in the
+//! family (`unified`, `prune`, `merge`, `random`) at matched FLOPs-reduction
+//! ratios, plus the dense baseline, each measured on BOTH axes the paper
+//! trades off:
+//!
+//! * **serving throughput** — the continuous-batching scheduler over the
+//!   shared synthetic trace (generated tokens/s, total tokens/s, decode
+//!   steps);
+//! * **accuracy proxy** — the hermetic zero-shot eval harness (six-task
+//!   average accuracy + LAMBADA-analogue PPL).
+//!
+//! Results land in `BENCH_reduction.json` (one row per variant) so CI
+//! accumulates the quality to throughput frontier per commit, next to
+//! `BENCH_coordinator.json`'s scheduling numbers.
+//!
+//! Env knobs: `REPRO_BENCH_REQS` (trace requests, default 24),
+//! `REPRO_BENCH_GEN` (max generation length, uniform 1..=N, default 12),
+//! `REPRO_BENCH_ITEMS` (eval items per task, default 3),
+//! `REPRO_BENCH_OUT` (output path, default BENCH_reduction.json).
+
+use std::time::Instant;
+
+use tor_ssm::bench::Ctx;
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::metrics::Metrics;
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::Request;
+use tor_ssm::eval::scoring::Scheme;
+use tor_ssm::fixtures;
+use tor_ssm::reduction::policy::PolicySpec;
+use tor_ssm::runtime::Runtime;
+use tor_ssm::train::load_best_weights;
+use tor_ssm::util::json::{num, obj, s, Json};
+use tor_ssm::util::rng::Rng;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The benchmark matrix: the paper's method family at two matched ratios
+/// (the fixture exports eval + prefill plans for both), plus dense.
+const VARIANTS: [&str; 9] = [
+    "dense",
+    "unified@0.1",
+    "unified@0.2",
+    "prune@0.1",
+    "prune@0.2",
+    "merge@0.1",
+    "merge@0.2",
+    "random@0.1",
+    "random@0.2",
+];
+
+fn main() {
+    let n_requests = env_usize("REPRO_BENCH_REQS", 24);
+    let max_gen = env_usize("REPRO_BENCH_GEN", 12).max(1);
+    let items = env_usize("REPRO_BENCH_ITEMS", 3);
+
+    let artifacts = tor_ssm::artifacts_dir();
+    let (man, synthetic) = match fixtures::manifest_or_fixture(&artifacts) {
+        Ok(v) => v,
+        Err(e) => {
+            println!("SKIP reduction bench: {e:#}");
+            return;
+        }
+    };
+    let rt = Runtime::reference().expect("reference backend");
+    let model_name = man.models.keys().next().expect("models").clone();
+    let model = man.model(&model_name).expect("model").clone();
+    let (w, _) = load_best_weights(&man, &model).expect("weights");
+    println!(
+        "reduction bench on {model_name} ({}; {n_requests} reqs, gen 1..={max_gen}, {items} eval items)",
+        if synthetic { "synthetic fixture" } else { "real artifacts" }
+    );
+
+    // fresh=true: the shared fixture dir's result cache keys on (model,
+    // variant, items, weights) — none of which change when policy CODE
+    // changes — so cached rows would silently mask an edited algorithm.
+    let dir = man.root.to_string_lossy().to_string();
+    let mut ctx = Ctx::new(&dir, items, true).expect("eval ctx");
+
+    let mut rows: Vec<Json> = Vec::new();
+    for variant in VARIANTS {
+        let spec = PolicySpec::parse(variant).expect("bench variant parses");
+
+        // ---- serving throughput through the continuous scheduler --------
+        let engine = match Engine::new(&rt, &man, &model, &w, variant) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("skip {variant}: {e:#}");
+                continue;
+            }
+        };
+        // Identical trace per variant: same seed, no explicit pinning.
+        let mut rng = Rng::new(23);
+        let trace: Vec<Request> = fixtures::synth_requests(
+            &mut rng,
+            n_requests,
+            max_gen,
+            man.prefill_seq_len,
+            model.vocab_size,
+            &[],
+        );
+        let mut sched = Scheduler::new(&engine);
+        let mut m = Metrics::default();
+        let t0 = Instant::now();
+        let resps = sched.run(trace).expect("serve");
+        m.wall = t0.elapsed();
+        assert_eq!(resps.len(), n_requests, "{variant}: lost responses");
+        for r in &resps {
+            m.record_response(r);
+        }
+
+        // ---- accuracy proxy through the eval harness ---------------------
+        let (entry, policy) = match &spec {
+            None => (
+                model.find_eval("dense", 0.0, None, None, None, None).expect("dense eval").clone(),
+                None,
+            ),
+            Some(p) => (
+                model
+                    .eval_entry_for_policy(p.kind.manifest_method(), p.ratio)
+                    .expect("plan-matched eval entry")
+                    .clone(),
+                Some(p),
+            ),
+        };
+        let ev = ctx
+            .eval_policy_variant(&model_name, &entry, policy)
+            .expect("policy eval");
+        let avg_acc = ev.avg_acc(Scheme::Truncated);
+        let ppl = ev.lambada_ppl(Scheme::Truncated);
+
+        println!(
+            "  {variant:<14} {:>7.0} gen tok/s  {:>4} decode steps  avg_acc={avg_acc:.3} ppl={ppl:.2}",
+            m.throughput_tok_s(),
+            sched.decode_steps,
+        );
+        rows.push(obj(vec![
+            ("variant", s(variant)),
+            ("policy", s(spec.as_ref().map_or("dense", |p| p.kind.name()))),
+            ("ratio", num(spec.as_ref().map_or(0.0, |p| p.ratio))),
+            (
+                "metric",
+                s(spec.as_ref().and_then(|p| p.metric).map_or("-", |mt| mt.name())),
+            ),
+            ("gen_tok_s", num(m.throughput_tok_s())),
+            ("total_tok_s", num(m.total_tok_s())),
+            ("decode_steps", num(sched.decode_steps as f64)),
+            ("wall_s", num(m.wall.as_secs_f64())),
+            ("p50_e2e_us", num(Metrics::pct(&m.e2e_us, 0.5) as f64)),
+            ("avg_acc", num(avg_acc)),
+            ("lambada_ppl", num(ppl)),
+            ("eval_sequences", num(ev.sequences as f64)),
+        ]));
+    }
+
+    let report = obj(vec![
+        ("bench", s("reduction_policies")),
+        ("model", s(&model_name)),
+        ("requests", num(n_requests as f64)),
+        ("max_gen_tokens", num(max_gen as f64)),
+        ("eval_items", num(items as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out = std::env::var("REPRO_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_reduction.json".to_string());
+    std::fs::write(&out, report.to_string()).expect("writing BENCH_reduction.json");
+    println!("wrote {out}");
+}

@@ -71,8 +71,25 @@ impl Ctx {
 
     /// Evaluate one exported variant (cached).
     pub fn eval_variant(&mut self, model: &str, entry: &HloEntry) -> Result<EvalResult> {
+        self.eval_policy_variant(model, entry, None)
+    }
+
+    /// [`Ctx::eval_variant`] with a reduction-policy override (DESIGN.md
+    /// §10): the entry supplies the compiled geometry + schedule plan, the
+    /// policy supplies the algorithm run at the plan's boundaries. Cached
+    /// separately per policy variant.
+    pub fn eval_policy_variant(
+        &mut self,
+        model: &str,
+        entry: &HloEntry,
+        policy: Option<&crate::reduction::policy::PolicySpec>,
+    ) -> Result<EvalResult> {
         let fp = self.ensure_weights(model)?;
-        let key = format!("{model}__{}__{}__{}", entry.tag, self.max_items, fp);
+        let label = match policy {
+            Some(p) => format!("{}__{}", entry.tag, p.to_variant()),
+            None => entry.tag.clone(),
+        };
+        let key = format!("{model}__{label}__{}__{}", self.max_items, fp);
         let cache = self.man.root.join("results").join(format!("{}.json", sanitize(&key)));
         if !self.fresh && cache.exists() {
             if let Ok(r) = read_result(&cache) {
@@ -82,13 +99,13 @@ impl Ctx {
         let me = self.man.model(model)?.clone();
         let (dw, _) = self.weights.get(model).expect("weights ensured");
         let r = evaluate(
-            &self.rt, &self.man, &me, entry, dw, &self.tok, &self.tasks, self.max_items,
+            &self.rt, &self.man, &me, entry, dw, &self.tok, &self.tasks, self.max_items, policy,
         )
-        .with_context(|| format!("evaluating {model}/{}", entry.tag))?;
+        .with_context(|| format!("evaluating {model}/{label}"))?;
         write_result(&cache, &r).ok();
         eprintln!(
             "[eval] {model:<13} {:<42} avg_acc={:.3} ppl={:>10.2} ({:.1}s, {} seqs)",
-            entry.tag,
+            label,
             r.avg_acc(crate::eval::scoring::Scheme::Truncated),
             r.lambada_ppl(crate::eval::scoring::Scheme::Truncated),
             r.wall_s,

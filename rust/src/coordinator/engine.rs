@@ -1,5 +1,6 @@
-//! Execution lane for one model variant, split into the two phases the
-//! continuous-batching scheduler composes (DESIGN.md §6):
+//! Execution lane for one model variant — `"dense"` or a token-reduction
+//! policy variant `<policy>@<ratio>[:<metric>]` (DESIGN.md §10) — split into
+//! the two phases the continuous-batching scheduler composes (DESIGN.md §6):
 //!
 //! * [`Engine::prefill`] — ingest up to `batch` prompts through the static
 //!   prefill frame and slice the resulting `[n_layer, B, ...]` state frame
@@ -27,6 +28,7 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::manifest::{Manifest, ModelEntry};
+use crate::reduction::policy::PolicySpec;
 use crate::runtime::tensor::{read_lane, write_lane};
 use crate::runtime::{DeviceWeights, Executable, HostTensor, Runtime, TensorData, Weights};
 
@@ -80,7 +82,11 @@ pub struct DecodeFrame {
 }
 
 impl Engine {
-    /// Build an engine for `variant` ("dense" or "utrc@<ratio>").
+    /// Build an engine for `variant` — `"dense"` or any reduction-policy
+    /// variant `<policy>@<ratio>[:<metric>]` (DESIGN.md §10). The variant's
+    /// ratio selects the exported schedule plan (a method-matched export is
+    /// preferred; any export with the right plan geometry serves on the
+    /// reference backend, where the policy dispatches at run time).
     pub fn new(
         rt: &Runtime,
         man: &Manifest,
@@ -88,10 +94,16 @@ impl Engine {
         weights: &Weights,
         variant: &str,
     ) -> Result<Engine> {
-        let (method, ratio) = parse_variant(variant)?;
-        let pf = model.prefill_entry(&method, ratio)?;
+        let policy = parse_variant(variant)?;
+        let pf = match &policy {
+            None => model.prefill_entry("dense", 0.0)?,
+            Some(p) => model
+                .prefill_entry(p.kind.manifest_method(), p.ratio)
+                .or_else(|_| model.prefill_entry_for_plan(p.ratio))
+                .with_context(|| format!("resolving a prefill plan for variant {variant:?}"))?,
+        };
         let dec = model.decode_entry()?;
-        let prefill = rt.load_entry(man, model, pf)?;
+        let prefill = rt.load_entry_with_policy(man, model, pf, policy.as_ref())?;
         let decode = rt.load_entry(man, model, dec)?;
         let dw = rt.upload_weights(model, weights)?;
         let (conv_shape, ssm_shape) = crate::runtime::decode_state_shapes(model, dec.batch);
@@ -339,26 +351,13 @@ pub fn argmax(row: &[f32]) -> usize {
     best
 }
 
-/// Parse "dense" or "method@ratio". Reduction ratios must be a real FLOPs
-/// fraction — finite and strictly inside (0, 1); `utrc@0` is spelled
-/// "dense", and `utrc@1` would reduce the sequence to nothing.
-pub fn parse_variant(variant: &str) -> Result<(String, f64)> {
-    if variant == "dense" || variant.is_empty() {
-        return Ok(("dense".to_string(), 0.0));
-    }
-    let (m, r) = variant
-        .split_once('@')
-        .with_context(|| format!("variant {variant:?} must be 'dense' or 'method@ratio'"))?;
-    ensure!(!m.is_empty(), "variant {variant:?} has an empty method");
-    let ratio: f64 = r
-        .parse()
-        .ok()
-        .with_context(|| format!("variant {variant:?}: ratio {r:?} is not a number"))?;
-    ensure!(
-        ratio.is_finite() && ratio > 0.0 && ratio < 1.0,
-        "variant {variant:?}: reduction ratio must be in (0, 1), got {ratio}"
-    );
-    Ok((m.to_string(), ratio))
+/// Parse a serving-lane variant: `"dense"` (→ `None`) or
+/// `<policy>@<ratio>[:<metric>]` (DESIGN.md §10). Policy names, the (0, 1)
+/// ratio range, and metric applicability are all validated here — a bad
+/// variant fails before any engine is built or request queued, not at
+/// manifest-lookup time. Thin façade over [`PolicySpec::parse`].
+pub fn parse_variant(variant: &str) -> Result<Option<PolicySpec>> {
+    PolicySpec::parse(variant)
 }
 
 #[cfg(test)]
@@ -367,10 +366,20 @@ mod tests {
 
     #[test]
     fn variant_parse() {
-        assert_eq!(parse_variant("dense").unwrap(), ("dense".into(), 0.0));
-        assert_eq!(parse_variant("").unwrap(), ("dense".into(), 0.0));
-        assert_eq!(parse_variant("utrc@0.2").unwrap(), ("utrc".into(), 0.2));
-        assert!(parse_variant("nope").is_err());
+        use crate::reduction::policy::PolicyKind;
+        assert!(parse_variant("dense").unwrap().is_none());
+        assert!(parse_variant("").unwrap().is_none());
+        let p = parse_variant("utrc@0.2").unwrap().unwrap();
+        assert_eq!((p.kind, p.ratio), (PolicyKind::Unified, 0.2));
+        // The full policy family parses, including metric suffixes.
+        for good in ["prune@0.2", "prune@0.2:l1", "merge@0.3", "unified@0.1:clip", "random@0.4"] {
+            assert!(parse_variant(good).unwrap().is_some(), "{good} rejected");
+        }
+        // Unknown policies and misplaced metrics fail at parse time — before
+        // any engine is built or request queued.
+        for bad in ["nope", "bogus@0.2", "merge@0.2:l2", "random@0.2:clip", "prune@0.2:l9"] {
+            assert!(parse_variant(bad).is_err(), "{bad} accepted");
+        }
     }
 
     #[test]

@@ -34,8 +34,9 @@ pub struct Request {
     pub prompt: Vec<i32>,
     /// Number of tokens to generate.
     pub gen_tokens: usize,
-    /// Requested variant key ("dense", "utrc@0.2", ...), or empty for router
-    /// choice.
+    /// Requested variant key — `"dense"` or a reduction-policy variant
+    /// `<policy>@<ratio>[:<metric>]` such as `"unified@0.2"` or
+    /// `"prune@0.3:l1"` (DESIGN.md §10) — or empty for router choice.
     pub variant: String,
     /// Caller-side arrival timestamp (µs since the caller's epoch) — carried
     /// as trace metadata only. Serving queue latency is measured by the

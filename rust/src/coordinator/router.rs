@@ -6,6 +6,13 @@
 //!   declaration order, making the policy deterministic and testable);
 //! * cost-aware — prefer reduced variants for long prompts (they save
 //!   proportionally more prefill FLOPs), dense for short ones.
+//!
+//! Lane names are opaque keys to the router, but in the serving stack they
+//! are reduction-policy variants (`dense`, `<policy>@<ratio>[:<metric>]` —
+//! DESIGN.md §10), validated by `engine::parse_variant` when each lane's
+//! engine is built, before any request is queued. [`Router::route`]
+//! distinguishes a malformed explicit variant from a well-formed one that
+//! simply has no lane, so callers get an actionable error either way.
 
 use std::collections::BTreeMap;
 
@@ -61,7 +68,12 @@ impl Router {
         self.routed += 1;
         if !req.variant.is_empty() {
             if !self.depths.contains_key(&req.variant) {
-                bail!("unknown variant {:?} (lanes: {:?})", req.variant, self.order);
+                // Malformed variant vs. valid-but-unserved: different fixes
+                // (correct the request vs. add the lane), so say which.
+                if let Err(e) = crate::reduction::policy::PolicySpec::parse(&req.variant) {
+                    bail!("invalid variant {:?}: {e:#}", req.variant);
+                }
+                bail!("no lane serves variant {:?} (lanes: {:?})", req.variant, self.order);
             }
             return Ok(req.variant.clone());
         }
@@ -114,6 +126,20 @@ mod tests {
         assert_eq!(r.route(&req("utrc@0.2", 4)).unwrap(), "utrc@0.2");
         assert!(r.route(&req("nope", 4)).is_err());
         assert!(r.route(&req("", 4)).is_err());
+    }
+
+    #[test]
+    fn explicit_route_distinguishes_bad_variant_from_missing_lane() {
+        let mut r = Router::new(Policy::Explicit, &["dense", "utrc@0.2"]);
+        // Malformed variants are rejected as invalid (policy-name/grammar
+        // validation), before any queueing could happen.
+        for bad in ["bogus@0.5", "utrc@7", "merge@0.2:l2"] {
+            let msg = format!("{:#}", r.route(&req(bad, 4)).unwrap_err());
+            assert!(msg.contains("invalid variant"), "{bad}: {msg}");
+        }
+        // A well-formed variant with no serving lane names the real problem.
+        let msg = format!("{:#}", r.route(&req("prune@0.3", 4)).unwrap_err());
+        assert!(msg.contains("no lane serves"), "{msg}");
     }
 
     #[test]

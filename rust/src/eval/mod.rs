@@ -12,6 +12,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::data::{Task, TaskItem};
 use crate::manifest::{HloEntry, Manifest, ModelEntry};
+use crate::reduction::policy::PolicySpec;
 use crate::runtime::{DeviceWeights, HostTensor, Runtime};
 use crate::tokenizer::Tokenizer;
 use crate::util::pool::par_map;
@@ -132,7 +133,9 @@ pub struct ChoiceScore {
 }
 
 /// Run every sequence through the executable in static batches; return one
-/// ChoiceScore per sequence (same order).
+/// ChoiceScore per sequence (same order). `policy` optionally overrides the
+/// entry's reduction algorithm at its plan boundaries (DESIGN.md §10) —
+/// reference backend only.
 pub fn run_scoring(
     rt: &Runtime,
     man: &Manifest,
@@ -141,8 +144,9 @@ pub fn run_scoring(
     weights: &DeviceWeights,
     seqs: &[EncodedSeq],
     vocab: usize,
+    policy: Option<&PolicySpec>,
 ) -> Result<Vec<ChoiceScore>> {
-    let exe = rt.load_entry(man, model, entry)?;
+    let exe = rt.load_entry_with_policy(man, model, entry, policy)?;
     let (b, l, out_len) = (entry.batch, entry.seq_len, entry.out_len);
     let mut scores = vec![ChoiceScore::default(); seqs.len()];
 
@@ -275,7 +279,9 @@ pub fn aggregate(
         .collect()
 }
 
-/// Full evaluation of one model variant.
+/// Full evaluation of one model variant. With a `policy` override, the
+/// result's `variant` carries the policy's canonical variant string instead
+/// of the manifest tag, so report rows name the algorithm actually run.
 pub fn evaluate(
     rt: &Runtime,
     man: &Manifest,
@@ -285,14 +291,18 @@ pub fn evaluate(
     tok: &Tokenizer,
     tasks: &[Task],
     max_items: usize,
+    policy: Option<&PolicySpec>,
 ) -> Result<EvalResult> {
     let t0 = std::time::Instant::now();
     let seqs = encode_tasks(tok, tasks, entry.seq_len, max_items)?;
-    let scores = run_scoring(rt, man, model, entry, weights, &seqs, model.vocab_size)?;
+    let scores = run_scoring(rt, man, model, entry, weights, &seqs, model.vocab_size, policy)?;
     let tasks_out = aggregate(tasks, &seqs, &scores, max_items);
     Ok(EvalResult {
         model: model.name.clone(),
-        variant: entry.tag.clone(),
+        variant: match policy {
+            Some(p) => p.to_variant(),
+            None => entry.tag.clone(),
+        },
         tasks: tasks_out,
         wall_s: t0.elapsed().as_secs_f64(),
         sequences: seqs.len(),

@@ -187,25 +187,38 @@ pub fn manifest_or_fixture(artifacts: &str) -> Result<(Manifest, bool)> {
 }
 
 /// Synthetic serving workload shared by `repro serve`/`repro demo`, the
-/// serve example, and the coordinator bench (keeps the three surfaces
-/// measuring the same trace shape): bimodal prompt lengths — full prefill
-/// frame vs a quarter of it (short chat-like vs long document-like) — and
-/// uniform 1..=max_gen generation lengths.
+/// serve example, and the coordinator/reduction benches (keeps every
+/// surface measuring the same trace shape): bimodal prompt lengths — full
+/// prefill frame vs a quarter of it (short chat-like vs long document-like)
+/// — and uniform 1..=max_gen generation lengths.
+///
+/// `explicit_variants` mixes policy-variant pinning into the trace: every
+/// third request names one of the given lane variants explicitly
+/// (round-robin; the variant grammar of DESIGN.md §10), the rest leave the
+/// choice to the router. Pass `&[]` for a fully router-driven trace. The
+/// RNG stream is identical either way, so traces stay comparable across
+/// benches that differ only in pinning.
 pub fn synth_requests(
     rng: &mut Rng,
     n_requests: usize,
     max_gen: usize,
     prefill_seq_len: usize,
     vocab_size: usize,
+    explicit_variants: &[&str],
 ) -> Vec<crate::coordinator::Request> {
     (0..n_requests)
         .map(|i| {
             let plen = if rng.f64() < 0.5 { prefill_seq_len } else { prefill_seq_len / 4 };
+            let variant = if !explicit_variants.is_empty() && i % 3 == 2 {
+                explicit_variants[(i / 3) % explicit_variants.len()].to_string()
+            } else {
+                String::new()
+            };
             crate::coordinator::Request {
                 id: i as u64,
                 prompt: (0..plen).map(|_| rng.below(vocab_size) as i32).collect(),
                 gen_tokens: 1 + rng.below(max_gen.max(1)),
-                variant: String::new(),
+                variant,
                 arrived_us: 0,
             }
         })

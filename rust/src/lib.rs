@@ -24,7 +24,8 @@
 //!   directory, no Python, and no XLA**, against deterministic synthetic
 //!   fixtures from [`fixtures`].
 //! * `pjrt` *(cargo feature `pjrt`)* — the production AOT path
-//!   ([`runtime::pjrt`]): Python lowers models to HLO text once
+//!   (`runtime::pjrt`; the module only exists with the feature on, so no
+//!   intra-doc link here): Python lowers models to HLO text once
 //!   (`make artifacts`), the PJRT client compiles and executes them.
 //!   Python never runs at request time; the `repro` binary is then
 //!   self-contained.

@@ -27,6 +27,7 @@ use tor_ssm::coordinator::scheduler::Scheduler;
 use tor_ssm::coordinator::metrics::Metrics;
 use tor_ssm::eval::scoring::Scheme;
 use tor_ssm::manifest::Manifest;
+use tor_ssm::reduction::policy::PolicySpec;
 use tor_ssm::runtime::Runtime;
 use tor_ssm::train::load_best_weights;
 use tor_ssm::util::cli::Args;
@@ -67,16 +68,36 @@ commands:
   demo                         hermetic serve+eval on a synthetic fixture (no artifacts)
   train --model M --steps N    train one model via the AOT train step (pjrt backend)
   train-all --steps N          train all four models
-  eval --model M --method X --ratio R [--items N]
+  eval --model M --method X --ratio R [--metric m] [--items N]
+       methods: dense|utrc|evit|pumer|ltmp (AOT exports) or a reduction
+       policy prune|merge|unified|random dispatched at run time; or pass the
+       variant grammar directly: --variant <policy>@<ratio>[:<metric>]
   table 1..6|all [--items N] [--fresh]
   figure 1|3|4|5|6 [--gen-tokens N]
   golden                       rust-vs-python numerics cross-check (pjrt backend)
   serve --requests N [--policy explicit|least-loaded|cost-aware]
+        [--lanes dense,unified@0.2,prune@0.2,merge@0.2,random@0.2]
 common: --artifacts DIR (default ./artifacts, or $REPRO_ARTIFACTS)
         --backend reference|pjrt (default reference; pjrt needs the cargo feature)";
 
 fn backend_of(args: &Args) -> String {
     args.get_or("backend", "reference")
+}
+
+/// Manifest for `artifacts`. An explicitly passed --artifacts must load (a
+/// typo'd path should be an error, not a silent fall-back); only the
+/// default location falls back to the shared synthetic fixture (generated
+/// on demand), keeping `eval` and `serve` drivable with zero artifacts,
+/// exactly like `demo` and the benches.
+fn manifest_or_default_fixture(args: &Args, artifacts: &str) -> Result<Manifest> {
+    if args.get("artifacts").is_some() {
+        return Manifest::load(artifacts);
+    }
+    let (man, synthetic) = tor_ssm::fixtures::manifest_or_fixture(artifacts)?;
+    if synthetic {
+        eprintln!("[info] no artifacts at {artifacts:?}: using the synthetic fixture {:?}", man.root);
+    }
+    Ok(man)
 }
 
 fn info(artifacts: &str) -> Result<()> {
@@ -119,8 +140,8 @@ fn demo(args: &Args) -> Result<()> {
     let me = man.model(&model)?.clone();
     let (w, _) = load_best_weights(&man, &me)?;
 
-    // ---- serve a small trace through both lanes ----
-    let lanes = ["dense", "utrc@0.2"];
+    // ---- serve a small trace across the policy family's lanes ----
+    let lanes = ["dense", "unified@0.2", "prune@0.2", "merge@0.2"];
     let engines: Vec<Engine> = lanes
         .iter()
         .map(|v| Engine::new(&rt, &man, &me, &w, v))
@@ -151,14 +172,26 @@ fn demo(args: &Args) -> Result<()> {
         );
     }
 
-    // ---- zero-shot eval, dense vs reduced ----
+    // ---- zero-shot eval: dense vs the full policy family at one ratio ----
     let items = args.usize_or("items", 2);
     let mut ctx = Ctx::new(&dir.to_string_lossy(), items, true)?;
-    for (label, method, ratio) in [("dense", "dense", 0.0), ("utrc@0.2", "utrc", 0.20)] {
-        let e = ctx.find_eval_entry(&model, method, ratio, None, None, None, None)?;
-        let r = ctx.eval_variant(&model, &e)?;
+    for variant in ["dense", "unified@0.2", "prune@0.2", "merge@0.2", "random@0.2"] {
+        let r = match PolicySpec::parse(variant)? {
+            None => {
+                let e = ctx.find_eval_entry(&model, "dense", 0.0, None, None, None, None)?;
+                ctx.eval_variant(&model, &e)?
+            }
+            Some(spec) => {
+                let e = ctx
+                    .man
+                    .model(&model)?
+                    .eval_entry_for_policy(spec.kind.manifest_method(), spec.ratio)?
+                    .clone();
+                ctx.eval_policy_variant(&model, &e, Some(&spec))?
+            }
+        };
         println!(
-            "eval {label:<9} avg_acc={:.3} ppl={:.2} ({} seqs)",
+            "eval {variant:<12} avg_acc={:.3} ppl={:.2} ({} seqs)",
             r.avg_acc(Scheme::Truncated),
             r.lambada_ppl(Scheme::Truncated),
             r.sequences
@@ -213,9 +246,37 @@ fn eval_one(args: &Args, artifacts: &str) -> Result<()> {
     let method = args.get_or("method", "dense");
     let ratio = args.f64_or("ratio", 0.0);
     let items = args.usize_or("items", 16);
-    let mut ctx = Ctx::with_backend(artifacts, items, args.flag("fresh"), &backend_of(args))?;
-    let entry = ctx.find_eval_entry(&model, &method, ratio, args.get("metric"), None, None, None)?;
-    let r = ctx.eval_variant(&model, &entry)?;
+    let man = manifest_or_default_fixture(args, artifacts)?;
+    let dir = man.root.to_string_lossy().to_string();
+    let mut ctx = Ctx::with_backend(&dir, items, args.flag("fresh"), &backend_of(args))?;
+    // Two roads to a result (DESIGN.md §10): AOT-exported methods go through
+    // the manifest's (method, ratio, metric) index; reduction-policy
+    // variants (`--variant prune@0.2:l1`, or `--method prune --ratio 0.2
+    // [--metric l1]`) resolve a plan-matched entry and dispatch the policy
+    // at run time on the reference backend.
+    let variant_arg = args.get("variant").map(|v| v.to_string()).or_else(|| {
+        matches!(method.as_str(), "prune" | "merge" | "unified" | "random").then(|| {
+            match args.get("metric") {
+                Some(m) => format!("{method}@{ratio}:{m}"),
+                None => format!("{method}@{ratio}"),
+            }
+        })
+    });
+    let r = match variant_arg.as_deref().map(PolicySpec::parse).transpose()?.flatten() {
+        Some(spec) => {
+            let entry = ctx
+                .man
+                .model(&model)?
+                .eval_entry_for_policy(spec.kind.manifest_method(), spec.ratio)?
+                .clone();
+            ctx.eval_policy_variant(&model, &entry, Some(&spec))?
+        }
+        None => {
+            let entry =
+                ctx.find_eval_entry(&model, &method, ratio, args.get("metric"), None, None, None)?;
+            ctx.eval_variant(&model, &entry)?
+        }
+    };
     let scheme = if args.flag("aligned") { Scheme::Aligned } else { Scheme::Truncated };
     println!("model={model} variant={}", r.variant);
     for t in &r.tasks {
@@ -289,9 +350,10 @@ fn golden(args: &Args, artifacts: &str) -> Result<()> {
 }
 
 fn serve(args: &Args, artifacts: &str) -> Result<()> {
-    let man = Manifest::load(artifacts)?;
+    let man = manifest_or_default_fixture(args, artifacts)?;
     let rt = Runtime::from_name(&backend_of(args))?;
-    let model = args.get_or("model", "mamba-small");
+    let default_model = man.models.keys().next().context("manifest has no models")?.clone();
+    let model = args.get_or("model", &default_model);
     let n_requests = args.usize_or("requests", 16);
     let gen_tokens = args.usize_or("gen-tokens", 16);
     let policy = match args.get_or("policy", "cost-aware").as_str() {
@@ -305,7 +367,15 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
     if !trained {
         eprintln!("[warn] serving INIT weights (no checkpoint)");
     }
-    let lanes = ["dense", "utrc@0.2"];
+    // Any mix of policy variants serves side by side; each lane is validated
+    // by parse_variant inside Engine::new before a single request queues.
+    let lanes_arg = args.get_or("lanes", "dense,utrc@0.2");
+    let lanes_owned: Vec<String> =
+        lanes_arg.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    if lanes_owned.is_empty() {
+        bail!("--lanes must name at least one variant (e.g. dense,prune@0.2,merge@0.2)");
+    }
+    let lanes: Vec<&str> = lanes_owned.iter().map(|s| s.as_str()).collect();
     println!("building engines for {lanes:?}...");
     let engines: Vec<Engine> = lanes
         .iter()
@@ -360,6 +430,7 @@ fn serve_trace(
         max_gen,
         prefill_seq_len,
         vocab_size,
+        lanes, // every third request pins a lane variant explicitly
     );
     for req in trace {
         let lane = router.route(&req)?;

@@ -293,4 +293,45 @@ impl ModelEntry {
         }
         bail!("no prefill HLO for {} method={method} ratio={flops_reduction}", self.name)
     }
+
+    /// Any prefill export whose schedule plan hits `ratio`, regardless of
+    /// the reduction method it was lowered with. Used by run-time policy
+    /// dispatch on the reference backend (DESIGN.md §10), where the entry
+    /// only supplies the plan geometry and the policy supplies the
+    /// algorithm. Deterministic: first matching tag in BTreeMap order.
+    pub fn prefill_entry_for_plan(&self, flops_reduction: f64) -> Result<&HloEntry> {
+        self.entry_for_plan("prefill", flops_reduction)
+    }
+
+    /// [`ModelEntry::prefill_entry_for_plan`], for eval exports.
+    pub fn eval_entry_for_plan(&self, flops_reduction: f64) -> Result<&HloEntry> {
+        self.entry_for_plan("eval", flops_reduction)
+    }
+
+    /// Eval lookup for run-time policy dispatch, mirroring how
+    /// `Engine::new` resolves prefill entries: prefer an export lowered
+    /// with `method` at `ratio` (so AOT backends bind the graph that
+    /// actually bakes the algorithm in), else fall back to any export whose
+    /// plan hits the ratio (the reference backend only needs the geometry).
+    pub fn eval_entry_for_policy(&self, method: &str, flops_reduction: f64) -> Result<&HloEntry> {
+        self.find_eval(method, flops_reduction, None, None, None, None)
+            .or_else(|_| self.eval_entry_for_plan(flops_reduction))
+    }
+
+    fn entry_for_plan(&self, kind: &str, flops_reduction: f64) -> Result<&HloEntry> {
+        for e in self.hlo.values() {
+            if e.kind != kind || e.plan.is_none() {
+                continue;
+            }
+            let Some(r) = &e.reduction else { continue };
+            if (r.flops_reduction - flops_reduction).abs() < 1e-6 {
+                return Ok(e);
+            }
+        }
+        bail!(
+            "no {kind} HLO with a schedule plan at ratio {flops_reduction} for {} \
+             (exported plan ratios decide which policy ratios can run)",
+            self.name
+        )
+    }
 }

@@ -1,8 +1,19 @@
-//! FLOPs model, schedule solver, and peak-memory model — the rust mirror of
-//! `python/compile/flops.py`. The python side bakes static keep-counts into
-//! HLO exports; this side re-derives the same plans for reporting (tables,
-//! figures) and validates them against the manifest (integration test
-//! `schedule_golden`).
+//! Token-reduction planning and policies.
+//!
+//! Two halves:
+//!
+//! * this module — FLOPs model, schedule solver, and peak-memory model: the
+//!   rust mirror of `python/compile/flops.py`. The python side bakes static
+//!   keep-counts into HLO exports; this side re-derives the same plans for
+//!   reporting (tables, figures) and validates them against the manifest
+//!   (integration test `schedule_golden`). A plan decides *how many* tokens
+//!   survive each reduction site.
+//! * [`policy`] — the pluggable [`ReductionPolicy`](policy::ReductionPolicy)
+//!   family (prune / merge / unified / random) deciding *which* tokens
+//!   survive and what happens to the rest, dispatched by the reference
+//!   backend at every plan boundary (DESIGN.md §10).
+
+pub mod policy;
 
 use anyhow::{bail, Result};
 

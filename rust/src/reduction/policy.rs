@@ -1,0 +1,816 @@
+//! Pluggable token-reduction policies — the runtime half of the paper's
+//! algorithm family (DESIGN.md §10).
+//!
+//! A [`SchedulePlan`](super::SchedulePlan) decides *how many* tokens survive
+//! each reduction site; a [`ReductionPolicy`] decides *which* tokens survive
+//! and what happens to the rest. The reference backend
+//! ([`crate::runtime::reference`]) dispatches the policy at every plan
+//! boundary, so the same compiled program geometry can run the paper's
+//! unified method, its pruning/merging baselines, or a random control —
+//! selected per serving lane by the variant grammar
+//! `<policy>@<ratio>[:<metric>]` (parsed by [`PolicySpec::parse`]).
+//!
+//! | policy    | paper artifact                              | python mirror |
+//! |-----------|---------------------------------------------|---------------|
+//! | `prune`   | importance-only (Eq. 5; EViT-style baseline) | `reduction._one_evit`, `kernels/importance.py` |
+//! | `merge`   | ToMe/PuMer bipartite cosine merge (Eq. 6–7) | `reduction._one_pumer`, `kernels/matching.py` |
+//! | `unified` | UTRC: importance keep + merge of the dropped | `reduction._one_utrc` |
+//! | `random`  | seeded importance-blind control             | — |
+//!
+//! The importance metrics (`clip`/`noclip`/`l1`/`l2`) mirror
+//! `python/compile/kernels/importance.py` and are locked to it by
+//! `tests/reduction_golden.rs`; ranking inside a policy uses unnormalised
+//! per-row scores (`d·mean` for clip/noclip/l1, `(d·rms)²` for l2 — strictly
+//! monotone transforms of the Eq. 5 metrics) so that `unified`'s default
+//! `l2` ranking stays bit-identical to the legacy energy heuristic this
+//! module absorbed from the reference backend.
+//!
+//! # Examples
+//!
+//! Construct a policy from a variant string and reduce a tiny live set:
+//!
+//! ```
+//! use tor_ssm::reduction::policy::PolicySpec;
+//!
+//! let spec = PolicySpec::parse("prune@0.5:l1").unwrap().expect("reduced variant");
+//! let policy = spec.build();
+//!
+//! // Four live rows of width 2; rows 2 and 3 carry the most L1 mass.
+//! let mut xs = vec![0.1, 0.0, 1.0, 1.0, 3.0, -3.0, 0.5, 2.0];
+//! let mut kept = vec![0, 1, 2, 3];
+//! let mut merged = vec![1.0; 4];
+//! policy.reduce(&mut xs, &mut kept, &mut merged, 2, 2);
+//!
+//! assert_eq!(kept, vec![2, 3]); // surviving ORIGINAL positions, ascending
+//! assert_eq!(xs.len(), 2 * 2);  // live set compacted to `target` rows
+//! assert_eq!(merged, vec![1.0, 1.0]); // prune folds nothing
+//! ```
+//!
+//! The unified policy merges every dropped row into a survivor, and the
+//! `merged` weights record how many original tokens each survivor absorbed:
+//!
+//! ```
+//! use tor_ssm::reduction::policy::PolicySpec;
+//!
+//! let spec = PolicySpec::parse("unified@0.5").unwrap().unwrap();
+//! let mut xs = vec![0.1, 0.0, 1.0, 1.0, 3.0, -3.0, 0.5, 2.0];
+//! let mut kept = vec![0, 1, 2, 3];
+//! let mut merged = vec![1.0; 4];
+//! spec.build().reduce(&mut xs, &mut kept, &mut merged, 2, 2);
+//!
+//! assert_eq!(kept, vec![2, 3]);
+//! // Rows 0 and 1 folded into row 2 (their nearest surviving successor):
+//! assert_eq!(merged, vec![3.0, 1.0]);
+//! ```
+//!
+//! `"dense"` parses to `None` (no reduction), and malformed variants are
+//! rejected with the reason:
+//!
+//! ```
+//! use tor_ssm::reduction::policy::PolicySpec;
+//! assert!(PolicySpec::parse("dense").unwrap().is_none());
+//! assert!(PolicySpec::parse("bogus@0.2").is_err());        // unknown policy
+//! assert!(PolicySpec::parse("merge@0.2:l1").is_err());     // merge takes no metric
+//! assert!(PolicySpec::parse("prune@1.5").is_err());        // ratio outside (0, 1)
+//! ```
+
+use std::cmp::Ordering;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// Seed for the `random` baseline policy. Fixed so that random-control rows
+/// in tables/benches are reproducible across runs and machines.
+pub const RANDOM_POLICY_SEED: u64 = 0x7042_5EED;
+
+/// Token-importance metric (paper Eq. 5 and the Table-3 ablations); mirrors
+/// `python/compile/kernels/importance.py` / `ref.importance_ref`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// `mean(max(0, y))` — the paper's Eq. 5 (its default).
+    Clip,
+    /// `mean(y)` — no clipping.
+    Noclip,
+    /// `mean(|y|)`.
+    L1,
+    /// `sqrt(mean(y²))` — RMS; rank-equivalent to the legacy residual-energy
+    /// heuristic, and therefore `unified`'s default.
+    L2,
+}
+
+impl Metric {
+    pub fn parse(s: &str) -> Result<Metric> {
+        match s {
+            "clip" => Ok(Metric::Clip),
+            "noclip" => Ok(Metric::Noclip),
+            "l1" => Ok(Metric::L1),
+            "l2" => Ok(Metric::L2),
+            other => bail!("unknown importance metric {other:?} (expected clip|noclip|l1|l2)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Clip => "clip",
+            Metric::Noclip => "noclip",
+            Metric::L1 => "l1",
+            Metric::L2 => "l2",
+        }
+    }
+}
+
+/// Which member of the algorithm family a variant names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Importance-only (EViT-style): drop the least-important rows.
+    Prune,
+    /// ToMe/PuMer-style bipartite cosine merge, importance-blind.
+    Merge,
+    /// The paper's UTRC hybrid: importance keep, dropped rows merged into
+    /// survivors. The repo's legacy heuristic is `unified` with metric `l2`.
+    Unified,
+    /// Seeded random keep — the importance-blind control baseline.
+    Random,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Prune => "prune",
+            PolicyKind::Merge => "merge",
+            PolicyKind::Unified => "unified",
+            PolicyKind::Random => "random",
+        }
+    }
+
+    fn parse(s: &str) -> Result<PolicyKind> {
+        match s {
+            "prune" | "evit" => Ok(PolicyKind::Prune),
+            "merge" | "pumer" | "tome" => Ok(PolicyKind::Merge),
+            "unified" | "utrc" => Ok(PolicyKind::Unified),
+            "random" => Ok(PolicyKind::Random),
+            other => bail!(
+                "unknown reduction policy {other:?} (expected \
+                 prune|merge|unified|random — aliases evit, pumer/tome, utrc — or dense)"
+            ),
+        }
+    }
+
+    /// Whether the policy ranks by an importance metric (and therefore
+    /// accepts a `:<metric>` suffix in the variant grammar).
+    pub fn uses_metric(&self) -> bool {
+        matches!(self, PolicyKind::Prune | PolicyKind::Unified)
+    }
+
+    /// Default metric for metric-bearing policies: `prune` follows the
+    /// paper's Eq. 5 default (`clip`); `unified` keeps the legacy energy
+    /// ranking (`l2`) so default-metric outputs are bit-identical to the
+    /// pre-policy reference backend.
+    fn default_metric(&self) -> Option<Metric> {
+        match self {
+            PolicyKind::Prune => Some(Metric::Clip),
+            PolicyKind::Unified => Some(Metric::L2),
+            PolicyKind::Merge | PolicyKind::Random => None,
+        }
+    }
+
+    /// The `aot.py` reduction-method name whose exports this policy mirrors
+    /// (used to prefer a method-matched manifest entry).
+    pub fn manifest_method(&self) -> &'static str {
+        match self {
+            PolicyKind::Prune => "evit",
+            PolicyKind::Merge => "pumer",
+            PolicyKind::Unified => "utrc",
+            PolicyKind::Random => "random",
+        }
+    }
+}
+
+/// A fully parsed reduction variant: which algorithm, at which FLOPs-
+/// reduction ratio, ranked by which metric (metric-bearing policies only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySpec {
+    pub kind: PolicyKind,
+    /// Target FLOPs-reduction fraction, strictly inside (0, 1). The
+    /// schedule solver turns it into per-site keep counts; the policy only
+    /// sees the resulting `target` sizes.
+    pub ratio: f64,
+    /// `None` for policies that do not rank by importance (merge, random);
+    /// always `Some` (default filled in) for prune and unified.
+    pub metric: Option<Metric>,
+}
+
+impl PolicySpec {
+    /// Parse the variant grammar `"dense"` | `"<policy>@<ratio>[:<metric>]"`.
+    /// Returns `Ok(None)` for dense (no reduction). Policy names, ratio
+    /// range, and metric applicability are all validated here, so a bad
+    /// variant fails at parse time — before any request is queued — not at
+    /// engine construction.
+    pub fn parse(variant: &str) -> Result<Option<PolicySpec>> {
+        if variant == "dense" || variant.is_empty() {
+            return Ok(None);
+        }
+        let (name, rest) = variant
+            .split_once('@')
+            .with_context(|| {
+                format!("variant {variant:?} must be 'dense' or '<policy>@<ratio>[:<metric>]'")
+            })?;
+        ensure!(!name.is_empty(), "variant {variant:?} has an empty policy name");
+        let kind = PolicyKind::parse(name).with_context(|| format!("variant {variant:?}"))?;
+        let (ratio_s, metric_s) = match rest.split_once(':') {
+            Some((r, m)) => (r, Some(m)),
+            None => (rest, None),
+        };
+        let ratio: f64 = ratio_s
+            .parse()
+            .ok()
+            .with_context(|| format!("variant {variant:?}: ratio {ratio_s:?} is not a number"))?;
+        ensure!(
+            ratio.is_finite() && ratio > 0.0 && ratio < 1.0,
+            "variant {variant:?}: reduction ratio must be in (0, 1), got {ratio}"
+        );
+        let metric = match metric_s {
+            Some(m) => {
+                ensure!(
+                    kind.uses_metric(),
+                    "variant {variant:?}: policy {:?} takes no metric suffix",
+                    kind.name()
+                );
+                Some(Metric::parse(m).with_context(|| format!("variant {variant:?}"))?)
+            }
+            None => kind.default_metric(),
+        };
+        Ok(Some(PolicySpec { kind, ratio, metric }))
+    }
+
+    /// Canonical string form; round-trips through [`PolicySpec::parse`] and
+    /// keys runtime compile caches and result caches.
+    pub fn to_variant(&self) -> String {
+        match self.metric {
+            Some(m) => format!("{}@{}:{}", self.kind.name(), self.ratio, m.name()),
+            None => format!("{}@{}", self.kind.name(), self.ratio),
+        }
+    }
+
+    /// The policy an AOT manifest entry's `reduction` block resolves to on
+    /// the reference backend. Methods the interpreter has no native
+    /// algorithm for (`ltmp`, future exports) fall back to the legacy
+    /// unified/`l2` semantics the reference backend always applied, so
+    /// existing fixtures and tests keep their outputs bit-for-bit.
+    pub fn from_manifest_reduction(r: &crate::manifest::Reduction) -> Option<PolicySpec> {
+        if r.method == "dense" || r.flops_reduction <= 0.0 {
+            return None;
+        }
+        let (kind, metric) = match r.method.as_str() {
+            "evit" => (
+                PolicyKind::Prune,
+                Some(Metric::parse(&r.metric).unwrap_or(Metric::Clip)),
+            ),
+            "pumer" | "tome" => (PolicyKind::Merge, None),
+            "random" => (PolicyKind::Random, None),
+            // "utrc", "ltmp", and anything unknown: legacy interpreter
+            // semantics (see doc comment).
+            _ => (PolicyKind::Unified, Some(Metric::L2)),
+        };
+        Some(PolicySpec { kind, ratio: r.flops_reduction, metric })
+    }
+
+    /// Same algorithm + metric at (approximately) the same ratio — used to
+    /// decide whether a lane's requested policy matches what an AOT graph
+    /// already bakes in.
+    pub fn compatible_with(&self, other: &PolicySpec) -> bool {
+        self.kind == other.kind
+            && self.metric == other.metric
+            && (self.ratio - other.ratio).abs() < 1e-6
+    }
+
+    /// Instantiate the runnable policy.
+    pub fn build(&self) -> Box<dyn ReductionPolicy> {
+        match self.kind {
+            PolicyKind::Prune => Box::new(Prune { metric: self.metric.unwrap_or(Metric::Clip) }),
+            PolicyKind::Merge => Box::new(Merge),
+            PolicyKind::Unified => Box::new(Unified { metric: self.metric.unwrap_or(Metric::L2) }),
+            PolicyKind::Random => Box::new(Random { seed: RANDOM_POLICY_SEED }),
+        }
+    }
+}
+
+/// What the plan-less reference backend did before policies existed: the
+/// unified hybrid ranked by residual energy. Kept as the fallback for
+/// hand-built [`ProgramSpec`](crate::runtime::ProgramSpec)s that carry a
+/// plan but no policy.
+pub fn legacy_default() -> Box<dyn ReductionPolicy> {
+    Box::new(Unified { metric: Metric::L2 })
+}
+
+/// One token-reduction algorithm, dispatched at every schedule-plan boundary.
+///
+/// ## Contract (DESIGN.md §10)
+///
+/// `reduce` shrinks a live set of `kept.len()` rows (each `d` wide, row-major
+/// in `xs`) down to exactly `target` rows, in place:
+///
+/// * `kept` maps live rows to their ORIGINAL sequence positions and must
+///   stay strictly ascending — downstream logits/kept-map outputs rely on it;
+/// * `merged[i]` is row `i`'s fold weight (how many original tokens it
+///   represents); policies that merge must keep it consistent so later sites
+///   weight running means correctly;
+/// * when `target == 0` or `target >= kept.len()` the call is a no-op (the
+///   schedule solver never emits either, but hand-built plans may);
+/// * the reduction must be deterministic — identical inputs give identical
+///   outputs on every backend, machine, and run.
+pub trait ReductionPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn reduce(
+        &self,
+        xs: &mut Vec<f32>,
+        kept: &mut Vec<usize>,
+        merged: &mut Vec<f32>,
+        target: usize,
+        d: usize,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Metric math (locked to python/compile/kernels by tests/reduction_golden.rs)
+// ---------------------------------------------------------------------------
+
+/// Per-row token importance over a row-major `(len/d, d)` buffer; the exact
+/// Eq. 5 metric values, matching `ref.importance_ref` to float tolerance.
+pub fn importance(xs: &[f32], d: usize, metric: Metric) -> Vec<f32> {
+    assert!(d > 0 && xs.len() % d == 0, "importance: {} not a multiple of d={d}", xs.len());
+    xs.chunks_exact(d)
+        .map(|row| match metric {
+            Metric::Clip => row.iter().map(|v| v.max(0.0)).sum::<f32>() / d as f32,
+            Metric::Noclip => row.iter().sum::<f32>() / d as f32,
+            Metric::L1 => row.iter().map(|v| v.abs()).sum::<f32>() / d as f32,
+            Metric::L2 => (row.iter().map(|v| v * v).sum::<f32>() / d as f32).sqrt(),
+        })
+        .collect()
+}
+
+/// Best-match under cosine similarity (paper Eq. 6–7); matches
+/// `ref.cosine_match_ref`: rows are normalised with a `+1e-6` guard, and for
+/// every row of `a` the first maximal match in `b` wins. `a` is `(na, d)`
+/// row-major, `b` is `(nb, d)`; returns `(f, g)` — match index into `b` and
+/// its similarity, per `a` row.
+pub fn cosine_match(a: &[f32], b: &[f32], d: usize) -> (Vec<usize>, Vec<f32>) {
+    assert!(d > 0 && a.len() % d == 0 && b.len() % d == 0, "cosine_match: ragged inputs");
+    let nb = b.len() / d;
+    assert!(nb > 0, "cosine_match: empty b set");
+    let normalise = |rows: &[f32]| -> Vec<f32> {
+        rows.chunks_exact(d)
+            .flat_map(|row| {
+                let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt() + 1e-6;
+                row.iter().map(move |v| v / norm)
+            })
+            .collect()
+    };
+    let an = normalise(a);
+    let bn = normalise(b);
+    let mut f = Vec::with_capacity(an.len() / d);
+    let mut g = Vec::with_capacity(an.len() / d);
+    for ar in an.chunks_exact(d) {
+        let (mut best, mut best_sim) = (0usize, f32::NEG_INFINITY);
+        for (j, br) in bn.chunks_exact(d).enumerate() {
+            let sim: f32 = ar.iter().zip(br).map(|(x, y)| x * y).sum();
+            if sim > best_sim {
+                best = j;
+                best_sim = sim;
+            }
+        }
+        f.push(best);
+        g.push(best_sim);
+    }
+    (f, g)
+}
+
+/// Unnormalised ranking scores: `d·mean` of the Eq. 5 metrics (and `(d·rms)²`
+/// for l2) — strictly monotone in the metric value, so the selected set is
+/// identical while the l2 arm stays bit-for-bit the legacy energy score.
+fn selection_scores(xs: &[f32], live: usize, d: usize, metric: Metric) -> Vec<f32> {
+    (0..live)
+        .map(|t| {
+            let row = &xs[t * d..(t + 1) * d];
+            match metric {
+                Metric::Clip => row.iter().map(|v| v.max(0.0)).sum::<f32>(),
+                Metric::Noclip => row.iter().sum::<f32>(),
+                Metric::L1 => row.iter().map(|v| v.abs()).sum::<f32>(),
+                Metric::L2 => row.iter().map(|v| v * v).sum::<f32>(),
+            }
+        })
+        .collect()
+}
+
+/// Row indices sorted by score descending, ties to the earlier position
+/// (the legacy tie-break, shared by every ranking policy).
+fn rank_descending(scores: &[f32]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order
+}
+
+/// Fold row `src` into row `dst` by running weighted mean (weights = fold
+/// counts in `merged`); `dst` absorbs `src`'s weight.
+fn fold_row(xs: &mut [f32], merged: &mut [f32], src: usize, dst: usize, d: usize) {
+    let (ws, wd) = (merged[src], merged[dst]);
+    let tot = wd + ws;
+    let (lo, hi) = (dst.min(src), dst.max(src));
+    let (s1, s2) = xs.split_at_mut(hi * d);
+    let row_lo = &mut s1[lo * d..(lo + 1) * d];
+    let row_hi = &mut s2[..d];
+    let (dst_row, src_row) = if dst < src { (row_lo, row_hi) } else { (row_hi, row_lo) };
+    for c in 0..d {
+        dst_row[c] = (dst_row[c] * wd + src_row[c] * ws) / tot;
+    }
+    merged[dst] = tot;
+}
+
+/// Rebuild `(xs, kept, merged)` from the surviving row indices (ascending).
+fn compact(
+    xs: &mut Vec<f32>,
+    kept: &mut Vec<usize>,
+    merged: &mut Vec<f32>,
+    selected: &[usize],
+    d: usize,
+) {
+    let mut new_xs = Vec::with_capacity(selected.len() * d);
+    let mut new_kept = Vec::with_capacity(selected.len());
+    let mut new_merged = Vec::with_capacity(selected.len());
+    for &t in selected {
+        new_xs.extend_from_slice(&xs[t * d..(t + 1) * d]);
+        new_kept.push(kept[t]);
+        new_merged.push(merged[t]);
+    }
+    *xs = new_xs;
+    *kept = new_kept;
+    *merged = new_merged;
+}
+
+// ---------------------------------------------------------------------------
+// The policies
+// ---------------------------------------------------------------------------
+
+/// Importance-only pruning (EViT adapted to SSMs, the paper's prune
+/// baseline): keep the `target` highest-scoring rows, discard the rest.
+pub struct Prune {
+    pub metric: Metric,
+}
+
+impl ReductionPolicy for Prune {
+    fn name(&self) -> &'static str {
+        "prune"
+    }
+
+    fn reduce(
+        &self,
+        xs: &mut Vec<f32>,
+        kept: &mut Vec<usize>,
+        merged: &mut Vec<f32>,
+        target: usize,
+        d: usize,
+    ) {
+        let live = kept.len();
+        if target >= live || target == 0 {
+            return;
+        }
+        let order = rank_descending(&selection_scores(xs, live, d, self.metric));
+        let mut selected = order[..target].to_vec();
+        selected.sort_unstable();
+        compact(xs, kept, merged, &selected, d);
+    }
+}
+
+/// ToMe/PuMer-style bipartite merging (paper Eq. 6–7 matching, importance-
+/// blind): alternating positions form the candidate set `A` (even) and the
+/// target set `B` (odd); the `n_remove` most cosine-similar `A→B`
+/// connections are merged into their targets by running weighted mean.
+pub struct Merge;
+
+impl ReductionPolicy for Merge {
+    fn name(&self) -> &'static str {
+        "merge"
+    }
+
+    fn reduce(
+        &self,
+        xs: &mut Vec<f32>,
+        kept: &mut Vec<usize>,
+        merged: &mut Vec<f32>,
+        target: usize,
+        d: usize,
+    ) {
+        let live = kept.len();
+        if target >= live || target == 0 {
+            return;
+        }
+        let n_remove = live - target;
+        let a_idx: Vec<usize> = (0..live).step_by(2).collect();
+        let b_idx: Vec<usize> = (1..live).step_by(2).collect();
+        // live >= 2 here (target >= 1 and target < live), so B is non-empty.
+        let gather = |idx: &[usize]| -> Vec<f32> {
+            let mut out = Vec::with_capacity(idx.len() * d);
+            for &i in idx {
+                out.extend_from_slice(&xs[i * d..(i + 1) * d]);
+            }
+            out
+        };
+        let (f, g) = cosine_match(&gather(&a_idx), &gather(&b_idx), d);
+
+        // Connections by similarity descending; ties to the earlier A position.
+        let mut conn: Vec<usize> = (0..a_idx.len()).collect();
+        conn.sort_by(|&i, &j| {
+            g[j].partial_cmp(&g[i]).unwrap_or(Ordering::Equal).then(a_idx[i].cmp(&a_idx[j]))
+        });
+        let n_merge = n_remove.min(a_idx.len());
+        let mut removed: Vec<(usize, usize)> =
+            conn[..n_merge].iter().map(|&c| (a_idx[c], b_idx[f[c]])).collect();
+        removed.sort_unstable(); // fold in ascending source order (deterministic)
+
+        let mut dead = vec![false; live];
+        for &(a, _) in &removed {
+            dead[a] = true;
+        }
+        // Solver plans guarantee n_remove <= |A|; a hand-built plan that
+        // over-removes drops the excess from the tail, unmerged.
+        let mut extra = n_remove - n_merge;
+        for i in (0..live).rev() {
+            if extra == 0 {
+                break;
+            }
+            if !dead[i] {
+                dead[i] = true;
+                extra -= 1;
+            }
+        }
+        for (a, b) in removed {
+            // A tail-drop may have killed a merge target; folding into a row
+            // that is itself being dropped would discard the absorbed weight
+            // anyway, so skip it — the source is simply pruned instead.
+            if !dead[b] {
+                fold_row(xs, merged, a, b, d);
+            }
+        }
+        let selected: Vec<usize> = (0..live).filter(|&i| !dead[i]).collect();
+        compact(xs, kept, merged, &selected, d);
+    }
+}
+
+/// The paper's unified method, as the reference backend realises it: rank by
+/// importance, keep the top `target`, and fold every dropped row into the
+/// nearest surviving row at or before it (first survivor when none precede)
+/// by running weighted mean. With the default `l2` metric this is
+/// bit-identical to the legacy `reduce_live_set` heuristic it replaced.
+pub struct Unified {
+    pub metric: Metric,
+}
+
+impl ReductionPolicy for Unified {
+    fn name(&self) -> &'static str {
+        "unified"
+    }
+
+    fn reduce(
+        &self,
+        xs: &mut Vec<f32>,
+        kept: &mut Vec<usize>,
+        merged: &mut Vec<f32>,
+        target: usize,
+        d: usize,
+    ) {
+        let live = kept.len();
+        if target >= live || target == 0 {
+            return;
+        }
+        let order = rank_descending(&selection_scores(xs, live, d, self.metric));
+        let mut selected: Vec<usize> = order[..target].to_vec();
+        selected.sort_unstable();
+        let mut dropped: Vec<usize> = order[target..].to_vec();
+        dropped.sort_unstable();
+
+        for t in dropped {
+            let q = match selected.partition_point(|&sel| sel < t).checked_sub(1) {
+                Some(i) => selected[i],
+                None => selected[0],
+            };
+            fold_row(xs, merged, t, q, d);
+        }
+        compact(xs, kept, merged, &selected, d);
+    }
+}
+
+/// Seeded random keep — the importance-blind control. Deterministic: the
+/// selection depends only on [`RANDOM_POLICY_SEED`] and the (live, target)
+/// geometry, so repeated runs (and both serve paths) agree exactly.
+pub struct Random {
+    pub seed: u64,
+}
+
+impl ReductionPolicy for Random {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn reduce(
+        &self,
+        xs: &mut Vec<f32>,
+        kept: &mut Vec<usize>,
+        merged: &mut Vec<f32>,
+        target: usize,
+        d: usize,
+    ) {
+        let live = kept.len();
+        if target >= live || target == 0 {
+            return;
+        }
+        let mut rng = Rng::new(self.seed ^ ((live as u64) << 32) ^ target as u64);
+        let mut idx: Vec<usize> = (0..live).collect();
+        rng.shuffle(&mut idx);
+        let mut selected = idx[..target].to_vec();
+        selected.sort_unstable();
+        compact(xs, kept, merged, &selected, d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn live_set(rows: &[[f32; 2]]) -> (Vec<f32>, Vec<usize>, Vec<f32>) {
+        let xs: Vec<f32> = rows.iter().flatten().copied().collect();
+        let kept: Vec<usize> = (0..rows.len()).collect();
+        let merged = vec![1.0; rows.len()];
+        (xs, kept, merged)
+    }
+
+    #[test]
+    fn parse_accepts_the_full_grammar() {
+        assert!(PolicySpec::parse("dense").unwrap().is_none());
+        assert!(PolicySpec::parse("").unwrap().is_none());
+
+        let p = PolicySpec::parse("prune@0.2").unwrap().unwrap();
+        assert_eq!((p.kind, p.metric), (PolicyKind::Prune, Some(Metric::Clip)));
+        let p = PolicySpec::parse("prune@0.2:l1").unwrap().unwrap();
+        assert_eq!(p.metric, Some(Metric::L1));
+        let p = PolicySpec::parse("unified@0.3").unwrap().unwrap();
+        assert_eq!((p.kind, p.metric), (PolicyKind::Unified, Some(Metric::L2)));
+        let p = PolicySpec::parse("unified@0.3:clip").unwrap().unwrap();
+        assert_eq!(p.metric, Some(Metric::Clip));
+        let p = PolicySpec::parse("merge@0.1").unwrap().unwrap();
+        assert_eq!((p.kind, p.metric), (PolicyKind::Merge, None));
+        let p = PolicySpec::parse("random@0.5").unwrap().unwrap();
+        assert_eq!(p.kind, PolicyKind::Random);
+
+        // Aliases map onto the canonical family.
+        assert_eq!(PolicySpec::parse("utrc@0.2").unwrap().unwrap().kind, PolicyKind::Unified);
+        assert_eq!(PolicySpec::parse("evit@0.2").unwrap().unwrap().kind, PolicyKind::Prune);
+        assert_eq!(PolicySpec::parse("pumer@0.2").unwrap().unwrap().kind, PolicyKind::Merge);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_variants() {
+        for bad in [
+            "bogus@0.2",      // unknown policy
+            "nope",           // no '@'
+            "@0.2",           // empty policy
+            "prune@abc",      // non-numeric ratio
+            "prune@0",        // ratio not in (0, 1)
+            "prune@1",
+            "prune@NaN",
+            "prune@inf",
+            "merge@0.2:l1",   // merge takes no metric
+            "random@0.2:l2",  // random takes no metric
+            "prune@0.2:l3",   // unknown metric
+            "ltmp@0.2",       // no native ltmp policy (manifest-only method)
+        ] {
+            assert!(PolicySpec::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn variant_round_trips_through_canonical_form() {
+        for v in ["prune@0.2:clip", "unified@0.3:l2", "merge@0.1", "random@0.5"] {
+            let spec = PolicySpec::parse(v).unwrap().unwrap();
+            assert_eq!(PolicySpec::parse(&spec.to_variant()).unwrap().unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn unified_l2_matches_legacy_reduce_live_set() {
+        // The exact legacy test case from runtime/reference.rs: 5 rows with
+        // energies 1, 100, 4, 100, 0 -> top-3 = rows 1, 3, 2; row 0 merges
+        // into row 1 (first survivor), row 4 into row 3.
+        let d = 2;
+        let mut xs = vec![1.0, 0.0, 10.0, 0.0, 2.0, 0.0, 10.0, 0.0, 0.0, 0.0];
+        let mut kept = vec![0, 1, 2, 3, 4];
+        let mut merged = vec![1.0; 5];
+        legacy_default().reduce(&mut xs, &mut kept, &mut merged, 3, d);
+        assert_eq!(kept, vec![1, 2, 3]);
+        assert_eq!(xs.len(), 3 * d);
+        assert_eq!(merged, vec![2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn every_policy_is_noop_at_or_above_live_and_at_zero() {
+        for spec in ["prune@0.5", "merge@0.5", "unified@0.5", "random@0.5"] {
+            let policy = PolicySpec::parse(spec).unwrap().unwrap().build();
+            let (mut xs, mut kept, mut merged) = live_set(&[[1.0, 2.0], [3.0, 4.0]]);
+            let orig = xs.clone();
+            policy.reduce(&mut xs, &mut kept, &mut merged, 2, 2);
+            policy.reduce(&mut xs, &mut kept, &mut merged, 5, 2);
+            policy.reduce(&mut xs, &mut kept, &mut merged, 0, 2);
+            assert_eq!(xs, orig, "{spec} mutated a no-op call");
+            assert_eq!(kept, vec![0, 1]);
+        }
+    }
+
+    #[test]
+    fn every_policy_hits_target_with_ascending_kept() {
+        let rows: Vec<[f32; 2]> = (0..12)
+            .map(|i| [((i * 7 + 3) % 5) as f32 - 2.0, ((i * 11 + 1) % 7) as f32 - 3.0])
+            .collect();
+        for spec in ["prune@0.5:l1", "merge@0.5", "unified@0.5:clip", "random@0.5"] {
+            let policy = PolicySpec::parse(spec).unwrap().unwrap().build();
+            for target in [4, 6, 9] {
+                let (mut xs, mut kept, mut merged) = live_set(&rows);
+                policy.reduce(&mut xs, &mut kept, &mut merged, target, 2);
+                assert_eq!(kept.len(), target, "{spec} target {target}");
+                assert_eq!(xs.len(), target * 2);
+                assert_eq!(merged.len(), target);
+                for w in kept.windows(2) {
+                    assert!(w[0] < w[1], "{spec}: kept not ascending: {kept:?}");
+                }
+                // Fold weights conserve the original token count for merging
+                // policies; pruning policies drop mass, never invent it.
+                let mass: f32 = merged.iter().sum();
+                assert!(mass <= rows.len() as f32 + 1e-5, "{spec}: mass {mass}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_conserves_token_mass_and_prefers_similar_pairs() {
+        // Rows 0 and 1 are parallel (cos = 1); rows 2 and 3 are orthogonal-ish
+        // to each other. Removing one token must merge row 0 into row 1.
+        let (mut xs, mut kept, mut merged) =
+            live_set(&[[1.0, 0.0], [2.0, 0.0], [0.0, 1.0], [1.0, 0.1]]);
+        Merge.reduce(&mut xs, &mut kept, &mut merged, 3, 2);
+        assert_eq!(kept, vec![1, 2, 3]);
+        let mass: f32 = merged.iter().sum();
+        assert!((mass - 4.0).abs() < 1e-6, "merge must conserve mass, got {mass}");
+        assert_eq!(merged, vec![2.0, 1.0, 1.0]);
+        // Row 1 is now the running mean of rows 0 and 1: (1+2)/2 = 1.5.
+        assert!((xs[0] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prune_ranks_by_the_requested_metric() {
+        // Row 0: large negative mass (l1 loves it, clip ignores it).
+        let rows = [[-5.0, -5.0], [1.0, 1.0], [0.5, 0.0], [0.1, 0.0]];
+        let (mut xs, mut kept, mut merged) = live_set(&rows);
+        Prune { metric: Metric::L1 }.reduce(&mut xs, &mut kept, &mut merged, 2, 2);
+        assert_eq!(kept, vec![0, 1], "l1 keeps the negative-heavy row");
+        let (mut xs, mut kept, mut merged) = live_set(&rows);
+        Prune { metric: Metric::Clip }.reduce(&mut xs, &mut kept, &mut merged, 2, 2);
+        assert_eq!(kept, vec![1, 2], "clip drops the negative-heavy row");
+    }
+
+    #[test]
+    fn random_is_deterministic_across_runs() {
+        let rows: Vec<[f32; 2]> = (0..10).map(|i| [i as f32, -(i as f32)]).collect();
+        let run = || {
+            let (mut xs, mut kept, mut merged) = live_set(&rows);
+            Random { seed: RANDOM_POLICY_SEED }.reduce(&mut xs, &mut kept, &mut merged, 4, 2);
+            (xs, kept)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn importance_matches_the_eq5_formulas() {
+        let xs = [1.0f32, -1.0, 2.0, 0.0];
+        let d = 2;
+        assert_eq!(importance(&xs, d, Metric::Clip), vec![0.5, 1.0]);
+        assert_eq!(importance(&xs, d, Metric::Noclip), vec![0.0, 1.0]);
+        assert_eq!(importance(&xs, d, Metric::L1), vec![1.0, 1.0]);
+        let l2 = importance(&xs, d, Metric::L2);
+        assert!((l2[0] - 1.0).abs() < 1e-6 && (l2[1] - 2.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_match_picks_the_most_similar_row() {
+        // a0 parallel to b1, a1 parallel to b0.
+        let a = [1.0f32, 0.0, 0.0, 1.0];
+        let b = [0.0f32, 2.0, 3.0, 0.0];
+        let (f, g) = cosine_match(&a, &b, 2);
+        assert_eq!(f, vec![1, 0]);
+        assert!(g.iter().all(|&s| (s - 1.0).abs() < 1e-4), "{g:?}");
+    }
+}

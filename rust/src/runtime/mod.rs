@@ -11,7 +11,8 @@
 //!   plan-driven intra-layer token reduction. Hermetic: no `artifacts/`,
 //!   no Python, no XLA. Used by the zero-artifact test suite and
 //!   `repro demo`.
-//! * [`pjrt`] *(cargo feature `pjrt`)* — the AOT path: parse
+//! * `pjrt` *(cargo feature `pjrt`; gated, hence no intra-doc link)* — the
+//!   AOT path: parse
 //!   `artifacts/*.hlo.txt`, compile once via the PJRT CPU client, execute
 //!   many. Weights are uploaded to device once and passed by reference;
 //!   only small activations cross the host boundary per request.
@@ -35,9 +36,10 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::manifest::{HloEntry, Manifest, ModelEntry, Plan};
+use crate::reduction::policy::PolicySpec;
 
 pub use tensor::{HostTensor, TensorData};
 pub use weights::Weights;
@@ -66,6 +68,14 @@ pub struct ProgramSpec {
     pub out_len: usize,
     /// Static token-reduction plan (None for dense programs).
     pub plan: Option<Plan>,
+    /// Which reduction algorithm runs at the plan's boundaries (DESIGN.md
+    /// §10). Resolved from the entry's `reduction` block by
+    /// [`ProgramSpec::from_entry`]; serving lanes override it per variant
+    /// via [`Runtime::load_entry_with_policy`]. `None` for dense programs.
+    /// The pjrt backend ignores it — AOT graphs bake their method into the
+    /// lowered HLO — which is why overrides are guarded by
+    /// [`Backend::interprets_policies`].
+    pub policy: Option<PolicySpec>,
     /// Path to the AOT-lowered HLO text (used by the pjrt backend only).
     pub hlo_path: PathBuf,
     /// Owning model: dims + param layout contract.
@@ -81,6 +91,10 @@ impl ProgramSpec {
             "train" => ProgramKind::Train,
             other => bail!("unknown HLO kind {other:?} for entry {}", entry.tag),
         };
+        let policy = match (&entry.reduction, &entry.plan) {
+            (Some(r), Some(_)) => PolicySpec::from_manifest_reduction(r),
+            _ => None,
+        };
         Ok(ProgramSpec {
             tag: entry.tag.clone(),
             kind,
@@ -88,6 +102,7 @@ impl ProgramSpec {
             seq_len: entry.seq_len,
             out_len: entry.out_len,
             plan: entry.plan.clone(),
+            policy,
             hlo_path: man.path(&entry.file),
             model: model.clone(),
         })
@@ -133,6 +148,15 @@ pub trait Backend: Send + Sync {
     fn platform(&self) -> String;
     fn compile(&self, spec: &ProgramSpec) -> Result<Arc<dyn Executable>>;
     fn upload_weights(&self, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights>;
+
+    /// Whether this backend dispatches [`ProgramSpec::policy`] at run time.
+    /// Interpreters (the reference backend) return true; AOT backends keep
+    /// the default false — their graphs bake the reduction method in, so a
+    /// policy override that disagrees with the export must be rejected
+    /// rather than silently ignored.
+    fn interprets_policies(&self) -> bool {
+        false
+    }
 }
 
 /// Front-end owned by callers: a boxed backend plus a compile cache keyed by
@@ -181,18 +205,60 @@ impl Runtime {
         self.backend.platform()
     }
 
-    /// Compile (cached) the executable for one manifest entry of `model`.
+    /// Compile (cached) the executable for one manifest entry of `model`,
+    /// with the entry's own (manifest-resolved) reduction policy.
     pub fn load_entry(
         &self,
         man: &Manifest,
         model: &ModelEntry,
         entry: &HloEntry,
     ) -> Result<Arc<dyn Executable>> {
-        let key = format!("{}/{}", model.name, entry.tag);
+        self.load_entry_with_policy(man, model, entry, None)
+    }
+
+    /// [`Runtime::load_entry`] with a per-lane reduction-policy override
+    /// (DESIGN.md §10): the entry supplies the compiled geometry and the
+    /// schedule plan, `policy` supplies the algorithm run at the plan's
+    /// boundaries. Cached separately per policy. On backends that execute
+    /// AOT-lowered graphs (no run-time dispatch), an override that disagrees
+    /// with what the entry bakes in is an error, not a silent no-op.
+    pub fn load_entry_with_policy(
+        &self,
+        man: &Manifest,
+        model: &ModelEntry,
+        entry: &HloEntry,
+        policy: Option<&PolicySpec>,
+    ) -> Result<Arc<dyn Executable>> {
+        let key = match policy {
+            Some(p) => format!("{}/{}#{}", model.name, entry.tag, p.to_variant()),
+            None => format!("{}/{}", model.name, entry.tag),
+        };
         if let Some(e) = self.cache.borrow().get(&key) {
             return Ok(Arc::clone(e));
         }
-        let spec = ProgramSpec::from_entry(man, model, entry)?;
+        let mut spec = ProgramSpec::from_entry(man, model, entry)?;
+        if let Some(p) = policy {
+            ensure!(
+                spec.plan.is_some(),
+                "variant {:?} asks for token reduction but entry {} has no schedule plan",
+                p.to_variant(),
+                entry.tag
+            );
+            if !self.backend.interprets_policies()
+                && !spec.policy.as_ref().is_some_and(|d| d.compatible_with(p))
+            {
+                bail!(
+                    "backend {:?} executes AOT-lowered graphs: entry {} bakes in {:?}, so \
+                     policy {:?} needs its own export (run-time policy dispatch is \
+                     reference-backend only)",
+                    self.backend.platform(),
+                    entry.tag,
+                    spec.policy.as_ref().map(|d| d.to_variant()),
+                    p.to_variant()
+                );
+            }
+            spec.policy = Some(p.clone());
+        }
         let t0 = Instant::now();
         let exe = self.backend.compile(&spec)?;
         self.compile_log.borrow_mut().push((key.clone(), t0.elapsed().as_secs_f64()));

@@ -26,11 +26,16 @@
 //!
 //! Eval/prefill programs with a [`Plan`](crate::manifest::Plan) reduce the
 //! live set right after each `locations[i]` layer down to `seg_lens[i+1]`
-//! positions: importance = residual-state energy (the reference analogue of
-//! the paper's clipped-L1 metric), pruned positions are **merged** into the
-//! nearest surviving earlier position by running weighted mean (UTRC's
-//! prune+merge hybrid), and the surviving original positions are reported
-//! through the `kept` output exactly like the AOT-lowered graphs do.
+//! positions by dispatching the program's
+//! [`ReductionPolicy`](crate::reduction::policy::ReductionPolicy) — the
+//! paper's unified method, its prune/merge baselines, or the random control
+//! (DESIGN.md §10). The policy resolves from the manifest entry's reduction
+//! method, or from the serving lane's `<policy>@<ratio>[:<metric>]` variant
+//! via [`Runtime::load_entry_with_policy`](crate::runtime::Runtime::load_entry_with_policy);
+//! entries with a plan but no policy fall back to the legacy unified/`l2`
+//! semantics ([`policy::legacy_default`](crate::reduction::policy::legacy_default)).
+//! Surviving original positions are reported through the `kept` output
+//! exactly like the AOT-lowered graphs do.
 //!
 //! ## Parameter layout
 //!
@@ -46,6 +51,7 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::manifest::{ModelEntry, Plan};
+use crate::reduction::policy::{self, ReductionPolicy};
 use crate::runtime::{
     Backend, DeviceWeights, Executable, HostTensor, ProgramKind, ProgramSpec, Weights,
 };
@@ -93,7 +99,14 @@ impl Backend for ReferenceBackend {
                 plan.locations.len()
             );
         }
-        Ok(Arc::new(ReferenceExecutable { spec: spec.clone() }))
+        // Bind the reduction algorithm once at compile time. A plan without
+        // a policy (hand-built spec) gets the legacy unified/l2 semantics.
+        let policy = match (&spec.plan, &spec.policy) {
+            (Some(_), Some(p)) => Some(p.build()),
+            (Some(_), None) => Some(policy::legacy_default()),
+            _ => None,
+        };
+        Ok(Arc::new(ReferenceExecutable { spec: spec.clone(), policy }))
     }
 
     fn upload_weights(&self, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights> {
@@ -103,10 +116,17 @@ impl Backend for ReferenceBackend {
             .with_context(|| format!("binding reference-layout weights for {}", model.name))?;
         Ok(DeviceWeights::Host(w.clone()))
     }
+
+    fn interprets_policies(&self) -> bool {
+        true // reduction policies are dispatched per plan boundary at run time
+    }
 }
 
 pub struct ReferenceExecutable {
     spec: ProgramSpec,
+    /// Reduction algorithm dispatched at the plan's layer boundaries
+    /// (None for dense programs). See DESIGN.md §10.
+    policy: Option<Box<dyn ReductionPolicy>>,
 }
 
 impl Executable for ReferenceExecutable {
@@ -154,7 +174,8 @@ impl ReferenceExecutable {
         let mut kept_out = vec![0i32; b * out_len];
         let mut xn = vec![0.0f32; m.d];
         for bi in 0..b {
-            let fwd = forward(m, &toks[bi * l..(bi + 1) * l], spec.plan.as_ref())?;
+            let fwd =
+                forward(m, &toks[bi * l..(bi + 1) * l], spec.plan.as_ref(), self.policy.as_deref())?;
             ensure!(
                 fwd.kept.len() == out_len,
                 "{}: reduction left {} surviving positions, spec says {out_len}",
@@ -190,7 +211,8 @@ impl ReferenceExecutable {
         let mut ssm = vec![0.0f32; m.n_layer * b * m.di * m.n];
         let mut xn = vec![0.0f32; m.d];
         for bi in 0..b {
-            let fwd = forward(m, &toks[bi * l..(bi + 1) * l], spec.plan.as_ref())?;
+            let fwd =
+                forward(m, &toks[bi * l..(bi + 1) * l], spec.plan.as_ref(), self.policy.as_deref())?;
             ensure!(!fwd.kept.is_empty(), "prefill reduced the sequence to nothing");
             let last = fwd.kept.len() - 1;
             head_logits(m, &fwd.xs[last * m.d..(last + 1) * m.d], &mut xn, &mut logits[bi * v..(bi + 1) * v]);
@@ -499,9 +521,16 @@ struct ForwardOut {
     states: Vec<(Vec<f32>, Vec<f32>)>,
 }
 
-/// Layer-major forward over one sequence, applying the reduction plan at its
-/// layer boundaries.
-fn forward(m: &RefModel, tokens: &[i32], plan: Option<&Plan>) -> Result<ForwardOut> {
+/// Layer-major forward over one sequence, dispatching `policy` at the plan's
+/// layer boundaries (DESIGN.md §10): after layer `locations[i]`, the live
+/// set shrinks to `seg_lens[i+1]` rows, `kept` tracks surviving original
+/// positions, and `merged` carries per-row fold weights across sites.
+fn forward(
+    m: &RefModel,
+    tokens: &[i32],
+    plan: Option<&Plan>,
+    policy: Option<&dyn ReductionPolicy>,
+) -> Result<ForwardOut> {
     let d = m.d;
     ensure!(!tokens.is_empty(), "empty token sequence");
     let mut xs: Vec<f32> = Vec::with_capacity(tokens.len() * d);
@@ -527,106 +556,21 @@ fn forward(m: &RefModel, tokens: &[i32], plan: Option<&Plan>) -> Result<ForwardO
                     .seg_lens
                     .get(i + 1)
                     .with_context(|| format!("plan seg_lens too short at location {l}"))?;
-                reduce_live_set(&mut xs, &mut kept, &mut merged, target, d);
+                let pol = policy.context("program has a reduction plan but no policy")?;
+                pol.reduce(&mut xs, &mut kept, &mut merged, target, d);
             }
         }
     }
     Ok(ForwardOut { xs, kept, states })
 }
 
-/// Shrink the live set to `target` rows: keep the highest-energy positions
-/// (ties to earlier positions), merge every dropped row into the nearest
-/// surviving row at or before it by running weighted mean.
-fn reduce_live_set(
-    xs: &mut Vec<f32>,
-    kept: &mut Vec<usize>,
-    merged: &mut Vec<f32>,
-    target: usize,
-    d: usize,
-) {
-    let live = kept.len();
-    if target >= live || target == 0 {
-        return;
-    }
-    let scores: Vec<f32> = (0..live)
-        .map(|t| xs[t * d..(t + 1) * d].iter().map(|v| v * v).sum::<f32>())
-        .collect();
-    let mut order: Vec<usize> = (0..live).collect();
-    order.sort_by(|&a, &b| {
-        scores[b]
-            .partial_cmp(&scores[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
-    let mut selected: Vec<usize> = order[..target].to_vec();
-    selected.sort_unstable();
-    let mut dropped: Vec<usize> = order[target..].to_vec();
-    dropped.sort_unstable();
-
-    for t in dropped {
-        let q = match selected.partition_point(|&sel| sel < t).checked_sub(1) {
-            Some(i) => selected[i],
-            None => selected[0],
-        };
-        let (wq, wt) = (merged[q], merged[t]);
-        let tot = wq + wt;
-        let (lo, hi) = (q.min(t), q.max(t));
-        let (s1, s2) = xs.split_at_mut(hi * d);
-        let row_lo = &mut s1[lo * d..(lo + 1) * d];
-        let row_hi = &mut s2[..d];
-        if q < t {
-            for c in 0..d {
-                row_lo[c] = (row_lo[c] * wq + row_hi[c] * wt) / tot;
-            }
-        } else {
-            for c in 0..d {
-                row_hi[c] = (row_hi[c] * wq + row_lo[c] * wt) / tot;
-            }
-        }
-        merged[q] = tot;
-    }
-
-    let mut new_xs = Vec::with_capacity(target * d);
-    let mut new_kept = Vec::with_capacity(target);
-    let mut new_merged = Vec::with_capacity(target);
-    for &t in &selected {
-        new_xs.extend_from_slice(&xs[t * d..(t + 1) * d]);
-        new_kept.push(kept[t]);
-        new_merged.push(merged[t]);
-    }
-    *xs = new_xs;
-    *kept = new_kept;
-    *merged = new_merged;
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn reduce_keeps_order_and_count() {
-        let d = 2;
-        // 5 rows with energies 1, 100, 4, 100, 0 -> top-3 = rows 1, 3, 2
-        let mut xs = vec![1.0, 0.0, 10.0, 0.0, 2.0, 0.0, 10.0, 0.0, 0.0, 0.0];
-        let mut kept = vec![0, 1, 2, 3, 4];
-        let mut merged = vec![1.0; 5];
-        reduce_live_set(&mut xs, &mut kept, &mut merged, 3, d);
-        assert_eq!(kept, vec![1, 2, 3]);
-        assert_eq!(xs.len(), 3 * d);
-        // row 0 merged into row 1 (nearest kept at/before is none -> first),
-        // row 4 merged into row 3
-        assert_eq!(merged, vec![2.0, 1.0, 2.0]);
-    }
-
-    #[test]
-    fn reduce_is_noop_at_or_above_live() {
-        let mut xs = vec![1.0, 2.0, 3.0, 4.0];
-        let mut kept = vec![0, 1];
-        let mut merged = vec![1.0, 1.0];
-        reduce_live_set(&mut xs, &mut kept, &mut merged, 2, 2);
-        assert_eq!(kept, vec![0, 1]);
-        assert_eq!(xs, vec![1.0, 2.0, 3.0, 4.0]);
-    }
+    // The historical reduce_live_set behaviour now lives in
+    // reduction::policy (legacy_default / Unified-l2); its exact-vector pin
+    // is `policy::tests::unified_l2_matches_legacy_reduce_live_set`.
 
     #[test]
     fn activations_behave() {

@@ -1,0 +1,217 @@
+//! End-to-end coverage of the token-reduction policy subsystem (DESIGN.md
+//! §10) on the hermetic fixture — the acceptance suite for the policy
+//! family:
+//!
+//! * `unified@<r>` with its default metric is **bit-identical** to the
+//!   legacy `utrc@<r>` lane, on both the eval executables and the serving
+//!   path (the policy refactor must not move a single bit);
+//! * all four policies (`prune`, `merge`, `unified`, `random`) run end to
+//!   end through the eval harness AND the continuous-batching scheduler at
+//!   two ratios each, honouring the kept-map contract;
+//! * metric-suffixed variants (`unified@r:clip`, `prune@r:l1`, ...) build
+//!   and serve;
+//! * policy dispatch is deterministic: identical inputs → identical outputs
+//!   across engines constructed separately.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use tor_ssm::bench::Ctx;
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::{Request, Response};
+use tor_ssm::fixtures::generate_default;
+use tor_ssm::manifest::Manifest;
+use tor_ssm::reduction::policy::PolicySpec;
+use tor_ssm::runtime::{HostTensor, Runtime, Weights};
+
+fn fixture(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!("tor-ssm-pol-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let man = generate_default(&dir).expect("fixture generation");
+    (dir, man)
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn req(id: u64, plen: usize, gen_tokens: usize, vocab: usize) -> Request {
+    Request {
+        id,
+        prompt: (0..plen).map(|t| ((t * 7 + id as usize) % vocab) as i32).collect(),
+        gen_tokens,
+        variant: String::new(),
+        arrived_us: 0,
+    }
+}
+
+fn by_id(resps: &[Response]) -> BTreeMap<u64, Vec<i32>> {
+    resps.iter().map(|r| (r.id, r.generated.clone())).collect()
+}
+
+/// The four ratio-bearing policies at the two ratios the fixture exports
+/// both eval and prefill plans for.
+const POLICIES: [&str; 4] = ["unified", "prune", "merge", "random"];
+const RATIOS: [f64; 2] = [0.10, 0.20];
+
+#[test]
+fn unified_default_is_bit_identical_to_utrc_eval() {
+    let (dir, man) = fixture("unified-bits");
+    let rt = Runtime::reference().unwrap();
+    for model_name in ["ref-mamba", "ref-mamba2"] {
+        let model = man.model(model_name).unwrap().clone();
+        let w = Weights::load_init(&man, &model).unwrap();
+        let dw = rt.upload_weights(&model, &w).unwrap();
+        for ratio in RATIOS {
+            let entry = model.find_eval("utrc", ratio, None, None, None, None).unwrap().clone();
+            let tokens: Vec<i32> = (0..entry.batch * entry.seq_len)
+                .map(|i| ((i * 13 + 5) % model.vocab_size) as i32)
+                .collect();
+            let tok = HostTensor::i32(vec![entry.batch, entry.seq_len], tokens);
+
+            // Legacy path: the entry's manifest-resolved policy.
+            let legacy = rt.load_entry(&man, &model, &entry).unwrap();
+            let want = legacy.execute(&dw, &[tok.clone()]).unwrap();
+
+            // Policy path: an explicit unified@<r> override (default metric).
+            let spec = PolicySpec::parse(&format!("unified@{ratio}")).unwrap().unwrap();
+            let unified = rt.load_entry_with_policy(&man, &model, &entry, Some(&spec)).unwrap();
+            let got = unified.execute(&dw, &[tok]).unwrap();
+
+            assert_eq!(want.len(), got.len());
+            for (w_t, g_t) in want.iter().zip(&got) {
+                assert_eq!(w_t, g_t, "{model_name}@{ratio}: unified default diverged from utrc");
+            }
+        }
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn unified_engine_matches_utrc_engine_on_the_serve_path() {
+    let (dir, man) = fixture("unified-serve");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    for ratio in RATIOS {
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| req(i, if i % 2 == 0 { plen } else { plen / 4 }, 3 + i as usize, vocab))
+            .collect();
+        let serve = |variant: &str| -> BTreeMap<u64, Vec<i32>> {
+            let engine = Engine::new(&rt, &man, &model, &w, variant).unwrap();
+            by_id(&Scheduler::new(&engine).run(reqs.clone()).unwrap())
+        };
+        assert_eq!(
+            serve(&format!("utrc@{ratio}")),
+            serve(&format!("unified@{ratio}")),
+            "serve outputs diverged at ratio {ratio}"
+        );
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn all_policies_serve_through_continuous_batching_at_two_ratios() {
+    let (dir, man) = fixture("all-serve");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+
+    for policy in POLICIES {
+        for ratio in RATIOS {
+            let variant = format!("{policy}@{ratio}");
+            let engine = Engine::new(&rt, &man, &model, &w, &variant)
+                .unwrap_or_else(|e| panic!("{variant}: engine build failed: {e:#}"));
+            let reqs: Vec<Request> = (0..5)
+                .map(|i| req(i, if i % 2 == 0 { plen } else { plen / 4 }, 1 + i as usize, vocab))
+                .collect();
+            let mut sched = Scheduler::new(&engine);
+            let resps = sched.run(reqs).unwrap_or_else(|e| panic!("{variant}: serve: {e:#}"));
+            assert_eq!(resps.len(), 5, "{variant}: lost responses");
+            for r in &resps {
+                assert_eq!(r.generated.len(), 1 + r.id as usize, "{variant}: truncated gen");
+                assert!(
+                    r.generated.iter().all(|&t| t >= 0 && (t as usize) < vocab),
+                    "{variant}: token outside vocab"
+                );
+                assert_eq!(r.variant, variant);
+            }
+            // Determinism: a second engine + scheduler reproduces the tokens.
+            let engine2 = Engine::new(&rt, &man, &model, &w, &variant).unwrap();
+            let reqs2: Vec<Request> = (0..5)
+                .map(|i| req(i, if i % 2 == 0 { plen } else { plen / 4 }, 1 + i as usize, vocab))
+                .collect();
+            let resps2 = Scheduler::new(&engine2).run(reqs2).unwrap();
+            assert_eq!(by_id(&resps), by_id(&resps2), "{variant}: non-deterministic");
+        }
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn all_policies_eval_end_to_end_at_two_ratios() {
+    let (dir, man) = fixture("all-eval");
+    let items = 2;
+    let mut ctx = Ctx::new(&dir.to_string_lossy(), items, true).unwrap();
+    let model = "ref-mamba";
+    let me = man.model(model).unwrap().clone();
+    let dense = {
+        let e = ctx.find_eval_entry(model, "dense", 0.0, None, None, None, None).unwrap();
+        ctx.eval_variant(model, &e).unwrap()
+    };
+    for policy in POLICIES {
+        for ratio in RATIOS {
+            let variant = format!("{policy}@{ratio}");
+            let spec = PolicySpec::parse(&variant).unwrap().unwrap();
+            let entry =
+                me.eval_entry_for_policy(spec.kind.manifest_method(), spec.ratio).unwrap().clone();
+            let r = ctx
+                .eval_policy_variant(model, &entry, Some(&spec))
+                .unwrap_or_else(|e| panic!("{variant}: eval failed: {e:#}"));
+            assert_eq!(r.variant, spec.to_variant());
+            assert_eq!(r.tasks.len(), dense.tasks.len(), "{variant}: task coverage");
+            assert!(r.sequences > 0);
+            for t in &r.tasks {
+                assert!((0.0..=1.0).contains(&t.acc_truncated), "{variant} {}", t.name);
+                assert!((0.0..=1.0).contains(&t.acc_aligned), "{variant} {}", t.name);
+            }
+            let ppl = r.lambada_ppl(tor_ssm::eval::scoring::Scheme::Truncated);
+            assert!(ppl.is_finite() && ppl > 0.0, "{variant}: ppl = {ppl}");
+        }
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn metric_suffixed_variants_build_and_serve() {
+    let (dir, man) = fixture("metrics");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba2").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    for variant in ["unified@0.2:clip", "unified@0.2:l1", "prune@0.2:noclip", "prune@0.2:l2"] {
+        let engine = Engine::new(&rt, &man, &model, &w, variant)
+            .unwrap_or_else(|e| panic!("{variant}: {e:#}"));
+        let resps =
+            Scheduler::new(&engine).run(vec![req(0, plen, 3, vocab)]).unwrap();
+        assert_eq!(resps.len(), 1);
+        assert_eq!(resps[0].generated.len(), 3, "{variant}");
+    }
+    // Unknown policies and misplaced metrics fail at engine construction
+    // with a parse error (never a manifest-lookup error).
+    for bad in ["bogus@0.2", "merge@0.2:l2", "prune@0.2:l9"] {
+        let err = Engine::new(&rt, &man, &model, &w, bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("unknown") || msg.contains("metric"),
+            "{bad}: expected a grammar error, got {msg}"
+        );
+    }
+    cleanup(&dir);
+}
