@@ -1,83 +1,226 @@
-//! Runtime-layer benchmarks: compile (or interpreter-bind) time, weight
-//! upload, dense vs reduced eval forward, decode step. Runs against real
-//! artifacts when present, else against the synthetic fixture on the
-//! reference backend — `cargo bench` is hermetic either way.
+//! Runtime kernel benchmark — the repo's decode-speed trajectory artifact
+//! (DESIGN.md §11, PERFORMANCE.md).
+//!
+//! Sweeps the 2×2×2 execution matrix the lane-parallel fused decode path
+//! introduces — **kernels** (scalar interpreter vs fused block kernels) ×
+//! **threads** (1 vs min(lanes, cores)) × **variant** (dense vs
+//! `unified@0.2` token reduction) — serving the identical synthetic trace
+//! through the continuous-batching scheduler in every configuration, and
+//! emits `BENCH_runtime.json`: generated tokens/s plus p50/p95
+//! decode-step latency per configuration.
+//!
+//! Because all eight configurations are bit-identical by contract, the
+//! bench also *asserts* that every configuration of a variant generated
+//! exactly the same tokens — a speed measurement that doubles as an
+//! end-to-end determinism check on real serving traffic.
+//!
+//! Hermetic: generates its own synthetic fixture (wider decode frame than
+//! the default test fixture, so lane parallelism has lanes to use).
+//!
+//! Env knobs: `REPRO_BENCH_REQS` (trace requests, default 32),
+//! `REPRO_BENCH_GEN` (max generation length, uniform 1..=N, default 16),
+//! `REPRO_BENCH_LANES` (decode-frame lanes, default 8),
+//! `REPRO_BENCH_THREADS` (the N-thread arm, default min(lanes, cores)),
+//! `REPRO_BENCH_OUT` (output path, default BENCH_runtime.json).
 
-use tor_ssm::bench::harness::Bench;
-use tor_ssm::fixtures;
-use tor_ssm::runtime::{HostTensor, Runtime, Weights};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::metrics::Metrics;
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::Request;
+use tor_ssm::fixtures::{self, FixtureSpec};
+use tor_ssm::runtime::kernels::{self, KernelMode};
+use tor_ssm::runtime::{pool, Runtime};
+use tor_ssm::train::load_best_weights;
+use tor_ssm::util::json::{num, obj, s, Json};
+use tor_ssm::util::rng::Rng;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct ConfigResult {
+    kernels: KernelMode,
+    threads: usize,
+    variant: &'static str,
+    gen_tok_s: f64,
+    total_tok_s: f64,
+    wall_s: f64,
+    decode_steps: u64,
+    p50_step_us: u64,
+    p95_step_us: u64,
+    p50_e2e_us: u64,
+    p95_e2e_us: u64,
+}
 
 fn main() {
-    let artifacts = tor_ssm::artifacts_dir();
-    let (man, synthetic) = match fixtures::manifest_or_fixture(&artifacts) {
-        Ok(v) => v,
+    let n_requests = env_usize("REPRO_BENCH_REQS", 32);
+    let max_gen = env_usize("REPRO_BENCH_GEN", 16).max(1);
+    let lanes = env_usize("REPRO_BENCH_LANES", 8).max(1);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // Clamp to the lane count: decode shards min(lanes, workers) ways, so a
+    // larger setting would mislabel the rows it is recorded in.
+    let n_threads = env_usize("REPRO_BENCH_THREADS", cores.min(lanes)).clamp(1, lanes);
+
+    // A fixture with a wide decode frame: lane parallelism needs lanes.
+    // Regenerated in place — generation is deterministic and fast.
+    let dir = std::env::temp_dir().join(format!("tor-ssm-runtime-bench-l{lanes}"));
+    let spec = FixtureSpec { prefill_batch: lanes, ..FixtureSpec::default() };
+    let man = match fixtures::generate(&dir, &spec) {
+        Ok(m) => m,
         Err(e) => {
             println!("SKIP runtime bench: {e:#}");
             return;
         }
     };
-    let rt = Runtime::cpu().expect("default backend");
-    println!(
-        "runtime bench on {} ({})",
-        rt.platform(),
-        if synthetic { "synthetic fixture" } else { "real artifacts" }
-    );
+    let rt = Runtime::reference().expect("reference backend");
     let model_name = man.models.keys().next().expect("models").clone();
     let model = man.model(&model_name).expect("model").clone();
-    let weights = Weights::load_init(&man, &model).expect("init weights");
+    let (w, _) = load_best_weights(&man, &model).expect("weights");
+    println!(
+        "runtime bench on {model_name}: {n_requests} reqs, gen 1..={max_gen}, \
+         {lanes} decode lanes, N-thread arm = {n_threads} (of {cores} cores)"
+    );
 
-    let dw = match rt.upload_weights(&model, &weights) {
-        Ok(dw) => dw,
-        Err(e) => {
-            println!("SKIP runtime bench (weights/backend mismatch): {e:#}");
-            return;
+    let variants: [&'static str; 2] = ["dense", "unified@0.2"];
+    let modes = [KernelMode::Scalar, KernelMode::Fused];
+    let thread_arms = [1usize, n_threads];
+
+    let mut results: Vec<ConfigResult> = Vec::new();
+    // Per-variant reference outputs: every config must reproduce them.
+    let mut oracle: BTreeMap<&str, BTreeMap<u64, Vec<i32>>> = BTreeMap::new();
+
+    for mode in modes {
+        for &threads in &thread_arms {
+            if threads == 1 && n_threads == 1 && results.iter().any(|r| r.kernels == mode) {
+                continue; // 1-core machine: the arms coincide, skip the dup
+            }
+            for variant in variants {
+                kernels::set_mode(mode);
+                pool::set_workers(threads);
+                let engine =
+                    Engine::new(&rt, &man, &model, &w, variant).expect("engine for bench variant");
+                let mut rng = Rng::new(29);
+                let trace: Vec<Request> = fixtures::synth_requests(
+                    &mut rng,
+                    n_requests,
+                    max_gen,
+                    man.prefill_seq_len,
+                    model.vocab_size,
+                    &[],
+                );
+                let mut sched = Scheduler::new(&engine);
+                let mut m = Metrics::default();
+                let t0 = Instant::now();
+                let resps = sched.run(trace).expect("serve");
+                m.wall = t0.elapsed();
+                assert_eq!(resps.len(), n_requests, "{variant}: lost responses");
+                for r in &resps {
+                    m.record_response(r);
+                }
+
+                // Determinism gate: identical tokens in every configuration.
+                let tokens: BTreeMap<u64, Vec<i32>> =
+                    resps.iter().map(|r| (r.id, r.generated.clone())).collect();
+                match oracle.get(variant) {
+                    None => {
+                        oracle.insert(variant, tokens);
+                    }
+                    Some(want) => assert_eq!(
+                        want,
+                        &tokens,
+                        "{variant}: {}-kernel {threads}-thread run changed generated tokens",
+                        mode.name()
+                    ),
+                }
+
+                let r = ConfigResult {
+                    kernels: mode,
+                    threads,
+                    variant,
+                    gen_tok_s: m.throughput_tok_s(),
+                    total_tok_s: m.total_tok_s(),
+                    wall_s: m.wall.as_secs_f64(),
+                    decode_steps: sched.decode_steps,
+                    p50_step_us: Metrics::pct(&sched.decode_step_us, 0.5),
+                    p95_step_us: Metrics::pct(&sched.decode_step_us, 0.95),
+                    p50_e2e_us: Metrics::pct(&m.e2e_us, 0.5),
+                    p95_e2e_us: Metrics::pct(&m.e2e_us, 0.95),
+                };
+                println!(
+                    "  {:<6} kernels  {} thread(s)  {:<12} {:>8.0} gen tok/s  \
+                     step p50 {:>6}µs p95 {:>6}µs  ({} steps)",
+                    mode.name(),
+                    threads,
+                    variant,
+                    r.gen_tok_s,
+                    r.p50_step_us,
+                    r.p95_step_us,
+                    r.decode_steps
+                );
+                results.push(r);
+            }
         }
-    };
-
-    let mut b = Bench::with_iters("runtime", 2, 10);
-
-    b.bench("upload_weights", || {
-        let dw = rt.upload_weights(&model, &weights).unwrap();
-        drop(dw);
-    });
-    let dense = model.find_eval("dense", 0.0, None, None, None, None).unwrap().clone();
-    let reduced = model.find_eval("utrc", 0.20, None, None, None, None).unwrap().clone();
-
-    let exe_dense = rt.load_entry(&man, &model, &dense).unwrap();
-    let exe_red = rt.load_entry(&man, &model, &reduced).unwrap();
-    let tokens: Vec<i32> = (0..dense.batch * dense.seq_len)
-        .map(|i| (i % model.vocab_size) as i32)
-        .collect();
-    let tok = HostTensor::i32(vec![dense.batch, dense.seq_len], tokens);
-
-    b.bench(&format!("eval_forward_dense_b{}_l{}", dense.batch, dense.seq_len), || {
-        let outs = exe_dense.execute(&dw, std::slice::from_ref(&tok)).unwrap();
-        assert_eq!(outs.len(), 2);
-    });
-
-    b.bench(&format!("eval_forward_utrc20_b{}_l{}", reduced.batch, reduced.seq_len), || {
-        let outs = exe_red.execute(&dw, std::slice::from_ref(&tok)).unwrap();
-        assert_eq!(outs.len(), 2);
-    });
-
-    // Decode step.
-    let dec = model.decode_entry().unwrap().clone();
-    let exe_dec = rt.load_entry(&man, &model, &dec).unwrap();
-    let (conv_shape, ssm_shape) = tor_ssm::runtime::decode_state_shapes(&model, dec.batch);
-    let conv = HostTensor::zeros_f32(conv_shape);
-    let ssm = HostTensor::zeros_f32(ssm_shape);
-    let step_tok = HostTensor::i32(vec![dec.batch], vec![5; dec.batch]);
-    b.bench(&format!("decode_step_b{}", dec.batch), || {
-        let outs = exe_dec
-            .execute(&dw, &[step_tok.clone(), conv.clone(), ssm.clone()])
-            .unwrap();
-        assert_eq!(outs.len(), 3);
-    });
-
-    b.finish();
-    println!("\ncompile log:");
-    for (path, s) in rt.compile_log.borrow().iter() {
-        let short = path.rsplit('/').next().unwrap_or(path);
-        println!("  {short:<50} {s:.2}s");
     }
+
+    // Headline ratios (guarded: on a 1-core box some arms coincide).
+    let find = |k: KernelMode, t: usize, v: &str| {
+        results
+            .iter()
+            .find(|r| r.kernels == k && r.threads == t && r.variant == v)
+            .map(|r| r.gen_tok_s)
+    };
+    let scalar_1 = find(KernelMode::Scalar, 1, "dense");
+    let fused_1 = find(KernelMode::Fused, 1, "dense");
+    let fused_n = find(KernelMode::Fused, n_threads, "dense").or(fused_1);
+    let fused_n_red = find(KernelMode::Fused, n_threads, "unified@0.2")
+        .or_else(|| find(KernelMode::Fused, 1, "unified@0.2"));
+    if let (Some(s1), Some(f1), Some(fnn)) = (scalar_1, fused_1, fused_n) {
+        println!(
+            "headline: fused 1-thread {:.2}x, fused {n_threads}-thread {:.2}x over scalar 1-thread",
+            f1 / s1,
+            fnn / s1
+        );
+    }
+
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("kernels", s(r.kernels.name())),
+                ("threads", num(r.threads as f64)),
+                ("variant", s(r.variant)),
+                ("gen_tok_s", num(r.gen_tok_s)),
+                ("total_tok_s", num(r.total_tok_s)),
+                ("wall_s", num(r.wall_s)),
+                ("decode_steps", num(r.decode_steps as f64)),
+                ("p50_decode_step_us", num(r.p50_step_us as f64)),
+                ("p95_decode_step_us", num(r.p95_step_us as f64)),
+                ("p50_e2e_us", num(r.p50_e2e_us as f64)),
+                ("p95_e2e_us", num(r.p95_e2e_us as f64)),
+            ])
+        })
+        .collect();
+    let ratio = |a: Option<f64>, b: Option<f64>| match (a, b) {
+        (Some(x), Some(y)) if y > 0.0 => num(x / y),
+        _ => Json::Null,
+    };
+    let report = obj(vec![
+        ("bench", s("runtime_kernels")),
+        ("model", s(&model_name)),
+        ("requests", num(n_requests as f64)),
+        ("max_gen_tokens", num(max_gen as f64)),
+        ("decode_lanes", num(lanes as f64)),
+        ("threads_n_arm", num(n_threads as f64)),
+        ("configs", Json::Arr(rows)),
+        ("fused_1t_speedup_dense", ratio(fused_1, scalar_1)),
+        ("fused_nt_speedup_dense", ratio(fused_n, scalar_1)),
+        ("unified02_speedup_over_dense_fused_nt", ratio(fused_n_red, fused_n)),
+    ]);
+    let out =
+        std::env::var("REPRO_BENCH_OUT").unwrap_or_else(|_| "BENCH_runtime.json".to_string());
+    std::fs::write(&out, report.to_string()).expect("writing BENCH_runtime.json");
+    println!("wrote {out}");
 }

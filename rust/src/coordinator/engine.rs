@@ -220,6 +220,16 @@ impl Engine {
     /// states are written back into the frame; the `[decode_batch × vocab]`
     /// logits are returned row-major. On error the frame's original states
     /// are restored, so a long-lived frame stays structurally valid.
+    ///
+    /// On the reference backend this is the lane-parallel fused hot path:
+    /// the frame shards across `min(decode_batch, workers)` threads and
+    /// every lane runs the cache-blocked kernels (DESIGN.md §11,
+    /// PERFORMANCE.md) — bit-identical to the scalar single-thread
+    /// interpreter at any width. The two state buffers move into the call
+    /// and back without copies (tokens are cloned — `decode_batch` i32s,
+    /// and keeping them intact preserves the frame-restore contract on
+    /// error); per step the host traffic is the state round-trip
+    /// DESIGN.md §9 budgets.
     pub fn decode_step(&self, frame: &mut DecodeFrame) -> Result<Vec<f32>> {
         ensure!(
             frame.tokens.len() == self.decode_batch,

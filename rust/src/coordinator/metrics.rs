@@ -49,13 +49,20 @@ impl Metrics {
         (self.prompt_tokens + self.generated_tokens) as f64 / self.wall.as_secs_f64()
     }
 
+    /// Nearest-rank percentile on the **sorted** samples: the smallest
+    /// sample with at least `p` of the distribution at or below it,
+    /// `v_sorted[⌈p·N⌉ − 1]` (rank clamped to `1..=N`). This is the
+    /// percentile definition every `BENCH_*.json` emitter shares
+    /// (PERFORMANCE.md §Schema); it never interpolates and never indexes
+    /// the unsorted buffer.
     pub fn pct(xs: &[u64], p: f64) -> u64 {
         if xs.is_empty() {
             return 0;
         }
         let mut v = xs.to_vec();
         v.sort_unstable();
-        v[((v.len() as f64 - 1.0) * p).round() as usize]
+        let rank = (p * v.len() as f64).ceil() as usize;
+        v[rank.clamp(1, v.len()) - 1]
     }
 
     pub fn summary(&self) -> String {
@@ -80,10 +87,30 @@ mod tests {
     #[test]
     fn percentiles() {
         let xs: Vec<u64> = (1..=100).collect();
-        // nearest-rank on 0-based index: round(99*0.5)=50 -> value 51
-        assert_eq!(Metrics::pct(&xs, 0.5), 51);
+        // nearest-rank: ⌈0.5·100⌉ = 50 → 50th sorted value
+        assert_eq!(Metrics::pct(&xs, 0.5), 50);
         assert_eq!(Metrics::pct(&xs, 0.99), 99);
+        assert_eq!(Metrics::pct(&xs, 1.0), 100);
         assert_eq!(Metrics::pct(&[], 0.5), 0);
+    }
+
+    /// Known 20-sample vector, deliberately unsorted: nearest-rank must
+    /// sort first and take ⌈p·20⌉-th smallest — a truncating index into
+    /// the unsorted buffer would return arbitrary values here.
+    #[test]
+    fn percentiles_nearest_rank_20_samples() {
+        let mut xs: Vec<u64> = (1..=20).map(|i| i * 10).collect(); // 10,20,...,200
+        // shuffle deterministically: reverse + swap pairs
+        xs.reverse();
+        xs.swap(0, 7);
+        xs.swap(3, 15);
+        assert_eq!(Metrics::pct(&xs, 0.05), 10); // ⌈1⌉ → 1st
+        assert_eq!(Metrics::pct(&xs, 0.50), 100); // ⌈10⌉ → 10th
+        assert_eq!(Metrics::pct(&xs, 0.95), 190); // ⌈19⌉ → 19th
+        assert_eq!(Metrics::pct(&xs, 0.99), 200); // ⌈19.8⌉=20 → 20th
+        assert_eq!(Metrics::pct(&xs, 0.0), 10); // rank clamps to 1
+        // p50 of an odd count picks the true median, not a neighbour
+        assert_eq!(Metrics::pct(&[5, 1, 9], 0.5), 5);
     }
 
     #[test]

@@ -63,6 +63,13 @@ pub struct Scheduler<'e> {
     ready: VecDeque<Seq>,
     /// Decode-frame executions — the iteration count minimised vs lock-step.
     pub decode_steps: u64,
+    /// Wall time of each decode-frame execution, in µs, in step order —
+    /// the per-step latency samples `benches/runtime.rs` turns into the
+    /// p50/p95 decode-step numbers of `BENCH_runtime.json`
+    /// (PERFORMANCE.md §Schema). Bounded by [`Self::MAX_STEP_SAMPLES`] so
+    /// a long-lived scheduler stays O(1): the first N steps are sampled,
+    /// then sampling stops (bench traces are far below the cap).
+    pub decode_step_us: Vec<u64>,
     /// Prefill-frame executions.
     pub prefill_calls: u64,
     pub submitted: u64,
@@ -70,6 +77,11 @@ pub struct Scheduler<'e> {
 }
 
 impl<'e> Scheduler<'e> {
+    /// Cap on [`Self::decode_step_us`]: plenty for every bench trace, and
+    /// a hard bound on sample memory for service-style schedulers that
+    /// live for millions of steps.
+    pub const MAX_STEP_SAMPLES: usize = 1 << 16;
+
     /// A scheduler whose store holds one slot per decode lane plus one
     /// prefill batch of ready-ahead sequences.
     pub fn new(engine: &'e Engine) -> Scheduler<'e> {
@@ -88,6 +100,7 @@ impl<'e> Scheduler<'e> {
             queue: VecDeque::new(),
             ready: VecDeque::new(),
             decode_steps: 0,
+            decode_step_us: Vec::new(),
             prefill_calls: 0,
             submitted: 0,
             completed: 0,
@@ -219,6 +232,9 @@ impl<'e> Scheduler<'e> {
             let logits = self.engine.decode_step(&mut self.frame)?;
             let dt = t0.elapsed().as_micros() as u64;
             self.decode_steps += 1;
+            if self.decode_step_us.len() < Self::MAX_STEP_SAMPLES {
+                self.decode_step_us.push(dt);
+            }
             // Write updated states back before any retirement frees a slot.
             self.store.scatter(&slots, &self.frame.conv, &self.frame.ssm);
 

@@ -43,6 +43,16 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::from_env(&["fresh", "aligned", "quiet"]);
     let artifacts = args.get_or("artifacts", &tor_ssm::artifacts_dir());
+    // Execution knobs for the reference backend's hot path (DESIGN.md §11,
+    // PERFORMANCE.md): both are bit-identity-preserving, so they change
+    // speed, never outputs.
+    if let Some(t) = args.get("threads") {
+        let n: usize = t.parse().with_context(|| format!("--threads {t:?} is not a count"))?;
+        tor_ssm::runtime::pool::set_workers(n);
+    }
+    if let Some(k) = args.get("kernels") {
+        tor_ssm::runtime::kernels::set_mode(tor_ssm::runtime::kernels::KernelMode::from_name(k)?);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
 
     match cmd {
@@ -78,7 +88,10 @@ commands:
   serve --requests N [--policy explicit|least-loaded|cost-aware]
         [--lanes dense,unified@0.2,prune@0.2,merge@0.2,random@0.2]
 common: --artifacts DIR (default ./artifacts, or $REPRO_ARTIFACTS)
-        --backend reference|pjrt (default reference; pjrt needs the cargo feature)";
+        --backend reference|pjrt (default reference; pjrt needs the cargo feature)
+        --threads N (decode worker threads; default: all cores, env TOR_SSM_THREADS)
+        --kernels scalar|fused (reference-backend kernels; default fused,
+        env TOR_SSM_KERNELS — both settings change speed, never outputs)";
 
 fn backend_of(args: &Args) -> String {
     args.get_or("backend", "reference")
@@ -376,6 +389,9 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
         bail!("--lanes must name at least one variant (e.g. dense,prune@0.2,merge@0.2)");
     }
     let lanes: Vec<&str> = lanes_owned.iter().map(|s| s.as_str()).collect();
+    if backend_of(args) == "reference" {
+        println!("exec: {}", tor_ssm::runtime::kernels::exec_summary());
+    }
     println!("building engines for {lanes:?}...");
     let engines: Vec<Engine> = lanes
         .iter()

@@ -1,0 +1,811 @@
+//! Fused, cache-blocked decode/forward kernels for the reference backend,
+//! plus the process-wide [`KernelMode`] switch between them and the legacy
+//! scalar interpreter (PERFORMANCE.md; DESIGN.md §11).
+//!
+//! ## Why a second implementation of the same math
+//!
+//! The scalar interpreter in [`reference`](super::reference) walks one token
+//! through one layer at a time, re-streaming every weight matrix from memory
+//! for every token. These kernels restructure the hot path around **token
+//! blocks** (a block of `nt` residual rows moves through each fusion stage
+//! together) so each weight matrix is streamed once per block instead of
+//! once per token, and around **fusion** (RMSNorm folds into the
+//! in-projection read, the SiLU gate folds into the scan emit, the output
+//! projection accumulates straight into the residual rows) so intermediate
+//! buffers stay block-sized and L1-resident.
+//!
+//! ## The determinism contract
+//!
+//! Every kernel here is **bit-identical** to the scalar path, by
+//! construction, not by tolerance (PERFORMANCE.md §Determinism):
+//!
+//! * blocking only re-tiles loops over *independent* outputs (tokens ×
+//!   output channels); for every accumulated scalar, the sequence of f32
+//!   operations — and therefore every intermediate rounding — is exactly
+//!   the scalar path's sequence;
+//! * recurrent state (the conv window, the scan state `h`) is carried
+//!   token-sequentially inside and across blocks, never reassociated;
+//! * lane parallelism ([`pool`](super::pool)) only shards *which thread*
+//!   computes a lane; no arithmetic moves across lanes.
+//!
+//! This is what lets every golden / policy / continuous-batching test double
+//! as a correctness oracle for the fused and multi-threaded paths, and it is
+//! pinned directly by `tests/kernels_identity.rs`.
+//!
+//! All kernels take raw `&[f32]` slices with explicit dims so they are
+//! testable without a bound model; the reference backend wires them to its
+//! weight views. `nt` is always the number of rows (tokens or decode lanes)
+//! in the block.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use anyhow::{bail, Result};
+
+/// Residual rows processed per block by the fused sequence path. Sized so a
+/// block's scratch (`nt·proj_w` floats and friends) stays L1-resident at
+/// every geometry we run; recurrent state carries across blocks, so the
+/// value changes performance, never results.
+pub const TOKEN_BLOCK: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Kernel mode: scalar interpreter vs fused block kernels
+// ---------------------------------------------------------------------------
+
+/// Which implementation of the reference-backend math runs.
+///
+/// Both modes compute bit-identical results (see the module docs); `Scalar`
+/// is kept as the plain-loop oracle the fused path is pinned against, and as
+/// the baseline arm of `benches/runtime.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// The original one-token-at-a-time interpreter loops.
+    Scalar,
+    /// Cache-blocked, fused kernels (this module).
+    Fused,
+}
+
+impl KernelMode {
+    /// Parse a mode name as used by `--kernels` and `TOR_SSM_KERNELS`.
+    ///
+    /// ```
+    /// use tor_ssm::runtime::kernels::KernelMode;
+    /// assert_eq!(KernelMode::from_name("scalar").unwrap(), KernelMode::Scalar);
+    /// assert_eq!(KernelMode::from_name("fused").unwrap(), KernelMode::Fused);
+    /// assert!(KernelMode::from_name("simd").is_err());
+    /// ```
+    pub fn from_name(name: &str) -> Result<KernelMode> {
+        match name {
+            "scalar" => Ok(KernelMode::Scalar),
+            "fused" | "" => Ok(KernelMode::Fused),
+            other => bail!("unknown kernel mode {other:?} (expected scalar|fused)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelMode::Scalar => "scalar",
+            KernelMode::Fused => "fused",
+        }
+    }
+}
+
+/// Process-wide mode. 0 = unset (resolve from env on first read),
+/// 1 = scalar, 2 = fused.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// The active kernel mode. Defaults to [`KernelMode::Fused`]; the first
+/// read honours `TOR_SSM_KERNELS=scalar|fused`, and [`set_mode`] overrides
+/// at any time (benches and the identity tests flip it between runs —
+/// results are bit-identical either way, so a mid-flight flip is benign).
+pub fn mode() -> KernelMode {
+    match MODE.load(Ordering::Relaxed) {
+        1 => KernelMode::Scalar,
+        2 => KernelMode::Fused,
+        _ => {
+            let m = match std::env::var("TOR_SSM_KERNELS") {
+                Ok(v) => KernelMode::from_name(&v).unwrap_or_else(|e| {
+                    // A typo'd env var must not silently measure the wrong
+                    // configuration; warn loudly and use the default.
+                    eprintln!("[warn] ignoring TOR_SSM_KERNELS: {e:#}; using fused");
+                    KernelMode::Fused
+                }),
+                Err(_) => KernelMode::Fused,
+            };
+            set_mode(m);
+            m
+        }
+    }
+}
+
+/// Override the process-wide kernel mode.
+///
+/// ```
+/// use tor_ssm::runtime::kernels::{mode, set_mode, KernelMode};
+/// set_mode(KernelMode::Scalar);
+/// assert_eq!(mode(), KernelMode::Scalar);
+/// set_mode(KernelMode::Fused);
+/// assert_eq!(mode(), KernelMode::Fused);
+/// ```
+pub fn set_mode(m: KernelMode) {
+    let v = match m {
+        KernelMode::Scalar => 1,
+        KernelMode::Fused => 2,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+/// One-line description of the active execution configuration
+/// (`<mode> kernels, <n> decode thread(s)`), for serve/bench banners.
+pub fn exec_summary() -> String {
+    format!("{} kernels, {} decode thread(s)", mode().name(), super::pool::workers())
+}
+
+// ---------------------------------------------------------------------------
+// Activations + norms (shared by the scalar and fused paths)
+// ---------------------------------------------------------------------------
+
+/// Logistic sigmoid.
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// SiLU / swish: `x · sigmoid(x)`.
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// The RMSNorm scale factor `1 / sqrt(mean(x²) + 1e-5)`, with the summation
+/// order every caller shares (ascending index — the rounding sequence is
+/// part of the determinism contract).
+pub fn rms_inv(x: &[f32]) -> f32 {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    1.0 / (ms + 1e-5).sqrt()
+}
+
+/// RMSNorm one row: `out[i] = x[i] · rms_inv(x) · g[i]`.
+///
+/// ```
+/// use tor_ssm::runtime::kernels::rmsnorm;
+/// let mut out = [0.0f32; 3];
+/// rmsnorm(&[3.0, 0.0, -4.0], &[1.0, 1.0, 1.0], &mut out);
+/// let ms: f32 = out.iter().map(|v| v * v).sum::<f32>() / 3.0;
+/// assert!((ms - 1.0).abs() < 1e-3);
+/// ```
+pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let inv = rms_inv(x);
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * g[i];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 1: fused RMSNorm + in-projection
+// ---------------------------------------------------------------------------
+
+/// Fused RMSNorm + in-projection over a block of `nt` residual rows:
+/// `proj[t] = rmsnorm(xs[t]) ⊙ g · w` for each row, with `w` (`d × pw`,
+/// row-major) streamed **once per block** instead of once per row.
+///
+/// `inv` is an `nt`-float scratch. Bit-identity: for each `(t, j)` the
+/// accumulation runs over `c` ascending, and each addend is
+/// `(x·inv)·g · w` — the scalar path's exact expression and order.
+///
+/// ```
+/// use tor_ssm::runtime::kernels::{fused_rmsnorm_inproj, rmsnorm};
+/// let (nt, d, pw) = (2, 3, 2);
+/// let xs = [0.5f32, -1.0, 2.0, 1.5, 0.25, -0.75];
+/// let g = [1.0f32, 0.9, 1.1];
+/// let w = [0.2f32, -0.1, 0.4, 0.3, -0.5, 0.6]; // d × pw
+/// let mut proj = [0.0f32; 4];
+/// let mut inv = [0.0f32; 2];
+/// fused_rmsnorm_inproj(&xs, &g, &w, nt, d, pw, &mut proj, &mut inv);
+/// // equals the unfused reference: rmsnorm per row, then row · w
+/// for t in 0..nt {
+///     let mut xn = [0.0f32; 3];
+///     rmsnorm(&xs[t * d..(t + 1) * d], &g, &mut xn);
+///     for j in 0..pw {
+///         let mut acc = 0.0f32;
+///         for c in 0..d {
+///             acc += xn[c] * w[c * pw + j];
+///         }
+///         assert_eq!(acc, proj[t * pw + j]);
+///     }
+/// }
+/// ```
+pub fn fused_rmsnorm_inproj(
+    xs: &[f32],
+    g: &[f32],
+    w: &[f32],
+    nt: usize,
+    d: usize,
+    pw: usize,
+    proj: &mut [f32],
+    inv: &mut [f32],
+) {
+    debug_assert_eq!(xs.len(), nt * d);
+    debug_assert_eq!(g.len(), d);
+    debug_assert_eq!(w.len(), d * pw);
+    debug_assert_eq!(proj.len(), nt * pw);
+    debug_assert!(inv.len() >= nt);
+    for t in 0..nt {
+        inv[t] = rms_inv(&xs[t * d..(t + 1) * d]);
+    }
+    proj.fill(0.0);
+    for c in 0..d {
+        let row = &w[c * pw..(c + 1) * pw];
+        let gc = g[c];
+        for t in 0..nt {
+            let xc = xs[t * d + c] * inv[t] * gc;
+            let prow = &mut proj[t * pw..(t + 1) * pw];
+            for j in 0..pw {
+                prow[j] += xc * row[j];
+            }
+        }
+    }
+}
+
+/// The in-projection column that feeds conv channel `ch`: `u_pre` occupies
+/// columns `0..di`, `z` occupies `di..2di`, and (mamba2) `b_pre ++ c_pre`
+/// sit at `2di..`. Shared by both conv kernels so the mapping exists once.
+#[inline]
+fn conv_src_col(ch: usize, di: usize) -> usize {
+    if ch < di {
+        ch
+    } else {
+        2 * di + (ch - di)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 2: blocked depthwise causal conv
+// ---------------------------------------------------------------------------
+
+/// Depthwise causal conv over a block of `nt` *sequential* tokens, one
+/// evolving window per channel (prefill/eval). `tail` is the `[ch × k1]`
+/// rolling window carried in from the previous block and written back out,
+/// so block boundaries never change results. Each channel's weights and
+/// window are held in registers for the whole block — the per-token
+/// re-slicing of the scalar path disappears.
+///
+/// `inp` is the block's in-projection output (`nt × pw`); channel `ch`
+/// reads column `ch` (`< di`) or `2·di + (ch − di)` (mamba2 B/C channels).
+/// `out` is `nt × conv_ch`, pre-activation.
+pub fn causal_conv_seq(
+    inp: &[f32],
+    pw: usize,
+    di: usize,
+    conv_w: &[f32],
+    conv_b: &[f32],
+    tail: &mut [f32],
+    out: &mut [f32],
+    nt: usize,
+) {
+    let conv_ch = conv_b.len();
+    let d_conv = conv_w.len() / conv_ch;
+    let k1 = d_conv - 1;
+    assert!(k1 >= 1 && k1 <= 8, "conv window k1={k1} outside the supported 1..=8");
+    debug_assert_eq!(inp.len(), nt * pw);
+    debug_assert_eq!(tail.len(), conv_ch * k1);
+    debug_assert_eq!(out.len(), nt * conv_ch);
+    for ch in 0..conv_ch {
+        let w = &conv_w[ch * d_conv..(ch + 1) * d_conv];
+        let b = conv_b[ch];
+        let src = conv_src_col(ch, di);
+        let t0 = &mut tail[ch * k1..(ch + 1) * k1];
+        let mut win = [0.0f32; 8];
+        win[..k1].copy_from_slice(t0);
+        for t in 0..nt {
+            let cur = inp[t * pw + src];
+            // Scalar order: bias + w[k1]·cur first, then the window taps
+            // ascending — kept verbatim so every rounding matches.
+            let mut acc = b + w[k1] * cur;
+            for j in 0..k1 {
+                acc += w[j] * win[j];
+            }
+            out[t * conv_ch + ch] = acc;
+            for j in 0..k1 - 1 {
+                win[j] = win[j + 1];
+            }
+            win[k1 - 1] = cur;
+        }
+        t0.copy_from_slice(&win[..k1]);
+    }
+}
+
+/// Depthwise causal conv, one step for each of `nt` independent decode
+/// lanes: lane `t` advances its own window `tails[t]` (`[nt × ch × k1]`,
+/// the decode frame's contiguous lane-chunk layout) by one token. No state
+/// crosses lanes — the scalar per-lane update runs verbatim, just batched
+/// so `conv_w`/`conv_b` stream once per chunk.
+pub fn causal_conv_batch(
+    inp: &[f32],
+    pw: usize,
+    di: usize,
+    conv_w: &[f32],
+    conv_b: &[f32],
+    tails: &mut [f32],
+    out: &mut [f32],
+    nt: usize,
+) {
+    let conv_ch = conv_b.len();
+    let d_conv = conv_w.len() / conv_ch;
+    let k1 = d_conv - 1;
+    debug_assert_eq!(inp.len(), nt * pw);
+    debug_assert_eq!(tails.len(), nt * conv_ch * k1);
+    debug_assert_eq!(out.len(), nt * conv_ch);
+    for t in 0..nt {
+        let tail = &mut tails[t * conv_ch * k1..(t + 1) * conv_ch * k1];
+        for ch in 0..conv_ch {
+            let w = &conv_w[ch * d_conv..(ch + 1) * d_conv];
+            let cur = inp[t * pw + conv_src_col(ch, di)];
+            let tl = &mut tail[ch * k1..(ch + 1) * k1];
+            let mut acc = conv_b[ch] + w[k1] * cur;
+            for j in 0..k1 {
+                acc += w[j] * tl[j];
+            }
+            for j in 0..k1 - 1 {
+                tl[j] = tl[j + 1];
+            }
+            tl[k1 - 1] = cur;
+            out[t * conv_ch + ch] = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 3: selectivity parameters
+// ---------------------------------------------------------------------------
+
+/// `u = silu(conv)` over the first `di` channels of each row.
+pub fn silu_channels(conv: &[f32], conv_ch: usize, di: usize, u: &mut [f32], nt: usize) {
+    debug_assert_eq!(conv.len(), nt * conv_ch);
+    debug_assert_eq!(u.len(), nt * di);
+    for t in 0..nt {
+        for i in 0..di {
+            u[t * di + i] = silu(conv[t * conv_ch + i]);
+        }
+    }
+}
+
+/// Mamba2: `B`/`C` are conv output channels `di..di+n` / `di+n..di+2n`.
+pub fn copy_bc_channels(
+    conv: &[f32],
+    conv_ch: usize,
+    di: usize,
+    n: usize,
+    bs: &mut [f32],
+    cs: &mut [f32],
+    nt: usize,
+) {
+    debug_assert_eq!(conv.len(), nt * conv_ch);
+    debug_assert_eq!(bs.len(), nt * n);
+    debug_assert_eq!(cs.len(), nt * n);
+    for t in 0..nt {
+        let row = &conv[t * conv_ch..(t + 1) * conv_ch];
+        bs[t * n..(t + 1) * n].copy_from_slice(&row[di..di + n]);
+        cs[t * n..(t + 1) * n].copy_from_slice(&row[di + n..di + 2 * n]);
+    }
+}
+
+/// Mamba: derive `B, C` from post-conv `u` via `bc` (`di × 2n`, row-major),
+/// streamed once per block. For each `(t, j)` both accumulators run over
+/// `i` ascending with `B` then `C` updated per tap — the scalar order.
+pub fn bc_project(u: &[f32], bc: &[f32], n: usize, bs: &mut [f32], cs: &mut [f32], nt: usize) {
+    let di = u.len() / nt;
+    debug_assert_eq!(bc.len(), di * 2 * n);
+    debug_assert_eq!(bs.len(), nt * n);
+    debug_assert_eq!(cs.len(), nt * n);
+    bs.fill(0.0);
+    cs.fill(0.0);
+    for i in 0..di {
+        let row = &bc[i * 2 * n..(i + 1) * 2 * n];
+        for t in 0..nt {
+            let ui = u[t * di + i];
+            let brow = t * n;
+            for j in 0..n {
+                bs[brow + j] += ui * row[j];
+                cs[brow + j] += ui * row[n + j];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 4: selective scan + SiLU gate (fused emit)
+// ---------------------------------------------------------------------------
+
+/// Selective scan over `nt` *sequential* tokens with the gate fused into
+/// the emit: `h[i][j] ← decay·h + u·B`, `y[t][i] = (Σ_j h·C + D·u) ·
+/// silu(z)`. State rows are walked `i`-major so each `h` row stays hot for
+/// the whole block; per `(i, j)` the token recurrence still runs strictly
+/// ascending (that order IS the scan — it is never reassociated).
+///
+/// `zs` points at the in-projection block (`nt × pw`); the gate column for
+/// channel `i` is `di + i`.
+pub fn scan_gate_seq(
+    u: &[f32],
+    bs: &[f32],
+    cs: &[f32],
+    zs: &[f32],
+    pw: usize,
+    decay: &[f32],
+    d_skip: &[f32],
+    n: usize,
+    h: &mut [f32],
+    y: &mut [f32],
+    nt: usize,
+) {
+    let di = d_skip.len();
+    debug_assert_eq!(u.len(), nt * di);
+    debug_assert_eq!(bs.len(), nt * n);
+    debug_assert_eq!(cs.len(), nt * n);
+    debug_assert_eq!(zs.len(), nt * pw);
+    debug_assert_eq!(decay.len(), di * n);
+    debug_assert_eq!(h.len(), di * n);
+    debug_assert_eq!(y.len(), nt * di);
+    for i in 0..di {
+        let hrow = &mut h[i * n..(i + 1) * n];
+        let drow = &decay[i * n..(i + 1) * n];
+        for t in 0..nt {
+            let ui = u[t * di + i];
+            let brow = &bs[t * n..(t + 1) * n];
+            let crow = &cs[t * n..(t + 1) * n];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                hrow[j] = drow[j] * hrow[j] + ui * brow[j];
+                acc += hrow[j] * crow[j];
+            }
+            let z = zs[t * pw + di + i];
+            y[t * di + i] = (acc + d_skip[i] * ui) * silu(z);
+        }
+    }
+}
+
+/// Selective scan, one step for each of `nt` independent decode lanes:
+/// lane `t` advances its own state `hs[t]` (`[nt × di × n]`, the decode
+/// frame's contiguous lane-chunk layout). Identical per-lane math to
+/// [`scan_gate_seq`] with a one-token block.
+pub fn scan_gate_batch(
+    u: &[f32],
+    bs: &[f32],
+    cs: &[f32],
+    zs: &[f32],
+    pw: usize,
+    decay: &[f32],
+    d_skip: &[f32],
+    n: usize,
+    hs: &mut [f32],
+    y: &mut [f32],
+    nt: usize,
+) {
+    let di = d_skip.len();
+    debug_assert_eq!(hs.len(), nt * di * n);
+    debug_assert_eq!(y.len(), nt * di);
+    for t in 0..nt {
+        let h = &mut hs[t * di * n..(t + 1) * di * n];
+        let ui_base = t * di;
+        let brow = &bs[t * n..(t + 1) * n];
+        let crow = &cs[t * n..(t + 1) * n];
+        for i in 0..di {
+            let ui = u[ui_base + i];
+            let hrow = &mut h[i * n..(i + 1) * n];
+            let drow = &decay[i * n..(i + 1) * n];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                hrow[j] = drow[j] * hrow[j] + ui * brow[j];
+                acc += hrow[j] * crow[j];
+            }
+            let z = zs[t * pw + di + i];
+            y[t * di + i] = (acc + d_skip[i] * ui) * silu(z);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 5: output projection, accumulated into the residual stream
+// ---------------------------------------------------------------------------
+
+/// `xs[t] += y[t] · w` for a block of rows, with `w` (`di × d`, row-major)
+/// streamed once per block. Per `(t, c)` the accumulation runs over `i`
+/// ascending — the scalar path's order.
+pub fn outproj_acc(y: &[f32], w: &[f32], d: usize, xs: &mut [f32], nt: usize) {
+    let di = y.len() / nt;
+    debug_assert_eq!(w.len(), di * d);
+    debug_assert_eq!(xs.len(), nt * d);
+    for i in 0..di {
+        let row = &w[i * d..(i + 1) * d];
+        for t in 0..nt {
+            let yi = y[t * di + i];
+            let xrow = &mut xs[t * d..(t + 1) * d];
+            for c in 0..d {
+                xrow[c] += yi * row[c];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Head: fused final RMSNorm + tied-embedding logits
+// ---------------------------------------------------------------------------
+
+/// Final RMSNorm + tied-embedding head over a block of `nt` residual rows:
+/// normalise every row into the `xn` scratch (`nt × d`), then stream the
+/// embedding matrix **once per block**, emitting `out[t][v] = xn[t] ·
+/// embed[v]`. The scalar path streams all `vocab × d` embedding floats per
+/// row; this is the single largest traffic saving in the eval path.
+pub fn head_norm_logits(
+    xs: &[f32],
+    g: &[f32],
+    embed: &[f32],
+    vocab: usize,
+    out: &mut [f32],
+    xn: &mut [f32],
+    nt: usize,
+) {
+    let d = g.len();
+    debug_assert_eq!(xs.len(), nt * d);
+    debug_assert_eq!(embed.len(), vocab * d);
+    debug_assert_eq!(out.len(), nt * vocab);
+    debug_assert!(xn.len() >= nt * d);
+    for t in 0..nt {
+        let inv = rms_inv(&xs[t * d..(t + 1) * d]);
+        for c in 0..d {
+            xn[t * d + c] = xs[t * d + c] * inv * g[c];
+        }
+    }
+    for v in 0..vocab {
+        let row = &embed[v * d..(v + 1) * d];
+        for t in 0..nt {
+            let xrow = &xn[t * d..(t + 1) * d];
+            let mut acc = 0.0f32;
+            for c in 0..d {
+                acc += xrow[c] * row[c];
+            }
+            out[t * vocab + v] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn mode_roundtrip_and_parse() {
+        for m in [KernelMode::Scalar, KernelMode::Fused] {
+            set_mode(m);
+            assert_eq!(mode(), m);
+            assert_eq!(KernelMode::from_name(m.name()).unwrap(), m);
+        }
+        set_mode(KernelMode::Fused);
+        assert!(KernelMode::from_name("avx").is_err());
+        assert!(exec_summary().contains("fused"));
+    }
+
+    /// The block kernels must equal their naive single-row counterparts
+    /// bit-for-bit, for any block size.
+    #[test]
+    fn fused_inproj_matches_unfused_bitwise() {
+        let (d, pw) = (8, 20);
+        let mut rng = Rng::new(7);
+        let g = randv(&mut rng, d);
+        let w = randv(&mut rng, d * pw);
+        for nt in [1, 2, 5] {
+            let xs = randv(&mut rng, nt * d);
+            let mut proj = vec![0.0f32; nt * pw];
+            let mut inv = vec![0.0f32; nt];
+            fused_rmsnorm_inproj(&xs, &g, &w, nt, d, pw, &mut proj, &mut inv);
+            for t in 0..nt {
+                let mut xn = vec![0.0f32; d];
+                rmsnorm(&xs[t * d..(t + 1) * d], &g, &mut xn);
+                let mut want = vec![0.0f32; pw];
+                for c in 0..d {
+                    let xc = xn[c];
+                    for j in 0..pw {
+                        want[j] += xc * w[c * pw + j];
+                    }
+                }
+                assert_eq!(&proj[t * pw..(t + 1) * pw], &want[..], "row {t} of block {nt}");
+            }
+        }
+    }
+
+    /// Conv over a sequence must not depend on how the tokens are blocked:
+    /// the window carries across block boundaries.
+    #[test]
+    fn conv_seq_block_boundaries_are_invisible() {
+        let (di, n, d_conv) = (4, 2, 4);
+        let conv_ch = di + 2 * n;
+        let pw = 2 * di + 2 * n;
+        let k1 = d_conv - 1;
+        let mut rng = Rng::new(9);
+        let conv_w = randv(&mut rng, conv_ch * d_conv);
+        let conv_b = randv(&mut rng, conv_ch);
+        let total = 7;
+        let inp = randv(&mut rng, total * pw);
+
+        let run = |chunks: &[usize]| {
+            let mut tail = vec![0.0f32; conv_ch * k1];
+            let mut out = vec![0.0f32; total * conv_ch];
+            let mut at = 0usize;
+            for &nt in chunks {
+                causal_conv_seq(
+                    &inp[at * pw..(at + nt) * pw],
+                    pw,
+                    di,
+                    &conv_w,
+                    &conv_b,
+                    &mut tail,
+                    &mut out[at * conv_ch..(at + nt) * conv_ch],
+                    nt,
+                );
+                at += nt;
+            }
+            (out, tail)
+        };
+        let whole = run(&[7]);
+        let split = run(&[2, 3, 2]);
+        let single = run(&[1; 7]);
+        assert_eq!(whole, split);
+        assert_eq!(whole, single);
+    }
+
+    /// Same invariance for the scan: the state recurrence carries across
+    /// blocks, so any blocking gives bit-identical y and final h.
+    #[test]
+    fn scan_seq_block_boundaries_are_invisible() {
+        let (di, n) = (4, 3);
+        let pw = 2 * di;
+        let mut rng = Rng::new(11);
+        let decay: Vec<f32> = randv(&mut rng, di * n).iter().map(|v| sigmoid(*v)).collect();
+        let d_skip = randv(&mut rng, di);
+        let total = 6;
+        let u = randv(&mut rng, total * di);
+        let bs = randv(&mut rng, total * n);
+        let cs = randv(&mut rng, total * n);
+        let zs = randv(&mut rng, total * pw);
+
+        let run = |chunks: &[usize]| {
+            let mut h = vec![0.0f32; di * n];
+            let mut y = vec![0.0f32; total * di];
+            let mut at = 0usize;
+            for &nt in chunks {
+                scan_gate_seq(
+                    &u[at * di..(at + nt) * di],
+                    &bs[at * n..(at + nt) * n],
+                    &cs[at * n..(at + nt) * n],
+                    &zs[at * pw..(at + nt) * pw],
+                    pw,
+                    &decay,
+                    &d_skip,
+                    n,
+                    &mut h,
+                    &mut y[at * di..(at + nt) * di],
+                    nt,
+                );
+                at += nt;
+            }
+            (y, h)
+        };
+        assert_eq!(run(&[6]), run(&[1; 6]));
+        assert_eq!(run(&[6]), run(&[4, 2]));
+    }
+
+    /// The batch kernels are per-lane independent: one 3-lane call equals
+    /// three 1-lane calls on the matching lane slices.
+    #[test]
+    fn batch_kernels_have_no_lane_crosstalk() {
+        let (di, n, d_conv) = (4, 2, 4);
+        let conv_ch = di; // mamba-style
+        let pw = 2 * di;
+        let k1 = d_conv - 1;
+        let nt = 3;
+        let mut rng = Rng::new(13);
+        let conv_w = randv(&mut rng, conv_ch * d_conv);
+        let conv_b = randv(&mut rng, conv_ch);
+        let inp = randv(&mut rng, nt * pw);
+        let tails0 = randv(&mut rng, nt * conv_ch * k1);
+        let decay: Vec<f32> = randv(&mut rng, di * n).iter().map(|v| sigmoid(*v)).collect();
+        let d_skip = randv(&mut rng, di);
+        let u = randv(&mut rng, nt * di);
+        let bs = randv(&mut rng, nt * n);
+        let cs = randv(&mut rng, nt * n);
+        let hs0 = randv(&mut rng, nt * di * n);
+
+        let mut tails = tails0.clone();
+        let mut out = vec![0.0f32; nt * conv_ch];
+        causal_conv_batch(&inp, pw, di, &conv_w, &conv_b, &mut tails, &mut out, nt);
+        let mut hs = hs0.clone();
+        let mut y = vec![0.0f32; nt * di];
+        scan_gate_batch(&u, &bs, &cs, &inp, pw, &decay, &d_skip, n, &mut hs, &mut y, nt);
+
+        for t in 0..nt {
+            let mut tail1 = tails0[t * conv_ch * k1..(t + 1) * conv_ch * k1].to_vec();
+            let mut out1 = vec![0.0f32; conv_ch];
+            causal_conv_batch(
+                &inp[t * pw..(t + 1) * pw],
+                pw,
+                di,
+                &conv_w,
+                &conv_b,
+                &mut tail1,
+                &mut out1,
+                1,
+            );
+            assert_eq!(&out[t * conv_ch..(t + 1) * conv_ch], &out1[..]);
+            assert_eq!(&tails[t * conv_ch * k1..(t + 1) * conv_ch * k1], &tail1[..]);
+
+            let mut h1 = hs0[t * di * n..(t + 1) * di * n].to_vec();
+            let mut y1 = vec![0.0f32; di];
+            scan_gate_batch(
+                &u[t * di..(t + 1) * di],
+                &bs[t * n..(t + 1) * n],
+                &cs[t * n..(t + 1) * n],
+                &inp[t * pw..(t + 1) * pw],
+                pw,
+                &decay,
+                &d_skip,
+                n,
+                &mut h1,
+                &mut y1,
+                1,
+            );
+            assert_eq!(&y[t * di..(t + 1) * di], &y1[..]);
+            assert_eq!(&hs[t * di * n..(t + 1) * di * n], &h1[..]);
+        }
+    }
+
+    #[test]
+    fn head_block_matches_per_row() {
+        let (d, vocab) = (6, 11);
+        let mut rng = Rng::new(17);
+        let g = randv(&mut rng, d);
+        let embed = randv(&mut rng, vocab * d);
+        let nt = 3;
+        let xs = randv(&mut rng, nt * d);
+        let mut out = vec![0.0f32; nt * vocab];
+        let mut xn = vec![0.0f32; nt * d];
+        head_norm_logits(&xs, &g, &embed, vocab, &mut out, &mut xn, nt);
+        for t in 0..nt {
+            let mut xn1 = vec![0.0f32; d];
+            rmsnorm(&xs[t * d..(t + 1) * d], &g, &mut xn1);
+            for v in 0..vocab {
+                let mut acc = 0.0f32;
+                for c in 0..d {
+                    acc += xn1[c] * embed[v * d + c];
+                }
+                assert_eq!(out[t * vocab + v], acc, "row {t} vocab {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn bc_project_matches_scalar_order() {
+        let (di, n, nt) = (5, 3, 2);
+        let mut rng = Rng::new(19);
+        let u = randv(&mut rng, nt * di);
+        let bc = randv(&mut rng, di * 2 * n);
+        let mut bs = vec![0.0f32; nt * n];
+        let mut cs = vec![0.0f32; nt * n];
+        bc_project(&u, &bc, n, &mut bs, &mut cs, nt);
+        for t in 0..nt {
+            let mut b1 = vec![0.0f32; n];
+            let mut c1 = vec![0.0f32; n];
+            for i in 0..di {
+                let ui = u[t * di + i];
+                let row = &bc[i * 2 * n..(i + 1) * 2 * n];
+                for j in 0..n {
+                    b1[j] += ui * row[j];
+                    c1[j] += ui * row[n + j];
+                }
+            }
+            assert_eq!(&bs[t * n..(t + 1) * n], &b1[..]);
+            assert_eq!(&cs[t * n..(t + 1) * n], &c1[..]);
+        }
+    }
+}

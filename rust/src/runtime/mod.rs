@@ -22,7 +22,15 @@
 //! keep per-call host traffic proportional to activations, not parameters.
 //! See DESIGN.md §2 (backend split), §4 (decode-state shape convention),
 //! and §9 (perf) for the full contracts.
+//!
+//! The reference backend's hot path runs through the fused, cache-blocked
+//! kernels of [`kernels`] and shards decode frames across the lane-parallel
+//! worker pool of [`pool`] — both bit-identical to the scalar interpreter
+//! at every thread count (DESIGN.md §11; PERFORMANCE.md has the threading
+//! model and the determinism argument).
 
+pub mod kernels;
+pub mod pool;
 pub mod reference;
 pub mod tensor;
 pub mod weights;

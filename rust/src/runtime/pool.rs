@@ -1,0 +1,217 @@
+//! Lane-parallel worker pool for decode-frame sharding (PERFORMANCE.md;
+//! DESIGN.md §11).
+//!
+//! Continuous batching advances `B` independent sequences per decode step.
+//! Because lanes never exchange state inside a step, the frame shards into
+//! contiguous lane ranges that `min(B, workers)` threads advance
+//! concurrently — each worker owns its lanes' conv/ssm rows through the
+//! no-copy chunk views of [`tensor`](super::tensor), runs the exact
+//! per-lane math, and the step joins before the frame is read again.
+//!
+//! ## Threading model
+//!
+//! * **Scoped, not detached** — workers run under [`std::thread::scope`],
+//!   so they may borrow the frame directly and are joined before
+//!   [`run_sharded`] returns; a worker panic propagates to the caller at
+//!   scope exit. No job ever outlives its decode step.
+//! * **One shard per worker, caller participates** — the caller's thread
+//!   runs the first shard itself, so `workers == 1` spawns nothing and is
+//!   *exactly* the single-threaded path (no pool overhead to subtract when
+//!   comparing 1-thread vs N-thread bench arms).
+//! * **Determinism** — sharding decides *which thread* computes a lane,
+//!   never *what* is computed: results are bit-identical for every worker
+//!   count (pinned by `tests/kernels_identity.rs`).
+//!
+//! The process-wide width comes from [`workers`] (env `TOR_SSM_THREADS`,
+//! else the machine's available parallelism) and is overridable at run time
+//! via [`set_workers`] — the `--threads` CLI flag and the bench matrix use
+//! that hook.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide decode worker count. 0 = unset (resolve on first read).
+static WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// The configured decode worker count (≥ 1). The first read honours
+/// `TOR_SSM_THREADS=n`, falling back to the machine's available
+/// parallelism; [`set_workers`] overrides at any time. A decode step uses
+/// `min(B, workers())` threads — lanes, not cores, bound the useful width.
+pub fn workers() -> usize {
+    let w = WORKERS.load(Ordering::Relaxed);
+    if w != 0 {
+        return w;
+    }
+    let default = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let resolved = match std::env::var("TOR_SSM_THREADS") {
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            // A typo'd env var must not silently measure the wrong width.
+            _ => {
+                eprintln!("[warn] ignoring TOR_SSM_THREADS={v:?} (want a count >= 1)");
+                default()
+            }
+        },
+        Err(_) => default(),
+    };
+    WORKERS.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Override the process-wide decode worker count (clamped to ≥ 1).
+///
+/// ```
+/// use tor_ssm::runtime::pool::{set_workers, workers};
+/// set_workers(3);
+/// assert_eq!(workers(), 3);
+/// set_workers(0); // clamps
+/// assert_eq!(workers(), 1);
+/// ```
+pub fn set_workers(n: usize) {
+    WORKERS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Split `0..n` into `parts` contiguous, balanced ranges (the first
+/// `n % parts` ranges take one extra item). `parts` is clamped to
+/// `1..=max(n, 1)`, so every returned range is non-empty when `n > 0`.
+///
+/// ```
+/// use tor_ssm::runtime::pool::partition;
+/// assert_eq!(partition(7, 3), vec![0..3, 3..5, 5..7]);
+/// assert_eq!(partition(2, 8), vec![0..1, 1..2]); // never more parts than items
+/// assert_eq!(partition(4, 1), vec![0..4]);
+/// ```
+pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run one task per shard: task 0 on the calling thread, the rest on
+/// scoped worker threads that are joined before this returns. Tasks carry
+/// their own (disjoint) mutable views, so `f` only needs `Sync`; a single
+/// task runs inline with zero threading machinery.
+///
+/// ```
+/// use tor_ssm::runtime::pool::{partition, run_sharded};
+/// let mut data = vec![0u64; 10];
+/// let bounds = partition(data.len(), 4);
+/// // hand each shard its own disjoint sub-slice
+/// let mut shards: Vec<(usize, &mut [u64])> = Vec::new();
+/// let mut rest = data.as_mut_slice();
+/// for r in &bounds {
+///     let (head, tail) = rest.split_at_mut(r.len());
+///     shards.push((r.start, head));
+///     rest = tail;
+/// }
+/// run_sharded(shards, |(start, shard)| {
+///     for (i, v) in shard.iter_mut().enumerate() {
+///         *v = (start + i) as u64 * 2;
+///     }
+/// });
+/// assert_eq!(data, (0..10).map(|i| i * 2).collect::<Vec<u64>>());
+/// ```
+pub fn run_sharded<T, F>(mut tasks: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    if tasks.len() <= 1 {
+        if let Some(t) = tasks.pop() {
+            f(t);
+        }
+        return;
+    }
+    let rest = tasks.split_off(1);
+    let first = tasks.pop().expect("first shard");
+    std::thread::scope(|scope| {
+        let f = &f;
+        for t in rest {
+            scope.spawn(move || f(t));
+        }
+        f(first);
+        // scope exit joins every worker; a worker panic re-raises here.
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn partition_covers_exactly_without_overlap() {
+        for n in [0usize, 1, 2, 5, 16, 17] {
+            for parts in [1usize, 2, 3, 8, 32] {
+                let ranges = partition(n, parts);
+                assert!(!ranges.is_empty());
+                assert_eq!(ranges[0].start, 0);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start, "gap/overlap at n={n} parts={parts}");
+                }
+                assert_eq!(ranges.last().unwrap().end, n);
+                assert!(ranges.len() <= parts.max(1));
+                if n > 0 {
+                    assert!(ranges.iter().all(|r| !r.is_empty()));
+                    // balanced: lengths differ by at most one
+                    let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                    let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                    assert!(mx - mn <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_sharded_executes_every_task_once() {
+        let hits = AtomicU64::new(0);
+        for n_tasks in [0usize, 1, 2, 7] {
+            hits.store(0, Ordering::SeqCst);
+            let tasks: Vec<usize> = (0..n_tasks).collect();
+            run_sharded(tasks, |i| {
+                hits.fetch_add(1 << (i * 8), Ordering::SeqCst);
+            });
+            let want = (0..n_tasks).fold(0u64, |a, i| a + (1 << (i * 8)));
+            assert_eq!(hits.load(Ordering::SeqCst), want, "n_tasks={n_tasks}");
+        }
+    }
+
+    #[test]
+    fn run_sharded_disjoint_writes_land() {
+        let mut data = vec![0u32; 101];
+        let bounds = partition(data.len(), 4);
+        let mut shards: Vec<(usize, &mut [u32])> = Vec::new();
+        let mut rest = data.as_mut_slice();
+        for r in &bounds {
+            let (head, tail) = rest.split_at_mut(r.len());
+            shards.push((r.start, head));
+            rest = tail;
+        }
+        run_sharded(shards, |(start, shard)| {
+            for (i, v) in shard.iter_mut().enumerate() {
+                *v = (start + i) as u32 + 1;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn workers_is_overridable_and_clamped() {
+        set_workers(5);
+        assert_eq!(workers(), 5);
+        set_workers(0);
+        assert_eq!(workers(), 1);
+        set_workers(2);
+        assert_eq!(workers(), 2);
+    }
+}

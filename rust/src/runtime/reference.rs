@@ -22,6 +22,28 @@
 //!
 //! Logits use a final RMSNorm and the tied embedding head.
 //!
+//! ## Execution paths
+//!
+//! The same math runs in two interchangeable forms, selected by
+//! [`kernels::mode`] (DESIGN.md §11, PERFORMANCE.md):
+//!
+//! * **scalar** — the plain one-token-at-a-time loops below
+//!   (`layer_step`/`head_logits`): the oracle the fused path is pinned
+//!   against, and the baseline arm of `benches/runtime.rs`;
+//! * **fused** *(default)* — the cache-blocked kernels of
+//!   [`kernels`](super::kernels): token blocks move through fused stages so
+//!   every weight matrix streams once per block instead of once per token.
+//!
+//! Decode frames additionally shard across the lane-parallel worker pool
+//! ([`pool`](super::pool)): `B` resident sequences advance on
+//! `min(B, workers)` threads through the no-copy lane-chunk views of
+//! [`tensor`](super::tensor); eval/prefill batches parallelise per
+//! sequence. Both axes are **bit-identical** to the single-threaded scalar
+//! interpreter — blocking never reassociates an accumulation and threading
+//! never moves arithmetic across lanes — so every golden/policy/continuous
+//! test doubles as a correctness oracle (`tests/kernels_identity.rs` pins
+//! it explicitly).
+//!
 //! ## Token reduction
 //!
 //! Eval/prefill programs with a [`Plan`](crate::manifest::Plan) reduce the
@@ -55,6 +77,10 @@ use crate::reduction::policy::{self, ReductionPolicy};
 use crate::runtime::{
     Backend, DeviceWeights, Executable, HostTensor, ProgramKind, ProgramSpec, Weights,
 };
+
+use super::kernels::{self, rmsnorm, sigmoid, silu, KernelMode};
+use super::pool;
+use super::tensor::{lane_chunks_mut, LaneChunkMut};
 
 /// Conv window width; matches the d_conv=4 convention used across the repo.
 pub const D_CONV: usize = 4;
@@ -170,10 +196,10 @@ impl ReferenceExecutable {
             "tokens shape {:?} != [{b}, {l}]",
             inputs[0].shape
         );
-        let mut logits = vec![0.0f32; b * out_len * v];
-        let mut kept_out = vec![0i32; b * out_len];
-        let mut xn = vec![0.0f32; m.d];
-        for bi in 0..b {
+        let mode = kernels::mode();
+        // Sequences are independent: fan the batch out across the worker
+        // pool (ordered collection keeps output identity at any width).
+        let seqs = crate::util::pool::par_map(b, pool::workers().min(b.max(1)), |bi| {
             let fwd =
                 forward(m, &toks[bi * l..(bi + 1) * l], spec.plan.as_ref(), self.policy.as_deref())?;
             ensure!(
@@ -182,11 +208,18 @@ impl ReferenceExecutable {
                 spec.tag,
                 fwd.kept.len()
             );
-            for (t, &pos) in fwd.kept.iter().enumerate() {
+            let mut logits = vec![0.0f32; out_len * v];
+            head_rows(m, mode, &fwd.xs[..out_len * m.d], &mut logits);
+            Ok((fwd.kept, logits))
+        });
+        let mut logits = vec![0.0f32; b * out_len * v];
+        let mut kept_out = vec![0i32; b * out_len];
+        for (bi, seq) in seqs.into_iter().enumerate() {
+            let (kept, lg) = seq?;
+            for (t, &pos) in kept.iter().enumerate() {
                 kept_out[bi * out_len + t] = pos as i32;
-                let row = (bi * out_len + t) * v;
-                head_logits(m, &fwd.xs[t * m.d..(t + 1) * m.d], &mut xn, &mut logits[row..row + v]);
             }
+            logits[bi * out_len * v..(bi + 1) * out_len * v].copy_from_slice(&lg);
         }
         Ok(vec![
             HostTensor::f32(vec![b, out_len, v], logits),
@@ -206,17 +239,23 @@ impl ReferenceExecutable {
         );
         let (conv_shape, ssm_shape) = crate::runtime::decode_state_shapes(&self.spec.model, b);
         let k1 = D_CONV - 1;
-        let mut logits = vec![0.0f32; b * v];
-        let mut conv = vec![0.0f32; m.n_layer * b * m.conv_ch * k1];
-        let mut ssm = vec![0.0f32; m.n_layer * b * m.di * m.n];
-        let mut xn = vec![0.0f32; m.d];
-        for bi in 0..b {
+        let mode = kernels::mode();
+        let seqs = crate::util::pool::par_map(b, pool::workers().min(b.max(1)), |bi| {
             let fwd =
                 forward(m, &toks[bi * l..(bi + 1) * l], spec.plan.as_ref(), self.policy.as_deref())?;
             ensure!(!fwd.kept.is_empty(), "prefill reduced the sequence to nothing");
             let last = fwd.kept.len() - 1;
-            head_logits(m, &fwd.xs[last * m.d..(last + 1) * m.d], &mut xn, &mut logits[bi * v..(bi + 1) * v]);
-            for (li, (tail, h)) in fwd.states.iter().enumerate() {
+            let mut logits = vec![0.0f32; v];
+            head_rows(m, mode, &fwd.xs[last * m.d..(last + 1) * m.d], &mut logits);
+            Ok((fwd.states, logits))
+        });
+        let mut logits = vec![0.0f32; b * v];
+        let mut conv = vec![0.0f32; m.n_layer * b * m.conv_ch * k1];
+        let mut ssm = vec![0.0f32; m.n_layer * b * m.di * m.n];
+        for (bi, seq) in seqs.into_iter().enumerate() {
+            let (states, lg) = seq?;
+            logits[bi * v..(bi + 1) * v].copy_from_slice(&lg);
+            for (li, (tail, h)) in states.iter().enumerate() {
                 let cstart = (li * b + bi) * m.conv_ch * k1;
                 conv[cstart..cstart + m.conv_ch * k1].copy_from_slice(tail);
                 let sstart = (li * b + bi) * m.di * m.n;
@@ -254,25 +293,45 @@ impl ReferenceExecutable {
             inputs[2].shape,
             ssm_shape
         );
+        // Validate every lane before any state mutates, so a bad token
+        // cannot leave a half-advanced frame behind.
+        for &t in tokens {
+            ensure!(t >= 0 && (t as usize) < v, "decode token {t} outside vocab {v}");
+        }
         let mut conv = inputs[1].as_f32()?.to_vec();
         let mut ssm = inputs[2].as_f32()?.to_vec();
         let k1 = D_CONV - 1;
+        let conv_row = m.conv_ch * k1;
+        let ssm_row = m.di * m.n;
         let mut logits = vec![0.0f32; b * v];
-        let mut xn = vec![0.0f32; m.d];
-        let mut scratch = Scratch::new(m);
-        for bi in 0..b {
-            let t = tokens[bi];
-            ensure!(t >= 0 && (t as usize) < v, "decode token {t} outside vocab {v}");
-            let mut x: Vec<f32> = m.embed[t as usize * m.d..(t as usize + 1) * m.d].to_vec();
-            for li in 0..m.n_layer {
-                let cstart = (li * b + bi) * m.conv_ch * k1;
-                let sstart = (li * b + bi) * m.di * m.n;
-                let tail = &mut conv[cstart..cstart + m.conv_ch * k1];
-                let h = &mut ssm[sstart..sstart + m.di * m.n];
-                layer_step(m, li, &mut x, tail, h, &mut scratch);
-            }
-            head_logits(m, &x, &mut xn, &mut logits[bi * v..(bi + 1) * v]);
+
+        // Shard the frame's lanes across the worker pool: each worker owns
+        // a contiguous lane range of every layer (no-copy chunk views) and
+        // advances its lanes with per-lane math only — bit-identical at
+        // every worker count (PERFORMANCE.md).
+        let mode = kernels::mode();
+        let bounds = pool::partition(b, pool::workers().min(b.max(1)));
+        let conv_chunks = lane_chunks_mut(&mut conv, m.n_layer, b, conv_row, &bounds);
+        let ssm_chunks = lane_chunks_mut(&mut ssm, m.n_layer, b, ssm_row, &bounds);
+        let mut logit_chunks = Vec::with_capacity(bounds.len());
+        let mut rest = logits.as_mut_slice();
+        for r in &bounds {
+            let (head, tail) = rest.split_at_mut(r.len() * v);
+            logit_chunks.push(head);
+            rest = tail;
         }
+        let tasks: Vec<_> = bounds
+            .iter()
+            .cloned()
+            .zip(conv_chunks)
+            .zip(ssm_chunks)
+            .zip(logit_chunks)
+            .map(|(((lanes, cv), sv), lg)| (lanes, cv, sv, lg))
+            .collect();
+        pool::run_sharded(tasks, |(lanes, mut cv, mut sv, lg)| {
+            decode_lanes(m, mode, &tokens[lanes], &mut cv, &mut sv, lg);
+        });
+
         Ok(vec![
             HostTensor::f32(vec![b, v], logits),
             HostTensor::f32(conv_shape, conv),
@@ -374,6 +433,7 @@ impl<'a> RefModel<'a> {
     }
 }
 
+/// Single-token scratch for the scalar path.
 struct Scratch {
     xn: Vec<f32>,
     proj: Vec<f32>,
@@ -398,24 +458,37 @@ impl Scratch {
     }
 }
 
-fn sigmoid(x: f32) -> f32 {
-    1.0 / (1.0 + (-x).exp())
+/// Block scratch for the fused path: one buffer per fusion stage, sized
+/// for `nt` rows (tokens of a sequence block, or lanes of a decode chunk).
+struct BlockScratch {
+    inv: Vec<f32>,
+    proj: Vec<f32>,
+    conv: Vec<f32>,
+    u: Vec<f32>,
+    b: Vec<f32>,
+    c: Vec<f32>,
+    y: Vec<f32>,
+    nt: usize,
 }
 
-fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
-
-fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
-    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
-    let inv = 1.0 / (ms + 1e-5).sqrt();
-    for i in 0..x.len() {
-        out[i] = x[i] * inv * g[i];
+impl BlockScratch {
+    fn new(m: &RefModel, nt: usize) -> BlockScratch {
+        BlockScratch {
+            inv: vec![0.0; nt],
+            proj: vec![0.0; nt * m.proj_w],
+            conv: vec![0.0; nt * m.conv_ch],
+            u: vec![0.0; nt * m.di],
+            b: vec![0.0; nt * m.n],
+            c: vec![0.0; nt * m.n],
+            y: vec![0.0; nt * m.di],
+            nt,
+        }
     }
 }
 
 /// One token through one layer, updating the residual `x`, the conv tail,
-/// and the scan state in place.
+/// and the scan state in place — the scalar oracle the fused kernels are
+/// pinned against bit-for-bit.
 fn layer_step(m: &RefModel, l: usize, x: &mut [f32], tail: &mut [f32], h: &mut [f32], s: &mut Scratch) {
     let (d, di, n) = (m.d, m.di, m.n);
     let layer = &m.layers[l];
@@ -499,7 +572,158 @@ fn layer_step(m: &RefModel, l: usize, x: &mut [f32], tail: &mut [f32], h: &mut [
     }
 }
 
-/// Final RMSNorm + tied embedding head for one residual row.
+/// How a fused block's `nt` rows relate to the layer state:
+/// `Seq` — sequential tokens of one sequence; the conv window (`conv_ch ×
+/// k1`) and scan state (`di × n`) evolve across rows and carry in/out;
+/// `Batch` — independent decode lanes; each row owns its own window/state
+/// row inside contiguous `nt ×`-sized chunk slices.
+#[derive(Clone, Copy)]
+enum BlockKind {
+    Seq,
+    Batch,
+}
+
+/// A block of `nt` rows through one layer via the fused kernels — the one
+/// 6-stage pipeline both the sequence (prefill/eval) and the decode-chunk
+/// paths share; only the conv and scan kernels dispatch on `kind`, so the
+/// seq-vs-batch bit-identity contract has a single pipeline to drift from.
+fn layer_block(
+    m: &RefModel,
+    l: usize,
+    kind: BlockKind,
+    xs: &mut [f32],
+    conv_state: &mut [f32],
+    ssm_state: &mut [f32],
+    s: &mut BlockScratch,
+    nt: usize,
+) {
+    debug_assert!(nt <= s.nt);
+    let layer = &m.layers[l];
+    let (pw, di, n) = (m.proj_w, m.di, m.n);
+    let proj = &mut s.proj[..nt * pw];
+    kernels::fused_rmsnorm_inproj(xs, layer.norm, layer.in_proj, nt, m.d, pw, proj, &mut s.inv);
+    let conv = &mut s.conv[..nt * m.conv_ch];
+    match kind {
+        BlockKind::Seq => {
+            kernels::causal_conv_seq(proj, pw, di, layer.conv_w, layer.conv_b, conv_state, conv, nt)
+        }
+        BlockKind::Batch => kernels::causal_conv_batch(
+            proj,
+            pw,
+            di,
+            layer.conv_w,
+            layer.conv_b,
+            conv_state,
+            conv,
+            nt,
+        ),
+    }
+    let u = &mut s.u[..nt * di];
+    kernels::silu_channels(conv, m.conv_ch, di, u, nt);
+    let (bs, cs) = (&mut s.b[..nt * n], &mut s.c[..nt * n]);
+    if m.mamba2 {
+        kernels::copy_bc_channels(conv, m.conv_ch, di, n, bs, cs, nt);
+    } else {
+        let bc = layer.bc_proj.expect("mamba layer carries bc_proj");
+        kernels::bc_project(u, bc, n, bs, cs, nt);
+    }
+    let y = &mut s.y[..nt * di];
+    match kind {
+        BlockKind::Seq => kernels::scan_gate_seq(
+            u,
+            bs,
+            cs,
+            proj,
+            pw,
+            &layer.decay,
+            layer.d_skip,
+            n,
+            ssm_state,
+            y,
+            nt,
+        ),
+        BlockKind::Batch => kernels::scan_gate_batch(
+            u,
+            bs,
+            cs,
+            proj,
+            pw,
+            &layer.decay,
+            layer.d_skip,
+            n,
+            ssm_state,
+            y,
+            nt,
+        ),
+    }
+    kernels::outproj_acc(y, layer.out_proj, m.d, xs, nt);
+}
+
+/// Advance `nt` decode lanes one token each. Every lane's per-layer conv
+/// window and scan state live in the chunk views; logits land in `lg`
+/// (`nt × vocab`). Tokens are pre-validated by the caller.
+fn decode_lanes(
+    m: &RefModel,
+    mode: KernelMode,
+    toks: &[i32],
+    conv: &mut LaneChunkMut,
+    ssm: &mut LaneChunkMut,
+    lg: &mut [f32],
+) {
+    let nt = toks.len();
+    if nt == 0 {
+        return;
+    }
+    let (d, v) = (m.d, m.vocab);
+    let k1 = D_CONV - 1;
+    let conv_row = m.conv_ch * k1;
+    let ssm_row = m.di * m.n;
+    match mode {
+        KernelMode::Scalar => {
+            let mut scratch = Scratch::new(m);
+            let mut xn = vec![0.0f32; d];
+            for (t, &tok) in toks.iter().enumerate() {
+                let mut x: Vec<f32> = m.embed[tok as usize * d..(tok as usize + 1) * d].to_vec();
+                for li in 0..m.n_layer {
+                    let tails = conv.layer_mut(li);
+                    let hs = ssm.layer_mut(li);
+                    layer_step(
+                        m,
+                        li,
+                        &mut x,
+                        &mut tails[t * conv_row..(t + 1) * conv_row],
+                        &mut hs[t * ssm_row..(t + 1) * ssm_row],
+                        &mut scratch,
+                    );
+                }
+                head_logits(m, &x, &mut xn, &mut lg[t * v..(t + 1) * v]);
+            }
+        }
+        KernelMode::Fused => {
+            let mut s = BlockScratch::new(m, nt);
+            let mut xs = vec![0.0f32; nt * d];
+            for (t, &tok) in toks.iter().enumerate() {
+                xs[t * d..(t + 1) * d]
+                    .copy_from_slice(&m.embed[tok as usize * d..(tok as usize + 1) * d]);
+            }
+            for li in 0..m.n_layer {
+                layer_block(
+                    m,
+                    li,
+                    BlockKind::Batch,
+                    &mut xs,
+                    conv.layer_mut(li),
+                    ssm.layer_mut(li),
+                    &mut s,
+                    nt,
+                );
+            }
+            head_rows(m, mode, &xs, lg);
+        }
+    }
+}
+
+/// Final RMSNorm + tied embedding head for one residual row (scalar path).
 fn head_logits(m: &RefModel, x: &[f32], xn: &mut [f32], out: &mut [f32]) {
     rmsnorm(x, m.norm_f, xn);
     for v in 0..m.vocab {
@@ -512,6 +736,44 @@ fn head_logits(m: &RefModel, x: &[f32], xn: &mut [f32], out: &mut [f32]) {
     }
 }
 
+/// Head logits for `xs.len()/d` contiguous residual rows, honouring the
+/// kernel mode: scalar streams the embedding per row, fused streams it once
+/// per [`kernels::TOKEN_BLOCK`] rows. Bit-identical either way.
+fn head_rows(m: &RefModel, mode: KernelMode, xs: &[f32], out: &mut [f32]) {
+    let nt = xs.len() / m.d;
+    match mode {
+        KernelMode::Scalar => {
+            let mut xn = vec![0.0f32; m.d];
+            for t in 0..nt {
+                head_logits(
+                    m,
+                    &xs[t * m.d..(t + 1) * m.d],
+                    &mut xn,
+                    &mut out[t * m.vocab..(t + 1) * m.vocab],
+                );
+            }
+        }
+        KernelMode::Fused => {
+            let cap = nt.min(kernels::TOKEN_BLOCK).max(1);
+            let mut xn = vec![0.0f32; cap * m.d];
+            let mut at = 0usize;
+            while at < nt {
+                let bs = (nt - at).min(kernels::TOKEN_BLOCK);
+                kernels::head_norm_logits(
+                    &xs[at * m.d..(at + bs) * m.d],
+                    m.norm_f,
+                    m.embed,
+                    m.vocab,
+                    &mut out[at * m.vocab..(at + bs) * m.vocab],
+                    &mut xn,
+                    bs,
+                );
+                at += bs;
+            }
+        }
+    }
+}
+
 struct ForwardOut {
     /// Final residual stream: `kept.len() × d`, row-major.
     xs: Vec<f32>,
@@ -521,10 +783,20 @@ struct ForwardOut {
     states: Vec<(Vec<f32>, Vec<f32>)>,
 }
 
+/// Per-mode forward scratch: exactly one of the two is allocated.
+enum FwdScratch {
+    Scalar(Scratch),
+    Fused(BlockScratch),
+}
+
 /// Layer-major forward over one sequence, dispatching `policy` at the plan's
 /// layer boundaries (DESIGN.md §10): after layer `locations[i]`, the live
 /// set shrinks to `seg_lens[i+1]` rows, `kept` tracks surviving original
 /// positions, and `merged` carries per-row fold weights across sites.
+///
+/// In fused mode each layer walks the live set in [`kernels::TOKEN_BLOCK`]
+/// chunks through the staged kernels; the conv window and scan state carry
+/// across chunks, so blocking is invisible in the results.
 fn forward(
     m: &RefModel,
     tokens: &[i32],
@@ -541,13 +813,32 @@ fn forward(
     let mut kept: Vec<usize> = (0..tokens.len()).collect();
     let mut merged: Vec<f32> = vec![1.0; tokens.len()];
     let mut states = Vec::with_capacity(m.n_layer);
-    let mut scratch = Scratch::new(m);
+    let mut scratch = match kernels::mode() {
+        KernelMode::Scalar => FwdScratch::Scalar(Scratch::new(m)),
+        KernelMode::Fused => {
+            FwdScratch::Fused(BlockScratch::new(m, kernels::TOKEN_BLOCK.min(tokens.len())))
+        }
+    };
     let k1 = D_CONV - 1;
     for l in 0..m.n_layer {
         let mut tail = vec![0.0f32; m.conv_ch * k1];
         let mut h = vec![0.0f32; m.di * m.n];
-        for t in 0..kept.len() {
-            layer_step(m, l, &mut xs[t * d..(t + 1) * d], &mut tail, &mut h, &mut scratch);
+        let live = kept.len();
+        match &mut scratch {
+            FwdScratch::Scalar(s) => {
+                for t in 0..live {
+                    layer_step(m, l, &mut xs[t * d..(t + 1) * d], &mut tail, &mut h, s);
+                }
+            }
+            FwdScratch::Fused(s) => {
+                let mut at = 0usize;
+                while at < live {
+                    let nt = (live - at).min(kernels::TOKEN_BLOCK);
+                    let rows = &mut xs[at * d..(at + nt) * d];
+                    layer_block(m, l, BlockKind::Seq, rows, &mut tail, &mut h, s, nt);
+                    at += nt;
+                }
+            }
         }
         states.push((tail, h));
         if let Some(p) = plan {
@@ -571,6 +862,8 @@ mod tests {
     // The historical reduce_live_set behaviour now lives in
     // reduction::policy (legacy_default / Unified-l2); its exact-vector pin
     // is `policy::tests::unified_l2_matches_legacy_reduce_live_set`.
+    // Scalar-vs-fused-vs-parallel bit-identity across the whole executable
+    // surface is pinned end to end by `tests/kernels_identity.rs`.
 
     #[test]
     fn activations_behave() {

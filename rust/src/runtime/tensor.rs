@@ -120,6 +120,104 @@ pub fn read_lane(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Lane-chunk views: no-copy, disjoint mutable access to contiguous lane
+// ranges of a `[n_layer, n_lanes, row]` frame, one chunk per decode worker
+// (DESIGN.md §11; PERFORMANCE.md). `write_lane`/`read_lane` move state in
+// and out of the frame; these views let the workers mutate it in place.
+// ---------------------------------------------------------------------------
+
+/// A mutable view of lanes `start..start + lanes` of a
+/// `[n_layer, n_lanes, row]` frame — every layer's slice of those lanes,
+/// without copying the (lane-strided) data out.
+///
+/// Obtained from [`lane_chunks_mut`], which guarantees chunks are disjoint;
+/// that is what makes handing one chunk to each worker thread sound. The
+/// view is `Send` (workers own disjoint lanes) but deliberately not
+/// `Clone`/`Sync` — exactly one owner may mutate a chunk.
+///
+/// ```
+/// use tor_ssm::runtime::tensor::lane_chunks_mut;
+/// // frame [n_layer=2, n_lanes=3, row=2]
+/// let mut frame = vec![0.0f32; 12];
+/// let mut chunks = lane_chunks_mut(&mut frame, 2, 3, 2, &[0..1, 1..3]).into_iter();
+/// let (mut a, mut b) = (chunks.next().unwrap(), chunks.next().unwrap());
+/// a.layer_mut(0).fill(1.0); // lane 0, layer 0
+/// b.layer_mut(1).fill(2.0); // lanes 1–2, layer 1
+/// assert_eq!(frame, vec![1., 1., 0., 0., 0., 0., 0., 0., 2., 2., 2., 2.]);
+/// ```
+pub struct LaneChunkMut<'a> {
+    ptr: *mut f32,
+    n_layer: usize,
+    n_lanes: usize,
+    row: usize,
+    start: usize,
+    lanes: usize,
+    _frame: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// Safety: a chunk only ever dereferences frame elements inside its own
+// (disjoint, `lane_chunks_mut`-checked) lane range, so moving it to another
+// thread cannot alias another chunk's elements.
+unsafe impl Send for LaneChunkMut<'_> {}
+
+impl LaneChunkMut<'_> {
+    /// Number of lanes in this chunk.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// First frame lane this chunk covers.
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// Mutable slice of this chunk's lanes at layer `l`: `lanes × row`
+    /// elements, contiguous (lanes are adjacent within a layer).
+    pub fn layer_mut(&mut self, l: usize) -> &mut [f32] {
+        assert!(l < self.n_layer, "layer {l} out of range ({})", self.n_layer);
+        let off = (l * self.n_lanes + self.start) * self.row;
+        // Safety: `off .. off + lanes*row` lies inside the frame (checked
+        // at construction) and inside this chunk's exclusive lane range;
+        // the &mut self receiver prevents overlapping slices from one chunk.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(off), self.lanes * self.row) }
+    }
+}
+
+/// Split a `[n_layer, n_lanes, row]` frame into per-chunk mutable views,
+/// one per entry of `bounds`. Bounds must be ascending, non-overlapping
+/// lane ranges within `0..n_lanes` (the decode path builds them with
+/// [`pool::partition`](super::pool::partition)); violations panic, so no
+/// aliased view can ever be constructed.
+pub fn lane_chunks_mut<'a>(
+    frame: &'a mut [f32],
+    n_layer: usize,
+    n_lanes: usize,
+    row: usize,
+    bounds: &[std::ops::Range<usize>],
+) -> Vec<LaneChunkMut<'a>> {
+    assert_eq!(frame.len(), n_layer * n_lanes * row, "frame/layout mismatch");
+    let mut prev = 0usize;
+    for r in bounds {
+        assert!(r.start >= prev && r.start <= r.end, "chunk bounds must ascend: {bounds:?}");
+        assert!(r.end <= n_lanes, "chunk {r:?} exceeds {n_lanes} lanes");
+        prev = r.end;
+    }
+    let ptr = frame.as_mut_ptr();
+    bounds
+        .iter()
+        .map(|r| LaneChunkMut {
+            ptr,
+            n_layer,
+            n_lanes,
+            row,
+            start: r.start,
+            lanes: r.end - r.start,
+            _frame: std::marker::PhantomData,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,5 +279,79 @@ mod tests {
     fn write_lane_rejects_out_of_range() {
         let mut frame = vec![0.0f32; 4];
         write_lane(&mut frame, 1, 2, 2, 2, &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn lane_chunks_cover_disjoint_strided_ranges() {
+        // frame [n_layer=2, n_lanes=4, row=3]; chunks {0..2, 2..3, 3..4}
+        let (nl, lanes, row) = (2usize, 4usize, 3usize);
+        let mut frame = vec![0.0f32; nl * lanes * row];
+        let chunks = lane_chunks_mut(&mut frame, nl, lanes, row, &[0..2, 2..3, 3..4]);
+        assert_eq!(chunks.len(), 3);
+        for mut c in chunks {
+            for l in 0..nl {
+                let s = c.layer_mut(l);
+                assert_eq!(s.len(), c.lanes() * row);
+                for (i, v) in s.iter_mut().enumerate() {
+                    // tag: layer, absolute lane, row index
+                    let lane = c.start() + i / row;
+                    *v = (l * 100 + lane * 10 + i % row) as f32;
+                }
+            }
+        }
+        // every element written exactly once with its own tag
+        for l in 0..nl {
+            for lane in 0..lanes {
+                for r in 0..row {
+                    let got = frame[(l * lanes + lane) * row + r];
+                    assert_eq!(got, (l * 100 + lane * 10 + r) as f32, "l{l} lane{lane} r{r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_chunks_interop_with_write_read_lane() {
+        let (nl, lanes, row) = (3usize, 2usize, 4usize);
+        let mut frame = vec![0.0f32; nl * lanes * row];
+        let seq: Vec<f32> = (0..nl * row).map(|i| i as f32 + 1.0).collect();
+        write_lane(&mut frame, nl, lanes, row, 1, &seq);
+        {
+            let mut chunks = lane_chunks_mut(&mut frame, nl, lanes, row, &[0..1, 1..2]);
+            // chunk 1 sees exactly the written lane, layer by layer
+            for l in 0..nl {
+                assert_eq!(chunks[1].layer_mut(l), &seq[l * row..(l + 1) * row]);
+            }
+            // mutate through the view…
+            for l in 0..nl {
+                for v in chunks[1].layer_mut(l).iter_mut() {
+                    *v += 0.5;
+                }
+            }
+        }
+        // …and read it back through the stride converter
+        let mut back = vec![0.0f32; nl * row];
+        read_lane(&frame, nl, lanes, row, 1, &mut back);
+        for (b, s) in back.iter().zip(&seq) {
+            assert_eq!(*b, s + 0.5);
+        }
+        // lane 0 untouched
+        let mut lane0 = vec![9.0f32; nl * row];
+        read_lane(&frame, nl, lanes, row, 0, &mut lane0);
+        assert!(lane0.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn lane_chunks_reject_overlap() {
+        let mut frame = vec![0.0f32; 8];
+        let _ = lane_chunks_mut(&mut frame, 1, 4, 2, &[0..2, 1..4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn lane_chunks_reject_out_of_range() {
+        let mut frame = vec![0.0f32; 8];
+        let _ = lane_chunks_mut(&mut frame, 1, 4, 2, &[0..5]);
     }
 }

@@ -1,0 +1,246 @@
+//! Bit-identity pins for the lane-parallel fused decode path (DESIGN.md
+//! §11, PERFORMANCE.md): the fused, cache-blocked kernels and the
+//! multi-threaded lane sharding must reproduce the scalar single-threaded
+//! interpreter **exactly** — same bits, no tolerances — on every surface:
+//!
+//! * eval executables across the whole policy family (4 policies × 2
+//!   ratios + dense) on both fixture archs;
+//! * the serving path (prefill → continuous decode) end to end;
+//! * staggered admission/retirement at every thread count 1..=4 (a lane
+//!   that retires mid-flight must never perturb its neighbours).
+//!
+//! The global kernel/worker knobs are process-wide, so these tests
+//! serialise on a mutex — each arm must demonstrably run in the
+//! configuration it claims to measure.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::{Request, Response};
+use tor_ssm::fixtures::{generate, generate_default, FixtureSpec};
+use tor_ssm::manifest::Manifest;
+use tor_ssm::reduction::policy::PolicySpec;
+use tor_ssm::runtime::kernels::{self, KernelMode};
+use tor_ssm::runtime::{pool, HostTensor, Runtime, Weights};
+
+/// The process-wide exec config must not race between tests in this
+/// binary: outputs would still match (that is the whole point), but each
+/// arm must actually run in the configuration it claims to pin.
+static EXEC_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    EXEC_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn set_exec(mode: KernelMode, threads: usize) {
+    kernels::set_mode(mode);
+    pool::set_workers(threads);
+}
+
+fn fixture(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!("tor-ssm-kid-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let man = generate_default(&dir).expect("fixture generation");
+    (dir, man)
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn req(id: u64, plen: usize, gen_tokens: usize, vocab: usize) -> Request {
+    Request {
+        id,
+        prompt: (0..plen).map(|t| ((t * 11 + 3 * id as usize) % vocab) as i32).collect(),
+        gen_tokens,
+        variant: String::new(),
+        arrived_us: 0,
+    }
+}
+
+fn by_id(resps: &[Response]) -> BTreeMap<u64, Vec<i32>> {
+    resps.iter().map(|r| (r.id, r.generated.clone())).collect()
+}
+
+/// The four execution configurations the tentpole introduces, against the
+/// scalar 1-thread oracle (the pre-refactor interpreter semantics).
+const CONFIGS: [(KernelMode, usize); 4] = [
+    (KernelMode::Scalar, 1),
+    (KernelMode::Scalar, 4),
+    (KernelMode::Fused, 1),
+    (KernelMode::Fused, 4),
+];
+
+const POLICIES: [&str; 4] = ["unified", "prune", "merge", "random"];
+const RATIOS: [f64; 2] = [0.10, 0.20];
+
+/// Eval executables: identical logits AND kept maps, bit for bit, in every
+/// configuration, for dense plus every policy × ratio, on both archs.
+#[test]
+fn eval_bit_identity_across_modes_threads_and_policies() {
+    let _g = lock();
+    let (dir, man) = fixture("eval");
+    let rt = Runtime::reference().unwrap();
+    for model_name in ["ref-mamba", "ref-mamba2"] {
+        let model = man.model(model_name).unwrap().clone();
+        let w = Weights::load_init(&man, &model).unwrap();
+        let dw = rt.upload_weights(&model, &w).unwrap();
+
+        // (variant label, entry, policy override)
+        let mut cases: Vec<(String, tor_ssm::manifest::HloEntry, Option<PolicySpec>)> = vec![(
+            "dense".to_string(),
+            model.find_eval("dense", 0.0, None, None, None, None).unwrap().clone(),
+            None,
+        )];
+        for policy in POLICIES {
+            for ratio in RATIOS {
+                let variant = format!("{policy}@{ratio}");
+                let spec = PolicySpec::parse(&variant).unwrap().unwrap();
+                let entry = model
+                    .eval_entry_for_policy(spec.kind.manifest_method(), spec.ratio)
+                    .unwrap()
+                    .clone();
+                cases.push((variant, entry, Some(spec)));
+            }
+        }
+
+        for (variant, entry, spec) in &cases {
+            let exe = rt.load_entry_with_policy(&man, &model, entry, spec.as_ref()).unwrap();
+            let tokens: Vec<i32> = (0..entry.batch * entry.seq_len)
+                .map(|i| ((i * 13 + 5) % model.vocab_size) as i32)
+                .collect();
+            let tok = HostTensor::i32(vec![entry.batch, entry.seq_len], tokens);
+
+            set_exec(KernelMode::Scalar, 1);
+            let want = exe.execute(&dw, std::slice::from_ref(&tok)).unwrap();
+            for (mode, threads) in CONFIGS {
+                set_exec(mode, threads);
+                let got = exe.execute(&dw, std::slice::from_ref(&tok)).unwrap();
+                assert_eq!(
+                    want,
+                    got,
+                    "{model_name}/{variant}: {} kernels × {threads} threads diverged from \
+                     the scalar 1-thread oracle",
+                    mode.name()
+                );
+            }
+        }
+    }
+    set_exec(KernelMode::Fused, 1);
+    cleanup(&dir);
+}
+
+/// The serving path (prefill → continuous-batching decode): identical
+/// generated tokens per request in every configuration, for dense and a
+/// reduced lane on each arch.
+#[test]
+fn serving_bit_identity_across_modes_and_threads() {
+    let _g = lock();
+    let (dir, man) = fixture("serve");
+    let rt = Runtime::reference().unwrap();
+    let plen = man.prefill_seq_len;
+    for (model_name, variant) in [
+        ("ref-mamba", "dense"),
+        ("ref-mamba", "unified@0.2"),
+        ("ref-mamba2", "prune@0.1"),
+        ("ref-mamba2", "merge@0.2"),
+    ] {
+        let model = man.model(model_name).unwrap().clone();
+        let w = Weights::load_init(&man, &model).unwrap();
+        let engine = Engine::new(&rt, &man, &model, &w, variant).unwrap();
+        let vocab = model.vocab_size;
+        let gens = [6usize, 1, 4, 8, 2, 5];
+        let trace: Vec<Request> = gens
+            .iter()
+            .enumerate()
+            .map(|(i, &g)| req(i as u64, if i % 2 == 0 { plen } else { plen / 4 }, g, vocab))
+            .collect();
+
+        set_exec(KernelMode::Scalar, 1);
+        let want = by_id(&Scheduler::new(&engine).run(trace.clone()).unwrap());
+        assert_eq!(want.len(), gens.len());
+        for (mode, threads) in CONFIGS {
+            set_exec(mode, threads);
+            let got = by_id(&Scheduler::new(&engine).run(trace.clone()).unwrap());
+            assert_eq!(
+                want,
+                got,
+                "{model_name}/{variant}: {} kernels × {threads} threads changed served tokens",
+                mode.name()
+            );
+        }
+    }
+    set_exec(KernelMode::Fused, 1);
+    cleanup(&dir);
+}
+
+/// Lane cross-talk probe: a wide decode frame under staggered admission and
+/// retirement (every generation length different, one submission per step)
+/// must produce identical tokens at every thread count 1..=4, in both
+/// kernel modes. If a retiring or newly-placed lane perturbed a neighbour's
+/// state — or a worker's chunk bled into the next — outputs would differ
+/// from the 1-thread scalar oracle.
+#[test]
+fn staggered_retire_has_no_lane_crosstalk_at_any_thread_count() {
+    let _g = lock();
+    let dir = std::env::temp_dir()
+        .join(format!("tor-ssm-kid-{}-stagger-wide", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // Wider decode frame than the default fixture so several workers get
+    // multi-lane chunks.
+    let spec = FixtureSpec { prefill_batch: 4, ..FixtureSpec::default() };
+    let man = generate(&dir, &spec).expect("wide fixture generation");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let engine = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+    assert_eq!(engine.decode_batch, 4, "wide fixture should widen the decode frame");
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+
+    // Staggered trace: all different generation lengths, mixed prompt
+    // lengths, more requests than lanes so retirement reopens lanes.
+    let gens = [9usize, 1, 5, 3, 7, 2, 6, 4, 8, 10];
+    let trace: Vec<Request> = gens
+        .iter()
+        .enumerate()
+        .map(|(i, &g)| req(i as u64, if i % 3 == 0 { plen } else { plen / 2 }, g, vocab))
+        .collect();
+
+    // Oracle: scalar, single thread, staggered submission (one step per
+    // arrival exercises admission interleaving).
+    let run_staggered = || {
+        let mut sched = Scheduler::new(&engine);
+        let mut out = Vec::new();
+        for r in trace.iter().cloned() {
+            sched.submit(r);
+            out.extend(sched.step().unwrap());
+        }
+        out.extend(sched.drain().unwrap());
+        assert_eq!(sched.store().live(), 0, "slots must all release");
+        out
+    };
+    set_exec(KernelMode::Scalar, 1);
+    let want = by_id(&run_staggered());
+    for (i, &g) in gens.iter().enumerate() {
+        assert_eq!(want[&(i as u64)].len(), g, "oracle generated wrong length for req {i}");
+    }
+
+    for mode in [KernelMode::Scalar, KernelMode::Fused] {
+        for threads in 1..=4usize {
+            set_exec(mode, threads);
+            let got = by_id(&run_staggered());
+            assert_eq!(
+                want,
+                got,
+                "staggered retire diverged under {} kernels × {threads} threads",
+                mode.name()
+            );
+        }
+    }
+    set_exec(KernelMode::Fused, 1);
+    cleanup(&dir);
+}
