@@ -63,12 +63,15 @@ fn main() -> Result<()> {
 
     // Build the trace once so the continuous and lock-step runs serve the
     // exact same requests (shared workload shape — see fixtures::synth_requests).
+    // Length-aware lanes take multi-frame prompts (chunked prefill).
+    let max_prompt = fixtures::trace_max_prompt(&engines);
     let mut rng = Rng::new(11);
     let trace: Vec<Request> = fixtures::synth_requests(
         &mut rng,
         n_requests,
         max_gen,
         man.prefill_seq_len,
+        max_prompt,
         me.vocab_size,
         &[], // fully router-driven: keeps the two serving modes comparable
     );

@@ -44,7 +44,7 @@ fn main() {
             batcher.push(req(i, 16));
             while batcher.poll(std::time::Instant::now()).is_some() {}
         }
-        while batcher.drain().is_some() {}
+        batcher.drain();
         assert_eq!(batcher.dispatched, 1000);
     });
 
@@ -138,6 +138,8 @@ fn serving_comparison() {
         n_requests,
         max_gen,
         man.prefill_seq_len,
+        // length-diverse incl. chunked-prefill prompts
+        fixtures::trace_max_prompt(std::slice::from_ref(&engine)),
         model.vocab_size,
         &[], // single-lane comparison: no explicit variant pinning
     );

@@ -98,6 +98,8 @@ fn main() {
             n_requests,
             max_gen,
             man.prefill_seq_len,
+            // length-diverse incl. chunked-prefill prompts
+            fixtures::trace_max_prompt(std::slice::from_ref(&engine)),
             model.vocab_size,
             &[],
         );

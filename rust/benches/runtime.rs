@@ -24,6 +24,7 @@
 //! `REPRO_BENCH_OUT` (output path, default BENCH_runtime.json).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::time::Instant;
 
 use tor_ssm::coordinator::engine::Engine;
@@ -79,9 +80,41 @@ fn main() {
     let model_name = man.models.keys().next().expect("models").clone();
     let model = man.model(&model_name).expect("model").clone();
     let (w, _) = load_best_weights(&man, &model).expect("weights");
+
+    // Variable-length trace, shared by every configuration: short, mid,
+    // full-frame, and longer-than-frame prompts — the latter exercise
+    // chunked prefill end to end (DESIGN.md §6). Serving it must never
+    // truncate a prompt; the measured token accounting below asserts that.
+    let max_prompt_len = fixtures::LONG_PROMPT_FRAMES * man.prefill_seq_len;
+    let mut rng = Rng::new(29);
+    let trace: Vec<Request> = fixtures::synth_requests(
+        &mut rng,
+        n_requests,
+        max_gen,
+        man.prefill_seq_len,
+        max_prompt_len,
+        model.vocab_size,
+        &[],
+    );
+    let long_prompts = trace.iter().filter(|r| r.prompt.len() > man.prefill_seq_len).count();
+    // The zero-truncation gate is only meaningful if chunked prefill
+    // actually runs: a seed/knob change that drops every longer-than-frame
+    // prompt from the trace must fail loudly, not weaken the gate silently.
+    assert!(
+        long_prompts > 0,
+        "variable-length trace drew no longer-than-frame prompt (requests={n_requests}); \
+         bump REPRO_BENCH_REQS or reseed so the truncation gate exercises chunked prefill"
+    );
+    let longest = trace.iter().map(|r| r.prompt.len()).max().unwrap_or(0);
+    let expected_tokens: u64 = trace.iter().map(|r| r.prompt.len() as u64).sum();
     println!(
         "runtime bench on {model_name}: {n_requests} reqs, gen 1..={max_gen}, \
          {lanes} decode lanes, N-thread arm = {n_threads} (of {cores} cores)"
+    );
+    println!(
+        "variable-length trace: prompts 1..={longest} tokens around a \
+         {}-token prefill frame ({long_prompts} longer than the frame)",
+        man.prefill_seq_len
     );
 
     let variants: [&'static str; 2] = ["dense", "unified@0.2"];
@@ -91,6 +124,9 @@ fn main() {
     let mut results: Vec<ConfigResult> = Vec::new();
     // Per-variant reference outputs: every config must reproduce them.
     let mut oracle: BTreeMap<&str, BTreeMap<u64, Vec<i32>>> = BTreeMap::new();
+    // Worst measured prompt-token shortfall across configs (0 = nothing
+    // truncated anywhere); asserted 0 per config, reported as measured.
+    let mut truncated_tokens = 0u64;
 
     for mode in modes {
         for &threads in &thread_arms {
@@ -102,21 +138,25 @@ fn main() {
                 pool::set_workers(threads);
                 let engine =
                     Engine::new(&rt, &man, &model, &w, variant).expect("engine for bench variant");
-                let mut rng = Rng::new(29);
-                let trace: Vec<Request> = fixtures::synth_requests(
-                    &mut rng,
-                    n_requests,
-                    max_gen,
-                    man.prefill_seq_len,
-                    model.vocab_size,
-                    &[],
-                );
+                assert!(engine.length_aware, "fixture prefill entries must be length-aware");
                 let mut sched = Scheduler::new(&engine);
                 let mut m = Metrics::default();
                 let t0 = Instant::now();
-                let resps = sched.run(trace).expect("serve");
+                let resps = sched.run(trace.clone()).expect("serve");
                 m.wall = t0.elapsed();
                 assert_eq!(resps.len(), n_requests, "{variant}: lost responses");
+                // Zero-truncation gate, MEASURED at the frame-packing site:
+                // Engine::prefill_tokens counts the true prompt tokens fed
+                // into executed prefill frames (padding and idle chunk
+                // lanes excluded), so any truncation anywhere in the
+                // prefill path — including a reintroduced resize+slice —
+                // shows up as a shortfall against the trace's own count.
+                let fed = engine.prefill_tokens.load(Ordering::Relaxed);
+                truncated_tokens = truncated_tokens.max(expected_tokens.saturating_sub(fed));
+                assert_eq!(
+                    fed, expected_tokens,
+                    "{variant}: prefill fed {fed} of {expected_tokens} prompt tokens (truncation!)"
+                );
                 for r in &resps {
                     m.record_response(r);
                 }
@@ -207,6 +247,11 @@ fn main() {
         (Some(x), Some(y)) if y > 0.0 => num(x / y),
         _ => Json::Null,
     };
+    println!(
+        "variable-length serving: {n_requests} prompts ({expected_tokens} prompt tokens) \
+         served end to end ({long_prompts} via chunked prefill), truncated {truncated_tokens}"
+    );
+
     let report = obj(vec![
         ("bench", s("runtime_kernels")),
         ("model", s(&model_name)),
@@ -214,6 +259,17 @@ fn main() {
         ("max_gen_tokens", num(max_gen as f64)),
         ("decode_lanes", num(lanes as f64)),
         ("threads_n_arm", num(n_threads as f64)),
+        (
+            "variable_length",
+            obj(vec![
+                ("frame_len", num(man.prefill_seq_len as f64)),
+                ("max_prompt_len", num(max_prompt_len as f64)),
+                ("longest_prompt", num(longest as f64)),
+                ("long_prompts", num(long_prompts as f64)),
+                ("prompt_tokens", num(expected_tokens as f64)),
+                ("truncated_tokens", num(truncated_tokens as f64)),
+            ]),
+        ),
         ("configs", Json::Arr(rows)),
         ("fused_1t_speedup_dense", ratio(fused_1, scalar_1)),
         ("fused_nt_speedup_dense", ratio(fused_n, scalar_1)),

@@ -9,7 +9,10 @@
 //! * no request is dropped or duplicated;
 //! * a non-empty queue is flushed no later than `max_wait` after its oldest
 //!   request **arrived** — dispatching a full batch must not restart the
-//!   clock for requests left behind (each entry keeps its own enqueue time).
+//!   clock for requests left behind (each entry keeps its own enqueue time);
+//! * a shutdown [`Batcher::drain`] empties the whole queue — an over-full
+//!   queue leaves as several capacity-bounded batches, never stranding the
+//!   remainder behind the first one.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -72,13 +75,20 @@ impl Batcher {
         }
     }
 
-    /// Forced flush (shutdown/drain).
-    pub fn drain(&mut self) -> Option<Vec<Request>> {
-        if self.queue.is_empty() {
-            None
-        } else {
-            Some(self.take(self.queue.len().min(self.batch_size)))
+    /// Forced flush (shutdown/drain): empty the **whole** queue as a
+    /// sequence of `batch_size`-bounded batches, FIFO, the last possibly
+    /// partial. Returns an empty vec on an empty queue.
+    ///
+    /// Regression note: this used to emit at most one batch
+    /// (`take(len.min(batch_size))`), so a shutdown drain of an over-full
+    /// queue stranded everything behind the first `batch_size` requests
+    /// unless the caller happened to loop.
+    pub fn drain(&mut self) -> Vec<Vec<Request>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            out.push(self.take(self.queue.len().min(self.batch_size)));
         }
+        out
     }
 
     fn take(&mut self, n: usize) -> Vec<Request> {
@@ -135,8 +145,33 @@ mod tests {
         let mut b = Batcher::new(8, Duration::from_secs(10));
         b.push(req(0));
         b.push(req(1));
-        assert_eq!(b.drain().unwrap().len(), 2);
-        assert!(b.drain().is_none());
+        let batches = b.drain();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].len(), 2);
+        assert!(b.drain().is_empty());
+    }
+
+    /// Regression: drain used to flush at most ONE batch, stranding the
+    /// remainder of an over-full queue at shutdown. With 2×batch_size+1
+    /// queued, every request must leave, FIFO, in capacity-bounded batches.
+    #[test]
+    fn drain_empties_overfull_queue() {
+        let cap = 4usize;
+        let mut b = Batcher::new(cap, Duration::from_secs(10));
+        let n = 2 * cap as u64 + 1;
+        for i in 0..n {
+            b.push(req(i));
+        }
+        let batches = b.drain();
+        assert_eq!(
+            batches.iter().map(|x| x.len()).collect::<Vec<_>>(),
+            vec![cap, cap, 1],
+            "drain must empty the whole queue in capacity-bounded batches"
+        );
+        let ids: Vec<u64> = batches.concat().iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>(), "FIFO across drained batches");
+        assert!(b.is_empty());
+        assert_eq!(b.dispatched, n);
     }
 
     /// Regression: dispatching a full batch used to reset the wait timer

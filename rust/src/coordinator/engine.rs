@@ -5,7 +5,13 @@
 //! * [`Engine::prefill`] — ingest up to `batch` prompts through the static
 //!   prefill frame and slice the resulting `[n_layer, B, ...]` state frame
 //!   into per-sequence states ready for
-//!   [`StateStore::admit`](super::state_store::StateStore::admit);
+//!   [`StateStore::admit`](super::state_store::StateStore::admit). On a
+//!   length-aware backend each prompt is computed at its **true length**
+//!   (frame padding is never scanned into the SSM state), and prompts
+//!   longer than the frame run as **chunked prefill**: frame-sized chunks
+//!   with the O(1) recurrent state carried across chunks (DESIGN.md §6).
+//!   Engines that cannot chunk (AOT entries without a `lengths` input)
+//!   refuse over-long prompts with a hard error instead of truncating.
 //! * [`Engine::decode_step`] — advance every lane of a [`DecodeFrame`] by
 //!   one token.
 //!
@@ -44,6 +50,12 @@ pub struct Engine {
     /// Static prefill frame: at most this many prompts per prefill call.
     pub batch: usize,
     pub prefill_len: usize,
+    /// Whether the prefill entry takes a per-sequence `lengths` input
+    /// (manifest `lengths: true`, backend-guarded at load time). Length-
+    /// aware engines compute every prompt at its true length, chunk prompts
+    /// longer than `prefill_len`, and mark idle decode lanes with
+    /// [`IDLE_LANE`](crate::runtime::IDLE_LANE) so the backend skips them.
+    pub length_aware: bool,
     /// Decode frame width: how many sequences one decode step advances.
     pub decode_batch: usize,
     n_layer: usize,
@@ -61,6 +73,15 @@ pub struct Engine {
     /// count continuous batching minimises; relaxed ordering — a counter,
     /// not a synchronisation point.
     pub decode_calls: AtomicU64,
+    /// Prompt tokens actually packed into executed prefill frames since
+    /// construction — **measured at the frame-packing site**, true lengths
+    /// only (frame padding and idle chunk lanes never count), incremented
+    /// only after the frame executes. Because it counts what was fed, not
+    /// what was requested, comparing it against a trace's own token count
+    /// detects truncation anywhere in the prefill path — the
+    /// zero-truncation gate `benches/runtime.rs` runs in CI. Relaxed
+    /// ordering — a counter, not a synchronisation point.
+    pub prefill_tokens: AtomicU64,
 }
 
 /// One prompt's prefill result: the per-sequence decode state (contiguous
@@ -74,7 +95,9 @@ pub struct PrefilledSeq {
 
 /// The mutable decode frame a serve loop steps: one input token and one
 /// conv/ssm state lane per slot, laid out `[n_layer, decode_batch, ...]`.
-/// Idle lanes hold PAD + zero state and are simply ignored by callers.
+/// Idle lanes hold [`Engine::idle_token`] + zero state: on a length-aware
+/// backend the sentinel makes the backend skip them outright; on AOT
+/// backends they decode PAD and the output is simply ignored by callers.
 pub struct DecodeFrame {
     pub tokens: Vec<i32>,
     pub conv: Vec<f32>,
@@ -118,6 +141,7 @@ impl Engine {
             weights: dw,
             batch: pf.batch,
             prefill_len: pf.seq_len,
+            length_aware: pf.takes_lengths,
             decode_batch: dec.batch,
             n_layer: model.n_layer,
             conv_row,
@@ -128,6 +152,7 @@ impl Engine {
             pf_ssm_shape,
             vocab: model.vocab_size,
             decode_calls: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
         })
     }
 
@@ -145,36 +170,149 @@ impl Engine {
         StateStore::new(capacity, self.n_layer, self.conv_row, self.ssm_row)
     }
 
+    /// Fill token for an idle decode-frame lane. Length-aware engines use
+    /// the [`IDLE_LANE`](crate::runtime::IDLE_LANE) sentinel, which the
+    /// backend skips outright (no phantom decode, zero logits); engines on
+    /// AOT entries keep the legacy PAD fill, which the fixed-arity graph
+    /// decodes and the caller discards.
+    pub fn idle_token(&self) -> i32 {
+        if self.length_aware {
+            crate::runtime::IDLE_LANE
+        } else {
+            crate::tokenizer::PAD as i32
+        }
+    }
+
     /// A zeroed decode frame (every lane idle).
     pub fn new_frame(&self) -> DecodeFrame {
         DecodeFrame {
-            tokens: vec![crate::tokenizer::PAD as i32; self.decode_batch],
+            tokens: vec![self.idle_token(); self.decode_batch],
             conv: vec![0.0; self.conv_shape.iter().product()],
             ssm: vec![0.0; self.ssm_shape.iter().product()],
         }
     }
 
-    /// Phase 1: run the static prefill frame over up to `self.batch` prompts
-    /// (right-padded/truncated to `prefill_len`). Returns one per-sequence
+    /// Phase 1: prefill up to `self.batch` prompts. Returns one per-sequence
     /// state + first-logits row per request, plus the call's wall time in µs.
+    ///
+    /// On a length-aware engine every prompt is computed at its **true
+    /// length** — the frame's trailing padding is never scanned into the
+    /// conv/ssm state, the first token is sampled from the logits at the
+    /// true last prompt token, and the reduction schedule is solved on the
+    /// true length (DESIGN.md §6). Prompts longer than `prefill_len` run as
+    /// chunked prefill: `prefill_len`-sized chunks through the same frame,
+    /// with each sequence's per-layer recurrent state carried across chunks
+    /// (cheap for an SSM — the state is O(1) in sequence length). On the
+    /// dense path chunking is bit-invisible; a reduced lane dispatches its
+    /// policy per chunk (the chunk's own runtime-solved schedule).
+    ///
+    /// Engines whose prefill entry takes no `lengths` input (AOT exports)
+    /// keep the legacy full-frame padding semantics and **refuse** prompts
+    /// longer than the frame — a hard error beats the silent truncation
+    /// this path used to perform.
     ///
     /// Each prompt flows through the model independently, so a prompt's
     /// returned state is bit-identical whether it was prefilled alone or
     /// alongside others — the property the continuous scheduler's
-    /// "identical output to lock-step" guarantee rests on.
+    /// "identical output to lock-step" guarantee rests on (and, with
+    /// lengths threaded, independent of how much frame padding follows it —
+    /// pinned by `tests/prefill_invariance.rs`).
     pub fn prefill(&self, reqs: &[Request]) -> Result<(Vec<PrefilledSeq>, u64)> {
         ensure!(!reqs.is_empty(), "empty prefill batch");
         ensure!(reqs.len() <= self.batch, "prefill overflow: {} > {}", reqs.len(), self.batch);
-        let t0 = Instant::now();
-        let mut flat = Vec::with_capacity(self.batch * self.prefill_len);
         for r in reqs {
+            ensure!(!r.prompt.is_empty(), "request {}: empty prompt", r.id);
+        }
+        let t0 = Instant::now();
+        let seqs = if self.length_aware {
+            self.prefill_chunked(reqs)?
+        } else {
+            for r in reqs {
+                ensure!(
+                    r.prompt.len() <= self.prefill_len,
+                    "request {}: prompt has {} tokens but the prefill frame is {} and this \
+                     engine cannot chunk (entry takes no `lengths` input); refusing to \
+                     truncate silently — split the prompt or serve it on a length-aware \
+                     backend",
+                    r.id,
+                    r.prompt.len(),
+                    self.prefill_len
+                );
+            }
+            self.prefill_padded(reqs)?
+        };
+        Ok((seqs, t0.elapsed().as_micros() as u64))
+    }
+
+    /// Legacy fixed-frame prefill (entries without a `lengths` input):
+    /// right-pad every prompt to `prefill_len` and scan the whole frame.
+    fn prefill_padded(&self, reqs: &[Request]) -> Result<Vec<PrefilledSeq>> {
+        let mut flat = Vec::with_capacity(self.batch * self.prefill_len);
+        let mut packed = 0u64;
+        for r in reqs {
+            packed += r.prompt.len().min(self.prefill_len) as u64;
             let mut p = r.prompt.clone();
             p.resize(self.prefill_len, crate::tokenizer::PAD as i32);
             flat.extend_from_slice(&p[..self.prefill_len]);
         }
         flat.resize(self.batch * self.prefill_len, crate::tokenizer::PAD as i32);
         let tokens = HostTensor::i32(vec![self.batch, self.prefill_len], flat);
-        let mut outs = self.prefill.execute(&self.weights, &[tokens]).context("prefill")?;
+        let (logits, conv_f, ssm_f) = self.exec_prefill_frame(&[tokens])?;
+        self.prefill_tokens.fetch_add(packed, Ordering::Relaxed);
+        Ok((0..reqs.len()).map(|i| self.slice_lane(i, &logits, &conv_f, &ssm_f)).collect())
+    }
+
+    /// Length-aware prefill: feed true per-sequence lengths with the frame,
+    /// looping prompts longer than `prefill_len` through frame-sized chunks
+    /// with the `[n_layer, B, ...]` state frames carried chunk to chunk.
+    /// Lanes whose prompt ended in an earlier chunk ride along with length
+    /// 0 (the backend skips them); each sequence's state + logits are
+    /// captured from the chunk its last token lands in.
+    fn prefill_chunked(&self, reqs: &[Request]) -> Result<Vec<PrefilledSeq>> {
+        let plen = self.prefill_len;
+        let chunks_of = |n: usize| n.div_ceil(plen);
+        let total_chunks = reqs.iter().map(|r| chunks_of(r.prompt.len())).max().unwrap_or(1);
+        let mut done: Vec<Option<PrefilledSeq>> = (0..reqs.len()).map(|_| None).collect();
+        let mut carry: Option<(Vec<f32>, Vec<f32>)> = None;
+        for ci in 0..total_chunks {
+            let mut flat = vec![crate::tokenizer::PAD as i32; self.batch * plen];
+            let mut lens = vec![0i32; self.batch];
+            for (i, r) in reqs.iter().enumerate() {
+                let start = ci * plen;
+                if start >= r.prompt.len() {
+                    continue; // finished in an earlier chunk: idle lane
+                }
+                let end = (start + plen).min(r.prompt.len());
+                flat[i * plen..i * plen + (end - start)].copy_from_slice(&r.prompt[start..end]);
+                lens[i] = (end - start) as i32;
+            }
+            let mut inputs = vec![
+                HostTensor::i32(vec![self.batch, plen], flat),
+                HostTensor::i32(vec![self.batch], lens.clone()),
+            ];
+            if let Some((c, s)) = carry.take() {
+                inputs.push(HostTensor::f32(self.pf_conv_shape.clone(), c));
+                inputs.push(HostTensor::f32(self.pf_ssm_shape.clone(), s));
+            }
+            let (logits, conv_f, ssm_f) = self.exec_prefill_frame(&inputs)?;
+            self.prefill_tokens
+                .fetch_add(lens.iter().map(|&x| x as u64).sum::<u64>(), Ordering::Relaxed);
+            for (i, r) in reqs.iter().enumerate() {
+                if lens[i] > 0 && ci + 1 == chunks_of(r.prompt.len()) {
+                    done[i] = Some(self.slice_lane(i, &logits, &conv_f, &ssm_f));
+                }
+            }
+            if ci + 1 < total_chunks {
+                carry = Some((conv_f, ssm_f));
+            }
+        }
+        Ok(done.into_iter().map(|d| d.expect("every prompt ends in some chunk")).collect())
+    }
+
+    /// Execute + shape-validate one prefill frame; returns owned
+    /// (logits `[batch·vocab]`, conv frame, ssm frame).
+    fn exec_prefill_frame(&self, inputs: &[HostTensor]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mut outs = self.prefill.execute(&self.weights, inputs).context("prefill")?;
         ensure!(outs.len() == 3, "prefill must return (logits, conv, ssm)");
         let ssm_t = outs.pop().unwrap();
         let conv_t = outs.pop().unwrap();
@@ -198,22 +336,21 @@ impl Engine {
             self.batch,
             self.vocab
         );
-        let lv = logits_t.as_f32()?;
-        let conv_f = conv_t.as_f32()?;
-        let ssm_f = ssm_t.as_f32()?;
-        let mut seqs = Vec::with_capacity(reqs.len());
-        for i in 0..reqs.len() {
-            let mut conv = vec![0.0f32; self.n_layer * self.conv_row];
-            let mut ssm = vec![0.0f32; self.n_layer * self.ssm_row];
-            read_lane(conv_f, self.n_layer, self.batch, self.conv_row, i, &mut conv);
-            read_lane(ssm_f, self.n_layer, self.batch, self.ssm_row, i, &mut ssm);
-            seqs.push(PrefilledSeq {
-                conv,
-                ssm,
-                logits: lv[i * self.vocab..(i + 1) * self.vocab].to_vec(),
-            });
+        Ok((into_f32(logits_t)?, into_f32(conv_t)?, into_f32(ssm_t)?))
+    }
+
+    /// Slice lane `i` of a prefill output frame into its per-sequence
+    /// contiguous `[n_layer, row]` states + logits row.
+    fn slice_lane(&self, i: usize, logits: &[f32], conv_f: &[f32], ssm_f: &[f32]) -> PrefilledSeq {
+        let mut conv = vec![0.0f32; self.n_layer * self.conv_row];
+        let mut ssm = vec![0.0f32; self.n_layer * self.ssm_row];
+        read_lane(conv_f, self.n_layer, self.batch, self.conv_row, i, &mut conv);
+        read_lane(ssm_f, self.n_layer, self.batch, self.ssm_row, i, &mut ssm);
+        PrefilledSeq {
+            conv,
+            ssm,
+            logits: logits[i * self.vocab..(i + 1) * self.vocab].to_vec(),
         }
-        Ok((seqs, t0.elapsed().as_micros() as u64))
     }
 
     /// Phase 2: advance every lane of `frame` one token. The new conv/ssm

@@ -30,7 +30,10 @@ pub mod state_store;
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    /// Prompt token ids (will be right-padded/truncated to the prefill frame).
+    /// Prompt token ids, any non-zero length. Length-aware engines compute
+    /// the prompt at its true length (chunking prompts longer than the
+    /// prefill frame — never truncating); legacy AOT engines right-pad to
+    /// the frame and refuse over-long prompts (DESIGN.md §6).
     pub prompt: Vec<i32>,
     /// Number of tokens to generate.
     pub gen_tokens: usize,

@@ -222,10 +222,14 @@ impl<'e> Scheduler<'e> {
             let slots: Vec<Option<Slot>> =
                 self.lanes.iter().map(|l| l.as_ref().map(|s| s.slot)).collect();
             self.store.gather(&slots, &mut self.frame.conv, &mut self.frame.ssm);
+            // Idle lanes get the engine's idle fill: on a length-aware
+            // backend that is the IDLE_LANE sentinel and the backend skips
+            // the lane's model math entirely — a half-empty frame no longer
+            // pays full-model decodes for phantom PAD tokens.
             for (i, lane) in self.lanes.iter().enumerate() {
                 self.frame.tokens[i] = match lane {
                     Some(seq) => seq.next_token,
-                    None => crate::tokenizer::PAD as i32,
+                    None => self.engine.idle_token(),
                 };
             }
             let t0 = Instant::now();

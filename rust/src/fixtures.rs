@@ -187,10 +187,20 @@ pub fn manifest_or_fixture(artifacts: &str) -> Result<(Manifest, bool)> {
 }
 
 /// Synthetic serving workload shared by `repro serve`/`repro demo`, the
-/// serve example, and the coordinator/reduction benches (keeps every
-/// surface measuring the same trace shape): bimodal prompt lengths — full
-/// prefill frame vs a quarter of it (short chat-like vs long document-like)
-/// — and uniform 1..=max_gen generation lengths.
+/// serve example, and the coordinator/reduction/runtime benches (keeps
+/// every surface measuring the same trace shape): **length-diverse**
+/// prompts — 30% exactly one prefill frame, 20% a quarter-frame (short
+/// chat-like), 35% uniform in `1..=frame`, and (when `max_prompt_len >
+/// prefill_seq_len`) 15% *longer than the frame*, uniform in
+/// `frame+1..=max_prompt_len`, exercising chunked prefill — with uniform
+/// 1..=max_gen generation lengths.
+///
+/// `max_prompt_len` is a hard ceiling on every bucket. Pass
+/// `max_prompt_len == prefill_seq_len` to suppress the longer-than-frame
+/// bucket (its probability mass folds into the uniform bucket) for engines
+/// that cannot chunk — a cap *below* the frame additionally clamps the
+/// full-frame/uniform buckets to it. Serving paths derive the cap from
+/// their lane set via [`trace_max_prompt`].
 ///
 /// `explicit_variants` mixes policy-variant pinning into the trace: every
 /// third request names one of the given lane variants explicitly
@@ -203,12 +213,30 @@ pub fn synth_requests(
     n_requests: usize,
     max_gen: usize,
     prefill_seq_len: usize,
+    max_prompt_len: usize,
     vocab_size: usize,
     explicit_variants: &[&str],
 ) -> Vec<crate::coordinator::Request> {
+    let frame = prefill_seq_len.max(1);
+    let cap = max_prompt_len.max(1);
     (0..n_requests)
         .map(|i| {
-            let plen = if rng.f64() < 0.5 { prefill_seq_len } else { prefill_seq_len / 4 };
+            let r = rng.f64();
+            let plen = if r < 0.30 {
+                frame
+            } else if r < 0.50 {
+                (frame / 4).max(1)
+            } else if r < 0.85 || cap <= frame {
+                1 + rng.below(frame)
+            } else {
+                frame + 1 + rng.below(cap - frame)
+            };
+            // `max_prompt_len` is a HARD ceiling: a lane set capped below
+            // the frame (a non-chunkable lane with a smaller per-entry
+            // frame — see `trace_max_prompt`) must never be offered a
+            // prompt it would refuse. A no-op for the usual cap >= frame,
+            // so the RNG stream and distribution are unchanged there.
+            let plen = plen.min(cap);
             let variant = if !explicit_variants.is_empty() && i % 3 == 2 {
                 explicit_variants[(i / 3) % explicit_variants.len()].to_string()
             } else {
@@ -225,11 +253,33 @@ pub fn synth_requests(
         .collect()
 }
 
+/// How many prefill frames the longest [`synth_requests`] prompt spans on a
+/// fully length-aware lane set — the single knob behind every serving
+/// surface's chunked-prefill traffic (serve/demo, the serve example, and
+/// the coordinator/reduction/runtime benches).
+pub const LONG_PROMPT_FRAMES: usize = 3;
+
+/// The `max_prompt_len` a serving surface should pass to
+/// [`synth_requests`] for `engines`: [`LONG_PROMPT_FRAMES`] prefill frames
+/// when **every** lane can chunk (length-aware), else the **smallest**
+/// non-chunkable frame — engines that cannot chunk refuse longer prompts
+/// instead of truncating (DESIGN.md §6), so no prompt the router might
+/// hand them may exceed any such lane's frame.
+pub fn trace_max_prompt(engines: &[crate::coordinator::engine::Engine]) -> usize {
+    if engines.iter().all(|e| e.length_aware) {
+        // Any length-aware lane serves any length (chunking); the widest
+        // frame just sets the trace's "multi-frame" scale.
+        LONG_PROMPT_FRAMES * engines.iter().map(|e| e.prefill_len).max().unwrap_or(0)
+    } else {
+        engines.iter().filter(|e| !e.length_aware).map(|e| e.prefill_len).min().unwrap_or(0)
+    }
+}
+
 /// Fixture layout format: BUMP THIS whenever `reference_params`, the model
 /// dims/consts, or the `FixtureSpec` defaults change shape — it keys the
 /// shared temp-dir cache below, so stale fixtures from older code are never
 /// silently reused.
-pub const FIXTURE_FORMAT: u32 = 1;
+pub const FIXTURE_FORMAT: u32 = 2;
 
 /// Shared location for the on-demand fixture used by benches/examples. The
 /// crate version + [`FIXTURE_FORMAT`] in the name bust the cache across
@@ -444,6 +494,9 @@ fn gen_hlo_entries(name: &str, arch: &str, vocab: usize, spec: &FixtureSpec) -> 
     }
 
     // Prefill: dense + UTRC ratios.
+    // Prefill entries are length-aware (`lengths: true`): the reference
+    // backend stops each sequence at its true length and accepts the
+    // chunked-prefill resume state (DESIGN.md §6).
     hlo.insert(
         "prefill_dense".to_string(),
         obj(vec![
@@ -451,6 +504,7 @@ fn gen_hlo_entries(name: &str, arch: &str, vocab: usize, spec: &FixtureSpec) -> 
             ("kind", s("prefill")),
             ("batch", num(spec.prefill_batch as f64)),
             ("seq_len", num(spec.prefill_seq_len as f64)),
+            ("lengths", Json::Bool(true)),
             ("reduction", reduction_json("dense", 0.0, &[])),
         ]),
     );
@@ -465,6 +519,7 @@ fn gen_hlo_entries(name: &str, arch: &str, vocab: usize, spec: &FixtureSpec) -> 
                 ("kind", s("prefill")),
                 ("batch", num(spec.prefill_batch as f64)),
                 ("seq_len", num(spec.prefill_seq_len as f64)),
+                ("lengths", Json::Bool(true)),
                 ("reduction", reduction_json("utrc", ratio, &LOCATIONS)),
                 ("plan", plan_json(&plan)),
             ]),

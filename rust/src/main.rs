@@ -164,6 +164,9 @@ fn demo(args: &Args) -> Result<()> {
     let mut metrics = Metrics::default();
     let n_requests = args.usize_or("requests", 6);
     let gen_tokens = args.usize_or("gen-tokens", 4);
+    // Length-aware lanes serve multi-frame prompts via chunked prefill;
+    // otherwise the trace caps at the frame (no silent truncation).
+    let max_prompt = tor_ssm::fixtures::trace_max_prompt(&engines);
     serve_trace(
         &lanes,
         &mut router,
@@ -172,6 +175,7 @@ fn demo(args: &Args) -> Result<()> {
         n_requests,
         gen_tokens,
         man.prefill_seq_len,
+        max_prompt,
         me.vocab_size,
     )?;
     println!("serve: {}", metrics.summary());
@@ -400,6 +404,7 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
     let mut router = Router::new(policy, &lanes);
     let mut schedulers: Vec<Scheduler> = engines.iter().map(Scheduler::new).collect();
     let mut metrics = Metrics::default();
+    let max_prompt = tor_ssm::fixtures::trace_max_prompt(&engines);
     serve_trace(
         &lanes,
         &mut router,
@@ -408,6 +413,7 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
         n_requests,
         gen_tokens,
         man.prefill_seq_len,
+        max_prompt,
         me.vocab_size,
     )?;
     println!("routing: {} requests over {:?}", router.routed, lanes);
@@ -425,9 +431,11 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
 }
 
 /// The shared open-loop serving trace (used by `serve` and `demo`): feed a
-/// synthetic mixed-length workload (bimodal prompt lengths, uniform
+/// synthetic length-diverse workload (short, mid, full-frame, and — on
+/// length-aware lanes — longer-than-frame chunked-prefill prompts; uniform
 /// 1..=max_gen generation lengths) through router → continuous schedulers,
 /// stepping every scheduler once per arrival and draining at the end.
+#[allow(clippy::too_many_arguments)]
 fn serve_trace(
     lanes: &[&str],
     router: &mut Router,
@@ -436,6 +444,7 @@ fn serve_trace(
     n_requests: usize,
     max_gen: usize,
     prefill_seq_len: usize,
+    max_prompt_len: usize,
     vocab_size: usize,
 ) -> Result<()> {
     let mut rng = Rng::new(7);
@@ -445,6 +454,7 @@ fn serve_trace(
         n_requests,
         max_gen,
         prefill_seq_len,
+        max_prompt_len,
         vocab_size,
         lanes, // every third request pins a lane variant explicitly
     );

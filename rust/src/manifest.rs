@@ -48,6 +48,12 @@ pub struct HloEntry {
     pub reduction: Option<Reduction>,
     pub plan: Option<Plan>,
     pub peak_memory_bytes: Option<u64>,
+    /// Whether this program takes a per-sequence `lengths: [batch]` i32
+    /// input after the tokens (prefill entries; manifest key `lengths`).
+    /// Length-aware entries stop each sequence at its true end and accept a
+    /// resume state for chunked prefill — see DESIGN.md §6. Absent/false
+    /// for AOT exports, whose graphs have a fixed input arity.
+    pub takes_lengths: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -153,6 +159,10 @@ impl Manifest {
                         .get("peak_memory_bytes")
                         .and_then(|v| v.as_f64())
                         .map(|v| v as u64),
+                    takes_lengths: h
+                        .get("lengths")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
                 };
                 hlo.insert(tag.clone(), entry);
             }

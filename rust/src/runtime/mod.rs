@@ -52,6 +52,16 @@ use crate::reduction::policy::PolicySpec;
 pub use tensor::{HostTensor, TensorData};
 pub use weights::Weights;
 
+/// Decode-frame idle-lane sentinel token. A lane whose input token is
+/// `IDLE_LANE` holds no sequence this step: interpreting backends skip its
+/// model math entirely (state untouched, logits zero) instead of decoding a
+/// phantom token. Deliberately distinct from PAD, which is a *real*
+/// vocabulary id (0) that a prompt may legitimately contain — conflating
+/// the two is exactly the bug the length-aware prefill path fixed
+/// (DESIGN.md §6). Engines only emit it when the backend is length-aware
+/// ([`Backend::interprets_lengths`]); AOT frames keep decoding PAD.
+pub const IDLE_LANE: i32 = -1;
+
 /// What a compiled program computes. Mirrors `HloEntry::kind`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ProgramKind {
@@ -84,6 +94,14 @@ pub struct ProgramSpec {
     /// lowered HLO — which is why overrides are guarded by
     /// [`Backend::interprets_policies`].
     pub policy: Option<PolicySpec>,
+    /// Whether this program takes a per-sequence `lengths: [batch]` i32
+    /// input after the tokens (prefill programs only; DESIGN.md §6). When
+    /// set, the backend stops each sequence's conv window + scan at its
+    /// true end, takes last-logits at the true last token, and accepts a
+    /// resume state pair `(conv0, ssm0)` for chunked prefill. Resolved from
+    /// the manifest entry's `lengths` flag; only interpreting backends
+    /// ([`Backend::interprets_lengths`]) may compile such an entry.
+    pub takes_lengths: bool,
     /// Path to the AOT-lowered HLO text (used by the pjrt backend only).
     pub hlo_path: PathBuf,
     /// Owning model: dims + param layout contract.
@@ -111,6 +129,7 @@ impl ProgramSpec {
             out_len: entry.out_len,
             plan: entry.plan.clone(),
             policy,
+            takes_lengths: entry.takes_lengths,
             hlo_path: man.path(&entry.file),
             model: model.clone(),
         })
@@ -165,6 +184,17 @@ pub trait Backend: Send + Sync {
     fn interprets_policies(&self) -> bool {
         false
     }
+
+    /// Whether this backend honours the per-sequence `lengths` input on
+    /// prefill programs ([`ProgramSpec::takes_lengths`]) and the
+    /// [`IDLE_LANE`] sentinel on decode frames. Interpreters return true;
+    /// AOT backends keep the default false — their graphs have a fixed
+    /// input arity and scan every frame position unconditionally, so a
+    /// lengths-marked entry must be rejected rather than silently padded
+    /// back into the PAD-pollution bug (DESIGN.md §6).
+    fn interprets_lengths(&self) -> bool {
+        false
+    }
 }
 
 /// Front-end owned by callers: a boxed backend plus a compile cache keyed by
@@ -213,6 +243,12 @@ impl Runtime {
         self.backend.platform()
     }
 
+    /// Whether the active backend honours per-sequence prefill lengths and
+    /// the [`IDLE_LANE`] decode sentinel (see [`Backend::interprets_lengths`]).
+    pub fn interprets_lengths(&self) -> bool {
+        self.backend.interprets_lengths()
+    }
+
     /// Compile (cached) the executable for one manifest entry of `model`,
     /// with the entry's own (manifest-resolved) reduction policy.
     pub fn load_entry(
@@ -237,14 +273,29 @@ impl Runtime {
         entry: &HloEntry,
         policy: Option<&PolicySpec>,
     ) -> Result<Arc<dyn Executable>> {
+        // The manifest root disambiguates same-named models/entries loaded
+        // from different manifests through one Runtime (two fixtures in one
+        // test, two artifact dirs in one process): without it, the second
+        // manifest would silently execute the first one's cached program —
+        // and its frame geometry.
         let key = match policy {
-            Some(p) => format!("{}/{}#{}", model.name, entry.tag, p.to_variant()),
-            None => format!("{}/{}", model.name, entry.tag),
+            Some(p) => {
+                format!("{}::{}/{}#{}", man.root.display(), model.name, entry.tag, p.to_variant())
+            }
+            None => format!("{}::{}/{}", man.root.display(), model.name, entry.tag),
         };
         if let Some(e) = self.cache.borrow().get(&key) {
             return Ok(Arc::clone(e));
         }
         let mut spec = ProgramSpec::from_entry(man, model, entry)?;
+        ensure!(
+            !spec.takes_lengths || self.backend.interprets_lengths(),
+            "backend {:?} executes AOT-lowered graphs with a fixed input arity: entry {} \
+             declares a per-sequence `lengths` input, which only run-time interpreting \
+             backends honour (re-export the entry without `lengths` for this backend)",
+            self.backend.platform(),
+            entry.tag
+        );
         if let Some(p) = policy {
             ensure!(
                 spec.plan.is_some(),

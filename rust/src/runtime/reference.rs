@@ -59,6 +59,19 @@
 //! Surviving original positions are reported through the `kept` output
 //! exactly like the AOT-lowered graphs do.
 //!
+//! ## Variable-length prefill
+//!
+//! Prefill programs are **length-aware** (DESIGN.md §6): an optional
+//! per-sequence `lengths: [b]` input stops each sequence's conv window and
+//! scan at its true end (frame padding is never scanned — PAD is an
+//! ordinary vocab id, not a semantic marker), takes the logits row at the
+//! true last token, and re-solves the reduction schedule on the true
+//! length. An optional `(conv0, ssm0)` resume pair makes the forward
+//! chunkable: the engine splits prompts longer than the frame into
+//! frame-sized chunks and carries the O(1) recurrent state across them.
+//! Decode frames honour the [`IDLE_LANE`] sentinel: unoccupied lanes are
+//! skipped instead of decoding a phantom token.
+//!
 //! ## Parameter layout
 //!
 //! The backend binds weights **by name** from the manifest's param list
@@ -68,19 +81,20 @@
 //! layout and belong to the `pjrt` backend.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::manifest::{ModelEntry, Plan};
 use crate::reduction::policy::{self, ReductionPolicy};
+use crate::reduction::{solve_schedule, ModelDims};
 use crate::runtime::{
-    Backend, DeviceWeights, Executable, HostTensor, ProgramKind, ProgramSpec, Weights,
+    Backend, DeviceWeights, Executable, HostTensor, ProgramKind, ProgramSpec, Weights, IDLE_LANE,
 };
 
 use super::kernels::{self, rmsnorm, sigmoid, silu, KernelMode};
 use super::pool;
-use super::tensor::{lane_chunks_mut, LaneChunkMut};
+use super::tensor::{lane_chunks_mut, read_lane, LaneChunkMut};
 
 /// Conv window width; matches the d_conv=4 convention used across the repo.
 pub const D_CONV: usize = 4;
@@ -132,7 +146,11 @@ impl Backend for ReferenceBackend {
             (Some(_), None) => Some(policy::legacy_default()),
             _ => None,
         };
-        Ok(Arc::new(ReferenceExecutable { spec: spec.clone(), policy }))
+        Ok(Arc::new(ReferenceExecutable {
+            spec: spec.clone(),
+            policy,
+            plans: Mutex::new(HashMap::new()),
+        }))
     }
 
     fn upload_weights(&self, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights> {
@@ -146,6 +164,10 @@ impl Backend for ReferenceBackend {
     fn interprets_policies(&self) -> bool {
         true // reduction policies are dispatched per plan boundary at run time
     }
+
+    fn interprets_lengths(&self) -> bool {
+        true // per-sequence prefill lengths + the IDLE_LANE decode sentinel
+    }
 }
 
 pub struct ReferenceExecutable {
@@ -153,6 +175,13 @@ pub struct ReferenceExecutable {
     /// Reduction algorithm dispatched at the plan's layer boundaries
     /// (None for dense programs). See DESIGN.md §10.
     policy: Option<Box<dyn ReductionPolicy>>,
+    /// Runtime-solved schedule plans keyed by true sequence length
+    /// (DESIGN.md §6/§10): the exported plan only fits `spec.seq_len`, so a
+    /// length-aware prefill re-solves the same (locations, target-ratio)
+    /// schedule on each distinct true length it serves. `None` = the length
+    /// is too short for the solver to hit the ratio within tolerance, and
+    /// the sequence runs dense instead of being refused.
+    plans: Mutex<HashMap<usize, Option<Arc<Plan>>>>,
 }
 
 impl Executable for ReferenceExecutable {
@@ -186,6 +215,46 @@ impl Executable for ReferenceExecutable {
 }
 
 impl ReferenceExecutable {
+    /// The reduction schedule for a sequence of true length `len`
+    /// (DESIGN.md §6/§10). Dense programs return `None`. For reduced
+    /// programs, a full-frame sequence uses the exported plan verbatim
+    /// (bit-compatibility with the fixed-length path); any other length
+    /// re-solves the same `(locations, target ratio)` schedule on the true
+    /// length — the target is the variant's ratio, so a short prompt
+    /// prefilled in a padded frame gets the *identical* plan an exact-length
+    /// export would carry. For the legacy no-policy case (a hand-built spec
+    /// with a plan but no reduction block) the variant ratio does not
+    /// exist; the exported plan's *achieved* `flops_reduction` stands in as
+    /// the target — a documented approximation (the original solve target
+    /// is not recorded in the manifest), within solver tolerance of it by
+    /// construction. Lengths the solver cannot reduce within tolerance (a
+    /// 2-token prompt cannot shed 20% of its FLOPs) fall back to dense
+    /// rather than failing the request. Solutions are cached per length.
+    fn plan_for_len(&self, len: usize) -> Option<Arc<Plan>> {
+        let base = self.spec.plan.as_ref()?;
+        let mut cache = self.plans.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(hit) = cache.get(&len) {
+            return hit.clone();
+        }
+        let solved = if len == base.seq_len {
+            Some(Arc::new(base.clone()))
+        } else {
+            let dims = ModelDims::from_manifest(&self.spec.model);
+            let ratio = self.spec.policy.as_ref().map(|p| p.ratio).unwrap_or(base.flops_reduction);
+            solve_schedule(&dims, len, &base.locations, ratio).ok().map(|sp| {
+                Arc::new(Plan {
+                    seq_len: sp.seq_len,
+                    locations: sp.locations,
+                    seg_lens: sp.seg_lens,
+                    removed: sp.removed,
+                    flops_reduction: sp.flops_reduction,
+                })
+            })
+        };
+        cache.insert(len, solved.clone());
+        solved
+    }
+
     fn eval(&self, m: &RefModel, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let spec = &self.spec;
         ensure!(inputs.len() == 1, "eval executable expects one (tokens) input");
@@ -200,8 +269,13 @@ impl ReferenceExecutable {
         // Sequences are independent: fan the batch out across the worker
         // pool (ordered collection keeps output identity at any width).
         let seqs = crate::util::pool::par_map(b, pool::workers().min(b.max(1)), |bi| {
-            let fwd =
-                forward(m, &toks[bi * l..(bi + 1) * l], spec.plan.as_ref(), self.policy.as_deref())?;
+            let fwd = forward(
+                m,
+                &toks[bi * l..(bi + 1) * l],
+                spec.plan.as_ref(),
+                self.policy.as_deref(),
+                None,
+            )?;
             ensure!(
                 fwd.kept.len() == out_len,
                 "{}: reduction left {} surviving positions, spec says {out_len}",
@@ -227,9 +301,27 @@ impl ReferenceExecutable {
         ])
     }
 
+    /// Prefill one frame: `(tokens[b, l][, lengths[b][, conv0, ssm0]])` →
+    /// `(logits[b, v], conv, ssm)` (DESIGN.md §6).
+    ///
+    /// * `lengths[i]` is sequence `i`'s true token count within the frame
+    ///   (`0..=l`). The conv window and scan stop at that true end, the
+    ///   logits row is taken at the true last token, and the reduction
+    ///   schedule is re-solved on the true length ([`Self::plan_for_len`]).
+    ///   A length of 0 marks an idle lane: its state/logits outputs are
+    ///   zero and the caller ignores them. Without a lengths input every
+    ///   sequence spans the full frame (the legacy single-input contract —
+    ///   AOT parity, and what eval-style direct callers use).
+    /// * `conv0`/`ssm0` (frame-shaped, as returned by this call) resume a
+    ///   chunked prefill: each lane's per-layer conv tail + scan state
+    ///   carry in from the previous chunk instead of starting at zero.
     fn prefill(&self, m: &RefModel, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let spec = &self.spec;
-        ensure!(inputs.len() == 1, "prefill executable expects one (tokens) input");
+        ensure!(
+            matches!(inputs.len(), 1 | 2 | 4),
+            "prefill executable expects (tokens[, lengths[, conv0, ssm0]]), got {} inputs",
+            inputs.len()
+        );
         let toks = inputs[0].as_i32()?;
         let (b, l, v) = (spec.batch, spec.seq_len, m.vocab);
         ensure!(
@@ -239,27 +331,76 @@ impl ReferenceExecutable {
         );
         let (conv_shape, ssm_shape) = crate::runtime::decode_state_shapes(&self.spec.model, b);
         let k1 = D_CONV - 1;
+        let conv_row = m.conv_ch * k1;
+        let ssm_row = m.di * m.n;
+        let lengths: Vec<usize> = if inputs.len() >= 2 {
+            ensure!(inputs[1].shape == vec![b], "lengths shape {:?} != [{b}]", inputs[1].shape);
+            let lv = inputs[1].as_i32()?;
+            for &x in lv {
+                ensure!(
+                    x >= 0 && (x as usize) <= l,
+                    "sequence length {x} outside the prefill frame 0..={l}"
+                );
+            }
+            lv.iter().map(|&x| x as usize).collect()
+        } else {
+            vec![l; b]
+        };
+        let init = if inputs.len() == 4 {
+            ensure!(
+                inputs[2].shape == conv_shape,
+                "resume conv state shape {:?} != {:?}",
+                inputs[2].shape,
+                conv_shape
+            );
+            ensure!(
+                inputs[3].shape == ssm_shape,
+                "resume ssm state shape {:?} != {:?}",
+                inputs[3].shape,
+                ssm_shape
+            );
+            Some((inputs[2].as_f32()?, inputs[3].as_f32()?))
+        } else {
+            None
+        };
         let mode = kernels::mode();
         let seqs = crate::util::pool::par_map(b, pool::workers().min(b.max(1)), |bi| {
-            let fwd =
-                forward(m, &toks[bi * l..(bi + 1) * l], spec.plan.as_ref(), self.policy.as_deref())?;
+            let len = lengths[bi];
+            if len == 0 {
+                return Ok(None); // idle lane: zero state + logits, ignored
+            }
+            let plan = self.plan_for_len(len);
+            let init_seq = init.map(|(cf, sf)| {
+                let mut c = vec![0.0f32; m.n_layer * conv_row];
+                read_lane(cf, m.n_layer, b, conv_row, bi, &mut c);
+                let mut s = vec![0.0f32; m.n_layer * ssm_row];
+                read_lane(sf, m.n_layer, b, ssm_row, bi, &mut s);
+                (c, s)
+            });
+            let fwd = forward(
+                m,
+                &toks[bi * l..bi * l + len],
+                plan.as_deref(),
+                self.policy.as_deref(),
+                init_seq.as_ref().map(|(c, s)| (c.as_slice(), s.as_slice())),
+            )?;
             ensure!(!fwd.kept.is_empty(), "prefill reduced the sequence to nothing");
             let last = fwd.kept.len() - 1;
             let mut logits = vec![0.0f32; v];
             head_rows(m, mode, &fwd.xs[last * m.d..(last + 1) * m.d], &mut logits);
-            Ok((fwd.states, logits))
+            Ok(Some((fwd.states, logits)))
         });
         let mut logits = vec![0.0f32; b * v];
-        let mut conv = vec![0.0f32; m.n_layer * b * m.conv_ch * k1];
-        let mut ssm = vec![0.0f32; m.n_layer * b * m.di * m.n];
+        let mut conv = vec![0.0f32; m.n_layer * b * conv_row];
+        let mut ssm = vec![0.0f32; m.n_layer * b * ssm_row];
         for (bi, seq) in seqs.into_iter().enumerate() {
-            let (states, lg) = seq?;
+            let Some((states, lg)) = seq? else { continue };
             logits[bi * v..(bi + 1) * v].copy_from_slice(&lg);
             for (li, (tail, h)) in states.iter().enumerate() {
-                let cstart = (li * b + bi) * m.conv_ch * k1;
-                conv[cstart..cstart + m.conv_ch * k1].copy_from_slice(tail);
-                let sstart = (li * b + bi) * m.di * m.n;
-                ssm[sstart..sstart + m.di * m.n].copy_from_slice(h);
+                let cstart = (li * b + bi) * conv_row;
+                conv[cstart..cstart + conv_row].copy_from_slice(tail);
+                let sstart = (li * b + bi) * ssm_row;
+                ssm[sstart..sstart + ssm_row].copy_from_slice(h);
             }
         }
         Ok(vec![
@@ -294,9 +435,15 @@ impl ReferenceExecutable {
             ssm_shape
         );
         // Validate every lane before any state mutates, so a bad token
-        // cannot leave a half-advanced frame behind.
+        // cannot leave a half-advanced frame behind. IDLE_LANE marks a lane
+        // with no resident sequence: it is skipped entirely by decode_lanes
+        // (state untouched, logits zero) instead of decoding a phantom
+        // token through the full model.
         for &t in tokens {
-            ensure!(t >= 0 && (t as usize) < v, "decode token {t} outside vocab {v}");
+            ensure!(
+                t == IDLE_LANE || (t >= 0 && (t as usize) < v),
+                "decode token {t} outside vocab {v}"
+            );
         }
         let mut conv = inputs[1].as_f32()?.to_vec();
         let mut ssm = inputs[2].as_f32()?.to_vec();
@@ -659,9 +806,37 @@ fn layer_block(
     kernels::outproj_acc(y, layer.out_proj, m.d, xs, nt);
 }
 
+/// Maximal runs of non-idle lanes in a decode chunk: the sub-ranges the
+/// fused path feeds through the batch kernels. A fully-occupied chunk is a
+/// single run covering every lane — the pre-skip code path, verbatim.
+fn active_runs(toks: &[i32]) -> Vec<std::ops::Range<usize>> {
+    let mut runs = Vec::new();
+    let mut start = None;
+    for (i, &t) in toks.iter().enumerate() {
+        if t == IDLE_LANE {
+            if let Some(s) = start.take() {
+                runs.push(s..i);
+            }
+        } else if start.is_none() {
+            start = Some(i);
+        }
+    }
+    if let Some(s) = start {
+        runs.push(s..toks.len());
+    }
+    runs
+}
+
 /// Advance `nt` decode lanes one token each. Every lane's per-layer conv
 /// window and scan state live in the chunk views; logits land in `lg`
 /// (`nt × vocab`). Tokens are pre-validated by the caller.
+///
+/// Lanes whose token is [`IDLE_LANE`] hold no sequence and are skipped
+/// outright: their state stays untouched and their logits row stays zero.
+/// Because the batch kernels are per-lane independent (pinned by the
+/// no-crosstalk kernel tests), skipping an idle lane is bit-invisible to
+/// every occupied lane — it only removes the wasted full-model decode of a
+/// phantom token that idle frame slots used to pay each step.
 fn decode_lanes(
     m: &RefModel,
     mode: KernelMode,
@@ -683,6 +858,9 @@ fn decode_lanes(
             let mut scratch = Scratch::new(m);
             let mut xn = vec![0.0f32; d];
             for (t, &tok) in toks.iter().enumerate() {
+                if tok == IDLE_LANE {
+                    continue;
+                }
                 let mut x: Vec<f32> = m.embed[tok as usize * d..(tok as usize + 1) * d].to_vec();
                 for li in 0..m.n_layer {
                     let tails = conv.layer_mut(li);
@@ -700,25 +878,37 @@ fn decode_lanes(
             }
         }
         KernelMode::Fused => {
-            let mut s = BlockScratch::new(m, nt);
+            let runs = active_runs(toks);
+            let Some(max_run) = runs.iter().map(|r| r.len()).max() else {
+                return; // every lane idle: nothing to decode
+            };
+            let mut s = BlockScratch::new(m, max_run);
             let mut xs = vec![0.0f32; nt * d];
-            for (t, &tok) in toks.iter().enumerate() {
-                xs[t * d..(t + 1) * d]
-                    .copy_from_slice(&m.embed[tok as usize * d..(tok as usize + 1) * d]);
+            for r in &runs {
+                for t in r.clone() {
+                    let tok = toks[t] as usize;
+                    xs[t * d..(t + 1) * d].copy_from_slice(&m.embed[tok * d..(tok + 1) * d]);
+                }
             }
             for li in 0..m.n_layer {
-                layer_block(
-                    m,
-                    li,
-                    BlockKind::Batch,
-                    &mut xs,
-                    conv.layer_mut(li),
-                    ssm.layer_mut(li),
-                    &mut s,
-                    nt,
-                );
+                let tails = conv.layer_mut(li);
+                let hs = ssm.layer_mut(li);
+                for r in &runs {
+                    layer_block(
+                        m,
+                        li,
+                        BlockKind::Batch,
+                        &mut xs[r.start * d..r.end * d],
+                        &mut tails[r.start * conv_row..r.end * conv_row],
+                        &mut hs[r.start * ssm_row..r.end * ssm_row],
+                        &mut s,
+                        r.len(),
+                    );
+                }
             }
-            head_rows(m, mode, &xs, lg);
+            for r in &runs {
+                head_rows(m, mode, &xs[r.start * d..r.end * d], &mut lg[r.start * v..r.end * v]);
+            }
         }
     }
 }
@@ -794,6 +984,15 @@ enum FwdScratch {
 /// set shrinks to `seg_lens[i+1]` rows, `kept` tracks surviving original
 /// positions, and `merged` carries per-row fold weights across sites.
 ///
+/// `init` makes the forward **resumable** (chunked prefill, DESIGN.md §6):
+/// per-layer initial `(conv tails, scan states)` as contiguous
+/// `[n_layer, conv_row]` / `[n_layer, ssm_row]` slices, carried in from a
+/// previous chunk instead of starting at zero. Because the conv window and
+/// the scan recurrence carry token-sequentially (and the residual stream is
+/// per-token), splitting a dense sequence into chunks and resuming is
+/// bit-identical to one uninterrupted forward — the same invariance the
+/// block-boundary kernel tests pin within a call.
+///
 /// In fused mode each layer walks the live set in [`kernels::TOKEN_BLOCK`]
 /// chunks through the staged kernels; the conv window and scan state carry
 /// across chunks, so blocking is invisible in the results.
@@ -802,9 +1001,23 @@ fn forward(
     tokens: &[i32],
     plan: Option<&Plan>,
     policy: Option<&dyn ReductionPolicy>,
+    init: Option<(&[f32], &[f32])>,
 ) -> Result<ForwardOut> {
     let d = m.d;
     ensure!(!tokens.is_empty(), "empty token sequence");
+    let k1 = D_CONV - 1;
+    let conv_row = m.conv_ch * k1;
+    let ssm_row = m.di * m.n;
+    if let Some((c0, h0)) = init {
+        ensure!(
+            c0.len() == m.n_layer * conv_row && h0.len() == m.n_layer * ssm_row,
+            "resume state sized [{}, {}], expected [{}, {}]",
+            c0.len(),
+            h0.len(),
+            m.n_layer * conv_row,
+            m.n_layer * ssm_row
+        );
+    }
     let mut xs: Vec<f32> = Vec::with_capacity(tokens.len() * d);
     for &t in tokens {
         ensure!(t >= 0 && (t as usize) < m.vocab, "token {t} outside vocab {}", m.vocab);
@@ -819,10 +1032,15 @@ fn forward(
             FwdScratch::Fused(BlockScratch::new(m, kernels::TOKEN_BLOCK.min(tokens.len())))
         }
     };
-    let k1 = D_CONV - 1;
     for l in 0..m.n_layer {
-        let mut tail = vec![0.0f32; m.conv_ch * k1];
-        let mut h = vec![0.0f32; m.di * m.n];
+        let mut tail = match init {
+            Some((c0, _)) => c0[l * conv_row..(l + 1) * conv_row].to_vec(),
+            None => vec![0.0f32; conv_row],
+        };
+        let mut h = match init {
+            Some((_, h0)) => h0[l * ssm_row..(l + 1) * ssm_row].to_vec(),
+            None => vec![0.0f32; ssm_row],
+        };
         let live = kept.len();
         match &mut scratch {
             FwdScratch::Scalar(s) => {

@@ -5,7 +5,10 @@
 //!   moment they hit `gen_tokens`, while long ones keep decoding;
 //! * the scheduler's responses are bit-identical to the lock-step
 //!   `Engine::serve_batch` path for identical inputs, on the dense and the
-//!   token-reduced lane alike;
+//!   token-reduced lane alike — on a **length-diverse** trace including
+//!   prompts longer than the prefill frame (chunked prefill, DESIGN.md §6);
+//! * a prompt of 3× the prefill frame serves end to end through the
+//!   continuous scheduler without truncation;
 //! * with mixed generation lengths a 64-request trace completes in strictly
 //!   fewer decode-frame executions than lock-step (the acceptance number
 //!   reported in BENCH_coordinator.json).
@@ -109,15 +112,17 @@ fn continuous_matches_lockstep_bit_for_bit() {
 
     for variant in ["dense", "utrc@0.2"] {
         let engine = Engine::new(&rt, &man, &model, &w, variant).unwrap();
-        // More requests than decode lanes, mixed prompt + generation
-        // lengths, including a 1-token request that never takes a slot.
+        // More requests than decode lanes; a length-diverse trace: short,
+        // odd-length, full-frame, AND longer-than-frame prompts (the last
+        // two run as chunked prefill), plus a 1-token-generation request
+        // that never takes a slot.
         let gens = [5usize, 1, 8, 3, 6];
+        let lens = [plen, plen / 4, 3 * plen, plen / 2 + 1, 2 * plen];
         let reqs: Vec<Request> = gens
             .iter()
+            .zip(lens)
             .enumerate()
-            .map(|(i, &g)| {
-                req(i as u64, if i % 2 == 0 { plen } else { plen / 4 }, g, vocab)
-            })
+            .map(|(i, (&g, l))| req(i as u64, l, g, vocab))
             .collect();
 
         // Lock-step reference: arrival-order batches.
@@ -168,12 +173,13 @@ fn mixed_gen_trace_uses_fewer_decode_steps_than_lockstep() {
     let mut rng = Rng::new(3);
     let reqs: Vec<Request> = (0..64)
         .map(|i| {
-            req(
-                i as u64,
-                if rng.f64() < 0.5 { plen } else { plen / 4 },
-                1 + rng.below(16),
-                vocab,
-            )
+            let l = match rng.below(4) {
+                0 => plen,
+                1 => plen / 4,
+                2 => 1 + rng.below(plen),
+                _ => plen + 1 + rng.below(2 * plen), // chunked prefill
+            };
+            req(i as u64, l, 1 + rng.below(16), vocab)
         })
         .collect();
 
@@ -209,5 +215,44 @@ fn mixed_gen_trace_uses_fewer_decode_steps_than_lockstep() {
     // No state leaked.
     assert_eq!(sched.store().live(), 0);
     assert_eq!(sched.completed, 64);
+    cleanup(&dir);
+}
+
+/// Acceptance: a prompt of 3× the prefill frame is served end to end
+/// through the continuous scheduler — chunked prefill, no truncation — on
+/// the dense and a reduced lane, alongside ordinary-length traffic.
+#[test]
+fn three_frame_prompt_serves_end_to_end_without_truncation() {
+    let (dir, man) = fixture("long");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+
+    for variant in ["dense", "unified@0.2"] {
+        let engine = Engine::new(&rt, &man, &model, &w, variant).unwrap();
+        assert!(engine.length_aware, "fixture prefill entries must be length-aware");
+        let reqs =
+            vec![req(0, 3 * plen, 6, vocab), req(1, plen / 2, 4, vocab), req(2, plen, 3, vocab)];
+
+        let mut sched = Scheduler::new(&engine);
+        let resps = sched.run(reqs.clone()).unwrap();
+        assert_eq!(resps.len(), 3, "{variant}: lost responses");
+        let by = by_id(&resps);
+        for r in &reqs {
+            assert_eq!(by[&r.id].len(), r.gen_tokens, "{variant}: wrong generation length");
+        }
+        let long_resp = resps.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(long_resp.prompt_tokens, 3 * plen, "{variant}: 3-frame prompt truncated");
+        assert_eq!(sched.store().live(), 0, "{variant}: slots leaked");
+
+        // The lock-step baseline shares the chunked prefill, so it must
+        // produce the identical tokens for the same requests.
+        let lock = engine.serve_batch(&reqs[..engine.max_batch().min(reqs.len())]).unwrap();
+        for l in &lock {
+            assert_eq!(by[&l.id], l.generated, "{variant}: lock-step diverged on request {}", l.id);
+        }
+    }
     cleanup(&dir);
 }

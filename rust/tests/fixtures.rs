@@ -78,6 +78,13 @@ fn fixture_roundtrips_through_loaders() {
         assert!(m.find_eval("utrc", 0.20, None, None, None, None).is_ok());
         assert!(m.prefill_entry("dense", 0.0).is_ok());
         assert!(m.prefill_entry("utrc", 0.20).is_ok());
+        // Prefill entries are length-aware (DESIGN.md §6): the serving
+        // engine relies on the manifest flag to enable true-length prefill
+        // and chunking; eval/decode entries stay fixed-arity.
+        assert!(m.prefill_entry("dense", 0.0).unwrap().takes_lengths);
+        assert!(m.prefill_entry("utrc", 0.20).unwrap().takes_lengths);
+        assert!(!m.decode_entry().unwrap().takes_lengths);
+        assert!(!m.find_eval("dense", 0.0, None, None, None, None).unwrap().takes_lengths);
     }
     cleanup(&dir);
 }
@@ -183,7 +190,7 @@ fn coordinator_prefill_decode_loop_end_to_end() {
         }
     }
     for (bi, b) in batchers.iter_mut().enumerate() {
-        while let Some(batch) = b.drain() {
+        for batch in b.drain() {
             let responses = engines[bi].serve_batch(&batch).unwrap();
             for resp in &responses {
                 assert_eq!(resp.generated.len(), gen_tokens);

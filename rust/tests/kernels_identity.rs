@@ -244,3 +244,87 @@ fn staggered_retire_has_no_lane_crosstalk_at_any_thread_count() {
     set_exec(KernelMode::Fused, 1);
     cleanup(&dir);
 }
+
+/// Idle-lane skip pin (DESIGN.md §6): on a half-empty decode frame, lanes
+/// marked with the IDLE_LANE sentinel are skipped entirely — and the
+/// occupied lanes' logits and states must be **bit-identical** to the
+/// legacy behaviour of decoding PAD through the idle lanes, in both kernel
+/// modes at every thread count 1..=4 (idle lanes split worker chunks into
+/// ragged active runs, which is exactly what this pins).
+#[test]
+fn idle_lane_skip_is_invisible_to_occupied_lanes() {
+    use tor_ssm::runtime::tensor::{read_lane, write_lane};
+    use tor_ssm::runtime::IDLE_LANE;
+
+    let _g = lock();
+    let dir = std::env::temp_dir().join(format!("tor-ssm-kid-{}-idle-wide", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = FixtureSpec { prefill_batch: 4, ..FixtureSpec::default() };
+    let man = generate(&dir, &spec).expect("wide fixture generation");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba2").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let engine = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+    assert_eq!(engine.decode_batch, 4);
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    let (nl, conv_row, ssm_row) = engine.state_dims();
+
+    set_exec(KernelMode::Fused, 1);
+    let (seqs, _) = engine.prefill(&[req(0, plen, 2, vocab), req(1, plen / 2, 2, vocab)]).unwrap();
+
+    // Occupied lanes 0 and 2; lanes 1 and 3 idle (zero state). The baseline
+    // frame decodes PAD through the idle lanes (the pre-skip semantics);
+    // the skip frame marks them IDLE_LANE.
+    let occupied = [(0usize, &seqs[0]), (2usize, &seqs[1])];
+    let build = |idle_tok: i32| {
+        let mut f = engine.new_frame();
+        f.tokens = vec![idle_tok; engine.decode_batch];
+        for &(lane, s) in &occupied {
+            f.tokens[lane] = 7 + lane as i32;
+            write_lane(&mut f.conv, nl, engine.decode_batch, conv_row, lane, &s.conv);
+            write_lane(&mut f.ssm, nl, engine.decode_batch, ssm_row, lane, &s.ssm);
+        }
+        f
+    };
+    let lane_state = |f: &tor_ssm::coordinator::engine::DecodeFrame, lane: usize| {
+        let mut conv = vec![0.0f32; nl * conv_row];
+        let mut ssm = vec![0.0f32; nl * ssm_row];
+        read_lane(&f.conv, nl, engine.decode_batch, conv_row, lane, &mut conv);
+        read_lane(&f.ssm, nl, engine.decode_batch, ssm_row, lane, &mut ssm);
+        (conv, ssm)
+    };
+
+    for mode in [KernelMode::Scalar, KernelMode::Fused] {
+        for threads in 1..=4usize {
+            set_exec(mode, threads);
+            let mut pad_frame = build(tor_ssm::tokenizer::PAD as i32);
+            let pad_logits = engine.decode_step(&mut pad_frame).unwrap();
+            let mut idle_frame = build(IDLE_LANE);
+            let idle_logits = engine.decode_step(&mut idle_frame).unwrap();
+            for &(lane, _) in &occupied {
+                assert_eq!(
+                    pad_logits[lane * vocab..(lane + 1) * vocab],
+                    idle_logits[lane * vocab..(lane + 1) * vocab],
+                    "{} kernels × {threads} threads: lane {lane} logits perturbed by idle skip",
+                    mode.name()
+                );
+                assert_eq!(
+                    lane_state(&pad_frame, lane),
+                    lane_state(&idle_frame, lane),
+                    "{} kernels × {threads} threads: lane {lane} state perturbed by idle skip",
+                    mode.name()
+                );
+            }
+            // Skipped lanes really are skipped: state stays zero, logits
+            // stay zero (the PAD baseline computes garbage there instead).
+            for lane in [1usize, 3] {
+                let (conv, ssm) = lane_state(&idle_frame, lane);
+                assert!(conv.iter().all(|&x| x == 0.0) && ssm.iter().all(|&x| x == 0.0));
+                assert!(idle_logits[lane * vocab..(lane + 1) * vocab].iter().all(|&x| x == 0.0));
+            }
+        }
+    }
+    set_exec(KernelMode::Fused, 1);
+    cleanup(&dir);
+}

@@ -1,0 +1,231 @@
+//! Prefill padding-invariance suite — the regression fence for the
+//! PAD-pollution bug (DESIGN.md §6).
+//!
+//! An SSM integrates *every* scanned position into its recurrent state, so
+//! the old prefill — right-pad each prompt to the frame and scan the PAD
+//! tail like real tokens — polluted every short prompt's conv/ssm state,
+//! sampled its first token from logits at a PAD position, and fed PAD rows
+//! to every reduction policy's importance/merge metrics. With per-sequence
+//! lengths threaded to the backend, a prompt's `PrefilledSeq` (conv, ssm,
+//! logits) must be **bit-identical** whether it is prefilled:
+//!
+//! * alone or in a mixed-length batch (batch-composition independence);
+//! * in a frame with any amount of trailing padding, or in a frame of
+//!   exactly its own length (padding invariance) — for dense AND all four
+//!   reduction policies at two ratios;
+//! * with literal 0 tokens (the PAD vocab id) inside the prompt — PAD is an
+//!   ordinary word, not a semantic marker;
+//! * in one wide frame or as frame-sized chunks with carried state
+//!   (chunked-prefill identity on the dense path).
+//!
+//! Engines that cannot be length-aware (AOT entries without a `lengths`
+//! input) must refuse over-long prompts loudly instead of truncating.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+
+use tor_ssm::coordinator::engine::{Engine, PrefilledSeq};
+use tor_ssm::coordinator::Request;
+use tor_ssm::fixtures::{generate, FixtureSpec};
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::{Runtime, Weights};
+
+/// Unique per-test fixture dir with a custom prefill frame length.
+fn fixture(tag: &str, prefill_seq_len: usize) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!("tor-ssm-pinv-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = FixtureSpec { prefill_seq_len, ..FixtureSpec::default() };
+    let man = generate(&dir, &spec).expect("fixture generation");
+    (dir, man)
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn rq(id: u64, prompt: Vec<i32>) -> Request {
+    Request { id, prompt, gen_tokens: 1, variant: String::new(), arrived_us: 0 }
+}
+
+fn prompt(len: usize, salt: usize, vocab: usize) -> Vec<i32> {
+    (0..len).map(|t| ((t * 7 + salt * 13 + 3) % vocab) as i32).collect()
+}
+
+fn assert_seq_eq(a: &PrefilledSeq, b: &PrefilledSeq, what: &str) {
+    assert_eq!(a.conv, b.conv, "{what}: conv state diverged");
+    assert_eq!(a.ssm, b.ssm, "{what}: ssm state diverged");
+    assert_eq!(a.logits, b.logits, "{what}: last-token logits diverged");
+}
+
+/// Dense + all four policies × two ratios: a 16-token prompt's prefill
+/// result is identical alone, in a mixed-length batch, and in a frame of
+/// exactly 16 tokens (zero padding) — i.e. independent of batch
+/// composition and of the amount of frame padding behind it.
+#[test]
+fn short_prompt_prefill_is_padding_and_batch_invariant() {
+    let (dir_a, man_a) = fixture("pad32", 32); // default frame: 16 PAD slots behind the prompt
+    let (dir_b, man_b) = fixture("pad16", 16); // exact-length frame: no padding at all
+    // The weight streams do not depend on the frame geometry, so the two
+    // fixtures are the same model — that is what makes the comparison
+    // meaningful (and this assert keeps it honest).
+    for blob in ["init_ref-mamba.bin", "init_ref-mamba2.bin"] {
+        assert_eq!(
+            std::fs::read(dir_a.join(blob)).unwrap(),
+            std::fs::read(dir_b.join(blob)).unwrap(),
+            "{blob}: fixtures diverged — frame length leaked into the weight stream"
+        );
+    }
+    let rt = Runtime::reference().unwrap();
+    let variants = [
+        "dense",
+        "unified@0.1",
+        "unified@0.2",
+        "prune@0.1",
+        "prune@0.2",
+        "merge@0.1",
+        "merge@0.2",
+        "random@0.1",
+        "random@0.2",
+    ];
+    for model_name in ["ref-mamba", "ref-mamba2"] {
+        let model_a = man_a.model(model_name).unwrap().clone();
+        let model_b = man_b.model(model_name).unwrap().clone();
+        let w_a = Weights::load_init(&man_a, &model_a).unwrap();
+        let w_b = Weights::load_init(&man_b, &model_b).unwrap();
+        let vocab = model_a.vocab_size;
+        let short = prompt(16, 1, vocab);
+        let full = prompt(32, 2, vocab);
+        for variant in variants {
+            let engine_a = Engine::new(&rt, &man_a, &model_a, &w_a, variant).unwrap();
+            let engine_b = Engine::new(&rt, &man_b, &model_b, &w_b, variant).unwrap();
+            assert!(engine_a.length_aware && engine_b.length_aware);
+
+            let (alone, _) = engine_a.prefill(&[rq(0, short.clone())]).unwrap();
+            let (mixed, _) =
+                engine_a.prefill(&[rq(1, full.clone()), rq(0, short.clone())]).unwrap();
+            let (exact, _) = engine_b.prefill(&[rq(0, short.clone())]).unwrap();
+
+            let what = format!("{model_name}/{variant}");
+            assert_seq_eq(&alone[0], &mixed[1], &format!("{what} (alone vs mixed batch)"));
+            assert_seq_eq(&alone[0], &exact[0], &format!("{what} (padded vs exact frame)"));
+        }
+    }
+    cleanup(&dir_a);
+    cleanup(&dir_b);
+}
+
+/// Regression for PAD = vocab id 0: a prompt *containing* literal 0 tokens
+/// prefills identically in a padded frame (trailing 0-fill behind it) and
+/// in an exact-length frame — legitimate 0 tokens are scanned as ordinary
+/// words while frame padding is never scanned at all.
+#[test]
+fn literal_pad_id_tokens_are_ordinary_vocabulary() {
+    let (dir_a, man_a) = fixture("zeros32", 32);
+    let (dir_b, man_b) = fixture("zeros16", 16);
+    let rt = Runtime::reference().unwrap();
+    let model_a = man_a.model("ref-mamba").unwrap().clone();
+    let model_b = man_b.model("ref-mamba").unwrap().clone();
+    let w_a = Weights::load_init(&man_a, &model_a).unwrap();
+    let w_b = Weights::load_init(&man_b, &model_b).unwrap();
+
+    // 16 tokens, a third of them the PAD id (0), including the last one —
+    // indistinguishable from frame padding by value alone.
+    let mut p = prompt(16, 3, model_a.vocab_size);
+    for i in [0usize, 3, 7, 11, 15] {
+        p[i] = 0;
+    }
+    for variant in ["dense", "unified@0.2"] {
+        let engine_a = Engine::new(&rt, &man_a, &model_a, &w_a, variant).unwrap();
+        let engine_b = Engine::new(&rt, &man_b, &model_b, &w_b, variant).unwrap();
+        let (padded, _) = engine_a.prefill(&[rq(0, p.clone())]).unwrap();
+        let (exact, _) = engine_b.prefill(&[rq(0, p.clone())]).unwrap();
+        assert_seq_eq(&padded[0], &exact[0], &format!("{variant}: prompt with literal 0 tokens"));
+        // The in-prompt zeros are real tokens: dropping them must change
+        // the state (guards against a "trim all zeros" pseudo-fix).
+        let trimmed: Vec<i32> = p.iter().copied().filter(|&t| t != 0).collect();
+        let (t_out, _) = engine_a.prefill(&[rq(1, trimmed)]).unwrap();
+        assert_ne!(
+            t_out[0].ssm,
+            padded[0].ssm,
+            "{variant}: stripping in-prompt 0 tokens should change the state"
+        );
+    }
+    cleanup(&dir_a);
+    cleanup(&dir_b);
+}
+
+/// Acceptance: chunked prefill at chunk sizes {prefill_len, full} is
+/// bit-identical on the dense path — a 96-token prompt through a 32-token
+/// frame (3 carried chunks) equals the same prompt through a 96-token
+/// frame (1 chunk), and likewise for a ragged 80-token prompt (32+32+16).
+#[test]
+fn chunked_prefill_matches_single_frame_dense() {
+    let (dir_a, man_a) = fixture("chunk32", 32);
+    let (dir_c, man_c) = fixture("chunk96", 96);
+    let rt = Runtime::reference().unwrap();
+    for model_name in ["ref-mamba", "ref-mamba2"] {
+        let model_a = man_a.model(model_name).unwrap().clone();
+        let model_c = man_c.model(model_name).unwrap().clone();
+        let w_a = Weights::load_init(&man_a, &model_a).unwrap();
+        let w_c = Weights::load_init(&man_c, &model_c).unwrap();
+        let vocab = model_a.vocab_size;
+        let engine_a = Engine::new(&rt, &man_a, &model_a, &w_a, "dense").unwrap();
+        let engine_c = Engine::new(&rt, &man_c, &model_c, &w_c, "dense").unwrap();
+        for (salt, len) in [(5usize, 96usize), (6, 80)] {
+            let p = prompt(len, salt, vocab);
+            let fed0 = engine_a.prefill_tokens.load(Ordering::Relaxed);
+            let (chunked, _) = engine_a.prefill(&[rq(0, p.clone())]).unwrap();
+            // The fed-token counter (the zero-truncation gate's measured
+            // quantity) counts every true prompt token exactly once across
+            // chunks — never the frame padding around ragged chunks.
+            assert_eq!(
+                engine_a.prefill_tokens.load(Ordering::Relaxed) - fed0,
+                len as u64,
+                "{model_name}: chunked prefill fed a wrong token count"
+            );
+            let (whole, _) = engine_c.prefill(&[rq(0, p)]).unwrap();
+            assert_seq_eq(
+                &chunked[0],
+                &whole[0],
+                &format!("{model_name}: {len}-token prompt, 32-chunked vs one frame"),
+            );
+        }
+    }
+    cleanup(&dir_a);
+    cleanup(&dir_c);
+}
+
+/// An engine whose prefill entry takes no `lengths` input (the AOT shape)
+/// cannot chunk: prompts longer than the frame must be a hard error — the
+/// silent `resize`+slice truncation is gone.
+#[test]
+fn non_length_aware_engine_refuses_overlong_prompts() {
+    let (dir, man) = fixture("legacy", 32);
+    let rt = Runtime::reference().unwrap();
+    let mut model = man.model("ref-mamba").unwrap().clone();
+    for e in model.hlo.values_mut() {
+        e.takes_lengths = false; // simulate an AOT export without lengths
+    }
+    let w = Weights::load_init(&man, &model).unwrap();
+    let engine = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+    assert!(!engine.length_aware);
+
+    // Exactly one frame still works (no padding involved)…
+    let full = prompt(32, 1, model.vocab_size);
+    engine.prefill(&[rq(0, full)]).unwrap();
+    // …and the legacy padded path feeds the measured-token counter too.
+    assert_eq!(engine.prefill_tokens.load(Ordering::Relaxed), 32);
+    // …one token more is refused, loudly, naming the mismatch.
+    let over = prompt(33, 2, model.vocab_size);
+    let err = engine.prefill(&[rq(1, over)]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("refusing to truncate"),
+        "over-long prompt must fail with a truncation-refusal error, got: {msg}"
+    );
+    // Empty prompts are rejected on every path (an all-PAD frame is not a
+    // prompt).
+    let err = engine.prefill(&[rq(2, vec![])]).unwrap_err();
+    assert!(format!("{err:#}").contains("empty prompt"));
+    cleanup(&dir);
+}

@@ -54,7 +54,7 @@ fn prop_batcher_no_loss_no_dup_fifo() {
                 }
             }
         }
-        while let Some(batch) = b.drain() {
+        for batch in b.drain() {
             assert!(batch.len() <= cap);
             out.extend(batch.into_iter().map(|r| r.id));
         }
