@@ -28,7 +28,14 @@ use tor_ssm::util::json::{num, obj, s, Json};
 use tor_ssm::util::rng::Rng;
 
 fn req(id: u64, plen: usize) -> Request {
-    Request { id, prompt: vec![1; plen], gen_tokens: 8, variant: String::new(), arrived_us: 0 }
+    Request {
+        id,
+        prompt: vec![1; plen],
+        gen_tokens: 8,
+        variant: String::new(),
+        arrived_us: 0,
+        priority: Default::default(),
+    }
 }
 
 fn env_usize(key: &str, default: usize) -> usize {

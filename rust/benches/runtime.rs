@@ -14,6 +14,14 @@
 //! exactly the same tokens — a speed measurement that doubles as an
 //! end-to-end determinism check on real serving traffic.
 //!
+//! A second section serves a **shared-system-prompt** trace three ways —
+//! uncached, cold prefix-state cache, warm cache (DESIGN.md §12) — and
+//! reports cache hit-rate, resumed-token counts, and the warm-prefill
+//! speedup, asserting zero bit-identity violations and a non-zero warm
+//! hit-rate; a preemption timeline (low-priority residents + high-priority
+//! burst) is likewise asserted token-identical to its all-Normal baseline.
+//! Both assertions are the CI smoke gate for the cache/preemption layer.
+//!
 //! Hermetic: generates its own synthetic fixture (wider decode frame than
 //! the default test fixture, so lane parallelism has lanes to use).
 //!
@@ -25,12 +33,14 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Instant;
 
 use tor_ssm::coordinator::engine::Engine;
 use tor_ssm::coordinator::metrics::Metrics;
+use tor_ssm::coordinator::prefix_cache::PrefixCache;
 use tor_ssm::coordinator::scheduler::Scheduler;
-use tor_ssm::coordinator::Request;
+use tor_ssm::coordinator::{Priority, Request};
 use tor_ssm::fixtures::{self, FixtureSpec};
 use tor_ssm::runtime::kernels::{self, KernelMode};
 use tor_ssm::runtime::{pool, Runtime};
@@ -225,6 +235,183 @@ fn main() {
         );
     }
 
+    // ---- prefix-state cache + preemption rows (DESIGN.md §12) -----------
+    // Shared-system-prompt trace: every prompt = the same 2-frame prefix +
+    // a unique 1..=frame tail. Served three ways on the fused N-thread
+    // config: (A) uncached baseline, (B) cold cache (fills it), (C) warm
+    // cache (lives off it). All three must generate identical tokens —
+    // the bit-identity gate CI asserts — while (C) resumes every shared
+    // prefix from its snapshot instead of recomputing it.
+    kernels::set_mode(KernelMode::Fused);
+    pool::set_workers(n_threads);
+    let prefix_frames = 2usize;
+    let mut rng2 = Rng::new(31);
+    let shared: Vec<Request> = fixtures::synth_shared_prefix_requests(
+        &mut rng2,
+        n_requests,
+        max_gen,
+        man.prefill_seq_len,
+        prefix_frames,
+        model.vocab_size,
+    );
+    let shared_tokens: u64 = shared.iter().map(|r| r.prompt.len() as u64).sum();
+
+    let serve = |engine: &Engine, trace: &[Request]| -> (BTreeMap<u64, Vec<i32>>, Metrics) {
+        let mut sched = Scheduler::new(engine);
+        let mut m = Metrics::default();
+        let t0 = Instant::now();
+        let resps = sched.run(trace.to_vec()).expect("shared-prefix serve");
+        m.wall = t0.elapsed();
+        assert_eq!(resps.len(), trace.len(), "shared-prefix trace lost responses");
+        for r in &resps {
+            m.record_response(r);
+        }
+        (resps.iter().map(|r| (r.id, r.generated.clone())).collect(), m)
+    };
+
+    // (A) uncached baseline — and the PR 5 zero-truncation gate on the new
+    // trace profile (measured fed-token count vs the trace's own count).
+    let base = Engine::new(&rt, &man, &model, &w, "dense").expect("baseline engine");
+    let (base_tokens, base_m) = serve(&base, &shared);
+    let fed_base = base.prefill_tokens.load(Ordering::Relaxed);
+    let shared_truncated = shared_tokens.saturating_sub(fed_base);
+    assert_eq!(fed_base, shared_tokens, "shared-prefix trace: baseline truncated prompt tokens");
+    let p50_prefill_base = Metrics::pct(&base_m.prefill_us, 0.5);
+
+    // (B) cold + (C) warm through one shared cache.
+    let cache = Arc::new(PrefixCache::new(8 << 20));
+    let mut cached = Engine::new(&rt, &man, &model, &w, "dense").expect("cached engine");
+    cached.attach_prefix_cache(Arc::clone(&cache));
+    let (cold_tokens, _cold_m) = serve(&cached, &shared);
+    let cold_stats = cache.stats();
+    let fed_before_warm = cached.prefill_tokens.load(Ordering::Relaxed);
+    let resumed_before_warm = cached.resumed_tokens.load(Ordering::Relaxed);
+    let (warm_tokens, warm_m) = serve(&cached, &shared);
+    let warm_stats = cache.stats();
+    let warm_hits = warm_stats.hits - cold_stats.hits;
+    let warm_misses = warm_stats.misses - cold_stats.misses;
+    let warm_hit_rate = warm_hits as f64 / (warm_hits + warm_misses).max(1) as f64;
+    let warm_fed = cached.prefill_tokens.load(Ordering::Relaxed) - fed_before_warm;
+    let warm_resumed = cached.resumed_tokens.load(Ordering::Relaxed) - resumed_before_warm;
+    assert_eq!(
+        warm_fed + warm_resumed,
+        shared_tokens,
+        "warm serve: fed + resumed must cover every prompt token (truncation!)"
+    );
+    assert!(warm_hits > 0, "warm shared-prefix serve must hit the cache");
+    let p50_prefill_warm = Metrics::pct(&warm_m.prefill_us, 0.5);
+
+    let diffs = |got: &BTreeMap<u64, Vec<i32>>| {
+        base_tokens.iter().filter(|(id, toks)| got.get(*id) != Some(*toks)).count()
+    };
+    let bit_identity_violations = diffs(&cold_tokens) + diffs(&warm_tokens);
+    assert_eq!(
+        bit_identity_violations, 0,
+        "prefix-cache serving changed generated tokens (cold and/or warm)"
+    );
+
+    // (D) preemption: low-priority residents fill every lane, then a
+    // high-priority burst swaps two of them out; generated tokens must
+    // match the identical timeline served all-Normal, and the priority run
+    // must actually preempt.
+    let lanes_n = base.decode_batch;
+    let mk = |id: u64, salt: usize, gen: usize, priority: Priority| Request {
+        id,
+        prompt: (0..man.prefill_seq_len)
+            .map(|t| ((t * 7 + salt * 5 + 1) % model.vocab_size) as i32)
+            .collect(),
+        gen_tokens: gen,
+        variant: String::new(),
+        arrived_us: 0,
+        priority,
+    };
+    let lows: Vec<Request> =
+        (0..lanes_n as u64).map(|i| mk(2000 + i, i as usize, 8, Priority::Low)).collect();
+    let highs: Vec<Request> =
+        (0..2u64).map(|i| mk(3000 + i, 50 + i as usize, 3, Priority::High)).collect();
+    let as_normal = |reqs: &[Request]| -> Vec<Request> {
+        reqs.iter()
+            .cloned()
+            .map(|mut r| {
+                r.priority = Priority::Normal;
+                r
+            })
+            .collect()
+    };
+    let run_timeline = |lows: &[Request], highs: &[Request]| {
+        let mut sched = Scheduler::new(&base);
+        let mut out = Vec::new();
+        for r in lows.iter().cloned() {
+            sched.submit(r);
+        }
+        out.extend(sched.step().expect("preemption serve"));
+        for r in highs.iter().cloned() {
+            sched.submit(r);
+        }
+        out.extend(sched.drain().expect("preemption serve"));
+        let tokens: BTreeMap<u64, Vec<i32>> =
+            out.iter().map(|r| (r.id, r.generated.clone())).collect();
+        (tokens, sched.preemptions)
+    };
+    let (want_pre, base_preempts) = run_timeline(&as_normal(&lows), &as_normal(&highs));
+    let (got_pre, preemptions) = run_timeline(&lows, &highs);
+    assert_eq!(base_preempts, 0, "all-Normal timeline must never preempt");
+    assert!(preemptions > 0, "high-priority burst must preempt a low-priority resident");
+    let preempt_violations =
+        want_pre.iter().filter(|(id, toks)| got_pre.get(*id) != Some(*toks)).count();
+    assert_eq!(preempt_violations, 0, "preempt/resume changed generated tokens");
+
+    println!(
+        "shared-prefix serving: {} prompts ({shared_tokens} prompt tokens) against a \
+         {prefix_frames}-frame system prefix, truncated {shared_truncated}",
+        shared.len()
+    );
+    println!(
+        "prefix cache: warm hit-rate {warm_hit_rate:.2} ({warm_hits} hits / {} lookups), \
+         resumed {warm_resumed} of {shared_tokens} prompt tokens, p50 prefill \
+         {p50_prefill_base}µs -> {p50_prefill_warm}µs, bit_identity_violations \
+         {bit_identity_violations}, evictions {}",
+        warm_hits + warm_misses,
+        warm_stats.evictions
+    );
+    println!(
+        "preemption: {preemptions} swap-outs under a high-priority burst, \
+         preempt_identity_violations {preempt_violations}"
+    );
+
+    let prefix_cache_json = obj(vec![
+        ("budget_bytes", num(cache.budget_bytes() as f64)),
+        ("prefix_frames", num(prefix_frames as f64)),
+        ("requests", num(shared.len() as f64)),
+        ("prompt_tokens", num(shared_tokens as f64)),
+        ("truncated_tokens", num(shared_truncated as f64)),
+        ("cold_hits", num(cold_stats.hits as f64)),
+        ("cold_misses", num(cold_stats.misses as f64)),
+        ("warm_hits", num(warm_hits as f64)),
+        ("warm_misses", num(warm_misses as f64)),
+        ("warm_hit_rate", num(warm_hit_rate)),
+        ("warm_resumed_tokens", num(warm_resumed as f64)),
+        ("warm_fed_tokens", num(warm_fed as f64)),
+        ("entries", num(warm_stats.entries as f64)),
+        ("used_bytes", num(warm_stats.used_bytes as f64)),
+        ("evictions", num(warm_stats.evictions as f64)),
+        ("p50_prefill_us_baseline", num(p50_prefill_base as f64)),
+        ("p50_prefill_us_warm", num(p50_prefill_warm as f64)),
+        (
+            "warm_prefill_speedup",
+            if p50_prefill_warm > 0 {
+                num(p50_prefill_base as f64 / p50_prefill_warm as f64)
+            } else {
+                Json::Null
+            },
+        ),
+        ("bit_identity_violations", num(bit_identity_violations as f64)),
+        ("gen_tok_s_baseline", num(base_m.throughput_tok_s())),
+        ("gen_tok_s_warm", num(warm_m.throughput_tok_s())),
+        ("preemptions", num(preemptions as f64)),
+        ("preempt_identity_violations", num(preempt_violations as f64)),
+    ]);
+
     let rows: Vec<Json> = results
         .iter()
         .map(|r| {
@@ -270,6 +457,7 @@ fn main() {
                 ("truncated_tokens", num(truncated_tokens as f64)),
             ]),
         ),
+        ("prefix_cache", prefix_cache_json),
         ("configs", Json::Arr(rows)),
         ("fused_1t_speedup_dense", ratio(fused_1, scalar_1)),
         ("fused_nt_speedup_dense", ratio(fused_n, scalar_1)),

@@ -52,6 +52,7 @@ fn main() {
                 gen_tokens,
                 variant: variant.to_string(),
                 arrived_us: 0,
+                priority: Default::default(),
             })
             .collect();
         let total_tokens = engine.batch * (engine.prefill_len + gen_tokens);

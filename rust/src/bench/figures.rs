@@ -162,6 +162,7 @@ pub fn figure_throughput(ctx: &mut Ctx, small: bool, gen_tokens: usize) -> Resul
                     gen_tokens,
                     variant: variant.to_string(),
                     arrived_us: 0,
+                    priority: Default::default(),
                 })
                 .collect();
             // Warmup (compile+cache), then measure.

@@ -103,7 +103,14 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> Request {
-        Request { id, prompt: vec![1], gen_tokens: 1, variant: String::new(), arrived_us: 0 }
+        Request {
+            id,
+            prompt: vec![1],
+            gen_tokens: 1,
+            variant: String::new(),
+            arrived_us: 0,
+            priority: Default::default(),
+        }
     }
 
     #[test]

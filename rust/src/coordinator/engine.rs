@@ -38,6 +38,7 @@ use crate::reduction::policy::PolicySpec;
 use crate::runtime::tensor::{read_lane, write_lane};
 use crate::runtime::{DeviceWeights, Executable, HostTensor, Runtime, TensorData, Weights};
 
+use super::prefix_cache::PrefixCache;
 use super::state_store::StateStore;
 use super::{Request, Response};
 
@@ -82,6 +83,17 @@ pub struct Engine {
     /// zero-truncation gate `benches/runtime.rs` runs in CI. Relaxed
     /// ordering — a counter, not a synchronisation point.
     pub prefill_tokens: AtomicU64,
+    /// Prompt tokens *skipped* by resuming from a cached prefix-state
+    /// snapshot instead of recomputing them (DESIGN.md §12). Disjoint from
+    /// [`Self::prefill_tokens`]: for every request,
+    /// `fed + resumed == prompt.len()`, which is how the zero-truncation
+    /// gate stays honest on cache-warm traces. Relaxed ordering — a
+    /// counter, not a synchronisation point.
+    pub resumed_tokens: AtomicU64,
+    /// Optional shared content-addressed cache of chunk-aligned prompt
+    /// prefix states ([`PrefixCache`], DESIGN.md §12). `None` (the default)
+    /// keeps prefill byte-for-byte on the PR 5 path.
+    prefix_cache: Option<Arc<PrefixCache>>,
 }
 
 /// One prompt's prefill result: the per-sequence decode state (contiguous
@@ -153,7 +165,22 @@ impl Engine {
             vocab: model.vocab_size,
             decode_calls: AtomicU64::new(0),
             prefill_tokens: AtomicU64::new(0),
+            resumed_tokens: AtomicU64::new(0),
+            prefix_cache: None,
         })
+    }
+
+    /// Attach a (shared) prefix-state cache: subsequent length-aware
+    /// prefills consult it for warm prefixes and insert chunk-boundary
+    /// snapshots (DESIGN.md §12). One cache may serve many engines — the
+    /// key space is partitioned by `(model, variant)`.
+    pub fn attach_prefix_cache(&mut self, cache: Arc<PrefixCache>) {
+        self.prefix_cache = Some(cache);
+    }
+
+    /// The attached prefix cache, if any (hit/miss/evict inspection).
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.prefix_cache.as_deref()
     }
 
     pub fn vocab(&self) -> usize {
@@ -268,23 +295,68 @@ impl Engine {
     /// Lanes whose prompt ended in an earlier chunk ride along with length
     /// 0 (the backend skips them); each sequence's state + logits are
     /// captured from the chunk its last token lands in.
+    ///
+    /// With a [`PrefixCache`] attached, each lane first consults it for the
+    /// longest chunk-aligned **proper** prefix of its prompt: on a hit the
+    /// lane's resume state is seeded from the snapshot via the same
+    /// `(conv0, ssm0)` inputs chunked prefill already uses between chunks,
+    /// and only the remainder is fed (skipped tokens count in
+    /// [`Self::resumed_tokens`], fed tokens in [`Self::prefill_tokens`] —
+    /// the two always sum to the true prompt length). Chunk-boundary states
+    /// crossed while prefilling are inserted back, warming the cache.
+    /// Because snapshots sit only on chunk boundaries, a warm lane's
+    /// remainder has the same chunk decomposition the cold run used for
+    /// those positions — so the backend's per-length schedule re-solve sees
+    /// identical chunk lengths and warm resume is bit-identical to cold
+    /// prefill, on dense and reduced lanes alike (DESIGN.md §12, pinned by
+    /// `tests/state_cache.rs`).
     fn prefill_chunked(&self, reqs: &[Request]) -> Result<Vec<PrefilledSeq>> {
         let plen = self.prefill_len;
-        let chunks_of = |n: usize| n.div_ceil(plen);
-        let total_chunks = reqs.iter().map(|r| chunks_of(r.prompt.len())).max().unwrap_or(1);
+        let (nl, crow, srow) = (self.n_layer, self.conv_row, self.ssm_row);
         let mut done: Vec<Option<PrefilledSeq>> = (0..reqs.len()).map(|_| None).collect();
+        // Per-lane progress: how many of the lane's prompt tokens are
+        // already absorbed into its carried state (0 = cold start).
+        let mut offset = vec![0usize; reqs.len()];
         let mut carry: Option<(Vec<f32>, Vec<f32>)> = None;
-        for ci in 0..total_chunks {
+        if let Some(cache) = self.prefix_cache.as_deref() {
+            let mut conv0 = vec![0.0f32; self.pf_conv_shape.iter().product()];
+            let mut ssm0 = vec![0.0f32; self.pf_ssm_shape.iter().product()];
+            let mut any = false;
+            for (i, r) in reqs.iter().enumerate() {
+                let Some((blen, conv, ssm)) =
+                    cache.longest_prefix(&self.model_name, &self.variant, &r.prompt, plen)
+                else {
+                    continue;
+                };
+                // Geometry guard: a cache shared with a differently-shaped
+                // engine must never corrupt a lane (treated as a cold miss).
+                if conv.len() != nl * crow || ssm.len() != nl * srow {
+                    continue;
+                }
+                write_lane(&mut conv0, nl, self.batch, crow, i, &conv);
+                write_lane(&mut ssm0, nl, self.batch, srow, i, &ssm);
+                offset[i] = blen;
+                self.resumed_tokens.fetch_add(blen as u64, Ordering::Relaxed);
+                any = true;
+            }
+            if any {
+                // Cold lanes keep their zero rows: the backend's zero-state
+                // init is bit-identical to its no-init start, so one resume
+                // frame serves a mixed warm/cold batch.
+                carry = Some((conv0, ssm0));
+            }
+        }
+        loop {
             let mut flat = vec![crate::tokenizer::PAD as i32; self.batch * plen];
             let mut lens = vec![0i32; self.batch];
             for (i, r) in reqs.iter().enumerate() {
-                let start = ci * plen;
-                if start >= r.prompt.len() {
+                if offset[i] >= r.prompt.len() {
                     continue; // finished in an earlier chunk: idle lane
                 }
-                let end = (start + plen).min(r.prompt.len());
-                flat[i * plen..i * plen + (end - start)].copy_from_slice(&r.prompt[start..end]);
-                lens[i] = (end - start) as i32;
+                let end = (offset[i] + plen).min(r.prompt.len());
+                let take = end - offset[i];
+                flat[i * plen..i * plen + take].copy_from_slice(&r.prompt[offset[i]..end]);
+                lens[i] = take as i32;
             }
             let mut inputs = vec![
                 HostTensor::i32(vec![self.batch, plen], flat),
@@ -298,12 +370,35 @@ impl Engine {
             self.prefill_tokens
                 .fetch_add(lens.iter().map(|&x| x as u64).sum::<u64>(), Ordering::Relaxed);
             for (i, r) in reqs.iter().enumerate() {
-                if lens[i] > 0 && ci + 1 == chunks_of(r.prompt.len()) {
+                if lens[i] == 0 {
+                    continue;
+                }
+                offset[i] += lens[i] as usize;
+                if offset[i] == r.prompt.len() {
                     done[i] = Some(self.slice_lane(i, &logits, &conv_f, &ssm_f));
                 }
+                // Every chunk-aligned boundary just crossed is a reusable
+                // prefix snapshot — insert it (duplicates only touch LRU).
+                if offset[i] % plen == 0 {
+                    if let Some(cache) = self.prefix_cache.as_deref() {
+                        let mut conv = vec![0.0f32; nl * crow];
+                        let mut ssm = vec![0.0f32; nl * srow];
+                        read_lane(&conv_f, nl, self.batch, crow, i, &mut conv);
+                        read_lane(&ssm_f, nl, self.batch, srow, i, &mut ssm);
+                        cache.insert(
+                            &self.model_name,
+                            &self.variant,
+                            &r.prompt[..offset[i]],
+                            &conv,
+                            &ssm,
+                        );
+                    }
+                }
             }
-            if ci + 1 < total_chunks {
+            if done.iter().any(|d| d.is_none()) {
                 carry = Some((conv_f, ssm_f));
+            } else {
+                break;
             }
         }
         Ok(done.into_iter().map(|d| d.expect("every prompt ends in some chunk")).collect())

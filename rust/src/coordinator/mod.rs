@@ -9,6 +9,10 @@
 //!   KV-cache analogue: conv tail + scan state per layer, fixed size).
 //! * [`state_store`] — the pool's slots backed by the actual per-sequence
 //!   conv/ssm tensors, with gather/scatter into the decode frame.
+//! * [`prefix_cache`] — content-addressed cache of chunk-aligned prompt
+//!   *prefix* states: shared system prompts prefill once, later requests
+//!   resume from the cached constant-size (conv, ssm) snapshot
+//!   (DESIGN.md §12).
 //! * [`router`] — routes requests across model variants (dense vs reduction
 //!   ratios) by policy: explicit variant, or load-aware least-queued.
 //! * [`engine`] — one model variant's execution lane, split into
@@ -21,10 +25,32 @@
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod prefix_cache;
 pub mod router;
 pub mod scheduler;
 pub mod state_pool;
 pub mod state_store;
+
+/// Scheduling priority class of a [`Request`] (DESIGN.md §12).
+///
+/// Priorities order lane *placement*, not admission: the queue stays FIFO
+/// (arrival order), but once prefilled, a higher class is placed into a
+/// decode lane first, and under lane pressure the scheduler **preempts** a
+/// strictly lower-priority resident sequence — its fixed-size (conv, ssm)
+/// state stays parked in its state-store slot and it resumes bit-identically
+/// when a lane frees. Equal priorities never preempt each other, so an
+/// all-[`Priority::Normal`] trace behaves exactly like the pre-priority
+/// scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Preemptible background work (batch eval, speculative traffic).
+    Low,
+    /// The default class; never preempted by other `Normal` traffic.
+    #[default]
+    Normal,
+    /// Latency-sensitive traffic; may preempt `Low` and `Normal` residents.
+    High,
+}
 
 /// A generation request entering the system.
 #[derive(Debug, Clone)]
@@ -45,6 +71,9 @@ pub struct Request {
     /// as trace metadata only. Serving queue latency is measured by the
     /// scheduler itself, from [`scheduler::Scheduler::submit`].
     pub arrived_us: u64,
+    /// Scheduling class (DESIGN.md §12): placement order under lane
+    /// pressure, and whether this request may preempt / be preempted.
+    pub priority: Priority,
 }
 
 /// A completed generation.

@@ -1,0 +1,358 @@
+//! Content-addressed prefix-state cache (DESIGN.md §12).
+//!
+//! The SSM-specific structural win over a KV cache: *any* prompt prefix
+//! compresses into one constant-size per-layer `(conv tail, ssm state)`
+//! pair — exactly the resume pair chunked prefill (DESIGN.md §6) already
+//! carries between chunks. This module caches those pairs at chunk-aligned
+//! prefix boundaries, keyed by content, so a shared system prompt is
+//! prefilled once and every later request that starts with it resumes from
+//! the snapshot and prefills only its remainder.
+//!
+//! Key derivation (why chunk-aligned): snapshots only exist at multiples of
+//! the engine's prefill frame (`prefill_len`), because that is where the
+//! `(conv0, ssm0)` resume inputs are bit-identical between a cold full
+//! prefill and a warm resume — the chunk decomposition of the remainder is
+//! the same in both runs, so the backend's per-length schedule re-solve
+//! (`plan_for_len`) sees identical chunk lengths and produces identical
+//! reduction schedules. A prefix cut at an arbitrary offset would change
+//! the remainder's chunking and break bit-identity on reduced lanes.
+//!
+//! Keys are `(model, variant, prefix_len, fnv1a64(prefix tokens))`; every
+//! entry also stores the prefix tokens themselves and **verifies** them on
+//! lookup, so a 64-bit hash collision can never serve a wrong snapshot —
+//! the bit-identity guarantee does not rest on hash uniqueness.
+//!
+//! Bounded by a byte budget with LRU eviction (monotonic touch tick);
+//! hit/miss/insert/evict counters feed `BENCH_runtime.json` and the CI
+//! smoke gate. Interior mutex: the cache is shared across engines/threads
+//! behind an `Arc`, and all methods take `&self`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+/// FNV-1a 64-bit over the little-endian bytes of `tokens`. Stable, cheap,
+/// dependency-free; collisions are tolerated (entries verify tokens).
+pub fn fnv1a_tokens(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Cache key: model + policy variant + chunk-aligned prefix length + content
+/// hash. Model and variant are part of the key because the snapshot encodes
+/// the model's weights *and* the variant's reduction schedule — a `dense`
+/// prefix state is not a `unified@0.2` prefix state even for identical
+/// tokens.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Key {
+    model: String,
+    variant: String,
+    len: usize,
+    hash: u64,
+}
+
+struct Entry {
+    /// The exact prefix tokens — verified on lookup (collision proof).
+    tokens: Vec<i32>,
+    /// Per-sequence `[n_layer, conv_row]` snapshot at the boundary.
+    conv: Vec<f32>,
+    /// Per-sequence `[n_layer, ssm_row]` snapshot at the boundary.
+    ssm: Vec<f32>,
+    /// LRU touch tick (monotonic; larger = more recent).
+    tick: u64,
+    bytes: usize,
+}
+
+fn entry_bytes(tokens: usize, conv: usize, ssm: usize) -> usize {
+    4 * (tokens + conv + ssm)
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<Key, Entry>,
+    /// tick → key index for O(log n) LRU eviction. Ticks are unique
+    /// (monotonic counter), so this is a faithful recency order.
+    lru: BTreeMap<u64, Key>,
+    tick: u64,
+    used_bytes: usize,
+    hits: u64,
+    misses: u64,
+    inserts: u64,
+    evictions: u64,
+}
+
+/// Counter snapshot for benches / logs (`BENCH_runtime.json` §prefix_cache).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that resumed from a cached boundary (one per request).
+    pub hits: u64,
+    /// Lookups that found no usable boundary (one per request).
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    pub used_bytes: usize,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// hits / (hits + misses); 0.0 when no lookups happened.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Bounded content-addressed store of chunk-aligned prompt-prefix states.
+pub struct PrefixCache {
+    budget_bytes: usize,
+    inner: Mutex<Inner>,
+}
+
+impl PrefixCache {
+    /// A cache holding at most `budget_bytes` of snapshots (tokens + conv +
+    /// ssm, 4 bytes per element). An entry larger than the whole budget is
+    /// rejected at insert rather than thrashing the cache.
+    pub fn new(budget_bytes: usize) -> PrefixCache {
+        PrefixCache { budget_bytes, inner: Mutex::new(Inner::default()) }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // A panic while holding the lock cannot leave partial state that
+        // breaks correctness (worst case: a stale counter), so recover.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Longest cached chunk-aligned **proper** prefix of `prompt`: scans
+    /// boundaries `k·chunk` descending from the largest strictly below
+    /// `prompt.len()`. Proper because prefill must still feed at least one
+    /// remainder token to produce the last-token logits the first sampled
+    /// token comes from. Returns `(prefix_len, conv, ssm)` clones; counts
+    /// exactly one hit or one miss per call (per request, not per
+    /// boundary probed).
+    pub fn longest_prefix(
+        &self,
+        model: &str,
+        variant: &str,
+        prompt: &[i32],
+        chunk: usize,
+    ) -> Option<(usize, Vec<f32>, Vec<f32>)> {
+        if chunk == 0 || prompt.len() <= chunk {
+            return None; // no chunk-aligned proper prefix exists: not a miss
+        }
+        let mut inner = self.lock();
+        let max_k = (prompt.len() - 1) / chunk; // largest k with k·chunk < len
+        for k in (1..=max_k).rev() {
+            let blen = k * chunk;
+            let key = Key {
+                model: model.to_string(),
+                variant: variant.to_string(),
+                len: blen,
+                hash: fnv1a_tokens(&prompt[..blen]),
+            };
+            let Some(e) = inner.map.get(&key) else { continue };
+            if e.tokens != prompt[..blen] {
+                continue; // 64-bit collision: never serve a wrong snapshot
+            }
+            let (conv, ssm) = (e.conv.clone(), e.ssm.clone());
+            // Touch LRU.
+            inner.tick += 1;
+            let tick = inner.tick;
+            let old = {
+                let e = inner.map.get_mut(&key).unwrap();
+                std::mem::replace(&mut e.tick, tick)
+            };
+            inner.lru.remove(&old);
+            inner.lru.insert(tick, key);
+            inner.hits += 1;
+            return Some((blen, conv, ssm));
+        }
+        inner.misses += 1;
+        None
+    }
+
+    /// Insert (or touch) the snapshot for `prefix` (the *exact* tokens up to
+    /// a chunk boundary). Duplicate keys only refresh recency; entries over
+    /// the whole budget are rejected; otherwise LRU entries are evicted
+    /// until the new entry fits.
+    pub fn insert(&self, model: &str, variant: &str, prefix: &[i32], conv: &[f32], ssm: &[f32]) {
+        let bytes = entry_bytes(prefix.len(), conv.len(), ssm.len());
+        if bytes > self.budget_bytes || prefix.is_empty() {
+            return;
+        }
+        let key = Key {
+            model: model.to_string(),
+            variant: variant.to_string(),
+            len: prefix.len(),
+            hash: fnv1a_tokens(prefix),
+        };
+        let mut inner = self.lock();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(&key) {
+            if e.tokens == prefix {
+                let old = std::mem::replace(&mut e.tick, tick);
+                inner.lru.remove(&old);
+                inner.lru.insert(tick, key);
+                return;
+            }
+            // Same key, different tokens (collision): replace — both states
+            // are valid for *their* tokens, keep the most recent.
+            let old = inner.map.remove(&key).unwrap();
+            inner.lru.remove(&old.tick);
+            inner.used_bytes -= old.bytes;
+        }
+        // Evict least-recently-used until the new entry fits.
+        while inner.used_bytes + bytes > self.budget_bytes {
+            let Some((&old_tick, _)) = inner.lru.iter().next() else { break };
+            let old_key = inner.lru.remove(&old_tick).unwrap();
+            let old = inner.map.remove(&old_key).unwrap();
+            inner.used_bytes -= old.bytes;
+            inner.evictions += 1;
+        }
+        inner.used_bytes += bytes;
+        inner.inserts += 1;
+        inner.map.insert(
+            key.clone(),
+            Entry { tokens: prefix.to_vec(), conv: conv.to_vec(), ssm: ssm.to_vec(), tick, bytes },
+        );
+        inner.lru.insert(tick, key);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.lock();
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            inserts: inner.inserts,
+            evictions: inner.evictions,
+            used_bytes: inner.used_bytes,
+            entries: inner.map.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize, salt: i32) -> Vec<i32> {
+        (0..n).map(|i| i as i32 * 3 + salt).collect()
+    }
+
+    #[test]
+    fn longest_boundary_wins_and_counts_one_hit() {
+        let c = PrefixCache::new(1 << 20);
+        let p = toks(70, 1);
+        c.insert("m", "dense", &p[..32], &[1.0; 8], &[2.0; 4]);
+        c.insert("m", "dense", &p[..64], &[3.0; 8], &[4.0; 4]);
+        let (len, conv, ssm) = c.longest_prefix("m", "dense", &p, 32).unwrap();
+        assert_eq!(len, 64);
+        assert_eq!(conv, vec![3.0; 8]);
+        assert_eq!(ssm, vec![4.0; 4]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 0));
+        assert!((s.hit_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn proper_prefix_only_never_whole_prompt() {
+        let c = PrefixCache::new(1 << 20);
+        let p = toks(64, 2);
+        c.insert("m", "dense", &p[..64], &[1.0; 8], &[1.0; 4]);
+        c.insert("m", "dense", &p[..32], &[5.0; 8], &[6.0; 4]);
+        // A 64-token prompt may resume from 32, never from 64 — at least one
+        // remainder token must be prefilled for the last-token logits.
+        let (len, ..) = c.longest_prefix("m", "dense", &p, 32).unwrap();
+        assert_eq!(len, 32);
+        // One-chunk prompts have no usable boundary at all (and are not
+        // counted as misses — nothing was probed).
+        assert!(c.longest_prefix("m", "dense", &p[..32], 32).is_none());
+        assert!(c.longest_prefix("m", "dense", &p[..20], 32).is_none());
+        assert_eq!(c.stats().misses, 0);
+    }
+
+    #[test]
+    fn model_and_variant_partition_the_key_space() {
+        let c = PrefixCache::new(1 << 20);
+        let p = toks(40, 3);
+        c.insert("m", "dense", &p[..32], &[1.0; 8], &[1.0; 4]);
+        assert!(c.longest_prefix("m", "unified@0.2", &p, 32).is_none());
+        assert!(c.longest_prefix("other", "dense", &p, 32).is_none());
+        assert!(c.longest_prefix("m", "dense", &p, 32).is_some());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 2));
+    }
+
+    #[test]
+    fn content_mismatch_is_a_miss() {
+        let c = PrefixCache::new(1 << 20);
+        let p = toks(40, 4);
+        c.insert("m", "dense", &p[..32], &[1.0; 8], &[1.0; 4]);
+        let mut q = p.clone();
+        q[5] ^= 1; // different prefix content, same length
+        assert!(c.longest_prefix("m", "dense", &q, 32).is_none());
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget_and_recency() {
+        // Each entry: 32 tokens + 8 conv + 4 ssm = 44 elems = 176 bytes.
+        let one = entry_bytes(32, 8, 4);
+        let c = PrefixCache::new(2 * one);
+        let (a, b, d) = (toks(32, 10), toks(32, 11), toks(32, 12));
+        c.insert("m", "dense", &a, &[1.0; 8], &[1.0; 4]);
+        c.insert("m", "dense", &b, &[2.0; 8], &[2.0; 4]);
+        assert_eq!(c.stats().used_bytes, 2 * one);
+        // Touch `a` so `b` becomes the LRU victim.
+        let mut a_long = a.clone();
+        a_long.extend(toks(8, 13));
+        assert!(c.longest_prefix("m", "dense", &a_long, 32).is_some());
+        c.insert("m", "dense", &d, &[3.0; 8], &[3.0; 4]);
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        assert!(s.used_bytes <= 2 * one);
+        let mut b_long = b.clone();
+        b_long.push(0);
+        assert!(c.longest_prefix("m", "dense", &b_long, 32).is_none(), "b was evicted");
+        assert!(c.longest_prefix("m", "dense", &a_long, 32).is_some(), "a survived");
+        let mut d_long = d.clone();
+        d_long.push(0);
+        assert!(c.longest_prefix("m", "dense", &d_long, 32).is_some(), "d resident");
+    }
+
+    #[test]
+    fn oversized_entries_are_rejected_duplicates_only_touch() {
+        let c = PrefixCache::new(64);
+        c.insert("m", "dense", &toks(32, 5), &[0.0; 64], &[0.0; 64]);
+        assert_eq!(c.stats().entries, 0, "entry larger than the budget must be rejected");
+        let c = PrefixCache::new(1 << 20);
+        let p = toks(32, 6);
+        c.insert("m", "dense", &p, &[1.0; 8], &[1.0; 4]);
+        c.insert("m", "dense", &p, &[1.0; 8], &[1.0; 4]);
+        let s = c.stats();
+        assert_eq!(s.inserts, 1, "duplicate insert only refreshes recency");
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn fnv_is_stable_and_order_sensitive() {
+        // Pinned reference value: the FNV-1a-64 offset basis (empty input).
+        assert_eq!(fnv1a_tokens(&[]), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a_tokens(&[1, 2]), fnv1a_tokens(&[2, 1]));
+        assert_eq!(fnv1a_tokens(&[7, 9]), fnv1a_tokens(&[7, 9]));
+    }
+}

@@ -117,6 +117,7 @@ mod tests {
             gen_tokens: 1,
             variant: variant.to_string(),
             arrived_us: 0,
+            priority: Default::default(),
         }
     }
 

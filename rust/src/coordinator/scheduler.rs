@@ -3,10 +3,17 @@
 //!
 //! Each [`Scheduler::step`] iteration:
 //!
-//! 1. **admit** — while decode lanes want work, prefill queued prompts in
-//!    chunks of up to the engine's prefill batch and copy each sequence's
-//!    state into the slot-backed [`StateStore`];
-//! 2. **place** — move prefilled sequences into free decode-frame lanes;
+//! 1. **admit** — while decode lanes want work — or the ready queue can
+//!    still hold one prefill batch of ready-ahead sequences beyond the free
+//!    lanes (the store is sized for exactly that) — prefill queued prompts
+//!    in chunks of up to the engine's prefill batch and copy each
+//!    sequence's state into the slot-backed [`StateStore`];
+//! 2. **place** — move prefilled sequences into free decode-frame lanes,
+//!    highest [`Priority`](super::Priority) first (FIFO within a class);
+//!    under lane pressure a strictly lower-priority resident is
+//!    **preempted**: its fixed-size state stays parked in its store slot,
+//!    it re-queues as ready, and the preempted interval is added to its
+//!    `queue_us` when it is placed again (DESIGN.md §12);
 //! 3. **decode** — gather the occupied lanes' slots into the
 //!    `[n_layer, B, ...]` decode frame, step the frame ONCE, scatter the
 //!    updated states back;
@@ -31,7 +38,7 @@ use anyhow::Result;
 use super::engine::{argmax, DecodeFrame, Engine};
 use super::state_pool::Slot;
 use super::state_store::StateStore;
-use super::{Request, Response};
+use super::{Priority, Request, Response};
 
 /// One admitted sequence: identity, progress, and per-request timing.
 struct Seq {
@@ -43,9 +50,12 @@ struct Seq {
     /// in `generated`).
     next_token: i32,
     prompt_tokens: usize,
-    /// When prefill finished — lane-wait in `ready` is added to `queue_us`
-    /// at placement so no latency phase goes unreported.
-    prefilled: Instant,
+    priority: Priority,
+    /// When this sequence last entered `ready` (prefill finish, or the
+    /// moment it was preempted) — the wait is added to `queue_us` at
+    /// placement so no latency phase goes unreported, including every
+    /// preempted interval.
+    waiting_since: Instant,
     queue_us: u64,
     prefill_us: u64,
     decode_us: u64,
@@ -72,6 +82,9 @@ pub struct Scheduler<'e> {
     pub decode_step_us: Vec<u64>,
     /// Prefill-frame executions.
     pub prefill_calls: u64,
+    /// Residents swapped out of a decode lane for a higher-priority
+    /// sequence (state parked in the slot; resumed bit-identically later).
+    pub preemptions: u64,
     pub submitted: u64,
     pub completed: u64,
 }
@@ -102,6 +115,7 @@ impl<'e> Scheduler<'e> {
             decode_steps: 0,
             decode_step_us: Vec::new(),
             prefill_calls: 0,
+            preemptions: 0,
             submitted: 0,
             completed: 0,
         }
@@ -128,6 +142,13 @@ impl<'e> Scheduler<'e> {
         &self.store
     }
 
+    /// Prefilled sequences waiting beyond the currently free lanes — the
+    /// ready-ahead depth the store's extra `engine.batch` slots exist for.
+    pub fn ready_ahead(&self) -> usize {
+        let free = self.lanes.iter().filter(|l| l.is_none()).count();
+        self.ready.len().saturating_sub(free)
+    }
+
     /// One scheduler iteration (admit → place → decode → retire). Returns
     /// the responses completed during this iteration; returns quickly with
     /// an empty vec when fully idle.
@@ -143,7 +164,16 @@ impl<'e> Scheduler<'e> {
         let mut admit_budget = self.lanes.len() / self.engine.batch.max(1) + 1;
         loop {
             let free_lanes = self.lanes.iter().filter(|l| l.is_none()).count();
-            if admit_budget == 0 || self.queue.is_empty() || self.ready.len() >= free_lanes {
+            // Admit while the ready queue can still cover every free lane
+            // *plus* one prefill batch of ready-ahead — the extra
+            // `engine.batch` slots `Scheduler::new` sizes the store with.
+            // (The old `>= free_lanes` bound halted admission the moment
+            // lanes filled, so a retirement always stalled on a fresh
+            // prefill and the ready-ahead slots were dead memory.)
+            if admit_budget == 0
+                || self.queue.is_empty()
+                || self.ready.len() >= free_lanes + self.engine.batch
+            {
                 break;
             }
             admit_budget -= 1;
@@ -193,7 +223,8 @@ impl<'e> Scheduler<'e> {
                     generated,
                     next_token: first,
                     prompt_tokens: req.prompt.len(),
-                    prefilled: prefilled_at,
+                    priority: req.priority,
+                    waiting_since: prefilled_at,
                     queue_us: q_us,
                     prefill_us,
                     decode_us: 0,
@@ -201,20 +232,50 @@ impl<'e> Scheduler<'e> {
             }
         }
 
-        // ---- place: fill free lanes from the ready queue ----------------
-        for lane in self.lanes.iter_mut() {
-            if lane.is_none() {
-                match self.ready.pop_front() {
-                    Some(mut seq) => {
-                        // Waiting in `ready` for a lane is queueing too —
-                        // fold it into queue_us so every latency phase is
-                        // reported.
-                        seq.queue_us += seq.prefilled.elapsed().as_micros() as u64;
-                        *lane = Some(seq);
+        // ---- place: fill lanes from ready, highest priority first -------
+        // FIFO within a class (the first ready sequence of the top class
+        // wins), so an all-Normal trace places in exactly the old order.
+        // When no lane is free, a strictly lower-priority resident is
+        // preempted: its state is already parked in its store slot (scatter
+        // ran at the end of the previous decode), so swapping it out is
+        // just re-queueing its Seq — it resumes bit-identically via gather.
+        // Each swap strictly raises the resident priority multiset, so the
+        // loop is bounded; equal priorities never preempt (no churn).
+        while let Some(best) = self
+            .ready
+            .iter()
+            .enumerate()
+            .max_by(|(ia, a), (ib, b)| a.priority.cmp(&b.priority).then(ib.cmp(ia)))
+            .map(|(i, _)| i)
+        {
+            let lane_idx = match self.lanes.iter().position(|l| l.is_none()) {
+                Some(free) => free,
+                None => {
+                    let Some((victim_idx, victim_prio)) = self
+                        .lanes
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(i, l)| l.as_ref().map(|s| (i, s.priority)))
+                        .min_by(|(ia, a), (ib, b)| a.cmp(b).then(ia.cmp(ib)))
+                    else {
+                        break; // no lanes at all
+                    };
+                    if victim_prio >= self.ready[best].priority {
+                        break; // nothing strictly lower-priority to evict
                     }
-                    None => break,
+                    let mut victim = self.lanes[victim_idx].take().expect("resident");
+                    victim.waiting_since = Instant::now();
+                    self.preemptions += 1;
+                    self.ready.push_back(victim);
+                    victim_idx
                 }
-            }
+            };
+            let mut seq = self.ready.remove(best).expect("index from enumerate");
+            // Waiting in `ready` for a lane is queueing too — fold it into
+            // queue_us so every latency phase (including every preempted
+            // interval) is reported.
+            seq.queue_us += seq.waiting_since.elapsed().as_micros() as u64;
+            self.lanes[lane_idx] = Some(seq);
         }
 
         // ---- decode one frame step + retire finished lanes --------------

@@ -12,6 +12,12 @@
 //! * the decode frame the engine steps: `[n_layer, n_lanes, row]`,
 //!   layer-major. [`StateStore::gather`] / [`StateStore::scatter`] convert
 //!   between the two via the lane helpers in [`crate::runtime::tensor`].
+//!
+//! Preemption (DESIGN.md §12) needs no store support beyond this: the
+//! scheduler scatters every lane's state back after each decode step, so a
+//! preempted sequence's snapshot is already parked in its slot. Swapping it
+//! out is just dropping the lane binding; swapping back in is the same
+//! gather any placement does — bit-identical to never having been paused.
 
 use anyhow::{ensure, Result};
 

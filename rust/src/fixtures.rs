@@ -248,6 +248,46 @@ pub fn synth_requests(
                 gen_tokens: 1 + rng.below(max_gen.max(1)),
                 variant,
                 arrived_us: 0,
+                priority: crate::coordinator::Priority::Normal,
+            }
+        })
+        .collect()
+}
+
+/// Shared-system-prompt trace profile (DESIGN.md §12): every request's
+/// prompt starts with the **same** `prefix_frames × prefill_seq_len` system
+/// prefix (chunk-aligned by construction) followed by a unique tail of
+/// `1..=prefill_seq_len` tokens — so with a prefix-state cache attached the
+/// first request prefills the shared prefix once and every later request
+/// resumes from the cached boundary snapshot and prefills only its tail.
+/// The tail is at least 1 token, so a chunk-aligned **proper** cached
+/// prefix always exists for every request. All requests are
+/// [`Priority::Normal`](crate::coordinator::Priority) with uniform
+/// `1..=max_gen` generation lengths.
+pub fn synth_shared_prefix_requests(
+    rng: &mut Rng,
+    n_requests: usize,
+    max_gen: usize,
+    prefill_seq_len: usize,
+    prefix_frames: usize,
+    vocab_size: usize,
+) -> Vec<crate::coordinator::Request> {
+    let frame = prefill_seq_len.max(1);
+    let prefix: Vec<i32> = (0..prefix_frames.max(1) * frame)
+        .map(|_| rng.below(vocab_size) as i32)
+        .collect();
+    (0..n_requests)
+        .map(|i| {
+            let tail = 1 + rng.below(frame);
+            let mut prompt = prefix.clone();
+            prompt.extend((0..tail).map(|_| rng.below(vocab_size) as i32));
+            crate::coordinator::Request {
+                id: i as u64,
+                prompt,
+                gen_tokens: 1 + rng.below(max_gen.max(1)),
+                variant: String::new(),
+                arrived_us: 0,
+                priority: crate::coordinator::Priority::Normal,
             }
         })
         .collect()

@@ -22,6 +22,7 @@ use anyhow::{bail, Context, Result};
 
 use tor_ssm::bench::{figures, tables, Ctx};
 use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::prefix_cache::PrefixCache;
 use tor_ssm::coordinator::router::{Policy, Router};
 use tor_ssm::coordinator::scheduler::Scheduler;
 use tor_ssm::coordinator::metrics::Metrics;
@@ -155,10 +156,16 @@ fn demo(args: &Args) -> Result<()> {
 
     // ---- serve a small trace across the policy family's lanes ----
     let lanes = ["dense", "unified@0.2", "prune@0.2", "merge@0.2"];
-    let engines: Vec<Engine> = lanes
+    let mut engines: Vec<Engine> = lanes
         .iter()
         .map(|v| Engine::new(&rt, &man, &me, &w, v))
         .collect::<Result<_>>()?;
+    // Content-addressed prefix cache (DESIGN.md §12): requests sharing a
+    // chunk-aligned prompt prefix resume from a cached state snapshot
+    // instead of re-running prefill over the shared tokens.
+    for e in &mut engines {
+        e.attach_prefix_cache(std::sync::Arc::new(PrefixCache::new(8 << 20)));
+    }
     let mut router = Router::new(Policy::CostAware { long_prompt: man.prefill_seq_len / 2 }, &lanes);
     let mut schedulers: Vec<Scheduler> = engines.iter().map(Scheduler::new).collect();
     let mut metrics = Metrics::default();
@@ -179,13 +186,19 @@ fn demo(args: &Args) -> Result<()> {
         me.vocab_size,
     )?;
     println!("serve: {}", metrics.summary());
-    for (lane, s) in lanes.iter().zip(&schedulers) {
+    for ((lane, s), e) in lanes.iter().zip(&schedulers).zip(&engines) {
+        let cs = e.prefix_cache().map(|c| c.stats()).unwrap_or_default();
         println!(
-            "  {lane:<9} prefills={} decode_steps={} peak_state={} slots ({} B)",
+            "  {lane:<9} prefills={} decode_steps={} peak_state={} slots ({} B) \
+             preempts={} cache_hits={} misses={} hit_rate={:.2}",
             s.prefill_calls,
             s.decode_steps,
             s.store().high_water(),
-            s.store().peak_bytes()
+            s.store().peak_bytes(),
+            s.preemptions,
+            cs.hits,
+            cs.misses,
+            cs.hit_rate()
         );
     }
 
@@ -397,10 +410,16 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
         println!("exec: {}", tor_ssm::runtime::kernels::exec_summary());
     }
     println!("building engines for {lanes:?}...");
-    let engines: Vec<Engine> = lanes
+    let mut engines: Vec<Engine> = lanes
         .iter()
         .map(|v| Engine::new(&rt, &man, &me, &w, v))
         .collect::<Result<_>>()?;
+    // Shared-prefix requests resume from chunk-boundary state snapshots
+    // (DESIGN.md §12); the cache is per-lane because keys partition by
+    // (model, policy variant) anyway.
+    for e in &mut engines {
+        e.attach_prefix_cache(std::sync::Arc::new(PrefixCache::new(8 << 20)));
+    }
     let mut router = Router::new(policy, &lanes);
     let mut schedulers: Vec<Scheduler> = engines.iter().map(Scheduler::new).collect();
     let mut metrics = Metrics::default();
@@ -418,13 +437,19 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
     )?;
     println!("routing: {} requests over {:?}", router.routed, lanes);
     println!("{}", metrics.summary());
-    for (lane, s) in lanes.iter().zip(&schedulers) {
+    for ((lane, s), e) in lanes.iter().zip(&schedulers).zip(&engines) {
+        let cs = e.prefix_cache().map(|c| c.stats()).unwrap_or_default();
         println!(
-            "  {lane:<10} prefills={} decode_steps={} peak_state={} slots ({} B)",
+            "  {lane:<10} prefills={} decode_steps={} peak_state={} slots ({} B) \
+             preempts={} cache_hits={} misses={} hit_rate={:.2}",
             s.prefill_calls,
             s.decode_steps,
             s.store().high_water(),
-            s.store().peak_bytes()
+            s.store().peak_bytes(),
+            s.preemptions,
+            cs.hits,
+            cs.misses,
+            cs.hit_rate()
         );
     }
     Ok(())

@@ -315,6 +315,12 @@ impl ReferenceExecutable {
     /// * `conv0`/`ssm0` (frame-shaped, as returned by this call) resume a
     ///   chunked prefill: each lane's per-layer conv tail + scan state
     ///   carry in from the previous chunk instead of starting at zero.
+    ///   An all-zero lane in the resume frames is bit-identical to passing
+    ///   no resume input at all (the forward seeds zero state either way),
+    ///   which is what lets the engine mix resumed and cold lanes in one
+    ///   frame, and what the prefix-state cache (DESIGN.md §12) relies on:
+    ///   a snapshot captured at a chunk boundary, written back here later,
+    ///   reproduces the uninterrupted run exactly.
     fn prefill(&self, m: &RefModel, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let spec = &self.spec;
         ensure!(

@@ -14,13 +14,32 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summarise a sample vector. Quantiles use the **nearest-rank**
+    /// definition `v_sorted[⌈p·N⌉ − 1]` (rank clamped to 1..=N) — the same
+    /// definition as `coordinator::metrics::Metrics::pct`, so every bench
+    /// emitter reports identical percentile semantics (PERFORMANCE.md
+    /// §Schema; the two implementations are pinned against each other on a
+    /// shared test vector). An empty sample vector returns the documented
+    /// all-zero `Summary` (`n == 0`) instead of panicking, matching
+    /// `Metrics::pct`'s 0-on-empty — a zero-iteration bench config reports
+    /// an empty row, it does not abort the run.
     pub fn from_durations(mut ns: Vec<f64>) -> Summary {
-        assert!(!ns.is_empty());
+        if ns.is_empty() {
+            return Summary {
+                n: 0,
+                mean_ns: 0.0,
+                std_ns: 0.0,
+                min_ns: 0.0,
+                p50_ns: 0.0,
+                p99_ns: 0.0,
+                max_ns: 0.0,
+            };
+        }
         ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = ns.len();
         let mean = ns.iter().sum::<f64>() / n as f64;
         let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-        let q = |p: f64| ns[((n as f64 - 1.0) * p).round() as usize];
+        let q = |p: f64| ns[((p * n as f64).ceil() as usize).clamp(1, n) - 1];
         Summary {
             n,
             mean_ns: mean,
@@ -75,8 +94,54 @@ mod tests {
         assert_eq!(s.min_ns, 1.0);
         assert_eq!(s.max_ns, 100.0);
         assert!((s.mean_ns - 50.5).abs() < 1e-9);
-        assert!((s.p50_ns - 50.0).abs() <= 1.0);
-        assert!(s.p99_ns >= 98.0);
+        // Nearest-rank exactly: ⌈0.5·100⌉ = 50th, ⌈0.99·100⌉ = 99th.
+        assert_eq!(s.p50_ns, 50.0);
+        assert_eq!(s.p99_ns, 99.0);
+    }
+
+    /// The shared pinned vector from `coordinator::metrics`: the same known
+    /// 20 samples, deliberately unsorted, must produce the same nearest-rank
+    /// answers here AND through `Metrics::pct` — the two percentile
+    /// implementations are pinned against each other so they can never
+    /// silently diverge again (PERFORMANCE.md §Schema).
+    #[test]
+    fn summary_quantiles_agree_with_metrics_pct_on_pinned_vector() {
+        use crate::coordinator::metrics::Metrics;
+        let mut xs: Vec<u64> = (1..=20).map(|i| i * 10).collect(); // 10,20,...,200
+        // shuffle deterministically: reverse + swap pairs (same as the
+        // metrics-side test)
+        xs.reverse();
+        xs.swap(0, 7);
+        xs.swap(3, 15);
+        let s = Summary::from_durations(xs.iter().map(|&x| x as f64).collect());
+        assert_eq!(s.n, 20);
+        assert_eq!(s.p50_ns, 100.0); // ⌈0.50·20⌉ = 10th smallest
+        assert_eq!(s.p99_ns, 200.0); // ⌈0.99·20⌉ = 20th smallest
+        assert_eq!(s.min_ns, 10.0);
+        assert_eq!(s.max_ns, 200.0);
+        // Cross-pin: both emitters give identical answers on the vector.
+        assert_eq!(Metrics::pct(&xs, 0.5) as f64, s.p50_ns);
+        assert_eq!(Metrics::pct(&xs, 0.99) as f64, s.p99_ns);
+        // Odd count: the true median, not a neighbour (matches
+        // `Metrics::pct(&[5, 1, 9], 0.5) == 5`).
+        let s3 = Summary::from_durations(vec![5.0, 1.0, 9.0]);
+        assert_eq!(s3.p50_ns, 5.0);
+        assert_eq!(Metrics::pct(&[5, 1, 9], 0.5) as f64, s3.p50_ns);
+    }
+
+    /// An empty sample vector is a reportable empty row, not a panic —
+    /// matching `Metrics::pct`'s 0-on-empty semantics.
+    #[test]
+    fn summary_of_empty_samples_is_all_zero() {
+        let s = Summary::from_durations(Vec::new());
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean_ns, 0.0);
+        assert_eq!(s.std_ns, 0.0);
+        assert_eq!(s.min_ns, 0.0);
+        assert_eq!(s.p50_ns, 0.0);
+        assert_eq!(s.p99_ns, 0.0);
+        assert_eq!(s.max_ns, 0.0);
+        assert_eq!(s.mean(), Duration::ZERO);
     }
 
     #[test]

@@ -44,6 +44,7 @@ fn req(id: u64, plen: usize, gen_tokens: usize, vocab: usize) -> Request {
         gen_tokens,
         variant: String::new(),
         arrived_us: 0,
+        priority: Default::default(),
     }
 }
 
@@ -215,6 +216,76 @@ fn mixed_gen_trace_uses_fewer_decode_steps_than_lockstep() {
     // No state leaked.
     assert_eq!(sched.store().live(), 0);
     assert_eq!(sched.completed, 64);
+    cleanup(&dir);
+}
+
+/// Regression for the dead ready-ahead capacity: the admit loop used to
+/// stop the moment `ready.len() >= free_lanes`, so once every lane was
+/// occupied (`free_lanes == 0`) admission halted entirely and the
+/// `decode_batch + batch` slots `Scheduler::new` allocates for ready-ahead
+/// were unreachable — every retirement then stalled on a full prefill
+/// before the lane could refill. Now admission runs ahead by up to one
+/// prefill batch beyond the free lanes: with 2 lanes and 4 queued
+/// requests, BOTH prefill batches run in the very first step, the store's
+/// high-water mark exceeds the decode frame, and when a lane frees it is
+/// refilled from `ready` in the next iteration with no further prefill.
+#[test]
+fn admission_runs_ahead_so_freed_lanes_refill_without_prefill() {
+    let (dir, man) = fixture("readyahead");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let engine = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    assert_eq!(engine.decode_batch, 2, "test assumes the default 2-lane fixture");
+    assert_eq!(engine.batch, 2, "test assumes the default 2-wide prefill frame");
+
+    let mut sched = Scheduler::new(&engine);
+    assert_eq!(sched.store().capacity(), engine.decode_batch + engine.batch);
+    // Distinct generation lengths so exactly one sequence retires first.
+    for (i, g) in [3usize, 5, 4, 6].into_iter().enumerate() {
+        sched.submit(req(i as u64, plen / 2 + i, g, vocab));
+    }
+    let done = sched.step().unwrap();
+    assert!(done.is_empty(), "nothing completes on the first step");
+    // Ready-ahead: both prefill batches ran up front — the second one while
+    // the lanes were already spoken for (the old bound stopped at one).
+    assert_eq!(sched.prefill_calls, 2, "admission must prefill ahead of free lanes");
+    assert_eq!(sched.ready_ahead(), 2, "one full prefill batch waits beyond the lanes");
+    assert_eq!(sched.store().high_water(), 4);
+    assert!(
+        sched.store().high_water() > engine.decode_batch,
+        "ready-ahead must actually use the store slots beyond the decode frame"
+    );
+
+    // Drive to the first retirement (id 0, gen_tokens = 3).
+    let mut done = Vec::new();
+    while done.is_empty() {
+        done.extend(sched.step().unwrap());
+    }
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].id, 0);
+    let refills_before = sched.prefill_calls;
+    // The freed lane refills from the ready-ahead queue on the very next
+    // iteration — no new prefill call stands between retirement and
+    // placement (the stall the old admission bound forced every time).
+    sched.step().unwrap();
+    assert_eq!(
+        sched.prefill_calls, refills_before,
+        "freed lane must be refilled from ready-ahead, not via a fresh prefill"
+    );
+    assert_eq!(sched.ready_ahead(), 1, "one ready sequence took the lane, one still waits");
+
+    let rest = sched.drain().unwrap();
+    assert_eq!(sched.prefill_calls, 2, "the whole trace needs exactly two prefill calls");
+    assert_eq!(sched.completed, 4);
+    assert_eq!(sched.store().live(), 0, "slots leaked");
+    let mut all = by_id(&done);
+    all.extend(by_id(&rest));
+    for (i, g) in [3usize, 5, 4, 6].into_iter().enumerate() {
+        assert_eq!(all[&(i as u64)].len(), g, "request {i}: wrong generation length");
+    }
     cleanup(&dir);
 }
 

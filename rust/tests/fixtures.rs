@@ -167,6 +167,7 @@ fn coordinator_prefill_decode_loop_end_to_end() {
             gen_tokens,
             variant: String::new(),
             arrived_us: 0,
+            priority: Default::default(),
         };
         let lane = router.route(&req).unwrap();
         let li = lanes.iter().position(|l| *l == lane).unwrap();

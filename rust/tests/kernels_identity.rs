@@ -58,6 +58,7 @@ fn req(id: u64, plen: usize, gen_tokens: usize, vocab: usize) -> Request {
         gen_tokens,
         variant: String::new(),
         arrived_us: 0,
+        priority: Default::default(),
     }
 }
 

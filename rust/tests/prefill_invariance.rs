@@ -44,7 +44,14 @@ fn cleanup(dir: &Path) {
 }
 
 fn rq(id: u64, prompt: Vec<i32>) -> Request {
-    Request { id, prompt, gen_tokens: 1, variant: String::new(), arrived_us: 0 }
+    Request {
+        id,
+        prompt,
+        gen_tokens: 1,
+        variant: String::new(),
+        arrived_us: 0,
+        priority: Default::default(),
+    }
 }
 
 fn prompt(len: usize, salt: usize, vocab: usize) -> Vec<i32> {

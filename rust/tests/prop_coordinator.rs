@@ -35,7 +35,14 @@ fn for_cases(name: &str, mut f: impl FnMut(&mut Rng)) {
 }
 
 fn req(id: u64, plen: usize) -> Request {
-    Request { id, prompt: vec![0; plen], gen_tokens: 1, variant: String::new(), arrived_us: 0 }
+    Request {
+        id,
+        prompt: vec![0; plen],
+        gen_tokens: 1,
+        variant: String::new(),
+        arrived_us: 0,
+        priority: Default::default(),
+    }
 }
 
 #[test]

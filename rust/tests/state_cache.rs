@@ -1,0 +1,368 @@
+//! Prefix-state cache + preemption bit-identity suite (DESIGN.md §12;
+//! template: `tests/prefill_invariance.rs`). What it pins:
+//!
+//! * **warm vs cold**: prefilling a prompt through a warm [`PrefixCache`]
+//!   (resume from the longest chunk-aligned cached prefix, compute only the
+//!   remainder) produces the identical `PrefilledSeq` — conv, ssm, logits,
+//!   bit for bit — as a cold full prefill with no cache, for dense AND all
+//!   four reduction policies × two ratios, including prompts that share
+//!   only part of their prefix before diverging;
+//! * **preempt/resume**: a sequence swapped out of its decode lane by a
+//!   higher-priority arrival and resumed later generates exactly the tokens
+//!   of the uninterrupted all-Normal run, across both kernel modes ×
+//!   threads 1..=4 (the global exec knobs are process-wide, so those arms
+//!   serialise on a mutex);
+//! * **eviction**: under a byte budget tight enough to evict constantly,
+//!   the cache never serves a stale or truncated snapshot — every warm
+//!   result still equals its cold baseline (entries verify their stored
+//!   prefix tokens, so a hit is always the right state or no state).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use tor_ssm::coordinator::engine::{Engine, PrefilledSeq};
+use tor_ssm::coordinator::prefix_cache::PrefixCache;
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::{Priority, Request, Response};
+use tor_ssm::fixtures::generate_default;
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::kernels::{self, KernelMode};
+use tor_ssm::runtime::{pool, Runtime, Weights};
+
+/// The process-wide kernel/worker knobs must not race between the
+/// mode-sweeping tests in this binary.
+static EXEC_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    EXEC_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fixture(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!("tor-ssm-scache-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let man = generate_default(&dir).expect("fixture generation");
+    (dir, man)
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn rq(id: u64, prompt: Vec<i32>) -> Request {
+    Request {
+        id,
+        prompt,
+        gen_tokens: 1,
+        variant: String::new(),
+        arrived_us: 0,
+        priority: Priority::Normal,
+    }
+}
+
+fn prompt(len: usize, salt: usize, vocab: usize) -> Vec<i32> {
+    (0..len).map(|t| ((t * 7 + salt * 13 + 3) % vocab) as i32).collect()
+}
+
+fn assert_seq_eq(a: &PrefilledSeq, b: &PrefilledSeq, what: &str) {
+    assert_eq!(a.conv, b.conv, "{what}: conv state diverged");
+    assert_eq!(a.ssm, b.ssm, "{what}: ssm state diverged");
+    assert_eq!(a.logits, b.logits, "{what}: last-token logits diverged");
+}
+
+fn by_id(resps: &[Response]) -> BTreeMap<u64, Vec<i32>> {
+    let map: BTreeMap<u64, Vec<i32>> =
+        resps.iter().map(|r| (r.id, r.generated.clone())).collect();
+    assert_eq!(map.len(), resps.len(), "duplicate response ids");
+    map
+}
+
+const VARIANTS: [&str; 9] = [
+    "dense",
+    "unified@0.1",
+    "unified@0.2",
+    "prune@0.1",
+    "prune@0.2",
+    "merge@0.1",
+    "merge@0.2",
+    "random@0.1",
+    "random@0.2",
+];
+
+/// Warm-cache resume vs cold full prefill: identical states + logits for
+/// dense and every policy × ratio, on both archs. Covers full-prefix reuse
+/// (same prompt twice), a longer prompt extending a cached prefix, and a
+/// prompt that shares one frame then diverges (resumes from the shorter
+/// boundary only).
+#[test]
+fn warm_cache_resume_is_bit_identical_to_cold_prefill() {
+    let (dir, man) = fixture("warm");
+    let rt = Runtime::reference().unwrap();
+    let plen = man.prefill_seq_len;
+    for model_name in ["ref-mamba", "ref-mamba2"] {
+        let model = man.model(model_name).unwrap().clone();
+        let w = Weights::load_init(&man, &model).unwrap();
+        let vocab = model.vocab_size;
+        // Shared 2-frame system prefix; three continuations:
+        // a) prefix + half-frame tail (the cached-resume workhorse),
+        // b) prefix + 1 token (minimal remainder),
+        // c) one shared frame then divergent content (partial prefix hit).
+        let prefix = prompt(2 * plen, 1, vocab);
+        let mk = |tail: Vec<i32>| {
+            let mut p = prefix.clone();
+            p.extend(tail);
+            p
+        };
+        let pa = mk(prompt(plen / 2, 2, vocab));
+        let pb = mk(prompt(1, 3, vocab));
+        let mut pc = prefix[..plen].to_vec();
+        pc.extend(prompt(plen + 3, 4, vocab));
+        for variant in VARIANTS {
+            let cold = Engine::new(&rt, &man, &model, &w, variant).unwrap();
+            let mut warm = Engine::new(&rt, &man, &model, &w, variant).unwrap();
+            let cache = Arc::new(PrefixCache::new(1 << 22));
+            warm.attach_prefix_cache(Arc::clone(&cache));
+            let what = |p: &str| format!("{model_name}/{variant}/{p}");
+
+            // Seed the cache: one cold pass through the warm engine inserts
+            // every chunk-boundary snapshot; results must already equal the
+            // cache-less engine's (cache insertion is observation-only).
+            let (seed, _) = warm.prefill(&[rq(0, pa.clone())]).unwrap();
+            let (want_a, _) = cold.prefill(&[rq(0, pa.clone())]).unwrap();
+            assert_seq_eq(&seed[0], &want_a[0], &what("seed pass"));
+            assert_eq!(warm.resumed_tokens.load(Ordering::Relaxed), 0, "nothing cached yet");
+
+            // Warm pass A: same prompt resumes from its longest proper
+            // boundary (2 frames) and recomputes only the tail.
+            let fed0 = warm.prefill_tokens.load(Ordering::Relaxed);
+            let (got_a, _) = warm.prefill(&[rq(0, pa.clone())]).unwrap();
+            assert_seq_eq(&got_a[0], &want_a[0], &what("warm resume"));
+            assert_eq!(
+                warm.resumed_tokens.load(Ordering::Relaxed),
+                2 * plen as u64,
+                "{}: should resume from the 2-frame boundary",
+                what("warm resume")
+            );
+            assert_eq!(
+                warm.prefill_tokens.load(Ordering::Relaxed) - fed0,
+                (pa.len() - 2 * plen) as u64,
+                "{}: fed + resumed must cover the prompt exactly",
+                what("warm resume")
+            );
+
+            // Warm pass B: different tail, same cached prefix.
+            let (want_b, _) = cold.prefill(&[rq(1, pb.clone())]).unwrap();
+            let (got_b, _) = warm.prefill(&[rq(1, pb.clone())]).unwrap();
+            assert_seq_eq(&got_b[0], &want_b[0], &what("minimal remainder"));
+
+            // Warm pass C: shares only the first frame, then diverges — may
+            // resume from the 1-frame boundary only, never the 2-frame one.
+            let resumed0 = warm.resumed_tokens.load(Ordering::Relaxed);
+            let (want_c, _) = cold.prefill(&[rq(2, pc.clone())]).unwrap();
+            let (got_c, _) = warm.prefill(&[rq(2, pc.clone())]).unwrap();
+            assert_seq_eq(&got_c[0], &want_c[0], &what("divergent tail"));
+            assert_eq!(
+                warm.resumed_tokens.load(Ordering::Relaxed) - resumed0,
+                plen as u64,
+                "{}: divergent prompt must resume from the shared frame only",
+                what("divergent tail")
+            );
+
+            // Mixed warm/cold batch: a resumed lane next to a cold lane.
+            let fresh = prompt(plen + 5, 9, vocab);
+            let (want_mix, _) =
+                cold.prefill(&[rq(3, pa.clone()), rq(4, fresh.clone())]).unwrap();
+            let (got_mix, _) = warm.prefill(&[rq(3, pa.clone()), rq(4, fresh.clone())]).unwrap();
+            assert_seq_eq(&got_mix[0], &want_mix[0], &what("mixed batch, warm lane"));
+            assert_seq_eq(&got_mix[1], &want_mix[1], &what("mixed batch, cold lane"));
+
+            let s = cache.stats();
+            assert!(s.hits >= 4, "{model_name}/{variant}: expected warm hits, got {s:?}");
+            assert!(s.hit_rate() > 0.0);
+        }
+    }
+    cleanup(&dir);
+}
+
+/// Preempt-then-resume equals uninterrupted decode, token for token, across
+/// both kernel modes × threads 1..=4. The priority run must actually
+/// preempt (asserted), and the all-Normal baseline must not.
+#[test]
+fn preempt_then_resume_is_token_identical_across_modes_and_threads() {
+    let _g = lock();
+    let (dir, man) = fixture("preempt");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let engine = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    let lanes = engine.decode_batch;
+    assert!(lanes >= 2, "fixture decode frame too narrow for preemption");
+
+    // Long-running low-priority residents fill every lane; then a burst of
+    // high-priority arrivals must swap them out and finish first.
+    let low: Vec<Request> = (0..lanes as u64)
+        .map(|i| {
+            let mut r = rq(i, prompt(plen / 2 + i as usize, i as usize, vocab));
+            r.gen_tokens = 10 + i as usize;
+            r.priority = Priority::Low;
+            r
+        })
+        .collect();
+    let high: Vec<Request> = (0..2u64)
+        .map(|i| {
+            let mut r = rq(100 + i, prompt(plen / 3 + i as usize, 7 + i as usize, vocab));
+            r.gen_tokens = 3;
+            r.priority = Priority::High;
+            r
+        })
+        .collect();
+    let as_normal = |reqs: &[Request]| -> Vec<Request> {
+        reqs.iter()
+            .cloned()
+            .map(|mut r| {
+                r.priority = Priority::Normal;
+                r
+            })
+            .collect()
+    };
+
+    // Same submission timeline in both runs: lows, one step (they become
+    // resident), then the high burst, then drain.
+    let run = |lows: Vec<Request>, highs: Vec<Request>| -> (BTreeMap<u64, Vec<i32>>, u64) {
+        let mut sched = Scheduler::new(&engine);
+        let mut out = Vec::new();
+        for r in lows {
+            sched.submit(r);
+        }
+        out.extend(sched.step().unwrap());
+        for r in highs {
+            sched.submit(r);
+        }
+        out.extend(sched.drain().unwrap());
+        assert_eq!(sched.store().live(), 0, "slots leaked");
+        (by_id(&out), sched.preemptions)
+    };
+
+    kernels::set_mode(KernelMode::Scalar);
+    pool::set_workers(1);
+    let (want, base_preempts) = run(as_normal(&low), as_normal(&high));
+    assert_eq!(base_preempts, 0, "all-Normal trace must never preempt");
+    assert_eq!(want.len(), low.len() + high.len());
+
+    for mode in [KernelMode::Scalar, KernelMode::Fused] {
+        for threads in 1..=4usize {
+            kernels::set_mode(mode);
+            pool::set_workers(threads);
+            let (got, preempts) = run(low.clone(), high.clone());
+            assert!(
+                preempts > 0,
+                "{} kernels × {threads} threads: priority burst did not preempt",
+                mode.name()
+            );
+            assert_eq!(
+                want,
+                got,
+                "{} kernels × {threads} threads: preempt/resume changed generated tokens",
+                mode.name()
+            );
+        }
+    }
+    kernels::set_mode(KernelMode::Fused);
+    pool::set_workers(1);
+    cleanup(&dir);
+}
+
+/// A byte budget so tight the cache evicts on almost every insert must
+/// degrade only hit-rate, never correctness: every warm prefill still
+/// matches its cold baseline bit for bit, and evictions really happened.
+#[test]
+fn tight_budget_eviction_never_serves_stale_or_truncated_snapshots() {
+    let (dir, man) = fixture("evict");
+    let rt = Runtime::reference().unwrap();
+    let plen = man.prefill_seq_len;
+    let model = man.model("ref-mamba2").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    for variant in ["dense", "unified@0.2"] {
+        let cold = Engine::new(&rt, &man, &model, &w, variant).unwrap();
+        let mut warm = Engine::new(&rt, &man, &model, &w, variant).unwrap();
+        let (nl, conv_row, ssm_row) = warm.state_dims();
+        // Room for roughly two single-frame entries: every multi-boundary
+        // prompt overflows it and churns the LRU.
+        let entry = 4 * (plen + nl * conv_row + nl * ssm_row);
+        let cache = Arc::new(PrefixCache::new(2 * entry + entry / 2));
+        warm.attach_prefix_cache(Arc::clone(&cache));
+
+        // Distinct multi-frame prompts, interleaved twice each: second
+        // passes may hit (if the boundary survived) or miss (evicted) —
+        // either way the result must equal the cold engine's.
+        let prompts: Vec<Vec<i32>> =
+            (0..5).map(|k| prompt(2 * plen + 1 + k * 3, 20 + k, vocab)).collect();
+        for round in 0..2 {
+            for (k, p) in prompts.iter().enumerate() {
+                let id = (round * 10 + k) as u64;
+                let (want, _) = cold.prefill(&[rq(id, p.clone())]).unwrap();
+                let (got, _) = warm.prefill(&[rq(id, p.clone())]).unwrap();
+                assert_seq_eq(
+                    &got[0],
+                    &want[0],
+                    &format!("{variant}: prompt {k} round {round} under tight budget"),
+                );
+            }
+        }
+        let s = cache.stats();
+        assert!(s.evictions > 0, "{variant}: tight budget should evict, got {s:?}");
+        assert!(
+            s.used_bytes <= cache.budget_bytes(),
+            "{variant}: cache exceeded its byte budget: {s:?}"
+        );
+    }
+    cleanup(&dir);
+}
+
+/// End-to-end through the scheduler: a shared-system-prompt trace served
+/// with a warm cache produces exactly the tokens of the cache-less serve,
+/// while resuming most prompt tokens from snapshots.
+#[test]
+fn scheduler_serve_with_warm_cache_matches_uncached_serve() {
+    let (dir, man) = fixture("serve");
+    let rt = Runtime::reference().unwrap();
+    let plen = man.prefill_seq_len;
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let mut rng = tor_ssm::util::rng::Rng::new(17);
+    let trace = tor_ssm::fixtures::synth_shared_prefix_requests(
+        &mut rng,
+        12,
+        6,
+        plen,
+        2,
+        vocab,
+    );
+    let expected: u64 = trace.iter().map(|r| r.prompt.len() as u64).sum();
+
+    let plain = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+    let want = by_id(&Scheduler::new(&plain).run(trace.clone()).unwrap());
+    assert_eq!(plain.prefill_tokens.load(Ordering::Relaxed), expected, "uncached truncation");
+
+    let mut cached = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+    let cache = Arc::new(PrefixCache::new(1 << 22));
+    cached.attach_prefix_cache(Arc::clone(&cache));
+    // Cold serve (fills the cache), then warm serve (lives off it).
+    let cold_run = by_id(&Scheduler::new(&cached).run(trace.clone()).unwrap());
+    assert_eq!(want, cold_run, "cold cached serve diverged from uncached serve");
+    let warm0 = cached.resumed_tokens.load(Ordering::Relaxed);
+    let fed0 = cached.prefill_tokens.load(Ordering::Relaxed);
+    let warm_run = by_id(&Scheduler::new(&cached).run(trace).unwrap());
+    assert_eq!(want, warm_run, "warm cached serve diverged from uncached serve");
+    let resumed = cached.resumed_tokens.load(Ordering::Relaxed) - warm0;
+    let fed = cached.prefill_tokens.load(Ordering::Relaxed) - fed0;
+    assert_eq!(fed + resumed, expected, "fed + resumed must cover every prompt token");
+    assert!(resumed >= 12 * 2 * plen as u64, "warm serve should resume every shared prefix");
+    assert!(cache.stats().hit_rate() > 0.0);
+    cleanup(&dir);
+}
