@@ -50,6 +50,7 @@ fn main() -> Result<()> {
         if synthetic { "synthetic fixture" } else { "real artifacts" },
         n_requests
     );
+    println!("exec: {}", tor_ssm::runtime::kernels::exec_summary());
 
     let lanes = ["dense", "utrc@0.2"];
     let engines: Vec<Engine> = lanes

@@ -1,0 +1,130 @@
+"""Emit the int8-quantization golden fixture consumed by rust/tests/quant_golden.rs.
+
+The rust runtime quantizes the big matmul operands per output channel at
+load time (`rust/src/runtime/tensor.rs::quantize_rows/quantize_cols`,
+DESIGN.md §13): symmetric ``scale = max|w| / 127`` per channel, values
+rounded **half away from zero** (rust ``f32::round``) and saturated to
+±127 — never −128, so the grid stays symmetric. This script freezes those
+semantics into a checked-in JSON (inputs AND expected scales/q), the same
+pattern as `reduction_golden.py`, so CI enforces the lockstep.
+
+Pure stdlib on purpose — and, unusually for these fixtures, **bit-exact**:
+every arithmetic step below round-trips through f32 (struct pack/unpack),
+so the expected q values are integer-identical to the rust side, tie cases
+included, not merely close. (f64 arithmetic on f32 inputs rounded back to
+f32 is correctly-rounded single-precision for +,-,*,/ — the classic
+double-rounding-innocuous bound 53 >= 2*24 + 2 — so emulating f32 this way
+is exact.)
+
+Usage (from the repo root; stdlib only):
+
+    PYTHONPATH=python python3 python/compile/quant_golden.py
+
+Regenerate and commit the JSON whenever either side's scheme changes.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import random
+import struct
+
+
+def f32(x: float) -> float:
+    """Round a float to the nearest f32 (returned as the exact f64 value)."""
+    return struct.unpack("<f", struct.pack("<f", float(x)))[0]
+
+
+def round_half_away(x: float) -> float:
+    """Rust ``f32::round``: ties go away from zero (Python's round() banker's
+    rule would disagree on every .5 tie, so spell it out)."""
+    return math.copysign(math.floor(abs(x) + 0.5), x)
+
+
+def quantize_value(v: float, scale: float) -> int:
+    """One value onto the symmetric grid — mirrors tensor.rs::quantize_value."""
+    if scale == 0.0:
+        return 0
+    r = f32(f32(v) / scale)  # exact f32 division (see module docstring)
+    return int(max(-127.0, min(127.0, round_half_away(r))))
+
+
+def quantize(rows: list[list[float]], axis: str) -> tuple[list[float], list[list[int]]]:
+    """Per-row or per-column symmetric quantization of a dense matrix."""
+    n, d = len(rows), len(rows[0])
+    mat = [[f32(v) for v in row] for row in rows]
+    if axis == "row":
+        scales = [f32(max(abs(v) for v in row) / 127.0) for row in mat]
+        q = [[quantize_value(v, scales[r]) for v in row] for r, row in enumerate(mat)]
+    elif axis == "col":
+        scales = [f32(max(abs(mat[r][c]) for r in range(n)) / 127.0) for c in range(d)]
+        q = [[quantize_value(mat[r][c], scales[c]) for c in range(d)] for r in range(n)]
+    else:
+        raise ValueError(axis)
+    return scales, q
+
+
+def rounded_matrix(rng: random.Random, n: int, d: int) -> list[list[float]]:
+    # Round to 4 decimals so the JSON text (not the generator) is the ground
+    # truth both sides compute from.
+    return [[round(rng.uniform(-2.0, 2.0), 4) for _ in range(d)] for _ in range(n)]
+
+
+def golden() -> dict:
+    rng = random.Random(0x13_2024)
+
+    # --- hand-built edge cases -------------------------------------------
+    # row 0: saturation peak (2.54 -> 127), a .5-ratio tie (-1.27 -> -63.5
+    #        exactly in decimal, resolved by the away-from-zero rule on the
+    #        actual f32 ratio), sub-step values; row 1: all-zero channel
+    #        (scale 0 => q 0); row 2: tiny magnitudes (scale precision).
+    rows_edge = [
+        [2.54, -1.27, 0.635, 0.01],
+        [0.0, 0.0, 0.0, 0.0],
+        [-0.0005, 0.0005, 0.001, -0.001],
+    ]
+    # col 0 peak 4.0, col 1 peak 0.2: exercises per-column scale selection
+    # plus the 31.75 / 63.5 rounding cases the tensor.rs unit test pins.
+    cols_edge = [
+        [1.0, -0.2],
+        [-4.0, 0.1],
+    ]
+
+    # --- random matrices (fixture-dim-ish) -------------------------------
+    rows_rand = rounded_matrix(rng, 6, 10)
+    cols_rand = rounded_matrix(rng, 8, 6)
+
+    cases = []
+    for name, axis, data in [
+        ("rows_edge", "row", rows_edge),
+        ("rows_rand", "row", rows_rand),
+        ("cols_edge", "col", cols_edge),
+        ("cols_rand", "col", cols_rand),
+    ]:
+        scales, q = quantize(data, axis)
+        # Every nonzero channel's peak must hit the end of the grid: the
+        # scale is defined off that peak, so |q| == 127 there by
+        # construction. Assert it so an edit cannot silently change the
+        # scheme the fixture claims to pin.
+        for s, ch in zip(scales, q if axis == "row" else list(zip(*q))):
+            if s != 0.0:
+                assert max(abs(v) for v in ch) == 127, f"{name}: peak missed the grid end"
+        cases.append({"name": name, "axis": axis, "data": data, "scales": scales, "q": q})
+
+    return {"source": "python/compile/quant_golden.py", "cases": cases}
+
+
+def main() -> None:
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out = os.path.join(repo, "rust", "tests", "data", "quant_golden.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(golden(), fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,20 +1,29 @@
 //! Runtime kernel benchmark — the repo's decode-speed trajectory artifact
-//! (DESIGN.md §11, PERFORMANCE.md).
+//! (DESIGN.md §11/§13, PERFORMANCE.md).
 //!
-//! Sweeps the 2×2×2 execution matrix the lane-parallel fused decode path
-//! introduces — **kernels** (scalar interpreter vs fused block kernels) ×
-//! **threads** (1 vs min(lanes, cores)) × **variant** (dense vs
-//! `unified@0.2` token reduction) — serving the identical synthetic trace
-//! through the continuous-batching scheduler in every configuration, and
-//! emits `BENCH_runtime.json`: generated tokens/s plus p50/p95
-//! decode-step latency per configuration.
+//! Sweeps the execution matrix the kernel tiers and weight formats span —
+//! **kernels** (`scalar` interpreter vs `fused` block kernels vs `simd`
+//! vectorized tier) × **weights** (`f32` vs per-channel `int8`) ×
+//! **variant** (dense vs `unified@0.2` token reduction), each at 1 and
+//! min(lanes, cores) threads — serving the identical synthetic trace
+//! through the continuous-batching scheduler in every cell, and emits
+//! `BENCH_runtime.json`: generated tokens/s plus p50/p95 decode-step
+//! latency per cell.
 //!
-//! Because all eight configurations are bit-identical by contract, the
-//! bench also *asserts* that every configuration of a variant generated
-//! exactly the same tokens — a speed measurement that doubles as an
-//! end-to-end determinism check on real serving traffic.
+//! Every cell except simd×f32 is **bit-identical by contract** (the simd
+//! tier reassociates only the f32 logit head; int8 shares one
+//! accumulate-then-scale structure across all tiers — DESIGN.md §13), so
+//! the bench *asserts* token identity across the exact-contract cells of
+//! each (variant, weights) pair — a speed measurement that doubles as an
+//! end-to-end determinism check — and reports (without asserting) the
+//! served-token agreement of the simd×f32 cells against their oracle.
 //!
-//! A second section serves a **shared-system-prompt** trace three ways —
+//! A `quant_error` block teacher-forces the same token batch through the
+//! dense eval program under f32 and int8 weights and reports per-position
+//! logit divergence (max-abs, mean-abs) plus argmax agreement, asserting
+//! agreement ≥ 0.99 — the CI gate that int8 stays a *small* accuracy trade.
+//!
+//! A further section serves a **shared-system-prompt** trace three ways —
 //! uncached, cold prefix-state cache, warm cache (DESIGN.md §12) — and
 //! reports cache hit-rate, resumed-token counts, and the warm-prefill
 //! speedup, asserting zero bit-identity violations and a non-zero warm
@@ -43,7 +52,8 @@ use tor_ssm::coordinator::scheduler::Scheduler;
 use tor_ssm::coordinator::{Priority, Request};
 use tor_ssm::fixtures::{self, FixtureSpec};
 use tor_ssm::runtime::kernels::{self, KernelMode};
-use tor_ssm::runtime::{pool, Runtime};
+use tor_ssm::runtime::weights::{set_format, WeightFormat};
+use tor_ssm::runtime::{pool, HostTensor, Runtime};
 use tor_ssm::train::load_best_weights;
 use tor_ssm::util::json::{num, obj, s, Json};
 use tor_ssm::util::rng::Rng;
@@ -54,8 +64,16 @@ fn env_usize(key: &str, default: usize) -> usize {
 
 struct ConfigResult {
     kernels: KernelMode,
+    weights: WeightFormat,
     threads: usize,
     variant: &'static str,
+    /// Whether this cell is covered by the bit-identity contract (all
+    /// cells except simd×f32, whose f32 logit head reassociates).
+    exact_contract: bool,
+    /// Fraction of served tokens equal to the cell's (variant, weights)
+    /// oracle: 1.0 and asserted for exact-contract cells, reported as
+    /// measured for simd×f32.
+    token_agreement: f64,
     gen_tok_s: f64,
     total_tok_s: f64,
     wall_s: f64,
@@ -64,6 +82,17 @@ struct ConfigResult {
     p95_step_us: u64,
     p50_e2e_us: u64,
     p95_e2e_us: u64,
+}
+
+/// Per-token agreement between two served-token maps (same request ids).
+fn agreement(want: &BTreeMap<u64, Vec<i32>>, got: &BTreeMap<u64, Vec<i32>>) -> f64 {
+    let (mut same, mut total) = (0usize, 0usize);
+    for (id, w) in want {
+        let g = got.get(id).map(Vec::as_slice).unwrap_or(&[]);
+        total += w.len().max(g.len());
+        same += w.iter().zip(g).filter(|(a, b)| a == b).count();
+    }
+    same as f64 / total.max(1) as f64
 }
 
 fn main() {
@@ -119,7 +148,9 @@ fn main() {
     let expected_tokens: u64 = trace.iter().map(|r| r.prompt.len() as u64).sum();
     println!(
         "runtime bench on {model_name}: {n_requests} reqs, gen 1..={max_gen}, \
-         {lanes} decode lanes, N-thread arm = {n_threads} (of {cores} cores)"
+         {lanes} decode lanes, N-thread arm = {n_threads} (of {cores} cores), \
+         simd available: {}",
+        kernels::simd_available()
     );
     println!(
         "variable-length trace: prompts 1..={longest} tokens around a \
@@ -128,116 +159,240 @@ fn main() {
     );
 
     let variants: [&'static str; 2] = ["dense", "unified@0.2"];
-    let modes = [KernelMode::Scalar, KernelMode::Fused];
+    let modes = [KernelMode::Scalar, KernelMode::Fused, KernelMode::Simd];
+    let formats = [WeightFormat::F32, WeightFormat::Int8];
     let thread_arms = [1usize, n_threads];
 
     let mut results: Vec<ConfigResult> = Vec::new();
-    // Per-variant reference outputs: every config must reproduce them.
-    let mut oracle: BTreeMap<&str, BTreeMap<u64, Vec<i32>>> = BTreeMap::new();
+    // Per-(variant, weights) reference outputs: every exact-contract cell
+    // must reproduce them bit for bit; simd×f32 reports its agreement.
+    let mut oracle: BTreeMap<(&str, &str), BTreeMap<u64, Vec<i32>>> = BTreeMap::new();
     // Worst measured prompt-token shortfall across configs (0 = nothing
     // truncated anywhere); asserted 0 per config, reported as measured.
     let mut truncated_tokens = 0u64;
+    // Exact-contract token mismatches (asserted 0 cell by cell below, and
+    // emitted top-level so CI can grep the aggregate).
+    let mut matrix_identity_violations = 0usize;
 
-    for mode in modes {
-        for &threads in &thread_arms {
-            if threads == 1 && n_threads == 1 && results.iter().any(|r| r.kernels == mode) {
-                continue; // 1-core machine: the arms coincide, skip the dup
-            }
-            for variant in variants {
-                kernels::set_mode(mode);
-                pool::set_workers(threads);
-                let engine =
-                    Engine::new(&rt, &man, &model, &w, variant).expect("engine for bench variant");
-                assert!(engine.length_aware, "fixture prefill entries must be length-aware");
-                let mut sched = Scheduler::new(&engine);
-                let mut m = Metrics::default();
-                let t0 = Instant::now();
-                let resps = sched.run(trace.clone()).expect("serve");
-                m.wall = t0.elapsed();
-                assert_eq!(resps.len(), n_requests, "{variant}: lost responses");
-                // Zero-truncation gate, MEASURED at the frame-packing site:
-                // Engine::prefill_tokens counts the true prompt tokens fed
-                // into executed prefill frames (padding and idle chunk
-                // lanes excluded), so any truncation anywhere in the
-                // prefill path — including a reintroduced resize+slice —
-                // shows up as a shortfall against the trace's own count.
-                let fed = engine.prefill_tokens.load(Ordering::Relaxed);
-                truncated_tokens = truncated_tokens.max(expected_tokens.saturating_sub(fed));
-                assert_eq!(
-                    fed, expected_tokens,
-                    "{variant}: prefill fed {fed} of {expected_tokens} prompt tokens (truncation!)"
-                );
-                for r in &resps {
-                    m.record_response(r);
-                }
-
-                // Determinism gate: identical tokens in every configuration.
-                let tokens: BTreeMap<u64, Vec<i32>> =
-                    resps.iter().map(|r| (r.id, r.generated.clone())).collect();
-                match oracle.get(variant) {
-                    None => {
-                        oracle.insert(variant, tokens);
+    for fmt in formats {
+        // The upload snapshots the format knob (DESIGN.md §13), so engines
+        // are built per format, then reused across modes and thread arms.
+        set_format(fmt);
+        for variant in variants {
+            let engine =
+                Engine::new(&rt, &man, &model, &w, variant).expect("engine for bench variant");
+            assert!(engine.length_aware, "fixture prefill entries must be length-aware");
+            for mode in modes {
+                for &threads in &thread_arms {
+                    if threads == 1
+                        && n_threads == 1
+                        && results.iter().any(|r| {
+                            r.kernels == mode && r.weights == fmt && r.variant == variant
+                        })
+                    {
+                        continue; // 1-core machine: the arms coincide, skip the dup
                     }
-                    Some(want) => assert_eq!(
-                        want,
-                        &tokens,
-                        "{variant}: {}-kernel {threads}-thread run changed generated tokens",
-                        mode.name()
-                    ),
-                }
+                    kernels::set_mode(mode);
+                    pool::set_workers(threads);
+                    let mut sched = Scheduler::new(&engine);
+                    let mut m = Metrics::default();
+                    let fed0 = engine.prefill_tokens.load(Ordering::Relaxed);
+                    let t0 = Instant::now();
+                    let resps = sched.run(trace.clone()).expect("serve");
+                    m.wall = t0.elapsed();
+                    assert_eq!(resps.len(), n_requests, "{variant}: lost responses");
+                    // Zero-truncation gate, MEASURED at the frame-packing
+                    // site: Engine::prefill_tokens counts the true prompt
+                    // tokens fed into executed prefill frames (padding and
+                    // idle chunk lanes excluded), so any truncation anywhere
+                    // in the prefill path shows up as a shortfall against
+                    // the trace's own count.
+                    let fed = engine.prefill_tokens.load(Ordering::Relaxed) - fed0;
+                    truncated_tokens = truncated_tokens.max(expected_tokens.saturating_sub(fed));
+                    assert_eq!(
+                        fed, expected_tokens,
+                        "{variant}: prefill fed {fed} of {expected_tokens} prompt tokens \
+                         (truncation!)"
+                    );
+                    for r in &resps {
+                        m.record_response(r);
+                    }
 
-                let r = ConfigResult {
-                    kernels: mode,
-                    threads,
-                    variant,
-                    gen_tok_s: m.throughput_tok_s(),
-                    total_tok_s: m.total_tok_s(),
-                    wall_s: m.wall.as_secs_f64(),
-                    decode_steps: sched.decode_steps,
-                    p50_step_us: Metrics::pct(&sched.decode_step_us, 0.5),
-                    p95_step_us: Metrics::pct(&sched.decode_step_us, 0.95),
-                    p50_e2e_us: Metrics::pct(&m.e2e_us, 0.5),
-                    p95_e2e_us: Metrics::pct(&m.e2e_us, 0.95),
-                };
-                println!(
-                    "  {:<6} kernels  {} thread(s)  {:<12} {:>8.0} gen tok/s  \
-                     step p50 {:>6}µs p95 {:>6}µs  ({} steps)",
-                    mode.name(),
-                    threads,
-                    variant,
-                    r.gen_tok_s,
-                    r.p50_step_us,
-                    r.p95_step_us,
-                    r.decode_steps
-                );
-                results.push(r);
+                    // Determinism gate: identical tokens in every
+                    // exact-contract cell of this (variant, weights) pair.
+                    // simd×f32 may legitimately differ (reassociated f32
+                    // head -> different sampled tokens); its agreement is
+                    // recorded, not asserted.
+                    let exact = !(mode == KernelMode::Simd && fmt == WeightFormat::F32);
+                    let tokens: BTreeMap<u64, Vec<i32>> =
+                        resps.iter().map(|r| (r.id, r.generated.clone())).collect();
+                    let key = (variant, fmt.name());
+                    let token_agreement = match oracle.get(&key) {
+                        None => {
+                            assert!(
+                                exact,
+                                "cell ordering bug: simd×f32 must never seed the oracle"
+                            );
+                            oracle.insert(key, tokens);
+                            1.0
+                        }
+                        Some(want) => {
+                            let a = agreement(want, &tokens);
+                            if exact {
+                                if *want != tokens {
+                                    matrix_identity_violations += 1;
+                                }
+                                assert_eq!(
+                                    want,
+                                    &tokens,
+                                    "{variant}/{}: {}-kernel {threads}-thread run changed \
+                                     generated tokens",
+                                    fmt.name(),
+                                    mode.name()
+                                );
+                            }
+                            a
+                        }
+                    };
+
+                    let r = ConfigResult {
+                        kernels: mode,
+                        weights: fmt,
+                        threads,
+                        variant,
+                        exact_contract: exact,
+                        token_agreement,
+                        gen_tok_s: m.throughput_tok_s(),
+                        total_tok_s: m.total_tok_s(),
+                        wall_s: m.wall.as_secs_f64(),
+                        decode_steps: sched.decode_steps,
+                        p50_step_us: Metrics::pct(&sched.decode_step_us, 0.5),
+                        p95_step_us: Metrics::pct(&sched.decode_step_us, 0.95),
+                        p50_e2e_us: Metrics::pct(&m.e2e_us, 0.5),
+                        p95_e2e_us: Metrics::pct(&m.e2e_us, 0.95),
+                    };
+                    println!(
+                        "  {:<6} kernels  {:<4} weights  {} thread(s)  {:<12} \
+                         {:>8.0} gen tok/s  step p50 {:>6}µs p95 {:>6}µs  ({} steps)",
+                        mode.name(),
+                        fmt.name(),
+                        threads,
+                        variant,
+                        r.gen_tok_s,
+                        r.p50_step_us,
+                        r.p95_step_us,
+                        r.decode_steps
+                    );
+                    results.push(r);
+                }
             }
         }
     }
 
     // Headline ratios (guarded: on a 1-core box some arms coincide).
-    let find = |k: KernelMode, t: usize, v: &str| {
+    let find = |k: KernelMode, f: WeightFormat, t: usize, v: &str| {
         results
             .iter()
-            .find(|r| r.kernels == k && r.threads == t && r.variant == v)
+            .find(|r| r.kernels == k && r.weights == f && r.threads == t && r.variant == v)
             .map(|r| r.gen_tok_s)
     };
-    let scalar_1 = find(KernelMode::Scalar, 1, "dense");
-    let fused_1 = find(KernelMode::Fused, 1, "dense");
-    let fused_n = find(KernelMode::Fused, n_threads, "dense").or(fused_1);
-    let fused_n_red = find(KernelMode::Fused, n_threads, "unified@0.2")
-        .or_else(|| find(KernelMode::Fused, 1, "unified@0.2"));
+    let f32_ = WeightFormat::F32;
+    let i8_ = WeightFormat::Int8;
+    let scalar_1 = find(KernelMode::Scalar, f32_, 1, "dense");
+    let fused_1 = find(KernelMode::Fused, f32_, 1, "dense");
+    let fused_n = find(KernelMode::Fused, f32_, n_threads, "dense").or(fused_1);
+    let simd_n = find(KernelMode::Simd, f32_, n_threads, "dense")
+        .or_else(|| find(KernelMode::Simd, f32_, 1, "dense"));
+    let fused_n_red = find(KernelMode::Fused, f32_, n_threads, "unified@0.2")
+        .or_else(|| find(KernelMode::Fused, f32_, 1, "unified@0.2"));
+    let simd_n_i8 = find(KernelMode::Simd, i8_, n_threads, "dense")
+        .or_else(|| find(KernelMode::Simd, i8_, 1, "dense"));
+    let fused_n_i8 = find(KernelMode::Fused, i8_, n_threads, "dense")
+        .or_else(|| find(KernelMode::Fused, i8_, 1, "dense"));
     if let (Some(s1), Some(f1), Some(fnn)) = (scalar_1, fused_1, fused_n) {
         println!(
-            "headline: fused 1-thread {:.2}x, fused {n_threads}-thread {:.2}x over scalar 1-thread",
+            "headline: fused 1-thread {:.2}x, fused {n_threads}-thread {:.2}x over scalar \
+             1-thread",
             f1 / s1,
             fnn / s1
         );
     }
+    if let (Some(sd), Some(fnn)) = (simd_n, fused_n) {
+        println!("headline: simd {n_threads}-thread {:.2}x over fused {n_threads}-thread", sd / fnn);
+    }
+    if let (Some(q), Some(f)) = (simd_n_i8, simd_n) {
+        println!("headline: int8 {:.2}x over f32 on the simd {n_threads}-thread tier", q / f);
+    }
+
+    // ---- quant_error: teacher-forced f32 vs int8 logit divergence --------
+    // Same token batch through the dense eval program under both weight
+    // formats (the knob is snapshotted at upload, so one executable runs
+    // both uploads). Int8 is bit-identical across tiers, so one mode
+    // suffices; fused×N keeps the smoke fast.
+    kernels::set_mode(KernelMode::Fused);
+    pool::set_workers(n_threads);
+    let entry = model
+        .find_eval("dense", 0.0, None, None, None, None)
+        .expect("dense eval entry")
+        .clone();
+    let exe = rt.load_entry_with_policy(&man, &model, &entry, None).expect("dense eval program");
+    let eval_toks: Vec<i32> = (0..entry.batch * entry.seq_len)
+        .map(|i| ((i * 13 + 5) % model.vocab_size) as i32)
+        .collect();
+    let tok = HostTensor::i32(vec![entry.batch, entry.seq_len], eval_toks);
+    set_format(WeightFormat::F32);
+    let dw_f32 = rt.upload_weights(&model, &w).expect("f32 upload");
+    let out_f32 = exe.execute(&dw_f32, std::slice::from_ref(&tok)).expect("f32 eval");
+    set_format(WeightFormat::Int8);
+    let dw_i8 = rt.upload_weights(&model, &w).expect("int8 upload");
+    let out_i8 = exe.execute(&dw_i8, std::slice::from_ref(&tok)).expect("int8 eval");
+    set_format(WeightFormat::F32);
+    let (lf, lq) = (out_f32[0].as_f32().expect("logits"), out_i8[0].as_f32().expect("logits"));
+    assert_eq!(lf.len(), lq.len(), "quant_error: logit shapes diverged");
+    let v = model.vocab_size;
+    let positions = lf.len() / v;
+    let (mut max_abs, mut sum_abs, mut agree) = (0.0f64, 0.0f64, 0usize);
+    for p in 0..positions {
+        let (rf, rq) = (&lf[p * v..(p + 1) * v], &lq[p * v..(p + 1) * v]);
+        let argmax = |row: &[f32]| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        agree += usize::from(argmax(rf) == argmax(rq));
+        for (a, b) in rf.iter().zip(rq) {
+            let e = (*a as f64 - *b as f64).abs();
+            max_abs = max_abs.max(e);
+            sum_abs += e;
+        }
+    }
+    let mean_abs = sum_abs / lf.len().max(1) as f64;
+    let argmax_agreement = agree as f64 / positions.max(1) as f64;
+    println!(
+        "quant_error (dense eval, {positions} positions): max_abs {max_abs:.3e}, \
+         mean_abs {mean_abs:.3e}, argmax agreement {argmax_agreement:.4}"
+    );
+    // The CI gate: int8 must stay a *small* accuracy trade. 0.99 leaves
+    // room for genuinely near-tied logits to flip without letting a broken
+    // quantization path (wrong scales, wrong axis) slip through.
+    assert!(
+        argmax_agreement >= 0.99,
+        "int8 argmax agreement {argmax_agreement:.4} fell below the 0.99 gate"
+    );
+    let quant_error_json = obj(vec![
+        ("positions", num(positions as f64)),
+        ("max_abs_logit_diff", num(max_abs)),
+        ("mean_abs_logit_diff", num(mean_abs)),
+        ("argmax_agreement", num(argmax_agreement)),
+        ("argmax_gate", num(0.99)),
+        ("argmax_gate_ok", Json::Bool(argmax_agreement >= 0.99)),
+    ]);
 
     // ---- prefix-state cache + preemption rows (DESIGN.md §12) -----------
     // Shared-system-prompt trace: every prompt = the same 2-frame prefix +
-    // a unique 1..=frame tail. Served three ways on the fused N-thread
+    // a unique 1..=frame tail. Served three ways on the fused N-thread f32
     // config: (A) uncached baseline, (B) cold cache (fills it), (C) warm
     // cache (lives off it). All three must generate identical tokens —
     // the bit-identity gate CI asserts — while (C) resumes every shared
@@ -304,10 +459,11 @@ fn main() {
     let diffs = |got: &BTreeMap<u64, Vec<i32>>| {
         base_tokens.iter().filter(|(id, toks)| got.get(*id) != Some(*toks)).count()
     };
-    let bit_identity_violations = diffs(&cold_tokens) + diffs(&warm_tokens);
+    let bit_identity_violations =
+        diffs(&cold_tokens) + diffs(&warm_tokens) + matrix_identity_violations;
     assert_eq!(
         bit_identity_violations, 0,
-        "prefix-cache serving changed generated tokens (cold and/or warm)"
+        "prefix-cache serving or the kernel matrix changed generated tokens"
     );
 
     // (D) preemption: low-priority residents fill every lane, then a
@@ -417,8 +573,11 @@ fn main() {
         .map(|r| {
             obj(vec![
                 ("kernels", s(r.kernels.name())),
+                ("weights", s(r.weights.name())),
                 ("threads", num(r.threads as f64)),
                 ("variant", s(r.variant)),
+                ("exact_contract", Json::Bool(r.exact_contract)),
+                ("token_agreement", num(r.token_agreement)),
                 ("gen_tok_s", num(r.gen_tok_s)),
                 ("total_tok_s", num(r.total_tok_s)),
                 ("wall_s", num(r.wall_s)),
@@ -446,6 +605,8 @@ fn main() {
         ("max_gen_tokens", num(max_gen as f64)),
         ("decode_lanes", num(lanes as f64)),
         ("threads_n_arm", num(n_threads as f64)),
+        ("simd_available", Json::Bool(kernels::simd_available())),
+        ("bit_identity_violations", num(bit_identity_violations as f64)),
         (
             "variable_length",
             obj(vec![
@@ -457,10 +618,14 @@ fn main() {
                 ("truncated_tokens", num(truncated_tokens as f64)),
             ]),
         ),
+        ("quant_error", quant_error_json),
         ("prefix_cache", prefix_cache_json),
         ("configs", Json::Arr(rows)),
         ("fused_1t_speedup_dense", ratio(fused_1, scalar_1)),
         ("fused_nt_speedup_dense", ratio(fused_n, scalar_1)),
+        ("simd_nt_speedup_over_fused_nt_dense", ratio(simd_n, fused_n)),
+        ("int8_speedup_over_f32_simd_nt_dense", ratio(simd_n_i8, simd_n)),
+        ("int8_speedup_over_f32_fused_nt_dense", ratio(fused_n_i8, fused_n)),
         ("unified02_speedup_over_dense_fused_nt", ratio(fused_n_red, fused_n)),
     ]);
     let out =

@@ -44,15 +44,22 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::from_env(&["fresh", "aligned", "quiet"]);
     let artifacts = args.get_or("artifacts", &tor_ssm::artifacts_dir());
-    // Execution knobs for the reference backend's hot path (DESIGN.md §11,
-    // PERFORMANCE.md): both are bit-identity-preserving, so they change
-    // speed, never outputs.
+    // Execution knobs for the reference backend's hot path (DESIGN.md
+    // §11/§13, PERFORMANCE.md). `--threads` and `--kernels scalar|fused`
+    // are bit-identity-preserving; `--kernels simd` reassociates only the
+    // f32 logit head (documented error bound), and `--weights int8`
+    // trades logits accuracy for speed (bit-identical across tiers).
     if let Some(t) = args.get("threads") {
         let n: usize = t.parse().with_context(|| format!("--threads {t:?} is not a count"))?;
         tor_ssm::runtime::pool::set_workers(n);
     }
     if let Some(k) = args.get("kernels") {
         tor_ssm::runtime::kernels::set_mode(tor_ssm::runtime::kernels::KernelMode::from_name(k)?);
+    }
+    if let Some(f) = args.get("weights") {
+        tor_ssm::runtime::weights::set_format(tor_ssm::runtime::weights::WeightFormat::from_name(
+            f,
+        )?);
     }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
 
@@ -91,8 +98,14 @@ commands:
 common: --artifacts DIR (default ./artifacts, or $REPRO_ARTIFACTS)
         --backend reference|pjrt (default reference; pjrt needs the cargo feature)
         --threads N (decode worker threads; default: all cores, env TOR_SSM_THREADS)
-        --kernels scalar|fused (reference-backend kernels; default fused,
-        env TOR_SSM_KERNELS — both settings change speed, never outputs)";
+        --kernels scalar|fused|simd (reference-backend kernels; default fused,
+        env TOR_SSM_KERNELS — scalar|fused change speed, never outputs;
+        simd additionally vectorizes the f32 logit head under a documented
+        error bound, so sampled tokens may differ)
+        --weights f32|int8 (weight storage; default f32, env TOR_SSM_WEIGHTS —
+        int8 quantizes the projection/embedding matrices per channel at load
+        time; outputs shift by quantization error but are identical across
+        kernel tiers and thread counts)";
 
 fn backend_of(args: &Args) -> String {
     args.get_or("backend", "reference")
@@ -150,6 +163,7 @@ fn demo(args: &Args) -> Result<()> {
     println!("synthetic fixture: {:?} ({} models)", man.root, man.models.len());
 
     let rt = Runtime::reference()?;
+    println!("exec: {}", tor_ssm::runtime::kernels::exec_summary());
     let model = args.get_or("model", "ref-mamba");
     let me = man.model(&model)?.clone();
     let (w, _) = load_best_weights(&man, &me)?;

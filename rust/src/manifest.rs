@@ -68,6 +68,11 @@ pub struct ModelEntry {
     pub param_count: u64,
     pub params: Vec<ParamMeta>,
     pub init_weights: String,
+    /// Optional default weight storage format for this model
+    /// (`"f32"` | `"int8"`, manifest key `weights_format`). Validated at
+    /// parse time; an explicit `--weights` / `TOR_SSM_WEIGHTS` setting
+    /// overrides it — see `runtime::weights::effective_format`.
+    pub weights_format: Option<String>,
     pub hlo: BTreeMap<String, HloEntry>,
 }
 
@@ -167,6 +172,15 @@ impl Manifest {
                 hlo.insert(tag.clone(), entry);
             }
 
+            let weights_format = m
+                .get("weights_format")
+                .and_then(|v| v.as_str())
+                .map(str::to_string);
+            if let Some(f) = &weights_format {
+                crate::runtime::weights::WeightFormat::from_name(f)
+                    .with_context(|| format!("model {name:?}: bad weights_format"))?;
+            }
+
             models.insert(
                 name.clone(),
                 ModelEntry {
@@ -180,6 +194,7 @@ impl Manifest {
                     param_count: m.f64_of("param_count") as u64,
                     params,
                     init_weights: m.str_of("init_weights"),
+                    weights_format,
                     hlo,
                 },
             );

@@ -1,8 +1,8 @@
 //! Fused, cache-blocked decode/forward kernels for the reference backend,
-//! plus the process-wide [`KernelMode`] switch between them and the legacy
-//! scalar interpreter (PERFORMANCE.md; DESIGN.md §11).
+//! plus the process-wide [`KernelMode`] switch between the three tiers
+//! (PERFORMANCE.md; DESIGN.md §11, §13).
 //!
-//! ## Why a second implementation of the same math
+//! ## Why more than one implementation of the same math
 //!
 //! The scalar interpreter in [`reference`](super::reference) walks one token
 //! through one layer at a time, re-streaming every weight matrix from memory
@@ -12,30 +12,49 @@
 //! once per token, and around **fusion** (RMSNorm folds into the
 //! in-projection read, the SiLU gate folds into the scan emit, the output
 //! projection accumulates straight into the residual rows) so intermediate
-//! buffers stay block-sized and L1-resident.
+//! buffers stay block-sized and L1-resident. The `simd` tier keeps the
+//! fused structure and lowers the per-token inner loops to AVX2+FMA
+//! intrinsics when the CPU has them ([`simd_available`]), with portable
+//! fallbacks that compute the **same bits** on any architecture.
 //!
-//! ## The determinism contract
+//! ## The determinism contract, per tier
 //!
-//! Every kernel here is **bit-identical** to the scalar path, by
-//! construction, not by tolerance (PERFORMANCE.md §Determinism):
+//! * `scalar` — the plain-loop oracle every other configuration is pinned
+//!   against, and the baseline arm of `benches/runtime.rs`.
+//! * `fused` — **bit-identical** to scalar, by construction, not by
+//!   tolerance: blocking only re-tiles loops over *independent* outputs
+//!   (tokens × output channels), so for every accumulated scalar the
+//!   sequence of f32 operations — and therefore every intermediate
+//!   rounding — is exactly the scalar path's sequence; recurrent state
+//!   (the conv window, the scan state `h`) is carried token-sequentially
+//!   inside and across blocks, never reassociated; lane parallelism
+//!   ([`pool`](super::pool)) only shards *which thread* computes a lane.
+//! * `simd` — bit-identical to scalar **everywhere except the f32 head**:
+//!   the rank-1 updates ([`axpy`]) and the scan state update
+//!   ([`scan_gate_seq`]/[`scan_gate_batch`]) vectorize with the scalar
+//!   expressions' exact rounding sequence (separate mul/add, never a
+//!   contracted fma), so projections, conv, scan state, residuals and the
+//!   reduction `kept` maps carry the same bits as scalar. The one
+//!   reassociating reduction is [`head_norm_logits`] over f32 weights,
+//!   which switches to the deterministic chunked dot [`dot8`]; its
+//!   error-bound contract vs the ascending scalar sum —
+//!   `|dot8 − ascending| ≤ 2·d·ε·Σ|xᵢ·yᵢ|`, ε = f32 machine epsilon — is
+//!   documented in PERFORMANCE.md §Kernel tiers & weight formats and
+//!   pinned by a unit test below. Only final logits can differ, within
+//!   that bound.
 //!
-//! * blocking only re-tiles loops over *independent* outputs (tokens ×
-//!   output channels); for every accumulated scalar, the sequence of f32
-//!   operations — and therefore every intermediate rounding — is exactly
-//!   the scalar path's sequence;
-//! * recurrent state (the conv window, the scan state `h`) is carried
-//!   token-sequentially inside and across blocks, never reassociated;
-//! * lane parallelism ([`pool`](super::pool)) only shards *which thread*
-//!   computes a lane; no arithmetic moves across lanes.
+//! Int8 weights ([`MatRef::I8`], quantized per output channel in
+//! [`weights`](super::weights)) change outputs vs f32 by quantization
+//! error, but are **bit-identical across all three tiers** at any thread
+//! count: every tier accumulates the unscaled i8 dot in the same order,
+//! applies the per-channel scale once at the end, and the head uses the
+//! shared [`dot8_i8`] reduction in every tier. `tests/kernels_identity.rs`
+//! pins all of this end to end.
 //!
-//! This is what lets every golden / policy / continuous-batching test double
-//! as a correctness oracle for the fused and multi-threaded paths, and it is
-//! pinned directly by `tests/kernels_identity.rs`.
-//!
-//! All kernels take raw `&[f32]` slices with explicit dims so they are
-//! testable without a bound model; the reference backend wires them to its
-//! weight views. `nt` is always the number of rows (tokens or decode lanes)
-//! in the block.
+//! All kernels take raw slices with explicit dims so they are testable
+//! without a bound model; the reference backend wires them to its weight
+//! views. `nt` is always the number of rows (tokens or decode lanes) in
+//! the block.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
@@ -48,20 +67,22 @@ use anyhow::{bail, Result};
 pub const TOKEN_BLOCK: usize = 16;
 
 // ---------------------------------------------------------------------------
-// Kernel mode: scalar interpreter vs fused block kernels
+// Kernel mode: scalar interpreter vs fused block kernels vs simd
 // ---------------------------------------------------------------------------
 
 /// Which implementation of the reference-backend math runs.
 ///
-/// Both modes compute bit-identical results (see the module docs); `Scalar`
-/// is kept as the plain-loop oracle the fused path is pinned against, and as
-/// the baseline arm of `benches/runtime.rs`.
+/// `Scalar` and `Fused` compute bit-identical results; `Simd` is
+/// bit-identical except the f32 head reduction (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelMode {
     /// The original one-token-at-a-time interpreter loops.
     Scalar,
     /// Cache-blocked, fused kernels (this module).
     Fused,
+    /// The fused kernels with vectorized inner loops (AVX2+FMA when the
+    /// CPU has them, bit-identical portable fallbacks otherwise).
+    Simd,
 }
 
 impl KernelMode {
@@ -71,13 +92,15 @@ impl KernelMode {
     /// use tor_ssm::runtime::kernels::KernelMode;
     /// assert_eq!(KernelMode::from_name("scalar").unwrap(), KernelMode::Scalar);
     /// assert_eq!(KernelMode::from_name("fused").unwrap(), KernelMode::Fused);
-    /// assert!(KernelMode::from_name("simd").is_err());
+    /// assert_eq!(KernelMode::from_name("simd").unwrap(), KernelMode::Simd);
+    /// assert!(KernelMode::from_name("avx512").is_err());
     /// ```
     pub fn from_name(name: &str) -> Result<KernelMode> {
         match name {
             "scalar" => Ok(KernelMode::Scalar),
             "fused" | "" => Ok(KernelMode::Fused),
-            other => bail!("unknown kernel mode {other:?} (expected scalar|fused)"),
+            "simd" => Ok(KernelMode::Simd),
+            other => bail!("unknown kernel mode {other:?} (expected scalar|fused|simd)"),
         }
     }
 
@@ -85,28 +108,36 @@ impl KernelMode {
         match self {
             KernelMode::Scalar => "scalar",
             KernelMode::Fused => "fused",
+            KernelMode::Simd => "simd",
         }
     }
 }
 
 /// Process-wide mode. 0 = unset (resolve from env on first read),
-/// 1 = scalar, 2 = fused.
+/// 1 = scalar, 2 = fused, 3 = simd.
 static MODE: AtomicU8 = AtomicU8::new(0);
 
+/// The `[warn] ignoring <VAR>: <parse error>; using <fallback>` line both
+/// env knobs print for a typo'd value — a typo must not silently measure
+/// the wrong configuration. Factored out so the unit tests can pin that
+/// the warning enumerates the full accepted set.
+pub(crate) fn ignored_env_warning(var: &str, e: &anyhow::Error, fallback: &str) -> String {
+    format!("[warn] ignoring {var}: {e:#}; using {fallback}")
+}
+
 /// The active kernel mode. Defaults to [`KernelMode::Fused`]; the first
-/// read honours `TOR_SSM_KERNELS=scalar|fused`, and [`set_mode`] overrides
-/// at any time (benches and the identity tests flip it between runs —
-/// results are bit-identical either way, so a mid-flight flip is benign).
+/// read honours `TOR_SSM_KERNELS=scalar|fused|simd`, and [`set_mode`]
+/// overrides at any time (benches and the identity tests flip it between
+/// runs).
 pub fn mode() -> KernelMode {
     match MODE.load(Ordering::Relaxed) {
         1 => KernelMode::Scalar,
         2 => KernelMode::Fused,
+        3 => KernelMode::Simd,
         _ => {
             let m = match std::env::var("TOR_SSM_KERNELS") {
                 Ok(v) => KernelMode::from_name(&v).unwrap_or_else(|e| {
-                    // A typo'd env var must not silently measure the wrong
-                    // configuration; warn loudly and use the default.
-                    eprintln!("[warn] ignoring TOR_SSM_KERNELS: {e:#}; using fused");
+                    eprintln!("{}", ignored_env_warning("TOR_SSM_KERNELS", &e, "fused"));
                     KernelMode::Fused
                 }),
                 Err(_) => KernelMode::Fused,
@@ -123,6 +154,8 @@ pub fn mode() -> KernelMode {
 /// use tor_ssm::runtime::kernels::{mode, set_mode, KernelMode};
 /// set_mode(KernelMode::Scalar);
 /// assert_eq!(mode(), KernelMode::Scalar);
+/// set_mode(KernelMode::Simd);
+/// assert_eq!(mode(), KernelMode::Simd);
 /// set_mode(KernelMode::Fused);
 /// assert_eq!(mode(), KernelMode::Fused);
 /// ```
@@ -130,14 +163,310 @@ pub fn set_mode(m: KernelMode) {
     let v = match m {
         KernelMode::Scalar => 1,
         KernelMode::Fused => 2,
+        KernelMode::Simd => 3,
     };
     MODE.store(v, Ordering::Relaxed);
 }
 
 /// One-line description of the active execution configuration
-/// (`<mode> kernels, <n> decode thread(s)`), for serve/bench banners.
+/// (`<mode> kernels, <format> weights, <n> decode thread(s)`), for
+/// serve/bench banners.
 pub fn exec_summary() -> String {
-    format!("{} kernels, {} decode thread(s)", mode().name(), super::pool::workers())
+    format!(
+        "{} kernels, {} weights, {} decode thread(s)",
+        mode().name(),
+        super::weights::format().name(),
+        super::pool::workers()
+    )
+}
+
+// ---------------------------------------------------------------------------
+// SIMD substrate: feature probe + deterministic vector primitives
+// ---------------------------------------------------------------------------
+
+/// Cached CPU probe for the AVX2+FMA fast paths: 0 = unprobed, 1 = absent,
+/// 2 = present.
+static SIMD_CPU: AtomicU8 = AtomicU8::new(0);
+
+/// Whether the AVX2+FMA intrinsic paths will be used. `simd` mode works —
+/// and produces the same bits — either way (the portable fallbacks mirror
+/// every rounding); this only selects speed, and is surfaced for tests and
+/// bench metadata.
+pub fn simd_available() -> bool {
+    match SIMD_CPU.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            #[cfg(target_arch = "x86_64")]
+            let ok = is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+            #[cfg(not(target_arch = "x86_64"))]
+            let ok = false;
+            SIMD_CPU.store(if ok { 2 } else { 1 }, Ordering::Relaxed);
+            ok
+        }
+    }
+}
+
+/// Fixed 8-lane horizontal-sum tree shared by every [`dot8`]/[`dot8_i8`]
+/// path. The tree shape is part of the determinism contract: both the
+/// portable and the AVX2 reductions end in exactly this sequence of adds.
+#[inline]
+fn hsum8(l: [f32; 8]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Deterministic chunked dot product: 8 partial sums advance over chunks
+/// of 8 via fused multiply-add, combine through the fixed [`hsum8`] tree,
+/// and the tail (`len % 8`) folds in with scalar `mul_add`. The AVX2 path
+/// computes the **same bits** (`_mm256_fmadd_ps` is lane-wise
+/// `f32::mul_add`), so results never depend on the host CPU.
+///
+/// This reassociates relative to the ascending scalar sum, so it is used
+/// only where the contract allows a tolerance (the f32 `simd` head) or
+/// where it *is* the definition (the int8 head in every tier, via
+/// [`dot8_i8`]). Error bound vs ascending order:
+/// `|dot8 − ascending| ≤ 2·n·ε·Σ|xᵢ·yᵢ|` (pinned by a unit test).
+pub fn dot8(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2+FMA presence verified by `simd_available`.
+        return unsafe { avx2::dot8(x, y) };
+    }
+    dot8_portable(x, y)
+}
+
+fn dot8_portable(x: &[f32], y: &[f32]) -> f32 {
+    let n8 = x.len() - x.len() % 8;
+    let mut lanes = [0.0f32; 8];
+    let mut k = 0;
+    while k < n8 {
+        for j in 0..8 {
+            lanes[j] = x[k + j].mul_add(y[k + j], lanes[j]);
+        }
+        k += 8;
+    }
+    let mut total = hsum8(lanes);
+    for i in n8..x.len() {
+        total = x[i].mul_add(y[i], total);
+    }
+    total
+}
+
+/// [`dot8`] against an i8 row: `Σ x[i]·(q[i] as f32)`, same chunked
+/// accumulation, same tree, same tail. The i8→f32 convert is exact, so the
+/// portable and AVX2 paths are bit-identical here too. This is the head
+/// reduction for int8 weights in **all** kernel tiers — cross-tier int8
+/// identity is structural, not a tolerance claim.
+pub fn dot8_i8(x: &[f32], q: &[i8]) -> f32 {
+    debug_assert_eq!(x.len(), q.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2+FMA presence verified by `simd_available`.
+        return unsafe { avx2::dot8_i8(x, q) };
+    }
+    dot8_i8_portable(x, q)
+}
+
+fn dot8_i8_portable(x: &[f32], q: &[i8]) -> f32 {
+    let n8 = x.len() - x.len() % 8;
+    let mut lanes = [0.0f32; 8];
+    let mut k = 0;
+    while k < n8 {
+        for j in 0..8 {
+            lanes[j] = x[k + j].mul_add(q[k + j] as f32, lanes[j]);
+        }
+        k += 8;
+    }
+    let mut total = hsum8(lanes);
+    for i in n8..x.len() {
+        total = x[i].mul_add(q[i] as f32, total);
+    }
+    total
+}
+
+/// `dst[j] += a·src[j]` as a separate multiply and add (two roundings —
+/// the scalar rank-1 update's exact expression; deliberately **not** fma),
+/// so vectorizing it never changes bits.
+pub fn axpy(a: f32, src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2 presence verified by `simd_available`.
+        unsafe { avx2::axpy(a, src, dst) };
+        return;
+    }
+    for j in 0..dst.len() {
+        dst[j] += a * src[j];
+    }
+}
+
+/// [`axpy`] against an i8 row: `dst[j] += a·(src[j] as f32)` (exact
+/// convert, then the same mul/add pair).
+pub fn axpy_i8(a: f32, src: &[i8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2 presence verified by `simd_available`.
+        unsafe { avx2::axpy_i8(a, src, dst) };
+        return;
+    }
+    for j in 0..dst.len() {
+        dst[j] += a * src[j] as f32;
+    }
+}
+
+/// The scan recurrence's state update `h[j] ← d[j]·h[j] + u·b[j]`, as
+/// mul/mul/add — three roundings, the scalar expression's exact sequence —
+/// in both the portable and the AVX2 path, so vectorizing the state update
+/// never changes bits.
+#[inline]
+fn scan_update(drow: &[f32], hrow: &mut [f32], ui: f32, brow: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2 presence verified by `simd_available`.
+        unsafe { avx2::scan_update(drow, hrow, ui, brow) };
+        return;
+    }
+    for j in 0..hrow.len() {
+        hrow[j] = drow[j] * hrow[j] + ui * brow[j];
+    }
+}
+
+/// AVX2+FMA lowerings of the vector primitives. Every function here is
+/// bit-identical to its portable counterpart — `_mm256_fmadd_ps` matches
+/// lane-wise `f32::mul_add`, the mul/add pairs keep the scalar
+/// expressions' two-rounding shape, tails reuse the scalar code — so CPU
+/// dispatch changes speed, never results (pinned by
+/// `avx2_paths_match_portable_bitwise`).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::hsum8;
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2+FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot8(x: &[f32], y: &[f32]) -> f32 {
+        let n8 = x.len() - x.len() % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut k = 0;
+        while k < n8 {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(k));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(k));
+            acc = _mm256_fmadd_ps(xv, yv, acc);
+            k += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut total = hsum8(lanes);
+        for i in n8..x.len() {
+            total = x[i].mul_add(y[i], total);
+        }
+        total
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2+FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot8_i8(x: &[f32], q: &[i8]) -> f32 {
+        let n8 = x.len() - x.len() % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut k = 0;
+        while k < n8 {
+            // 8 i8 → sign-extend to 8×i32 → exact convert to 8×f32.
+            let qv = _mm_loadl_epi64(q.as_ptr().add(k) as *const __m128i);
+            let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qv));
+            let xv = _mm256_loadu_ps(x.as_ptr().add(k));
+            acc = _mm256_fmadd_ps(xv, qf, acc);
+            k += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut total = hsum8(lanes);
+        for i in n8..x.len() {
+            total = x[i].mul_add(q[i] as f32, total);
+        }
+        total
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2+FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(a: f32, src: &[f32], dst: &mut [f32]) {
+        let n8 = src.len() - src.len() % 8;
+        let av = _mm256_set1_ps(a);
+        let mut k = 0;
+        while k < n8 {
+            let s = _mm256_loadu_ps(src.as_ptr().add(k));
+            let d = _mm256_loadu_ps(dst.as_ptr().add(k));
+            // add(mul) — NOT fmadd: keep the scalar two-rounding shape.
+            _mm256_storeu_ps(dst.as_mut_ptr().add(k), _mm256_add_ps(d, _mm256_mul_ps(av, s)));
+            k += 8;
+        }
+        for j in n8..dst.len() {
+            dst[j] += a * src[j];
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2+FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy_i8(a: f32, src: &[i8], dst: &mut [f32]) {
+        let n8 = src.len() - src.len() % 8;
+        let av = _mm256_set1_ps(a);
+        let mut k = 0;
+        while k < n8 {
+            let qv = _mm_loadl_epi64(src.as_ptr().add(k) as *const __m128i);
+            let s = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qv));
+            let d = _mm256_loadu_ps(dst.as_ptr().add(k));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(k), _mm256_add_ps(d, _mm256_mul_ps(av, s)));
+            k += 8;
+        }
+        for j in n8..dst.len() {
+            dst[j] += a * src[j] as f32;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2+FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scan_update(drow: &[f32], hrow: &mut [f32], ui: f32, brow: &[f32]) {
+        let n8 = hrow.len() - hrow.len() % 8;
+        let uv = _mm256_set1_ps(ui);
+        let mut k = 0;
+        while k < n8 {
+            let d = _mm256_loadu_ps(drow.as_ptr().add(k));
+            let h = _mm256_loadu_ps(hrow.as_ptr().add(k));
+            let b = _mm256_loadu_ps(brow.as_ptr().add(k));
+            _mm256_storeu_ps(
+                hrow.as_mut_ptr().add(k),
+                _mm256_add_ps(_mm256_mul_ps(d, h), _mm256_mul_ps(uv, b)),
+            );
+            k += 8;
+        }
+        for j in n8..hrow.len() {
+            hrow[j] = drow[j] * hrow[j] + ui * brow[j];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Weight operands: dense f32 or per-channel int8
+// ---------------------------------------------------------------------------
+
+/// A weight-matrix operand for the block kernels: dense f32, or per-channel
+/// int8 `(quantized blob, f32 scales)` produced at load time by
+/// [`Weights::ensure_quant`](super::weights::Weights::ensure_quant). The
+/// scale axis follows the consuming kernel's output channel: matrix
+/// columns for the in/out projections, rows for the tied-embedding head.
+#[derive(Clone, Copy)]
+pub enum MatRef<'a> {
+    /// Dense row-major f32, the format everything before this tier used.
+    F32(&'a [f32]),
+    /// Per-output-channel symmetric int8: `w[r][c] ≈ q[r][c] · scale[ch]`.
+    I8 { q: &'a [i8], scales: &'a [f32] },
 }
 
 // ---------------------------------------------------------------------------
@@ -156,7 +485,7 @@ pub fn silu(x: f32) -> f32 {
 
 /// The RMSNorm scale factor `1 / sqrt(mean(x²) + 1e-5)`, with the summation
 /// order every caller shares (ascending index — the rounding sequence is
-/// part of the determinism contract).
+/// part of the determinism contract; this reduction is never vectorized).
 pub fn rms_inv(x: &[f32]) -> f32 {
     let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
     1.0 / (ms + 1e-5).sqrt()
@@ -188,17 +517,21 @@ pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
 ///
 /// `inv` is an `nt`-float scratch. Bit-identity: for each `(t, j)` the
 /// accumulation runs over `c` ascending, and each addend is
-/// `(x·inv)·g · w` — the scalar path's exact expression and order.
+/// `(x·inv)·g · w` — the scalar path's exact expression and order; with
+/// `simd` the rank-1 update goes through [`axpy`], which keeps that
+/// sequence. For [`MatRef::I8`] the unscaled i8 dot accumulates in the
+/// same order in every tier and the per-column scale multiplies once at
+/// the end.
 ///
 /// ```
-/// use tor_ssm::runtime::kernels::{fused_rmsnorm_inproj, rmsnorm};
+/// use tor_ssm::runtime::kernels::{fused_rmsnorm_inproj, rmsnorm, MatRef};
 /// let (nt, d, pw) = (2, 3, 2);
 /// let xs = [0.5f32, -1.0, 2.0, 1.5, 0.25, -0.75];
 /// let g = [1.0f32, 0.9, 1.1];
 /// let w = [0.2f32, -0.1, 0.4, 0.3, -0.5, 0.6]; // d × pw
 /// let mut proj = [0.0f32; 4];
 /// let mut inv = [0.0f32; 2];
-/// fused_rmsnorm_inproj(&xs, &g, &w, nt, d, pw, &mut proj, &mut inv);
+/// fused_rmsnorm_inproj(&xs, &g, MatRef::F32(&w), nt, d, pw, &mut proj, &mut inv, false);
 /// // equals the unfused reference: rmsnorm per row, then row · w
 /// for t in 0..nt {
 ///     let mut xn = [0.0f32; 3];
@@ -212,33 +545,70 @@ pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
 ///     }
 /// }
 /// ```
+#[allow(clippy::too_many_arguments)]
 pub fn fused_rmsnorm_inproj(
     xs: &[f32],
     g: &[f32],
-    w: &[f32],
+    w: MatRef<'_>,
     nt: usize,
     d: usize,
     pw: usize,
     proj: &mut [f32],
     inv: &mut [f32],
+    simd: bool,
 ) {
     debug_assert_eq!(xs.len(), nt * d);
     debug_assert_eq!(g.len(), d);
-    debug_assert_eq!(w.len(), d * pw);
     debug_assert_eq!(proj.len(), nt * pw);
     debug_assert!(inv.len() >= nt);
     for t in 0..nt {
         inv[t] = rms_inv(&xs[t * d..(t + 1) * d]);
     }
     proj.fill(0.0);
-    for c in 0..d {
-        let row = &w[c * pw..(c + 1) * pw];
-        let gc = g[c];
-        for t in 0..nt {
-            let xc = xs[t * d + c] * inv[t] * gc;
-            let prow = &mut proj[t * pw..(t + 1) * pw];
-            for j in 0..pw {
-                prow[j] += xc * row[j];
+    match w {
+        MatRef::F32(w) => {
+            debug_assert_eq!(w.len(), d * pw);
+            for c in 0..d {
+                let row = &w[c * pw..(c + 1) * pw];
+                let gc = g[c];
+                for t in 0..nt {
+                    let xc = xs[t * d + c] * inv[t] * gc;
+                    let prow = &mut proj[t * pw..(t + 1) * pw];
+                    if simd {
+                        axpy(xc, row, prow);
+                    } else {
+                        for j in 0..pw {
+                            prow[j] += xc * row[j];
+                        }
+                    }
+                }
+            }
+        }
+        MatRef::I8 { q, scales } => {
+            debug_assert_eq!(q.len(), d * pw);
+            debug_assert_eq!(scales.len(), pw);
+            for c in 0..d {
+                let row = &q[c * pw..(c + 1) * pw];
+                let gc = g[c];
+                for t in 0..nt {
+                    let xc = xs[t * d + c] * inv[t] * gc;
+                    let prow = &mut proj[t * pw..(t + 1) * pw];
+                    if simd {
+                        axpy_i8(xc, row, prow);
+                    } else {
+                        for j in 0..pw {
+                            prow[j] += xc * row[j] as f32;
+                        }
+                    }
+                }
+            }
+            // One per-column scale multiply at the end — shared by every
+            // tier, so int8 identity across tiers is structural.
+            for t in 0..nt {
+                let prow = &mut proj[t * pw..(t + 1) * pw];
+                for j in 0..pw {
+                    prow[j] *= scales[j];
+                }
             }
         }
     }
@@ -269,7 +639,9 @@ fn conv_src_col(ch: usize, di: usize) -> usize {
 ///
 /// `inp` is the block's in-projection output (`nt × pw`); channel `ch`
 /// reads column `ch` (`< di`) or `2·di + (ch − di)` (mamba2 B/C channels).
-/// `out` is `nt × conv_ch`, pre-activation.
+/// `out` is `nt × conv_ch`, pre-activation. The conv recurrence is never
+/// vectorized — it stays bit-identical in every tier.
+#[allow(clippy::too_many_arguments)]
 pub fn causal_conv_seq(
     inp: &[f32],
     pw: usize,
@@ -317,6 +689,7 @@ pub fn causal_conv_seq(
 /// the decode frame's contiguous lane-chunk layout) by one token. No state
 /// crosses lanes — the scalar per-lane update runs verbatim, just batched
 /// so `conv_w`/`conv_b` stream once per chunk.
+#[allow(clippy::too_many_arguments)]
 pub fn causal_conv_batch(
     inp: &[f32],
     pw: usize,
@@ -390,7 +763,18 @@ pub fn copy_bc_channels(
 /// Mamba: derive `B, C` from post-conv `u` via `bc` (`di × 2n`, row-major),
 /// streamed once per block. For each `(t, j)` both accumulators run over
 /// `i` ascending with `B` then `C` updated per tap — the scalar order.
-pub fn bc_project(u: &[f32], bc: &[f32], n: usize, bs: &mut [f32], cs: &mut [f32], nt: usize) {
+/// With `simd`, B and C are two [`axpy`] passes per tap: they are disjoint
+/// accumulators, so each scalar still sees its exact interleaved-order
+/// sequence (`bc_proj` itself stays f32 — it is not a quantized operand).
+pub fn bc_project(
+    u: &[f32],
+    bc: &[f32],
+    n: usize,
+    bs: &mut [f32],
+    cs: &mut [f32],
+    nt: usize,
+    simd: bool,
+) {
     let di = u.len() / nt;
     debug_assert_eq!(bc.len(), di * 2 * n);
     debug_assert_eq!(bs.len(), nt * n);
@@ -402,9 +786,14 @@ pub fn bc_project(u: &[f32], bc: &[f32], n: usize, bs: &mut [f32], cs: &mut [f32
         for t in 0..nt {
             let ui = u[t * di + i];
             let brow = t * n;
-            for j in 0..n {
-                bs[brow + j] += ui * row[j];
-                cs[brow + j] += ui * row[n + j];
+            if simd {
+                axpy(ui, &row[..n], &mut bs[brow..brow + n]);
+                axpy(ui, &row[n..], &mut cs[brow..brow + n]);
+            } else {
+                for j in 0..n {
+                    bs[brow + j] += ui * row[j];
+                    cs[brow + j] += ui * row[n + j];
+                }
             }
         }
     }
@@ -420,8 +809,14 @@ pub fn bc_project(u: &[f32], bc: &[f32], n: usize, bs: &mut [f32], cs: &mut [f32
 /// the whole block; per `(i, j)` the token recurrence still runs strictly
 /// ascending (that order IS the scan — it is never reassociated).
 ///
+/// With `simd` the d-state inner loop splits: the state update vectorizes
+/// through [`scan_update`] (mul/mul/add — the scalar roundings), then the
+/// emit sum runs scalar over the *same* updated values in the same
+/// ascending order, so y, h and everything downstream stay bit-identical.
+///
 /// `zs` points at the in-projection block (`nt × pw`); the gate column for
 /// channel `i` is `di + i`.
+#[allow(clippy::too_many_arguments)]
 pub fn scan_gate_seq(
     u: &[f32],
     bs: &[f32],
@@ -434,6 +829,7 @@ pub fn scan_gate_seq(
     h: &mut [f32],
     y: &mut [f32],
     nt: usize,
+    simd: bool,
 ) {
     let di = d_skip.len();
     debug_assert_eq!(u.len(), nt * di);
@@ -451,9 +847,16 @@ pub fn scan_gate_seq(
             let brow = &bs[t * n..(t + 1) * n];
             let crow = &cs[t * n..(t + 1) * n];
             let mut acc = 0.0f32;
-            for j in 0..n {
-                hrow[j] = drow[j] * hrow[j] + ui * brow[j];
-                acc += hrow[j] * crow[j];
+            if simd {
+                scan_update(drow, hrow, ui, brow);
+                for j in 0..n {
+                    acc += hrow[j] * crow[j];
+                }
+            } else {
+                for j in 0..n {
+                    hrow[j] = drow[j] * hrow[j] + ui * brow[j];
+                    acc += hrow[j] * crow[j];
+                }
             }
             let z = zs[t * pw + di + i];
             y[t * di + i] = (acc + d_skip[i] * ui) * silu(z);
@@ -464,7 +867,8 @@ pub fn scan_gate_seq(
 /// Selective scan, one step for each of `nt` independent decode lanes:
 /// lane `t` advances its own state `hs[t]` (`[nt × di × n]`, the decode
 /// frame's contiguous lane-chunk layout). Identical per-lane math to
-/// [`scan_gate_seq`] with a one-token block.
+/// [`scan_gate_seq`] with a one-token block, including the `simd` split.
+#[allow(clippy::too_many_arguments)]
 pub fn scan_gate_batch(
     u: &[f32],
     bs: &[f32],
@@ -477,6 +881,7 @@ pub fn scan_gate_batch(
     hs: &mut [f32],
     y: &mut [f32],
     nt: usize,
+    simd: bool,
 ) {
     let di = d_skip.len();
     debug_assert_eq!(hs.len(), nt * di * n);
@@ -491,9 +896,16 @@ pub fn scan_gate_batch(
             let hrow = &mut h[i * n..(i + 1) * n];
             let drow = &decay[i * n..(i + 1) * n];
             let mut acc = 0.0f32;
-            for j in 0..n {
-                hrow[j] = drow[j] * hrow[j] + ui * brow[j];
-                acc += hrow[j] * crow[j];
+            if simd {
+                scan_update(drow, hrow, ui, brow);
+                for j in 0..n {
+                    acc += hrow[j] * crow[j];
+                }
+            } else {
+                for j in 0..n {
+                    hrow[j] = drow[j] * hrow[j] + ui * brow[j];
+                    acc += hrow[j] * crow[j];
+                }
             }
             let z = zs[t * pw + di + i];
             y[t * di + i] = (acc + d_skip[i] * ui) * silu(z);
@@ -507,18 +919,70 @@ pub fn scan_gate_batch(
 
 /// `xs[t] += y[t] · w` for a block of rows, with `w` (`di × d`, row-major)
 /// streamed once per block. Per `(t, c)` the accumulation runs over `i`
-/// ascending — the scalar path's order.
-pub fn outproj_acc(y: &[f32], w: &[f32], d: usize, xs: &mut [f32], nt: usize) {
+/// ascending — the scalar path's order; with `simd` through [`axpy`],
+/// which keeps it.
+///
+/// For [`MatRef::I8`] the unscaled i8 dot accumulates into the `oacc`
+/// scratch (`≥ nt × d`, zeroed here) in the same ascending-`i` order in
+/// every tier, then folds into the residual with one per-column scale
+/// multiply: `xs[t][c] += oacc[t][c] · scale[c]`. `oacc` is untouched for
+/// f32 operands.
+#[allow(clippy::too_many_arguments)]
+pub fn outproj_acc(
+    y: &[f32],
+    w: MatRef<'_>,
+    d: usize,
+    xs: &mut [f32],
+    oacc: &mut [f32],
+    nt: usize,
+    simd: bool,
+) {
     let di = y.len() / nt;
-    debug_assert_eq!(w.len(), di * d);
     debug_assert_eq!(xs.len(), nt * d);
-    for i in 0..di {
-        let row = &w[i * d..(i + 1) * d];
-        for t in 0..nt {
-            let yi = y[t * di + i];
-            let xrow = &mut xs[t * d..(t + 1) * d];
-            for c in 0..d {
-                xrow[c] += yi * row[c];
+    match w {
+        MatRef::F32(w) => {
+            debug_assert_eq!(w.len(), di * d);
+            for i in 0..di {
+                let row = &w[i * d..(i + 1) * d];
+                for t in 0..nt {
+                    let yi = y[t * di + i];
+                    let xrow = &mut xs[t * d..(t + 1) * d];
+                    if simd {
+                        axpy(yi, row, xrow);
+                    } else {
+                        for c in 0..d {
+                            xrow[c] += yi * row[c];
+                        }
+                    }
+                }
+            }
+        }
+        MatRef::I8 { q, scales } => {
+            debug_assert_eq!(q.len(), di * d);
+            debug_assert_eq!(scales.len(), d);
+            debug_assert!(oacc.len() >= nt * d);
+            let oacc = &mut oacc[..nt * d];
+            oacc.fill(0.0);
+            for i in 0..di {
+                let row = &q[i * d..(i + 1) * d];
+                for t in 0..nt {
+                    let yi = y[t * di + i];
+                    let orow = &mut oacc[t * d..(t + 1) * d];
+                    if simd {
+                        axpy_i8(yi, row, orow);
+                    } else {
+                        for c in 0..d {
+                            orow[c] += yi * row[c] as f32;
+                        }
+                    }
+                }
+            }
+            for t in 0..nt {
+                let xrow = &mut xs[t * d..(t + 1) * d];
+                let orow = &oacc[t * d..(t + 1) * d];
+                for c in 0..d {
+                    xrow[c] += orow[c] * scales[c];
+                }
             }
         }
     }
@@ -533,18 +997,26 @@ pub fn outproj_acc(y: &[f32], w: &[f32], d: usize, xs: &mut [f32], nt: usize) {
 /// embedding matrix **once per block**, emitting `out[t][v] = xn[t] ·
 /// embed[v]`. The scalar path streams all `vocab × d` embedding floats per
 /// row; this is the single largest traffic saving in the eval path.
+///
+/// This is the ONE place the `simd` tier reassociates on f32 weights: the
+/// per-logit dot switches from the ascending scalar sum to [`dot8`], with
+/// the error bound documented there (PERFORMANCE.md §Kernel tiers & weight
+/// formats). Everything upstream of the logits stays bit-identical. For
+/// [`MatRef::I8`], every tier uses [`dot8_i8`] · per-row scale, so int8
+/// logits are identical across scalar|fused|simd.
+#[allow(clippy::too_many_arguments)]
 pub fn head_norm_logits(
     xs: &[f32],
     g: &[f32],
-    embed: &[f32],
+    embed: MatRef<'_>,
     vocab: usize,
     out: &mut [f32],
     xn: &mut [f32],
     nt: usize,
+    simd: bool,
 ) {
     let d = g.len();
     debug_assert_eq!(xs.len(), nt * d);
-    debug_assert_eq!(embed.len(), vocab * d);
     debug_assert_eq!(out.len(), nt * vocab);
     debug_assert!(xn.len() >= nt * d);
     for t in 0..nt {
@@ -553,15 +1025,35 @@ pub fn head_norm_logits(
             xn[t * d + c] = xs[t * d + c] * inv * g[c];
         }
     }
-    for v in 0..vocab {
-        let row = &embed[v * d..(v + 1) * d];
-        for t in 0..nt {
-            let xrow = &xn[t * d..(t + 1) * d];
-            let mut acc = 0.0f32;
-            for c in 0..d {
-                acc += xrow[c] * row[c];
+    match embed {
+        MatRef::F32(embed) => {
+            debug_assert_eq!(embed.len(), vocab * d);
+            for v in 0..vocab {
+                let row = &embed[v * d..(v + 1) * d];
+                for t in 0..nt {
+                    let xrow = &xn[t * d..(t + 1) * d];
+                    out[t * vocab + v] = if simd {
+                        dot8(xrow, row)
+                    } else {
+                        let mut acc = 0.0f32;
+                        for c in 0..d {
+                            acc += xrow[c] * row[c];
+                        }
+                        acc
+                    };
+                }
             }
-            out[t * vocab + v] = acc;
+        }
+        MatRef::I8 { q, scales } => {
+            debug_assert_eq!(q.len(), vocab * d);
+            debug_assert_eq!(scales.len(), vocab);
+            for v in 0..vocab {
+                let row = &q[v * d..(v + 1) * d];
+                for t in 0..nt {
+                    let xrow = &xn[t * d..(t + 1) * d];
+                    out[t * vocab + v] = dot8_i8(xrow, row) * scales[v];
+                }
+            }
         }
     }
 }
@@ -575,16 +1067,38 @@ mod tests {
         (0..n).map(|_| rng.normal() as f32).collect()
     }
 
+    fn randq(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect()
+    }
+
     #[test]
     fn mode_roundtrip_and_parse() {
-        for m in [KernelMode::Scalar, KernelMode::Fused] {
+        for m in [KernelMode::Scalar, KernelMode::Fused, KernelMode::Simd] {
             set_mode(m);
             assert_eq!(mode(), m);
             assert_eq!(KernelMode::from_name(m.name()).unwrap(), m);
         }
         set_mode(KernelMode::Fused);
-        assert!(KernelMode::from_name("avx").is_err());
+        let err = KernelMode::from_name("avx").unwrap_err().to_string();
+        assert!(err.contains("scalar|fused|simd"), "error must enumerate all modes: {err}");
         assert!(exec_summary().contains("fused"));
+    }
+
+    /// The typo'd-env warnings must name the variable and enumerate every
+    /// accepted value, for both knobs.
+    #[test]
+    fn env_warnings_enumerate_the_accepted_sets() {
+        let e = KernelMode::from_name("sse2").unwrap_err();
+        let w = ignored_env_warning("TOR_SSM_KERNELS", &e, "fused");
+        assert!(w.contains("TOR_SSM_KERNELS"), "{w}");
+        assert!(w.contains("scalar|fused|simd"), "{w}");
+        assert!(w.ends_with("using fused"), "{w}");
+
+        let e = crate::runtime::weights::WeightFormat::from_name("int4").unwrap_err();
+        let w = ignored_env_warning("TOR_SSM_WEIGHTS", &e, "f32");
+        assert!(w.contains("TOR_SSM_WEIGHTS"), "{w}");
+        assert!(w.contains("f32|int8"), "{w}");
+        assert!(w.ends_with("using f32"), "{w}");
     }
 
     /// The block kernels must equal their naive single-row counterparts
@@ -599,7 +1113,7 @@ mod tests {
             let xs = randv(&mut rng, nt * d);
             let mut proj = vec![0.0f32; nt * pw];
             let mut inv = vec![0.0f32; nt];
-            fused_rmsnorm_inproj(&xs, &g, &w, nt, d, pw, &mut proj, &mut inv);
+            fused_rmsnorm_inproj(&xs, &g, MatRef::F32(&w), nt, d, pw, &mut proj, &mut inv, false);
             for t in 0..nt {
                 let mut xn = vec![0.0f32; d];
                 rmsnorm(&xs[t * d..(t + 1) * d], &g, &mut xn);
@@ -656,7 +1170,8 @@ mod tests {
     }
 
     /// Same invariance for the scan: the state recurrence carries across
-    /// blocks, so any blocking gives bit-identical y and final h.
+    /// blocks, so any blocking gives bit-identical y and final h — and
+    /// the simd split must be invisible too.
     #[test]
     fn scan_seq_block_boundaries_are_invisible() {
         let (di, n) = (4, 3);
@@ -670,7 +1185,7 @@ mod tests {
         let cs = randv(&mut rng, total * n);
         let zs = randv(&mut rng, total * pw);
 
-        let run = |chunks: &[usize]| {
+        let run = |chunks: &[usize], simd: bool| {
             let mut h = vec![0.0f32; di * n];
             let mut y = vec![0.0f32; total * di];
             let mut at = 0usize;
@@ -687,13 +1202,16 @@ mod tests {
                     &mut h,
                     &mut y[at * di..(at + nt) * di],
                     nt,
+                    simd,
                 );
                 at += nt;
             }
             (y, h)
         };
-        assert_eq!(run(&[6]), run(&[1; 6]));
-        assert_eq!(run(&[6]), run(&[4, 2]));
+        assert_eq!(run(&[6], false), run(&[1; 6], false));
+        assert_eq!(run(&[6], false), run(&[4, 2], false));
+        assert_eq!(run(&[6], false), run(&[6], true));
+        assert_eq!(run(&[6], false), run(&[4, 2], true));
     }
 
     /// The batch kernels are per-lane independent: one 3-lane call equals
@@ -722,7 +1240,7 @@ mod tests {
         causal_conv_batch(&inp, pw, di, &conv_w, &conv_b, &mut tails, &mut out, nt);
         let mut hs = hs0.clone();
         let mut y = vec![0.0f32; nt * di];
-        scan_gate_batch(&u, &bs, &cs, &inp, pw, &decay, &d_skip, n, &mut hs, &mut y, nt);
+        scan_gate_batch(&u, &bs, &cs, &inp, pw, &decay, &d_skip, n, &mut hs, &mut y, nt, false);
 
         for t in 0..nt {
             let mut tail1 = tails0[t * conv_ch * k1..(t + 1) * conv_ch * k1].to_vec();
@@ -754,6 +1272,7 @@ mod tests {
                 &mut h1,
                 &mut y1,
                 1,
+                false,
             );
             assert_eq!(&y[t * di..(t + 1) * di], &y1[..]);
             assert_eq!(&hs[t * di * n..(t + 1) * di * n], &h1[..]);
@@ -770,7 +1289,7 @@ mod tests {
         let xs = randv(&mut rng, nt * d);
         let mut out = vec![0.0f32; nt * vocab];
         let mut xn = vec![0.0f32; nt * d];
-        head_norm_logits(&xs, &g, &embed, vocab, &mut out, &mut xn, nt);
+        head_norm_logits(&xs, &g, MatRef::F32(&embed), vocab, &mut out, &mut xn, nt, false);
         for t in 0..nt {
             let mut xn1 = vec![0.0f32; d];
             rmsnorm(&xs[t * d..(t + 1) * d], &g, &mut xn1);
@@ -792,7 +1311,7 @@ mod tests {
         let bc = randv(&mut rng, di * 2 * n);
         let mut bs = vec![0.0f32; nt * n];
         let mut cs = vec![0.0f32; nt * n];
-        bc_project(&u, &bc, n, &mut bs, &mut cs, nt);
+        bc_project(&u, &bc, n, &mut bs, &mut cs, nt, false);
         for t in 0..nt {
             let mut b1 = vec![0.0f32; n];
             let mut c1 = vec![0.0f32; n];
@@ -806,6 +1325,217 @@ mod tests {
             }
             assert_eq!(&bs[t * n..(t + 1) * n], &b1[..]);
             assert_eq!(&cs[t * n..(t + 1) * n], &c1[..]);
+        }
+    }
+
+    /// The `simd` flag must be bit-invisible on every kernel except the
+    /// f32 head: rank-1 updates and the scan split keep the scalar
+    /// rounding sequences exactly (lengths chosen to exercise both the
+    /// 8-wide body and the scalar tails).
+    #[test]
+    fn simd_flag_is_bit_invisible_outside_the_head() {
+        let (d, pw, n) = (9, 20, 11);
+        let di = pw / 2;
+        let nt = 3;
+        let mut rng = Rng::new(31);
+
+        let g = randv(&mut rng, d);
+        let w = randv(&mut rng, d * pw);
+        let xs = randv(&mut rng, nt * d);
+        let mut p0 = vec![0.0f32; nt * pw];
+        let mut p1 = vec![0.0f32; nt * pw];
+        let mut inv = vec![0.0f32; nt];
+        fused_rmsnorm_inproj(&xs, &g, MatRef::F32(&w), nt, d, pw, &mut p0, &mut inv, false);
+        fused_rmsnorm_inproj(&xs, &g, MatRef::F32(&w), nt, d, pw, &mut p1, &mut inv, true);
+        assert_eq!(p0, p1, "in-projection");
+
+        let u = randv(&mut rng, nt * di);
+        let bc = randv(&mut rng, di * 2 * n);
+        let mut bs0 = vec![0.0f32; nt * n];
+        let mut cs0 = vec![0.0f32; nt * n];
+        let mut bs1 = vec![0.0f32; nt * n];
+        let mut cs1 = vec![0.0f32; nt * n];
+        bc_project(&u, &bc, n, &mut bs0, &mut cs0, nt, false);
+        bc_project(&u, &bc, n, &mut bs1, &mut cs1, nt, true);
+        assert_eq!((&bs0, &cs0), (&bs1, &cs1), "bc_project");
+
+        let decay: Vec<f32> = randv(&mut rng, di * n).iter().map(|v| sigmoid(*v)).collect();
+        let d_skip = randv(&mut rng, di);
+        let zs = randv(&mut rng, nt * pw);
+        let h0full = randv(&mut rng, nt * di * n);
+        let mut hs0 = h0full.clone();
+        let mut hs1 = h0full.clone();
+        let mut y0 = vec![0.0f32; nt * di];
+        let mut y1 = vec![0.0f32; nt * di];
+        scan_gate_batch(&u, &bs0, &cs0, &zs, pw, &decay, &d_skip, n, &mut hs0, &mut y0, nt, false);
+        scan_gate_batch(&u, &bs0, &cs0, &zs, pw, &decay, &d_skip, n, &mut hs1, &mut y1, nt, true);
+        assert_eq!((&hs0, &y0), (&hs1, &y1), "scan_gate_batch");
+
+        let wo = randv(&mut rng, di * d);
+        let mut x0 = xs.clone();
+        let mut x1 = xs.clone();
+        let mut oacc = vec![0.0f32; nt * d];
+        outproj_acc(&y0, MatRef::F32(&wo), d, &mut x0, &mut oacc, nt, false);
+        outproj_acc(&y0, MatRef::F32(&wo), d, &mut x1, &mut oacc, nt, true);
+        assert_eq!(x0, x1, "out-projection");
+    }
+
+    /// Int8 operands: the fused kernels (simd on AND off) must match the
+    /// hand-written scalar-tier order — unscaled ascending i8 accumulation,
+    /// one scale multiply at the end — bit for bit. This is the structural
+    /// cross-tier identity `tests/kernels_identity.rs` pins end to end.
+    #[test]
+    fn int8_kernels_are_identical_across_tiers() {
+        let (d, pw) = (9, 20);
+        let nt = 2;
+        let mut rng = Rng::new(37);
+        let g = randv(&mut rng, d);
+        let xs = randv(&mut rng, nt * d);
+        let q = randq(&mut rng, d * pw);
+        let scales: Vec<f32> = (0..pw).map(|_| rng.f32() * 0.05 + 1e-3).collect();
+
+        // Scalar-tier order for the in-projection.
+        let mut want = vec![0.0f32; nt * pw];
+        let mut inv = vec![0.0f32; nt];
+        for t in 0..nt {
+            inv[t] = rms_inv(&xs[t * d..(t + 1) * d]);
+        }
+        for c in 0..d {
+            let row = &q[c * pw..(c + 1) * pw];
+            for t in 0..nt {
+                let xc = xs[t * d + c] * inv[t] * g[c];
+                for j in 0..pw {
+                    want[t * pw + j] += xc * row[j] as f32;
+                }
+            }
+        }
+        for t in 0..nt {
+            for j in 0..pw {
+                want[t * pw + j] *= scales[j];
+            }
+        }
+        let m = MatRef::I8 { q: &q, scales: &scales };
+        for simd in [false, true] {
+            let mut proj = vec![0.0f32; nt * pw];
+            fused_rmsnorm_inproj(&xs, &g, m, nt, d, pw, &mut proj, &mut inv, simd);
+            assert_eq!(proj, want, "in-projection simd={simd}");
+        }
+
+        // Out-projection: i-ascending unscaled accumulate, scale at end.
+        let di = 7;
+        let y = randv(&mut rng, nt * di);
+        let qo = randq(&mut rng, di * d);
+        let so: Vec<f32> = (0..d).map(|_| rng.f32() * 0.05 + 1e-3).collect();
+        let mut wantx = xs.clone();
+        for t in 0..nt {
+            for c in 0..d {
+                let mut acc = 0.0f32;
+                for i in 0..di {
+                    acc += y[t * di + i] * qo[i * d + c] as f32;
+                }
+                wantx[t * d + c] += acc * so[c];
+            }
+        }
+        let mo = MatRef::I8 { q: &qo, scales: &so };
+        for simd in [false, true] {
+            let mut x = xs.clone();
+            let mut oacc = vec![0.0f32; nt * d];
+            outproj_acc(&y, mo, d, &mut x, &mut oacc, nt, simd);
+            assert_eq!(x, wantx, "out-projection simd={simd}");
+        }
+
+        // Head: dot8_i8 · scale in every tier, simd flag invisible.
+        let vocab = 13;
+        let qe = randq(&mut rng, vocab * d);
+        let se: Vec<f32> = (0..vocab).map(|_| rng.f32() * 0.05 + 1e-3).collect();
+        let me = MatRef::I8 { q: &qe, scales: &se };
+        let mut out0 = vec![0.0f32; nt * vocab];
+        let mut out1 = vec![0.0f32; nt * vocab];
+        let mut xn = vec![0.0f32; nt * d];
+        head_norm_logits(&xs, &g, me, vocab, &mut out0, &mut xn, nt, false);
+        head_norm_logits(&xs, &g, me, vocab, &mut out1, &mut xn, nt, true);
+        assert_eq!(out0, out1, "int8 head");
+        for t in 0..nt {
+            for v in 0..vocab {
+                let want =
+                    dot8_i8(&xn[t * d..(t + 1) * d], &qe[v * d..(v + 1) * d]) * se[v];
+                assert_eq!(out0[t * vocab + v], want, "head row {t} vocab {v}");
+            }
+        }
+    }
+
+    /// The documented error-bound contract for the one reassociating
+    /// reduction: `|dot8 − ascending| ≤ 2·n·ε·Σ|xᵢ·yᵢ|`.
+    #[test]
+    fn chunked_head_dot_error_is_bounded() {
+        let mut rng = Rng::new(29);
+        for len in [1usize, 7, 8, 9, 32, 100, 257] {
+            let x = randv(&mut rng, len);
+            let y = randv(&mut rng, len);
+            let chunked = dot8(&x, &y);
+            let mut asc = 0.0f32;
+            let mut mag = 0.0f32;
+            for i in 0..len {
+                asc += x[i] * y[i];
+                mag += (x[i] * y[i]).abs();
+            }
+            let bound = 2.0 * len as f32 * f32::EPSILON * mag;
+            assert!(
+                (chunked - asc).abs() <= bound,
+                "len {len}: |{chunked} - {asc}| > {bound}"
+            );
+        }
+    }
+
+    /// On AVX2 hosts the intrinsic paths must produce the exact bits of
+    /// the portable paths — CPU dispatch is never allowed to change
+    /// results. (Vacuously passes elsewhere; CI runs a
+    /// `-Ctarget-cpu=native` job so real runners exercise it.)
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_paths_match_portable_bitwise() {
+        if !simd_available() {
+            return;
+        }
+        let mut rng = Rng::new(23);
+        for len in [1usize, 5, 8, 13, 16, 31, 64] {
+            let x = randv(&mut rng, len);
+            let y = randv(&mut rng, len);
+            let q = randq(&mut rng, len);
+            // SAFETY: guarded by simd_available() above.
+            unsafe {
+                assert_eq!(dot8_portable(&x, &y).to_bits(), avx2::dot8(&x, &y).to_bits());
+                assert_eq!(
+                    dot8_i8_portable(&x, &q).to_bits(),
+                    avx2::dot8_i8(&x, &q).to_bits()
+                );
+                let a = 0.37f32;
+                let mut d0 = y.clone();
+                let mut d1 = y.clone();
+                for j in 0..len {
+                    d0[j] += a * x[j];
+                }
+                avx2::axpy(a, &x, &mut d1);
+                assert_eq!(d0, d1, "axpy len {len}");
+
+                let mut e0 = y.clone();
+                let mut e1 = y.clone();
+                for j in 0..len {
+                    e0[j] += a * q[j] as f32;
+                }
+                avx2::axpy_i8(a, &q, &mut e1);
+                assert_eq!(e0, e1, "axpy_i8 len {len}");
+
+                let drow = randv(&mut rng, len);
+                let brow = randv(&mut rng, len);
+                let mut h0 = x.clone();
+                let mut h1 = x.clone();
+                for j in 0..len {
+                    h0[j] = drow[j] * h0[j] + a * brow[j];
+                }
+                avx2::scan_update(&drow, &mut h1, a, &brow);
+                assert_eq!(h0, h1, "scan_update len {len}");
+            }
         }
     }
 }

@@ -27,7 +27,11 @@
 //! kernels of [`kernels`] and shards decode frames across the lane-parallel
 //! worker pool of [`pool`] — both bit-identical to the scalar interpreter
 //! at every thread count (DESIGN.md §11; PERFORMANCE.md has the threading
-//! model and the determinism argument).
+//! model and the determinism argument). The `simd` kernel tier keeps that
+//! contract everywhere except the f32 logit head, whose per-logit dot
+//! reassociates under a documented error bound, and the int8 weight format
+//! ([`weights::WeightFormat`]) is bit-identical across all three tiers
+//! (DESIGN.md §13).
 
 pub mod kernels;
 pub mod pool;

@@ -24,25 +24,40 @@
 //!
 //! ## Execution paths
 //!
-//! The same math runs in two interchangeable forms, selected by
-//! [`kernels::mode`] (DESIGN.md §11, PERFORMANCE.md):
+//! The same math runs in three interchangeable forms, selected by
+//! [`kernels::mode`] (DESIGN.md §11/§13, PERFORMANCE.md):
 //!
 //! * **scalar** — the plain one-token-at-a-time loops below
 //!   (`layer_step`/`head_logits`): the oracle the fused path is pinned
 //!   against, and the baseline arm of `benches/runtime.rs`;
 //! * **fused** *(default)* — the cache-blocked kernels of
 //!   [`kernels`](super::kernels): token blocks move through fused stages so
-//!   every weight matrix streams once per block instead of once per token.
+//!   every weight matrix streams once per block instead of once per token;
+//! * **simd** — the fused pipeline with vectorized inner loops (AVX2+FMA
+//!   when the CPU has them, bit-identical portable fallbacks otherwise).
 //!
 //! Decode frames additionally shard across the lane-parallel worker pool
 //! ([`pool`](super::pool)): `B` resident sequences advance on
 //! `min(B, workers)` threads through the no-copy lane-chunk views of
 //! [`tensor`](super::tensor); eval/prefill batches parallelise per
 //! sequence. Both axes are **bit-identical** to the single-threaded scalar
-//! interpreter — blocking never reassociates an accumulation and threading
-//! never moves arithmetic across lanes — so every golden/policy/continuous
-//! test doubles as a correctness oracle (`tests/kernels_identity.rs` pins
-//! it explicitly).
+//! interpreter for scalar/fused — blocking never reassociates an
+//! accumulation and threading never moves arithmetic across lanes — so
+//! every golden/policy/continuous test doubles as a correctness oracle
+//! (`tests/kernels_identity.rs` pins it explicitly). The simd tier keeps
+//! that contract everywhere *except* the f32 logit head, whose per-logit
+//! dot reassociates under a documented error bound (see
+//! `kernels::head_norm_logits`).
+//!
+//! ## Weight formats
+//!
+//! [`upload_weights`](Backend::upload_weights) honours the process/manifest
+//! [`WeightFormat`] knob: `Int8` derives per-channel i8 blobs for the big
+//! matmul operands at upload time ([`Weights::ensure_quant`]) and every
+//! tier then runs the quantized operands through a shared
+//! accumulate-then-scale structure, making int8 outputs bit-identical
+//! across scalar|fused|simd at any thread count. Activations, the conv
+//! path, `bc_proj`, norms and the SSM state stay f32.
 //!
 //! ## Token reduction
 //!
@@ -92,9 +107,10 @@ use crate::runtime::{
     Backend, DeviceWeights, Executable, HostTensor, ProgramKind, ProgramSpec, Weights, IDLE_LANE,
 };
 
-use super::kernels::{self, rmsnorm, sigmoid, silu, KernelMode};
+use super::kernels::{self, rmsnorm, sigmoid, silu, KernelMode, MatRef};
 use super::pool;
-use super::tensor::{lane_chunks_mut, read_lane, LaneChunkMut};
+use super::tensor::{lane_chunks_mut, read_lane, LaneChunkMut, QuantAxis};
+use super::weights::{effective_format, WeightFormat};
 
 /// Conv window width; matches the d_conv=4 convention used across the repo.
 pub const D_CONV: usize = 4;
@@ -154,11 +170,20 @@ impl Backend for ReferenceBackend {
     }
 
     fn upload_weights(&self, model: &ModelEntry, w: &Weights) -> Result<DeviceWeights> {
+        let mut w = w.clone();
+        // Derive the int8 blobs at upload time when the effective format
+        // asks for them (explicit knob > manifest default > f32) — uploads
+        // snapshot the knob, so flipping it later re-uploads, it never
+        // mutates a live engine (DESIGN.md §13).
+        if effective_format(model) == WeightFormat::Int8 {
+            w.ensure_quant(model)
+                .with_context(|| format!("quantizing weights for {}", model.name))?;
+        }
         // Validate the layout eagerly so failures name the model, not a
         // later execute call.
-        RefModel::bind(model, w)
+        RefModel::bind(model, &w)
             .with_context(|| format!("binding reference-layout weights for {}", model.name))?;
-        Ok(DeviceWeights::Host(w.clone()))
+        Ok(DeviceWeights::Host(w))
     }
 
     fn interprets_policies(&self) -> bool {
@@ -497,17 +522,41 @@ impl ReferenceExecutable {
 // Bound model view + math kernels
 // ---------------------------------------------------------------------------
 
+/// A param's quantized view: `(i8 blob, per-channel scales)`, present when
+/// the uploaded weights carry int8 blobs for it.
+type QuantRef<'a> = (&'a [i8], &'a [f32]);
+
 struct RefLayer<'a> {
     norm: &'a [f32],
     in_proj: &'a [f32],
+    /// int8 view of `in_proj` (per-column scales), when quantized.
+    in_proj_q: Option<QuantRef<'a>>,
     conv_w: &'a [f32],
     conv_b: &'a [f32],
     /// mamba only: maps post-conv `u` to `[B, C]`.
     bc_proj: Option<&'a [f32]>,
     d_skip: &'a [f32],
     out_proj: &'a [f32],
+    /// int8 view of `out_proj` (per-column scales), when quantized.
+    out_proj_q: Option<QuantRef<'a>>,
     /// sigmoid(a_log), precomputed: per-(channel, state) decay in (0, 1).
     decay: Vec<f32>,
+}
+
+impl<'a> RefLayer<'a> {
+    fn in_proj_ref(&self) -> MatRef<'a> {
+        match self.in_proj_q {
+            Some((q, scales)) => MatRef::I8 { q, scales },
+            None => MatRef::F32(self.in_proj),
+        }
+    }
+
+    fn out_proj_ref(&self) -> MatRef<'a> {
+        match self.out_proj_q {
+            Some((q, scales)) => MatRef::I8 { q, scales },
+            None => MatRef::F32(self.out_proj),
+        }
+    }
 }
 
 struct RefModel<'a> {
@@ -522,6 +571,9 @@ struct RefModel<'a> {
     /// in-projection width: 2di (mamba) or 2di + 2n (mamba2).
     proj_w: usize,
     embed: &'a [f32],
+    /// int8 view of the tied embedding (per-row scales — one scale serves
+    /// both the head dot and the embedding-row lookup), when quantized.
+    embed_q: Option<QuantRef<'a>>,
     norm_f: &'a [f32],
     layers: Vec<RefLayer<'a>>,
 }
@@ -556,6 +608,27 @@ impl<'a> RefModel<'a> {
             );
             t.as_f32()
         };
+        // The optional int8 view of a quantized param, validated against
+        // the same expected shape (per-row or per-column scales).
+        let getq = |name: &str, rows: usize, cols: usize| -> Result<Option<QuantRef<'a>>> {
+            let Some(qt) = w.quant_of(name) else { return Ok(None) };
+            ensure!(
+                qt.shape == [rows, cols],
+                "quant param {name}: shape {:?} != expected [{rows}, {cols}]",
+                qt.shape
+            );
+            let want_scales = match qt.axis {
+                QuantAxis::Row => rows,
+                QuantAxis::Col => cols,
+            };
+            ensure!(
+                qt.q.len() == rows * cols && qt.scales.len() == want_scales,
+                "quant param {name}: blob {} / scales {} sized wrong",
+                qt.q.len(),
+                qt.scales.len()
+            );
+            Ok(Some((qt.q.as_slice(), qt.scales.as_slice())))
+        };
 
         let (d, di, n, vocab, nl) = (me.d_model, me.d_inner, me.d_state, me.vocab_size, me.n_layer);
         let mamba2 = me.arch != "mamba";
@@ -563,6 +636,7 @@ impl<'a> RefModel<'a> {
         let proj_w = if mamba2 { 2 * di + 2 * n } else { 2 * di };
 
         let embed = get("embedding", &[vocab, d])?;
+        let embed_q = getq("embedding", vocab, d)?;
         let norm_f = get("norm_f", &[d])?;
         let mut layers = Vec::with_capacity(nl);
         for l in 0..nl {
@@ -570,6 +644,7 @@ impl<'a> RefModel<'a> {
             layers.push(RefLayer {
                 norm: get(&format!("layers.{l}.norm"), &[d])?,
                 in_proj: get(&format!("layers.{l}.in_proj"), &[d, proj_w])?,
+                in_proj_q: getq(&format!("layers.{l}.in_proj"), d, proj_w)?,
                 conv_w: get(&format!("layers.{l}.conv_w"), &[conv_ch, D_CONV])?,
                 conv_b: get(&format!("layers.{l}.conv_b"), &[conv_ch])?,
                 bc_proj: if mamba2 {
@@ -579,10 +654,60 @@ impl<'a> RefModel<'a> {
                 },
                 d_skip: get(&format!("layers.{l}.d_skip"), &[di])?,
                 out_proj: get(&format!("layers.{l}.out_proj"), &[di, d])?,
+                out_proj_q: getq(&format!("layers.{l}.out_proj"), di, d)?,
                 decay: a_log.iter().map(|&a| sigmoid(a)).collect(),
             });
         }
-        Ok(RefModel { d, di, n, vocab, n_layer: nl, mamba2, conv_ch, proj_w, embed, norm_f, layers })
+        Ok(RefModel {
+            d,
+            di,
+            n,
+            vocab,
+            n_layer: nl,
+            mamba2,
+            conv_ch,
+            proj_w,
+            embed,
+            embed_q,
+            norm_f,
+            layers,
+        })
+    }
+
+    fn embed_ref(&self) -> MatRef<'a> {
+        match self.embed_q {
+            Some((q, scales)) => MatRef::I8 { q, scales },
+            None => MatRef::F32(self.embed),
+        }
+    }
+
+    /// Write token `tok`'s embedding row into `dst` — the f32 row verbatim,
+    /// or the dequantized int8 row (`scale[tok] · q[tok][c]`) so the
+    /// residual stream every tier seeds from is the same under int8.
+    fn embed_row(&self, tok: usize, dst: &mut [f32]) {
+        let d = self.d;
+        match self.embed_q {
+            Some((q, scales)) => {
+                let row = &q[tok * d..(tok + 1) * d];
+                let s = scales[tok];
+                for (o, &v) in dst.iter_mut().zip(row) {
+                    *o = s * v as f32;
+                }
+            }
+            None => dst.copy_from_slice(&self.embed[tok * d..(tok + 1) * d]),
+        }
+    }
+
+    /// [`Self::embed_row`], appending to a growing buffer (prefill path).
+    fn push_embed_row(&self, tok: usize, out: &mut Vec<f32>) {
+        let d = self.d;
+        match self.embed_q {
+            Some((q, scales)) => {
+                let s = scales[tok];
+                out.extend(q[tok * d..(tok + 1) * d].iter().map(|&v| s * v as f32));
+            }
+            None => out.extend_from_slice(&self.embed[tok * d..(tok + 1) * d]),
+        }
     }
 }
 
@@ -595,6 +720,8 @@ struct Scratch {
     b: Vec<f32>,
     c: Vec<f32>,
     y: Vec<f32>,
+    /// int8 out-projection accumulator (unscaled), `d` floats.
+    oacc: Vec<f32>,
 }
 
 impl Scratch {
@@ -607,6 +734,7 @@ impl Scratch {
             b: vec![0.0; m.n],
             c: vec![0.0; m.n],
             y: vec![0.0; m.di],
+            oacc: vec![0.0; m.d],
         }
     }
 }
@@ -621,6 +749,8 @@ struct BlockScratch {
     b: Vec<f32>,
     c: Vec<f32>,
     y: Vec<f32>,
+    /// int8 out-projection accumulator (unscaled), `nt × d` floats.
+    oacc: Vec<f32>,
     nt: usize,
 }
 
@@ -634,6 +764,7 @@ impl BlockScratch {
             b: vec![0.0; nt * m.n],
             c: vec![0.0; nt * m.n],
             y: vec![0.0; nt * m.di],
+            oacc: vec![0.0; nt * m.d],
             nt,
         }
     }
@@ -649,16 +780,35 @@ fn layer_step(m: &RefModel, l: usize, x: &mut [f32], tail: &mut [f32], h: &mut [
 
     rmsnorm(x, layer.norm, &mut s.xn);
 
-    // in-projection
+    // in-projection. The int8 arm accumulates the unscaled i8 rank-1
+    // updates in the same ascending order as f32, then applies the
+    // per-column scales once at the end — the exact structure of the fused
+    // kernel's I8 arm, so int8 is bit-identical across tiers.
     let pw = m.proj_w;
     for p in s.proj.iter_mut() {
         *p = 0.0;
     }
-    for c in 0..d {
-        let xc = s.xn[c];
-        let row = &layer.in_proj[c * pw..(c + 1) * pw];
-        for j in 0..pw {
-            s.proj[j] += xc * row[j];
+    match layer.in_proj_ref() {
+        MatRef::F32(wp) => {
+            for c in 0..d {
+                let xc = s.xn[c];
+                let row = &wp[c * pw..(c + 1) * pw];
+                for j in 0..pw {
+                    s.proj[j] += xc * row[j];
+                }
+            }
+        }
+        MatRef::I8 { q, scales } => {
+            for c in 0..d {
+                let xc = s.xn[c];
+                let row = &q[c * pw..(c + 1) * pw];
+                for j in 0..pw {
+                    s.proj[j] += xc * row[j] as f32;
+                }
+            }
+            for j in 0..pw {
+                s.proj[j] *= scales[j];
+            }
         }
     }
 
@@ -715,12 +865,32 @@ fn layer_step(m: &RefModel, l: usize, x: &mut [f32], tail: &mut [f32], h: &mut [
         s.y[i] = (acc + layer.d_skip[i] * ui) * silu(z);
     }
 
-    // out-projection back into the residual stream
-    for i in 0..di {
-        let yi = s.y[i];
-        let row = &layer.out_proj[i * d..(i + 1) * d];
-        for c in 0..d {
-            x[c] += yi * row[c];
+    // out-projection back into the residual stream (int8: unscaled
+    // accumulate into `oacc`, per-column scale on the way into `x` —
+    // mirrors `kernels::outproj_acc`'s I8 arm).
+    match layer.out_proj_ref() {
+        MatRef::F32(wp) => {
+            for i in 0..di {
+                let yi = s.y[i];
+                let row = &wp[i * d..(i + 1) * d];
+                for c in 0..d {
+                    x[c] += yi * row[c];
+                }
+            }
+        }
+        MatRef::I8 { q, scales } => {
+            let oacc = &mut s.oacc[..d];
+            oacc.fill(0.0);
+            for i in 0..di {
+                let yi = s.y[i];
+                let row = &q[i * d..(i + 1) * d];
+                for c in 0..d {
+                    oacc[c] += yi * row[c] as f32;
+                }
+            }
+            for c in 0..d {
+                x[c] += oacc[c] * scales[c];
+            }
         }
     }
 }
@@ -740,6 +910,7 @@ enum BlockKind {
 /// 6-stage pipeline both the sequence (prefill/eval) and the decode-chunk
 /// paths share; only the conv and scan kernels dispatch on `kind`, so the
 /// seq-vs-batch bit-identity contract has a single pipeline to drift from.
+#[allow(clippy::too_many_arguments)]
 fn layer_block(
     m: &RefModel,
     l: usize,
@@ -749,12 +920,23 @@ fn layer_block(
     ssm_state: &mut [f32],
     s: &mut BlockScratch,
     nt: usize,
+    simd: bool,
 ) {
     debug_assert!(nt <= s.nt);
     let layer = &m.layers[l];
     let (pw, di, n) = (m.proj_w, m.di, m.n);
     let proj = &mut s.proj[..nt * pw];
-    kernels::fused_rmsnorm_inproj(xs, layer.norm, layer.in_proj, nt, m.d, pw, proj, &mut s.inv);
+    kernels::fused_rmsnorm_inproj(
+        xs,
+        layer.norm,
+        layer.in_proj_ref(),
+        nt,
+        m.d,
+        pw,
+        proj,
+        &mut s.inv,
+        simd,
+    );
     let conv = &mut s.conv[..nt * m.conv_ch];
     match kind {
         BlockKind::Seq => {
@@ -778,7 +960,7 @@ fn layer_block(
         kernels::copy_bc_channels(conv, m.conv_ch, di, n, bs, cs, nt);
     } else {
         let bc = layer.bc_proj.expect("mamba layer carries bc_proj");
-        kernels::bc_project(u, bc, n, bs, cs, nt);
+        kernels::bc_project(u, bc, n, bs, cs, nt, simd);
     }
     let y = &mut s.y[..nt * di];
     match kind {
@@ -794,6 +976,7 @@ fn layer_block(
             ssm_state,
             y,
             nt,
+            simd,
         ),
         BlockKind::Batch => kernels::scan_gate_batch(
             u,
@@ -807,9 +990,10 @@ fn layer_block(
             ssm_state,
             y,
             nt,
+            simd,
         ),
     }
-    kernels::outproj_acc(y, layer.out_proj, m.d, xs, nt);
+    kernels::outproj_acc(y, layer.out_proj_ref(), m.d, xs, &mut s.oacc, nt, simd);
 }
 
 /// Maximal runs of non-idle lanes in a decode chunk: the sub-ranges the
@@ -863,11 +1047,12 @@ fn decode_lanes(
         KernelMode::Scalar => {
             let mut scratch = Scratch::new(m);
             let mut xn = vec![0.0f32; d];
+            let mut x = vec![0.0f32; d];
             for (t, &tok) in toks.iter().enumerate() {
                 if tok == IDLE_LANE {
                     continue;
                 }
-                let mut x: Vec<f32> = m.embed[tok as usize * d..(tok as usize + 1) * d].to_vec();
+                m.embed_row(tok as usize, &mut x);
                 for li in 0..m.n_layer {
                     let tails = conv.layer_mut(li);
                     let hs = ssm.layer_mut(li);
@@ -883,7 +1068,8 @@ fn decode_lanes(
                 head_logits(m, &x, &mut xn, &mut lg[t * v..(t + 1) * v]);
             }
         }
-        KernelMode::Fused => {
+        KernelMode::Fused | KernelMode::Simd => {
+            let simd = matches!(mode, KernelMode::Simd);
             let runs = active_runs(toks);
             let Some(max_run) = runs.iter().map(|r| r.len()).max() else {
                 return; // every lane idle: nothing to decode
@@ -892,8 +1078,7 @@ fn decode_lanes(
             let mut xs = vec![0.0f32; nt * d];
             for r in &runs {
                 for t in r.clone() {
-                    let tok = toks[t] as usize;
-                    xs[t * d..(t + 1) * d].copy_from_slice(&m.embed[tok * d..(tok + 1) * d]);
+                    m.embed_row(toks[t] as usize, &mut xs[t * d..(t + 1) * d]);
                 }
             }
             for li in 0..m.n_layer {
@@ -909,6 +1094,7 @@ fn decode_lanes(
                         &mut hs[r.start * ssm_row..r.end * ssm_row],
                         &mut s,
                         r.len(),
+                        simd,
                     );
                 }
             }
@@ -920,15 +1106,27 @@ fn decode_lanes(
 }
 
 /// Final RMSNorm + tied embedding head for one residual row (scalar path).
+/// The int8 arm is `dot8_i8 · scale[v]` — the exact expression every tier's
+/// head uses for quantized embeddings, so int8 logits are tier-identical.
 fn head_logits(m: &RefModel, x: &[f32], xn: &mut [f32], out: &mut [f32]) {
     rmsnorm(x, m.norm_f, xn);
-    for v in 0..m.vocab {
-        let row = &m.embed[v * m.d..(v + 1) * m.d];
-        let mut acc = 0.0f32;
-        for c in 0..m.d {
-            acc += xn[c] * row[c];
+    match m.embed_ref() {
+        MatRef::F32(embed) => {
+            for v in 0..m.vocab {
+                let row = &embed[v * m.d..(v + 1) * m.d];
+                let mut acc = 0.0f32;
+                for c in 0..m.d {
+                    acc += xn[c] * row[c];
+                }
+                out[v] = acc;
+            }
         }
-        out[v] = acc;
+        MatRef::I8 { q, scales } => {
+            for v in 0..m.vocab {
+                let row = &q[v * m.d..(v + 1) * m.d];
+                out[v] = kernels::dot8_i8(xn, row) * scales[v];
+            }
+        }
     }
 }
 
@@ -949,7 +1147,8 @@ fn head_rows(m: &RefModel, mode: KernelMode, xs: &[f32], out: &mut [f32]) {
                 );
             }
         }
-        KernelMode::Fused => {
+        KernelMode::Fused | KernelMode::Simd => {
+            let simd = matches!(mode, KernelMode::Simd);
             let cap = nt.min(kernels::TOKEN_BLOCK).max(1);
             let mut xn = vec![0.0f32; cap * m.d];
             let mut at = 0usize;
@@ -958,11 +1157,12 @@ fn head_rows(m: &RefModel, mode: KernelMode, xs: &[f32], out: &mut [f32]) {
                 kernels::head_norm_logits(
                     &xs[at * m.d..(at + bs) * m.d],
                     m.norm_f,
-                    m.embed,
+                    m.embed_ref(),
                     m.vocab,
                     &mut out[at * m.vocab..(at + bs) * m.vocab],
                     &mut xn,
                     bs,
+                    simd,
                 );
                 at += bs;
             }
@@ -1027,14 +1227,16 @@ fn forward(
     let mut xs: Vec<f32> = Vec::with_capacity(tokens.len() * d);
     for &t in tokens {
         ensure!(t >= 0 && (t as usize) < m.vocab, "token {t} outside vocab {}", m.vocab);
-        xs.extend_from_slice(&m.embed[t as usize * d..(t as usize + 1) * d]);
+        m.push_embed_row(t as usize, &mut xs);
     }
     let mut kept: Vec<usize> = (0..tokens.len()).collect();
     let mut merged: Vec<f32> = vec![1.0; tokens.len()];
     let mut states = Vec::with_capacity(m.n_layer);
-    let mut scratch = match kernels::mode() {
+    let mode = kernels::mode();
+    let simd = matches!(mode, KernelMode::Simd);
+    let mut scratch = match mode {
         KernelMode::Scalar => FwdScratch::Scalar(Scratch::new(m)),
-        KernelMode::Fused => {
+        KernelMode::Fused | KernelMode::Simd => {
             FwdScratch::Fused(BlockScratch::new(m, kernels::TOKEN_BLOCK.min(tokens.len())))
         }
     };
@@ -1059,7 +1261,7 @@ fn forward(
                 while at < live {
                     let nt = (live - at).min(kernels::TOKEN_BLOCK);
                     let rows = &mut xs[at * d..(at + nt) * d];
-                    layer_block(m, l, BlockKind::Seq, rows, &mut tail, &mut h, s, nt);
+                    layer_block(m, l, BlockKind::Seq, rows, &mut tail, &mut h, s, nt, simd);
                     at += nt;
                 }
             }

@@ -62,6 +62,87 @@ impl HostTensor {
 }
 
 // ---------------------------------------------------------------------------
+// Per-channel symmetric int8 quantization (DESIGN.md §13). Blobs stay
+// contiguous row-major so the kernels' unaligned 8-wide vector loads
+// (`kernels::dot8_i8`/`axpy_i8`) can chunk them directly — no padding or
+// re-layout is needed.
+// ---------------------------------------------------------------------------
+
+/// Which axis of a `[rows, cols]` matrix carries the per-channel scales.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantAxis {
+    /// One scale per row (the tied embedding/head: output channel = vocab
+    /// row, and the same scale serves the embedding-row lookup).
+    Row,
+    /// One scale per column (in/out projections: output channel = column).
+    Col,
+}
+
+/// A per-channel symmetric int8 tensor: `w[r][c] ≈ q[r][c] · scale[ch]`
+/// with `scale[ch] = max|w[ch]| / 127`, values rounded half away from zero
+/// and saturated to ±127 (never −128, so the grid is symmetric). Produced
+/// at load time by [`Weights::ensure_quant`](super::weights::Weights::ensure_quant);
+/// the kernels consume it through [`MatRef::I8`](super::kernels::MatRef).
+/// Locked against the python generator by `tests/quant_golden.rs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantTensor {
+    pub shape: [usize; 2],
+    pub axis: QuantAxis,
+    pub q: Vec<i8>,
+    pub scales: Vec<f32>,
+}
+
+/// One value onto the symmetric grid. `f32::round` rounds half away from
+/// zero — the tie rule `python/compile/quant_golden.py` emulates. A
+/// `scale == 0` channel (all-zero weights) quantizes to all zeros.
+#[inline]
+fn quantize_value(v: f32, scale: f32) -> i8 {
+    if scale == 0.0 {
+        return 0;
+    }
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Quantize a `[rows, cols]` matrix with one scale per **row**.
+pub fn quantize_rows(data: &[f32], rows: usize, cols: usize) -> QuantTensor {
+    assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+    let mut scales = vec![0.0f32; rows];
+    for r in 0..rows {
+        let m = data[r * cols..(r + 1) * cols].iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        scales[r] = m / 127.0;
+    }
+    let mut q = vec![0i8; rows * cols];
+    for r in 0..rows {
+        let s = scales[r];
+        for c in 0..cols {
+            q[r * cols + c] = quantize_value(data[r * cols + c], s);
+        }
+    }
+    QuantTensor { shape: [rows, cols], axis: QuantAxis::Row, q, scales }
+}
+
+/// Quantize a `[rows, cols]` matrix with one scale per **column**.
+pub fn quantize_cols(data: &[f32], rows: usize, cols: usize) -> QuantTensor {
+    assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+    let mut scales = vec![0.0f32; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            scales[c] = scales[c].max(data[r * cols + c].abs());
+        }
+    }
+    for s in scales.iter_mut() {
+        *s /= 127.0;
+    }
+    let mut q = vec![0i8; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            q[r * cols + c] = quantize_value(data[r * cols + c], scales[c]);
+        }
+    }
+    QuantTensor { shape: [rows, cols], axis: QuantAxis::Col, q, scales }
+}
+
+// ---------------------------------------------------------------------------
 // Lane gather/scatter: moving per-sequence decode state between slot storage
 // and the `[n_layer, n_lanes, row]` decode frame (DESIGN.md §6).
 //
@@ -241,6 +322,46 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn quantize_rows_saturates_and_scales_per_row() {
+        // Row 0 peaks at 2.54, row 1 is all zeros, row 2 peaks at 0.127.
+        let data = vec![2.54, -1.27, 0.01, 0.0, 0.0, 0.0, -0.127, 0.0635, 0.001];
+        let qt = quantize_rows(&data, 3, 3);
+        assert_eq!(qt.axis, QuantAxis::Row);
+        assert_eq!(qt.shape, [3, 3]);
+        assert_eq!(qt.scales[0], 2.54 / 127.0);
+        // The channel max lands exactly on ±127; the zero row on scale 0/q 0.
+        assert_eq!(qt.q[0], 127);
+        assert_eq!(&qt.q[3..6], &[0, 0, 0]);
+        assert_eq!(qt.scales[1], 0.0);
+        assert_eq!(qt.q[6], -127);
+        // Round-trip error per weight is ≤ scale/2 (the grid's half-step).
+        for r in 0..3 {
+            for c in 0..3 {
+                let back = qt.q[r * 3 + c] as f32 * qt.scales[r];
+                assert!(
+                    (back - data[r * 3 + c]).abs() <= qt.scales[r] / 2.0 + 1e-12,
+                    "r{r} c{c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_cols_scales_per_column() {
+        // Column maxima: 4.0, 0.2.
+        let data = vec![1.0, -0.2, -4.0, 0.1];
+        let qt = quantize_cols(&data, 2, 2);
+        assert_eq!(qt.axis, QuantAxis::Col);
+        assert_eq!(qt.scales, vec![4.0 / 127.0, 0.2 / 127.0]);
+        assert_eq!(qt.q[2], -127);
+        assert_eq!(qt.q[1], -127);
+        // 1.0 / (4/127) = 31.75 → rounds half away from zero to 32.
+        assert_eq!(qt.q[0], 32);
+        // 0.1 / (0.2/127) = 63.5 → ties round away from zero to 64.
+        assert_eq!(qt.q[3], 64);
     }
 
     #[test]

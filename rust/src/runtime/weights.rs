@@ -3,18 +3,156 @@
 //! `aot.py::export_weights` for real artifacts and by
 //! [`crate::fixtures`] for synthetic ones). Device residency lives behind
 //! [`super::Backend::upload_weights`].
+//!
+//! This module also owns the process-wide [`WeightFormat`] knob
+//! (`--weights f32|int8`, env `TOR_SSM_WEIGHTS`, optional per-model
+//! manifest default) and the load-time int8 quantization it triggers
+//! (DESIGN.md §13): [`Weights::ensure_quant`] derives per-channel i8 blobs
+//! for the big matmul operands — the tied embedding/head (per row) and
+//! every layer's in/out projection (per column) — while activations, the
+//! conv path, `bc_proj`, norms and the SSM state stay f32, so recurrence
+//! semantics and the prefix-cache/preemption bit-identity contracts are
+//! untouched.
 
+use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::manifest::{Manifest, ModelEntry};
+use crate::runtime::kernels::ignored_env_warning;
+use crate::runtime::tensor::{quantize_cols, quantize_rows, QuantAxis, QuantTensor};
 use crate::runtime::HostTensor;
+
+// ---------------------------------------------------------------------------
+// Weight format knob
+// ---------------------------------------------------------------------------
+
+/// Storage format for the big matmul operands. `F32` is the dense format
+/// everything before DESIGN.md §13 used; `Int8` quantizes per output
+/// channel at load time (symmetric `scale = max|w|/127`, stored as an
+/// `(i8 blob, f32 scales)` pair per param). Int8 changes outputs vs f32 by
+/// quantization error, but is bit-identical across all three kernel tiers
+/// at any thread count (see `runtime/kernels.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightFormat {
+    F32,
+    Int8,
+}
+
+impl WeightFormat {
+    /// Parse a format name as used by `--weights` and `TOR_SSM_WEIGHTS`.
+    ///
+    /// ```
+    /// use tor_ssm::runtime::weights::WeightFormat;
+    /// assert_eq!(WeightFormat::from_name("f32").unwrap(), WeightFormat::F32);
+    /// assert_eq!(WeightFormat::from_name("int8").unwrap(), WeightFormat::Int8);
+    /// assert!(WeightFormat::from_name("int4").is_err());
+    /// ```
+    pub fn from_name(name: &str) -> Result<WeightFormat> {
+        match name {
+            "f32" | "" => Ok(WeightFormat::F32),
+            "int8" => Ok(WeightFormat::Int8),
+            other => bail!("unknown weight format {other:?} (expected f32|int8)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightFormat::F32 => "f32",
+            WeightFormat::Int8 => "int8",
+        }
+    }
+}
+
+/// Process-wide format. 0 = unset (resolve from env on first read),
+/// 1 = f32 (explicit), 2 = int8 (explicit), 3 = defaulted — env absent or
+/// typo'd, so a manifest `weights_format` may still override per model.
+static FORMAT: AtomicU8 = AtomicU8::new(0);
+
+fn store_format(f: WeightFormat, explicit: bool) {
+    let v = match (f, explicit) {
+        (WeightFormat::F32, true) => 1,
+        (WeightFormat::Int8, true) => 2,
+        (_, false) => 3,
+    };
+    FORMAT.store(v, Ordering::Relaxed);
+}
+
+/// The active process-wide weight format. Defaults to
+/// [`WeightFormat::F32`]; the first read honours
+/// `TOR_SSM_WEIGHTS=f32|int8` (a typo warns loudly and falls back — it
+/// must not silently measure the wrong configuration), and [`set_format`]
+/// overrides at any time.
+pub fn format() -> WeightFormat {
+    match FORMAT.load(Ordering::Relaxed) {
+        1 | 3 => WeightFormat::F32,
+        2 => WeightFormat::Int8,
+        _ => {
+            let (f, explicit) = match std::env::var("TOR_SSM_WEIGHTS") {
+                Ok(v) => match WeightFormat::from_name(&v) {
+                    Ok(f) => (f, true),
+                    Err(e) => {
+                        eprintln!("{}", ignored_env_warning("TOR_SSM_WEIGHTS", &e, "f32"));
+                        (WeightFormat::F32, false)
+                    }
+                },
+                Err(_) => (WeightFormat::F32, false),
+            };
+            store_format(f, explicit);
+            f
+        }
+    }
+}
+
+/// Override the process-wide weight format (the `--weights` flag; the
+/// bench matrix flips it between cells). An explicit setting beats any
+/// manifest `weights_format` default.
+///
+/// ```
+/// use tor_ssm::runtime::weights::{format, set_format, WeightFormat};
+/// set_format(WeightFormat::Int8);
+/// assert_eq!(format(), WeightFormat::Int8);
+/// set_format(WeightFormat::F32);
+/// assert_eq!(format(), WeightFormat::F32);
+/// ```
+pub fn set_format(f: WeightFormat) {
+    store_format(f, true);
+}
+
+/// The format a model's weights are uploaded in: an explicit knob
+/// ([`set_format`] / a valid `TOR_SSM_WEIGHTS`) wins; otherwise the
+/// model's optional manifest default (`weights_format`, validated at
+/// manifest parse time); otherwise f32. Consulted by
+/// `Backend::upload_weights`, so the knob threads through `ProgramSpec`
+/// (which carries the [`ModelEntry`]) automatically.
+pub fn effective_format(model: &ModelEntry) -> WeightFormat {
+    let f = format(); // resolves env on first read
+    match FORMAT.load(Ordering::Relaxed) {
+        1 | 2 => f,
+        _ => model
+            .weights_format
+            .as_deref()
+            .and_then(|s| WeightFormat::from_name(s).ok())
+            .unwrap_or(WeightFormat::F32),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host-side parameter set
+// ---------------------------------------------------------------------------
 
 /// Host-side parameter set, ordered per the manifest's param layout.
 #[derive(Debug, Clone)]
 pub struct Weights {
     pub tensors: Vec<HostTensor>,
+    /// Per-channel int8 blobs for the big matmul operands, keyed by param
+    /// name — populated by [`ensure_quant`](Self::ensure_quant) when the
+    /// effective format is int8, `None` otherwise. Behind an `Arc` so
+    /// cloning a `Weights` (upload, snapshots) shares the blobs.
+    pub quant: Option<Arc<BTreeMap<String, QuantTensor>>>,
 }
 
 impl Weights {
@@ -49,7 +187,7 @@ impl Weights {
             );
             tensors.push(HostTensor::f32(p.shape.clone(), data));
         }
-        Ok(Weights { tensors })
+        Ok(Weights { tensors, quant: None })
     }
 
     pub fn save(&self, model: &ModelEntry, path: impl AsRef<Path>) -> Result<()> {
@@ -66,6 +204,51 @@ impl Weights {
         }
         std::fs::write(path.as_ref(), out)
             .with_context(|| format!("writing weights {:?}", path.as_ref()))
+    }
+
+    /// Quantize the big matmul operands (idempotent): `embedding` per row
+    /// — one scale per vocab row serves both the head dot and the
+    /// embedding-row lookup — and every `layers.*.in_proj` /
+    /// `layers.*.out_proj` per column. All other params (norms, conv,
+    /// `bc_proj`, `d_skip`, `a_log`) stay f32. The f32 tensors are kept —
+    /// they remain the save/train representation — so int8 is purely an
+    /// execution format.
+    pub fn ensure_quant(&mut self, model: &ModelEntry) -> Result<()> {
+        if self.quant.is_some() {
+            return Ok(());
+        }
+        ensure!(
+            self.tensors.len() == model.params.len(),
+            "weights have {} tensors, manifest lists {} params",
+            self.tensors.len(),
+            model.params.len()
+        );
+        let mut map = BTreeMap::new();
+        for (t, p) in self.tensors.iter().zip(&model.params) {
+            let axis = if p.name == "embedding" {
+                QuantAxis::Row
+            } else if p.name.ends_with(".in_proj") || p.name.ends_with(".out_proj") {
+                QuantAxis::Col
+            } else {
+                continue;
+            };
+            ensure!(t.shape.len() == 2, "quantized param {} must be 2-D", p.name);
+            let data = t.as_f32().with_context(|| format!("quantizing {}", p.name))?;
+            let qt = match axis {
+                QuantAxis::Row => quantize_rows(data, t.shape[0], t.shape[1]),
+                QuantAxis::Col => quantize_cols(data, t.shape[0], t.shape[1]),
+            };
+            map.insert(p.name.clone(), qt);
+        }
+        ensure!(!map.is_empty(), "no quantizable params found (unexpected param naming?)");
+        self.quant = Some(Arc::new(map));
+        Ok(())
+    }
+
+    /// The quantized blob for `name`, if [`ensure_quant`](Self::ensure_quant)
+    /// produced one.
+    pub fn quant_of(&self, name: &str) -> Option<&QuantTensor> {
+        self.quant.as_ref().and_then(|m| m.get(name))
     }
 
     /// Mean of |w| across all params — a cheap training-progress fingerprint.

@@ -121,7 +121,7 @@ pub fn train(
     }
 
     // Save checkpoint (params only).
-    let trained = Weights { tensors: params };
+    let trained = Weights { tensors: params, quant: None };
     let ckpt = checkpoint_path(man, &model.name);
     trained.save(model, &ckpt)?;
 

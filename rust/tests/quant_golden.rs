@@ -1,0 +1,181 @@
+//! Golden lockstep test: the load-time int8 weight quantization
+//! (`runtime::tensor::{quantize_rows, quantize_cols}`, DESIGN.md §13) vs
+//! the stdlib-only python generator `python/compile/quant_golden.py`.
+//!
+//! The fixture `tests/data/quant_golden.json` carries both the inputs and
+//! the expected (scales, q) pairs. Unusually for these fixtures the
+//! generator emulates f32 bit-exactly, so the q comparison is **integer
+//! equality** — tie cases (`.5` ratios under the half-away-from-zero rule)
+//! and ±127 saturation included, not merely "close". If either side's
+//! scheme changes, regenerate:
+//!
+//! ```text
+//! PYTHONPATH=python python3 python/compile/quant_golden.py
+//! ```
+//!
+//! Alongside the golden pin, a hand-rolled property test checks the
+//! scheme's defining guarantees on random matrices: per-weight round-trip
+//! error ≤ scale/2 (to f32 rounding), q within the symmetric ±127 grid,
+//! zero channels quantizing to exact zeros, and every nonzero channel's
+//! peak landing on the end of the grid.
+
+use tor_ssm::runtime::tensor::{quantize_cols, quantize_rows, QuantAxis, QuantTensor};
+use tor_ssm::util::json::Json;
+use tor_ssm::util::rng::Rng;
+
+fn load_golden() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/quant_golden.json");
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("missing checked-in fixture {path}: {e}"));
+    Json::parse(&text).expect("fixture parses")
+}
+
+/// Flatten a JSON matrix (array of equal-length rows) into row-major f32,
+/// returning `(data, rows, cols)`.
+fn matrix(j: &Json, key: &str) -> (Vec<f32>, usize, usize) {
+    let rows = j.expect(key).as_arr().unwrap_or_else(|| panic!("{key} not an array"));
+    let cols = rows[0].as_arr().expect("matrix row").len();
+    let mut out = Vec::with_capacity(rows.len() * cols);
+    for row in rows {
+        let vals = row.as_arr().expect("matrix row");
+        assert_eq!(vals.len(), cols, "{key}: ragged row");
+        out.extend(vals.iter().map(|v| v.as_f64().expect("number") as f32));
+    }
+    (out, rows.len(), cols)
+}
+
+fn floats(j: &Json, key: &str) -> Vec<f64> {
+    j.expect(key)
+        .as_arr()
+        .unwrap_or_else(|| panic!("{key} not an array"))
+        .iter()
+        .map(|v| v.as_f64().expect("number"))
+        .collect()
+}
+
+#[test]
+fn quantization_matches_python_generator_exactly() {
+    let g = load_golden();
+    let cases = g.expect("cases").as_arr().expect("cases array");
+    assert!(cases.len() >= 4, "fixture lost cases");
+    for case in cases {
+        let name = case.str_of("name");
+        let (data, rows, cols) = matrix(case, "data");
+        let qt = match case.str_of("axis").as_str() {
+            "row" => quantize_rows(&data, rows, cols),
+            "col" => quantize_cols(&data, rows, cols),
+            other => panic!("{name}: unknown axis {other:?}"),
+        };
+        let want_scales = floats(case, "scales");
+        assert_eq!(qt.scales.len(), want_scales.len(), "{name}: scales length");
+        for (i, (s, w)) in qt.scales.iter().zip(&want_scales).enumerate() {
+            // The generator emulates f32 exactly and JSON round-trips f64
+            // losslessly, so this is equality up to parse noise.
+            assert!(
+                (*s as f64 - w).abs() <= w.abs() * 1e-9,
+                "{name}: scale[{i}] rust {s} vs python {w}"
+            );
+        }
+        let (want_q, qr, qc) = matrix(case, "q");
+        assert_eq!((qr, qc), (rows, cols), "{name}: q shape");
+        for (i, (got, want)) in qt.q.iter().zip(&want_q).enumerate() {
+            assert_eq!(
+                *got as i64, *want as i64,
+                "{name}: q[{i}] diverged (input {}, scale {})",
+                data[i],
+                qt.scales[match qt.axis {
+                    QuantAxis::Row => i / cols,
+                    QuantAxis::Col => i % cols,
+                }]
+            );
+        }
+    }
+}
+
+#[test]
+fn fixture_exercises_ties_saturation_and_zero_channels() {
+    let g = load_golden();
+    let cases = g.expect("cases").as_arr().expect("cases array");
+    let (mut sat_pos, mut sat_neg, mut zero_channel, mut tie) = (false, false, false, false);
+    for case in cases {
+        let (data, _, _) = matrix(case, "data");
+        let (q, _, _) = matrix(case, "q");
+        sat_pos |= q.iter().any(|&v| v as i64 == 127);
+        sat_neg |= q.iter().any(|&v| v as i64 == -127);
+        let scales = floats(case, "scales");
+        zero_channel |= scales.iter().any(|&s| s == 0.0);
+        // A `.5` ratio resolved away from zero leaves |q·scale| > |input|
+        // at exactly half a step; the edge case plants one (-1.27 at scale
+        // 0.02 -> -63.5 -> -64 under the away-from-zero rule).
+        tie |= data.contains(&-1.27);
+    }
+    assert!(sat_pos && sat_neg, "fixture must saturate both grid ends");
+    assert!(zero_channel, "fixture must carry an all-zero channel");
+    assert!(tie, "fixture must carry the planted .5-ratio tie case");
+}
+
+/// Hand-rolled property test (same style as the schedule-solver proptests):
+/// the scheme's guarantees hold on random matrices of random shapes.
+#[test]
+fn round_trip_error_is_bounded_by_half_a_step() {
+    let mut rng = Rng::new(0x0807_2026);
+    for trial in 0..200 {
+        let rows = 1 + rng.below(24);
+        let cols = 1 + rng.below(24);
+        let amp = [1e-4, 1.0, 37.5][rng.below(3)] as f32;
+        let mut data: Vec<f32> =
+            (0..rows * cols).map(|_| amp * rng.normal() as f32).collect();
+        // Sometimes zero out a whole row and column: scale-0 channels must
+        // quantize to exact zeros, not NaNs.
+        if trial % 3 == 0 {
+            let zr = rng.below(rows);
+            let zc = rng.below(cols);
+            for c in 0..cols {
+                data[zr * cols + c] = 0.0;
+            }
+            for r in 0..rows {
+                data[r * cols + zc] = 0.0;
+            }
+        }
+        for qt in [quantize_rows(&data, rows, cols), quantize_cols(&data, rows, cols)] {
+            check_quant_invariants(&qt, &data, rows, cols, trial);
+        }
+    }
+}
+
+fn check_quant_invariants(qt: &QuantTensor, data: &[f32], rows: usize, cols: usize, trial: usize) {
+    assert_eq!(qt.shape, [rows, cols]);
+    let scale_of = |i: usize| match qt.axis {
+        QuantAxis::Row => qt.scales[i / cols],
+        QuantAxis::Col => qt.scales[i % cols],
+    };
+    for (i, (&q, &v)) in qt.q.iter().zip(data).enumerate() {
+        let s = scale_of(i) as f64;
+        assert!((-127..=127).contains(&(q as i64)), "trial {trial}: q {q} off the grid");
+        if s == 0.0 {
+            assert_eq!(q, 0, "trial {trial}: zero-scale channel produced q {q}");
+            assert_eq!(v, 0.0, "trial {trial}: zero scale from nonzero weight {v}");
+            continue;
+        }
+        // Round-to-nearest leaves ≤ half a step; the f32 division computing
+        // the ratio adds at most ~127·ε of slack before rounding.
+        let bound = s * 0.5 * (1.0 + 1e-3);
+        let err = (q as f64 * s - v as f64).abs();
+        assert!(
+            err <= bound,
+            "trial {trial}: |{q}·{s} - {v}| = {err} exceeds half a step {bound}"
+        );
+    }
+    // The peak of every nonzero channel defines its scale, so it must land
+    // exactly on the end of the grid.
+    for (ch, &s) in qt.scales.iter().enumerate() {
+        if s == 0.0 {
+            continue;
+        }
+        let peak = match qt.axis {
+            QuantAxis::Row => (0..cols).map(|c| qt.q[ch * cols + c].abs()).max(),
+            QuantAxis::Col => (0..rows).map(|r| qt.q[r * cols + ch].abs()).max(),
+        };
+        assert_eq!(peak, Some(127), "trial {trial}: channel {ch} peak missed the grid end");
+    }
+}

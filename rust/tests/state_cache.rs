@@ -9,13 +9,21 @@
 //!   only part of their prefix before diverging;
 //! * **preempt/resume**: a sequence swapped out of its decode lane by a
 //!   higher-priority arrival and resumed later generates exactly the tokens
-//!   of the uninterrupted all-Normal run, across both kernel modes ×
-//!   threads 1..=4 (the global exec knobs are process-wide, so those arms
-//!   serialise on a mutex);
+//!   of the uninterrupted all-Normal run, in every cell of the execution
+//!   matrix — {scalar, fused, simd} kernels × {f32, int8} weights ×
+//!   threads 1..=4 — with the baseline recomputed per (mode, format),
+//!   since cross-config outputs may legitimately differ (DESIGN.md §13);
 //! * **eviction**: under a byte budget tight enough to evict constantly,
 //!   the cache never serves a stale or truncated snapshot — every warm
 //!   result still equals its cold baseline (entries verify their stored
 //!   prefix tokens, so a hit is always the right state or no state).
+//!
+//! Snapshot/restore and the cache itself are format- and tier-agnostic (a
+//! state copy is a state copy), so the warm-vs-cold pin also runs under
+//! the simd tier and the int8 weight format.
+//!
+//! The kernel/worker/format knobs are process-wide, so every test here
+//! serialises on a mutex and states the configuration it runs under.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -29,14 +37,22 @@ use tor_ssm::coordinator::{Priority, Request, Response};
 use tor_ssm::fixtures::generate_default;
 use tor_ssm::manifest::Manifest;
 use tor_ssm::runtime::kernels::{self, KernelMode};
+use tor_ssm::runtime::weights::{set_format, WeightFormat};
 use tor_ssm::runtime::{pool, Runtime, Weights};
 
-/// The process-wide kernel/worker knobs must not race between the
-/// mode-sweeping tests in this binary.
+/// The process-wide kernel/worker/format knobs must not race between the
+/// tests in this binary: the simd and int8 arms produce *different* (still
+/// self-consistent) outputs, so a concurrent test flipping a knob mid-run
+/// would compare apples to oranges.
 static EXEC_LOCK: Mutex<()> = Mutex::new(());
 
 fn lock() -> std::sync::MutexGuard<'static, ()> {
     EXEC_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn set_exec(mode: KernelMode, threads: usize) {
+    kernels::set_mode(mode);
+    pool::set_workers(threads);
 }
 
 fn fixture(tag: &str) -> (PathBuf, Manifest) {
@@ -97,6 +113,9 @@ const VARIANTS: [&str; 9] = [
 /// boundary only).
 #[test]
 fn warm_cache_resume_is_bit_identical_to_cold_prefill() {
+    let _g = lock();
+    set_exec(KernelMode::Fused, 1);
+    set_format(WeightFormat::F32);
     let (dir, man) = fixture("warm");
     let rt = Runtime::reference().unwrap();
     let plen = man.prefill_seq_len;
@@ -185,93 +204,163 @@ fn warm_cache_resume_is_bit_identical_to_cold_prefill() {
     cleanup(&dir);
 }
 
-/// Preempt-then-resume equals uninterrupted decode, token for token, across
-/// both kernel modes × threads 1..=4. The priority run must actually
-/// preempt (asserted), and the all-Normal baseline must not.
+/// Preempt-then-resume equals uninterrupted decode, token for token, in
+/// every cell of the execution matrix: {scalar, fused, simd} kernels ×
+/// {f32, int8} weights × threads 1..=4. The invariant lives *within* a
+/// cell — the all-Normal baseline is recomputed per (mode, format),
+/// because simd×f32 logits differ from scalar×f32 by the reassociated
+/// head's rounding and int8 differs from f32 by quantization error
+/// (DESIGN.md §13); what must never differ is preempted-vs-uninterrupted
+/// under the same configuration. Comparing each thread count against the
+/// 1-thread baseline of the same (mode, format) also pins
+/// thread-invariance for the simd tier and the int8 format. The priority
+/// run must actually preempt (asserted), and the baseline must not.
 #[test]
-fn preempt_then_resume_is_token_identical_across_modes_and_threads() {
+fn preempt_then_resume_is_token_identical_across_modes_threads_and_formats() {
     let _g = lock();
     let (dir, man) = fixture("preempt");
     let rt = Runtime::reference().unwrap();
     let model = man.model("ref-mamba").unwrap().clone();
     let w = Weights::load_init(&man, &model).unwrap();
-    let engine = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
     let vocab = model.vocab_size;
     let plen = man.prefill_seq_len;
-    let lanes = engine.decode_batch;
-    assert!(lanes >= 2, "fixture decode frame too narrow for preemption");
 
-    // Long-running low-priority residents fill every lane; then a burst of
-    // high-priority arrivals must swap them out and finish first.
-    let low: Vec<Request> = (0..lanes as u64)
-        .map(|i| {
-            let mut r = rq(i, prompt(plen / 2 + i as usize, i as usize, vocab));
-            r.gen_tokens = 10 + i as usize;
-            r.priority = Priority::Low;
-            r
-        })
-        .collect();
-    let high: Vec<Request> = (0..2u64)
-        .map(|i| {
-            let mut r = rq(100 + i, prompt(plen / 3 + i as usize, 7 + i as usize, vocab));
-            r.gen_tokens = 3;
-            r.priority = Priority::High;
-            r
-        })
-        .collect();
-    let as_normal = |reqs: &[Request]| -> Vec<Request> {
-        reqs.iter()
-            .cloned()
-            .map(|mut r| {
-                r.priority = Priority::Normal;
+    for fmt in [WeightFormat::F32, WeightFormat::Int8] {
+        set_format(fmt);
+        // Engine::new uploads weights, and the upload snapshots the format
+        // knob — so the engine must be built *after* set_format.
+        let engine = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+        let lanes = engine.decode_batch;
+        assert!(lanes >= 2, "fixture decode frame too narrow for preemption");
+
+        // Long-running low-priority residents fill every lane; then a burst
+        // of high-priority arrivals must swap them out and finish first.
+        let low: Vec<Request> = (0..lanes as u64)
+            .map(|i| {
+                let mut r = rq(i, prompt(plen / 2 + i as usize, i as usize, vocab));
+                r.gen_tokens = 10 + i as usize;
+                r.priority = Priority::Low;
                 r
             })
-            .collect()
-    };
+            .collect();
+        let high: Vec<Request> = (0..2u64)
+            .map(|i| {
+                let mut r = rq(100 + i, prompt(plen / 3 + i as usize, 7 + i as usize, vocab));
+                r.gen_tokens = 3;
+                r.priority = Priority::High;
+                r
+            })
+            .collect();
+        let as_normal = |reqs: &[Request]| -> Vec<Request> {
+            reqs.iter()
+                .cloned()
+                .map(|mut r| {
+                    r.priority = Priority::Normal;
+                    r
+                })
+                .collect()
+        };
 
-    // Same submission timeline in both runs: lows, one step (they become
-    // resident), then the high burst, then drain.
-    let run = |lows: Vec<Request>, highs: Vec<Request>| -> (BTreeMap<u64, Vec<i32>>, u64) {
-        let mut sched = Scheduler::new(&engine);
-        let mut out = Vec::new();
-        for r in lows {
-            sched.submit(r);
-        }
-        out.extend(sched.step().unwrap());
-        for r in highs {
-            sched.submit(r);
-        }
-        out.extend(sched.drain().unwrap());
-        assert_eq!(sched.store().live(), 0, "slots leaked");
-        (by_id(&out), sched.preemptions)
-    };
+        // Same submission timeline in both runs: lows, one step (they
+        // become resident), then the high burst, then drain.
+        let run = |lows: Vec<Request>, highs: Vec<Request>| -> (BTreeMap<u64, Vec<i32>>, u64) {
+            let mut sched = Scheduler::new(&engine);
+            let mut out = Vec::new();
+            for r in lows {
+                sched.submit(r);
+            }
+            out.extend(sched.step().unwrap());
+            for r in highs {
+                sched.submit(r);
+            }
+            out.extend(sched.drain().unwrap());
+            assert_eq!(sched.store().live(), 0, "slots leaked");
+            (by_id(&out), sched.preemptions)
+        };
 
-    kernels::set_mode(KernelMode::Scalar);
-    pool::set_workers(1);
-    let (want, base_preempts) = run(as_normal(&low), as_normal(&high));
-    assert_eq!(base_preempts, 0, "all-Normal trace must never preempt");
-    assert_eq!(want.len(), low.len() + high.len());
-
-    for mode in [KernelMode::Scalar, KernelMode::Fused] {
-        for threads in 1..=4usize {
-            kernels::set_mode(mode);
-            pool::set_workers(threads);
-            let (got, preempts) = run(low.clone(), high.clone());
-            assert!(
-                preempts > 0,
-                "{} kernels × {threads} threads: priority burst did not preempt",
-                mode.name()
-            );
+        for mode in [KernelMode::Scalar, KernelMode::Fused, KernelMode::Simd] {
+            set_exec(mode, 1);
+            let (want, base_preempts) = run(as_normal(&low), as_normal(&high));
             assert_eq!(
-                want,
-                got,
-                "{} kernels × {threads} threads: preempt/resume changed generated tokens",
-                mode.name()
+                base_preempts,
+                0,
+                "{} × {}: all-Normal trace must never preempt",
+                mode.name(),
+                fmt.name()
             );
+            assert_eq!(want.len(), low.len() + high.len());
+            for threads in 1..=4usize {
+                set_exec(mode, threads);
+                let (got, preempts) = run(low.clone(), high.clone());
+                assert!(
+                    preempts > 0,
+                    "{} kernels × {threads} threads × {} weights: priority burst did not preempt",
+                    mode.name(),
+                    fmt.name()
+                );
+                assert_eq!(
+                    want,
+                    got,
+                    "{} kernels × {threads} threads × {} weights: preempt/resume changed \
+                     generated tokens",
+                    mode.name(),
+                    fmt.name()
+                );
+            }
         }
     }
-    kernels::set_mode(KernelMode::Fused);
-    pool::set_workers(1);
+    set_format(WeightFormat::F32);
+    set_exec(KernelMode::Fused, 1);
+    cleanup(&dir);
+}
+
+/// Warm-cache resume under the new execution cells: snapshot/restore is a
+/// state copy, so warm-vs-cold bit-identity must hold verbatim under the
+/// simd tier and the int8 weight format (each compared within its own
+/// configuration). A compact sweep — the exhaustive policy matrix above
+/// already covers the cache logic itself under the default config.
+#[test]
+fn warm_cache_resume_holds_under_simd_and_int8() {
+    let _g = lock();
+    let (dir, man) = fixture("warm-cells");
+    let rt = Runtime::reference().unwrap();
+    let plen = man.prefill_seq_len;
+    let model = man.model("ref-mamba2").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let cells = [
+        (KernelMode::Simd, WeightFormat::F32),
+        (KernelMode::Fused, WeightFormat::Int8),
+        (KernelMode::Simd, WeightFormat::Int8),
+    ];
+    for (mode, fmt) in cells {
+        set_format(fmt);
+        set_exec(mode, 2);
+        for variant in ["dense", "unified@0.2"] {
+            let what = format!("{}/{}/{variant}", mode.name(), fmt.name());
+            // Engines built after set_format (upload snapshots the knob).
+            let cold = Engine::new(&rt, &man, &model, &w, variant).unwrap();
+            let mut warm = Engine::new(&rt, &man, &model, &w, variant).unwrap();
+            let cache = Arc::new(PrefixCache::new(1 << 22));
+            warm.attach_prefix_cache(Arc::clone(&cache));
+
+            let mut p = prompt(2 * plen, 31, vocab);
+            p.extend(prompt(plen / 2 + 1, 32, vocab));
+            let (want, _) = cold.prefill(&[rq(0, p.clone())]).unwrap();
+            let (seed, _) = warm.prefill(&[rq(0, p.clone())]).unwrap();
+            assert_seq_eq(&seed[0], &want[0], &format!("{what}: seed pass"));
+            let (got, _) = warm.prefill(&[rq(1, p.clone())]).unwrap();
+            assert_seq_eq(&got[0], &want[0], &format!("{what}: warm resume"));
+            assert_eq!(
+                warm.resumed_tokens.load(Ordering::Relaxed),
+                2 * plen as u64,
+                "{what}: should resume from the 2-frame boundary"
+            );
+            assert!(cache.stats().hits >= 1, "{what}: warm pass must hit the cache");
+        }
+    }
+    set_format(WeightFormat::F32);
+    set_exec(KernelMode::Fused, 1);
     cleanup(&dir);
 }
 
@@ -280,6 +369,9 @@ fn preempt_then_resume_is_token_identical_across_modes_and_threads() {
 /// matches its cold baseline bit for bit, and evictions really happened.
 #[test]
 fn tight_budget_eviction_never_serves_stale_or_truncated_snapshots() {
+    let _g = lock();
+    set_exec(KernelMode::Fused, 1);
+    set_format(WeightFormat::F32);
     let (dir, man) = fixture("evict");
     let rt = Runtime::reference().unwrap();
     let plen = man.prefill_seq_len;
@@ -328,6 +420,9 @@ fn tight_budget_eviction_never_serves_stale_or_truncated_snapshots() {
 /// while resuming most prompt tokens from snapshots.
 #[test]
 fn scheduler_serve_with_warm_cache_matches_uncached_serve() {
+    let _g = lock();
+    set_exec(KernelMode::Fused, 1);
+    set_format(WeightFormat::F32);
     let (dir, man) = fixture("serve");
     let rt = Runtime::reference().unwrap();
     let plen = man.prefill_seq_len;
