@@ -1,0 +1,259 @@
+//! HTTP serving load generator (DESIGN.md §14): replays the shared
+//! synthetic trace over real loopback sockets against `coordinator/http`
+//! under open-loop arrival (send times are scheduled up front; a slow
+//! server cannot slow the arrival process), then fires a saturation burst
+//! against the bounded admission queue to measure rejection behaviour.
+//!
+//! Emits `BENCH_serve.json`: tokens/s, TTFT p50/p99, e2e p50/p99,
+//! rejected-request counts, and the bit-identity violation count vs an
+//! in-process [`Scheduler`] run of the identical (prompt, variant) pairs
+//! (greedy argmax decoding makes per-request tokens independent of
+//! batching, so any nonzero count is a serving-stack bug — the bench
+//! itself asserts zero).
+//!
+//! Env knobs: `REPRO_BENCH_REQS` (steady-phase requests, default 24),
+//! `REPRO_BENCH_GEN` (max generation length, uniform 1..=N, default 10),
+//! `REPRO_BENCH_SAT` (saturation-burst clients, default 12),
+//! `REPRO_BENCH_ARRIVAL_US` (open-loop inter-arrival gap, default 3000),
+//! `REPRO_BENCH_OUT` (output path, default `BENCH_serve.json`).
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::http::{self, client, HttpConfig};
+use tor_ssm::coordinator::metrics::Metrics;
+use tor_ssm::coordinator::router::Policy;
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::Request;
+use tor_ssm::fixtures;
+use tor_ssm::runtime::Runtime;
+use tor_ssm::train::load_best_weights;
+use tor_ssm::util::json::{num, obj, s, Json};
+use tor_ssm::util::rng::Rng;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn body_for(req: &Request, stream: bool) -> String {
+    format!(
+        "{{\"prompt\":{:?},\"variant\":\"{}\",\"max_tokens\":{},\"stream\":{stream}}}",
+        req.prompt, req.variant, req.gen_tokens
+    )
+}
+
+struct ClientResult {
+    id: u64,
+    status: u16,
+    tokens: Vec<i32>,
+    ttft_us: u64,
+    e2e_us: u64,
+}
+
+fn main() {
+    let n_requests = env_usize("REPRO_BENCH_REQS", 24);
+    let max_gen = env_usize("REPRO_BENCH_GEN", 10).max(1);
+    let sat_clients = env_usize("REPRO_BENCH_SAT", 12);
+    let arrival_us = env_usize("REPRO_BENCH_ARRIVAL_US", 3000) as u64;
+    const QUEUE_CAP: usize = 4;
+
+    let (man, _) = match fixtures::manifest_or_fixture(&tor_ssm::artifacts_dir()) {
+        Ok(v) => v,
+        Err(e) => {
+            println!("SKIP serve bench: {e:#}");
+            return;
+        }
+    };
+    let rt = Runtime::reference().expect("reference backend");
+    let model_name = man.models.keys().next().expect("models").clone();
+    let model = man.model(&model_name).expect("model").clone();
+    let (w, _) = load_best_weights(&man, &model).expect("weights");
+    let lanes = ["dense", "unified@0.2"];
+    let engines: Vec<Engine> = lanes
+        .iter()
+        .map(|v| Engine::new(&rt, &man, &model, &w, v).expect("engine"))
+        .collect();
+    let lane_names: Vec<String> = lanes.iter().map(|s| s.to_string()).collect();
+
+    // The shared synthetic trace (length-diverse, incl. chunked-prefill
+    // prompts on length-aware lanes), every request pinned to a lane so
+    // the in-process ground truth is routing-independent.
+    let mut rng = Rng::new(23);
+    let mut trace: Vec<Request> = fixtures::synth_requests(
+        &mut rng,
+        n_requests,
+        max_gen,
+        man.prefill_seq_len,
+        fixtures::trace_max_prompt(&engines),
+        model.vocab_size,
+        &[],
+    );
+    for (i, r) in trace.iter_mut().enumerate() {
+        r.variant = lanes[i % lanes.len()].to_string();
+    }
+
+    // In-process ground truth per lane: same (prompt, variant, gen_tokens)
+    // through a fresh Scheduler — greedy argmax makes this the bit-exact
+    // reference for what the socket must deliver.
+    let mut expected: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+    for lane in &lanes {
+        let engine = Engine::new(&rt, &man, &model, &w, lane).expect("engine");
+        let mut sched = Scheduler::new(&engine);
+        let reqs: Vec<Request> =
+            trace.iter().filter(|r| r.variant == *lane).cloned().collect();
+        if reqs.is_empty() {
+            continue;
+        }
+        for resp in sched.run(reqs).expect("in-process reference run") {
+            expected.insert(resp.id, resp.generated);
+        }
+    }
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let shutdown = AtomicBool::new(false);
+    let cfg = HttpConfig { queue_cap: QUEUE_CAP, ..HttpConfig::default() };
+    // Declared outside the scope: scoped spawns may only borrow data that
+    // outlives the scope itself.
+    let sat_barrier = std::sync::Barrier::new(sat_clients);
+
+    let (results, sat_429, sat_total, report) = std::thread::scope(|scope| {
+        let engines = &engines;
+        let lane_names = &lane_names;
+        let shutdown = &shutdown;
+        let server = scope.spawn(move || {
+            http::serve(engines, lane_names, Policy::Explicit, listener, cfg, shutdown)
+        });
+
+        // ---- steady phase: open-loop arrival, streamed ------------------
+        let t0 = Instant::now();
+        let handles: Vec<_> = trace
+            .iter()
+            .enumerate()
+            .map(|(i, req)| {
+                let body = body_for(req, true);
+                let id = req.id;
+                let start_at = Duration::from_micros(i as u64 * arrival_us);
+                scope.spawn(move || {
+                    let elapsed = t0.elapsed();
+                    if elapsed < start_at {
+                        std::thread::sleep(start_at - elapsed);
+                    }
+                    match client::post_json_timed(addr, "/v1/generate", &body) {
+                        Ok(t) => {
+                            let tokens = if t.resp.status == 200 {
+                                client::sse_tokens(&t.resp.body).expect("SSE framing").0
+                            } else {
+                                Vec::new()
+                            };
+                            ClientResult {
+                                id,
+                                status: t.resp.status,
+                                tokens,
+                                ttft_us: t.ttft_us,
+                                e2e_us: t.e2e_us,
+                            }
+                        }
+                        Err(e) => panic!("steady request {id}: {e}"),
+                    }
+                })
+            })
+            .collect();
+        let results: Vec<ClientResult> =
+            handles.into_iter().map(|h| h.join().expect("client thread")).collect();
+
+        // ---- saturation burst: barrier-fired against queue_cap ----------
+        let sat_handles: Vec<_> = (0..sat_clients)
+            .map(|i| {
+                let barrier = &sat_barrier;
+                let prompt: Vec<i32> =
+                    (0..man.prefill_seq_len / 2).map(|t| ((t * 5 + i) % model.vocab_size) as i32).collect();
+                let body = format!(
+                    "{{\"prompt\":{prompt:?},\"variant\":\"dense\",\"max_tokens\":6,\"stream\":true}}"
+                );
+                scope.spawn(move || {
+                    barrier.wait();
+                    client::post_json(addr, "/v1/generate", &body).expect("saturation request").status
+                })
+            })
+            .collect();
+        let sat_statuses: Vec<u16> =
+            sat_handles.into_iter().map(|h| h.join().expect("sat client")).collect();
+        let sat_429 = sat_statuses.iter().filter(|&&st| st == 429).count();
+        let sat_ok = sat_statuses.iter().filter(|&&st| st == 200).count();
+        assert_eq!(sat_429 + sat_ok, sat_clients, "unexpected saturation statuses: {sat_statuses:?}");
+
+        shutdown.store(true, Ordering::SeqCst);
+        let report = server.join().expect("server thread").expect("serve failed");
+        (results, sat_429, sat_clients, report)
+    });
+
+    // ---- bit-identity vs the in-process scheduler -----------------------
+    let served: Vec<&ClientResult> = results.iter().filter(|r| r.status == 200).collect();
+    let steady_429 = results.iter().filter(|r| r.status == 429).count();
+    let mut violations = 0usize;
+    for r in &served {
+        if expected.get(&r.id) != Some(&r.tokens) {
+            violations += 1;
+            eprintln!("BIT-IDENTITY VIOLATION: request {} served {:?}, expected {:?}",
+                r.id, r.tokens, expected.get(&r.id));
+        }
+    }
+    assert_eq!(violations, 0, "socket serving diverged from the in-process scheduler");
+    assert!(!served.is_empty(), "no streamed request succeeded");
+    assert!(sat_429 >= 1, "saturation burst produced no 429 (cap={QUEUE_CAP}, clients={sat_total})");
+
+    let ttft: Vec<u64> = served.iter().map(|r| r.ttft_us).collect();
+    let e2e: Vec<u64> = served.iter().map(|r| r.e2e_us).collect();
+    println!(
+        "serve/http: {} streamed over loopback ({} steady 429, {} saturation 429/{}), \
+         TTFT p50={}us p99={}us, e2e p50={}us p99={}us, {} gen tok/s, 0 bit-identity violations",
+        served.len(),
+        steady_429,
+        sat_429,
+        sat_total,
+        Metrics::pct(&ttft, 0.5),
+        Metrics::pct(&ttft, 0.99),
+        Metrics::pct(&e2e, 0.5),
+        Metrics::pct(&e2e, 0.99),
+        report.metrics.throughput_tok_s().round(),
+    );
+
+    let doc = obj(vec![
+        ("bench", s("serve_http")),
+        ("model", s(&model_name)),
+        ("lanes", Json::Arr(lanes.iter().map(|l| s(l)).collect())),
+        ("requests", num(n_requests as f64)),
+        ("max_gen_tokens", num(max_gen as f64)),
+        ("queue_cap", num(QUEUE_CAP as f64)),
+        ("arrival_us", num(arrival_us as f64)),
+        ("streamed", num(served.len() as f64)),
+        ("steady_rejected_429", num(steady_429 as f64)),
+        ("saturation_clients", num(sat_total as f64)),
+        ("saturation_rejected_429", num(sat_429 as f64)),
+        ("rejected_429_total", num(report.rejected_429 as f64)),
+        ("rejected_503_total", num(report.rejected_503 as f64)),
+        ("bit_identity_violations", num(violations as f64)),
+        ("gen_tok_s", num(report.metrics.throughput_tok_s())),
+        (
+            "ttft_us",
+            obj(vec![
+                ("p50", num(Metrics::pct(&ttft, 0.5) as f64)),
+                ("p99", num(Metrics::pct(&ttft, 0.99) as f64)),
+            ]),
+        ),
+        (
+            "e2e_us",
+            obj(vec![
+                ("p50", num(Metrics::pct(&e2e, 0.5) as f64)),
+                ("p99", num(Metrics::pct(&e2e, 0.99) as f64)),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("REPRO_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    std::fs::write(&out, doc.to_string()).expect("writing BENCH_serve.json");
+    println!("wrote {out}");
+}

@@ -1,0 +1,1198 @@
+//! Zero-dependency HTTP/1.1 serving front-end (DESIGN.md §14).
+//!
+//! `repro serve --listen <addr>` puts the continuous-batching
+//! [`Scheduler`] behind a real socket: pure `std::net`, one short-lived
+//! connection per request (`Connection: close`), JSON request/response via
+//! [`util::json`](crate::util::json) with [`LazyDoc`] lazy field
+//! extraction on the hot path, and per-token streaming over chunked
+//! transfer encoding with one SSE-style `data:` line per token.
+//!
+//! Architecture (all threads scoped — [`serve`] returns only after every
+//! one of them has exited):
+//!
+//! * the **caller's thread** runs the scheduler loop: drains the admission
+//!   queue into per-lane [`Scheduler`]s (installing a [`TokenSink`] per
+//!   request that forwards tokens over an mpsc channel), steps every
+//!   non-idle scheduler, and publishes completions/failures back to the
+//!   waiting connection handlers;
+//! * an **acceptor thread** polls the (nonblocking) listener and spawns
+//!   one handler thread per connection;
+//! * **handler threads** parse + validate one request each, admit it
+//!   through the bounded admission queue, then relay events from the
+//!   scheduler loop onto the socket (streamed or buffered).
+//!
+//! Backpressure is a hard bound: admission is guarded by an atomic
+//! `pending` count vs [`HttpConfig::queue_cap`] — when full the handler
+//! answers `429 Too Many Requests` + `Retry-After` *before* buffering
+//! anything, so memory is bounded by admitted work only. Graceful drain
+//! (SIGTERM/SIGINT via the caller's shutdown flag) is a two-flag state
+//! machine: `draining` stops admission (new work → `503` +
+//! `Retry-After`) while every already-admitted sequence runs to
+//! completion — its full token stream is delivered before its socket
+//! closes — then `drained` releases the acceptor and [`serve`] returns.
+//!
+//! Error mapping (the typed [`RouteError`] from PR 3 carries the
+//! malformed-vs-unserved distinction): malformed JSON / bad fields /
+//! empty prompt (PR 5 contract) / malformed variant → `400`; well-formed
+//! variant no lane serves → `404`; missing `Content-Length` → `411`;
+//! oversized header block → `431`; oversized body → `413`; read timeout
+//! (slowloris) → `408`; queue full → `429`; draining → `503`.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::json::{num, obj, s, Json, LazyDoc};
+
+use super::engine::Engine;
+use super::metrics::Metrics;
+use super::router::{Policy, RouteError, Router};
+use super::scheduler::{Scheduler, TokenSink};
+use super::{Priority, Request, Response};
+
+/// Serving knobs. Defaults are sized for loopback testing and small
+/// deployments; every limit exists to keep untrusted input bounded.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Admission bound: requests admitted but not yet completed. Beyond
+    /// it, new work gets `429` + `Retry-After` (never unbounded buffering).
+    pub queue_cap: usize,
+    /// Socket read timeout — a slowloris client dribbling its request
+    /// gets `408` when the next read stalls this long.
+    pub read_timeout: Duration,
+    /// Handler-side bound on waiting for the scheduler to finish an
+    /// admitted request (a liveness backstop, not a latency target).
+    pub completion_timeout: Duration,
+    /// Maximum request-head (request line + headers) bytes → `431`.
+    pub max_header_bytes: usize,
+    /// Maximum request-body bytes → `413`.
+    pub max_body_bytes: usize,
+    /// `max_tokens` must be in `1..=max_gen_tokens`.
+    pub max_gen_tokens: usize,
+    /// Prompt-length cap on length-aware lanes (chunked prefill makes any
+    /// length *possible*; this keeps one request from monopolising the
+    /// server). Non-length-aware lanes are additionally capped at their
+    /// prefill frame, per the engine's no-truncation contract.
+    pub max_prompt_tokens: usize,
+    /// Value of the `Retry-After` header on 429/503 responses, seconds.
+    pub retry_after_s: u64,
+    /// `max_tokens` when the request omits it.
+    pub default_gen_tokens: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            queue_cap: 64,
+            read_timeout: Duration::from_secs(2),
+            completion_timeout: Duration::from_secs(120),
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 1 << 20,
+            max_gen_tokens: 256,
+            max_prompt_tokens: 1 << 16,
+            retry_after_s: 1,
+            default_gen_tokens: 16,
+        }
+    }
+}
+
+/// What [`serve`] hands back after a graceful drain — the socket-side
+/// mirror of the in-process serve loops' reporting.
+#[derive(Debug, Default)]
+pub struct ServeReport {
+    /// Completed-generation latency/throughput record (same [`Metrics`]
+    /// the in-process paths fill).
+    pub metrics: Metrics,
+    /// Requests rejected for a full admission queue.
+    pub rejected_429: u64,
+    /// Requests rejected because the server was draining.
+    pub rejected_503: u64,
+}
+
+/// Per-lane validation facts the handlers need without touching engines.
+struct LaneInfo {
+    name: String,
+    vocab: usize,
+    length_aware: bool,
+    prefill_len: usize,
+}
+
+/// One admitted request, queued for the scheduler loop.
+struct Admitted {
+    req: Request,
+    lane: usize,
+    events: Sender<Event>,
+    stream: bool,
+}
+
+/// Scheduler-loop → handler messages for one request. Every `Token` for a
+/// request is sent before its `Done` (the final token fires inside the
+/// same `step` that returns the response).
+enum Event {
+    Token(i32),
+    Done(Response),
+    Fail(String),
+}
+
+/// Cross-thread state shared by handlers, acceptor, and scheduler loop.
+struct Shared {
+    router: Mutex<Router>,
+    lanes: Vec<LaneInfo>,
+    admission: Mutex<VecDeque<Admitted>>,
+    /// Admitted-but-not-completed count, CAS-guarded against `queue_cap`.
+    pending: AtomicUsize,
+    /// Stop admitting; already-admitted work still runs to completion.
+    draining: AtomicBool,
+    /// Scheduler loop has exited (admission queue finally empty);
+    /// acceptor may return.
+    drained: AtomicBool,
+    next_id: AtomicU64,
+    rejected_429: AtomicU64,
+    rejected_503: AtomicU64,
+    /// Pre-rendered `GET /stats` body, refreshed by the scheduler loop.
+    stats: Mutex<String>,
+}
+
+/// Serve HTTP until `shutdown` goes true, then drain gracefully and
+/// return the run's [`ServeReport`]. Blocks the calling thread (it *is*
+/// the scheduler loop); `lanes[i]` names `engines[i]`'s variant. The
+/// listener may be bound to port 0 — read `local_addr` before calling.
+pub fn serve(
+    engines: &[Engine],
+    lanes: &[String],
+    policy: Policy,
+    listener: TcpListener,
+    cfg: HttpConfig,
+    shutdown: &AtomicBool,
+) -> Result<ServeReport> {
+    anyhow::ensure!(!engines.is_empty() && engines.len() == lanes.len(), "one engine per lane");
+    let lane_refs: Vec<&str> = lanes.iter().map(|s| s.as_str()).collect();
+    let shared = Shared {
+        router: Mutex::new(Router::new(policy, &lane_refs)),
+        lanes: engines
+            .iter()
+            .zip(lanes)
+            .map(|(e, name)| LaneInfo {
+                name: name.clone(),
+                vocab: e.vocab(),
+                length_aware: e.length_aware,
+                prefill_len: e.prefill_len,
+            })
+            .collect(),
+        admission: Mutex::new(VecDeque::new()),
+        pending: AtomicUsize::new(0),
+        draining: AtomicBool::new(false),
+        drained: AtomicBool::new(false),
+        next_id: AtomicU64::new(1),
+        rejected_429: AtomicU64::new(0),
+        rejected_503: AtomicU64::new(0),
+        stats: Mutex::new("{}".to_string()),
+    };
+    listener.set_nonblocking(true)?;
+
+    std::thread::scope(|scope| {
+        let shared = &shared;
+        let cfg = &cfg;
+        scope.spawn(move || acceptor(scope, listener, shared, cfg));
+        scheduler_loop(engines, shared, cfg, shutdown)
+    })
+}
+
+/// Poll the nonblocking listener, one handler thread per connection; exit
+/// once the scheduler loop has fully drained.
+fn acceptor<'scope>(
+    scope: &'scope std::thread::Scope<'scope, '_>,
+    listener: TcpListener,
+    shared: &'scope Shared,
+    cfg: &'scope HttpConfig,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                scope.spawn(move || handle_connection(stream, shared, cfg));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if shared.drained.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => {
+                // Transient accept error: if we're done, leave; otherwise
+                // keep the listener alive (one bad connection must not
+                // kill the server).
+                if shared.drained.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+/// The serve loop proper: admission queue → schedulers → event channels.
+fn scheduler_loop(
+    engines: &[Engine],
+    shared: &Shared,
+    _cfg: &HttpConfig,
+    shutdown: &AtomicBool,
+) -> Result<ServeReport> {
+    let mut scheds: Vec<Scheduler> = engines.iter().map(Scheduler::new).collect();
+    let mut inflight: Vec<HashMap<u64, Sender<Event>>> =
+        engines.iter().map(|_| HashMap::new()).collect();
+    let mut metrics = Metrics::default();
+    let t0 = Instant::now();
+    let mut ticks = 0u64;
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            shared.draining.store(true, Ordering::Release);
+        }
+        // Admissions → schedulers, with a per-request token sink feeding
+        // the handler's event channel.
+        let newly: Vec<Admitted> = {
+            let mut q = shared.admission.lock().expect("admission lock");
+            q.drain(..).collect()
+        };
+        for adm in newly {
+            let tx = adm.events.clone();
+            inflight[adm.lane].insert(adm.req.id, adm.events);
+            let sink: TokenSink = if adm.stream {
+                Box::new(move |t| {
+                    let _ = tx.send(Event::Token(t));
+                })
+            } else {
+                // Non-streamed responses read tokens off the Response;
+                // skip the per-token channel traffic.
+                Box::new(|_| {})
+            };
+            scheds[adm.lane].submit_with_sink(adm.req, sink);
+        }
+        // One step per non-idle lane. Indexed (not iter_mut) so the error
+        // arm can replace the failed scheduler in place.
+        let mut any_active = false;
+        for li in 0..scheds.len() {
+            if scheds[li].is_idle() {
+                continue;
+            }
+            any_active = true;
+            match scheds[li].step() {
+                Ok(resps) => {
+                    for r in resps {
+                        metrics.record_response(&r);
+                        shared.router.lock().expect("router lock").note_done(&shared.lanes[li].name);
+                        shared.pending.fetch_sub(1, Ordering::AcqRel);
+                        if let Some(tx) = inflight[li].remove(&r.id) {
+                            let _ = tx.send(Event::Done(r));
+                        }
+                    }
+                }
+                Err(e) => {
+                    // A failing backend fails this lane's in-flight work
+                    // loudly (500s), then the lane restarts clean — the
+                    // listener keeps serving.
+                    let msg = format!("lane {:?}: {e:#}", shared.lanes[li].name);
+                    for (_, tx) in inflight[li].drain() {
+                        let _ = tx.send(Event::Fail(msg.clone()));
+                        shared.router.lock().expect("router lock").note_done(&shared.lanes[li].name);
+                        shared.pending.fetch_sub(1, Ordering::AcqRel);
+                    }
+                    scheds[li] = Scheduler::new(&engines[li]);
+                }
+            }
+        }
+        ticks += 1;
+        if ticks % 8 == 1 || !any_active {
+            let rendered = render_stats(shared, &metrics, &scheds, engines, t0);
+            *shared.stats.lock().expect("stats lock") = rendered;
+        }
+        if shared.draining.load(Ordering::Acquire)
+            && scheds.iter().all(|s| s.is_idle())
+            && shared.admission.lock().expect("admission lock").is_empty()
+        {
+            break;
+        }
+        if !any_active {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    // Final sweep: `draining` was published before this point, so any
+    // admission that still slips in past its handler's own recheck is
+    // failed here as a drain rejection rather than left waiting.
+    for adm in shared.admission.lock().expect("admission lock").drain(..) {
+        let _ = adm.events.send(Event::Fail("server draining".to_string()));
+        shared.router.lock().expect("router lock").note_done(&shared.lanes[adm.lane].name);
+        shared.pending.fetch_sub(1, Ordering::AcqRel);
+    }
+    metrics.wall = t0.elapsed();
+    *shared.stats.lock().expect("stats lock") = render_stats(shared, &metrics, &scheds, engines, t0);
+    shared.drained.store(true, Ordering::Release);
+    Ok(ServeReport {
+        metrics,
+        rejected_429: shared.rejected_429.load(Ordering::Relaxed),
+        rejected_503: shared.rejected_503.load(Ordering::Relaxed),
+    })
+}
+
+/// Render the `GET /stats` document: serving counters + per-lane
+/// scheduler/cache state (CacheStats and [`Metrics`] as JSON).
+fn render_stats(
+    shared: &Shared,
+    metrics: &Metrics,
+    scheds: &[Scheduler],
+    engines: &[Engine],
+    t0: Instant,
+) -> String {
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let lanes: Vec<Json> = shared
+        .lanes
+        .iter()
+        .zip(scheds)
+        .zip(engines)
+        .map(|((info, sc), e)| {
+            let cs = e.prefix_cache().map(|c| c.stats()).unwrap_or_default();
+            obj(vec![
+                ("name", s(&info.name)),
+                ("in_flight", num(sc.in_flight() as f64)),
+                ("prefills", num(sc.prefill_calls as f64)),
+                ("decode_steps", num(sc.decode_steps as f64)),
+                ("preemptions", num(sc.preemptions as f64)),
+                (
+                    "cache",
+                    obj(vec![
+                        ("hits", num(cs.hits as f64)),
+                        ("misses", num(cs.misses as f64)),
+                        ("inserts", num(cs.inserts as f64)),
+                        ("evictions", num(cs.evictions as f64)),
+                        ("used_bytes", num(cs.used_bytes as f64)),
+                        ("entries", num(cs.entries as f64)),
+                        ("hit_rate", num(cs.hit_rate())),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("completed", num(metrics.completed as f64)),
+        ("pending", num(shared.pending.load(Ordering::Relaxed) as f64)),
+        ("rejected_429", num(shared.rejected_429.load(Ordering::Relaxed) as f64)),
+        ("rejected_503", num(shared.rejected_503.load(Ordering::Relaxed) as f64)),
+        ("draining", Json::Bool(shared.draining.load(Ordering::Relaxed))),
+        ("generated_tokens", num(metrics.generated_tokens as f64)),
+        ("gen_tok_s", num(metrics.generated_tokens as f64 / elapsed)),
+        ("p50_e2e_us", num(Metrics::pct(&metrics.e2e_us, 0.5) as f64)),
+        ("p99_e2e_us", num(Metrics::pct(&metrics.e2e_us, 0.99) as f64)),
+        ("lanes", Json::Arr(lanes)),
+    ])
+    .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+/// Request-head read outcome short of a parsed request.
+enum ReadErr {
+    Timeout,
+    TooLarge,
+    Truncated,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read until the head terminator; returns (head, leftover-body-bytes).
+fn read_head(stream: &mut TcpStream, max: usize) -> std::result::Result<(Vec<u8>, Vec<u8>), ReadErr> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 512];
+    loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            let body = buf.split_off(pos + 4);
+            buf.truncate(pos);
+            return Ok((buf, body));
+        }
+        if buf.len() > max {
+            return Err(ReadErr::TooLarge);
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(ReadErr::Truncated),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if is_timeout(&e) => return Err(ReadErr::Timeout),
+            Err(_) => return Err(ReadErr::Truncated),
+        }
+    }
+}
+
+fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+struct Head {
+    method: String,
+    path: String,
+    headers: Vec<(String, String)>,
+}
+
+impl Head {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn parse_head(raw: &[u8]) -> Option<Head> {
+    let text = std::str::from_utf8(raw).ok()?;
+    let mut lines = text.split("\r\n");
+    let mut req_line = lines.next()?.split(' ');
+    let method = req_line.next()?.to_string();
+    let path = req_line.next()?.to_string();
+    let version = req_line.next()?;
+    if !version.starts_with("HTTP/1.") || req_line.next().is_some() {
+        return None;
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once(':')?;
+        headers.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    Some(Head { method, path, headers })
+}
+
+const REASONS: &[(u16, &str)] = &[
+    (200, "OK"),
+    (400, "Bad Request"),
+    (404, "Not Found"),
+    (405, "Method Not Allowed"),
+    (408, "Request Timeout"),
+    (411, "Length Required"),
+    (413, "Content Too Large"),
+    (429, "Too Many Requests"),
+    (431, "Request Header Fields Too Large"),
+    (500, "Internal Server Error"),
+    (503, "Service Unavailable"),
+];
+
+fn reason(status: u16) -> &'static str {
+    REASONS.iter().find(|(c, _)| *c == status).map(|(_, r)| *r).unwrap_or("Unknown")
+}
+
+/// Write one non-streamed response (JSON body, `Connection: close`).
+/// Write errors are swallowed — the client may already be gone, and the
+/// connection is single-use either way.
+fn respond(stream: &mut TcpStream, status: u16, extra_headers: &[(&str, String)], body: &str) {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        reason(status),
+        body.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) {
+    respond(stream, status, &[], &obj(vec![("error", s(msg))]).to_string());
+}
+
+fn respond_retry(stream: &mut TcpStream, status: u16, msg: &str, retry_after_s: u64) {
+    respond(
+        stream,
+        status,
+        &[("Retry-After", retry_after_s.to_string())],
+        &obj(vec![("error", s(msg))]).to_string(),
+    );
+}
+
+/// Write one chunked-transfer chunk: `SIZEHEX\r\n<payload>\r\n`.
+fn write_chunk(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n", payload.len())?;
+    stream.write_all(payload)?;
+    stream.write_all(b"\r\n")
+}
+
+/// The completion document shared by the non-streamed response body and
+/// the stream's final `data:` event (so the two paths can never drift).
+fn response_json(r: &Response) -> Json {
+    obj(vec![
+        ("id", num(r.id as f64)),
+        ("variant", s(&r.variant)),
+        ("tokens", Json::Arr(r.generated.iter().map(|&t| num(t as f64)).collect())),
+        (
+            "usage",
+            obj(vec![
+                ("prompt_tokens", num(r.prompt_tokens as f64)),
+                ("generated_tokens", num(r.generated.len() as f64)),
+            ]),
+        ),
+        (
+            "timing_us",
+            obj(vec![
+                ("queue", num(r.queue_us as f64)),
+                ("prefill", num(r.prefill_us as f64)),
+                ("decode", num(r.decode_us as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn handle_connection(mut stream: TcpStream, shared: &Shared, cfg: &HttpConfig) {
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let (head_raw, leftover) = match read_head(&mut stream, cfg.max_header_bytes) {
+        Ok(x) => x,
+        Err(ReadErr::Timeout) => return respond_error(&mut stream, 408, "request head read timed out"),
+        Err(ReadErr::TooLarge) => return respond_error(&mut stream, 431, "request head too large"),
+        Err(ReadErr::Truncated) => return respond_error(&mut stream, 400, "truncated request head"),
+    };
+    let Some(head) = parse_head(&head_raw) else {
+        return respond_error(&mut stream, 400, "malformed request head");
+    };
+    match (head.method.as_str(), head.path.as_str()) {
+        ("GET", "/healthz") => {
+            let draining = shared.draining.load(Ordering::Relaxed);
+            let body = obj(vec![
+                ("status", s(if draining { "draining" } else { "ok" })),
+                (
+                    "lanes",
+                    Json::Arr(shared.lanes.iter().map(|l| s(&l.name)).collect()),
+                ),
+            ]);
+            respond(&mut stream, 200, &[], &body.to_string());
+        }
+        ("GET", "/stats") => {
+            let body = shared.stats.lock().expect("stats lock").clone();
+            respond(&mut stream, 200, &[], &body);
+        }
+        ("POST", "/v1/generate") => handle_generate(&mut stream, &head, leftover, shared, cfg),
+        ("GET", _) => respond_error(&mut stream, 404, "unknown path"),
+        ("POST", _) => respond_error(&mut stream, 404, "unknown path"),
+        _ => respond_error(&mut stream, 405, "method not allowed"),
+    }
+}
+
+/// Read the request body per `Content-Length`, starting from whatever
+/// arrived with the head.
+fn read_body(
+    stream: &mut TcpStream,
+    head: &Head,
+    mut body: Vec<u8>,
+    cfg: &HttpConfig,
+) -> std::result::Result<Vec<u8>, (u16, String)> {
+    let Some(cl) = head.header("content-length") else {
+        return Err((411, "Content-Length required".to_string()));
+    };
+    let n: usize = match cl.parse() {
+        Ok(n) => n,
+        Err(_) => return Err((400, format!("bad Content-Length {cl:?}"))),
+    };
+    if n > cfg.max_body_bytes {
+        return Err((413, format!("body of {n} bytes exceeds cap {}", cfg.max_body_bytes)));
+    }
+    body.truncate(n.min(body.len()));
+    let mut chunk = [0u8; 4096];
+    while body.len() < n {
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err((400, "truncated body".to_string())),
+            Ok(k) => {
+                let want = n - body.len();
+                body.extend_from_slice(&chunk[..k.min(want)]);
+            }
+            Err(e) if is_timeout(&e) => return Err((408, "body read timed out".to_string())),
+            Err(e) => return Err((400, format!("body read failed: {e}"))),
+        }
+    }
+    Ok(body)
+}
+
+/// Parsed + validated `/v1/generate` request fields.
+struct GenRequest {
+    prompt: Vec<i32>,
+    variant: String,
+    gen_tokens: usize,
+    stream: bool,
+    priority: Priority,
+}
+
+/// Lazy-extract and validate the request document (DESIGN.md §14 schema).
+fn parse_generate(body: &str, cfg: &HttpConfig) -> std::result::Result<GenRequest, String> {
+    let doc = LazyDoc::new(body);
+    doc.validate().map_err(|e| format!("malformed JSON: {e}"))?;
+    let err = |e: crate::util::json::JsonError| format!("bad field: {e}");
+    let prompt = doc
+        .i32_array_field("prompt")
+        .map_err(err)?
+        .ok_or_else(|| "missing field \"prompt\" (array of token ids)".to_string())?;
+    if prompt.is_empty() {
+        return Err("empty prompt (prompts must contain at least one token)".to_string());
+    }
+    let variant = doc.str_field("variant").map_err(err)?.unwrap_or_default();
+    let gen_tokens = doc.usize_field("max_tokens").map_err(err)?.unwrap_or(cfg.default_gen_tokens);
+    if gen_tokens == 0 || gen_tokens > cfg.max_gen_tokens {
+        return Err(format!("max_tokens must be in 1..={}", cfg.max_gen_tokens));
+    }
+    let stream = doc.bool_field("stream").map_err(err)?.unwrap_or(false);
+    let priority = match doc.str_field("priority").map_err(err)?.as_deref() {
+        None | Some("normal") => Priority::Normal,
+        Some("low") => Priority::Low,
+        Some("high") => Priority::High,
+        Some(p) => return Err(format!("unknown priority {p:?} (low|normal|high)")),
+    };
+    Ok(GenRequest { prompt, variant, gen_tokens, stream, priority })
+}
+
+fn handle_generate(
+    stream: &mut TcpStream,
+    head: &Head,
+    leftover: Vec<u8>,
+    shared: &Shared,
+    cfg: &HttpConfig,
+) {
+    let body = match read_body(stream, head, leftover, cfg) {
+        Ok(b) => b,
+        Err((status, msg)) => return respond_error(stream, status, &msg),
+    };
+    let Ok(text) = std::str::from_utf8(&body) else {
+        return respond_error(stream, 400, "body is not valid UTF-8");
+    };
+    let gen = match parse_generate(text, cfg) {
+        Ok(g) => g,
+        Err(msg) => return respond_error(stream, 400, &msg),
+    };
+    let req = Request {
+        id: shared.next_id.fetch_add(1, Ordering::Relaxed),
+        prompt: gen.prompt,
+        gen_tokens: gen.gen_tokens,
+        variant: gen.variant,
+        arrived_us: 0,
+        priority: gen.priority,
+    };
+    // Route first (cheap, needs no admission slot); the typed error keeps
+    // client mistakes (400) apart from deployment gaps (404).
+    let lane_name = match shared.router.lock().expect("router lock").route_checked(&req) {
+        Ok(l) => l,
+        Err(e @ (RouteError::Malformed { .. } | RouteError::NeedsVariant)) => {
+            return respond_error(stream, 400, &e.to_string());
+        }
+        Err(e @ RouteError::Unserved { .. }) => {
+            return respond_error(stream, 404, &e.to_string());
+        }
+    };
+    let lane = shared.lanes.iter().position(|l| l.name == lane_name).expect("router lane");
+    let info = &shared.lanes[lane];
+    // The backends index embeddings by token id unchecked — the socket is
+    // where range validation must happen.
+    if req.prompt.iter().any(|&t| t < 0 || t as usize >= info.vocab) {
+        return respond_error(
+            stream,
+            400,
+            &format!("prompt token out of range (vocab is {})", info.vocab),
+        );
+    }
+    if req.prompt.len() > cfg.max_prompt_tokens {
+        return respond_error(
+            stream,
+            400,
+            &format!("prompt of {} tokens exceeds cap {}", req.prompt.len(), cfg.max_prompt_tokens),
+        );
+    }
+    if !info.length_aware && req.prompt.len() > info.prefill_len {
+        return respond_error(
+            stream,
+            400,
+            &format!(
+                "prompt of {} tokens exceeds lane {:?}'s prefill frame of {} and the lane \
+                 cannot chunk",
+                req.prompt.len(),
+                info.name,
+                info.prefill_len
+            ),
+        );
+    }
+
+    // ---- bounded admission (the backpressure point) ---------------------
+    if shared.draining.load(Ordering::Acquire) {
+        shared.rejected_503.fetch_add(1, Ordering::Relaxed);
+        return respond_retry(stream, 503, "server draining", cfg.retry_after_s);
+    }
+    let mut cur = shared.pending.load(Ordering::Acquire);
+    loop {
+        if cur >= cfg.queue_cap {
+            shared.rejected_429.fetch_add(1, Ordering::Relaxed);
+            return respond_retry(stream, 429, "admission queue full", cfg.retry_after_s);
+        }
+        match shared.pending.compare_exchange_weak(
+            cur,
+            cur + 1,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => break,
+            Err(now) => cur = now,
+        }
+    }
+    let id = req.id;
+    let (tx, rx) = std::sync::mpsc::channel::<Event>();
+    shared
+        .admission
+        .lock()
+        .expect("admission lock")
+        .push_back(Admitted { req, lane, events: tx, stream: gen.stream });
+    shared.router.lock().expect("router lock").note_enqueued(&lane_name);
+    // Drain race: if `draining` latched between our check and the push,
+    // the scheduler loop may already have swept past the queue. Reclaim
+    // our own entry if it is still there; if the loop took it, the work
+    // is admitted and will complete normally.
+    if shared.draining.load(Ordering::Acquire) {
+        let reclaimed = {
+            let mut q = shared.admission.lock().expect("admission lock");
+            match q.iter().position(|a| a.req.id == id) {
+                Some(pos) => {
+                    q.remove(pos);
+                    true
+                }
+                None => false,
+            }
+        };
+        if reclaimed {
+            shared.router.lock().expect("router lock").note_done(&lane_name);
+            shared.pending.fetch_sub(1, Ordering::AcqRel);
+            shared.rejected_503.fetch_add(1, Ordering::Relaxed);
+            return respond_retry(stream, 503, "server draining", cfg.retry_after_s);
+        }
+    }
+
+    if gen.stream {
+        stream_events(stream, rx, cfg);
+    } else {
+        buffered_response(stream, rx, cfg);
+    }
+}
+
+/// Wait for the completion event and answer with one JSON document.
+fn buffered_response(stream: &mut TcpStream, rx: Receiver<Event>, cfg: &HttpConfig) {
+    loop {
+        match rx.recv_timeout(cfg.completion_timeout) {
+            Ok(Event::Token(_)) => continue, // non-streamed sinks don't send these
+            Ok(Event::Done(r)) => {
+                return respond(stream, 200, &[], &response_json(&r).to_string());
+            }
+            Ok(Event::Fail(msg)) => {
+                if msg.contains("draining") {
+                    return respond_retry(stream, 503, &msg, cfg.retry_after_s);
+                }
+                return respond_error(stream, 500, &msg);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                return respond_error(stream, 500, "generation timed out");
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                return respond_error(stream, 500, "scheduler dropped the request");
+            }
+        }
+    }
+}
+
+/// Chunked-transfer streaming: one SSE-style `data:` line per token, a
+/// final `data:` completion document, then the terminal `0\r\n\r\n`.
+fn stream_events(stream: &mut TcpStream, rx: Receiver<Event>, cfg: &HttpConfig) {
+    let mut started = false;
+    let start = |stream: &mut TcpStream| -> std::io::Result<()> {
+        stream.write_all(
+            b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+              Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        )
+    };
+    loop {
+        let ev = rx.recv_timeout(cfg.completion_timeout);
+        match ev {
+            Ok(Event::Token(t)) => {
+                if !started {
+                    if start(stream).is_err() {
+                        return; // client gone; scheduler finishes regardless
+                    }
+                    started = true;
+                }
+                let line = format!("data: {{\"token\":{t}}}\n\n");
+                if write_chunk(stream, line.as_bytes()).is_err() {
+                    return;
+                }
+            }
+            Ok(Event::Done(r)) => {
+                if !started && start(stream).is_err() {
+                    return;
+                }
+                let mut done = response_json(&r);
+                if let Json::Obj(m) = &mut done {
+                    m.insert("done".to_string(), Json::Bool(true));
+                }
+                let line = format!("data: {done}\n\n");
+                let _ = write_chunk(stream, line.as_bytes());
+                let _ = stream.write_all(b"0\r\n\r\n");
+                let _ = stream.flush();
+                return;
+            }
+            Ok(Event::Fail(msg)) => {
+                if started {
+                    let line = format!("data: {}\n\n", obj(vec![("error", s(&msg))]));
+                    let _ = write_chunk(stream, line.as_bytes());
+                    let _ = stream.write_all(b"0\r\n\r\n");
+                } else if msg.contains("draining") {
+                    respond_retry(stream, 503, &msg, cfg.retry_after_s);
+                } else {
+                    respond_error(stream, 500, &msg);
+                }
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                if started {
+                    let _ = write_chunk(stream, b"data: {\"error\":\"generation timed out\"}\n\n");
+                    let _ = stream.write_all(b"0\r\n\r\n");
+                } else {
+                    respond_error(stream, 500, "generation timed out");
+                }
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loopback client (tests + benches)
+// ---------------------------------------------------------------------------
+
+/// Minimal HTTP/1.1 client for the serving tests and `benches/serve.rs`:
+/// one request per connection (matching the server's `Connection: close`),
+/// strict chunked-transfer validation (every size line must parse, the
+/// terminal `0\r\n\r\n` must be present), and SSE `data:` event parsing.
+/// Deliberately *not* a general client — it only speaks the subset the
+/// server emits, and it fails loudly on any framing deviation so protocol
+/// bugs surface in tests rather than being silently tolerated.
+pub mod client {
+    use std::io::{Read, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::time::{Duration, Instant};
+
+    use crate::util::json::Json;
+
+    /// One parsed response. When the transfer was chunked, `chunks` holds
+    /// each chunk payload in order and `body` their concatenation.
+    #[derive(Debug)]
+    pub struct RawResponse {
+        pub status: u16,
+        pub headers: Vec<(String, String)>,
+        pub body: Vec<u8>,
+        pub chunked: bool,
+        pub chunks: Vec<Vec<u8>>,
+    }
+
+    impl RawResponse {
+        pub fn header(&self, name: &str) -> Option<&str> {
+            self.headers
+                .iter()
+                .find(|(k, _)| k.eq_ignore_ascii_case(name))
+                .map(|(_, v)| v.as_str())
+        }
+
+        pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+            String::from_utf8_lossy(&self.body)
+        }
+
+        pub fn body_json(&self) -> std::io::Result<Json> {
+            Json::parse(&self.body_str()).map_err(|e| bad(&format!("body is not JSON: {e}")))
+        }
+    }
+
+    fn bad(msg: &str) -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+    }
+
+    /// Send one raw request and read the response to EOF.
+    pub fn request(
+        addr: SocketAddr,
+        method: &str,
+        path: &str,
+        extra_headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> std::io::Result<RawResponse> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        stream.set_nodelay(true)?;
+        let mut head = format!("{method} {path} HTTP/1.1\r\nHost: repro\r\nConnection: close\r\n");
+        if method == "POST" || !body.is_empty() {
+            head.push_str(&format!("Content-Length: {}\r\n", body.len()));
+        }
+        for (k, v) in extra_headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body)?;
+        let mut buf = Vec::new();
+        stream.read_to_end(&mut buf)?;
+        parse_response(&buf)
+    }
+
+    pub fn get(addr: SocketAddr, path: &str) -> std::io::Result<RawResponse> {
+        request(addr, "GET", path, &[], b"")
+    }
+
+    pub fn post_json(addr: SocketAddr, path: &str, json: &str) -> std::io::Result<RawResponse> {
+        request(addr, "POST", path, &[("Content-Type", "application/json")], json.as_bytes())
+    }
+
+    /// Parse a full captured response, validating chunked framing strictly.
+    pub fn parse_response(buf: &[u8]) -> std::io::Result<RawResponse> {
+        let head_end = buf
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n")
+            .ok_or_else(|| bad("no header terminator"))?;
+        let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| bad("head not UTF-8"))?;
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().ok_or_else(|| bad("empty head"))?;
+        let mut parts = status_line.splitn(3, ' ');
+        let version = parts.next().unwrap_or("");
+        if !version.starts_with("HTTP/1.") {
+            return Err(bad(&format!("bad status line {status_line:?}")));
+        }
+        let status: u16 = parts
+            .next()
+            .and_then(|c| c.parse().ok())
+            .ok_or_else(|| bad("bad status code"))?;
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once(':').ok_or_else(|| bad("bad header line"))?;
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+        let payload = &buf[head_end + 4..];
+        let chunked = headers
+            .iter()
+            .any(|(k, v)| k.eq_ignore_ascii_case("transfer-encoding") && v.eq_ignore_ascii_case("chunked"));
+        if chunked {
+            let chunks = parse_chunks(payload)?;
+            let body = chunks.concat();
+            return Ok(RawResponse { status, headers, body, chunked, chunks });
+        }
+        let body = match headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+            .map(|(_, v)| v.parse::<usize>())
+        {
+            Some(Ok(n)) => {
+                if payload.len() < n {
+                    return Err(bad(&format!("body shorter than Content-Length ({} < {n})", payload.len())));
+                }
+                payload[..n].to_vec()
+            }
+            Some(Err(_)) => return Err(bad("unparseable Content-Length")),
+            None => payload.to_vec(),
+        };
+        Ok(RawResponse { status, headers, body, chunked: false, chunks: Vec::new() })
+    }
+
+    /// Strict chunked-transfer decoding: every size line must be pure hex
+    /// followed by CRLF, every chunk must end in CRLF, and the stream must
+    /// end with exactly `0\r\n\r\n` — any deviation is an error, which is
+    /// what makes the framing round-trip test meaningful.
+    fn parse_chunks(mut p: &[u8]) -> std::io::Result<Vec<Vec<u8>>> {
+        let mut chunks = Vec::new();
+        loop {
+            let line_end =
+                p.windows(2).position(|w| w == b"\r\n").ok_or_else(|| bad("chunk size line unterminated"))?;
+            let size_str = std::str::from_utf8(&p[..line_end]).map_err(|_| bad("chunk size not UTF-8"))?;
+            if size_str.is_empty() || !size_str.bytes().all(|b| b.is_ascii_hexdigit()) {
+                return Err(bad(&format!("malformed chunk size line {size_str:?}")));
+            }
+            let size = usize::from_str_radix(size_str, 16).map_err(|_| bad("chunk size overflow"))?;
+            p = &p[line_end + 2..];
+            if size == 0 {
+                if p != b"\r\n" {
+                    return Err(bad("missing terminal CRLF after last chunk"));
+                }
+                return Ok(chunks);
+            }
+            if p.len() < size + 2 {
+                return Err(bad("truncated chunk payload"));
+            }
+            if &p[size..size + 2] != b"\r\n" {
+                return Err(bad("chunk payload not CRLF-terminated"));
+            }
+            chunks.push(p[..size].to_vec());
+            p = &p[size + 2..];
+        }
+    }
+
+    /// The payloads of a body's SSE `data:` events, in order.
+    pub fn sse_data_lines(body: &[u8]) -> Vec<String> {
+        String::from_utf8_lossy(body)
+            .split("\n\n")
+            .filter_map(|ev| ev.trim().strip_prefix("data: ").map(|x| x.to_string()))
+            .collect()
+    }
+
+    /// Parse a token stream: the `{"token":N}` events in order, plus the
+    /// final completion document (the event carrying `"done":true`).
+    pub fn sse_tokens(body: &[u8]) -> std::io::Result<(Vec<i32>, Option<Json>)> {
+        let mut tokens = Vec::new();
+        let mut done = None;
+        for line in sse_data_lines(body) {
+            let v = Json::parse(&line).map_err(|e| bad(&format!("bad SSE event {line:?}: {e}")))?;
+            if let Some(t) = v.get("token").and_then(|t| t.as_f64()) {
+                tokens.push(t as i32);
+            } else if v.get("done").is_some() {
+                done = Some(v);
+            } else if v.get("error").is_some() {
+                return Err(bad(&format!("stream error event: {line}")));
+            }
+        }
+        Ok((tokens, done))
+    }
+
+    /// A timed streaming request: TTFT is first-`data:`-byte arrival,
+    /// e2e is send→EOF — the measurements `BENCH_serve.json` reports.
+    #[derive(Debug)]
+    pub struct StreamTiming {
+        pub resp: RawResponse,
+        pub ttft_us: u64,
+        pub e2e_us: u64,
+    }
+
+    pub fn post_json_timed(addr: SocketAddr, path: &str, json: &str) -> std::io::Result<StreamTiming> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        stream.set_nodelay(true)?;
+        let head = format!(
+            "POST {path} HTTP/1.1\r\nHost: repro\r\nConnection: close\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            json.len()
+        );
+        let t0 = Instant::now();
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(json.as_bytes())?;
+        let mut buf = Vec::new();
+        let mut chunk = [0u8; 4096];
+        let mut ttft_us = None;
+        loop {
+            match stream.read(&mut chunk) {
+                Ok(0) => break,
+                Ok(n) => {
+                    buf.extend_from_slice(&chunk[..n]);
+                    if ttft_us.is_none() {
+                        if let Some(he) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                            if buf[he + 4..].windows(5).any(|w| w == b"data:") {
+                                ttft_us = Some(t0.elapsed().as_micros() as u64);
+                            }
+                        }
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let e2e_us = t0.elapsed().as_micros() as u64;
+        let resp = parse_response(&buf)?;
+        Ok(StreamTiming { resp, ttft_us: ttft_us.unwrap_or(e2e_us), e2e_us })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The handler-side head parser and the client-side response parser
+    /// are the two halves of the wire contract; pin the head parser's
+    /// accept/reject behaviour here (full socket e2e lives in
+    /// `tests/http_serve.rs`).
+    #[test]
+    fn head_parsing() {
+        let h = parse_head(b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 12")
+            .expect("valid head");
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.path, "/v1/generate");
+        assert_eq!(h.header("content-length"), Some("12"));
+        assert_eq!(h.header("CONTENT-LENGTH"), Some("12"));
+        assert_eq!(h.header("missing"), None);
+        for bad in [
+            &b"GET /"[..],                      // no version
+            b"GET / HTTP/2 extra words here",   // junk after version
+            b"\xff\xfe / HTTP/1.1",             // not UTF-8
+            b"GET / HTTP/1.1\r\nno-colon-line", // malformed header
+        ] {
+            assert!(parse_head(bad).is_none(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn client_chunk_parser_rejects_malformed_framing() {
+        use super::client::parse_response;
+        let ok = b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhello\r\n0\r\n\r\n";
+        let r = parse_response(ok).unwrap();
+        assert_eq!(r.body, b"hello");
+        assert_eq!(r.chunks.len(), 1);
+        for bad in [
+            &b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhello\r\n"[..], // no terminal
+            b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\nhi\r\n0\r\n\r\n", // bad size
+            b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhelloXX0\r\n\r\n", // no CRLF
+            b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n6\r\nhello\r\n0\r\n\r\n", // short
+        ] {
+            assert!(parse_response(bad).is_err(), "{:?} accepted", String::from_utf8_lossy(bad));
+        }
+    }
+
+    #[test]
+    fn parse_generate_validates_fields() {
+        let cfg = HttpConfig::default();
+        let g = parse_generate(
+            r#"{"prompt":[1,2,3],"variant":"dense","max_tokens":4,"stream":true,"priority":"high"}"#,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(g.prompt, vec![1, 2, 3]);
+        assert_eq!(g.gen_tokens, 4);
+        assert!(g.stream);
+        assert_eq!(g.priority, Priority::High);
+        // Defaults: normal priority, no streaming, default token budget.
+        let g = parse_generate(r#"{"prompt":[7]}"#, &cfg).unwrap();
+        assert_eq!(g.gen_tokens, cfg.default_gen_tokens);
+        assert!(!g.stream);
+        assert_eq!(g.priority, Priority::Normal);
+        for (body, frag) in [
+            (r#"{"prompt":[]}"#, "empty prompt"),
+            (r#"{"max_tokens":4}"#, "missing field"),
+            (r#"{"prompt":[1],"max_tokens":0}"#, "max_tokens"),
+            (r#"{"prompt":[1],"max_tokens":100000}"#, "max_tokens"),
+            (r#"{"prompt":[1],"priority":"urgent"}"#, "priority"),
+            (r#"{"prompt":[1],"stream":"yes"}"#, "bad field"),
+            (r#"{"prompt":"abc"}"#, "bad field"),
+            (r#"not json"#, "malformed JSON"),
+            (r#"{"prompt":[1],}"#, "malformed JSON"),
+        ] {
+            let e = parse_generate(body, &cfg).unwrap_err();
+            assert!(e.contains(frag), "{body}: expected {frag:?} in {e:?}");
+        }
+    }
+
+    #[test]
+    fn sse_token_roundtrip() {
+        let body = b"data: {\"token\":5}\n\ndata: {\"token\":-1}\n\ndata: {\"done\":true,\"tokens\":[5,-1]}\n\n";
+        let (toks, done) = client::sse_tokens(body).unwrap();
+        assert_eq!(toks, vec![5, -1]);
+        assert!(done.is_some());
+    }
+}

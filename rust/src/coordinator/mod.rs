@@ -21,9 +21,13 @@
 //! * [`scheduler`] — the continuous-batching serve loop: iteration-level
 //!   admission into decode-frame lanes, immediate retirement (DESIGN.md §6).
 //! * [`metrics`] — counters + latency recorder shared by the serve loop.
+//! * [`http`] — the zero-dependency HTTP/1.1 front-end that puts the
+//!   scheduler behind a real socket, with per-token streaming over chunked
+//!   transfer encoding (DESIGN.md §14).
 
 pub mod batcher;
 pub mod engine;
+pub mod http;
 pub mod metrics;
 pub mod prefix_cache;
 pub mod router;

@@ -15,10 +15,44 @@
 //! simply has no lane, so callers get an actionable error either way.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::Request;
+
+/// Typed routing failure. The serving front-end (DESIGN.md §14) maps these
+/// onto HTTP statuses — a client-side mistake (`Malformed`, `NeedsVariant`)
+/// is 400, a well-formed variant this deployment doesn't serve
+/// (`Unserved`) is 404 — so the distinction [`Router::route`] used to
+/// encode only in message text is available structurally.
+#[derive(Debug)]
+pub enum RouteError {
+    /// The variant string fails the `<policy>@<ratio>[:<metric>]` grammar.
+    Malformed { variant: String, err: String },
+    /// The variant is well-formed but no lane serves it.
+    Unserved { variant: String, lanes: Vec<String> },
+    /// Explicit policy, but the request named no variant.
+    NeedsVariant,
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Keep the exact message shapes route() has always produced —
+        // callers (and tests) match on these substrings.
+        match self {
+            RouteError::Malformed { variant, err } => {
+                write!(f, "invalid variant {variant:?}: {err}")
+            }
+            RouteError::Unserved { variant, lanes } => {
+                write!(f, "no lane serves variant {variant:?} (lanes: {lanes:?})")
+            }
+            RouteError::NeedsVariant => write!(f, "explicit policy requires request.variant"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
@@ -65,20 +99,32 @@ impl Router {
     }
 
     pub fn route(&mut self, req: &Request) -> Result<String> {
+        self.route_checked(req).map_err(anyhow::Error::from)
+    }
+
+    /// [`Router::route`] with a typed error, so HTTP callers can pick a
+    /// status code without parsing message text.
+    pub fn route_checked(&mut self, req: &Request) -> std::result::Result<String, RouteError> {
         self.routed += 1;
         if !req.variant.is_empty() {
             if !self.depths.contains_key(&req.variant) {
                 // Malformed variant vs. valid-but-unserved: different fixes
                 // (correct the request vs. add the lane), so say which.
                 if let Err(e) = crate::reduction::policy::PolicySpec::parse(&req.variant) {
-                    bail!("invalid variant {:?}: {e:#}", req.variant);
+                    return Err(RouteError::Malformed {
+                        variant: req.variant.clone(),
+                        err: format!("{e:#}"),
+                    });
                 }
-                bail!("no lane serves variant {:?} (lanes: {:?})", req.variant, self.order);
+                return Err(RouteError::Unserved {
+                    variant: req.variant.clone(),
+                    lanes: self.order.clone(),
+                });
             }
             return Ok(req.variant.clone());
         }
         match self.policy {
-            Policy::Explicit => bail!("explicit policy requires request.variant"),
+            Policy::Explicit => Err(RouteError::NeedsVariant),
             Policy::LeastLoaded => Ok(self
                 .order
                 .iter()
@@ -141,6 +187,23 @@ mod tests {
         // A well-formed variant with no serving lane names the real problem.
         let msg = format!("{:#}", r.route(&req("prune@0.3", 4)).unwrap_err());
         assert!(msg.contains("no lane serves"), "{msg}");
+    }
+
+    /// The typed error carries the same distinction the message text does,
+    /// so the HTTP layer can map Malformed→400 and Unserved→404.
+    #[test]
+    fn route_checked_is_typed() {
+        let mut r = Router::new(Policy::Explicit, &["dense", "utrc@0.2"]);
+        assert!(matches!(
+            r.route_checked(&req("bogus@0.5", 4)),
+            Err(RouteError::Malformed { .. })
+        ));
+        assert!(matches!(
+            r.route_checked(&req("prune@0.3", 4)),
+            Err(RouteError::Unserved { .. })
+        ));
+        assert!(matches!(r.route_checked(&req("", 4)), Err(RouteError::NeedsVariant)));
+        assert_eq!(r.route_checked(&req("dense", 4)).unwrap(), "dense");
     }
 
     #[test]

@@ -30,7 +30,7 @@
 //! `prefill_us` is the request's actual prefill call, `decode_us`
 //! accumulates exactly the frame steps the request was resident for.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -39,6 +39,15 @@ use super::engine::{argmax, DecodeFrame, Engine};
 use super::state_pool::Slot;
 use super::state_store::StateStore;
 use super::{Priority, Request, Response};
+
+/// Per-request streaming hook: called once per generated token, in
+/// generation order, from inside [`Scheduler::step`] — the seam the HTTP
+/// front-end (DESIGN.md §14) hangs chunked-transfer streaming on. The
+/// tokens a sink observes are exactly the [`Response::generated`] vec of
+/// the eventual response (same values, same order); the final token is
+/// delivered before the response is returned from `step`. Sinks must not
+/// block: the scheduler calls them inline between decode frames.
+pub type TokenSink = Box<dyn FnMut(i32) + Send>;
 
 /// One admitted sequence: identity, progress, and per-request timing.
 struct Seq {
@@ -71,6 +80,9 @@ pub struct Scheduler<'e> {
     queue: VecDeque<(Request, Instant)>,
     /// Prefilled (state in the store), waiting for a decode lane.
     ready: VecDeque<Seq>,
+    /// Streaming hooks by request id (installed by
+    /// [`Scheduler::submit_with_sink`], removed at completion).
+    sinks: HashMap<u64, TokenSink>,
     /// Decode-frame executions — the iteration count minimised vs lock-step.
     pub decode_steps: u64,
     /// Wall time of each decode-frame execution, in µs, in step order —
@@ -112,6 +124,7 @@ impl<'e> Scheduler<'e> {
             frame: engine.new_frame(),
             queue: VecDeque::new(),
             ready: VecDeque::new(),
+            sinks: HashMap::new(),
             decode_steps: 0,
             decode_step_us: Vec::new(),
             prefill_calls: 0,
@@ -125,6 +138,16 @@ impl<'e> Scheduler<'e> {
     pub fn submit(&mut self, req: Request) {
         self.submitted += 1;
         self.queue.push_back((req, Instant::now()));
+    }
+
+    /// [`Scheduler::submit`] plus a [`TokenSink`] that observes each of the
+    /// request's generated tokens as it is produced. The sink is dropped
+    /// once the request completes. Request ids must be unique among
+    /// in-flight sink-carrying requests (the serving front-end allocates
+    /// them from a counter).
+    pub fn submit_with_sink(&mut self, req: Request, sink: TokenSink) {
+        self.sinks.insert(req.id, sink);
+        self.submit(req);
     }
 
     /// True when nothing is queued, ready, or decoding.
@@ -200,9 +223,13 @@ impl<'e> Scheduler<'e> {
                 let mut generated = Vec::new();
                 if req.gen_tokens > 0 {
                     generated.push(first);
+                    if let Some(sink) = self.sinks.get_mut(&req.id) {
+                        sink(first);
+                    }
                 }
                 if generated.len() >= req.gen_tokens {
                     // 0/1-token requests never need a decode lane or a slot.
+                    self.sinks.remove(&req.id);
                     self.completed += 1;
                     done.push(Response {
                         id: req.id,
@@ -310,7 +337,11 @@ impl<'e> Scheduler<'e> {
                 let tok = argmax(&logits[i * vocab..(i + 1) * vocab]) as i32;
                 seq.generated.push(tok);
                 seq.next_token = tok;
+                if let Some(sink) = self.sinks.get_mut(&seq.id) {
+                    sink(tok);
+                }
                 if seq.generated.len() >= seq.gen_tokens {
+                    self.sinks.remove(&seq.id);
                     self.store.retire(seq.slot)?;
                     self.completed += 1;
                     done.push(Response {

@@ -12,6 +12,7 @@
 //! repro figure 1|3|4|5|6
 //! repro golden --backend pjrt               # rust-vs-python numerics check
 //! repro serve --requests 16 --policy cost-aware
+//! repro serve --listen 127.0.0.1:8080       # HTTP/1.1 front-end (DESIGN.md §14)
 //! ```
 //!
 //! `--backend reference|pjrt` selects the execution backend (default:
@@ -95,6 +96,11 @@ commands:
   golden                       rust-vs-python numerics cross-check (pjrt backend)
   serve --requests N [--policy explicit|least-loaded|cost-aware]
         [--lanes dense,unified@0.2,prune@0.2,merge@0.2,random@0.2]
+        [--listen ADDR]              serve HTTP/1.1 on ADDR instead of the
+        synthetic trace: POST /v1/generate (JSON; set \"stream\":true for
+        SSE-over-chunked token streaming), GET /healthz, GET /stats;
+        [--queue-cap N] bounds admission (429 beyond it); SIGINT/SIGTERM
+        drains gracefully (DESIGN.md §14)
 common: --artifacts DIR (default ./artifacts, or $REPRO_ARTIFACTS)
         --backend reference|pjrt (default reference; pjrt needs the cargo feature)
         --threads N (decode worker threads; default: all cores, env TOR_SSM_THREADS)
@@ -434,6 +440,9 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
     for e in &mut engines {
         e.attach_prefix_cache(std::sync::Arc::new(PrefixCache::new(8 << 20)));
     }
+    if let Some(listen) = args.get("listen") {
+        return serve_http(listen, &engines, &lanes_owned, policy, args);
+    }
     let mut router = Router::new(policy, &lanes);
     let mut schedulers: Vec<Scheduler> = engines.iter().map(Scheduler::new).collect();
     let mut metrics = Metrics::default();
@@ -466,6 +475,63 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
             cs.hit_rate()
         );
     }
+    Ok(())
+}
+
+/// Process-wide drain flag, set by SIGINT/SIGTERM and polled by the HTTP
+/// scheduler loop (DESIGN.md §14 drain state machine).
+static SHUTDOWN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn on_shutdown_signal(_sig: i32) {
+    // Async-signal-safe: a single atomic store, nothing else.
+    SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Route SIGINT/SIGTERM to the drain flag. `std` already links libc, so a
+/// direct `signal(2)` declaration keeps the zero-dependency rule intact.
+#[cfg(unix)]
+fn install_drain_signals() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_shutdown_signal);
+        signal(SIGTERM, on_shutdown_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_drain_signals() {}
+
+/// `repro serve --listen ADDR`: put the lanes behind a real socket via the
+/// zero-dependency HTTP/1.1 front-end, then report the drained run.
+fn serve_http(
+    listen: &str,
+    engines: &[Engine],
+    lanes: &[String],
+    policy: Policy,
+    args: &Args,
+) -> Result<()> {
+    use tor_ssm::coordinator::http::{self, HttpConfig};
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("cannot listen on {listen:?}"))?;
+    let addr = listener.local_addr()?;
+    let defaults = HttpConfig::default();
+    let cfg = HttpConfig {
+        queue_cap: args.usize_or("queue-cap", defaults.queue_cap),
+        max_gen_tokens: args.usize_or("max-gen-tokens", defaults.max_gen_tokens),
+        default_gen_tokens: args.usize_or("gen-tokens", defaults.default_gen_tokens),
+        ..defaults
+    };
+    install_drain_signals();
+    println!("listening on http://{addr} lanes={lanes:?} queue_cap={}", cfg.queue_cap);
+    println!("POST /v1/generate | GET /healthz | GET /stats — SIGINT/SIGTERM drains");
+    let report = http::serve(engines, lanes, policy, listener, cfg, &SHUTDOWN)?;
+    println!("drained: {}", report.metrics.summary());
+    println!("rejected: {} over-capacity (429), {} during drain (503)",
+        report.rejected_429, report.rejected_503);
     Ok(())
 }
 

@@ -1,12 +1,33 @@
-//! Minimal JSON parser/serializer.
+//! Minimal JSON parser/serializer + lazy field extraction.
 //!
 //! serde/serde_json are not available in this offline image (DESIGN.md §3),
-//! and our needs are narrow: the artifact manifest, vocab, task sets, and
-//! report emission. This is a strict recursive-descent parser over the JSON
-//! grammar (RFC 8259) with `\uXXXX` escapes, plus a compact writer.
+//! and our needs are narrow: the artifact manifest, vocab, task sets, report
+//! emission, and the HTTP serving front-end's request bodies (DESIGN.md
+//! §14). This is a strict recursive-descent parser over the JSON grammar
+//! (RFC 8259) with `\uXXXX` escapes, plus a compact writer, plus
+//! [`LazyDoc`] — single-pass, allocation-free extraction of individual
+//! top-level fields for hot request paths that must not pay for a full
+//! tree build (the mik-sdk ADR-002 idiom: lazy path extraction beats a
+//! full-tree parse by an order of magnitude on large skipped payloads).
+//!
+//! Hardening (the serving front-end feeds this parser untrusted bytes):
+//! * nesting depth is capped at [`MAX_DEPTH`] — deeply nested input fails
+//!   with a [`JsonError`] instead of overflowing the parse stack;
+//! * numbers follow the RFC 8259 grammar strictly (no leading zeros, no
+//!   bare `-`/`-.5`/`1.`), and values that overflow f64 to ±inf are
+//!   rejected — `NaN`/`Infinity` literals never existed in the grammar, so
+//!   a parsed document can never materialise a non-finite number;
+//! * truncated `\uXXXX` escapes and malformed surrogate pairs (lone highs,
+//!   lone lows, a high followed by a non-low) are errors, never panics.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum container nesting the parser accepts. Recursive descent keeps a
+/// stack frame per level, so this bound is what turns hostile
+/// `[[[[…]]]]` input into a clean [`JsonError`] instead of a stack
+/// overflow. Far above anything our manifests or request bodies nest.
+pub const MAX_DEPTH: usize = 128;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -34,7 +55,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -139,12 +160,6 @@ impl Json {
 
     // -- writer -------------------------------------------------------------
 
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -183,6 +198,16 @@ impl Json {
     }
 }
 
+/// Compact (no-whitespace) serialization; `.to_string()` comes with it via
+/// the blanket [`ToString`] impl.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
+    }
+}
+
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
@@ -211,9 +236,213 @@ fn write_escaped(sv: &str, out: &mut String) {
     out.push('"');
 }
 
+// ---------------------------------------------------------------------------
+// Lazy field extraction
+// ---------------------------------------------------------------------------
+
+/// Single-pass field extraction over one JSON **object** document, without
+/// building a [`Json`] tree: the serving front-end's hot request path
+/// (DESIGN.md §14) reads a handful of small scalar fields (`variant`,
+/// `max_tokens`, `stream`, `priority`) next to one potentially-huge value
+/// (`prompt`, a token array), and a full-tree parse would allocate a node
+/// per token just to look at the scalars.
+///
+/// Every scan *skips* values it is not asked for — structurally validated
+/// (string escapes, strict number grammar, [`MAX_DEPTH`]) but never
+/// allocated. [`LazyDoc::validate`] runs that allocation-free skip over
+/// the whole document once; after it passes, per-field extraction can
+/// early-return at its match without re-validating the tail. `LazyDoc`
+/// accepts exactly the object documents [`Json::parse`] accepts (pinned by
+/// unit test).
+///
+/// ```
+/// use tor_ssm::util::json::LazyDoc;
+/// let doc = LazyDoc::new(r#"{"prompt":[1,2,3],"stream":true,"max_tokens":8}"#);
+/// doc.validate().unwrap();
+/// assert_eq!(doc.i32_array_field("prompt").unwrap(), Some(vec![1, 2, 3]));
+/// assert_eq!(doc.bool_field("stream").unwrap(), Some(true));
+/// assert_eq!(doc.usize_field("max_tokens").unwrap(), Some(8));
+/// assert_eq!(doc.raw_field("missing").unwrap(), None);
+/// ```
+pub struct LazyDoc<'a> {
+    text: &'a str,
+}
+
+impl<'a> LazyDoc<'a> {
+    pub fn new(text: &'a str) -> LazyDoc<'a> {
+        LazyDoc { text }
+    }
+
+    /// Validate the whole document (one JSON object, nothing trailing) in a
+    /// single allocation-free pass. Error positions are byte offsets into
+    /// the document, same as [`Json::parse`].
+    pub fn validate(&self) -> Result<(), JsonError> {
+        let mut p = Parser { b: self.text.as_bytes(), i: 0, depth: 0 };
+        p.ws();
+        if p.peek() != Some(b'{') {
+            return Err(p.err("document must be a JSON object"));
+        }
+        p.skip_value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(p.err("trailing data"));
+        }
+        Ok(())
+    }
+
+    /// The raw text span of top-level field `key` (`None` when absent).
+    /// Scans keys in document order, skipping every other value without
+    /// allocating, and returns at the match — the lazy-extraction core the
+    /// typed helpers build on.
+    pub fn raw_field(&self, key: &str) -> Result<Option<&'a str>, JsonError> {
+        let mut p = Parser { b: self.text.as_bytes(), i: 0, depth: 0 };
+        p.ws();
+        if p.peek() != Some(b'{') {
+            return Err(p.err("document must be a JSON object"));
+        }
+        p.i += 1;
+        p.depth = 1;
+        p.ws();
+        if p.peek() == Some(b'}') {
+            return Ok(None);
+        }
+        loop {
+            p.ws();
+            let key_start = p.i;
+            p.skip_string()?;
+            let matched = key_matches(&self.text[key_start..p.i], key);
+            p.ws();
+            p.expect_byte(b':')?;
+            p.ws();
+            let start = p.i;
+            p.skip_value()?;
+            if matched {
+                return Ok(Some(&self.text[start..p.i]));
+            }
+            p.ws();
+            match p.peek() {
+                Some(b',') => p.i += 1,
+                Some(b'}') => return Ok(None),
+                _ => return Err(p.err("expected , or }")),
+            }
+        }
+    }
+
+    /// Top-level string field, unescaped.
+    pub fn str_field(&self, key: &str) -> Result<Option<String>, JsonError> {
+        match self.raw_field(key)? {
+            None => Ok(None),
+            Some(raw) => {
+                let mut p = Parser { b: raw.as_bytes(), i: 0, depth: 0 };
+                if p.peek() != Some(b'"') {
+                    return Err(p.err("field is not a string"));
+                }
+                Ok(Some(p.string()?))
+            }
+        }
+    }
+
+    /// Top-level number field.
+    pub fn f64_field(&self, key: &str) -> Result<Option<f64>, JsonError> {
+        match self.raw_field(key)? {
+            None => Ok(None),
+            Some(raw) => {
+                let mut p = Parser { b: raw.as_bytes(), i: 0, depth: 0 };
+                match p.peek() {
+                    Some(c) if c == b'-' || c.is_ascii_digit() => match p.number()? {
+                        Json::Num(x) => Ok(Some(x)),
+                        _ => unreachable!("number() only builds Num"),
+                    },
+                    _ => Err(p.err("field is not a number")),
+                }
+            }
+        }
+    }
+
+    /// Top-level non-negative integer field (rejects fractions and
+    /// negatives — request knobs like `max_tokens` must be exact counts).
+    pub fn usize_field(&self, key: &str) -> Result<Option<usize>, JsonError> {
+        match self.f64_field(key)? {
+            None => Ok(None),
+            Some(x) if x.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&x) => {
+                Ok(Some(x as usize))
+            }
+            Some(_) => Err(JsonError {
+                msg: format!("field {key:?} is not a non-negative integer"),
+                pos: 0,
+            }),
+        }
+    }
+
+    /// Top-level boolean field.
+    pub fn bool_field(&self, key: &str) -> Result<Option<bool>, JsonError> {
+        match self.raw_field(key)? {
+            None => Ok(None),
+            Some("true") => Ok(Some(true)),
+            Some("false") => Ok(Some(false)),
+            Some(_) => Err(JsonError { msg: format!("field {key:?} is not a bool"), pos: 0 }),
+        }
+    }
+
+    /// Top-level array-of-i32 field, parsed straight into a `Vec<i32>`
+    /// with no per-element [`Json`] nodes — the `prompt` hot path. Elements
+    /// must be exact integers in i32 range.
+    pub fn i32_array_field(&self, key: &str) -> Result<Option<Vec<i32>>, JsonError> {
+        let raw = match self.raw_field(key)? {
+            None => return Ok(None),
+            Some(raw) => raw,
+        };
+        let mut p = Parser { b: raw.as_bytes(), i: 0, depth: 0 };
+        if p.peek() != Some(b'[') {
+            return Err(p.err("field is not an array"));
+        }
+        p.i += 1;
+        let mut v = Vec::new();
+        p.ws();
+        if p.peek() == Some(b']') {
+            return Ok(Some(v));
+        }
+        loop {
+            p.ws();
+            let x = match p.peek() {
+                Some(c) if c == b'-' || c.is_ascii_digit() => match p.number()? {
+                    Json::Num(x) => x,
+                    _ => unreachable!("number() only builds Num"),
+                },
+                _ => return Err(p.err("array element is not a number")),
+            };
+            if x.fract() != 0.0 || !(i32::MIN as f64..=i32::MAX as f64).contains(&x) {
+                return Err(p.err("array element is not an i32"));
+            }
+            v.push(x as i32);
+            p.ws();
+            match p.peek() {
+                Some(b',') => p.i += 1,
+                Some(b']') => return Ok(Some(v)),
+                _ => return Err(p.err("expected , or ]")),
+            }
+        }
+    }
+}
+
+/// Does a raw key span (still quoted, escapes intact) equal `key`? Fast
+/// path: no backslash in the span → direct byte compare of the interior.
+/// Escaped keys fall back to a real unescape (rare; our request fields are
+/// plain ASCII).
+fn key_matches(raw: &str, key: &str) -> bool {
+    let interior = &raw[1..raw.len() - 1];
+    if !interior.contains('\\') {
+        return interior == key;
+    }
+    let mut p = Parser { b: raw.as_bytes(), i: 0, depth: 0 };
+    p.string().map(|k| k == key).unwrap_or(false)
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// Current container nesting, bounded by [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -240,6 +469,14 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting deeper than MAX_DEPTH"));
+        }
+        Ok(())
+    }
+
     fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek() {
             Some(b'{') => self.object(),
@@ -253,6 +490,71 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Skip one value: full structural validation (escapes, number
+    /// grammar, depth), zero allocation — the lazy-extraction workhorse.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        match self.peek() {
+            Some(b'{') => {
+                self.i += 1;
+                self.enter()?;
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    self.depth -= 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.skip_string()?;
+                    self.ws();
+                    self.expect_byte(b':')?;
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            self.depth -= 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected , or }")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.i += 1;
+                self.enter()?;
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    self.depth -= 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            self.depth -= 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected , or ]")),
+                    }
+                }
+            }
+            Some(b'"') => self.skip_string(),
+            Some(b't') => self.lit("true", Json::Null).map(|_| ()),
+            Some(b'f') => self.lit("false", Json::Null).map(|_| ()),
+            Some(b'n') => self.lit("null", Json::Null).map(|_| ()),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number().map(|_| ()),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
         if self.b[self.i..].starts_with(word.as_bytes()) {
             self.i += word.len();
@@ -262,18 +564,35 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Consume ASCII digits; returns how many.
+    fn digits(&mut self) -> usize {
+        let n0 = self.i;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        self.i - n0
+    }
+
     fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.i += 1;
+        // Strict RFC 8259 int: "0" or nonzero-digit digits. A bare "-",
+        // "-.5", "1.", "1e" and leading zeros ("01") are malformed — the
+        // serving front-end must not be more lenient than the grammar it
+        // documents.
+        let int_start = self.i;
+        if self.digits() == 0 {
+            return Err(self.err("bad number: missing integer digits"));
+        }
+        if self.i - int_start > 1 && self.b[int_start] == b'0' {
+            return Err(self.err("bad number: leading zero"));
         }
         if self.peek() == Some(b'.') {
             self.i += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
+            if self.digits() == 0 {
+                return Err(self.err("bad number: missing fraction digits"));
             }
         }
         if matches!(self.peek(), Some(b'e') | Some(b'E')) {
@@ -281,14 +600,61 @@ impl<'a> Parser<'a> {
             if matches!(self.peek(), Some(b'+') | Some(b'-')) {
                 self.i += 1;
             }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
+            if self.digits() == 0 {
+                return Err(self.err("bad number: missing exponent digits"));
             }
         }
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+        let x: f64 = text.parse().map_err(|_| self.err("bad number"))?;
+        // The grammar admits magnitudes that overflow f64 ("1e999"); those
+        // must not materialise ±inf into a document (`NaN` never parses —
+        // no grammar production reaches it).
+        if !x.is_finite() {
+            return Err(self.err("number overflows f64"));
+        }
+        Ok(Json::Num(x))
+    }
+
+    /// Read the 4 hex digits of a `\uXXXX` escape. On entry `self.i` is at
+    /// the `u`; on success it is left at the **last hex digit** (callers
+    /// advance past it). Bounds-checked: truncated input is an error, not a
+    /// slice panic.
+    fn hex4_after_u(&mut self) -> Result<u32, JsonError> {
+        if self.i + 4 >= self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.i += 4;
+        Ok(cp)
+    }
+
+    /// Parse + validate a `\uXXXX` escape (surrogate pairs included),
+    /// leaving `self.i` at the last consumed byte. Shared by the
+    /// allocating and skipping string scanners so both enforce identical
+    /// rules: a high surrogate must be followed by an in-range low
+    /// surrogate escape, and a lone low surrogate is malformed.
+    fn unicode_escape(&mut self) -> Result<char, JsonError> {
+        let cp = self.hex4_after_u()?;
+        if (0xD800..0xDC00).contains(&cp) {
+            self.i += 1;
+            if self.peek() != Some(b'\\') {
+                return Err(self.err("lone surrogate"));
+            }
+            self.i += 1;
+            if self.peek() != Some(b'u') {
+                return Err(self.err("lone surrogate"));
+            }
+            let lo = self.hex4_after_u()?;
+            if !(0xDC00..0xE000).contains(&lo) {
+                return Err(self.err("bad low surrogate"));
+            }
+            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+            char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))
+        } else {
+            char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))
+        }
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
@@ -312,36 +678,7 @@ impl<'a> Parser<'a> {
                         Some(b'n') => out.push('\n'),
                         Some(b'r') => out.push('\r'),
                         Some(b't') => out.push('\t'),
-                        Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // Surrogate pairs: rare in our artifacts; handle anyway.
-                            if (0xD800..0xDC00).contains(&cp) {
-                                self.i += 5;
-                                if self.peek() != Some(b'\\') {
-                                    return Err(self.err("lone surrogate"));
-                                }
-                                self.i += 1;
-                                if self.peek() != Some(b'u') {
-                                    return Err(self.err("lone surrogate"));
-                                }
-                                let hex2 = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                                let lo = u32::from_str_radix(hex2, 16)
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
-                                out.push(char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))?);
-                                self.i += 4; // the final +1 below covers the last hex digit
-                            } else {
-                                out.push(char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?);
-                                self.i += 4;
-                            }
-                        }
+                        Some(b'u') => out.push(self.unicode_escape()?),
                         _ => return Err(self.err("bad escape")),
                     }
                     self.i += 1;
@@ -358,12 +695,45 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Skip a string with full escape validation and zero allocation. The
+    /// input is `&str`, so bare (non-escape) bytes are already valid UTF-8
+    /// and can be hopped byte-wise — UTF-8 continuation bytes never equal
+    /// `"` or `\`.
+    fn skip_string(&mut self) -> Result<(), JsonError> {
+        self.expect_byte(b'"')?;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(
+                            b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't',
+                        ) => {}
+                        Some(b'u') => {
+                            self.unicode_escape()?;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect_byte(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -374,6 +744,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(self.err("expected , or ]")),
@@ -383,10 +754,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect_byte(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -402,6 +775,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected , or }")),
@@ -452,6 +826,184 @@ mod tests {
     fn number_formats() {
         for (t, want) in [("0", 0.0), ("-1", -1.0), ("3.25", 3.25), ("1e3", 1000.0), ("2E-2", 0.02)] {
             assert_eq!(Json::parse(t).unwrap().as_f64(), Some(want), "{t}");
+        }
+        // Strict-grammar accepts: zero ints, signed exponents, -0.
+        for t in ["-0", "0.5", "10", "1E+3", "0e0", "0.0e-1"] {
+            assert!(Json::parse(t).is_ok(), "{t} rejected");
+        }
+    }
+
+    /// RFC 8259 number grammar is enforced strictly, and values that
+    /// overflow f64 (the only road to a non-finite number — `NaN` and
+    /// `Infinity` have no grammar production) are rejected rather than
+    /// materialised as ±inf.
+    #[test]
+    fn number_edge_cases_rejected() {
+        for t in [
+            "1e999", "-1e999", // overflow to ±inf
+            "01", "-01", "00", // leading zeros
+            "-", "-.5", ".5", "1.", "1e", "1e+", "+1", // grammar violations
+            "NaN", "Infinity", "-Infinity", "nan", "inf", // non-literals
+        ] {
+            assert!(Json::parse(t).is_err(), "{t:?} accepted");
+        }
+        // Large-but-finite survives.
+        assert_eq!(Json::parse("1e308").unwrap().as_f64(), Some(1e308));
+    }
+
+    /// Escape-sequence battery: surrogate pairs decode; every truncated or
+    /// malformed surrogate form is a clean error (the truncated forms used
+    /// to slice out of bounds, and an out-of-range low surrogate used to
+    /// underflow in debug builds).
+    #[test]
+    fn surrogate_pairs_and_truncations() {
+        assert_eq!(Json::parse(r#""😀""#).unwrap().as_str().unwrap(), "😀");
+        assert_eq!(Json::parse(r#""Aé""#).unwrap().as_str().unwrap(), "Aé");
+        for bad in [
+            r#""\u"#,            // truncated escape, no hex
+            r#""\u00"#,          // truncated hex
+            r#""\ud83d"#,        // high surrogate, string truncated
+            r#""\ud83d\"#,       // high surrogate, escape truncated
+            r#""\ud83d\u"#,      // second escape with no hex
+            r#""\ud83d\ud"#,     // second escape, truncated hex
+            r#""\ud83d\ude0"#,   // second escape, 3 hex digits then EOF
+            r#""\ud83dA""#, // high surrogate + non-surrogate
+            r#""\ud83d\ud83d""#, // high surrogate + high surrogate
+            r#""\ude00""#,       // lone low surrogate
+            r#""\ud83dx""#,      // high surrogate + bare char
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    /// Hostile nesting fails with a JsonError at MAX_DEPTH, not a stack
+    /// overflow; nesting under the cap still parses.
+    #[test]
+    fn depth_limit() {
+        let deep_ok = format!("{}1{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        assert!(Json::parse(&deep_ok).is_ok());
+        let deep_bad = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let err = Json::parse(&deep_bad).unwrap_err();
+        assert!(err.msg.contains("MAX_DEPTH"), "{err}");
+        // Far past the limit must still be an error, not an abort.
+        let hostile = "[".repeat(100_000);
+        assert!(Json::parse(&hostile).is_err());
+        // Mixed object/array nesting counts every level.
+        let mixed = format!("{}1{}", r#"{"k":["#.repeat(70), "]}".repeat(70));
+        assert!(Json::parse(&mixed).is_err());
+        // The lazy skip path shares the same cap.
+        let doc = format!(r#"{{"deep":{},"x":1}}"#, hostile);
+        assert!(LazyDoc::new(&doc).raw_field("x").is_err());
+    }
+
+    #[test]
+    fn lazy_extracts_fields_without_full_parse() {
+        let doc = LazyDoc::new(
+            r#"{"prompt": [3, 1, 4, 1, 5], "variant": "unified@0.2", "stream": true,
+               "max_tokens": 12, "priority": "high", "temp": 0.5}"#,
+        );
+        doc.validate().unwrap();
+        assert_eq!(doc.i32_array_field("prompt").unwrap(), Some(vec![3, 1, 4, 1, 5]));
+        assert_eq!(doc.str_field("variant").unwrap(), Some("unified@0.2".into()));
+        assert_eq!(doc.bool_field("stream").unwrap(), Some(true));
+        assert_eq!(doc.usize_field("max_tokens").unwrap(), Some(12));
+        assert_eq!(doc.f64_field("temp").unwrap(), Some(0.5));
+        assert_eq!(doc.raw_field("missing").unwrap(), None);
+        // Type mismatches are errors, not coercions.
+        assert!(doc.bool_field("variant").is_err());
+        assert!(doc.str_field("stream").is_err());
+        assert!(doc.i32_array_field("variant").is_err());
+        assert!(doc.usize_field("temp").is_err());
+    }
+
+    #[test]
+    fn lazy_skips_large_and_nested_values() {
+        // The scalar lives AFTER a large token array and a nested object —
+        // both must be skipped structurally without tree allocation.
+        let prompt: Vec<String> = (0..10_000).map(|i| i.to_string()).collect();
+        let doc_text = format!(
+            r#"{{"prompt":[{}],"meta":{{"a":[1,{{"b":"x\nA"}}],"c":null}},"stream":false}}"#,
+            prompt.join(",")
+        );
+        let doc = LazyDoc::new(&doc_text);
+        doc.validate().unwrap();
+        assert_eq!(doc.bool_field("stream").unwrap(), Some(false));
+        assert_eq!(doc.i32_array_field("prompt").unwrap().unwrap().len(), 10_000);
+    }
+
+    #[test]
+    fn lazy_i32_array_rejects_non_i32_elements() {
+        for bad in [
+            r#"{"p":[1.5]}"#,
+            r#"{"p":[3000000000]}"#,
+            r#"{"p":[-3000000000]}"#,
+            r#"{"p":["x"]}"#,
+            r#"{"p":[1,]}"#,
+            r#"{"p":1}"#,
+        ] {
+            assert!(LazyDoc::new(bad).i32_array_field("p").is_err(), "{bad} accepted");
+        }
+        assert_eq!(LazyDoc::new(r#"{"p":[]}"#).i32_array_field("p").unwrap(), Some(vec![]));
+        assert_eq!(
+            LazyDoc::new(r#"{"p":[-2147483648,2147483647]}"#).i32_array_field("p").unwrap(),
+            Some(vec![i32::MIN, i32::MAX])
+        );
+    }
+
+    /// Escaped keys still match (slow path), and the fast path never
+    /// matches a key whose raw bytes differ.
+    #[test]
+    fn lazy_escaped_keys() {
+        let doc = LazyDoc::new(r#"{"a\nb": 1, "ab": 2}"#);
+        assert_eq!(doc.f64_field("a\nb").unwrap(), Some(1.0));
+        assert_eq!(doc.f64_field("ab").unwrap(), Some(2.0));
+    }
+
+    /// The lazy validator accepts exactly the object documents the
+    /// full-tree parser accepts, and extracted spans re-parse to the same
+    /// value the tree holds — the pin that keeps the two parsers from
+    /// drifting.
+    #[test]
+    fn lazy_agrees_with_full_tree_parser() {
+        let good = [
+            r#"{}"#,
+            r#"{"a":1}"#,
+            r#"{"prompt":[1,2,3],"variant":"dense","stream":true,"max_tokens":4}"#,
+            r#"{"s":"café 😀","n":-2.5e-3,"z":null,"o":{"k":[{}]}}"#,
+            "{ \"ws\" :\t[ 1 ,\n2 ] }",
+        ];
+        for t in good {
+            let tree = Json::parse(t).expect(t);
+            let lazy = LazyDoc::new(t);
+            lazy.validate().unwrap_or_else(|e| panic!("{t}: {e}"));
+            if let Json::Obj(m) = &tree {
+                for (k, v) in m {
+                    let raw = lazy.raw_field(k).unwrap().expect("field present");
+                    assert_eq!(&Json::parse(raw).unwrap(), v, "field {k} of {t}");
+                }
+            }
+        }
+        let bad = [
+            "",
+            "[1,2]",     // not an object (LazyDoc is object-only)
+            "42",        // not an object
+            r#"{"a":}"#,
+            r#"{"a":1,}"#,
+            r#"{"a" 1}"#,
+            r#"{"a":01}"#,
+            r#"{"a":1e999}"#,
+            r#"{"a":"\ud83d"}"#,
+            r#"{"a":"unterminated}"#,
+            r#"{"a":tru}"#,
+            r#"{"a":1} extra"#,
+            r#"{"a":[1,2}"#,
+        ];
+        for t in bad {
+            assert!(LazyDoc::new(t).validate().is_err(), "lazy accepted {t:?}");
+            // Full parser agrees on everything except the object-only rule.
+            if !t.is_empty() && !t.starts_with('[') && t != "42" {
+                assert!(Json::parse(t).is_err(), "tree parser accepted {t:?}");
+            }
         }
     }
 }

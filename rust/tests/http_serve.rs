@@ -1,0 +1,557 @@
+//! Protocol-level battery for the HTTP/1.1 serving front-end (DESIGN.md
+//! §14), hermetic over real loopback sockets:
+//!
+//! * conformance — tokens served over the socket are bit-identical to an
+//!   in-process [`Scheduler`] run on the same (prompt, variant), for dense
+//!   AND a reduced lane; streamed token concatenation equals the
+//!   non-streamed completion; chunked framing is validated strictly
+//!   (well-formed size lines, terminal `0\r\n\r\n`) by the test client;
+//! * malformed-input battery — truncated/oversized heads, bad
+//!   `Content-Length`, invalid UTF-8, malformed vs unserved variants
+//!   (400 vs 404, the Router's typed distinction), empty prompts,
+//!   slowloris dribble → clean errors, listener still serving after each;
+//! * backpressure + drain — a saturated admission queue answers 429 +
+//!   `Retry-After` without dropping admitted work; graceful drain rejects
+//!   new work with 503 while every admitted stream runs to completion.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::http::{self, client, HttpConfig};
+use tor_ssm::coordinator::router::Policy;
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::{Priority, Request};
+use tor_ssm::fixtures::generate_default;
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::{Runtime, Weights};
+use tor_ssm::util::json::Json;
+
+fn i32s(j: &Json) -> Vec<i32> {
+    j.as_arr()
+        .expect("expected a JSON array")
+        .iter()
+        .map(|x| x.as_f64().expect("expected a number") as i32)
+        .collect()
+}
+
+/// Unique per-test fixture dir (tests run in parallel threads).
+fn fixture(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!("tor-ssm-http-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let man = generate_default(&dir).expect("fixture generation");
+    (dir, man)
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn prompt_tokens(id: usize, plen: usize, vocab: usize) -> Vec<i32> {
+    (0..plen).map(|t| ((t * 7 + id) % vocab) as i32).collect()
+}
+
+fn gen_body(prompt: &[i32], variant: &str, max_tokens: usize, stream: bool) -> String {
+    format!(
+        "{{\"prompt\":{prompt:?},\"variant\":\"{variant}\",\"max_tokens\":{max_tokens},\"stream\":{stream}}}"
+    )
+}
+
+/// Run `body` against a live server on a loopback socket; returns the
+/// closure's result plus the drained [`http::ServeReport`]. The server
+/// runs on a scoped thread, the test body on the caller's; `shutdown` is
+/// raised after `body` returns (tests that exercise drain raise it
+/// themselves, earlier).
+fn with_server<F, R>(
+    engines: &[Engine],
+    lanes: &[String],
+    policy: Policy,
+    cfg: HttpConfig,
+    body: F,
+) -> (R, http::ServeReport)
+where
+    F: FnOnce(SocketAddr, &AtomicBool) -> R,
+{
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let shutdown = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let server = s.spawn(|| http::serve(engines, lanes, policy, listener, cfg, &shutdown));
+        let out = body(addr, &shutdown);
+        shutdown.store(true, Ordering::SeqCst);
+        let report = server.join().expect("server thread").expect("serve returned an error");
+        (out, report)
+    })
+}
+
+fn build_engines(
+    rt: &Runtime,
+    man: &Manifest,
+    w: &Weights,
+    lanes: &[&str],
+) -> (Vec<Engine>, Vec<String>) {
+    let model = man.model("ref-mamba").unwrap().clone();
+    let engines: Vec<Engine> = lanes
+        .iter()
+        .map(|v| Engine::new(rt, man, &model, w, v).expect("engine"))
+        .collect();
+    (engines, lanes.iter().map(|s| s.to_string()).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Conformance
+// ---------------------------------------------------------------------------
+
+/// The acceptance test: tokens POSTed over a real socket are bit-identical
+/// to the in-process Scheduler for the same (prompt, variant), streamed
+/// concatenation equals the non-streamed completion, and the chunked
+/// framing round-trips under a strict parser — for dense and unified@0.2.
+#[test]
+fn socket_tokens_bit_identical_to_in_process_scheduler() {
+    let (dir, man) = fixture("conform");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    let lanes = ["dense", "unified@0.2"];
+    let (engines, lane_names) = build_engines(&rt, &man, &w, &lanes);
+
+    // Length-diverse probe set: short, full-frame, and (length-aware
+    // fixture) a two-frame chunked-prefill prompt.
+    let cases: Vec<(Vec<i32>, usize)> = vec![
+        (prompt_tokens(1, plen / 2, vocab), 5),
+        (prompt_tokens(2, plen, vocab), 3),
+        (prompt_tokens(3, 2 * plen, vocab), 6),
+    ];
+
+    // In-process ground truth: a fresh engine + scheduler per lane.
+    let mut expected: Vec<Vec<Vec<i32>>> = Vec::new(); // [lane][case] -> tokens
+    for lane in &lanes {
+        let engine = Engine::new(&rt, &man, &model, &w, lane).unwrap();
+        let mut sched = Scheduler::new(&engine);
+        let reqs: Vec<Request> = cases
+            .iter()
+            .enumerate()
+            .map(|(i, (p, g))| Request {
+                id: i as u64,
+                prompt: p.clone(),
+                gen_tokens: *g,
+                variant: lane.to_string(),
+                arrived_us: 0,
+                priority: Priority::Normal,
+            })
+            .collect();
+        let resps = sched.run(reqs).unwrap();
+        let mut by_case = vec![Vec::new(); cases.len()];
+        for r in resps {
+            by_case[r.id as usize] = r.generated;
+        }
+        expected.push(by_case);
+    }
+
+    let (_, report) = with_server(&engines, &lane_names, Policy::Explicit, HttpConfig::default(), |addr, _| {
+        for (li, lane) in lanes.iter().enumerate() {
+            for (ci, (prompt, gen)) in cases.iter().enumerate() {
+                // Non-streamed completion.
+                let resp = client::post_json(addr, "/v1/generate", &gen_body(prompt, lane, *gen, false))
+                    .expect("request");
+                assert_eq!(resp.status, 200, "{lane} case {ci}: {}", resp.body_str());
+                assert!(!resp.chunked, "non-streamed must use Content-Length");
+                let doc = resp.body_json().unwrap();
+                let plain: Vec<i32> = i32s(doc.expect("tokens"));
+                assert_eq!(
+                    plain, expected[li][ci],
+                    "{lane} case {ci}: socket tokens differ from in-process scheduler"
+                );
+                let usage = doc.expect("usage");
+                assert_eq!(usage.expect("prompt_tokens").as_usize(), Some(prompt.len()));
+                assert_eq!(usage.expect("generated_tokens").as_usize(), Some(*gen));
+
+                // Streamed: same tokens, one data: event per token, strict
+                // chunked framing (parse_response errors on any deviation).
+                let t = client::post_json_timed(addr, "/v1/generate", &gen_body(prompt, lane, *gen, true))
+                    .expect("streamed request");
+                assert_eq!(t.resp.status, 200);
+                assert!(t.resp.chunked, "streamed must use chunked transfer encoding");
+                assert!(!t.resp.chunks.is_empty());
+                let (tokens, done) = client::sse_tokens(&t.resp.body).expect("SSE stream");
+                assert_eq!(
+                    tokens, expected[li][ci],
+                    "{lane} case {ci}: streamed tokens differ from in-process scheduler"
+                );
+                let done = done.expect("missing final done event");
+                let done_tokens = i32s(done.expect("tokens"));
+                assert_eq!(done_tokens, tokens, "done event must carry the full token list");
+                assert!(t.ttft_us > 0 && t.ttft_us <= t.e2e_us, "TTFT must precede e2e");
+            }
+        }
+    });
+    // Every case ran twice (plain + streamed) per lane, all completed.
+    assert_eq!(report.metrics.completed as usize, 2 * lanes.len() * cases.len());
+    cleanup(&dir);
+}
+
+/// Priority strings map onto the scheduler's classes and unknown request
+/// fields are ignored (lazy extraction only reads what it needs).
+#[test]
+fn priority_and_unknown_fields() {
+    let (dir, man) = fixture("prio");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    let (engines, lane_names) = build_engines(&rt, &man, &w, &["dense"]);
+
+    let (_, report) =
+        with_server(&engines, &lane_names, Policy::Explicit, HttpConfig::default(), |addr, _| {
+            let prompt = prompt_tokens(9, plen / 2, vocab);
+            for prio in ["low", "normal", "high"] {
+                let body = format!(
+                    "{{\"prompt\":{prompt:?},\"variant\":\"dense\",\"max_tokens\":2,\
+                     \"priority\":\"{prio}\",\"ignored_field\":{{\"nested\":[1,2,3]}}}}"
+                );
+                let resp = client::post_json(addr, "/v1/generate", &body).unwrap();
+                assert_eq!(resp.status, 200, "priority {prio}: {}", resp.body_str());
+            }
+            let resp = client::post_json(
+                addr,
+                "/v1/generate",
+                &format!("{{\"prompt\":{prompt:?},\"variant\":\"dense\",\"priority\":\"urgent\"}}"),
+            )
+            .unwrap();
+            assert_eq!(resp.status, 400, "unknown priority must be rejected");
+        });
+    assert_eq!(report.metrics.completed, 3);
+    cleanup(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Malformed-input battery
+// ---------------------------------------------------------------------------
+
+/// Raw-socket sender for requests that are deliberately broken at the
+/// byte level (the structured client refuses to produce them).
+fn raw_exchange(addr: SocketAddr, bytes: &[u8]) -> client::RawResponse {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(bytes).expect("send");
+    s.shutdown(std::net::Shutdown::Write).expect("half-close");
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("read response");
+    client::parse_response(&buf).expect("parse response")
+}
+
+#[test]
+fn malformed_input_battery_leaves_listener_serving() {
+    let (dir, man) = fixture("malformed");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    let (engines, lane_names) = build_engines(&rt, &man, &w, &["dense", "unified@0.2"]);
+    let cfg = HttpConfig { read_timeout: Duration::from_millis(300), ..HttpConfig::default() };
+
+    let ((), _report) = with_server(&engines, &lane_names, Policy::Explicit, cfg, |addr, _| {
+        let ok_prompt = prompt_tokens(4, plen / 2, vocab);
+        let assert_status = |name: &str, resp: &client::RawResponse, want: u16| {
+            assert_eq!(resp.status, want, "{name}: {}", resp.body_str());
+            // Every error is a JSON document naming the problem.
+            assert!(
+                resp.body_json().map(|j| j.get("error").is_some()).unwrap_or(false),
+                "{name}: error body must be JSON with an \"error\" field, got {:?}",
+                resp.body_str()
+            );
+            // …and the listener must still be serving afterwards.
+            let health = client::get(addr, "/healthz").expect("healthz after error");
+            assert_eq!(health.status, 200, "{name}: listener died");
+        };
+
+        // Truncated request head (client hangs up mid-head).
+        let r = raw_exchange(addr, b"POST /v1/generate HTTP/1.1\r\nContent-Le");
+        assert_status("truncated head", &r, 400);
+
+        // Oversized header block.
+        let mut big = b"POST /v1/generate HTTP/1.1\r\n".to_vec();
+        while big.len() < 10 * 1024 {
+            big.extend_from_slice(b"X-Padding: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n");
+        }
+        let r = raw_exchange(addr, &big);
+        assert_status("oversized head", &r, 431);
+
+        // Unparseable Content-Length value vs missing Content-Length.
+        let r = raw_exchange(addr, b"POST /v1/generate HTTP/1.1\r\nContent-Length: nope\r\n\r\n");
+        assert_status("bad content-length", &r, 400);
+        let r = raw_exchange(addr, b"POST /v1/generate HTTP/1.1\r\n\r\n");
+        assert_status("missing content-length", &r, 411);
+
+        // Body larger than the cap is refused before it is read.
+        let r = raw_exchange(addr, b"POST /v1/generate HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n");
+        assert_status("oversized body", &r, 413);
+
+        // Invalid UTF-8 body.
+        let mut bad_utf8 = b"POST /v1/generate HTTP/1.1\r\nContent-Length: 4\r\n\r\n".to_vec();
+        bad_utf8.extend_from_slice(&[0xff, 0xfe, 0x80, 0x81]);
+        let r = raw_exchange(addr, &bad_utf8);
+        assert_status("invalid utf-8", &r, 400);
+
+        // Malformed JSON, malformed fields, empty prompt (PR 5 contract).
+        for (name, body) in [
+            ("bad json", "{\"prompt\":[1,2,}".to_string()),
+            ("prompt not array", "{\"prompt\":\"abc\",\"variant\":\"dense\"}".to_string()),
+            ("empty prompt", "{\"prompt\":[],\"variant\":\"dense\"}".to_string()),
+            ("max_tokens zero", gen_body(&ok_prompt, "dense", 0, false)),
+            (
+                "token out of range",
+                format!("{{\"prompt\":[{vocab}],\"variant\":\"dense\"}}"),
+            ),
+            ("negative token", "{\"prompt\":[-1],\"variant\":\"dense\"}".to_string()),
+        ] {
+            let r = client::post_json(addr, "/v1/generate", &body).unwrap();
+            assert_status(name, &r, 400);
+        }
+
+        // Router's typed distinction: a variant that fails the grammar is
+        // the client's mistake (400); a well-formed variant this server
+        // simply doesn't run is 404.
+        let r = client::post_json(addr, "/v1/generate", &gen_body(&ok_prompt, "bogus@0.5", 2, false))
+            .unwrap();
+        assert_status("malformed variant", &r, 400);
+        assert!(r.body_str().contains("invalid variant"), "{}", r.body_str());
+        let r = client::post_json(addr, "/v1/generate", &gen_body(&ok_prompt, "prune@0.3", 2, false))
+            .unwrap();
+        assert_status("unserved variant", &r, 404);
+        assert!(r.body_str().contains("no lane serves"), "{}", r.body_str());
+        // Explicit policy with no variant named at all.
+        let r = client::post_json(addr, "/v1/generate", &format!("{{\"prompt\":{ok_prompt:?}}}"))
+            .unwrap();
+        assert_status("missing variant", &r, 400);
+
+        // Unknown paths and methods.
+        let r = client::get(addr, "/nope").unwrap();
+        assert_status("unknown path", &r, 404);
+        let r = client::request(addr, "DELETE", "/v1/generate", &[], b"").unwrap();
+        assert_status("bad method", &r, 405);
+
+        // Slowloris: dribble a few header bytes, then stall past the read
+        // timeout. The server must answer 408 rather than hold the socket.
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            s.write_all(b"POST /v1/gen").unwrap();
+            std::thread::sleep(Duration::from_millis(700));
+            let mut buf = Vec::new();
+            s.read_to_end(&mut buf).expect("read 408");
+            let r = client::parse_response(&buf).unwrap();
+            assert_status("slowloris", &r, 408);
+        }
+
+        // After the whole battery, a real request still serves end to end.
+        let r = client::post_json(addr, "/v1/generate", &gen_body(&ok_prompt, "dense", 3, false))
+            .unwrap();
+        assert_eq!(r.status, 200, "listener must serve real work after the battery");
+        assert_eq!(i32s(r.body_json().unwrap().expect("tokens")).len(), 3);
+    });
+    cleanup(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Backpressure + drain
+// ---------------------------------------------------------------------------
+
+/// Saturating the admission queue yields 429 + Retry-After for the
+/// overflow — while every admitted request still completes with its full
+/// token stream (no hang, no dropped work).
+#[test]
+fn backpressure_rejects_with_429_without_dropping_admitted_work() {
+    let (dir, man) = fixture("backpressure");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    let (engines, lane_names) = build_engines(&rt, &man, &w, &["dense"]);
+    let cfg = HttpConfig { queue_cap: 1, ..HttpConfig::default() };
+    const CLIENTS: usize = 6;
+
+    let (admitted, report) = with_server(&engines, &lane_names, Policy::Explicit, cfg, |addr, _| {
+        let barrier = std::sync::Barrier::new(CLIENTS);
+        let results: Vec<(u16, Option<String>, usize)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..CLIENTS)
+                .map(|i| {
+                    let barrier = &barrier;
+                    let prompt = prompt_tokens(100 + i, plen / 2, vocab);
+                    s.spawn(move || {
+                        barrier.wait(); // fire simultaneously against queue_cap=1
+                        let resp = client::post_json(
+                            addr,
+                            "/v1/generate",
+                            &gen_body(&prompt, "dense", 8, true),
+                        )
+                        .expect("request");
+                        let tokens = if resp.status == 200 {
+                            client::sse_tokens(&resp.body).expect("stream intact").0.len()
+                        } else {
+                            0
+                        };
+                        (resp.status, resp.header("Retry-After").map(|v| v.to_string()), tokens)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        let ok = results.iter().filter(|(s, _, _)| *s == 200).count();
+        let rejected = results.iter().filter(|(s, _, _)| *s == 429).count();
+        assert_eq!(ok + rejected, CLIENTS, "unexpected statuses: {results:?}");
+        assert!(ok >= 1, "at least one request must be admitted");
+        assert!(rejected >= 1, "queue_cap=1 under {CLIENTS} simultaneous clients must 429");
+        for (status, retry, tokens) in &results {
+            match status {
+                200 => assert_eq!(*tokens, 8, "admitted work lost part of its token stream"),
+                429 => {
+                    let retry = retry.as_deref().expect("429 must carry Retry-After");
+                    assert!(retry.parse::<u64>().is_ok(), "Retry-After {retry:?} not numeric");
+                }
+                other => panic!("unexpected status {other}"),
+            }
+        }
+        ok
+    });
+    assert!(report.rejected_429 >= 1);
+    // Server-side accounting matches the client's view: exactly the
+    // admitted requests completed, nothing was dropped.
+    assert_eq!(report.metrics.completed as usize, admitted);
+    assert_eq!(report.rejected_429 as usize, CLIENTS - admitted);
+    cleanup(&dir);
+}
+
+/// Graceful drain mid-stream: once shutdown is raised, new work is turned
+/// away with 503 + Retry-After, but the in-flight streamed request keeps
+/// producing tokens and ends with a well-formed terminal chunk before its
+/// socket closes.
+#[test]
+fn drain_completes_admitted_streams_and_rejects_new_work() {
+    let (dir, man) = fixture("drain");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    let (engines, lane_names) = build_engines(&rt, &man, &w, &["dense"]);
+    const GEN: usize = 48;
+
+    let (_, report) =
+        with_server(&engines, &lane_names, Policy::Explicit, HttpConfig::default(), |addr, shutdown| {
+            // Open the long-running stream by hand so we can observe the
+            // first token *before* raising shutdown.
+            let prompt = prompt_tokens(7, plen / 2, vocab);
+            let body = gen_body(&prompt, "dense", GEN, true);
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+            s.write_all(
+                format!(
+                    "POST /v1/generate HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+                     Content-Length: {}\r\n\r\n{body}",
+                    body.len()
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+            let mut buf = Vec::new();
+            let mut chunk = [0u8; 1024];
+            while !buf.windows(5).any(|w| w == b"data:") {
+                let n = s.read(&mut chunk).expect("stream read");
+                assert!(n > 0, "stream closed before the first token");
+                buf.extend_from_slice(&chunk[..n]);
+            }
+
+            // Mid-stream: drain. The very next request must be 503.
+            shutdown.store(true, Ordering::SeqCst);
+            let probe = client::post_json(addr, "/v1/generate", &gen_body(&prompt, "dense", 2, false))
+                .expect("probe during drain");
+            assert_eq!(probe.status, 503, "drain must reject new work: {}", probe.body_str());
+            let retry = probe.header("Retry-After").expect("503 must carry Retry-After");
+            assert!(retry.parse::<u64>().is_ok());
+            let health = client::get(addr, "/healthz").expect("healthz during drain");
+            assert!(health.body_str().contains("draining"), "{}", health.body_str());
+
+            // The admitted stream still runs to completion: full token
+            // count, done event, valid terminal framing.
+            loop {
+                match s.read(&mut chunk) {
+                    Ok(0) => break,
+                    Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                    Err(e) => panic!("stream broken during drain: {e}"),
+                }
+            }
+            let resp = client::parse_response(&buf).expect("strict framing after drain");
+            assert_eq!(resp.status, 200);
+            let (tokens, done) = client::sse_tokens(&resp.body).expect("SSE intact");
+            assert_eq!(tokens.len(), GEN, "drain truncated an admitted stream");
+            assert!(done.is_some(), "drain dropped the final done event");
+        });
+    assert!(report.rejected_503 >= 1, "the drain probe must be counted");
+    assert_eq!(report.metrics.completed, 1, "exactly the admitted stream completed");
+    cleanup(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Introspection endpoints
+// ---------------------------------------------------------------------------
+
+#[test]
+fn healthz_and_stats_report_serving_state() {
+    let (dir, man) = fixture("stats");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    let lanes = ["dense", "unified@0.2"];
+    let (engines, lane_names) = build_engines(&rt, &man, &w, &lanes);
+
+    let ((), _report) = with_server(&engines, &lane_names, Policy::Explicit, HttpConfig::default(), |addr, _| {
+        let health = client::get(addr, "/healthz").unwrap();
+        assert_eq!(health.status, 200);
+        let h = health.body_json().unwrap();
+        assert_eq!(h.expect("status").as_str(), Some("ok"));
+        let listed: Vec<&str> = match h.expect("lanes") {
+            tor_ssm::util::json::Json::Arr(xs) => xs.iter().filter_map(|x| x.as_str()).collect(),
+            _ => panic!("lanes not an array"),
+        };
+        assert_eq!(listed, lanes);
+
+        for lane in &lanes {
+            let prompt = prompt_tokens(11, plen / 2, vocab);
+            let r = client::post_json(addr, "/v1/generate", &gen_body(&prompt, lane, 2, false))
+                .unwrap();
+            assert_eq!(r.status, 200, "{}", r.body_str());
+        }
+        // The stats document refreshes from inside the scheduler loop;
+        // give it a beat after the last completion.
+        std::thread::sleep(Duration::from_millis(50));
+        let stats = client::get(addr, "/stats").unwrap();
+        assert_eq!(stats.status, 200);
+        let j = stats.body_json().unwrap();
+        assert_eq!(j.expect("completed").as_usize(), Some(2));
+        assert_eq!(j.expect("draining").as_bool(), Some(false));
+        assert!(j.expect("gen_tok_s").as_f64().unwrap() > 0.0);
+        match j.expect("lanes") {
+            tor_ssm::util::json::Json::Arr(xs) => {
+                assert_eq!(xs.len(), lanes.len());
+                for lane_stats in xs {
+                    assert!(lane_stats.get("decode_steps").is_some());
+                    assert!(lane_stats.get("cache").is_some(), "CacheStats must be exported");
+                }
+            }
+            _ => panic!("stats.lanes not an array"),
+        }
+    });
+    cleanup(&dir);
+}
