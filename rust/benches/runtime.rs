@@ -45,9 +45,10 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::engine::{Engine, FailurePlan};
 use tor_ssm::coordinator::metrics::Metrics;
 use tor_ssm::coordinator::prefix_cache::PrefixCache;
+use tor_ssm::coordinator::replica::{Placement, ReplicaPool};
 use tor_ssm::coordinator::scheduler::Scheduler;
 use tor_ssm::coordinator::{Priority, Request};
 use tor_ssm::fixtures::{self, FixtureSpec};
@@ -568,6 +569,136 @@ fn main() {
         ("preempt_identity_violations", num(preempt_violations as f64)),
     ]);
 
+    // ---- replica-pool rows (DESIGN.md §15) -------------------------------
+    // The same variable-length trace through a ReplicaPool at
+    // replicas ∈ {1, 2, 4} × placement ∈ {least-loaded, hash} on the fused
+    // N-thread f32 config. Placement is bit-invisible under greedy argmax,
+    // so every cell is asserted token-identical to the single-Scheduler
+    // oracle (`cross_replica_identity_violations` is the CI grep). A final
+    // fault cell poisons replica 0's first prefill: the pool must re-route
+    // its queue losslessly — same tokens, zero failures, reroutes > 0.
+    kernels::set_mode(KernelMode::Fused);
+    set_format(WeightFormat::F32);
+    pool::set_workers(n_threads);
+    let pool_oracle = {
+        let engine = Engine::new(&rt, &man, &model, &w, "dense").expect("pool oracle engine");
+        let mut sched = Scheduler::new(&engine);
+        let resps = sched.run(trace.clone()).expect("pool oracle serve");
+        let tokens: BTreeMap<u64, Vec<i32>> =
+            resps.iter().map(|r| (r.id, r.generated.clone())).collect();
+        tokens
+    };
+    let mut cross_replica_identity_violations = 0usize;
+    let mut replica_cells: Vec<Json> = Vec::new();
+    let mut max_replicas_run = 0usize;
+    for replicas in [1usize, 2, 4] {
+        for placement in [Placement::LeastLoaded, Placement::PrefixHash] {
+            let mut engines: Vec<Engine> = (0..replicas)
+                .map(|_| Engine::new(&rt, &man, &model, &w, "dense").expect("pool replica"))
+                .collect();
+            for e in &mut engines {
+                e.attach_prefix_cache(Arc::new(PrefixCache::new(8 << 20)));
+            }
+            let mut rp = ReplicaPool::new(&engines, placement).expect("replica pool");
+            let mut m = Metrics::default();
+            let t0 = Instant::now();
+            for req in trace.iter().cloned() {
+                rp.submit(req).expect("pool submit");
+            }
+            let resps = rp.drain();
+            m.wall = t0.elapsed();
+            assert!(rp.take_failures().is_empty(), "healthy pool failed requests");
+            assert_eq!(resps.len(), n_requests, "x{replicas} {placement:?}: lost responses");
+            for r in &resps {
+                m.record_response(r);
+            }
+            let violations = resps
+                .iter()
+                .filter(|r| pool_oracle.get(&r.id) != Some(&r.generated))
+                .count();
+            cross_replica_identity_violations += violations;
+            assert_eq!(
+                violations, 0,
+                "x{replicas} {}: pooled tokens diverged from the single-scheduler oracle",
+                placement.name()
+            );
+            let used =
+                rp.replica_stats().iter().filter(|st| st.completed > 0).count();
+            max_replicas_run = max_replicas_run.max(replicas);
+            println!(
+                "  replicas x{replicas} {:<12} {:>8.0} gen tok/s  {} of {replicas} replicas \
+                 used, reroutes {}, identity violations {violations}",
+                placement.name(),
+                m.throughput_tok_s(),
+                used,
+                rp.reroutes
+            );
+            replica_cells.push(obj(vec![
+                ("replicas", num(replicas as f64)),
+                ("placement", s(placement.name())),
+                ("gen_tok_s", num(m.throughput_tok_s())),
+                ("wall_s", num(m.wall.as_secs_f64())),
+                ("replicas_used", num(used as f64)),
+                ("reroutes", num(rp.reroutes as f64)),
+                ("identity_violations", num(violations as f64)),
+            ]));
+        }
+    }
+    assert!(max_replicas_run > 1, "replica bench never ran a multi-replica cell (vacuous)");
+
+    // Fault cell: replica 0 dies on its first prefill, before anything it
+    // holds has emitted a token — failover must be invisible in the tokens.
+    let fault_cell = {
+        let mut engines: Vec<Engine> = (0..2)
+            .map(|_| Engine::new(&rt, &man, &model, &w, "dense").expect("fault replica"))
+            .collect();
+        for e in &mut engines {
+            e.attach_prefix_cache(Arc::new(PrefixCache::new(8 << 20)));
+        }
+        engines[0].set_failure_plan(Some(FailurePlan {
+            fail_prefill_calls: vec![1],
+            fail_decode_calls: vec![],
+        }));
+        let mut rp = ReplicaPool::new(&engines, Placement::LeastLoaded).expect("fault pool");
+        for req in trace.iter().cloned() {
+            rp.submit(req).expect("fault-cell submit");
+        }
+        let resps = rp.drain();
+        let failures = rp.take_failures();
+        assert!(failures.is_empty(), "pre-prefill death must lose no requests");
+        assert!(rp.reroutes > 0, "fault cell exercised no re-route (vacuous)");
+        assert_eq!(resps.len(), n_requests, "fault cell lost responses");
+        let violations = resps
+            .iter()
+            .filter(|r| pool_oracle.get(&r.id) != Some(&r.generated))
+            .count();
+        cross_replica_identity_violations += violations;
+        assert_eq!(violations, 0, "failover changed generated tokens");
+        println!(
+            "  replicas fault cell: replica 0 died pre-prefill, reroutes {}, failures {}, \
+             identity violations {violations}",
+            rp.reroutes,
+            failures.len()
+        );
+        obj(vec![
+            ("replicas", num(2.0)),
+            ("placement", s(Placement::LeastLoaded.name())),
+            ("injected", s("fail_prefill_call_1_replica_0")),
+            ("reroutes", num(rp.reroutes as f64)),
+            ("failures", num(failures.len() as f64)),
+            ("identity_violations", num(violations as f64)),
+        ])
+    };
+    let replicas_json = obj(vec![
+        ("max_replicas", num(max_replicas_run as f64)),
+        ("cells", Json::Arr(replica_cells)),
+        ("fault", fault_cell),
+        (
+            "cross_replica_identity_violations",
+            num(cross_replica_identity_violations as f64),
+        ),
+    ]);
+
     let rows: Vec<Json> = results
         .iter()
         .map(|r| {
@@ -620,6 +751,7 @@ fn main() {
         ),
         ("quant_error", quant_error_json),
         ("prefix_cache", prefix_cache_json),
+        ("replicas", replicas_json),
         ("configs", Json::Arr(rows)),
         ("fused_1t_speedup_dense", ratio(fused_1, scalar_1)),
         ("fused_nt_speedup_dense", ratio(fused_n, scalar_1)),

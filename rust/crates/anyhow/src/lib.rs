@@ -9,16 +9,24 @@
 //! * alternate `Display` (`{:#}`) prints the whole chain, outermost first,
 //!   separated by `": "`;
 //! * any `E: std::error::Error + Send + Sync + 'static` converts into
-//!   [`Error`] via `?`.
+//!   [`Error`] via `?`;
+//! * [`Error::downcast_ref`] recovers the root-cause error by type (the
+//!   typed-error contract `runtime::registry` exposes through its
+//!   `anyhow::Result` API); context frames do not disturb the payload.
 //!
-//! Not implemented (unused here): backtraces, downcasting, `Error::chain`.
+//! Not implemented (unused here): backtraces, `Error::chain`, downcasting
+//! to *intermediate* chain links (only the root cause is retained).
 
+use std::any::Any;
 use std::fmt;
 
 /// A context-carrying error. Frames are ordered outermost-first; the last
-/// frame is the root cause.
+/// frame is the root cause. When built from a concrete `std::error::Error`
+/// (via `?`, [`Error::new`], or `.context(..)` on a typed `Result`), the
+/// root-cause value itself rides along for [`Error::downcast_ref`].
 pub struct Error {
     frames: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 /// `anyhow`-style result alias with a defaulted error type.
@@ -27,7 +35,16 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 impl Error {
     /// Build an error from any displayable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { frames: vec![message.to_string()] }
+        Error { frames: vec![message.to_string()], payload: None }
+    }
+
+    /// Build an error from a concrete std error, retaining the value for
+    /// [`Error::downcast_ref`].
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { frames: vec![error.to_string()], payload: Some(Box::new(error)) }
     }
 
     /// Wrap this error with an outer context frame.
@@ -39,6 +56,12 @@ impl Error {
     /// The innermost (root-cause) message.
     pub fn root_cause(&self) -> &str {
         self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// The root-cause error as a `T`, if this error was built from one.
+    /// Context frames added on the way up do not disturb the payload.
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref()?.downcast_ref::<T>()
     }
 }
 
@@ -66,7 +89,7 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Error {
-        Error::msg(e)
+        Error::new(e)
     }
 }
 
@@ -83,7 +106,7 @@ mod private {
         E: std::error::Error + Send + Sync + 'static,
     {
         fn into_error(self) -> crate::Error {
-            crate::Error::msg(self)
+            crate::Error::new(self)
         }
     }
 
@@ -212,6 +235,17 @@ mod tests {
         assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
         let e = anyhow!("coded {}", 42);
         assert_eq!(format!("{e}"), "coded 42");
+    }
+
+    #[test]
+    fn downcast_ref_reaches_the_root_error() {
+        // Payload survives both `?` conversion and added context frames.
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        let io = e.downcast_ref::<std::io::Error>().expect("typed root cause retained");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        // Wrong type and message-only errors both miss.
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        assert!(anyhow!("plain text").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]

@@ -28,7 +28,7 @@
 //! declare; the reference backend is host-resident anyway).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard};
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
@@ -42,12 +42,39 @@ use super::prefix_cache::PrefixCache;
 use super::state_store::StateStore;
 use super::{Request, Response};
 
+/// Deterministic fault-injection seam (DESIGN.md §15): make the k-th
+/// prefill and/or decode **call** of an engine fail with a typed error.
+/// Call indices are 1-based over the engine's lifetime, counted at the
+/// phase entry points ([`Engine::prefill`] / [`Engine::decode_step`]) —
+/// independent of batching, so a plan written against a trace names exact
+/// calls. This is a serving-layer test seam pinning the replica pool's
+/// failover contract (`tests/replica_faults.rs`); production paths simply
+/// never install a plan.
+#[derive(Debug, Clone, Default)]
+pub struct FailurePlan {
+    /// 1-based prefill-call indices that fail.
+    pub fail_prefill_calls: Vec<u64>,
+    /// 1-based decode-call indices that fail.
+    pub fail_decode_calls: Vec<u64>,
+}
+
+/// Backend-resident weights plus the registry tag they were loaded under —
+/// the unit [`Engine::hot_swap_weights`] replaces atomically.
+struct ResidentWeights {
+    dev: DeviceWeights,
+    tag: String,
+}
+
 pub struct Engine {
     pub variant: String,
     pub model_name: String,
     prefill: Arc<dyn Executable>,
     decode: Arc<dyn Executable>,
-    weights: DeviceWeights,
+    /// Interior-mutable so a quiescent engine can swap models without
+    /// being rebuilt ([`Engine::hot_swap_weights`], DESIGN.md §15). The
+    /// lock is uncontended in steady state: one scheduler thread reads it
+    /// per phase call, writers exist only during a rolling upgrade.
+    weights: RwLock<ResidentWeights>,
     /// Static prefill frame: at most this many prompts per prefill call.
     pub batch: usize,
     pub prefill_len: usize,
@@ -94,6 +121,12 @@ pub struct Engine {
     /// prefix states ([`PrefixCache`], DESIGN.md §12). `None` (the default)
     /// keeps prefill byte-for-byte on the PR 5 path.
     prefix_cache: Option<Arc<PrefixCache>>,
+    /// Installed [`FailurePlan`], if any (test seam; `None` in production).
+    failure_plan: Mutex<Option<FailurePlan>>,
+    /// Lifetime 1-based call counters the failure plan indexes — distinct
+    /// from [`Self::decode_calls`], which counts *successful* executes.
+    seam_prefill_calls: AtomicU64,
+    seam_decode_calls: AtomicU64,
 }
 
 /// One prompt's prefill result: the per-sequence decode state (contiguous
@@ -150,7 +183,7 @@ impl Engine {
             model_name: model.name.clone(),
             prefill,
             decode,
-            weights: dw,
+            weights: RwLock::new(ResidentWeights { dev: dw, tag: "init".to_string() }),
             batch: pf.batch,
             prefill_len: pf.seq_len,
             length_aware: pf.takes_lengths,
@@ -167,7 +200,67 @@ impl Engine {
             prefill_tokens: AtomicU64::new(0),
             resumed_tokens: AtomicU64::new(0),
             prefix_cache: None,
+            failure_plan: Mutex::new(None),
+            seam_prefill_calls: AtomicU64::new(0),
+            seam_decode_calls: AtomicU64::new(0),
         })
+    }
+
+    /// Resident-weights read guard. Poison recovery is safe here: a panic
+    /// mid-`execute` cannot leave the weights partially written (swaps
+    /// replace the whole `ResidentWeights` value under the write guard).
+    fn weights(&self) -> RwLockReadGuard<'_, ResidentWeights> {
+        self.weights.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The registry tag of the resident weights: `"init"` from
+    /// construction, or whatever tag the last [`Self::hot_swap_weights`]
+    /// installed. The replica pool compares this against the upgrade
+    /// target to find replicas still awaiting their swap (DESIGN.md §15).
+    pub fn weights_tag(&self) -> String {
+        self.weights().tag.clone()
+    }
+
+    /// Atomically replace the resident weights (rolling upgrade,
+    /// DESIGN.md §15). Caller contract: the engine must be **quiescent** —
+    /// no queued, ready, or resident sequence on any scheduler driving it —
+    /// because in-flight SSM states were produced under the old weights and
+    /// decoding them under new ones would mix models within one sequence.
+    /// [`ReplicaPool::advance_upgrade`](super::replica::ReplicaPool::advance_upgrade)
+    /// enforces this by swapping only Draining+idle replicas. Any attached
+    /// [`PrefixCache`] is cleared for the same reason: its snapshots encode
+    /// the old weights.
+    pub fn hot_swap_weights(&self, dev: DeviceWeights, tag: &str) {
+        {
+            let mut w = self.weights.write().unwrap_or_else(|e| e.into_inner());
+            *w = ResidentWeights { dev, tag: tag.to_string() };
+        }
+        if let Some(cache) = self.prefix_cache.as_deref() {
+            cache.clear();
+        }
+    }
+
+    /// Install a [`FailurePlan`] (`None` clears it). Takes `&self`: the
+    /// seam must be reachable on the shared-reference engines the
+    /// scheduler and pool hold.
+    pub fn set_failure_plan(&self, plan: Option<FailurePlan>) {
+        *self.failure_plan.lock().unwrap_or_else(|e| e.into_inner()) = plan;
+    }
+
+    /// Bump the 1-based call counter for `phase` and fail if the installed
+    /// plan names this call. The error is typed by message prefix
+    /// (`"injected failure:"`) so tests can tell injected faults from real
+    /// backend errors.
+    fn check_failure_seam(&self, phase: &str, counter: &AtomicU64, decode: bool) -> Result<()> {
+        let call = counter.fetch_add(1, Ordering::Relaxed) + 1;
+        let guard = self.failure_plan.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(plan) = guard.as_ref() {
+            let hits = if decode { &plan.fail_decode_calls } else { &plan.fail_prefill_calls };
+            if hits.contains(&call) {
+                bail!("injected failure: {phase} call {call} (FailurePlan)");
+            }
+        }
+        Ok(())
     }
 
     /// Attach a (shared) prefix-state cache: subsequent length-aware
@@ -250,6 +343,7 @@ impl Engine {
         for r in reqs {
             ensure!(!r.prompt.is_empty(), "request {}: empty prompt", r.id);
         }
+        self.check_failure_seam("prefill", &self.seam_prefill_calls, false)?;
         let t0 = Instant::now();
         let seqs = if self.length_aware {
             self.prefill_chunked(reqs)?
@@ -407,7 +501,7 @@ impl Engine {
     /// Execute + shape-validate one prefill frame; returns owned
     /// (logits `[batch·vocab]`, conv frame, ssm frame).
     fn exec_prefill_frame(&self, inputs: &[HostTensor]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let mut outs = self.prefill.execute(&self.weights, inputs).context("prefill")?;
+        let mut outs = self.prefill.execute(&self.weights().dev, inputs).context("prefill")?;
         ensure!(outs.len() == 3, "prefill must return (logits, conv, ssm)");
         let ssm_t = outs.pop().unwrap();
         let conv_t = outs.pop().unwrap();
@@ -469,6 +563,10 @@ impl Engine {
             frame.tokens.len(),
             self.decode_batch
         );
+        // Seam before the state buffers move out of the frame: an injected
+        // decode fault leaves the frame untouched, same as a real error
+        // after the restore below.
+        self.check_failure_seam("decode", &self.seam_decode_calls, true)?;
         let tok = HostTensor::i32(vec![self.decode_batch], frame.tokens.clone());
         let conv_in = HostTensor::f32(self.conv_shape.clone(), std::mem::take(&mut frame.conv));
         let ssm_in = HostTensor::f32(self.ssm_shape.clone(), std::mem::take(&mut frame.ssm));
@@ -490,7 +588,7 @@ impl Engine {
 
     /// Execute + validate one decode call; returns owned (logits, conv, ssm).
     fn run_decode(&self, inputs: &[HostTensor; 3]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let mut outs = self.decode.execute(&self.weights, inputs).context("decode step")?;
+        let mut outs = self.decode.execute(&self.weights().dev, inputs).context("decode step")?;
         self.decode_calls.fetch_add(1, Ordering::Relaxed);
         ensure!(outs.len() == 3, "decode must return (logits, conv, ssm)");
         let ssm_t = outs.pop().unwrap();

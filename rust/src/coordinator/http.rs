@@ -11,10 +11,15 @@
 //! one of them has exited):
 //!
 //! * the **caller's thread** runs the scheduler loop: drains the admission
-//!   queue into per-lane [`Scheduler`]s (installing a [`TokenSink`] per
+//!   queue into per-lane [`ReplicaPool`]s (installing a [`TokenSink`] per
 //!   request that forwards tokens over an mpsc channel), steps every
-//!   non-idle scheduler, and publishes completions/failures back to the
-//!   waiting connection handlers;
+//!   pool, and publishes completions/failures back to the waiting
+//!   connection handlers. [`serve_pooled`] puts `replicas` engines behind
+//!   each lane (DESIGN.md §15) — placement is bit-invisible (greedy
+//!   argmax, frame-independent sequences), a replica whose step fails is
+//!   failed over (queued work re-routed, mid-stream work failed typed as
+//!   `500`s) and revived clean, exactly like the pre-pool per-lane
+//!   scheduler restart; [`serve`] is the `replicas = 1` special case;
 //! * an **acceptor thread** polls the (nonblocking) listener and spawns
 //!   one handler thread per connection;
 //! * **handler threads** parse + validate one request each, admit it
@@ -37,6 +42,12 @@
 //! variant no lane serves → `404`; missing `Content-Length` → `411`;
 //! oversized header block → `431`; oversized body → `413`; read timeout
 //! (slowloris) → `408`; queue full → `429`; draining → `503`.
+//!
+//! `GET /stats` composes a [`SeqCounters`] seqlock-consistent counter
+//! block at request time (so `admitted == completed + failed + in_flight`
+//! holds in **every** response, even mid-burst — DESIGN.md §15 bugfix)
+//! with the per-lane/per-replica detail document the scheduler loop
+//! renders periodically.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
@@ -52,8 +63,10 @@ use crate::util::json::{num, obj, s, Json, LazyDoc};
 
 use super::engine::Engine;
 use super::metrics::Metrics;
+use super::prefix_cache::CacheStats;
+use super::replica::{Health, Placement, ReplicaPool};
 use super::router::{Policy, RouteError, Router};
-use super::scheduler::{Scheduler, TokenSink};
+use super::scheduler::TokenSink;
 use super::{Priority, Request, Response};
 
 /// Serving knobs. Defaults are sized for loopback testing and small
@@ -99,6 +112,119 @@ impl Default for HttpConfig {
             retry_after_s: 1,
             default_gen_tokens: 16,
         }
+    }
+}
+
+/// Replica-pool topology for [`serve_pooled`] (DESIGN.md §15): `replicas`
+/// engines behind every lane, placed by `placement`. The engines slice is
+/// lane-major — all of lane 0's replicas first, then lane 1's, …
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    pub replicas: usize,
+    pub placement: Placement,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig { replicas: 1, placement: Placement::LeastLoaded }
+    }
+}
+
+/// Serving counters with a seqlock-consistent lock-free reader
+/// (DESIGN.md §15 bugfix).
+///
+/// The pre-§15 `/stats` path snapshotted its counters non-atomically:
+/// `completed` came from a stats string the scheduler loop re-rendered
+/// only every few ticks while the in-flight count was read fresh from an
+/// atomic, so a probe during a burst could observe a document where
+/// `admitted != completed + failed + in_flight`. Here writers serialise
+/// on a mutex and bump `seq` to odd before / back to even after every
+/// increment; the reader never blocks — it retries until it reads one
+/// even, unchanged `seq` around the whole triple. `in_flight` is
+/// *derived* (`admitted - completed - failed`), so the identity holds in
+/// every snapshot by construction and the triple is from a single write
+/// epoch (`tests/http_serve.rs` hammers this during a burst).
+pub struct SeqCounters {
+    /// Odd while an update is in progress, even when consistent.
+    seq: AtomicU64,
+    /// Serialises writers (admission handlers + the scheduler loop).
+    write: Mutex<()>,
+    admitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+}
+
+/// One consistent reading of a [`SeqCounters`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub admitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+}
+
+impl CounterSnapshot {
+    /// Requests admitted but not yet completed or failed. Derived, so
+    /// `admitted == completed + failed + in_flight` cannot be violated.
+    pub fn in_flight(&self) -> u64 {
+        self.admitted - self.completed - self.failed
+    }
+}
+
+impl SeqCounters {
+    pub fn new() -> SeqCounters {
+        SeqCounters {
+            seq: AtomicU64::new(0),
+            write: Mutex::new(()),
+            admitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+        }
+    }
+
+    fn bump(&self, which: &AtomicU64) {
+        let _writer = self.write.lock().expect("counter write lock");
+        self.seq.fetch_add(1, Ordering::AcqRel); // odd: update in progress
+        which.fetch_add(1, Ordering::Release);
+        self.seq.fetch_add(1, Ordering::AcqRel); // even: consistent again
+    }
+
+    pub fn admit(&self) {
+        self.bump(&self.admitted);
+    }
+
+    pub fn complete(&self) {
+        self.bump(&self.completed);
+    }
+
+    pub fn fail(&self) {
+        self.bump(&self.failed);
+    }
+
+    /// A consistent snapshot: retry until one even `seq` value brackets
+    /// all three loads. Writers hold the seq odd only for three atomic
+    /// ops, so the retry loop is effectively bounded.
+    pub fn snapshot(&self) -> CounterSnapshot {
+        loop {
+            let before = self.seq.load(Ordering::Acquire);
+            if before % 2 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let snap = CounterSnapshot {
+                admitted: self.admitted.load(Ordering::Acquire),
+                completed: self.completed.load(Ordering::Acquire),
+                failed: self.failed.load(Ordering::Acquire),
+            };
+            if self.seq.load(Ordering::Acquire) == before {
+                return snap;
+            }
+        }
+    }
+}
+
+impl Default for SeqCounters {
+    fn default() -> SeqCounters {
+        SeqCounters::new()
     }
 }
 
@@ -155,7 +281,12 @@ struct Shared {
     next_id: AtomicU64,
     rejected_429: AtomicU64,
     rejected_503: AtomicU64,
-    /// Pre-rendered `GET /stats` body, refreshed by the scheduler loop.
+    /// Consistent admitted/completed/failed block for `/stats`
+    /// (DESIGN.md §15 bugfix) — written at admission (handlers) and
+    /// retirement (scheduler loop), read fresh per `/stats` request.
+    counters: SeqCounters,
+    /// Pre-rendered `GET /stats` lane/replica detail, refreshed by the
+    /// scheduler loop; [`stats_body`] splices the counter block in.
     stats: Mutex<String>,
 }
 
@@ -171,18 +302,44 @@ pub fn serve(
     cfg: HttpConfig,
     shutdown: &AtomicBool,
 ) -> Result<ServeReport> {
-    anyhow::ensure!(!engines.is_empty() && engines.len() == lanes.len(), "one engine per lane");
+    serve_pooled(engines, lanes, policy, PoolConfig::default(), listener, cfg, shutdown)
+}
+
+/// [`serve`] with a [`ReplicaPool`] of `pool.replicas` engines behind
+/// every lane (DESIGN.md §15). `engines` is lane-major:
+/// `engines[li * replicas .. (li + 1) * replicas]` are lane `li`'s
+/// replicas (same model + variant — [`ReplicaPool::new`] enforces it).
+/// Cross-replica placement is bit-invisible, so any topology produces
+/// token streams identical to `replicas = 1` (`tests/replica_pool.rs`).
+pub fn serve_pooled(
+    engines: &[Engine],
+    lanes: &[String],
+    policy: Policy,
+    pool: PoolConfig,
+    listener: TcpListener,
+    cfg: HttpConfig,
+    shutdown: &AtomicBool,
+) -> Result<ServeReport> {
+    anyhow::ensure!(pool.replicas >= 1, "pool needs at least one replica per lane");
+    anyhow::ensure!(
+        !lanes.is_empty() && engines.len() == lanes.len() * pool.replicas,
+        "engine count must be lanes x replicas ({} lanes x {} replicas != {} engines; \
+         engines are lane-major: all of lane 0's replicas first)",
+        lanes.len(),
+        pool.replicas,
+        engines.len()
+    );
     let lane_refs: Vec<&str> = lanes.iter().map(|s| s.as_str()).collect();
     let shared = Shared {
         router: Mutex::new(Router::new(policy, &lane_refs)),
         lanes: engines
-            .iter()
+            .chunks(pool.replicas)
             .zip(lanes)
-            .map(|(e, name)| LaneInfo {
+            .map(|(chunk, name)| LaneInfo {
                 name: name.clone(),
-                vocab: e.vocab(),
-                length_aware: e.length_aware,
-                prefill_len: e.prefill_len,
+                vocab: chunk[0].vocab(),
+                length_aware: chunk[0].length_aware,
+                prefill_len: chunk[0].prefill_len,
             })
             .collect(),
         admission: Mutex::new(VecDeque::new()),
@@ -192,6 +349,7 @@ pub fn serve(
         next_id: AtomicU64::new(1),
         rejected_429: AtomicU64::new(0),
         rejected_503: AtomicU64::new(0),
+        counters: SeqCounters::new(),
         stats: Mutex::new("{}".to_string()),
     };
     listener.set_nonblocking(true)?;
@@ -200,7 +358,7 @@ pub fn serve(
         let shared = &shared;
         let cfg = &cfg;
         scope.spawn(move || acceptor(scope, listener, shared, cfg));
-        scheduler_loop(engines, shared, cfg, shutdown)
+        scheduler_loop(engines, shared, pool, cfg, shutdown)
     })
 }
 
@@ -236,16 +394,21 @@ fn acceptor<'scope>(
     }
 }
 
-/// The serve loop proper: admission queue → schedulers → event channels.
+/// The serve loop proper: admission queue → replica pools → event
+/// channels.
 fn scheduler_loop(
     engines: &[Engine],
     shared: &Shared,
+    pcfg: PoolConfig,
     _cfg: &HttpConfig,
     shutdown: &AtomicBool,
 ) -> Result<ServeReport> {
-    let mut scheds: Vec<Scheduler> = engines.iter().map(Scheduler::new).collect();
+    let mut pools: Vec<ReplicaPool> = engines
+        .chunks(pcfg.replicas)
+        .map(|chunk| ReplicaPool::new(chunk, pcfg.placement))
+        .collect::<Result<_>>()?;
     let mut inflight: Vec<HashMap<u64, Sender<Event>>> =
-        engines.iter().map(|_| HashMap::new()).collect();
+        pools.iter().map(|_| HashMap::new()).collect();
     let mut metrics = Metrics::default();
     let t0 = Instant::now();
     let mut ticks = 0u64;
@@ -253,66 +416,87 @@ fn scheduler_loop(
         if shutdown.load(Ordering::Relaxed) {
             shared.draining.store(true, Ordering::Release);
         }
-        // Admissions → schedulers, with a per-request token sink feeding
-        // the handler's event channel.
+        // Admissions → pools, with a per-request token sink feeding the
+        // handler's event channel. The sink travels with the request if
+        // the pool re-routes it off an unhealthy replica before prefill.
         let newly: Vec<Admitted> = {
             let mut q = shared.admission.lock().expect("admission lock");
             q.drain(..).collect()
         };
         for adm in newly {
             let tx = adm.events.clone();
-            inflight[adm.lane].insert(adm.req.id, adm.events);
             let sink: TokenSink = if adm.stream {
+                let stream_tx = adm.events.clone();
                 Box::new(move |t| {
-                    let _ = tx.send(Event::Token(t));
+                    let _ = stream_tx.send(Event::Token(t));
                 })
             } else {
                 // Non-streamed responses read tokens off the Response;
                 // skip the per-token channel traffic.
                 Box::new(|_| {})
             };
-            scheds[adm.lane].submit_with_sink(adm.req, sink);
-        }
-        // One step per non-idle lane. Indexed (not iter_mut) so the error
-        // arm can replace the failed scheduler in place.
-        let mut any_active = false;
-        for li in 0..scheds.len() {
-            if scheds[li].is_idle() {
-                continue;
-            }
-            any_active = true;
-            match scheds[li].step() {
-                Ok(resps) => {
-                    for r in resps {
-                        metrics.record_response(&r);
-                        shared.router.lock().expect("router lock").note_done(&shared.lanes[li].name);
-                        shared.pending.fetch_sub(1, Ordering::AcqRel);
-                        if let Some(tx) = inflight[li].remove(&r.id) {
-                            let _ = tx.send(Event::Done(r));
-                        }
-                    }
+            let id = adm.req.id;
+            match pools[adm.lane].submit_with_sink(adm.req, sink) {
+                Ok(_) => {
+                    inflight[adm.lane].insert(id, adm.events);
                 }
                 Err(e) => {
-                    // A failing backend fails this lane's in-flight work
-                    // loudly (500s), then the lane restarts clean — the
-                    // listener keeps serving.
-                    let msg = format!("lane {:?}: {e:#}", shared.lanes[li].name);
-                    for (_, tx) in inflight[li].drain() {
-                        let _ = tx.send(Event::Fail(msg.clone()));
-                        shared.router.lock().expect("router lock").note_done(&shared.lanes[li].name);
-                        shared.pending.fetch_sub(1, Ordering::AcqRel);
-                    }
-                    scheds[li] = Scheduler::new(&engines[li]);
+                    // No admitting replica right now (all draining/down):
+                    // fail typed instead of parking work on a dead pool.
+                    let msg = format!("lane {:?}: {e:#}", shared.lanes[adm.lane].name);
+                    let _ = tx.send(Event::Fail(msg));
+                    shared.router.lock().expect("router lock").note_done(&shared.lanes[adm.lane].name);
+                    shared.pending.fetch_sub(1, Ordering::AcqRel);
+                    shared.counters.fail();
+                }
+            }
+        }
+        // One pool step per lane. Pool steps are infallible — a replica
+        // whose step errors is failed over *inside* the pool (queued work
+        // re-routed to healthy replicas, mid-stream work surfaced through
+        // `take_failures`).
+        let mut any_active = false;
+        for li in 0..pools.len() {
+            if !pools[li].is_idle() {
+                any_active = true;
+            }
+            for r in pools[li].step() {
+                metrics.record_response(&r);
+                shared.router.lock().expect("router lock").note_done(&shared.lanes[li].name);
+                shared.pending.fetch_sub(1, Ordering::AcqRel);
+                shared.counters.complete();
+                if let Some(tx) = inflight[li].remove(&r.id) {
+                    let _ = tx.send(Event::Done(r));
+                }
+            }
+            // Failover fallout: what the pool could not save fails loudly
+            // (500s) rather than hanging its handler.
+            for f in pools[li].take_failures() {
+                if let Some(tx) = inflight[li].remove(&f.id) {
+                    let _ =
+                        tx.send(Event::Fail(format!("lane {:?}: {}", shared.lanes[li].name, f.error)));
+                }
+                shared.router.lock().expect("router lock").note_done(&shared.lanes[li].name);
+                shared.pending.fetch_sub(1, Ordering::AcqRel);
+                shared.counters.fail();
+            }
+            // Revive Down replicas with their already-reset scheduler so
+            // the lane keeps serving — the same restart-clean semantics
+            // the pre-pool single-scheduler loop had. (In-process pool
+            // drivers like the fault tests manage health themselves.)
+            for ri in 0..pools[li].len() {
+                if pools[li].health(ri) == Health::Down {
+                    pools[li].revive(ri);
                 }
             }
         }
         ticks += 1;
         if ticks % 8 == 1 || !any_active {
-            let rendered = render_stats(shared, &metrics, &scheds, engines, t0);
+            let rendered = render_stats(shared, &metrics, &pools, engines, pcfg.replicas, t0);
             *shared.stats.lock().expect("stats lock") = rendered;
         }
         if shared.draining.load(Ordering::Acquire)
-            && scheds.iter().all(|s| s.is_idle())
+            && pools.iter().all(|p| p.is_idle())
             && shared.admission.lock().expect("admission lock").is_empty()
         {
             break;
@@ -328,9 +512,11 @@ fn scheduler_loop(
         let _ = adm.events.send(Event::Fail("server draining".to_string()));
         shared.router.lock().expect("router lock").note_done(&shared.lanes[adm.lane].name);
         shared.pending.fetch_sub(1, Ordering::AcqRel);
+        shared.counters.fail();
     }
     metrics.wall = t0.elapsed();
-    *shared.stats.lock().expect("stats lock") = render_stats(shared, &metrics, &scheds, engines, t0);
+    *shared.stats.lock().expect("stats lock") =
+        render_stats(shared, &metrics, &pools, engines, pcfg.replicas, t0);
     shared.drained.store(true, Ordering::Release);
     Ok(ServeReport {
         metrics,
@@ -339,29 +525,68 @@ fn scheduler_loop(
     })
 }
 
-/// Render the `GET /stats` document: serving counters + per-lane
-/// scheduler/cache state (CacheStats and [`Metrics`] as JSON).
+/// Render the `/stats` *detail* document: throughput/latency plus
+/// per-lane aggregates and per-replica blocks (health, heartbeat,
+/// weights tag — DESIGN.md §15). The admitted/completed/failed counter
+/// block is deliberately NOT here: [`stats_body`] splices a fresh
+/// seqlock-consistent reading in per request.
 fn render_stats(
     shared: &Shared,
     metrics: &Metrics,
-    scheds: &[Scheduler],
+    pools: &[ReplicaPool],
     engines: &[Engine],
+    replicas: usize,
     t0: Instant,
 ) -> String {
     let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
     let lanes: Vec<Json> = shared
         .lanes
         .iter()
-        .zip(scheds)
-        .zip(engines)
-        .map(|((info, sc), e)| {
-            let cs = e.prefix_cache().map(|c| c.stats()).unwrap_or_default();
+        .zip(pools)
+        .enumerate()
+        .map(|(li, (info, pool))| {
+            let rstats = pool.replica_stats();
+            // Aggregate the lane's replica caches so the lane-level
+            // `cache` block keeps its pre-pool meaning (with one replica
+            // it is bytewise the old document).
+            let mut cs = CacheStats::default();
+            for e in &engines[li * replicas..(li + 1) * replicas] {
+                if let Some(c) = e.prefix_cache() {
+                    let one = c.stats();
+                    cs.hits += one.hits;
+                    cs.misses += one.misses;
+                    cs.inserts += one.inserts;
+                    cs.evictions += one.evictions;
+                    cs.used_bytes += one.used_bytes;
+                    cs.entries += one.entries;
+                }
+            }
+            let replica_blocks: Vec<Json> = rstats
+                .iter()
+                .enumerate()
+                .map(|(ri, rs)| {
+                    obj(vec![
+                        ("index", num(ri as f64)),
+                        ("health", s(rs.health.name())),
+                        ("in_flight", num(rs.in_flight as f64)),
+                        ("completed", num(rs.completed as f64)),
+                        ("failed", num(rs.failed as f64)),
+                        ("prefills", num(rs.prefills as f64)),
+                        ("decode_steps", num(rs.decode_steps as f64)),
+                        ("preemptions", num(rs.preemptions as f64)),
+                        ("recent_errors", num(rs.recent_errors as f64)),
+                        ("mean_step_us", num(rs.mean_step_us as f64)),
+                        ("weights_tag", s(&rs.weights_tag)),
+                    ])
+                })
+                .collect();
             obj(vec![
                 ("name", s(&info.name)),
-                ("in_flight", num(sc.in_flight() as f64)),
-                ("prefills", num(sc.prefill_calls as f64)),
-                ("decode_steps", num(sc.decode_steps as f64)),
-                ("preemptions", num(sc.preemptions as f64)),
+                ("in_flight", num(pool.in_flight() as f64)),
+                ("prefills", num(rstats.iter().map(|r| r.prefills).sum::<u64>() as f64)),
+                ("decode_steps", num(rstats.iter().map(|r| r.decode_steps).sum::<u64>() as f64)),
+                ("preemptions", num(rstats.iter().map(|r| r.preemptions).sum::<u64>() as f64)),
+                ("reroutes", num(pool.reroutes as f64)),
                 (
                     "cache",
                     obj(vec![
@@ -374,15 +599,14 @@ fn render_stats(
                         ("hit_rate", num(cs.hit_rate())),
                     ]),
                 ),
+                ("replicas", Json::Arr(replica_blocks)),
             ])
         })
         .collect();
+    let placement = pools.first().map(|p| p.placement().name()).unwrap_or("least-loaded");
     obj(vec![
-        ("completed", num(metrics.completed as f64)),
-        ("pending", num(shared.pending.load(Ordering::Relaxed) as f64)),
-        ("rejected_429", num(shared.rejected_429.load(Ordering::Relaxed) as f64)),
-        ("rejected_503", num(shared.rejected_503.load(Ordering::Relaxed) as f64)),
-        ("draining", Json::Bool(shared.draining.load(Ordering::Relaxed))),
+        ("replicas_per_lane", num(replicas as f64)),
+        ("placement", s(placement)),
         ("generated_tokens", num(metrics.generated_tokens as f64)),
         ("gen_tok_s", num(metrics.generated_tokens as f64 / elapsed)),
         ("p50_e2e_us", num(Metrics::pct(&metrics.e2e_us, 0.5) as f64)),
@@ -390,6 +614,34 @@ fn render_stats(
         ("lanes", Json::Arr(lanes)),
     ])
     .to_string()
+}
+
+/// Compose the `GET /stats` body at request time: a seqlock-consistent
+/// counter block (so `admitted == completed + failed + in_flight` holds
+/// in every response — the DESIGN.md §15 bugfix, regression-tested by
+/// `tests/http_serve.rs`) spliced with the lane/replica detail the
+/// scheduler loop last rendered.
+fn stats_body(shared: &Shared) -> String {
+    let c = shared.counters.snapshot();
+    let head = obj(vec![
+        ("admitted", num(c.admitted as f64)),
+        ("completed", num(c.completed as f64)),
+        ("failed", num(c.failed as f64)),
+        ("in_flight", num(c.in_flight() as f64)),
+        ("rejected_429", num(shared.rejected_429.load(Ordering::Relaxed) as f64)),
+        ("rejected_503", num(shared.rejected_503.load(Ordering::Relaxed) as f64)),
+        ("draining", Json::Bool(shared.draining.load(Ordering::Relaxed))),
+    ])
+    .to_string();
+    let detail = shared.stats.lock().expect("stats lock").clone();
+    let inner = detail.trim();
+    // Splice `{head...}` + `{detail...}` into one object. The detail is
+    // always an object render; before the loop's first render it is the
+    // empty `{}` placeholder, in which case the head stands alone.
+    if inner.len() <= 2 || !inner.starts_with('{') {
+        return head;
+    }
+    format!("{},{}", &head[..head.len() - 1], &inner[1..])
 }
 
 // ---------------------------------------------------------------------------
@@ -575,8 +827,7 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared, cfg: &HttpConfig) {
             respond(&mut stream, 200, &[], &body.to_string());
         }
         ("GET", "/stats") => {
-            let body = shared.stats.lock().expect("stats lock").clone();
-            respond(&mut stream, 200, &[], &body);
+            respond(&mut stream, 200, &[], &stats_body(shared));
         }
         ("POST", "/v1/generate") => handle_generate(&mut stream, &head, leftover, shared, cfg),
         ("GET", _) => respond_error(&mut stream, 404, "unknown path"),
@@ -745,6 +996,7 @@ fn handle_generate(
             Err(now) => cur = now,
         }
     }
+    shared.counters.admit();
     let id = req.id;
     let (tx, rx) = std::sync::mpsc::channel::<Event>();
     shared
@@ -771,6 +1023,7 @@ fn handle_generate(
         if reclaimed {
             shared.router.lock().expect("router lock").note_done(&lane_name);
             shared.pending.fetch_sub(1, Ordering::AcqRel);
+            shared.counters.fail();
             shared.rejected_503.fetch_add(1, Ordering::Relaxed);
             return respond_retry(stream, 503, "server draining", cfg.retry_after_s);
         }
@@ -1186,6 +1439,58 @@ mod tests {
             let e = parse_generate(body, &cfg).unwrap_err();
             assert!(e.contains(frag), "{body}: expected {frag:?} in {e:?}");
         }
+    }
+
+    /// The §15 counter fix at unit scope: concurrent admit/complete/fail
+    /// writers against a spinning snapshot reader — every snapshot must
+    /// satisfy `admitted >= completed + failed` (no torn triple), which
+    /// plain per-field atomic reads do NOT guarantee. The socket-level
+    /// version (hammering `/stats` during a burst) lives in
+    /// `tests/http_serve.rs`.
+    #[test]
+    fn seq_counters_snapshot_is_consistent_under_contention() {
+        use std::sync::Arc;
+        let c = Arc::new(SeqCounters::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let writers: Vec<_> = (0..2)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..2000 {
+                        c.admit();
+                        c.complete();
+                    }
+                    for _ in 0..500 {
+                        c.admit();
+                        c.fail();
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let c = c.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = c.snapshot();
+                    assert!(
+                        snap.admitted >= snap.completed + snap.failed,
+                        "torn counter snapshot: {snap:?}"
+                    );
+                    reads += 1;
+                }
+                reads
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        assert!(reader.join().unwrap() > 0, "reader never ran");
+        let fin = c.snapshot();
+        assert_eq!((fin.admitted, fin.completed, fin.failed), (5000, 4000, 1000));
+        assert_eq!(fin.in_flight(), 0);
     }
 
     #[test]

@@ -24,12 +24,17 @@
 //! * [`http`] — the zero-dependency HTTP/1.1 front-end that puts the
 //!   scheduler behind a real socket, with per-token streaming over chunked
 //!   transfer encoding (DESIGN.md §14).
+//! * [`replica`] — N engine replicas of one lane behind pluggable
+//!   placement (least-loaded / prefix-affine rendezvous hash), per-replica
+//!   Up/Draining/Down health with heartbeat-driven failover, and the
+//!   rolling hot-upgrade state machine (DESIGN.md §15).
 
 pub mod batcher;
 pub mod engine;
 pub mod http;
 pub mod metrics;
 pub mod prefix_cache;
+pub mod replica;
 pub mod router;
 pub mod scheduler;
 pub mod state_pool;

@@ -231,6 +231,19 @@ impl PrefixCache {
         inner.lru.insert(tick, key);
     }
 
+    /// Drop every cached snapshot. Called by `Engine::hot_swap_weights`
+    /// (DESIGN.md §15): a snapshot encodes the weights that produced it, so
+    /// resident entries are poison the instant new weights go live.
+    /// Cumulative hit/miss/insert/evict counters survive — only entries die
+    /// (the cleared bytes are not counted as evictions; they were not
+    /// pushed out by pressure).
+    pub fn clear(&self) {
+        let mut inner = self.lock();
+        inner.map.clear();
+        inner.lru.clear();
+        inner.used_bytes = 0;
+    }
+
     pub fn stats(&self) -> CacheStats {
         let inner = self.lock();
         CacheStats {
@@ -346,6 +359,19 @@ mod tests {
         let s = c.stats();
         assert_eq!(s.inserts, 1, "duplicate insert only refreshes recency");
         assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn clear_drops_entries_but_keeps_cumulative_counters() {
+        let c = PrefixCache::new(1 << 20);
+        let p = toks(40, 7);
+        c.insert("m", "dense", &p[..32], &[1.0; 8], &[1.0; 4]);
+        assert!(c.longest_prefix("m", "dense", &p, 32).is_some());
+        c.clear();
+        let s = c.stats();
+        assert_eq!((s.entries, s.used_bytes), (0, 0));
+        assert_eq!((s.hits, s.inserts, s.evictions), (1, 1, 0));
+        assert!(c.longest_prefix("m", "dense", &p, 32).is_none(), "stale snapshot served");
     }
 
     #[test]

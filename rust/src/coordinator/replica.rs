@@ -1,0 +1,640 @@
+//! Multi-replica engine pool (DESIGN.md §15): N engine replicas of one
+//! serving lane behind pluggable placement, per-replica health, and a
+//! rolling hot-upgrade state machine.
+//!
+//! A [`ReplicaPool`] owns one [`Scheduler`] per replica engine and fans a
+//! lane's requests across them. Because every serving path samples with
+//! greedy first-max-wins argmax and prompts flow through prefill/decode
+//! independently of their frame neighbours (DESIGN.md §6), **placement is
+//! bit-invisible**: the tokens a request generates do not depend on which
+//! replica served it, how loaded that replica was, or who shared its
+//! frames. That is the correctness contract `tests/replica_pool.rs` and
+//! the `replicas` section of `BENCH_runtime.json` pin — any pool
+//! configuration must produce token streams identical to a single-engine
+//! scheduler.
+//!
+//! ## Placement
+//!
+//! * [`Placement::LeastLoaded`] — fewest in-flight sequences wins, ties to
+//!   the lowest index. Best spread under mixed request lengths.
+//! * [`Placement::PrefixHash`] — rendezvous (highest-random-weight) hash of
+//!   the prompt's first prefill-frame of tokens. Requests sharing a
+//!   chunk-aligned prefix land on the same replica, so that replica's
+//!   [`PrefixCache`](super::prefix_cache::PrefixCache) stays hot
+//!   (DESIGN.md §12) without any cross-replica cache traffic. Rendezvous
+//!   hashing keeps the remap bound on membership change minimal — when a
+//!   replica joins or leaves, only the keys whose winner changed move
+//!   (≈ K/N of them; property-tested in `tests/prop_replica.rs`).
+//!
+//! ## Health + heartbeat
+//!
+//! Each replica is `Up`, `Draining`, or `Down`
+//! ([`Health`]), driven by a heartbeat window of its recent step outcomes:
+//! a step error marks the replica Down immediately (failover), and a
+//! replica whose recent mean step latency exceeds the configured threshold
+//! drains until it cools. Non-`Up` replicas **admit nothing** — their
+//! queued (never-prefilled, zero tokens emitted) requests re-route to a
+//! healthy replica losslessly via [`Scheduler::take_queued`], while
+//! `Draining` residents finish where they are and `Down` residents fail
+//! typed (their sinks already fired; replaying them elsewhere would
+//! duplicate observed tokens).
+//!
+//! ## Rolling upgrade
+//!
+//! [`ReplicaPool::advance_upgrade`] walks replicas one at a time:
+//! Up → Draining (shed queue, finish residents) → idle → hot-swap weights
+//! ([`Engine::hot_swap_weights`], which also clears the prefix cache) →
+//! Up. At most one replica is out of service at any tick; a sequence never
+//! spans a swap, so weights are never mixed within one request.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::runtime::DeviceWeights;
+
+use super::engine::Engine;
+use super::prefix_cache::fnv1a_tokens;
+use super::scheduler::{Scheduler, TokenSink};
+use super::{Request, Response};
+
+/// Heartbeat window length: step outcomes per replica the health policy
+/// looks back over.
+const WINDOW: usize = 32;
+
+/// Per-replica serving state (DESIGN.md §15 state machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Serving and admitting.
+    Up,
+    /// Finishing residents, admitting nothing (shutdown shed, latency
+    /// shed, or awaiting an upgrade swap).
+    Draining,
+    /// Failed: residents failed typed, queue re-routed, scheduler reset.
+    Down,
+}
+
+impl Health {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Health::Up => "up",
+            Health::Draining => "draining",
+            Health::Down => "down",
+        }
+    }
+}
+
+/// Placement policy for new requests across a pool's `Up` replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Fewest in-flight sequences wins; ties break to the lowest index.
+    LeastLoaded,
+    /// Rendezvous hash of the prompt's first prefill-frame of tokens —
+    /// prefix-affine, so per-replica prefix caches stay hot.
+    PrefixHash,
+}
+
+impl Placement {
+    /// Parse the `--placement` flag value.
+    pub fn from_name(name: &str) -> Result<Placement> {
+        match name {
+            "least-loaded" | "" => Ok(Placement::LeastLoaded),
+            "hash" | "prefix-hash" => Ok(Placement::PrefixHash),
+            other => Err(anyhow!("unknown placement {other:?} (expected least-loaded|hash)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::LeastLoaded => "least-loaded",
+            Placement::PrefixHash => "hash",
+        }
+    }
+}
+
+/// SplitMix64 finalizer: a cheap full-avalanche bijection on `u64` — the
+/// mixing step rendezvous scoring relies on.
+pub fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    x ^= x >> 33;
+    x
+}
+
+/// Stable per-replica rendezvous seed. Depends only on the replica's
+/// index, never on pool membership — which is exactly why a join/leave
+/// remaps only the keys whose argmax changed (`tests/prop_replica.rs`).
+pub fn replica_seed(index: usize) -> u64 {
+    mix64(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(index as u64 + 1))
+}
+
+/// Rendezvous score of `key` on the replica with `seed`.
+pub fn hrw_score(key: u64, seed: u64) -> u64 {
+    mix64(key ^ seed)
+}
+
+/// Highest-random-weight winner among `eligible` replica indices: the
+/// index with the maximal [`hrw_score`]; equal scores (measure-zero under
+/// `mix64`'s avalanche, but the tie-break must still be total) go to the
+/// lowest index. `None` iff `eligible` is empty.
+pub fn pick_hrw(key: u64, eligible: &[usize]) -> Option<usize> {
+    eligible.iter().copied().max_by(|&a, &b| {
+        hrw_score(key, replica_seed(a))
+            .cmp(&hrw_score(key, replica_seed(b)))
+            .then(b.cmp(&a)) // equal scores: lower index wins the max
+    })
+}
+
+/// Placement key of a prompt: FNV-1a over its first `chunk` tokens (the
+/// whole prompt when shorter). `chunk` is the engine's prefill frame — the
+/// same boundary the prefix cache snapshots on — so requests sharing a
+/// cached system-prompt prefix hash identically and stay replica-local.
+pub fn placement_key(prompt: &[i32], chunk: usize) -> u64 {
+    let n = if chunk == 0 { prompt.len() } else { prompt.len().min(chunk) };
+    fnv1a_tokens(&prompt[..n])
+}
+
+/// A request the pool could not serve: mid-stream on a replica that died
+/// (typed, never silently dropped), or re-routable but with no healthy
+/// replica left to take it.
+#[derive(Debug, Clone)]
+pub struct PoolFailure {
+    pub id: u64,
+    /// Replica the request was on when it failed.
+    pub replica: usize,
+    pub error: String,
+}
+
+/// Counter snapshot of one replica for `/stats` and the bench report.
+#[derive(Debug, Clone)]
+pub struct ReplicaStat {
+    pub health: Health,
+    pub in_flight: usize,
+    pub completed: u64,
+    pub failed: u64,
+    pub prefills: u64,
+    pub decode_steps: u64,
+    pub preemptions: u64,
+    /// Errors in the recent heartbeat window.
+    pub recent_errors: u32,
+    /// Mean step wall time over the recent heartbeat window, µs.
+    pub mean_step_us: u64,
+    pub weights_tag: String,
+}
+
+/// Sliding window of recent step outcomes — the heartbeat the health
+/// policy reads.
+#[derive(Default)]
+struct Heartbeat {
+    window: VecDeque<(bool, u64)>,
+    errors: u32,
+    sum_us: u64,
+}
+
+impl Heartbeat {
+    fn record(&mut self, ok: bool, us: u64) {
+        self.window.push_back((ok, us));
+        if !ok {
+            self.errors += 1;
+        }
+        self.sum_us += us;
+        while self.window.len() > WINDOW {
+            let (old_ok, old_us) = self.window.pop_front().expect("non-empty");
+            if !old_ok {
+                self.errors -= 1;
+            }
+            self.sum_us -= old_us;
+        }
+    }
+
+    fn mean_us(&self) -> u64 {
+        if self.window.is_empty() {
+            0
+        } else {
+            self.sum_us / self.window.len() as u64
+        }
+    }
+
+    fn full(&self) -> bool {
+        self.window.len() >= WINDOW
+    }
+
+    fn reset(&mut self) {
+        self.window.clear();
+        self.errors = 0;
+        self.sum_us = 0;
+    }
+}
+
+struct Replica<'e> {
+    engine: &'e Engine,
+    sched: Scheduler<'e>,
+    health: Health,
+    /// Whether the current `Draining` was imposed by the latency policy
+    /// (auto-recovers when the replica cools or empties) rather than by an
+    /// explicit drain or an upgrade (which never auto-recover).
+    slow_drain: bool,
+    beat: Heartbeat,
+    completed: u64,
+    failed: u64,
+}
+
+/// N engine replicas of one serving lane behind one submit/step façade —
+/// same driving surface as a single [`Scheduler`], so callers (the HTTP
+/// front-end, the trace path, the benches) swap in transparently.
+pub struct ReplicaPool<'e> {
+    replicas: Vec<Replica<'e>>,
+    placement: Placement,
+    /// Mean-recent-step-latency threshold (µs) above which an `Up` replica
+    /// drains until it cools to half the threshold. `None` disables the
+    /// latency policy (errors still drive `Down`).
+    slow_step_us: Option<u64>,
+    /// Prefix length the hash placement keys on (the engines' prefill
+    /// frame).
+    chunk: usize,
+    /// Requests moved off a non-`Up` replica before prefill (lossless).
+    pub reroutes: u64,
+    failures: Vec<PoolFailure>,
+}
+
+impl<'e> ReplicaPool<'e> {
+    /// A pool over `engines`, all replicas of the **same** lane (same
+    /// model + variant — placement must be free to pick any of them).
+    pub fn new(engines: &'e [Engine], placement: Placement) -> Result<ReplicaPool<'e>> {
+        ensure!(!engines.is_empty(), "replica pool needs at least one engine");
+        for e in engines {
+            ensure!(
+                e.model_name == engines[0].model_name && e.variant == engines[0].variant,
+                "replica pool mixes lanes: {}/{} vs {}/{} (one pool serves one lane; \
+                 cross-lane routing is the Router's job)",
+                e.model_name,
+                e.variant,
+                engines[0].model_name,
+                engines[0].variant
+            );
+        }
+        Ok(ReplicaPool {
+            replicas: engines
+                .iter()
+                .map(|engine| Replica {
+                    engine,
+                    sched: Scheduler::new(engine),
+                    health: Health::Up,
+                    slow_drain: false,
+                    beat: Heartbeat::default(),
+                    completed: 0,
+                    failed: 0,
+                })
+                .collect(),
+            placement,
+            slow_step_us: None,
+            chunk: engines[0].prefill_len,
+            reroutes: 0,
+            failures: Vec::new(),
+        })
+    }
+
+    /// Enable the latency arm of the heartbeat: a full window whose mean
+    /// step time exceeds `us` drains the replica until it cools to `us/2`
+    /// (or empties).
+    pub fn with_slow_threshold(mut self, us: Option<u64>) -> Self {
+        self.slow_step_us = us;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    pub fn health(&self, r: usize) -> Health {
+        self.replicas[r].health
+    }
+
+    /// Explicitly drain replica `r`: admit nothing, finish residents,
+    /// re-route its queue on the next heartbeat. Never auto-recovers.
+    pub fn set_draining(&mut self, r: usize) {
+        if self.replicas[r].health == Health::Up {
+            self.replicas[r].health = Health::Draining;
+            self.replicas[r].slow_drain = false;
+        }
+    }
+
+    /// Return a Draining or Down replica to service with a clean slate.
+    pub fn revive(&mut self, r: usize) {
+        if self.replicas[r].health == Health::Down {
+            self.replicas[r].sched = Scheduler::new(self.replicas[r].engine);
+        }
+        self.replicas[r].health = Health::Up;
+        self.replicas[r].slow_drain = false;
+        self.replicas[r].beat.reset();
+    }
+
+    /// Typed failures accumulated since the last call (mid-stream requests
+    /// on a dead replica, or re-routes with no healthy target). Callers
+    /// own delivering these to waiters — the HTTP loop turns them into
+    /// `Fail` events; nothing here hangs.
+    pub fn take_failures(&mut self) -> Vec<PoolFailure> {
+        std::mem::take(&mut self.failures)
+    }
+
+    /// True when every replica's scheduler is empty.
+    pub fn is_idle(&self) -> bool {
+        self.replicas.iter().all(|r| r.sched.is_idle())
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.replicas.iter().map(|r| r.sched.in_flight()).sum()
+    }
+
+    /// Placement decision for `prompt` over the current `Up` set; `None`
+    /// when no replica is admitting.
+    fn pick_for(&self, prompt: &[i32]) -> Option<usize> {
+        let eligible: Vec<usize> = (0..self.replicas.len())
+            .filter(|&i| self.replicas[i].health == Health::Up)
+            .collect();
+        match self.placement {
+            Placement::LeastLoaded => {
+                eligible.into_iter().min_by_key(|&i| (self.replicas[i].sched.in_flight(), i))
+            }
+            Placement::PrefixHash => pick_hrw(placement_key(prompt, self.chunk), &eligible),
+        }
+    }
+
+    /// Submit to the placed replica; returns its index (observability +
+    /// the Draining-admits-nothing test). Fails only when no replica is
+    /// `Up` — placement never silently queues on a draining/dead replica.
+    pub fn submit(&mut self, req: Request) -> Result<usize> {
+        let r = self
+            .pick_for(&req.prompt)
+            .ok_or_else(|| anyhow!("no healthy replica (all draining or down)"))?;
+        self.replicas[r].sched.submit(req);
+        Ok(r)
+    }
+
+    /// [`Self::submit`] with a streaming [`TokenSink`] (survives a
+    /// pre-prefill re-route: the sink moves with the request).
+    pub fn submit_with_sink(&mut self, req: Request, sink: TokenSink) -> Result<usize> {
+        let r = self
+            .pick_for(&req.prompt)
+            .ok_or_else(|| anyhow!("no healthy replica (all draining or down)"))?;
+        self.replicas[r].sched.submit_with_sink(req, sink);
+        Ok(r)
+    }
+
+    /// Move replica `r`'s queued (never-prefilled) requests to healthy
+    /// replicas. Zero tokens have been emitted for these, so the move is
+    /// invisible to clients; with nowhere to go they fail typed instead of
+    /// hanging.
+    fn shed_queued(&mut self, r: usize) {
+        let moved = self.replicas[r].sched.take_queued();
+        for (req, sink) in moved {
+            match self.pick_for(&req.prompt) {
+                Some(target) => {
+                    self.reroutes += 1;
+                    match sink {
+                        Some(s) => self.replicas[target].sched.submit_with_sink(req, s),
+                        None => self.replicas[target].sched.submit(req),
+                    }
+                }
+                None => {
+                    self.replicas[r].failed += 1;
+                    self.failures.push(PoolFailure {
+                        id: req.id,
+                        replica: r,
+                        error: "no healthy replica to re-route to".to_string(),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Replica `r`'s step failed: mark it Down, fail its mid-stream
+    /// sequences typed (their sinks already fired — transparent replay
+    /// would duplicate observed tokens), re-route its untouched queue, and
+    /// reset its scheduler so a later [`Self::revive`] starts clean.
+    fn fail_replica(&mut self, r: usize, err: &str) {
+        self.replicas[r].health = Health::Down;
+        self.replicas[r].slow_drain = false;
+        let active = self.replicas[r].sched.active_ids();
+        self.replicas[r].failed += active.len() as u64;
+        for id in active {
+            self.failures.push(PoolFailure {
+                id,
+                replica: r,
+                error: format!("replica {r} down: {err}"),
+            });
+        }
+        self.shed_queued(r);
+        self.replicas[r].sched = Scheduler::new(self.replicas[r].engine);
+    }
+
+    /// Evaluate every replica's heartbeat window: flip `Up` replicas whose
+    /// recent mean step latency exceeds the threshold to `Draining`,
+    /// recover latency-drained replicas that cooled or emptied, and shed
+    /// the queue of every non-`Up` replica.
+    fn heartbeat(&mut self) {
+        for r in 0..self.replicas.len() {
+            if let Some(thr) = self.slow_step_us {
+                let rep = &mut self.replicas[r];
+                match rep.health {
+                    Health::Up if rep.beat.full() && rep.beat.mean_us() > thr => {
+                        rep.health = Health::Draining;
+                        rep.slow_drain = true;
+                    }
+                    Health::Draining
+                        if rep.slow_drain
+                            && (rep.beat.mean_us() <= thr / 2 || rep.sched.is_idle()) =>
+                    {
+                        rep.health = Health::Up;
+                        rep.slow_drain = false;
+                        rep.beat.reset();
+                    }
+                    _ => {}
+                }
+            }
+            if self.replicas[r].health != Health::Up {
+                self.shed_queued(r);
+            }
+        }
+    }
+
+    /// One pool iteration: heartbeat, then step every live replica that
+    /// has work. Replica errors are absorbed here — failover runs inline
+    /// ([`Self::fail_replica`]) and the affected requests surface through
+    /// [`Self::take_failures`], so the pool itself never errors out from a
+    /// single replica's death.
+    pub fn step(&mut self) -> Vec<Response> {
+        self.heartbeat();
+        let mut done = Vec::new();
+        for r in 0..self.replicas.len() {
+            if self.replicas[r].health == Health::Down || self.replicas[r].sched.is_idle() {
+                continue;
+            }
+            let t0 = Instant::now();
+            match self.replicas[r].sched.step() {
+                Ok(resps) => {
+                    self.replicas[r].beat.record(true, t0.elapsed().as_micros() as u64);
+                    self.replicas[r].completed += resps.len() as u64;
+                    done.extend(resps);
+                }
+                Err(e) => {
+                    self.replicas[r].beat.record(false, 0);
+                    self.fail_replica(r, &format!("{e:#}"));
+                }
+            }
+        }
+        done
+    }
+
+    /// Step until idle, collecting every response. Terminates even under
+    /// failures: a Down replica's scheduler is reset (idle), its work
+    /// re-routed or failed typed.
+    pub fn drain(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step());
+        }
+        out
+    }
+
+    /// Drive one tick of a rolling upgrade to registry tag `tag`. At most
+    /// one replica is out of service at a time; the rest keep serving.
+    /// Sequence per replica (DESIGN.md §15): Up → Draining (queue shed,
+    /// residents finish) → idle → `hot_swap_weights(load()?, tag)` → Up.
+    /// `Down` replicas swap immediately (their scheduler is already reset)
+    /// but stay Down. Returns `Ok(true)` once every replica carries `tag`.
+    /// `load` runs once per swap — typically
+    /// `|| registry.hot_load(&rt, &model, tag)`.
+    pub fn advance_upgrade<F>(&mut self, tag: &str, mut load: F) -> Result<bool>
+    where
+        F: FnMut() -> Result<DeviceWeights>,
+    {
+        let Some(r) =
+            (0..self.replicas.len()).find(|&i| self.replicas[i].engine.weights_tag() != tag)
+        else {
+            return Ok(true);
+        };
+        match self.replicas[r].health {
+            Health::Up => {
+                self.replicas[r].health = Health::Draining;
+                self.replicas[r].slow_drain = false;
+                self.shed_queued(r);
+            }
+            Health::Draining if self.replicas[r].sched.is_idle() => {
+                self.replicas[r].engine.hot_swap_weights(load()?, tag);
+                self.replicas[r].health = Health::Up;
+            }
+            Health::Down => {
+                self.replicas[r].engine.hot_swap_weights(load()?, tag);
+            }
+            Health::Draining => {} // residents still finishing
+        }
+        Ok(false)
+    }
+
+    /// Per-replica counter snapshot for `/stats` and the bench report.
+    pub fn replica_stats(&self) -> Vec<ReplicaStat> {
+        self.replicas
+            .iter()
+            .map(|rep| ReplicaStat {
+                health: rep.health,
+                in_flight: rep.sched.in_flight(),
+                completed: rep.completed,
+                failed: rep.failed,
+                prefills: rep.sched.prefill_calls,
+                decode_steps: rep.sched.decode_steps,
+                preemptions: rep.sched.preemptions,
+                recent_errors: rep.beat.errors,
+                mean_step_us: rep.beat.mean_us(),
+                weights_tag: rep.engine.weights_tag(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_parse_roundtrip() {
+        assert_eq!(Placement::from_name("least-loaded").unwrap(), Placement::LeastLoaded);
+        assert_eq!(Placement::from_name("").unwrap(), Placement::LeastLoaded);
+        assert_eq!(Placement::from_name("hash").unwrap(), Placement::PrefixHash);
+        assert_eq!(Placement::from_name("prefix-hash").unwrap(), Placement::PrefixHash);
+        assert!(Placement::from_name("random").is_err());
+        for p in [Placement::LeastLoaded, Placement::PrefixHash] {
+            assert_eq!(Placement::from_name(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn hrw_pick_is_deterministic_and_membership_stable() {
+        let key = placement_key(&[5, 6, 7, 8], 32);
+        let full: Vec<usize> = (0..4).collect();
+        let winner = pick_hrw(key, &full).unwrap();
+        assert_eq!(pick_hrw(key, &full).unwrap(), winner, "pure function");
+        // Removing a non-winning replica never moves the key: the winner's
+        // score is unchanged and still maximal over the subset.
+        let without_loser: Vec<usize> =
+            full.iter().copied().filter(|&i| i != (winner + 1) % 4).collect();
+        assert_eq!(pick_hrw(key, &without_loser).unwrap(), winner);
+        assert!(pick_hrw(key, &[]).is_none());
+    }
+
+    #[test]
+    fn placement_key_is_prefix_bounded() {
+        let long: Vec<i32> = (0..100).collect();
+        // Only the first `chunk` tokens matter — a shared system prompt
+        // maps to one replica regardless of the request's tail.
+        assert_eq!(placement_key(&long, 32), placement_key(&long[..32], 32));
+        let mut other = long.clone();
+        other[80] = -9;
+        assert_eq!(placement_key(&long, 32), placement_key(&other, 32));
+        other[3] = -9;
+        assert_ne!(placement_key(&long, 32), placement_key(&other, 32));
+        // chunk == 0 hashes the whole prompt (degenerate but total).
+        assert_ne!(placement_key(&long, 0), placement_key(&long[..32], 0));
+    }
+
+    #[test]
+    fn heartbeat_window_arithmetic() {
+        let mut b = Heartbeat::default();
+        assert_eq!(b.mean_us(), 0);
+        for _ in 0..WINDOW {
+            b.record(true, 100);
+        }
+        assert!(b.full());
+        assert_eq!((b.mean_us(), b.errors), (100, 0));
+        // Window slides: an error ages out after WINDOW more samples.
+        b.record(false, 0);
+        assert_eq!(b.errors, 1);
+        for _ in 0..WINDOW {
+            b.record(true, 200);
+        }
+        assert_eq!((b.mean_us(), b.errors), (200, 0));
+        b.reset();
+        assert_eq!((b.mean_us(), b.errors), (0, 0));
+    }
+
+    #[test]
+    fn mix64_avalanche_sanity() {
+        // Pure bijection sanity: distinct inputs stay distinct, and a
+        // 1-bit flip moves many output bits (weak avalanche check).
+        assert_ne!(mix64(0), mix64(1));
+        let d = (mix64(0x1234) ^ mix64(0x1235)).count_ones();
+        assert!(d >= 16, "1-bit flip moved only {d} output bits");
+        assert_ne!(replica_seed(0), replica_seed(1));
+    }
+}

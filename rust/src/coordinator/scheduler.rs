@@ -165,6 +165,38 @@ impl<'e> Scheduler<'e> {
         &self.store
     }
 
+    /// Ids of sequences that have already produced at least one token here
+    /// (prefilled-and-ready or resident in a decode lane). On a replica
+    /// failure these cannot be re-routed transparently — their sinks have
+    /// fired, so replaying them elsewhere would duplicate observed tokens —
+    /// and the pool fails them typed instead (DESIGN.md §15). Complements
+    /// [`Self::take_queued`].
+    pub fn active_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.ready.iter().map(|s| s.id).collect();
+        ids.extend(self.lanes.iter().flatten().map(|s| s.id));
+        ids
+    }
+
+    /// Pull every submitted-but-not-yet-prefilled request back out, each
+    /// with its streaming sink if one was installed. These requests have
+    /// produced **zero** tokens — the admit loop copies a chunk out but
+    /// drains the queue only after `Engine::prefill` returns Ok — so
+    /// re-submitting them to another scheduler is lossless: the seam the
+    /// replica pool's failover and drain re-route rides on (DESIGN.md §15).
+    /// `submitted` is decremented by the count taken, keeping per-scheduler
+    /// accounting at submitted == completed + in_flight.
+    pub fn take_queued(&mut self) -> Vec<(Request, Option<TokenSink>)> {
+        let drained: Vec<(Request, Instant)> = self.queue.drain(..).collect();
+        self.submitted -= drained.len() as u64;
+        drained
+            .into_iter()
+            .map(|(r, _)| {
+                let sink = self.sinks.remove(&r.id);
+                (r, sink)
+            })
+            .collect()
+    }
+
     /// Prefilled sequences waiting beyond the currently free lanes — the
     /// ready-ahead depth the store's extra `engine.batch` slots exist for.
     pub fn ready_ahead(&self) -> usize {

@@ -24,6 +24,7 @@ use anyhow::{bail, Context, Result};
 use tor_ssm::bench::{figures, tables, Ctx};
 use tor_ssm::coordinator::engine::Engine;
 use tor_ssm::coordinator::prefix_cache::PrefixCache;
+use tor_ssm::coordinator::replica::{Placement, ReplicaPool};
 use tor_ssm::coordinator::router::{Policy, Router};
 use tor_ssm::coordinator::scheduler::Scheduler;
 use tor_ssm::coordinator::metrics::Metrics;
@@ -96,6 +97,10 @@ commands:
   golden                       rust-vs-python numerics cross-check (pjrt backend)
   serve --requests N [--policy explicit|least-loaded|cost-aware]
         [--lanes dense,unified@0.2,prune@0.2,merge@0.2,random@0.2]
+        [--replicas N] engine replicas per lane behind a ReplicaPool
+        (DESIGN.md §15); [--placement least-loaded|hash] places requests
+        across a lane's replicas (hash = prefix-affine rendezvous, keeps
+        per-replica prefix caches hot) — placement never changes tokens
         [--listen ADDR]              serve HTTP/1.1 on ADDR instead of the
         synthetic trace: POST /v1/generate (JSON; set \"stream\":true for
         SSE-over-chunked token streaming), GET /healthz, GET /stats;
@@ -426,31 +431,48 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
         bail!("--lanes must name at least one variant (e.g. dense,prune@0.2,merge@0.2)");
     }
     let lanes: Vec<&str> = lanes_owned.iter().map(|s| s.as_str()).collect();
+    // Replica pool topology (DESIGN.md §15): N engines per lane behind a
+    // ReplicaPool; placement spreads requests across a lane's replicas
+    // without ever changing the tokens they generate.
+    let replicas = args.usize_or("replicas", 1);
+    if replicas == 0 {
+        bail!("--replicas must be >= 1");
+    }
+    let placement = Placement::from_name(&args.get_or("placement", "least-loaded"))?;
     if backend_of(args) == "reference" {
         println!("exec: {}", tor_ssm::runtime::kernels::exec_summary());
     }
-    println!("building engines for {lanes:?}...");
-    let mut engines: Vec<Engine> = lanes
-        .iter()
-        .map(|v| Engine::new(&rt, &man, &me, &w, v))
-        .collect::<Result<_>>()?;
+    println!("building engines for {lanes:?} (x{replicas} replicas)...");
+    // Lane-major: all of lane 0's replicas first — the layout
+    // http::serve_pooled and ReplicaPool::new expect.
+    let mut engines: Vec<Engine> = Vec::with_capacity(lanes.len() * replicas);
+    for v in &lanes {
+        for _ in 0..replicas {
+            engines.push(Engine::new(&rt, &man, &me, &w, v)?);
+        }
+    }
     // Shared-prefix requests resume from chunk-boundary state snapshots
-    // (DESIGN.md §12); the cache is per-lane because keys partition by
-    // (model, policy variant) anyway.
+    // (DESIGN.md §12); the cache is per-replica because snapshots encode
+    // the engine's resident weights (and keys partition by model/variant
+    // anyway) — `--placement hash` keeps each one hot by prefix affinity.
     for e in &mut engines {
         e.attach_prefix_cache(std::sync::Arc::new(PrefixCache::new(8 << 20)));
     }
     if let Some(listen) = args.get("listen") {
-        return serve_http(listen, &engines, &lanes_owned, policy, args);
+        let pool = tor_ssm::coordinator::http::PoolConfig { replicas, placement };
+        return serve_http(listen, &engines, &lanes_owned, policy, pool, args);
     }
     let mut router = Router::new(policy, &lanes);
-    let mut schedulers: Vec<Scheduler> = engines.iter().map(Scheduler::new).collect();
+    let mut pools: Vec<ReplicaPool> = engines
+        .chunks(replicas)
+        .map(|chunk| ReplicaPool::new(chunk, placement))
+        .collect::<Result<_>>()?;
     let mut metrics = Metrics::default();
     let max_prompt = tor_ssm::fixtures::trace_max_prompt(&engines);
-    serve_trace(
+    let failed = serve_trace_pooled(
         &lanes,
         &mut router,
-        &mut schedulers,
+        &mut pools,
         &mut metrics,
         n_requests,
         gen_tokens,
@@ -458,22 +480,45 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
         max_prompt,
         me.vocab_size,
     )?;
-    println!("routing: {} requests over {:?}", router.routed, lanes);
+    println!(
+        "routing: {} requests over {:?} (replicas={replicas} placement={})",
+        router.routed,
+        lanes,
+        placement.name()
+    );
     println!("{}", metrics.summary());
-    for ((lane, s), e) in lanes.iter().zip(&schedulers).zip(&engines) {
-        let cs = e.prefix_cache().map(|c| c.stats()).unwrap_or_default();
+    for (li, lane) in lanes.iter().enumerate() {
+        let mut cache = tor_ssm::coordinator::prefix_cache::CacheStats::default();
+        for e in &engines[li * replicas..(li + 1) * replicas] {
+            if let Some(c) = e.prefix_cache() {
+                let one = c.stats();
+                cache.hits += one.hits;
+                cache.misses += one.misses;
+            }
+        }
+        for (ri, rs) in pools[li].replica_stats().iter().enumerate() {
+            println!(
+                "  {lane:<10} r{ri} [{}] prefills={} decode_steps={} preempts={} \
+                 completed={} failed={} tag={}",
+                rs.health.name(),
+                rs.prefills,
+                rs.decode_steps,
+                rs.preemptions,
+                rs.completed,
+                rs.failed,
+                rs.weights_tag
+            );
+        }
         println!(
-            "  {lane:<10} prefills={} decode_steps={} peak_state={} slots ({} B) \
-             preempts={} cache_hits={} misses={} hit_rate={:.2}",
-            s.prefill_calls,
-            s.decode_steps,
-            s.store().high_water(),
-            s.store().peak_bytes(),
-            s.preemptions,
-            cs.hits,
-            cs.misses,
-            cs.hit_rate()
+            "  {lane:<10} reroutes={} cache_hits={} misses={} hit_rate={:.2}",
+            pools[li].reroutes,
+            cache.hits,
+            cache.misses,
+            cache.hit_rate()
         );
+    }
+    if failed > 0 {
+        bail!("{failed} trace requests failed (no healthy replica)");
     }
     Ok(())
 }
@@ -512,6 +557,7 @@ fn serve_http(
     engines: &[Engine],
     lanes: &[String],
     policy: Policy,
+    pool: tor_ssm::coordinator::http::PoolConfig,
     args: &Args,
 ) -> Result<()> {
     use tor_ssm::coordinator::http::{self, HttpConfig};
@@ -526,13 +572,72 @@ fn serve_http(
         ..defaults
     };
     install_drain_signals();
-    println!("listening on http://{addr} lanes={lanes:?} queue_cap={}", cfg.queue_cap);
+    println!(
+        "listening on http://{addr} lanes={lanes:?} queue_cap={} replicas={} placement={}",
+        cfg.queue_cap,
+        pool.replicas,
+        pool.placement.name()
+    );
     println!("POST /v1/generate | GET /healthz | GET /stats — SIGINT/SIGTERM drains");
-    let report = http::serve(engines, lanes, policy, listener, cfg, &SHUTDOWN)?;
+    let report = http::serve_pooled(engines, lanes, policy, pool, listener, cfg, &SHUTDOWN)?;
     println!("drained: {}", report.metrics.summary());
     println!("rejected: {} over-capacity (429), {} during drain (503)",
         report.rejected_429, report.rejected_503);
     Ok(())
+}
+
+/// The `repro serve` trace loop over replica pools: same length-diverse
+/// synthetic workload as [`serve_trace`], driven through one
+/// [`ReplicaPool`] per lane (DESIGN.md §15). Returns the number of
+/// requests the pools failed (zero on healthy engines — the trace has no
+/// fault injection).
+#[allow(clippy::too_many_arguments)]
+fn serve_trace_pooled(
+    lanes: &[&str],
+    router: &mut Router,
+    pools: &mut [ReplicaPool<'_>],
+    metrics: &mut Metrics,
+    n_requests: usize,
+    max_gen: usize,
+    prefill_seq_len: usize,
+    max_prompt_len: usize,
+    vocab_size: usize,
+) -> Result<u64> {
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let trace = tor_ssm::fixtures::synth_requests(
+        &mut rng,
+        n_requests,
+        max_gen,
+        prefill_seq_len,
+        max_prompt_len,
+        vocab_size,
+        lanes,
+    );
+    let mut failed = 0u64;
+    for req in trace {
+        let lane = router.route(&req)?;
+        let li = lanes.iter().position(|l| *l == lane).unwrap();
+        router.note_enqueued(&lane);
+        pools[li].submit(req)?;
+        metrics.requests += 1;
+        for (pi, p) in pools.iter_mut().enumerate() {
+            for resp in p.step() {
+                metrics.record_response(&resp);
+                router.note_done(lanes[pi]);
+            }
+            failed += p.take_failures().len() as u64;
+        }
+    }
+    for (pi, p) in pools.iter_mut().enumerate() {
+        for resp in p.drain() {
+            metrics.record_response(&resp);
+            router.note_done(lanes[pi]);
+        }
+        failed += p.take_failures().len() as u64;
+    }
+    metrics.wall = t0.elapsed();
+    Ok(failed)
 }
 
 /// The shared open-loop serving trace (used by `serve` and `demo`): feed a

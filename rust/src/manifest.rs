@@ -230,6 +230,13 @@ impl Manifest {
 }
 
 impl ModelEntry {
+    /// Param-layout metadata by name — the mapping the content-addressed
+    /// registry uses to tie a schema-2 named blob back to its slice of the
+    /// concatenated weight buffer (`runtime/registry.rs`, DESIGN.md §15).
+    pub fn param(&self, name: &str) -> Option<&ParamMeta> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
     /// Find the eval HLO variant matching a (method, ratio, metric, q, locations)
     /// query; `None` fields are wildcards matched against the export defaults.
     pub fn find_eval(

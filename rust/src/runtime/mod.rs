@@ -36,6 +36,7 @@
 pub mod kernels;
 pub mod pool;
 pub mod reference;
+pub mod registry;
 pub mod tensor;
 pub mod weights;
 

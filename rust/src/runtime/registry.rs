@@ -1,0 +1,534 @@
+//! Content-addressed model registry (DESIGN.md §15): model weights as
+//! first-class, schema-versioned, digest-verified artifacts.
+//!
+//! Layout under one registry root:
+//!
+//! ```text
+//! <root>/manifests/<model>/<tag>.json   schema-versioned manifest
+//! <root>/blobs/<hex>                    V2 content-addressed param blobs
+//! <root>/legacy/<model>-<tag>.bin       V1 single concatenated blob
+//! ```
+//!
+//! Two manifest schemas coexist, trow-ManifestV1/V2 style (each with its
+//! own parse function, unknown versions a **typed** error, never a silent
+//! best-effort):
+//!
+//! * **V1** — the legacy layout: one unnamed blob per `(model, tag)`
+//!   holding the manifest's whole concatenated little-endian f32 param
+//!   buffer, digested as a unit.
+//! * **V2** — named blobs: one content-addressed blob per *param*, stored
+//!   at `blobs/<digest-hex>` and therefore shared across tags and models
+//!   whenever bytes coincide (publishing a tag that changes one param
+//!   writes one new blob).
+//!
+//! Digests are `fnv64:<16 hex>` over raw bytes (same FNV-1a-64 constants
+//! as the prefix cache's token hashing). Every blob is re-hashed **at
+//! load** and compared against its manifest digest — a flipped byte
+//! anywhere fails with [`RegistryError::DigestMismatch`] naming the
+//! expected digest, so a poisoned blob can be located by grep. Conversion
+//! between schemas is lossless both ways (bytes are carried verbatim;
+//! pinned by `tests/registry.rs`).
+//!
+//! [`Registry::hot_load`] is the replica pool's rolling-upgrade loader:
+//! verify + reassemble + upload in one call, handed to
+//! [`ReplicaPool::advance_upgrade`](crate::coordinator::replica::ReplicaPool::advance_upgrade)
+//! so replicas swap models atomically without a process restart.
+
+use std::fmt;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::manifest::ModelEntry;
+use crate::util::json::{num, obj, s, Json};
+
+use super::{DeviceWeights, Runtime, Weights};
+
+/// FNV-1a 64-bit over raw bytes — the registry's digest primitive. Same
+/// constants as `coordinator::prefix_cache::fnv1a_tokens`; collisions are
+/// a staleness risk, not a correctness one (digests *verify* bytes that a
+/// manifest already names, they do not deduplicate adversarial input).
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Render the digest string of `bytes`: `fnv64:` + 16 lowercase hex digits.
+pub fn digest_of(bytes: &[u8]) -> String {
+    format!("fnv64:{:016x}", fnv1a_bytes(bytes))
+}
+
+/// Typed registry failures — the error contract `tests/registry.rs` pins:
+/// schema and integrity problems are *named*, never stringly guessed at.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryError {
+    /// Manifest text that does not parse, or parses but is missing /
+    /// mistypes a required field.
+    InvalidManifest { err: String },
+    /// A `schemaVersion` this build does not understand. Failing typed
+    /// here is the point of versioning: a future schema must be rejected
+    /// loudly, not half-read as whatever V1 fields happen to match.
+    UnknownSchema { version: u64 },
+    /// A blob whose bytes no longer hash to the manifest's digest. The
+    /// expected digest is part of the message so the poisoned blob can be
+    /// located by grep.
+    DigestMismatch { name: String, expected: String, actual: String },
+    /// A digest the blob store has no readable bytes for.
+    MissingBlob { name: String, digest: String, err: String },
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegistryError::InvalidManifest { err } => {
+                write!(f, "invalid registry manifest: {err}")
+            }
+            RegistryError::UnknownSchema { version } => {
+                write!(
+                    f,
+                    "unknown registry schema version {version} (this build understands 1 and 2)"
+                )
+            }
+            RegistryError::DigestMismatch { name, expected, actual } => {
+                write!(
+                    f,
+                    "blob {name:?} failed digest verification: manifest says {expected}, \
+                     bytes hash to {actual}"
+                )
+            }
+            RegistryError::MissingBlob { name, digest, err } => {
+                write!(f, "blob {name:?} ({digest}) unreadable: {err}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// Schema 1: one unnamed blob per `(model, tag)`, digested as a unit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestV1 {
+    pub name: String,
+    pub tag: String,
+    /// Registry-relative path of the single blob.
+    pub blob: String,
+    pub digest: String,
+    pub total_bytes: u64,
+}
+
+/// One named, content-addressed param blob of a [`ManifestV2`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlobEntry {
+    pub param: String,
+    pub digest: String,
+    pub bytes: u64,
+}
+
+/// Schema 2: named per-param blobs at `blobs/<digest-hex>`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestV2 {
+    pub name: String,
+    pub tag: String,
+    pub blobs: Vec<BlobEntry>,
+}
+
+/// A parsed registry manifest of either schema.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryManifest {
+    V1(ManifestV1),
+    V2(ManifestV2),
+}
+
+fn str_field(doc: &Json, key: &str) -> Result<String, RegistryError> {
+    doc.get(key)
+        .and_then(|v| v.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| RegistryError::InvalidManifest { err: format!("missing string {key:?}") })
+}
+
+fn u64_field(doc: &Json, key: &str) -> Result<u64, RegistryError> {
+    doc.get(key)
+        .and_then(|v| v.as_f64())
+        .filter(|v| v.is_finite() && *v >= 0.0)
+        .map(|v| v as u64)
+        .ok_or_else(|| RegistryError::InvalidManifest { err: format!("missing number {key:?}") })
+}
+
+impl RegistryManifest {
+    pub fn schema_version(&self) -> u64 {
+        match self {
+            RegistryManifest::V1(_) => 1,
+            RegistryManifest::V2(_) => 2,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            RegistryManifest::V1(m) => &m.name,
+            RegistryManifest::V2(m) => &m.name,
+        }
+    }
+
+    pub fn tag(&self) -> &str {
+        match self {
+            RegistryManifest::V1(m) => &m.tag,
+            RegistryManifest::V2(m) => &m.tag,
+        }
+    }
+
+    /// Parse manifest text. Version dispatch happens first: an unknown
+    /// `schemaVersion` is [`RegistryError::UnknownSchema`] even if the
+    /// rest of the document would parse under some known schema.
+    pub fn parse(text: &str) -> Result<RegistryManifest, RegistryError> {
+        let doc = Json::parse(text)
+            .map_err(|e| RegistryError::InvalidManifest { err: e.to_string() })?;
+        match u64_field(&doc, "schemaVersion")? {
+            1 => Self::schema_1(&doc),
+            2 => Self::schema_2(&doc),
+            version => Err(RegistryError::UnknownSchema { version }),
+        }
+    }
+
+    fn schema_1(doc: &Json) -> Result<RegistryManifest, RegistryError> {
+        Ok(RegistryManifest::V1(ManifestV1 {
+            name: str_field(doc, "name")?,
+            tag: str_field(doc, "tag")?,
+            blob: str_field(doc, "blob")?,
+            digest: str_field(doc, "digest")?,
+            total_bytes: u64_field(doc, "totalBytes")?,
+        }))
+    }
+
+    fn schema_2(doc: &Json) -> Result<RegistryManifest, RegistryError> {
+        let arr = doc
+            .get("blobs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| RegistryError::InvalidManifest { err: "missing array \"blobs\"".into() })?;
+        let mut blobs = Vec::with_capacity(arr.len());
+        for b in arr {
+            blobs.push(BlobEntry {
+                param: str_field(b, "param")?,
+                digest: str_field(b, "digest")?,
+                bytes: u64_field(b, "bytes")?,
+            });
+        }
+        Ok(RegistryManifest::V2(ManifestV2 {
+            name: str_field(doc, "name")?,
+            tag: str_field(doc, "tag")?,
+            blobs,
+        }))
+    }
+
+    /// Render back to manifest JSON (inverse of [`Self::parse`]).
+    pub fn render(&self) -> String {
+        match self {
+            RegistryManifest::V1(m) => obj(vec![
+                ("schemaVersion", num(1.0)),
+                ("name", s(&m.name)),
+                ("tag", s(&m.tag)),
+                ("blob", s(&m.blob)),
+                ("digest", s(&m.digest)),
+                ("totalBytes", num(m.total_bytes as f64)),
+            ])
+            .to_string(),
+            RegistryManifest::V2(m) => obj(vec![
+                ("schemaVersion", num(2.0)),
+                ("name", s(&m.name)),
+                ("tag", s(&m.tag)),
+                (
+                    "blobs",
+                    Json::Arr(
+                        m.blobs
+                            .iter()
+                            .map(|b| {
+                                obj(vec![
+                                    ("param", s(&b.param)),
+                                    ("digest", s(&b.digest)),
+                                    ("bytes", num(b.bytes as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+            .to_string(),
+        }
+    }
+}
+
+/// On-disk registry rooted at one directory (see module docs for layout).
+pub struct Registry {
+    root: PathBuf,
+}
+
+impl Registry {
+    /// Open (or lazily create) a registry rooted at `root`. Directories
+    /// are created on first publish, so opening is infallible.
+    pub fn open(root: impl Into<PathBuf>) -> Registry {
+        Registry { root: root.into() }
+    }
+
+    pub fn root(&self) -> &std::path::Path {
+        &self.root
+    }
+
+    fn manifest_path(&self, name: &str, tag: &str) -> PathBuf {
+        self.root.join("manifests").join(name).join(format!("{tag}.json"))
+    }
+
+    fn blob_path(&self, digest: &str) -> PathBuf {
+        // `fnv64:<hex>` → file named by the hex part alone.
+        let hex = digest.split(':').nth(1).unwrap_or(digest);
+        self.root.join("blobs").join(hex)
+    }
+
+    /// Publish `w` as `(model.name, tag)` in schema `schema` (1 or 2).
+    /// Returns the manifest written. V2 blob writes are content-addressed:
+    /// a blob whose digest already exists on disk is not rewritten, so
+    /// tags sharing params share bytes.
+    pub fn publish(
+        &self,
+        model: &ModelEntry,
+        tag: &str,
+        w: &Weights,
+        schema: u64,
+    ) -> Result<RegistryManifest> {
+        let bytes = w.to_bytes(model)?;
+        let man = match schema {
+            1 => {
+                let rel = format!("legacy/{}-{}.bin", model.name, tag);
+                let path = self.root.join(&rel);
+                if let Some(dir) = path.parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                std::fs::write(&path, &bytes)
+                    .with_context(|| format!("writing registry blob {path:?}"))?;
+                RegistryManifest::V1(ManifestV1 {
+                    name: model.name.clone(),
+                    tag: tag.to_string(),
+                    blob: rel,
+                    digest: digest_of(&bytes),
+                    total_bytes: bytes.len() as u64,
+                })
+            }
+            2 => {
+                let mut blobs = Vec::with_capacity(model.params.len());
+                for p in &model.params {
+                    let chunk = &bytes[p.offset..p.offset + p.bytes];
+                    let digest = digest_of(chunk);
+                    let path = self.blob_path(&digest);
+                    if let Some(dir) = path.parent() {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                    if !path.exists() {
+                        std::fs::write(&path, chunk)
+                            .with_context(|| format!("writing registry blob {path:?}"))?;
+                    }
+                    blobs.push(BlobEntry {
+                        param: p.name.clone(),
+                        digest,
+                        bytes: p.bytes as u64,
+                    });
+                }
+                RegistryManifest::V2(ManifestV2 {
+                    name: model.name.clone(),
+                    tag: tag.to_string(),
+                    blobs,
+                })
+            }
+            version => return Err(RegistryError::UnknownSchema { version }.into()),
+        };
+        let mpath = self.manifest_path(&model.name, tag);
+        if let Some(dir) = mpath.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&mpath, man.render())
+            .with_context(|| format!("writing registry manifest {mpath:?}"))?;
+        Ok(man)
+    }
+
+    /// Read + parse the stored manifest for `(name, tag)`.
+    pub fn manifest(&self, name: &str, tag: &str) -> Result<RegistryManifest> {
+        let path = self.manifest_path(name, tag);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading registry manifest {path:?}"))?;
+        Ok(RegistryManifest::parse(&text)?)
+    }
+
+    /// Load `(model.name, tag)`: read every blob, **verify each against
+    /// its manifest digest**, reassemble the param buffer in manifest
+    /// layout order, and parse it into [`Weights`]. Any integrity problem
+    /// is a typed [`RegistryError`].
+    pub fn load(&self, model: &ModelEntry, tag: &str) -> Result<Weights> {
+        let man = self.manifest(&model.name, tag)?;
+        let bytes = self.verified_bytes(model, &man)?;
+        Weights::from_bytes(model, &bytes)
+    }
+
+    fn verified_bytes(&self, model: &ModelEntry, man: &RegistryManifest) -> Result<Vec<u8>> {
+        match man {
+            RegistryManifest::V1(v1) => {
+                let path = self.root.join(&v1.blob);
+                let bytes = std::fs::read(&path).map_err(|e| RegistryError::MissingBlob {
+                    name: v1.blob.clone(),
+                    digest: v1.digest.clone(),
+                    err: e.to_string(),
+                })?;
+                let actual = digest_of(&bytes);
+                if actual != v1.digest {
+                    return Err(RegistryError::DigestMismatch {
+                        name: v1.blob.clone(),
+                        expected: v1.digest.clone(),
+                        actual,
+                    }
+                    .into());
+                }
+                Ok(bytes)
+            }
+            RegistryManifest::V2(v2) => {
+                for p in &model.params {
+                    if !v2.blobs.iter().any(|b| b.param == p.name) {
+                        return Err(RegistryError::InvalidManifest {
+                            err: format!("manifest lists no blob for param {:?}", p.name),
+                        }
+                        .into());
+                    }
+                }
+                let total: usize = model.params.iter().map(|p| p.bytes).sum();
+                let mut out = vec![0u8; total];
+                for b in &v2.blobs {
+                    let Some(p) = model.param(&b.param) else {
+                        return Err(RegistryError::InvalidManifest {
+                            err: format!("manifest names blob for unknown param {:?}", b.param),
+                        }
+                        .into());
+                    };
+                    let path = self.blob_path(&b.digest);
+                    let bytes = std::fs::read(&path).map_err(|e| RegistryError::MissingBlob {
+                        name: b.param.clone(),
+                        digest: b.digest.clone(),
+                        err: e.to_string(),
+                    })?;
+                    let actual = digest_of(&bytes);
+                    if actual != b.digest {
+                        return Err(RegistryError::DigestMismatch {
+                            name: b.param.clone(),
+                            expected: b.digest.clone(),
+                            actual,
+                        }
+                        .into());
+                    }
+                    if bytes.len() != p.bytes {
+                        return Err(RegistryError::InvalidManifest {
+                            err: format!(
+                                "blob for {:?} is {} bytes, param layout expects {}",
+                                b.param,
+                                bytes.len(),
+                                p.bytes
+                            ),
+                        }
+                        .into());
+                    }
+                    out[p.offset..p.offset + p.bytes].copy_from_slice(&bytes);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Republish `(model.name, tag)` in the other schema. Bytes are
+    /// carried verbatim (and digest-verified on the way through), so
+    /// V1 ↔ V2 conversion is lossless in both directions.
+    pub fn convert(&self, model: &ModelEntry, tag: &str, to_schema: u64) -> Result<RegistryManifest> {
+        let w = self.load(model, tag)?;
+        self.publish(model, tag, &w, to_schema)
+    }
+
+    /// Verify + load + upload in one call — the loader
+    /// [`ReplicaPool::advance_upgrade`](crate::coordinator::replica::ReplicaPool::advance_upgrade)
+    /// wants: the same upload path `Engine::new` uses (including load-time
+    /// int8 quantization when that format is in effect), so hot-swapped
+    /// weights behave exactly like construction-time ones.
+    pub fn hot_load(&self, rt: &Runtime, model: &ModelEntry, tag: &str) -> Result<DeviceWeights> {
+        let w = self.load(model, tag)?;
+        rt.upload_weights(model, &w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_format_is_pinned() {
+        // Empty input → the FNV-1a-64 offset basis; format is fnv64:<16hex>.
+        assert_eq!(digest_of(&[]), "fnv64:cbf29ce484222325");
+        assert_eq!(digest_of(b"a").len(), "fnv64:".len() + 16);
+        assert_ne!(digest_of(b"ab"), digest_of(b"ba"));
+    }
+
+    #[test]
+    fn unknown_schema_is_typed_not_guessed() {
+        let text = r#"{"schemaVersion":3,"name":"m","tag":"t","blob":"x","digest":"d","totalBytes":4}"#;
+        match RegistryManifest::parse(text) {
+            Err(RegistryError::UnknownSchema { version: 3 }) => {}
+            other => panic!("expected UnknownSchema{{3}}, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_manifests_are_invalid_manifest() {
+        for bad in [
+            "not json",
+            r#"{"name":"m"}"#,                                // no schemaVersion
+            r#"{"schemaVersion":"one"}"#,                     // mistyped version
+            r#"{"schemaVersion":1,"name":"m","tag":"t"}"#,    // V1 missing blob/digest
+            r#"{"schemaVersion":2,"name":"m","tag":"t"}"#,    // V2 missing blobs
+            r#"{"schemaVersion":2,"name":"m","tag":"t","blobs":[{"param":"p"}]}"#,
+        ] {
+            match RegistryManifest::parse(bad) {
+                Err(RegistryError::InvalidManifest { .. }) => {}
+                other => panic!("{bad:?}: expected InvalidManifest, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn render_parse_roundtrip_both_schemas() {
+        let v1 = RegistryManifest::V1(ManifestV1 {
+            name: "m".into(),
+            tag: "base".into(),
+            blob: "legacy/m-base.bin".into(),
+            digest: "fnv64:0123456789abcdef".into(),
+            total_bytes: 128,
+        });
+        let v2 = RegistryManifest::V2(ManifestV2 {
+            name: "m".into(),
+            tag: "base".into(),
+            blobs: vec![
+                BlobEntry { param: "embedding".into(), digest: "fnv64:00ff".into(), bytes: 64 },
+                BlobEntry { param: "head".into(), digest: "fnv64:11aa".into(), bytes: 64 },
+            ],
+        });
+        for man in [v1, v2] {
+            let back = RegistryManifest::parse(&man.render()).unwrap();
+            assert_eq!(back, man);
+        }
+    }
+
+    #[test]
+    fn error_messages_name_the_digest() {
+        let e = RegistryError::DigestMismatch {
+            name: "embedding".into(),
+            expected: "fnv64:deadbeefdeadbeef".into(),
+            actual: "fnv64:0000000000000000".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("fnv64:deadbeefdeadbeef"), "{msg}");
+        assert!(msg.contains("embedding"), "{msg}");
+    }
+}

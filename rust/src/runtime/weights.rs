@@ -190,7 +190,18 @@ impl Weights {
         Ok(Weights { tensors, quant: None })
     }
 
-    pub fn save(&self, model: &ModelEntry, path: impl AsRef<Path>) -> Result<()> {
+    /// Serialize to the manifest's concatenated little-endian f32 layout —
+    /// the exact byte buffer [`Self::from_bytes`] parses and the registry
+    /// digests (`runtime/registry.rs`). Bit-preserving both ways: bytes
+    /// pass through `f32::from_le_bytes`/`to_le_bytes` with no arithmetic,
+    /// so publish → load → publish reproduces identical blobs.
+    pub fn to_bytes(&self, model: &ModelEntry) -> Result<Vec<u8>> {
+        ensure!(
+            self.tensors.len() == model.params.len(),
+            "weights have {} tensors, manifest lists {} params",
+            self.tensors.len(),
+            model.params.len()
+        );
         let mut out: Vec<u8> = Vec::new();
         for (t, p) in self.tensors.iter().zip(&model.params) {
             let data = t.as_f32()?;
@@ -199,6 +210,11 @@ impl Weights {
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
+        Ok(out)
+    }
+
+    pub fn save(&self, model: &ModelEntry, path: impl AsRef<Path>) -> Result<()> {
+        let out = self.to_bytes(model)?;
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir).ok();
         }

@@ -555,3 +555,70 @@ fn healthz_and_stats_report_serving_state() {
     });
     cleanup(&dir);
 }
+
+/// Regression: `/stats` counters are snapshotted under one seqlock read,
+/// so `admitted == completed + failed + in_flight` holds in EVERY
+/// response — including ones raced against a burst of concurrent
+/// generations. The pre-seqlock implementation read each counter
+/// independently and could observe a completion without its admission.
+#[test]
+fn stats_counters_stay_consistent_under_concurrent_burst() {
+    let (dir, man) = fixture("hammer");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let vocab = model.vocab_size;
+    let plen = man.prefill_seq_len;
+    let (engines, lane_names) = build_engines(&rt, &man, &w, &["dense"]);
+    const BURST: usize = 16;
+
+    let ((), _report) =
+        with_server(&engines, &lane_names, Policy::Explicit, HttpConfig::default(), |addr, _| {
+            std::thread::scope(|s| {
+                let workers: Vec<_> = (0..4)
+                    .map(|t| {
+                        s.spawn(move || {
+                            for i in 0..BURST / 4 {
+                                let prompt = prompt_tokens(t * 31 + i, plen / 2, vocab);
+                                let r = client::post_json(
+                                    addr,
+                                    "/v1/generate",
+                                    &gen_body(&prompt, "dense", 6, false),
+                                )
+                                .unwrap();
+                                assert_eq!(r.status, 200, "{}", r.body_str());
+                            }
+                        })
+                    })
+                    .collect();
+
+                // Hammer /stats for the whole burst: the identity must
+                // hold in every single document.
+                let mut polls = 0u32;
+                while workers.iter().any(|w| !w.is_finished()) || polls < 8 {
+                    let doc = client::get(addr, "/stats").unwrap().body_json().unwrap();
+                    let admitted = doc.expect("admitted").as_usize().unwrap();
+                    let completed = doc.expect("completed").as_usize().unwrap();
+                    let failed = doc.expect("failed").as_usize().unwrap();
+                    let in_flight = doc.expect("in_flight").as_usize().unwrap();
+                    assert_eq!(
+                        admitted,
+                        completed + failed + in_flight,
+                        "torn counter snapshot at poll {polls}"
+                    );
+                    polls += 1;
+                }
+                for w in workers {
+                    w.join().unwrap();
+                }
+
+                // Settled: everything admitted completed; nothing failed.
+                let doc = client::get(addr, "/stats").unwrap().body_json().unwrap();
+                assert_eq!(doc.expect("admitted").as_usize(), Some(BURST));
+                assert_eq!(doc.expect("completed").as_usize(), Some(BURST));
+                assert_eq!(doc.expect("failed").as_usize(), Some(0));
+                assert_eq!(doc.expect("in_flight").as_usize(), Some(0));
+            });
+        });
+    cleanup(&dir);
+}

@@ -1,0 +1,263 @@
+//! Content-addressed model registry battery (DESIGN.md §15).
+//!
+//! Pins the registry's durability contract on the real fixture weights:
+//!
+//! * schema round-trips are lossless — V1 (one legacy blob) and V2
+//!   (named per-param blobs) reconstruct bit-identical weight bytes, and
+//!   `convert` between them changes layout, never content;
+//! * every load verifies every blob against its manifest digest: one
+//!   flipped byte on disk is a typed [`RegistryError::DigestMismatch`]
+//!   that *names* the expected and actual digests;
+//! * a missing blob and an unknown `schemaVersion` fail typed too —
+//!   never a panic, never a half-read V1 guess;
+//! * V2 publishing is content-addressed: tags sharing params share blob
+//!   files on disk;
+//! * `hot_load` lands registry weights in an engine whose tokens are
+//!   bit-identical to one built from the original weights.
+
+use std::path::{Path, PathBuf};
+
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::{Priority, Request};
+use tor_ssm::fixtures::generate_default;
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::registry::{digest_of, Registry, RegistryError, RegistryManifest};
+use tor_ssm::runtime::{Runtime, Weights};
+
+fn fixture(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!("tor-ssm-registry-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let man = generate_default(&dir).expect("fixture generation");
+    (dir, man)
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn registry_err(e: &anyhow::Error) -> &RegistryError {
+    e.downcast_ref::<RegistryError>()
+        .unwrap_or_else(|| panic!("expected a typed RegistryError, got: {e:#}"))
+}
+
+/// Manifest path layout is part of the on-disk contract.
+fn manifest_path(reg: &Registry, name: &str, tag: &str) -> PathBuf {
+    reg.root().join("manifests").join(name).join(format!("{tag}.json"))
+}
+
+fn blob_file(reg: &Registry, digest: &str) -> PathBuf {
+    reg.root().join("blobs").join(digest.split(':').nth(1).expect("fnv64:<hex> digest"))
+}
+
+#[test]
+fn digest_constants_are_pinned() {
+    // FNV-1a 64 offset basis: the digest of zero bytes.
+    assert_eq!(digest_of(&[]), "fnv64:cbf29ce484222325");
+    // One-byte avalanche sanity.
+    assert_ne!(digest_of(b"a"), digest_of(b"b"));
+}
+
+/// V1↔V2 round-trips are lossless on the real fixture weights: every
+/// schema and every `convert` direction reconstructs bit-identical param
+/// bytes, and manifest render/parse is an exact inverse.
+#[test]
+fn schema_round_trips_are_lossless() {
+    let (dir, man) = fixture("roundtrip");
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let original = w.to_bytes(&model).unwrap();
+    let reg = Registry::open(dir.join("registry"));
+
+    for schema in [1u64, 2] {
+        let tag = format!("s{schema}");
+        let m = reg.publish(&model, &tag, &w, schema).unwrap();
+        assert_eq!(m.schema_version(), schema);
+        assert_eq!((m.name(), m.tag()), (model.name.as_str(), tag.as_str()));
+        // Render/parse is an exact inverse.
+        assert_eq!(RegistryManifest::parse(&m.render()).unwrap(), m);
+        // Disk round-trip reconstructs the exact bytes.
+        let loaded = reg.load(&model, &tag).unwrap();
+        assert_eq!(loaded.to_bytes(&model).unwrap(), original, "schema {schema} lost bytes");
+    }
+
+    // Cross-schema conversion: V1 → V2 → V1, content never changes.
+    let v2 = reg.convert(&model, "s1", 2).unwrap();
+    assert_eq!(v2.schema_version(), 2);
+    assert_eq!(reg.load(&model, "s1").unwrap().to_bytes(&model).unwrap(), original);
+    let v1 = reg.convert(&model, "s2", 1).unwrap();
+    assert_eq!(v1.schema_version(), 1);
+    assert_eq!(reg.load(&model, "s2").unwrap().to_bytes(&model).unwrap(), original);
+    cleanup(&dir);
+}
+
+/// V2 blobs are content-addressed: two tags of identical weights share
+/// every blob file, and the store holds exactly one copy per distinct
+/// param content.
+#[test]
+fn identical_params_share_blob_files() {
+    let (dir, man) = fixture("dedup");
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let reg = Registry::open(dir.join("registry"));
+
+    let a = reg.publish(&model, "a", &w, 2).unwrap();
+    let b = reg.publish(&model, "b", &w, 2).unwrap();
+    let (RegistryManifest::V2(a), RegistryManifest::V2(b)) = (a, b) else {
+        panic!("schema 2 publish must yield V2 manifests");
+    };
+    assert_eq!(a.blobs, b.blobs, "identical content must digest identically");
+    let distinct: std::collections::BTreeSet<&str> =
+        a.blobs.iter().map(|e| e.digest.as_str()).collect();
+    let on_disk = std::fs::read_dir(reg.root().join("blobs")).unwrap().count();
+    assert_eq!(on_disk, distinct.len(), "blob store holds duplicates");
+    cleanup(&dir);
+}
+
+/// One flipped byte in a stored blob is caught at load and named: the
+/// error is a typed `DigestMismatch` carrying the manifest digest and
+/// the actual hash of the poisoned bytes.
+#[test]
+fn flipped_byte_is_rejected_with_named_digest() {
+    let (dir, man) = fixture("flip");
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let reg = Registry::open(dir.join("registry"));
+    let m = reg.publish(&model, "t", &w, 2).unwrap();
+    let RegistryManifest::V2(m) = m else { panic!("expected V2") };
+
+    // Poison the second param's blob so the failure names a specific one.
+    let victim = &m.blobs[1];
+    let path = blob_file(&reg, &victim.digest);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[0] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let err = reg.load(&model, "t").unwrap_err();
+    match registry_err(&err) {
+        RegistryError::DigestMismatch { name, expected, actual } => {
+            assert_eq!(name, &victim.param);
+            assert_eq!(expected, &victim.digest);
+            assert_eq!(actual, &digest_of(&bytes));
+            assert_ne!(expected, actual);
+        }
+        other => panic!("expected DigestMismatch, got {other}"),
+    }
+    // The digest appears in the rendered message (greppability contract).
+    assert!(format!("{err:#}").contains(&victim.digest), "message must name the digest");
+
+    // V1 verifies the whole blob the same way.
+    reg.publish(&model, "t1", &w, 1).unwrap();
+    let legacy = reg.root().join("legacy").join(format!("{}-t1.bin", model.name));
+    let mut lb = std::fs::read(&legacy).unwrap();
+    let mid = lb.len() / 2;
+    lb[mid] ^= 0x80;
+    std::fs::write(&legacy, &lb).unwrap();
+    let err = reg.load(&model, "t1").unwrap_err();
+    assert!(
+        matches!(registry_err(&err), RegistryError::DigestMismatch { .. }),
+        "V1 corruption must be a DigestMismatch, got: {err:#}"
+    );
+    cleanup(&dir);
+}
+
+/// A deleted blob fails typed with the digest that cannot be read.
+#[test]
+fn missing_blob_fails_typed() {
+    let (dir, man) = fixture("missing");
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let reg = Registry::open(dir.join("registry"));
+    let RegistryManifest::V2(m) = reg.publish(&model, "t", &w, 2).unwrap() else {
+        panic!("expected V2")
+    };
+    let victim = &m.blobs[0];
+    std::fs::remove_file(blob_file(&reg, &victim.digest)).unwrap();
+    // Another tag may still reference surviving blobs; this load must not.
+    let err = reg.load(&model, "t").unwrap_err();
+    match registry_err(&err) {
+        RegistryError::MissingBlob { name, digest, .. } => {
+            assert_eq!(name, &victim.param);
+            assert_eq!(digest, &victim.digest);
+        }
+        other => panic!("expected MissingBlob, got {other}"),
+    }
+    cleanup(&dir);
+}
+
+/// Version dispatch happens before field parsing: a manifest from the
+/// future fails as `UnknownSchema { 9 }` even though its body would
+/// parse fine under schema 1 — and publishing an unknown schema is
+/// rejected the same way.
+#[test]
+fn unknown_schema_versions_fail_typed() {
+    let (dir, man) = fixture("schema");
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let reg = Registry::open(dir.join("registry"));
+    reg.publish(&model, "t", &w, 1).unwrap();
+
+    // Hand-write a future manifest whose body is a perfectly valid V1.
+    let future = format!(
+        "{{\"schemaVersion\":9,\"name\":\"{}\",\"tag\":\"f\",\"blob\":\"legacy/x.bin\",\
+         \"digest\":\"fnv64:0000000000000000\",\"totalBytes\":0}}",
+        model.name
+    );
+    std::fs::write(manifest_path(&reg, &model.name, "f"), &future).unwrap();
+    let err = reg.load(&model, "f").unwrap_err();
+    assert_eq!(registry_err(&err), &RegistryError::UnknownSchema { version: 9 });
+    assert!(format!("{err:#}").contains("schema version 9"));
+
+    // Parse-level dispatch agrees.
+    assert_eq!(
+        RegistryManifest::parse(&future).unwrap_err(),
+        RegistryError::UnknownSchema { version: 9 }
+    );
+    // Publishing an unknown schema is refused up front.
+    let err = reg.publish(&model, "t9", &w, 9).unwrap_err();
+    assert_eq!(registry_err(&err), &RegistryError::UnknownSchema { version: 9 });
+    // Garbage text is InvalidManifest, not a panic.
+    assert!(matches!(
+        RegistryManifest::parse("not json").unwrap_err(),
+        RegistryError::InvalidManifest { .. }
+    ));
+    cleanup(&dir);
+}
+
+/// `hot_load` ties the registry into the serving path: an engine swapped
+/// to registry-loaded weights generates tokens bit-identical to an
+/// engine built from the original weights.
+#[test]
+fn hot_loaded_weights_serve_identical_tokens() {
+    let (dir, man) = fixture("hotload");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let reg = Registry::open(dir.join("registry"));
+    reg.publish(&model, "prod", &w, 2).unwrap();
+
+    let prompt: Vec<i32> =
+        (0..man.prefill_seq_len).map(|t| ((t * 7 + 1) % model.vocab_size) as i32).collect();
+    let req = |id| Request {
+        id,
+        prompt: prompt.clone(),
+        gen_tokens: 5,
+        variant: "dense".to_string(),
+        arrived_us: 0,
+        priority: Priority::Normal,
+    };
+
+    let run = |engine: &Engine| {
+        let mut sched = Scheduler::new(engine);
+        sched.run(vec![req(0)]).unwrap().remove(0).generated
+    };
+    let direct = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+    let expect = run(&direct);
+
+    let swapped = Engine::new(&rt, &man, &model, &w, "dense").unwrap();
+    let dev = reg.hot_load(&rt, &model, "prod").unwrap();
+    swapped.hot_swap_weights(dev, "prod");
+    assert_eq!(swapped.weights_tag(), "prod");
+    assert_eq!(run(&swapped), expect, "registry weights diverged from the originals");
+    cleanup(&dir);
+}

@@ -1,0 +1,336 @@
+//! Fault-injection battery for the replica pool (DESIGN.md §15).
+//!
+//! Failures are injected through the [`Engine`]'s deterministic
+//! [`FailurePlan`] seam (fail the k-th lifetime prefill/decode call), so
+//! every scenario is reproducible:
+//!
+//! * a replica that dies **before** any of its requests prefill loses
+//!   nothing — its queue re-routes and the tokens stay bit-identical to
+//!   the single-engine baseline;
+//! * a replica that dies **mid-decode** fails its in-flight sequences
+//!   typed (sinks already fired; replaying would duplicate observed
+//!   tokens) and never hangs the pool;
+//! * `Draining` replicas finish their residents but admit nothing new;
+//! * a rolling registry upgrade completes with zero dropped requests and
+//!   never mixes two weight versions inside one sequence.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use tor_ssm::coordinator::engine::{Engine, FailurePlan};
+use tor_ssm::coordinator::prefix_cache::PrefixCache;
+use tor_ssm::coordinator::replica::{Health, Placement, ReplicaPool};
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::{Priority, Request};
+use tor_ssm::fixtures::generate_default;
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::registry::Registry;
+use tor_ssm::runtime::{HostTensor, Runtime, Weights};
+
+fn fixture(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!("tor-ssm-faults-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let man = generate_default(&dir).expect("fixture generation");
+    (dir, man)
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn prompt_tokens(id: usize, plen: usize, vocab: usize) -> Vec<i32> {
+    (0..plen).map(|t| ((t * 7 + id) % vocab) as i32).collect()
+}
+
+fn cases(plen: usize, vocab: usize) -> Vec<(Vec<i32>, usize)> {
+    vec![
+        (prompt_tokens(1, plen / 4, vocab), 5),
+        (prompt_tokens(2, plen / 2, vocab), 4),
+        (prompt_tokens(3, plen, vocab), 5),
+        (prompt_tokens(4, 2 * plen, vocab), 6),
+    ]
+}
+
+fn request(id: u64, prompt: Vec<i32>, gen: usize) -> Request {
+    Request {
+        id,
+        prompt,
+        gen_tokens: gen,
+        variant: "dense".to_string(),
+        arrived_us: 0,
+        priority: Priority::Normal,
+    }
+}
+
+fn baseline(
+    rt: &Runtime,
+    man: &Manifest,
+    w: &Weights,
+    cases: &[(Vec<i32>, usize)],
+) -> Vec<Vec<i32>> {
+    let model = man.model("ref-mamba").unwrap().clone();
+    let engine = Engine::new(rt, man, &model, w, "dense").unwrap();
+    let mut sched = Scheduler::new(&engine);
+    let reqs: Vec<Request> =
+        cases.iter().enumerate().map(|(i, (p, g))| request(i as u64, p.clone(), *g)).collect();
+    let mut by_case = vec![Vec::new(); cases.len()];
+    for r in sched.run(reqs).unwrap() {
+        by_case[r.id as usize] = r.generated;
+    }
+    by_case
+}
+
+fn build_replicas(
+    rt: &Runtime,
+    man: &Manifest,
+    w: &Weights,
+    n: usize,
+) -> Vec<Engine> {
+    let model = man.model("ref-mamba").unwrap().clone();
+    (0..n)
+        .map(|_| {
+            let mut e = Engine::new(rt, man, &model, w, "dense").unwrap();
+            e.attach_prefix_cache(Arc::new(PrefixCache::new(4 << 20)));
+            e
+        })
+        .collect()
+}
+
+/// A replica whose very first prefill call fails dies before any of its
+/// requests have emitted a token, so failover is lossless: everything
+/// re-routes and the pooled tokens still match the single-engine
+/// baseline exactly. A later [`ReplicaPool::revive`] puts the replica
+/// back in service with a clean scheduler.
+#[test]
+fn prefill_death_reroutes_losslessly_then_revives() {
+    let (dir, man) = fixture("prefill");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let probe = cases(man.prefill_seq_len, model.vocab_size);
+    let expect = baseline(&rt, &man, &w, &probe);
+
+    let engines = build_replicas(&rt, &man, &w, 2);
+    // Replica 0 dies on its first prefill — before anything it holds has
+    // decoded a single token.
+    engines[0].set_failure_plan(Some(FailurePlan {
+        fail_prefill_calls: vec![1],
+        fail_decode_calls: vec![],
+    }));
+    let mut pool = ReplicaPool::new(&engines, Placement::LeastLoaded).unwrap();
+    for (i, (p, g)) in probe.iter().enumerate() {
+        pool.submit(request(i as u64, p.clone(), *g)).unwrap();
+    }
+    let mut got = vec![Vec::new(); probe.len()];
+    for r in pool.drain() {
+        got[r.id as usize] = r.generated;
+    }
+    assert_eq!(pool.health(0), Health::Down, "failing replica must be marked Down");
+    assert_eq!(pool.health(1), Health::Up);
+    assert!(pool.reroutes >= 1, "queued work must have moved off the dead replica");
+    assert!(
+        pool.take_failures().is_empty(),
+        "pre-prefill death must lose no requests"
+    );
+    for (ci, exp) in expect.iter().enumerate() {
+        assert_eq!(&got[ci], exp, "case {ci}: re-routed tokens diverged from baseline");
+    }
+
+    // Revive and serve again: the plan only poisoned call #1, so the
+    // replica is healthy now.
+    pool.revive(0);
+    assert_eq!(pool.health(0), Health::Up);
+    pool.submit(request(99, probe[0].0.clone(), probe[0].1)).unwrap();
+    let after = pool.drain();
+    assert_eq!(after.len(), 1);
+    assert_eq!(after[0].generated, expect[0], "revived pool must serve baseline tokens");
+    assert!(pool.take_failures().is_empty());
+    cleanup(&dir);
+}
+
+/// A replica that dies mid-decode has already streamed tokens for its
+/// resident sequences, so those fail **typed** — named replica, named
+/// injected error, no hang, no silent drop — while work still queued
+/// re-routes and every other request completes against baseline.
+#[test]
+fn decode_death_fails_residents_typed_without_hanging() {
+    let (dir, man) = fixture("decode");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let probe = cases(man.prefill_seq_len, model.vocab_size);
+    let expect = baseline(&rt, &man, &w, &probe);
+
+    let engines = build_replicas(&rt, &man, &w, 2);
+    engines[0].set_failure_plan(Some(FailurePlan {
+        fail_prefill_calls: vec![],
+        fail_decode_calls: vec![2],
+    }));
+    let mut pool = ReplicaPool::new(&engines, Placement::LeastLoaded).unwrap();
+    let mut placed_on_0 = Vec::new();
+    for (i, (p, g)) in probe.iter().enumerate() {
+        let r = pool.submit(request(i as u64, p.clone(), *g)).unwrap();
+        if r == 0 {
+            placed_on_0.push(i as u64);
+        }
+    }
+    assert!(!placed_on_0.is_empty(), "least-loaded left replica 0 empty");
+
+    // drain() terminating IS the no-hang assertion.
+    let done = pool.drain();
+    let failures = pool.take_failures();
+    assert_eq!(pool.health(0), Health::Down);
+    assert!(!failures.is_empty(), "mid-decode death must surface typed failures");
+    for f in &failures {
+        assert_eq!(f.replica, 0);
+        assert!(
+            f.error.contains("replica 0 down") && f.error.contains("injected failure"),
+            "failure must name the replica and the root cause, got: {}",
+            f.error
+        );
+        assert!(placed_on_0.contains(&f.id), "only replica 0's residents may fail");
+    }
+    // Every request is accounted for exactly once: completed or failed.
+    let mut seen: Vec<u64> = done.iter().map(|r| r.id).chain(failures.iter().map(|f| f.id)).collect();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..probe.len() as u64).collect::<Vec<_>>(), "dropped or duplicated ids");
+    // Survivors are still bit-identical to baseline.
+    for r in &done {
+        assert_eq!(
+            r.generated, expect[r.id as usize],
+            "request {} survived the fault but its tokens diverged",
+            r.id
+        );
+    }
+    cleanup(&dir);
+}
+
+/// `Draining` semantics: residents run to completion, but the replica
+/// admits nothing new — and a pool with no admitting replica refuses
+/// submission with a typed error instead of queueing into a void.
+#[test]
+fn draining_finishes_residents_but_admits_nothing() {
+    let (dir, man) = fixture("drain");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let probe = cases(man.prefill_seq_len, model.vocab_size);
+    let expect = baseline(&rt, &man, &w, &probe);
+
+    let engines = build_replicas(&rt, &man, &w, 2);
+    let mut pool = ReplicaPool::new(&engines, Placement::LeastLoaded).unwrap();
+    // Make request 0 resident on replica 0, then start draining it.
+    assert_eq!(pool.submit(request(0, probe[0].0.clone(), probe[0].1)).unwrap(), 0);
+    let resident = pool.step(); // prefills on replica 0
+    pool.set_draining(0);
+    assert_eq!(pool.health(0), Health::Draining);
+    // Everything submitted from now on must land on replica 1.
+    for (i, (p, g)) in probe.iter().enumerate().skip(1) {
+        assert_eq!(
+            pool.submit(request(i as u64, p.clone(), *g)).unwrap(),
+            1,
+            "a draining replica admitted new work"
+        );
+    }
+    let mut got = vec![Vec::new(); probe.len()];
+    for r in resident.into_iter().chain(pool.drain()) {
+        got[r.id as usize] = r.generated;
+    }
+    for (ci, exp) in expect.iter().enumerate() {
+        assert_eq!(&got[ci], exp, "case {ci} diverged under drain");
+    }
+    assert!(pool.take_failures().is_empty());
+    // Explicit drains never auto-recover.
+    assert_eq!(pool.health(0), Health::Draining);
+
+    // With every replica draining, submission fails typed.
+    pool.set_draining(1);
+    let err = pool.submit(request(50, probe[0].0.clone(), 2)).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("no healthy replica"),
+        "expected a typed no-capacity error, got: {err:#}"
+    );
+    cleanup(&dir);
+}
+
+/// Rolling upgrade through the content-addressed registry: publish the
+/// serving weights as `base` and a perturbed set as `v2`, then advance
+/// the upgrade one tick at a time while a live trace flows. Every
+/// response must be bit-identical to either the old-weights baseline or
+/// the new-weights baseline — never a mixture — with zero dropped
+/// requests, and the pool ends with every replica tagged `v2`.
+#[test]
+fn rolling_upgrade_drops_nothing_and_never_mixes_weights() {
+    let (dir, man) = fixture("upgrade");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let probe = cases(man.prefill_seq_len, model.vocab_size);
+
+    // A substantive perturbation so old/new baselines genuinely differ.
+    let w2 = Weights {
+        tensors: w
+            .tensors
+            .iter()
+            .map(|t| {
+                let data: Vec<f32> = t
+                    .as_f32()
+                    .unwrap()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, x)| x * 1.25 + 0.01 * ((i % 7) as f32 - 3.0))
+                    .collect();
+                HostTensor::f32(t.shape.clone(), data)
+            })
+            .collect(),
+        quant: None,
+    };
+    let old_base = baseline(&rt, &man, &w, &probe);
+    let new_base = baseline(&rt, &man, &w2, &probe);
+    assert_ne!(old_base, new_base, "perturbed weights produced identical tokens — vacuous");
+
+    let reg = Registry::open(dir.join("registry"));
+    reg.publish(&model, "base", &w, 2).unwrap();
+    reg.publish(&model, "v2", &w2, 2).unwrap();
+
+    let engines = build_replicas(&rt, &man, &w, 2);
+    let mut pool = ReplicaPool::new(&engines, Placement::LeastLoaded).unwrap();
+
+    // Interleave: submit one request, advance the upgrade a tick, step.
+    let mut responses = Vec::new();
+    let mut upgraded = false;
+    let mut next = 0usize;
+    let mut tick = 0usize;
+    while next < probe.len() || !pool.is_idle() || !upgraded {
+        if next < probe.len() {
+            let (p, g) = &probe[next];
+            pool.submit(request(next as u64, p.clone(), *g)).unwrap();
+            next += 1;
+        }
+        if !upgraded {
+            upgraded = pool.advance_upgrade("v2", || reg.hot_load(&rt, &model, "v2")).unwrap();
+        }
+        responses.extend(pool.step());
+        tick += 1;
+        assert!(tick < 10_000, "rolling upgrade failed to converge");
+    }
+    responses.extend(pool.drain());
+
+    assert!(pool.take_failures().is_empty(), "rolling upgrade dropped requests");
+    assert_eq!(responses.len(), probe.len(), "request lost during upgrade");
+    for r in &responses {
+        let ci = r.id as usize;
+        assert!(
+            r.generated == old_base[ci] || r.generated == new_base[ci],
+            "request {ci} matches neither weight version — versions mixed in one sequence"
+        );
+    }
+    for e in &engines {
+        assert_eq!(e.weights_tag(), "v2", "upgrade finished with a stale replica");
+    }
+    // Post-upgrade traffic serves the new weights.
+    pool.submit(request(77, probe[0].0.clone(), probe[0].1)).unwrap();
+    let after = pool.drain();
+    assert_eq!(after[0].generated, new_base[0]);
+    cleanup(&dir);
+}

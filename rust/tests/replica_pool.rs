@@ -1,0 +1,279 @@
+//! Cross-replica bit-identity battery (DESIGN.md §15).
+//!
+//! The pool's correctness contract: because every serving path samples
+//! with greedy first-max-wins argmax and sequences are frame-independent
+//! (DESIGN.md §6), **placement is bit-invisible** — the tokens a request
+//! generates cannot depend on which replica served it, how many replicas
+//! exist, or how they were picked. This battery drives one length-diverse
+//! trace through every cell of
+//! `replicas ∈ {1, 2, 4} × placement ∈ {least-loaded, hash} ×
+//! variant ∈ {dense, unified@0.2}` and requires token-identical output vs
+//! a single-engine [`Scheduler`] baseline — in-process and over a real
+//! HTTP socket with SSE streaming.
+
+use std::net::{SocketAddr, TcpListener};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use tor_ssm::coordinator::engine::Engine;
+use tor_ssm::coordinator::http::{self, client, HttpConfig, PoolConfig};
+use tor_ssm::coordinator::prefix_cache::PrefixCache;
+use tor_ssm::coordinator::replica::{Placement, ReplicaPool};
+use tor_ssm::coordinator::router::Policy;
+use tor_ssm::coordinator::scheduler::Scheduler;
+use tor_ssm::coordinator::{Priority, Request};
+use tor_ssm::fixtures::generate_default;
+use tor_ssm::manifest::Manifest;
+use tor_ssm::runtime::{Runtime, Weights};
+
+fn fixture(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!("tor-ssm-pool-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let man = generate_default(&dir).expect("fixture generation");
+    (dir, man)
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn prompt_tokens(id: usize, plen: usize, vocab: usize) -> Vec<i32> {
+    (0..plen).map(|t| ((t * 7 + id) % vocab) as i32).collect()
+}
+
+/// Length-diverse probe set: short, mid, full-frame, and a two-frame
+/// chunked-prefill prompt; varied generation lengths.
+fn cases(plen: usize, vocab: usize) -> Vec<(Vec<i32>, usize)> {
+    vec![
+        (prompt_tokens(1, plen / 4, vocab), 5),
+        (prompt_tokens(2, plen / 2, vocab), 3),
+        (prompt_tokens(3, plen, vocab), 4),
+        (prompt_tokens(4, 2 * plen, vocab), 6),
+        (prompt_tokens(5, plen / 2, vocab), 2),
+        (prompt_tokens(6, plen / 3 + 1, vocab), 5),
+    ]
+}
+
+fn requests(cases: &[(Vec<i32>, usize)], variant: &str) -> Vec<Request> {
+    cases
+        .iter()
+        .enumerate()
+        .map(|(i, (p, g))| Request {
+            id: i as u64,
+            prompt: p.clone(),
+            gen_tokens: *g,
+            variant: variant.to_string(),
+            arrived_us: 0,
+            priority: Priority::Normal,
+        })
+        .collect()
+}
+
+/// Single-engine ground truth: tokens per case id.
+fn baseline(
+    rt: &Runtime,
+    man: &Manifest,
+    w: &Weights,
+    variant: &str,
+    cases: &[(Vec<i32>, usize)],
+) -> Vec<Vec<i32>> {
+    let model = man.model("ref-mamba").unwrap().clone();
+    let engine = Engine::new(rt, man, &model, w, variant).unwrap();
+    let mut sched = Scheduler::new(&engine);
+    let mut by_case = vec![Vec::new(); cases.len()];
+    for r in sched.run(requests(cases, variant)).unwrap() {
+        by_case[r.id as usize] = r.generated;
+    }
+    by_case
+}
+
+/// The acceptance matrix: every (replicas, placement, variant) cell must
+/// reproduce the single-engine token streams exactly, with zero failures
+/// and zero re-routes (no faults are injected here).
+#[test]
+fn pool_tokens_identical_across_replica_counts_and_placements() {
+    let (dir, man) = fixture("identity");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let probe = cases(man.prefill_seq_len, model.vocab_size);
+
+    for variant in ["dense", "unified@0.2"] {
+        let expect = baseline(&rt, &man, &w, variant, &probe);
+        for replicas in [1usize, 2, 4] {
+            for placement in [Placement::LeastLoaded, Placement::PrefixHash] {
+                let mut engines: Vec<Engine> = (0..replicas)
+                    .map(|_| Engine::new(&rt, &man, &model, &w, variant).unwrap())
+                    .collect();
+                for e in &mut engines {
+                    e.attach_prefix_cache(Arc::new(PrefixCache::new(4 << 20)));
+                }
+                let mut pool = ReplicaPool::new(&engines, placement).unwrap();
+                for req in requests(&probe, variant) {
+                    pool.submit(req).unwrap();
+                }
+                let mut got = vec![Vec::new(); probe.len()];
+                for r in pool.drain() {
+                    got[r.id as usize] = r.generated;
+                }
+                assert!(pool.take_failures().is_empty(), "healthy pool failed requests");
+                assert_eq!(pool.reroutes, 0, "healthy pool re-routed");
+                for (ci, exp) in expect.iter().enumerate() {
+                    assert_eq!(
+                        &got[ci], exp,
+                        "{variant} x{replicas} {placement:?} case {ci}: tokens diverged \
+                         from the single-engine baseline"
+                    );
+                }
+                // Non-vacuity: with more requests than replicas,
+                // least-loaded must actually spread the work.
+                if replicas > 1 && placement == Placement::LeastLoaded {
+                    let used = pool.replica_stats().iter().filter(|s| s.completed > 0).count();
+                    assert!(used > 1, "x{replicas} least-loaded served everything on one replica");
+                }
+            }
+        }
+    }
+    cleanup(&dir);
+}
+
+/// Hash placement is deterministic (same trace → same replica per
+/// request) and prefix-affine: two requests sharing a first-chunk prefix
+/// land on the same replica, so its prefix cache serves the second one.
+#[test]
+fn hash_placement_is_deterministic_and_prefix_affine() {
+    let (dir, man) = fixture("affine");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let plen = man.prefill_seq_len;
+    let vocab = model.vocab_size;
+
+    let run = |record: &mut Vec<usize>| {
+        let mut engines: Vec<Engine> = (0..3)
+            .map(|_| Engine::new(&rt, &man, &model, &w, "dense").unwrap())
+            .collect();
+        for e in &mut engines {
+            e.attach_prefix_cache(Arc::new(PrefixCache::new(4 << 20)));
+        }
+        let mut pool = ReplicaPool::new(&engines, Placement::PrefixHash).unwrap();
+        // Two prompts sharing their whole first chunk, one unrelated.
+        let shared = prompt_tokens(9, 2 * plen, vocab);
+        let mut sibling = shared.clone();
+        let last = sibling.len() - 1;
+        sibling[last] = (sibling[last] + 1) % vocab as i32; // tail differs, first chunk equal
+        let other = prompt_tokens(23, plen, vocab);
+        for (id, p) in [shared, sibling, other].into_iter().enumerate() {
+            let r = pool
+                .submit(Request {
+                    id: id as u64,
+                    prompt: p,
+                    gen_tokens: 3,
+                    variant: "dense".into(),
+                    arrived_us: 0,
+                    priority: Priority::Normal,
+                })
+                .unwrap();
+            record.push(r);
+        }
+        pool.drain();
+        let hits: u64 = engines.iter().filter_map(|e| e.prefix_cache()).map(|c| c.stats().hits).sum();
+        hits
+    };
+    let (mut first, mut second) = (Vec::new(), Vec::new());
+    let hits1 = run(&mut first);
+    let hits2 = run(&mut second);
+    assert_eq!(first, second, "hash placement must be a pure function of the prompt");
+    assert_eq!(first[0], first[1], "shared first chunk must land on one replica");
+    assert!(hits1 > 0, "prefix-affine placement produced no cache hits");
+    assert_eq!(hits1, hits2);
+    cleanup(&dir);
+}
+
+/// Run `body` against a live pooled server on a loopback socket.
+fn with_pooled_server<F, R>(
+    engines: &[Engine],
+    lanes: &[String],
+    pool: PoolConfig,
+    cfg: HttpConfig,
+    body: F,
+) -> (R, http::ServeReport)
+where
+    F: FnOnce(SocketAddr) -> R,
+{
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let shutdown = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let server = s.spawn(|| {
+            http::serve_pooled(engines, lanes, Policy::Explicit, pool, listener, cfg, &shutdown)
+        });
+        let out = body(addr);
+        shutdown.store(true, Ordering::SeqCst);
+        let report = server.join().expect("server thread").expect("serve returned an error");
+        (out, report)
+    })
+}
+
+/// The socket-level half of the contract: streamed SSE token order and
+/// non-streamed completions from a multi-replica server are identical to
+/// the single-engine baseline, for both placements.
+#[test]
+fn http_streams_identical_across_pool_topologies() {
+    let (dir, man) = fixture("http");
+    let rt = Runtime::reference().unwrap();
+    let model = man.model("ref-mamba").unwrap().clone();
+    let w = Weights::load_init(&man, &model).unwrap();
+    let probe = cases(man.prefill_seq_len, model.vocab_size);
+    let lanes = ["dense", "unified@0.2"];
+    let expect: Vec<Vec<Vec<i32>>> =
+        lanes.iter().map(|v| baseline(&rt, &man, &w, v, &probe)).collect();
+
+    for placement in [Placement::LeastLoaded, Placement::PrefixHash] {
+        let replicas = 2usize;
+        // Lane-major: both of dense's replicas, then both of unified's.
+        let mut engines: Vec<Engine> = Vec::new();
+        for v in &lanes {
+            for _ in 0..replicas {
+                engines.push(Engine::new(&rt, &man, &model, &w, v).unwrap());
+            }
+        }
+        for e in &mut engines {
+            e.attach_prefix_cache(Arc::new(PrefixCache::new(4 << 20)));
+        }
+        let lane_names: Vec<String> = lanes.iter().map(|s| s.to_string()).collect();
+        let pool = PoolConfig { replicas, placement };
+        let ((), report) = with_pooled_server(
+            &engines,
+            &lane_names,
+            pool,
+            HttpConfig::default(),
+            |addr| {
+                for (li, lane) in lanes.iter().enumerate() {
+                    for (ci, (prompt, gen)) in probe.iter().enumerate() {
+                        let body = format!(
+                            "{{\"prompt\":{prompt:?},\"variant\":\"{lane}\",\
+                             \"max_tokens\":{gen},\"stream\":true}}"
+                        );
+                        let resp = client::post_json(addr, "/v1/generate", &body).unwrap();
+                        assert_eq!(resp.status, 200, "{}", resp.body_str());
+                        let (tokens, done) = client::sse_tokens(&resp.body).unwrap();
+                        assert_eq!(
+                            tokens, expect[li][ci],
+                            "{lane} x{replicas} {placement:?} case {ci}: streamed tokens \
+                             diverged from the single-engine baseline"
+                        );
+                        assert!(done.is_some(), "stream missing its completion document");
+                    }
+                }
+                // The stats document reports the pool topology.
+                let stats = client::get(addr, "/stats").unwrap().body_json().unwrap();
+                assert_eq!(stats.expect("replicas_per_lane").as_usize(), Some(replicas));
+                assert_eq!(stats.expect("placement").as_str(), Some(placement.name()));
+            },
+        );
+        assert_eq!(report.metrics.completed as usize, lanes.len() * probe.len());
+    }
+    cleanup(&dir);
+}
