@@ -252,6 +252,8 @@ impl Engine {
     /// (`"injected failure:"`) so tests can tell injected faults from real
     /// backend errors.
     fn check_failure_seam(&self, phase: &str, counter: &AtomicU64, decode: bool) -> Result<()> {
+        // ORDERING: Relaxed — a monotonic call tally; uniqueness comes from
+        // fetch_add's atomicity, and no other data hangs off this counter.
         let call = counter.fetch_add(1, Ordering::Relaxed) + 1;
         let guard = self.failure_plan.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(plan) = guard.as_ref() {
@@ -379,6 +381,7 @@ impl Engine {
         flat.resize(self.batch * self.prefill_len, crate::tokenizer::PAD as i32);
         let tokens = HostTensor::i32(vec![self.batch, self.prefill_len], flat);
         let (logits, conv_f, ssm_f) = self.exec_prefill_frame(&[tokens])?;
+        // ORDERING: Relaxed — stats-only token tally, read by /stats renders.
         self.prefill_tokens.fetch_add(packed, Ordering::Relaxed);
         Ok((0..reqs.len()).map(|i| self.slice_lane(i, &logits, &conv_f, &ssm_f)).collect())
     }
@@ -430,6 +433,7 @@ impl Engine {
                 write_lane(&mut conv0, nl, self.batch, crow, i, &conv);
                 write_lane(&mut ssm0, nl, self.batch, srow, i, &ssm);
                 offset[i] = blen;
+                // ORDERING: Relaxed — stats-only tally of resumed tokens.
                 self.resumed_tokens.fetch_add(blen as u64, Ordering::Relaxed);
                 any = true;
             }
@@ -461,6 +465,7 @@ impl Engine {
                 inputs.push(HostTensor::f32(self.pf_ssm_shape.clone(), s));
             }
             let (logits, conv_f, ssm_f) = self.exec_prefill_frame(&inputs)?;
+            // ORDERING: Relaxed — stats-only token tally.
             self.prefill_tokens
                 .fetch_add(lens.iter().map(|&x| x as u64).sum::<u64>(), Ordering::Relaxed);
             for (i, r) in reqs.iter().enumerate() {
@@ -589,6 +594,7 @@ impl Engine {
     /// Execute + validate one decode call; returns owned (logits, conv, ssm).
     fn run_decode(&self, inputs: &[HostTensor; 3]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         let mut outs = self.decode.execute(&self.weights().dev, inputs).context("decode step")?;
+        // ORDERING: Relaxed — stats-only call tally.
         self.decode_calls.fetch_add(1, Ordering::Relaxed);
         ensure!(outs.len() == 3, "decode must return (logits, conv, ssm)");
         let ssm_t = outs.pop().unwrap();

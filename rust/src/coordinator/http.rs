@@ -69,6 +69,16 @@ use super::router::{Policy, RouteError, Router};
 use super::scheduler::TokenSink;
 use super::{Priority, Request, Response};
 
+/// Lock `m`, recovering the data on poisoning. Serving threads are
+/// panic-free by construction (the `panic-serving` lint, DESIGN.md §16),
+/// so a poisoned mutex means some foreign thread unwound mid-section; the
+/// critical sections in this module keep their guarded structures
+/// consistent at every step, so continuing with the inner value is sound —
+/// and a handler must never die over observability state.
+fn lock_mx<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// Serving knobs. Defaults are sized for loopback testing and small
 /// deployments; every limit exists to keep untrusted input bounded.
 #[derive(Debug, Clone)]
@@ -182,10 +192,15 @@ impl SeqCounters {
     }
 
     fn bump(&self, which: &AtomicU64) {
-        let _writer = self.write.lock().expect("counter write lock");
+        let _writer = lock_mx(&self.write);
+        // ORDERING: the seqlock epoch. AcqRel on both bumps: the Release
+        // half publishes the counter store between them to any reader that
+        // Acquire-loads an even seq; the Acquire half keeps a writer from
+        // hoisting its store above the odd transition. Relaxed here would
+        // let a torn triple pass snapshot()'s even/unchanged test.
         self.seq.fetch_add(1, Ordering::AcqRel); // odd: update in progress
         which.fetch_add(1, Ordering::Release);
-        self.seq.fetch_add(1, Ordering::AcqRel); // even: consistent again
+        self.seq.fetch_add(1, Ordering::AcqRel); // ORDERING: even again, see above
     }
 
     pub fn admit(&self) {
@@ -205,16 +220,23 @@ impl SeqCounters {
     /// ops, so the retry loop is effectively bounded.
     pub fn snapshot(&self) -> CounterSnapshot {
         loop {
+            // ORDERING: Acquire on the seq epoch load pairs with bump()'s
+            // AcqRel transitions — an even value here means every counter
+            // store from that write epoch is visible below.
             let before = self.seq.load(Ordering::Acquire);
             if before % 2 == 1 {
                 std::hint::spin_loop();
                 continue;
             }
+            // ORDERING: Acquire loads keep the three counter reads from
+            // sinking below the seq re-check that validates them.
             let snap = CounterSnapshot {
                 admitted: self.admitted.load(Ordering::Acquire),
                 completed: self.completed.load(Ordering::Acquire),
                 failed: self.failed.load(Ordering::Acquire),
             };
+            // ORDERING: Acquire re-load of the seq epoch; equal-and-even
+            // brackets the triple inside one write epoch.
             if self.seq.load(Ordering::Acquire) == before {
                 return snap;
             }
@@ -335,11 +357,13 @@ pub fn serve_pooled(
         lanes: engines
             .chunks(pool.replicas)
             .zip(lanes)
-            .map(|(chunk, name)| LaneInfo {
-                name: name.clone(),
-                vocab: chunk[0].vocab(),
-                length_aware: chunk[0].length_aware,
-                prefill_len: chunk[0].prefill_len,
+            .filter_map(|(chunk, name)| {
+                chunk.first().map(|e| LaneInfo {
+                    name: name.clone(),
+                    vocab: e.vocab(),
+                    length_aware: e.length_aware,
+                    prefill_len: e.prefill_len,
+                })
             })
             .collect(),
         admission: Mutex::new(VecDeque::new()),
@@ -376,6 +400,9 @@ fn acceptor<'scope>(
                 scope.spawn(move || handle_connection(stream, shared, cfg));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // ORDERING: Acquire pairs with the scheduler loop's final
+                // Release store — seeing `drained` means the drain sweep
+                // and final stats render happened-before we return.
                 if shared.drained.load(Ordering::Acquire) {
                     return;
                 }
@@ -385,6 +412,7 @@ fn acceptor<'scope>(
                 // Transient accept error: if we're done, leave; otherwise
                 // keep the listener alive (one bad connection must not
                 // kill the server).
+                // ORDERING: Acquire — same drained/Release pairing as above.
                 if shared.drained.load(Ordering::Acquire) {
                     return;
                 }
@@ -413,16 +441,17 @@ fn scheduler_loop(
     let t0 = Instant::now();
     let mut ticks = 0u64;
     loop {
+        // ORDERING: Relaxed read of the caller's shutdown flag (signal
+        // handler does a plain store; no data is published through it) —
+        // the Release store on `draining` is what the handlers' Acquire
+        // loads synchronise with.
         if shutdown.load(Ordering::Relaxed) {
             shared.draining.store(true, Ordering::Release);
         }
         // Admissions → pools, with a per-request token sink feeding the
         // handler's event channel. The sink travels with the request if
         // the pool re-routes it off an unhealthy replica before prefill.
-        let newly: Vec<Admitted> = {
-            let mut q = shared.admission.lock().expect("admission lock");
-            q.drain(..).collect()
-        };
+        let newly: Vec<Admitted> = lock_mx(&shared.admission).drain(..).collect();
         for adm in newly {
             let tx = adm.events.clone();
             let sink: TokenSink = if adm.stream {
@@ -436,16 +465,27 @@ fn scheduler_loop(
                 Box::new(|_| {})
             };
             let id = adm.req.id;
-            match pools[adm.lane].submit_with_sink(adm.req, sink) {
+            let lane_name =
+                shared.lanes.get(adm.lane).map(|l| l.name.clone()).unwrap_or_default();
+            let submitted = match pools.get_mut(adm.lane) {
+                Some(pool) => pool.submit_with_sink(adm.req, sink),
+                None => Err(anyhow::anyhow!("admitted to unknown lane index {}", adm.lane)),
+            };
+            match submitted {
                 Ok(_) => {
-                    inflight[adm.lane].insert(id, adm.events);
+                    if let Some(lane_inflight) = inflight.get_mut(adm.lane) {
+                        lane_inflight.insert(id, adm.events);
+                    }
                 }
                 Err(e) => {
                     // No admitting replica right now (all draining/down):
                     // fail typed instead of parking work on a dead pool.
-                    let msg = format!("lane {:?}: {e:#}", shared.lanes[adm.lane].name);
+                    let msg = format!("lane {lane_name:?}: {e:#}");
                     let _ = tx.send(Event::Fail(msg));
-                    shared.router.lock().expect("router lock").note_done(&shared.lanes[adm.lane].name);
+                    lock_mx(&shared.router).note_done(&lane_name);
+                    // ORDERING: AcqRel keeps the admission-slot release
+                    // ordered against the handlers' CAS loop on `pending`
+                    // (the backpressure bound must never over-admit).
                     shared.pending.fetch_sub(1, Ordering::AcqRel);
                     shared.counters.fail();
                 }
@@ -456,27 +496,34 @@ fn scheduler_loop(
         // re-routed to healthy replicas, mid-stream work surfaced through
         // `take_failures`).
         let mut any_active = false;
-        for li in 0..pools.len() {
-            if !pools[li].is_idle() {
+        for (li, (pool, lane_inflight)) in
+            pools.iter_mut().zip(inflight.iter_mut()).enumerate()
+        {
+            let lane_name = shared.lanes.get(li).map(|l| l.name.as_str()).unwrap_or("");
+            if !pool.is_idle() {
                 any_active = true;
             }
-            for r in pools[li].step() {
+            for r in pool.step() {
                 metrics.record_response(&r);
-                shared.router.lock().expect("router lock").note_done(&shared.lanes[li].name);
+                lock_mx(&shared.router).note_done(lane_name);
+                // ORDERING: AcqRel pairs with the handlers' admission CAS —
+                // releasing the slot must not reorder past the counter
+                // bump that makes the completion observable.
                 shared.pending.fetch_sub(1, Ordering::AcqRel);
                 shared.counters.complete();
-                if let Some(tx) = inflight[li].remove(&r.id) {
+                if let Some(tx) = lane_inflight.remove(&r.id) {
                     let _ = tx.send(Event::Done(r));
                 }
             }
             // Failover fallout: what the pool could not save fails loudly
             // (500s) rather than hanging its handler.
-            for f in pools[li].take_failures() {
-                if let Some(tx) = inflight[li].remove(&f.id) {
-                    let _ =
-                        tx.send(Event::Fail(format!("lane {:?}: {}", shared.lanes[li].name, f.error)));
+            for f in pool.take_failures() {
+                if let Some(tx) = lane_inflight.remove(&f.id) {
+                    let _ = tx.send(Event::Fail(format!("lane {lane_name:?}: {}", f.error)));
                 }
-                shared.router.lock().expect("router lock").note_done(&shared.lanes[li].name);
+                lock_mx(&shared.router).note_done(lane_name);
+                // ORDERING: AcqRel — same admission-slot release pairing
+                // as the completion path above.
                 shared.pending.fetch_sub(1, Ordering::AcqRel);
                 shared.counters.fail();
             }
@@ -484,20 +531,23 @@ fn scheduler_loop(
             // the lane keeps serving — the same restart-clean semantics
             // the pre-pool single-scheduler loop had. (In-process pool
             // drivers like the fault tests manage health themselves.)
-            for ri in 0..pools[li].len() {
-                if pools[li].health(ri) == Health::Down {
-                    pools[li].revive(ri);
+            for ri in 0..pool.len() {
+                if pool.health(ri) == Health::Down {
+                    pool.revive(ri);
                 }
             }
         }
         ticks += 1;
         if ticks % 8 == 1 || !any_active {
             let rendered = render_stats(shared, &metrics, &pools, engines, pcfg.replicas, t0);
-            *shared.stats.lock().expect("stats lock") = rendered;
+            *lock_mx(&shared.stats) = rendered;
         }
+        // ORDERING: Acquire pairs with the Release store above (or a future
+        // cross-thread drainer) so the drain decision sees every admission
+        // that happened-before the flag flipped.
         if shared.draining.load(Ordering::Acquire)
             && pools.iter().all(|p| p.is_idle())
-            && shared.admission.lock().expect("admission lock").is_empty()
+            && lock_mx(&shared.admission).is_empty()
         {
             break;
         }
@@ -508,18 +558,26 @@ fn scheduler_loop(
     // Final sweep: `draining` was published before this point, so any
     // admission that still slips in past its handler's own recheck is
     // failed here as a drain rejection rather than left waiting.
-    for adm in shared.admission.lock().expect("admission lock").drain(..) {
+    let leftovers: Vec<Admitted> = lock_mx(&shared.admission).drain(..).collect();
+    for adm in leftovers {
         let _ = adm.events.send(Event::Fail("server draining".to_string()));
-        shared.router.lock().expect("router lock").note_done(&shared.lanes[adm.lane].name);
+        let lane_name = shared.lanes.get(adm.lane).map(|l| l.name.as_str()).unwrap_or("");
+        lock_mx(&shared.router).note_done(lane_name);
+        // ORDERING: AcqRel — admission-slot release, pairs with the
+        // handlers' CAS loop on `pending`.
         shared.pending.fetch_sub(1, Ordering::AcqRel);
         shared.counters.fail();
     }
     metrics.wall = t0.elapsed();
-    *shared.stats.lock().expect("stats lock") =
+    *lock_mx(&shared.stats) =
         render_stats(shared, &metrics, &pools, engines, pcfg.replicas, t0);
+    // ORDERING: Release publishes every post-drain write (final stats,
+    // counter state) to the acceptor's Acquire load before it returns.
     shared.drained.store(true, Ordering::Release);
     Ok(ServeReport {
         metrics,
+        // ORDERING: Relaxed — plain monotonic tallies read after the
+        // scheduler loop is the only thread left touching them.
         rejected_429: shared.rejected_429.load(Ordering::Relaxed),
         rejected_503: shared.rejected_503.load(Ordering::Relaxed),
     })
@@ -543,14 +601,14 @@ fn render_stats(
         .lanes
         .iter()
         .zip(pools)
-        .enumerate()
-        .map(|(li, (info, pool))| {
+        .zip(engines.chunks(replicas.max(1)))
+        .map(|((info, pool), lane_engines)| {
             let rstats = pool.replica_stats();
             // Aggregate the lane's replica caches so the lane-level
             // `cache` block keeps its pre-pool meaning (with one replica
             // it is bytewise the old document).
             let mut cs = CacheStats::default();
-            for e in &engines[li * replicas..(li + 1) * replicas] {
+            for e in lane_engines {
                 if let Some(c) = e.prefix_cache() {
                     let one = c.stats();
                     cs.hits += one.hits;
@@ -628,20 +686,22 @@ fn stats_body(shared: &Shared) -> String {
         ("completed", num(c.completed as f64)),
         ("failed", num(c.failed as f64)),
         ("in_flight", num(c.in_flight() as f64)),
+        // ORDERING: Relaxed ×3 — stats-only reads of monotonic tallies and
+        // the drain flag; staleness is acceptable, no data depends on them.
         ("rejected_429", num(shared.rejected_429.load(Ordering::Relaxed) as f64)),
         ("rejected_503", num(shared.rejected_503.load(Ordering::Relaxed) as f64)),
         ("draining", Json::Bool(shared.draining.load(Ordering::Relaxed))),
     ])
     .to_string();
-    let detail = shared.stats.lock().expect("stats lock").clone();
+    let detail = lock_mx(&shared.stats).clone();
     let inner = detail.trim();
     // Splice `{head...}` + `{detail...}` into one object. The detail is
     // always an object render; before the loop's first render it is the
     // empty `{}` placeholder, in which case the head stands alone.
-    if inner.len() <= 2 || !inner.starts_with('{') {
-        return head;
+    match (head.strip_suffix('}'), inner.strip_prefix('{')) {
+        (Some(h), Some(rest)) if rest.trim() != "}" => format!("{h},{rest}"),
+        _ => head,
     }
-    format!("{},{}", &head[..head.len() - 1], &inner[1..])
 }
 
 // ---------------------------------------------------------------------------
@@ -674,7 +734,7 @@ fn read_head(stream: &mut TcpStream, max: usize) -> std::result::Result<(Vec<u8>
         }
         match stream.read(&mut chunk) {
             Ok(0) => return Err(ReadErr::Truncated),
-            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Ok(n) => buf.extend_from_slice(chunk.get(..n).unwrap_or(&[])),
             Err(e) if is_timeout(&e) => return Err(ReadErr::Timeout),
             Err(_) => return Err(ReadErr::Truncated),
         }
@@ -816,6 +876,8 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared, cfg: &HttpConfig) {
     };
     match (head.method.as_str(), head.path.as_str()) {
         ("GET", "/healthz") => {
+            // ORDERING: Relaxed — health probes only need an eventually
+            // current flag; no data is read on the strength of this load.
             let draining = shared.draining.load(Ordering::Relaxed);
             let body = obj(vec![
                 ("status", s(if draining { "draining" } else { "ok" })),
@@ -861,7 +923,7 @@ fn read_body(
             Ok(0) => return Err((400, "truncated body".to_string())),
             Ok(k) => {
                 let want = n - body.len();
-                body.extend_from_slice(&chunk[..k.min(want)]);
+                body.extend_from_slice(chunk.get(..k.min(want)).unwrap_or(&[]));
             }
             Err(e) if is_timeout(&e) => return Err((408, "body read timed out".to_string())),
             Err(e) => return Err((400, format!("body read failed: {e}"))),
@@ -925,6 +987,8 @@ fn handle_generate(
         Err(msg) => return respond_error(stream, 400, &msg),
     };
     let req = Request {
+        // ORDERING: Relaxed — ids only need uniqueness, which fetch_add's
+        // atomicity alone guarantees; nothing is published through it.
         id: shared.next_id.fetch_add(1, Ordering::Relaxed),
         prompt: gen.prompt,
         gen_tokens: gen.gen_tokens,
@@ -934,7 +998,7 @@ fn handle_generate(
     };
     // Route first (cheap, needs no admission slot); the typed error keeps
     // client mistakes (400) apart from deployment gaps (404).
-    let lane_name = match shared.router.lock().expect("router lock").route_checked(&req) {
+    let lane_name = match lock_mx(&shared.router).route_checked(&req) {
         Ok(l) => l,
         Err(e @ (RouteError::Malformed { .. } | RouteError::NeedsVariant)) => {
             return respond_error(stream, 400, &e.to_string());
@@ -943,8 +1007,14 @@ fn handle_generate(
             return respond_error(stream, 404, &e.to_string());
         }
     };
-    let lane = shared.lanes.iter().position(|l| l.name == lane_name).expect("router lane");
-    let info = &shared.lanes[lane];
+    // The router only hands out names it was built from, but a config/router
+    // mismatch must surface as a typed 500, not a worker-thread panic.
+    let Some(lane) = shared.lanes.iter().position(|l| l.name == lane_name) else {
+        return respond_error(stream, 500, &format!("router picked unknown lane {lane_name:?}"));
+    };
+    let Some(info) = shared.lanes.get(lane) else {
+        return respond_error(stream, 500, &format!("router picked unknown lane {lane_name:?}"));
+    };
     // The backends index embeddings by token id unchecked — the socket is
     // where range validation must happen.
     if req.prompt.iter().any(|&t| t < 0 || t as usize >= info.vocab) {
@@ -976,19 +1046,27 @@ fn handle_generate(
     }
 
     // ---- bounded admission (the backpressure point) ---------------------
+    // ORDERING: Acquire pairs with the scheduler loop's Release store of
+    // `draining` so a rejected request also observes any drain bookkeeping
+    // that preceded the flag.
     if shared.draining.load(Ordering::Acquire) {
+        // ORDERING: Relaxed — monotonic rejection tally, read only for stats.
         shared.rejected_503.fetch_add(1, Ordering::Relaxed);
         return respond_retry(stream, 503, "server draining", cfg.retry_after_s);
     }
     let mut cur = shared.pending.load(Ordering::Acquire);
     loop {
         if cur >= cfg.queue_cap {
+            // ORDERING: Relaxed — monotonic rejection tally, stats only.
             shared.rejected_429.fetch_add(1, Ordering::Relaxed);
             return respond_retry(stream, 429, "admission queue full", cfg.retry_after_s);
         }
         match shared.pending.compare_exchange_weak(
             cur,
             cur + 1,
+            // ORDERING: AcqRel on success so slot acquisition synchronizes
+            // with the scheduler's AcqRel fetch_sub releases; Acquire on
+            // failure to re-read a current count before retrying.
             Ordering::AcqRel,
             Ordering::Acquire,
         ) {
@@ -999,19 +1077,18 @@ fn handle_generate(
     shared.counters.admit();
     let id = req.id;
     let (tx, rx) = std::sync::mpsc::channel::<Event>();
-    shared
-        .admission
-        .lock()
-        .expect("admission lock")
-        .push_back(Admitted { req, lane, events: tx, stream: gen.stream });
-    shared.router.lock().expect("router lock").note_enqueued(&lane_name);
+    lock_mx(&shared.admission).push_back(Admitted { req, lane, events: tx, stream: gen.stream });
+    lock_mx(&shared.router).note_enqueued(&lane_name);
     // Drain race: if `draining` latched between our check and the push,
     // the scheduler loop may already have swept past the queue. Reclaim
     // our own entry if it is still there; if the loop took it, the work
     // is admitted and will complete normally.
+    // ORDERING: Acquire — pairs with the Release store of `draining`; if we
+    // see the flag here, the sweep that might have missed our entry has
+    // happened-before this load, so the reclaim check below is decisive.
     if shared.draining.load(Ordering::Acquire) {
         let reclaimed = {
-            let mut q = shared.admission.lock().expect("admission lock");
+            let mut q = lock_mx(&shared.admission);
             match q.iter().position(|a| a.req.id == id) {
                 Some(pos) => {
                     q.remove(pos);
@@ -1021,9 +1098,12 @@ fn handle_generate(
             }
         };
         if reclaimed {
-            shared.router.lock().expect("router lock").note_done(&lane_name);
+            lock_mx(&shared.router).note_done(&lane_name);
+            // ORDERING: AcqRel — releases the admission slot; pairs with the
+            // Acquire side of the CAS loop above.
             shared.pending.fetch_sub(1, Ordering::AcqRel);
             shared.counters.fail();
+            // ORDERING: Relaxed — monotonic rejection tally, stats only.
             shared.rejected_503.fetch_add(1, Ordering::Relaxed);
             return respond_retry(stream, 503, "server draining", cfg.retry_after_s);
         }
@@ -1214,7 +1294,8 @@ pub mod client {
             .windows(4)
             .position(|w| w == b"\r\n\r\n")
             .ok_or_else(|| bad("no header terminator"))?;
-        let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| bad("head not UTF-8"))?;
+        let head = std::str::from_utf8(buf.get(..head_end).unwrap_or(&[]))
+            .map_err(|_| bad("head not UTF-8"))?;
         let mut lines = head.split("\r\n");
         let status_line = lines.next().ok_or_else(|| bad("empty head"))?;
         let mut parts = status_line.splitn(3, ' ');
@@ -1234,7 +1315,7 @@ pub mod client {
             let (k, v) = line.split_once(':').ok_or_else(|| bad("bad header line"))?;
             headers.push((k.trim().to_string(), v.trim().to_string()));
         }
-        let payload = &buf[head_end + 4..];
+        let payload = buf.get(head_end + 4..).unwrap_or(&[]);
         let chunked = headers
             .iter()
             .any(|(k, v)| k.eq_ignore_ascii_case("transfer-encoding") && v.eq_ignore_ascii_case("chunked"));
@@ -1248,12 +1329,15 @@ pub mod client {
             .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
             .map(|(_, v)| v.parse::<usize>())
         {
-            Some(Ok(n)) => {
-                if payload.len() < n {
-                    return Err(bad(&format!("body shorter than Content-Length ({} < {n})", payload.len())));
+            Some(Ok(n)) => match payload.get(..n) {
+                Some(p) => p.to_vec(),
+                None => {
+                    return Err(bad(&format!(
+                        "body shorter than Content-Length ({} < {n})",
+                        payload.len()
+                    )));
                 }
-                payload[..n].to_vec()
-            }
+            },
             Some(Err(_)) => return Err(bad("unparseable Content-Length")),
             None => payload.to_vec(),
         };
@@ -1269,26 +1353,27 @@ pub mod client {
         loop {
             let line_end =
                 p.windows(2).position(|w| w == b"\r\n").ok_or_else(|| bad("chunk size line unterminated"))?;
-            let size_str = std::str::from_utf8(&p[..line_end]).map_err(|_| bad("chunk size not UTF-8"))?;
+            let size_str = std::str::from_utf8(p.get(..line_end).unwrap_or(&[]))
+                .map_err(|_| bad("chunk size not UTF-8"))?;
             if size_str.is_empty() || !size_str.bytes().all(|b| b.is_ascii_hexdigit()) {
                 return Err(bad(&format!("malformed chunk size line {size_str:?}")));
             }
             let size = usize::from_str_radix(size_str, 16).map_err(|_| bad("chunk size overflow"))?;
-            p = &p[line_end + 2..];
+            p = p.get(line_end + 2..).unwrap_or(&[]);
             if size == 0 {
                 if p != b"\r\n" {
                     return Err(bad("missing terminal CRLF after last chunk"));
                 }
                 return Ok(chunks);
             }
-            if p.len() < size + 2 {
+            let Some(payload) = p.get(..size) else {
                 return Err(bad("truncated chunk payload"));
-            }
-            if &p[size..size + 2] != b"\r\n" {
+            };
+            if p.get(size..size + 2) != Some(b"\r\n".as_slice()) {
                 return Err(bad("chunk payload not CRLF-terminated"));
             }
-            chunks.push(p[..size].to_vec());
-            p = &p[size + 2..];
+            chunks.push(payload.to_vec());
+            p = p.get(size + 2..).unwrap_or(&[]);
         }
     }
 
@@ -1346,10 +1431,11 @@ pub mod client {
             match stream.read(&mut chunk) {
                 Ok(0) => break,
                 Ok(n) => {
-                    buf.extend_from_slice(&chunk[..n]);
+                    buf.extend_from_slice(chunk.get(..n).unwrap_or(&[]));
                     if ttft_us.is_none() {
                         if let Some(he) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
-                            if buf[he + 4..].windows(5).any(|w| w == b"data:") {
+                            let tail = buf.get(he + 4..).unwrap_or(&[]);
+                            if tail.windows(5).any(|w| w == b"data:") {
                                 ttft_us = Some(t0.elapsed().as_micros() as u64);
                             }
                         }

@@ -154,7 +154,7 @@ pub fn pick_hrw(key: u64, eligible: &[usize]) -> Option<usize> {
 /// cached system-prompt prefix hash identically and stay replica-local.
 pub fn placement_key(prompt: &[i32], chunk: usize) -> u64 {
     let n = if chunk == 0 { prompt.len() } else { prompt.len().min(chunk) };
-    fnv1a_tokens(&prompt[..n])
+    fnv1a_tokens(prompt.get(..n).unwrap_or(prompt))
 }
 
 /// A request the pool could not serve: mid-stream on a replica that died
@@ -202,7 +202,7 @@ impl Heartbeat {
         }
         self.sum_us += us;
         while self.window.len() > WINDOW {
-            let (old_ok, old_us) = self.window.pop_front().expect("non-empty");
+            let Some((old_ok, old_us)) = self.window.pop_front() else { break };
             if !old_ok {
                 self.errors -= 1;
             }
@@ -264,16 +264,18 @@ impl<'e> ReplicaPool<'e> {
     /// A pool over `engines`, all replicas of the **same** lane (same
     /// model + variant — placement must be free to pick any of them).
     pub fn new(engines: &'e [Engine], placement: Placement) -> Result<ReplicaPool<'e>> {
-        ensure!(!engines.is_empty(), "replica pool needs at least one engine");
+        let Some(first) = engines.first() else {
+            return Err(anyhow!("replica pool needs at least one engine"));
+        };
         for e in engines {
             ensure!(
-                e.model_name == engines[0].model_name && e.variant == engines[0].variant,
+                e.model_name == first.model_name && e.variant == first.variant,
                 "replica pool mixes lanes: {}/{} vs {}/{} (one pool serves one lane; \
                  cross-lane routing is the Router's job)",
                 e.model_name,
                 e.variant,
-                engines[0].model_name,
-                engines[0].variant
+                first.model_name,
+                first.variant
             );
         }
         Ok(ReplicaPool {
@@ -291,7 +293,7 @@ impl<'e> ReplicaPool<'e> {
                 .collect(),
             placement,
             slow_step_us: None,
-            chunk: engines[0].prefill_len,
+            chunk: first.prefill_len,
             reroutes: 0,
             failures: Vec::new(),
         })
@@ -317,27 +319,32 @@ impl<'e> ReplicaPool<'e> {
         self.placement
     }
 
+    /// Health of replica `r`. An out-of-range index reads as `Down` (no
+    /// such replica is serving) rather than panicking a caller thread.
     pub fn health(&self, r: usize) -> Health {
-        self.replicas[r].health
+        self.replicas.get(r).map(|rep| rep.health).unwrap_or(Health::Down)
     }
 
     /// Explicitly drain replica `r`: admit nothing, finish residents,
     /// re-route its queue on the next heartbeat. Never auto-recovers.
     pub fn set_draining(&mut self, r: usize) {
-        if self.replicas[r].health == Health::Up {
-            self.replicas[r].health = Health::Draining;
-            self.replicas[r].slow_drain = false;
+        if let Some(rep) = self.replicas.get_mut(r) {
+            if rep.health == Health::Up {
+                rep.health = Health::Draining;
+                rep.slow_drain = false;
+            }
         }
     }
 
     /// Return a Draining or Down replica to service with a clean slate.
     pub fn revive(&mut self, r: usize) {
-        if self.replicas[r].health == Health::Down {
-            self.replicas[r].sched = Scheduler::new(self.replicas[r].engine);
+        let Some(rep) = self.replicas.get_mut(r) else { return };
+        if rep.health == Health::Down {
+            rep.sched = Scheduler::new(rep.engine);
         }
-        self.replicas[r].health = Health::Up;
-        self.replicas[r].slow_drain = false;
-        self.replicas[r].beat.reset();
+        rep.health = Health::Up;
+        rep.slow_drain = false;
+        rep.beat.reset();
     }
 
     /// Typed failures accumulated since the last call (mid-stream requests
@@ -360,14 +367,20 @@ impl<'e> ReplicaPool<'e> {
     /// Placement decision for `prompt` over the current `Up` set; `None`
     /// when no replica is admitting.
     fn pick_for(&self, prompt: &[i32]) -> Option<usize> {
-        let eligible: Vec<usize> = (0..self.replicas.len())
-            .filter(|&i| self.replicas[i].health == Health::Up)
-            .collect();
+        let up = || {
+            self.replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, rep)| rep.health == Health::Up)
+        };
         match self.placement {
             Placement::LeastLoaded => {
-                eligible.into_iter().min_by_key(|&i| (self.replicas[i].sched.in_flight(), i))
+                up().min_by_key(|&(i, rep)| (rep.sched.in_flight(), i)).map(|(i, _)| i)
             }
-            Placement::PrefixHash => pick_hrw(placement_key(prompt, self.chunk), &eligible),
+            Placement::PrefixHash => {
+                let eligible: Vec<usize> = up().map(|(i, _)| i).collect();
+                pick_hrw(placement_key(prompt, self.chunk), &eligible)
+            }
         }
     }
 
@@ -378,7 +391,10 @@ impl<'e> ReplicaPool<'e> {
         let r = self
             .pick_for(&req.prompt)
             .ok_or_else(|| anyhow!("no healthy replica (all draining or down)"))?;
-        self.replicas[r].sched.submit(req);
+        let Some(rep) = self.replicas.get_mut(r) else {
+            return Err(anyhow!("placement picked replica {r} out of range"));
+        };
+        rep.sched.submit(req);
         Ok(r)
     }
 
@@ -388,7 +404,10 @@ impl<'e> ReplicaPool<'e> {
         let r = self
             .pick_for(&req.prompt)
             .ok_or_else(|| anyhow!("no healthy replica (all draining or down)"))?;
-        self.replicas[r].sched.submit_with_sink(req, sink);
+        let Some(rep) = self.replicas.get_mut(r) else {
+            return Err(anyhow!("placement picked replica {r} out of range"));
+        };
+        rep.sched.submit_with_sink(req, sink);
         Ok(r)
     }
 
@@ -397,18 +416,27 @@ impl<'e> ReplicaPool<'e> {
     /// invisible to clients; with nowhere to go they fail typed instead of
     /// hanging.
     fn shed_queued(&mut self, r: usize) {
-        let moved = self.replicas[r].sched.take_queued();
+        let moved = match self.replicas.get_mut(r) {
+            Some(rep) => rep.sched.take_queued(),
+            None => return,
+        };
         for (req, sink) in moved {
-            match self.pick_for(&req.prompt) {
-                Some(target) => {
+            let placed = match self.pick_for(&req.prompt) {
+                Some(target) => self.replicas.get_mut(target),
+                None => None,
+            };
+            match placed {
+                Some(rep) => {
                     self.reroutes += 1;
                     match sink {
-                        Some(s) => self.replicas[target].sched.submit_with_sink(req, s),
-                        None => self.replicas[target].sched.submit(req),
+                        Some(s) => rep.sched.submit_with_sink(req, s),
+                        None => rep.sched.submit(req),
                     }
                 }
                 None => {
-                    self.replicas[r].failed += 1;
+                    if let Some(rep) = self.replicas.get_mut(r) {
+                        rep.failed += 1;
+                    }
                     self.failures.push(PoolFailure {
                         id: req.id,
                         replica: r,
@@ -424,10 +452,14 @@ impl<'e> ReplicaPool<'e> {
     /// would duplicate observed tokens), re-route its untouched queue, and
     /// reset its scheduler so a later [`Self::revive`] starts clean.
     fn fail_replica(&mut self, r: usize, err: &str) {
-        self.replicas[r].health = Health::Down;
-        self.replicas[r].slow_drain = false;
-        let active = self.replicas[r].sched.active_ids();
-        self.replicas[r].failed += active.len() as u64;
+        let active = {
+            let Some(rep) = self.replicas.get_mut(r) else { return };
+            rep.health = Health::Down;
+            rep.slow_drain = false;
+            let active = rep.sched.active_ids();
+            rep.failed += active.len() as u64;
+            active
+        };
         for id in active {
             self.failures.push(PoolFailure {
                 id,
@@ -436,7 +468,9 @@ impl<'e> ReplicaPool<'e> {
             });
         }
         self.shed_queued(r);
-        self.replicas[r].sched = Scheduler::new(self.replicas[r].engine);
+        if let Some(rep) = self.replicas.get_mut(r) {
+            rep.sched = Scheduler::new(rep.engine);
+        }
     }
 
     /// Evaluate every replica's heartbeat window: flip `Up` replicas whose
@@ -444,26 +478,30 @@ impl<'e> ReplicaPool<'e> {
     /// recover latency-drained replicas that cooled or emptied, and shed
     /// the queue of every non-`Up` replica.
     fn heartbeat(&mut self) {
+        let thr_opt = self.slow_step_us;
         for r in 0..self.replicas.len() {
-            if let Some(thr) = self.slow_step_us {
-                let rep = &mut self.replicas[r];
-                match rep.health {
-                    Health::Up if rep.beat.full() && rep.beat.mean_us() > thr => {
-                        rep.health = Health::Draining;
-                        rep.slow_drain = true;
+            let mut shed = false;
+            if let Some(rep) = self.replicas.get_mut(r) {
+                if let Some(thr) = thr_opt {
+                    match rep.health {
+                        Health::Up if rep.beat.full() && rep.beat.mean_us() > thr => {
+                            rep.health = Health::Draining;
+                            rep.slow_drain = true;
+                        }
+                        Health::Draining
+                            if rep.slow_drain
+                                && (rep.beat.mean_us() <= thr / 2 || rep.sched.is_idle()) =>
+                        {
+                            rep.health = Health::Up;
+                            rep.slow_drain = false;
+                            rep.beat.reset();
+                        }
+                        _ => {}
                     }
-                    Health::Draining
-                        if rep.slow_drain
-                            && (rep.beat.mean_us() <= thr / 2 || rep.sched.is_idle()) =>
-                    {
-                        rep.health = Health::Up;
-                        rep.slow_drain = false;
-                        rep.beat.reset();
-                    }
-                    _ => {}
                 }
+                shed = rep.health != Health::Up;
             }
-            if self.replicas[r].health != Health::Up {
+            if shed {
                 self.shed_queued(r);
             }
         }
@@ -478,20 +516,29 @@ impl<'e> ReplicaPool<'e> {
         self.heartbeat();
         let mut done = Vec::new();
         for r in 0..self.replicas.len() {
-            if self.replicas[r].health == Health::Down || self.replicas[r].sched.is_idle() {
-                continue;
-            }
-            let t0 = Instant::now();
-            match self.replicas[r].sched.step() {
-                Ok(resps) => {
-                    self.replicas[r].beat.record(true, t0.elapsed().as_micros() as u64);
-                    self.replicas[r].completed += resps.len() as u64;
-                    done.extend(resps);
+            // Step inside a scope that borrows only this replica, so the
+            // failure path below can take `&mut self` for fail_replica.
+            let outcome = {
+                let Some(rep) = self.replicas.get_mut(r) else { continue };
+                if rep.health == Health::Down || rep.sched.is_idle() {
+                    continue;
                 }
-                Err(e) => {
-                    self.replicas[r].beat.record(false, 0);
-                    self.fail_replica(r, &format!("{e:#}"));
+                let t0 = Instant::now();
+                match rep.sched.step() {
+                    Ok(resps) => {
+                        rep.beat.record(true, t0.elapsed().as_micros() as u64);
+                        rep.completed += resps.len() as u64;
+                        Ok(resps)
+                    }
+                    Err(e) => {
+                        rep.beat.record(false, 0);
+                        Err(format!("{e:#}"))
+                    }
                 }
+            };
+            match outcome {
+                Ok(resps) => done.extend(resps),
+                Err(msg) => self.fail_replica(r, &msg),
             }
         }
         done
@@ -520,25 +567,37 @@ impl<'e> ReplicaPool<'e> {
     where
         F: FnMut() -> Result<DeviceWeights>,
     {
-        let Some(r) =
-            (0..self.replicas.len()).find(|&i| self.replicas[i].engine.weights_tag() != tag)
+        let Some(r) = self
+            .replicas
+            .iter()
+            .position(|rep| rep.engine.weights_tag() != tag)
         else {
             return Ok(true);
         };
-        match self.replicas[r].health {
+        match self.health(r) {
             Health::Up => {
-                self.replicas[r].health = Health::Draining;
-                self.replicas[r].slow_drain = false;
+                if let Some(rep) = self.replicas.get_mut(r) {
+                    rep.health = Health::Draining;
+                    rep.slow_drain = false;
+                }
                 self.shed_queued(r);
             }
-            Health::Draining if self.replicas[r].sched.is_idle() => {
-                self.replicas[r].engine.hot_swap_weights(load()?, tag);
-                self.replicas[r].health = Health::Up;
+            Health::Draining => {
+                let idle = self.replicas.get(r).is_some_and(|rep| rep.sched.is_idle());
+                if idle {
+                    let w = load()?;
+                    if let Some(rep) = self.replicas.get_mut(r) {
+                        rep.engine.hot_swap_weights(w, tag);
+                        rep.health = Health::Up;
+                    }
+                } // else: residents still finishing
             }
             Health::Down => {
-                self.replicas[r].engine.hot_swap_weights(load()?, tag);
+                let w = load()?;
+                if let Some(rep) = self.replicas.get_mut(r) {
+                    rep.engine.hot_swap_weights(w, tag);
+                }
             }
-            Health::Draining => {} // residents still finishing
         }
         Ok(false)
     }

@@ -300,12 +300,12 @@ impl<'e> Scheduler<'e> {
         // just re-queueing its Seq — it resumes bit-identically via gather.
         // Each swap strictly raises the resident priority multiset, so the
         // loop is bounded; equal priorities never preempt (no churn).
-        while let Some(best) = self
+        while let Some((best, best_prio)) = self
             .ready
             .iter()
             .enumerate()
             .max_by(|(ia, a), (ib, b)| a.priority.cmp(&b.priority).then(ib.cmp(ia)))
-            .map(|(i, _)| i)
+            .map(|(i, s)| (i, s.priority))
         {
             let lane_idx = match self.lanes.iter().position(|l| l.is_none()) {
                 Some(free) => free,
@@ -319,22 +319,36 @@ impl<'e> Scheduler<'e> {
                     else {
                         break; // no lanes at all
                     };
-                    if victim_prio >= self.ready[best].priority {
+                    if victim_prio >= best_prio {
                         break; // nothing strictly lower-priority to evict
                     }
-                    let mut victim = self.lanes[victim_idx].take().expect("resident");
+                    let Some(mut victim) =
+                        self.lanes.get_mut(victim_idx).and_then(|l| l.take())
+                    else {
+                        break; // victim vanished under us: stop placing
+                    };
                     victim.waiting_since = Instant::now();
                     self.preemptions += 1;
                     self.ready.push_back(victim);
                     victim_idx
                 }
             };
-            let mut seq = self.ready.remove(best).expect("index from enumerate");
+            let Some(mut seq) = self.ready.remove(best) else {
+                break; // enumerate index out of range: stop placing
+            };
             // Waiting in `ready` for a lane is queueing too — fold it into
             // queue_us so every latency phase (including every preempted
             // interval) is reported.
             seq.queue_us += seq.waiting_since.elapsed().as_micros() as u64;
-            self.lanes[lane_idx] = Some(seq);
+            match self.lanes.get_mut(lane_idx) {
+                Some(lane) => *lane = Some(seq),
+                None => {
+                    // lane_idx came from position()/enumerate over lanes;
+                    // if it is somehow gone, requeue rather than drop.
+                    self.ready.push_back(seq);
+                    break;
+                }
+            }
         }
 
         // ---- decode one frame step + retire finished lanes --------------
@@ -346,8 +360,8 @@ impl<'e> Scheduler<'e> {
             // backend that is the IDLE_LANE sentinel and the backend skips
             // the lane's model math entirely — a half-empty frame no longer
             // pays full-model decodes for phantom PAD tokens.
-            for (i, lane) in self.lanes.iter().enumerate() {
-                self.frame.tokens[i] = match lane {
+            for (tok, lane) in self.frame.tokens.iter_mut().zip(&self.lanes) {
+                *tok = match lane {
                     Some(seq) => seq.next_token,
                     None => self.engine.idle_token(),
                 };
@@ -362,11 +376,14 @@ impl<'e> Scheduler<'e> {
             // Write updated states back before any retirement frees a slot.
             self.store.scatter(&slots, &self.frame.conv, &self.frame.ssm);
 
-            let vocab = self.engine.vocab();
-            for i in 0..self.lanes.len() {
-                let Some(mut seq) = self.lanes[i].take() else { continue };
+            // `chunks(vocab)` pairs each lane with its logit row without an
+            // index expression (the frame contract is len == lanes·vocab;
+            // `.max(1)` only keeps `chunks` well-formed on a malformed 0).
+            let vocab = self.engine.vocab().max(1);
+            for (lane, lane_logits) in self.lanes.iter_mut().zip(logits.chunks(vocab)) {
+                let Some(mut seq) = lane.take() else { continue };
                 seq.decode_us += dt;
-                let tok = argmax(&logits[i * vocab..(i + 1) * vocab]) as i32;
+                let tok = argmax(lane_logits) as i32;
                 seq.generated.push(tok);
                 seq.next_token = tok;
                 if let Some(sink) = self.sinks.get_mut(&seq.id) {
@@ -386,7 +403,7 @@ impl<'e> Scheduler<'e> {
                         variant: self.engine.variant.clone(),
                     });
                 } else {
-                    self.lanes[i] = Some(seq);
+                    *lane = Some(seq);
                 }
             }
         }

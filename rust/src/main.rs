@@ -529,6 +529,8 @@ static SHUTDOWN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::
 
 extern "C" fn on_shutdown_signal(_sig: i32) {
     // Async-signal-safe: a single atomic store, nothing else.
+    // ORDERING: SeqCst — strongest order for the cheapest reasoning at a
+    // signal boundary; this fires once, so the cost is irrelevant.
     SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
 }
 
@@ -541,6 +543,9 @@ fn install_drain_signals() {
     }
     const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
+    // SAFETY: signal(2) is declared with its true C ABI; the handler is an
+    // extern "C" fn that only performs one async-signal-safe atomic store,
+    // and installing a handler has no memory-safety preconditions.
     unsafe {
         signal(SIGINT, on_shutdown_signal);
         signal(SIGTERM, on_shutdown_signal);

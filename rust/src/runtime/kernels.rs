@@ -130,6 +130,8 @@ pub(crate) fn ignored_env_warning(var: &str, e: &anyhow::Error, fallback: &str) 
 /// overrides at any time (benches and the identity tests flip it between
 /// runs).
 pub fn mode() -> KernelMode {
+    // ORDERING: Relaxed — idempotent env resolution; racing first reads
+    // resolve identically, and the mode guards no other shared memory.
     match MODE.load(Ordering::Relaxed) {
         1 => KernelMode::Scalar,
         2 => KernelMode::Fused,
@@ -165,6 +167,7 @@ pub fn set_mode(m: KernelMode) {
         KernelMode::Fused => 2,
         KernelMode::Simd => 3,
     };
+    // ORDERING: Relaxed — standalone knob write, same contract as mode().
     MODE.store(v, Ordering::Relaxed);
 }
 
@@ -193,6 +196,8 @@ static SIMD_CPU: AtomicU8 = AtomicU8::new(0);
 /// every rounding); this only selects speed, and is surfaced for tests and
 /// bench metadata.
 pub fn simd_available() -> bool {
+    // ORDERING: Relaxed — idempotent CPU probe; every thread computes the
+    // same answer, so the cache needs atomicity only, not ordering.
     match SIMD_CPU.load(Ordering::Relaxed) {
         1 => false,
         2 => true,
@@ -201,6 +206,7 @@ pub fn simd_available() -> bool {
             let ok = is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
             #[cfg(not(target_arch = "x86_64"))]
             let ok = false;
+            // ORDERING: Relaxed — caches the idempotent probe result above.
             SIMD_CPU.store(if ok { 2 } else { 1 }, Ordering::Relaxed);
             ok
         }

@@ -38,6 +38,8 @@ static WORKERS: AtomicUsize = AtomicUsize::new(0);
 /// parallelism; [`set_workers`] overrides at any time. A decode step uses
 /// `min(B, workers())` threads — lanes, not cores, bound the useful width.
 pub fn workers() -> usize {
+    // ORDERING: Relaxed — idempotent env resolution; racing first reads
+    // compute the same value, so publication order is irrelevant.
     let w = WORKERS.load(Ordering::Relaxed);
     if w != 0 {
         return w;
@@ -54,6 +56,7 @@ pub fn workers() -> usize {
         },
         Err(_) => default(),
     };
+    // ORDERING: Relaxed — same idempotent-resolution cache as the load above.
     WORKERS.store(resolved, Ordering::Relaxed);
     resolved
 }
@@ -68,6 +71,8 @@ pub fn workers() -> usize {
 /// assert_eq!(workers(), 1);
 /// ```
 pub fn set_workers(n: usize) {
+    // ORDERING: Relaxed — a standalone knob write; callers that need the new
+    // width to be visible sequence it themselves (set before spawning).
     WORKERS.store(n.max(1), Ordering::Relaxed);
 }
 

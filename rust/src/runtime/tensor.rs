@@ -237,7 +237,7 @@ pub struct LaneChunkMut<'a> {
     _frame: std::marker::PhantomData<&'a mut [f32]>,
 }
 
-// Safety: a chunk only ever dereferences frame elements inside its own
+// SAFETY: a chunk only ever dereferences frame elements inside its own
 // (disjoint, `lane_chunks_mut`-checked) lane range, so moving it to another
 // thread cannot alias another chunk's elements.
 unsafe impl Send for LaneChunkMut<'_> {}
@@ -258,7 +258,7 @@ impl LaneChunkMut<'_> {
     pub fn layer_mut(&mut self, l: usize) -> &mut [f32] {
         assert!(l < self.n_layer, "layer {l} out of range ({})", self.n_layer);
         let off = (l * self.n_lanes + self.start) * self.row;
-        // Safety: `off .. off + lanes*row` lies inside the frame (checked
+        // SAFETY: `off .. off + lanes*row` lies inside the frame (checked
         // at construction) and inside this chunk's exclusive lane range;
         // the &mut self receiver prevents overlapping slices from one chunk.
         unsafe { std::slice::from_raw_parts_mut(self.ptr.add(off), self.lanes * self.row) }

@@ -78,6 +78,8 @@ fn store_format(f: WeightFormat, explicit: bool) {
         (WeightFormat::Int8, true) => 2,
         (_, false) => 3,
     };
+    // ORDERING: Relaxed — idempotent knob cache; racing resolutions agree,
+    // and no other memory is published through this flag.
     FORMAT.store(v, Ordering::Relaxed);
 }
 
@@ -87,6 +89,7 @@ fn store_format(f: WeightFormat, explicit: bool) {
 /// must not silently measure the wrong configuration), and [`set_format`]
 /// overrides at any time.
 pub fn format() -> WeightFormat {
+    // ORDERING: Relaxed — idempotent env resolution (same as store_format).
     match FORMAT.load(Ordering::Relaxed) {
         1 | 3 => WeightFormat::F32,
         2 => WeightFormat::Int8,
@@ -130,6 +133,7 @@ pub fn set_format(f: WeightFormat) {
 /// (which carries the [`ModelEntry`]) automatically.
 pub fn effective_format(model: &ModelEntry) -> WeightFormat {
     let f = format(); // resolves env on first read
+    // ORDERING: Relaxed — re-reads the knob cache format() just resolved.
     match FORMAT.load(Ordering::Relaxed) {
         1 | 2 => f,
         _ => model

@@ -31,6 +31,9 @@ where
                 scope.spawn(move || {
                     let mut local = Vec::new();
                     loop {
+                        // ORDERING: Relaxed — work-stealing index; fetch_add's
+                        // atomicity alone makes claims unique, and results are
+                        // published by the thread join, not this counter.
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;

@@ -1,0 +1,408 @@
+//! The project-invariant check registry (DESIGN.md §16). Each check walks
+//! the token stream produced by [`crate::lexer`] and emits [`Finding`]s;
+//! the annotation escape hatch (`// tor-lint: allow(<check-id>) -- reason`)
+//! is applied afterwards by [`apply_allows`] and suppresses **exactly one**
+//! finding per annotation.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lexer::{Kind, Lexed, Tok};
+
+pub const CHECK_IDS: [&str; 5] = [
+    "unsafe-audit",
+    "float-reassoc",
+    "atomics-ordering",
+    "panic-serving",
+    "doc-drift",
+];
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub check: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub suppressed: bool,
+    pub allow_reason: Option<String>,
+}
+
+fn finding(check: &'static str, file: &str, line: usize, message: String) -> Finding {
+    Finding {
+        check,
+        file: file.to_string(),
+        line,
+        message,
+        suppressed: false,
+        allow_reason: None,
+    }
+}
+
+fn ends_with(file: &str, suffix: &str) -> bool {
+    file.replace('\\', "/").ends_with(suffix)
+}
+
+/// Check 1 — unsafe audit. Every `unsafe` token needs an adjacent
+/// `// SAFETY:` (or rustdoc `# Safety` section) within 8 lines above, and
+/// `unsafe` is only permitted at all in the allowlisted files (the tensor
+/// lane-chunk views, the SIMD kernels, and main.rs signal registration).
+pub fn check_unsafe(file: &str, lx: &Lexed, out: &mut Vec<Finding>) {
+    const ALLOW_FILES: [&str; 3] = ["runtime/tensor.rs", "runtime/kernels.rs", "src/main.rs"];
+    for t in &lx.toks {
+        if t.kind != Kind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        if !ALLOW_FILES.iter().any(|s| ends_with(file, s)) {
+            out.push(finding(
+                "unsafe-audit",
+                file,
+                t.line,
+                "`unsafe` outside the allowlist (runtime/tensor.rs, runtime/kernels.rs, \
+                 src/main.rs)"
+                    .into(),
+            ));
+            continue;
+        }
+        if !lx.comment_near(t.line, 8, &["SAFETY:", "Safety:", "# Safety"]) {
+            out.push(finding(
+                "unsafe-audit",
+                file,
+                t.line,
+                "`unsafe` without an adjacent `// SAFETY:` comment".into(),
+            ));
+        }
+    }
+}
+
+/// Check 2 — float-reassociation guard. Reassociating primitives
+/// (`mul_add`, FMA/horizontal-add intrinsics, the `hsum8` tree) are
+/// confined to the `dot8` family in runtime/kernels.rs, and the chunked
+/// heads themselves (`dot8(` / `dot8_i8(` call sites) may additionally be
+/// called only from the whitelisted logit heads. This is what protects the
+/// `2·d·ε` error-bound contract (DESIGN.md §13).
+pub fn check_reassoc(file: &str, lx: &Lexed, out: &mut Vec<Finding>) {
+    const PRIM_FNS: [&str; 5] = [
+        "dot8",
+        "dot8_portable",
+        "dot8_i8",
+        "dot8_i8_portable",
+        "hsum8",
+    ];
+    const HEAD_CALLERS: [&str; 5] = [
+        "dot8",
+        "dot8_i8",
+        "hsum8",
+        "head_norm_logits", // kernels.rs f32/int8 logit head
+        "head_logits",      // reference.rs int8 logit head
+    ];
+    let toks = &lx.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident || t.in_test || t.in_use {
+            continue;
+        }
+        let after_fn = i > 0 && toks[i - 1].kind == Kind::Ident && toks[i - 1].text == "fn";
+        let is_prim = t.text == "mul_add"
+            || t.text == "hsum8"
+            || t.text.contains("fmadd")
+            || t.text.contains("hadd")
+            || t.text.contains("dp_ps");
+        if is_prim && !after_fn {
+            let in_whitelist = ends_with(file, "runtime/kernels.rs")
+                && t.fn_name.as_deref().is_some_and(|f| PRIM_FNS.contains(&f));
+            if !in_whitelist {
+                out.push(finding(
+                    "float-reassoc",
+                    file,
+                    t.line,
+                    format!(
+                        "reassociating primitive `{}` outside the dot8 head in \
+                         runtime/kernels.rs",
+                        t.text
+                    ),
+                ));
+            }
+            continue;
+        }
+        // Head-call tier: `dot8(`-family call sites.
+        let is_head_call = PRIM_FNS.contains(&t.text.as_str())
+            && toks.get(i + 1).is_some_and(|n| n.text == "(")
+            && !after_fn;
+        if is_head_call {
+            let caller_ok = t
+                .fn_name
+                .as_deref()
+                .is_some_and(|f| HEAD_CALLERS.contains(&f))
+                && (ends_with(file, "runtime/kernels.rs")
+                    || ends_with(file, "runtime/reference.rs"));
+            if !caller_ok {
+                out.push(finding(
+                    "float-reassoc",
+                    file,
+                    t.line,
+                    format!(
+                        "`{}` called outside the whitelisted logit heads \
+                         (dot8 family, head_norm_logits, head_logits)",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+const ATOMIC_VARIANTS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// True if `toks[i]` is the `Ordering` ident of an atomic `Ordering::X`
+/// path (filters out `std::cmp::Ordering::{Less,Equal,Greater}`).
+fn atomic_ordering_at(toks: &[Tok], i: usize) -> Option<&'static str> {
+    let t = &toks[i];
+    if t.kind != Kind::Ident || t.text != "Ordering" {
+        return None;
+    }
+    if !(toks.get(i + 1).is_some_and(|a| a.text == ":")
+        && toks.get(i + 2).is_some_and(|a| a.text == ":"))
+    {
+        return None;
+    }
+    let v = toks.get(i + 3)?;
+    ATOMIC_VARIANTS.iter().find(|&&s| s == v.text).copied()
+}
+
+/// Check 3 — atomics-ordering audit. Every atomic `Ordering::` use outside
+/// tests needs a `// ORDERING:` justification within 6 lines, and the
+/// seqlock epoch counter in coordinator/http.rs must never be accessed
+/// `Relaxed` (its loads are Acquire and its bumps AcqRel — the
+/// Relaxed-epoch bug class would let torn `/stats` snapshots through).
+pub fn check_ordering(file: &str, lx: &Lexed, out: &mut Vec<Finding>) {
+    let toks = &lx.toks;
+    for i in 0..toks.len() {
+        let Some(variant) = atomic_ordering_at(toks, i) else {
+            continue;
+        };
+        let t = &toks[i];
+        if t.in_test || t.in_use {
+            continue;
+        }
+        if !lx.comment_near(t.line, 6, &["ORDERING:"]) {
+            out.push(finding(
+                "atomics-ordering",
+                file,
+                t.line,
+                format!("`Ordering::{variant}` without an adjacent `// ORDERING:` justification"),
+            ));
+        }
+        // Targeted seqlock rule: an access chain mentioning the `seq`
+        // atomic within the preceding few tokens must not be Relaxed.
+        if ends_with(file, "coordinator/http.rs") && variant == "Relaxed" {
+            let lo = i.saturating_sub(8);
+            if toks[lo..i]
+                .iter()
+                .any(|p| p.kind == Kind::Ident && p.text == "seq")
+            {
+                out.push(finding(
+                    "atomics-ordering",
+                    file,
+                    t.line,
+                    "seqlock epoch access uses Ordering::Relaxed (loads must be Acquire, \
+                     bumps AcqRel/Release)"
+                        .into(),
+                ));
+            }
+        }
+    }
+}
+
+/// Check 4 — panic-freedom in serving paths. In coordinator/http.rs,
+/// coordinator/replica.rs and coordinator/scheduler.rs non-test code,
+/// `unwrap()` / `expect(` / `panic!` (and friends) / index-or-slice
+/// expressions are errors: a handler-thread panic kills a live connection
+/// silently. (`unwrap_or*` are different identifiers and stay allowed.)
+pub fn check_panic(file: &str, lx: &Lexed, out: &mut Vec<Finding>) {
+    const SERVING_FILES: [&str; 3] = [
+        "coordinator/http.rs",
+        "coordinator/replica.rs",
+        "coordinator/scheduler.rs",
+    ];
+    if !SERVING_FILES.iter().any(|s| ends_with(file, s)) {
+        return;
+    }
+    // `[` after one of these closes an index/slice expression target.
+    const KEYWORDS_NOT_INDEX: [&str; 14] = [
+        "let", "in", "mut", "ref", "return", "else", "match", "if", "while", "for", "move", "as",
+        "break", "continue",
+    ];
+    let toks = &lx.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test {
+            continue;
+        }
+        match (t.kind, t.text.as_str()) {
+            (Kind::Ident, "unwrap") | (Kind::Ident, "expect") => {
+                if toks.get(i + 1).is_some_and(|n| n.text == "(") {
+                    out.push(finding(
+                        "panic-serving",
+                        file,
+                        t.line,
+                        format!("`.{}(` in a serving path can panic a handler thread", t.text),
+                    ));
+                }
+            }
+            (Kind::Ident, "panic")
+            | (Kind::Ident, "unreachable")
+            | (Kind::Ident, "todo")
+            | (Kind::Ident, "unimplemented")
+            | (Kind::Ident, "assert") => {
+                if toks.get(i + 1).is_some_and(|n| n.text == "!") {
+                    out.push(finding(
+                        "panic-serving",
+                        file,
+                        t.line,
+                        format!("`{}!` in a serving path can panic a handler thread", t.text),
+                    ));
+                }
+            }
+            (Kind::Punct, "[") => {
+                let Some(prev) = i.checked_sub(1).map(|p| &toks[p]) else {
+                    continue;
+                };
+                let is_index_target = match prev.kind {
+                    Kind::Ident => !KEYWORDS_NOT_INDEX.contains(&prev.text.as_str()),
+                    Kind::Punct => prev.text == "]" || prev.text == ")" || prev.text == "?",
+                    _ => false,
+                };
+                if is_index_target {
+                    out.push(finding(
+                        "panic-serving",
+                        file,
+                        t.line,
+                        "index/slice expression in a serving path can panic; use `.get()` \
+                         or a pattern"
+                            .into(),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Inputs for check 5 that span the whole tree rather than one token
+/// stream: raw source texts plus the doc files they must agree with.
+pub struct DocDriftInput {
+    /// (repo-relative path, raw content) for every scanned rust source.
+    pub sources: Vec<(String, String)>,
+    /// DESIGN.md content ("" if the file is absent).
+    pub design: String,
+    /// README.md + PERFORMANCE.md content concatenated.
+    pub knob_docs: String,
+    /// Repo-relative doc files that exist (e.g. {"DESIGN.md", …}).
+    pub existing_docs: BTreeSet<String>,
+    /// Env-var names read in source (string literals `TOR_SSM_*` /
+    /// `REPRO_BENCH_*`), with one representative (file, line) each.
+    pub env_reads: BTreeMap<String, (String, usize)>,
+}
+
+/// Check 5 — doc/knob drift. Cited `DESIGN.md §N` headings and cited doc
+/// file paths must exist, and every `TOR_SSM_*`/`REPRO_BENCH_*` env var
+/// read in source must appear in README.md or PERFORMANCE.md. This absorbs
+/// (and retires) the ad-hoc shell-grep gate that used to live in ci.yml.
+pub fn check_doc_drift(input: &DocDriftInput, out: &mut Vec<Finding>) {
+    // §N citations → `## §N ` headings.
+    for (file, text) in &input.sources {
+        for (line_no, line) in text.lines().enumerate() {
+            let mut rest = line;
+            while let Some(pos) = rest.find("DESIGN.md §") {
+                rest = &rest[pos + "DESIGN.md §".len()..];
+                let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+                if digits.is_empty() {
+                    continue;
+                }
+                let heading = format!("## §{digits} ");
+                if !input.design.lines().any(|l| l.starts_with(&heading)) {
+                    out.push(finding(
+                        "doc-drift",
+                        file,
+                        line_no + 1,
+                        format!(
+                            "cites DESIGN.md §{digits} but no `## §{digits} ` heading exists"
+                        ),
+                    ));
+                }
+            }
+            // Cited doc files must exist.
+            for doc in ["DESIGN.md", "PERFORMANCE.md", "README.md"] {
+                if line.contains(doc) && !input.existing_docs.contains(doc) {
+                    out.push(finding(
+                        "doc-drift",
+                        file,
+                        line_no + 1,
+                        format!("cites {doc} but it does not exist"),
+                    ));
+                }
+            }
+        }
+    }
+    // Every env knob read in source is documented.
+    for (var, (file, line)) in &input.env_reads {
+        if !input.knob_docs.contains(var.as_str()) {
+            out.push(finding(
+                "doc-drift",
+                file,
+                *line,
+                format!("env var `{var}` is read here but documented in neither README.md nor \
+                         PERFORMANCE.md"),
+            ));
+        }
+    }
+}
+
+/// Extract `TOR_SSM_*` / `REPRO_BENCH_*` env-var names from a token
+/// stream's string literals.
+pub fn env_reads(file: &str, lx: &Lexed, into: &mut BTreeMap<String, (String, usize)>) {
+    for t in &lx.toks {
+        if t.kind != Kind::Literal {
+            continue;
+        }
+        let s = t.text.as_str();
+        let looks_like_var = (s.starts_with("TOR_SSM_") || s.starts_with("REPRO_BENCH_"))
+            && s.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_');
+        if looks_like_var {
+            into.entry(s.to_string())
+                .or_insert_with(|| (file.to_string(), t.line));
+        }
+    }
+}
+
+/// Apply the annotation escape hatch: `// tor-lint: allow(<check-id>)` on
+/// the finding's line or the line above suppresses that finding. Each
+/// annotation suppresses **exactly one** finding (the first, in file
+/// order); a `-- reason` suffix is recorded in the report.
+pub fn apply_allows(lx_by_file: &BTreeMap<String, Lexed>, findings: &mut [Finding]) {
+    // (file, annotation line) → already used.
+    let mut used: BTreeSet<(String, usize)> = BTreeSet::new();
+    for f in findings.iter_mut() {
+        let Some(lx) = lx_by_file.get(&f.file) else {
+            continue;
+        };
+        for line in [f.line.saturating_sub(1), f.line] {
+            let Some(comment) = lx.comments.get(&line) else {
+                continue;
+            };
+            let Some(rest) = comment.split("tor-lint: allow(").nth(1) else {
+                continue;
+            };
+            let Some(end) = rest.find(')') else { continue };
+            if rest[..end].trim() != f.check {
+                continue;
+            }
+            if used.contains(&(f.file.clone(), line)) {
+                continue; // one suppression per annotation
+            }
+            used.insert((f.file.clone(), line));
+            f.suppressed = true;
+            f.allow_reason = rest[end + 1..]
+                .split_once("--")
+                .map(|(_, r)| r.trim().to_string());
+            break;
+        }
+    }
+}

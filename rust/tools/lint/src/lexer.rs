@@ -1,0 +1,374 @@
+//! A purpose-built Rust lexer: just enough of the language to audit the
+//! project invariants (DESIGN.md §16) — strings, comments, attributes,
+//! lifetimes-vs-char-literals — with **no** rustc plumbing. It does not
+//! parse; a second pass annotates every token with its enclosing function
+//! name and whether it sits in test scope (`#[cfg(test)] mod` / `#[test]
+//! fn`), which is all the checks need.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Literal,
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub kind: Kind,
+    /// 1-based source line.
+    pub line: usize,
+    /// Name of the innermost enclosing `fn`, if any.
+    pub fn_name: Option<String>,
+    /// Inside `#[cfg(test)]` / `#[test]` scope (or a file force-marked as
+    /// test code, e.g. everything under `tests/` and `benches/`).
+    pub in_test: bool,
+    /// Inside a `use …;` item (import paths are not executable code).
+    pub in_use: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// line → concatenated comment text appearing on that line (line
+    /// comments, doc comments, and each line of a block comment).
+    pub comments: BTreeMap<usize, String>,
+}
+
+impl Lexed {
+    /// True if any comment on a line in `[line-span ..= line]` contains any
+    /// of `markers`.
+    pub fn comment_near(&self, line: usize, span: usize, markers: &[&str]) -> bool {
+        let lo = line.saturating_sub(span);
+        self.comments
+            .range(lo..=line)
+            .any(|(_, c)| markers.iter().any(|m| c.contains(m)))
+    }
+}
+
+/// Tokenize `src`. `force_test` marks every token as test scope (used for
+/// files under `tests/` / `benches/`, which are test harness code wholesale).
+pub fn lex(src: &str, force_test: bool) -> Lexed {
+    let mut lx = Lexed::default();
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0;
+    let mut line = 1usize;
+
+    let push_comment = |lx: &mut Lexed, line: usize, text: &str| {
+        let e = lx.comments.entry(line).or_default();
+        if !e.is_empty() {
+            e.push(' ');
+        }
+        e.push_str(text);
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (incl. /// and //!).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            push_comment(&mut lx, line, &text);
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1;
+            let mut seg = String::from("/*");
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    seg.push_str("/*");
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    seg.push_str("*/");
+                    i += 2;
+                } else if b[i] == '\n' {
+                    push_comment(&mut lx, line, &seg);
+                    seg.clear();
+                    line += 1;
+                    i += 1;
+                } else {
+                    seg.push(b[i]);
+                    i += 1;
+                }
+            }
+            if !seg.is_empty() {
+                push_comment(&mut lx, line, &seg);
+            }
+            continue;
+        }
+        // Raw / byte strings: r"…", r#"…"#, b"…", br#"…"#.
+        if (c == 'r' || c == 'b') && is_raw_string_start(&b, i) {
+            let start_line = line;
+            let mut j = i + 1;
+            if c == 'b' && j < n && b[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                j += 1;
+                let body_start = j;
+                // scan for `"` followed by `hashes` #'s
+                loop {
+                    if j >= n {
+                        break;
+                    }
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if b[j] == '"' && b[j + 1..].iter().take_while(|&&h| h == '#').count() >= hashes
+                    {
+                        break;
+                    }
+                    j += 1;
+                }
+                let text: String = b[body_start..j.min(n)].iter().collect();
+                lx.toks.push(raw_tok(text, Kind::Literal, start_line));
+                i = (j + 1 + hashes).min(n);
+                continue;
+            }
+            // Fall through: plain ident starting with r/b.
+        }
+        // Plain (possibly byte) string.
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            let start_line = line;
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            let body_start = j;
+            while j < n {
+                match b[j] {
+                    '\\' => j += 2,
+                    '"' => break,
+                    '\n' => {
+                        line += 1;
+                        j += 1;
+                    }
+                    _ => j += 1,
+                }
+            }
+            let text: String = b[body_start..j.min(n)].iter().collect();
+            lx.toks.push(raw_tok(text, Kind::Literal, start_line));
+            i = (j + 1).min(n);
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            // 'x' or '\n' → char literal; 'ident (no closing quote) → lifetime.
+            let mut j = i + 1;
+            if j < n && b[j] == '\\' {
+                // escaped char literal
+                j += 2;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                lx.toks.push(raw_tok(String::new(), Kind::Literal, line));
+                i = (j + 1).min(n);
+                continue;
+            }
+            if j + 1 < n && b[j + 1] == '\'' {
+                lx.toks
+                    .push(raw_tok(b[j].to_string(), Kind::Literal, line));
+                i = j + 2;
+                continue;
+            }
+            // lifetime
+            let start = j;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            let text: String = b[start..j].iter().collect();
+            lx.toks.push(raw_tok(text, Kind::Lifetime, line));
+            i = j;
+            continue;
+        }
+        // Number literal.
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_' || b[i] == '.') {
+                // `0..n` range: stop before a second consecutive dot.
+                if b[i] == '.' && i + 1 < n && b[i + 1] == '.' {
+                    break;
+                }
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            lx.toks.push(raw_tok(text, Kind::Literal, line));
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            lx.toks.push(raw_tok(text, Kind::Ident, line));
+            continue;
+        }
+        // Single-char punctuation (`::` arrives as two `:` tokens).
+        lx.toks.push(raw_tok(c.to_string(), Kind::Punct, line));
+        i += 1;
+    }
+
+    annotate_scopes(&mut lx.toks, force_test);
+    lx
+}
+
+fn raw_tok(text: String, kind: Kind, line: usize) -> Tok {
+    Tok {
+        text,
+        kind,
+        line,
+        fn_name: None,
+        in_test: false,
+        in_use: false,
+    }
+}
+
+fn is_raw_string_start(b: &[char], i: usize) -> bool {
+    // r" r# b" br" br# — an ident char right after r/b means plain ident.
+    let mut j = i + 1;
+    if b[i] == 'b' && j < b.len() && b[j] == 'r' {
+        j += 1;
+    }
+    while j < b.len() && b[j] == '#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == '"'
+}
+
+#[derive(Clone)]
+struct Frame {
+    fn_name: Option<String>,
+    is_test: bool,
+}
+
+/// Second pass: brace-depth scope stack with pending-attribute attachment.
+/// `#[test]` / `#[cfg(test)]` (any attr whose idents include `test` but not
+/// `not`) marks the next `fn`/`mod` item — and everything inside its braces
+/// — as test scope. `use …;` spans set `in_use`.
+fn annotate_scopes(toks: &mut [Tok], force_test: bool) {
+    let mut stack: Vec<Frame> = vec![Frame {
+        fn_name: None,
+        is_test: force_test,
+    }];
+    let mut pending_attr_test = false;
+    // (fn name or None for mod, test flag) for an item header seen but
+    // whose `{` has not arrived yet.
+    let mut pending_item: Option<(Option<String>, bool)> = None;
+    let mut in_use = false;
+
+    let mut i = 0;
+    while i < toks.len() {
+        // Annotate from the current top frame first.
+        {
+            let top = stack.last().cloned().unwrap_or(Frame {
+                fn_name: None,
+                is_test: force_test,
+            });
+            toks[i].fn_name = top.fn_name;
+            toks[i].in_test = top.is_test || force_test;
+            toks[i].in_use = in_use;
+        }
+        let text = toks[i].text.clone();
+        let kind = toks[i].kind;
+        match (kind, text.as_str()) {
+            (Kind::Punct, "#") => {
+                // Attribute: scan the bracketed group for `test` idents.
+                if i + 1 < toks.len() && toks[i + 1].text == "[" {
+                    let mut depth = 0;
+                    let mut j = i + 1;
+                    let mut saw_test = false;
+                    let mut saw_not = false;
+                    while j < toks.len() {
+                        match toks[j].text.as_str() {
+                            "[" => depth += 1,
+                            "]" => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            "test" if toks[j].kind == Kind::Ident => saw_test = true,
+                            "not" if toks[j].kind == Kind::Ident => saw_not = true,
+                            _ => {}
+                        }
+                        // Attribute interiors keep the enclosing scope.
+                        toks[j].fn_name = toks[i].fn_name.clone();
+                        toks[j].in_test = toks[i].in_test;
+                        j += 1;
+                    }
+                    if saw_test && !saw_not {
+                        pending_attr_test = true;
+                    }
+                    i = j + 1;
+                    continue;
+                }
+            }
+            (Kind::Ident, "fn") => {
+                let name = toks
+                    .get(i + 1)
+                    .filter(|t| t.kind == Kind::Ident)
+                    .map(|t| t.text.clone());
+                pending_item = Some((name, pending_attr_test));
+                pending_attr_test = false;
+            }
+            (Kind::Ident, "mod") => {
+                pending_item = Some((None, pending_attr_test));
+                pending_attr_test = false;
+            }
+            (Kind::Ident, "use") => in_use = true,
+            (Kind::Punct, ";") => {
+                in_use = false;
+                pending_item = None; // trait method decl without a body
+            }
+            (Kind::Punct, "{") => {
+                let top = stack.last().cloned().unwrap_or(Frame {
+                    fn_name: None,
+                    is_test: force_test,
+                });
+                let frame = match pending_item.take() {
+                    Some((name, t)) => Frame {
+                        // A mod resets the fn context; a fn names it.
+                        fn_name: name.or(None),
+                        is_test: top.is_test || t,
+                    },
+                    // Plain block / struct body / match arm: inherit.
+                    None => top,
+                };
+                stack.push(frame);
+            }
+            (Kind::Punct, "}") => {
+                if stack.len() > 1 {
+                    stack.pop();
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}

@@ -1,0 +1,109 @@
+//! `tor-lint` — the in-repo invariant checker (DESIGN.md §16).
+//!
+//! Tokenizes the workspace's Rust sources with a purpose-built lexer
+//! ([`lexer`]) and runs the five project-invariant checks ([`checks`]):
+//! unsafe audit, float-reassociation guard, atomics-ordering audit,
+//! panic-freedom in serving paths, and doc/knob drift. Exposed as a
+//! library so the fixture tests can drive individual checks with
+//! synthetic path labels.
+
+pub mod checks;
+pub mod lexer;
+pub mod report;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use checks::{DocDriftInput, Finding};
+
+/// Directories scanned for token-level checks (1–4) and raw scans (5),
+/// relative to the repo root. `benches/` and `tests/` are harness code:
+/// they are force-marked as test scope so only check 5 (doc/knob drift)
+/// applies to them. Vendored crates (`rust/crates/`) and this tool are
+/// excluded — the invariants govern the serving crate, not the shims.
+const SCAN_DIRS: [(&str, bool); 3] = [
+    ("rust/src", false),
+    ("rust/benches", true),
+    ("rust/tests", true),
+];
+
+fn walk_rs(dir: &Path, into: &mut Vec<PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut entries: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, into);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            into.push(p);
+        }
+    }
+}
+
+/// Run every check over the tree rooted at `root`. Returns the findings
+/// (suppressions already applied) and the number of files scanned.
+pub fn run(root: &Path) -> std::io::Result<(Vec<Finding>, usize)> {
+    let mut findings = Vec::new();
+    let mut lx_by_file: BTreeMap<String, lexer::Lexed> = BTreeMap::new();
+    let mut sources = Vec::new();
+    let mut env = BTreeMap::new();
+
+    for (dir, force_test) in SCAN_DIRS {
+        let mut files = Vec::new();
+        walk_rs(&root.join(dir), &mut files);
+        for path in files {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = std::fs::read_to_string(&path)?;
+            let lx = lexer::lex(&text, force_test);
+            checks::check_unsafe(&rel, &lx, &mut findings);
+            checks::check_reassoc(&rel, &lx, &mut findings);
+            checks::check_ordering(&rel, &lx, &mut findings);
+            checks::check_panic(&rel, &lx, &mut findings);
+            checks::env_reads(&rel, &lx, &mut env);
+            sources.push((rel.clone(), text));
+            lx_by_file.insert(rel, lx);
+        }
+    }
+
+    let read_doc = |name: &str| std::fs::read_to_string(root.join(name)).unwrap_or_default();
+    let mut existing_docs = BTreeSet::new();
+    for doc in ["DESIGN.md", "PERFORMANCE.md", "README.md"] {
+        if root.join(doc).is_file() {
+            existing_docs.insert(doc.to_string());
+        }
+    }
+    let input = DocDriftInput {
+        sources,
+        design: read_doc("DESIGN.md"),
+        knob_docs: format!("{}\n{}", read_doc("README.md"), read_doc("PERFORMANCE.md")),
+        existing_docs,
+        env_reads: env,
+    };
+    checks::check_doc_drift(&input, &mut findings);
+
+    checks::apply_allows(&lx_by_file, &mut findings);
+    let files_scanned = lx_by_file.len();
+    Ok((findings, files_scanned))
+}
+
+/// Lint a single in-memory source under a synthetic repo-relative label
+/// (the path-scoped rules key off the label). Test-only entry point for
+/// the fixture suite; check 5 needs the tree-level [`run`].
+pub fn lint_source(label: &str, text: &str, force_test: bool) -> Vec<Finding> {
+    let lx = lexer::lex(text, force_test);
+    let mut findings = Vec::new();
+    checks::check_unsafe(label, &lx, &mut findings);
+    checks::check_reassoc(label, &lx, &mut findings);
+    checks::check_ordering(label, &lx, &mut findings);
+    checks::check_panic(label, &lx, &mut findings);
+    let mut by_file = BTreeMap::new();
+    by_file.insert(label.to_string(), lx);
+    checks::apply_allows(&by_file, &mut findings);
+    findings
+}

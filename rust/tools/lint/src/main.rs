@@ -1,0 +1,71 @@
+//! CLI: `cargo run -p tor-lint -- --check [--json lint_report.json]
+//! [--root <dir>]`. Exit 0 iff no unsuppressed findings.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut json_out: Option<PathBuf> = None;
+    let mut do_check = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--check" => do_check = true,
+            "--json" => match args.next() {
+                Some(p) => json_out = Some(PathBuf::from(p)),
+                None => return usage("--json needs a path"),
+            },
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => return usage("--root needs a path"),
+            },
+            other => return usage(&format!("unknown argument {other:?}")),
+        }
+    }
+    if !do_check {
+        return usage("nothing to do");
+    }
+
+    let (findings, files_scanned) = match tor_lint::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("tor-lint: io error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = &json_out {
+        let json = tor_lint::report::to_json(&findings, files_scanned);
+        if let Err(e) = std::fs::write(path, json) {
+            eprintln!("tor-lint: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    let mut unsuppressed = 0usize;
+    let mut suppressed = 0usize;
+    for f in &findings {
+        if f.suppressed {
+            suppressed += 1;
+            continue;
+        }
+        unsuppressed += 1;
+        eprintln!("{}:{}: [{}] {}", f.file, f.line, f.check, f.message);
+    }
+    eprintln!(
+        "tor-lint: {files_scanned} files, {unsuppressed} finding(s), {suppressed} suppressed"
+    );
+    if unsuppressed > 0 {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("tor-lint: {msg}");
+    eprintln!("usage: tor-lint --check [--json <path>] [--root <dir>]");
+    ExitCode::from(2)
+}

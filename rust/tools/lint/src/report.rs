@@ -1,0 +1,76 @@
+//! Hand-rolled JSON emitter for the lint report (stdlib only, same policy
+//! as `util/json.rs` in the main crate — no serde).
+
+use std::collections::BTreeMap;
+
+use crate::checks::{Finding, CHECK_IDS};
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize the report: stable field order, findings sorted by
+/// (file, line, check), per-check unsuppressed counts, suppression total.
+pub fn to_json(findings: &[Finding], files_scanned: usize) -> String {
+    let mut sorted: Vec<&Finding> = findings.iter().collect();
+    sorted.sort_by(|a, b| {
+        (&a.file, a.line, a.check).cmp(&(&b.file, b.line, b.check))
+    });
+
+    let mut counts: BTreeMap<&str, usize> = CHECK_IDS.iter().map(|&c| (c, 0)).collect();
+    let mut suppressed = 0usize;
+    for f in &sorted {
+        if f.suppressed {
+            suppressed += 1;
+        } else {
+            *counts.entry(f.check).or_insert(0) += 1;
+        }
+    }
+
+    let mut s = String::new();
+    s.push_str("{\n  \"version\": 1,\n");
+    s.push_str(&format!("  \"files_scanned\": {files_scanned},\n"));
+    s.push_str("  \"counts\": {");
+    let mut first = true;
+    for id in CHECK_IDS {
+        if !first {
+            s.push_str(", ");
+        }
+        first = false;
+        s.push_str(&format!("\"{id}\": {}", counts.get(id).copied().unwrap_or(0)));
+    }
+    s.push_str("},\n");
+    s.push_str(&format!("  \"suppressed\": {suppressed},\n"));
+    s.push_str("  \"findings\": [\n");
+    for (i, f) in sorted.iter().enumerate() {
+        let reason = match &f.allow_reason {
+            Some(r) => format!("\"{}\"", esc(r)),
+            None => "null".to_string(),
+        };
+        s.push_str(&format!(
+            "    {{\"check\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\", \
+             \"suppressed\": {}, \"allow_reason\": {}}}{}\n",
+            f.check,
+            esc(&f.file),
+            f.line,
+            esc(&f.message),
+            f.suppressed,
+            reason,
+            if i + 1 == sorted.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}

@@ -1,0 +1,6 @@
+pub fn twice(v: &[u32]) -> u32 {
+    // tor-lint: allow(panic-serving) -- fixture: prove one annotation suppresses one finding
+    let a = v[0];
+    let b = v[1];
+    a + b
+}

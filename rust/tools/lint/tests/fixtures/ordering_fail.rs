@@ -1,0 +1,11 @@
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Counters {
+    seq: AtomicU64,
+}
+
+impl Counters {
+    pub fn bad_epoch(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+}

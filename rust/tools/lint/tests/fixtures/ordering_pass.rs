@@ -1,0 +1,8 @@
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static N: AtomicUsize = AtomicUsize::new(0);
+
+pub fn tick() -> usize {
+    // ORDERING: Relaxed — monotonic tally; nothing else is published.
+    N.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,8 @@
+pub fn kaboom(v: &[u32], m: &std::collections::HashMap<u32, u32>) -> u32 {
+    let first = v[0];
+    let looked = *m.get(&first).unwrap();
+    if looked > 9000 {
+        panic!("over nine thousand");
+    }
+    v.iter().next().expect("nonempty") + looked
+}

@@ -1,0 +1,13 @@
+pub fn first_or_zero(v: &[u32]) -> u32 {
+    v.first().copied().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_allowed_here() {
+        let v = vec![1u32, 2];
+        assert_eq!(v[0], 1);
+        let _ = v.get(1).unwrap();
+    }
+}

@@ -1,0 +1,7 @@
+pub fn blend(a: f32, b: f32, c: f32) -> f32 {
+    a.mul_add(b, c)
+}
+
+pub fn cosine(x: &[f32], y: &[f32]) -> f32 {
+    dot8(x, y)
+}

@@ -1,0 +1,11 @@
+pub fn dot8(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (a, b) in x.iter().zip(y) {
+        acc = a.mul_add(*b, acc);
+    }
+    acc
+}
+
+pub fn head_norm_logits(x: &[f32], y: &[f32]) -> f32 {
+    dot8(x, y)
+}

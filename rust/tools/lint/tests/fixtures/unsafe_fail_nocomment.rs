@@ -1,0 +1,3 @@
+pub fn first(x: &[f32]) -> f32 {
+    unsafe { *x.get_unchecked(0) }
+}

@@ -1,0 +1,4 @@
+pub fn peek(v: &[u8]) -> u8 {
+    // SAFETY: length is checked by every caller.
+    unsafe { *v.get_unchecked(0) }
+}

@@ -1,0 +1,8 @@
+/// Exclusive view over `p .. p + n`.
+///
+/// # Safety
+/// Caller guarantees the range is live, exclusively owned, and aligned.
+pub unsafe fn view<'a>(p: *mut f32, n: usize) -> &'a mut [f32] {
+    // SAFETY: forwarded contract — see the `# Safety` section above.
+    unsafe { std::slice::from_raw_parts_mut(p, n) }
+}

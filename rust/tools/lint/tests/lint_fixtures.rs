@@ -1,0 +1,312 @@
+//! Fixture battery (DESIGN.md §16): every check is proven *live* by a
+//! failing fixture with an exact finding count, and proven quiet by a
+//! passing one. Checks 1–4 drive [`tor_lint::lint_source`] with synthetic
+//! repo-relative labels (the path-scoped rules key off the label); check 5
+//! needs a whole tree, so it drives [`tor_lint::run`] over a temp root.
+
+use tor_lint::checks::Finding;
+use tor_lint::{lint_source, report};
+
+fn by_check<'a>(findings: &'a [Finding], check: &str) -> Vec<&'a Finding> {
+    findings.iter().filter(|f| f.check == check).collect()
+}
+
+fn unsuppressed(findings: &[Finding]) -> usize {
+    findings.iter().filter(|f| !f.suppressed).count()
+}
+
+// ---------------------------------------------------------------------------
+// Check 1 — unsafe audit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unsafe_pass_is_clean() {
+    let f = lint_source(
+        "rust/src/runtime/tensor.rs",
+        include_str!("fixtures/unsafe_pass.rs"),
+        false,
+    );
+    assert!(f.is_empty(), "expected no findings, got {f:?}");
+}
+
+#[test]
+fn unsafe_outside_allowlist_fails_even_with_comment() {
+    let f = lint_source(
+        "rust/src/reduction/policy.rs",
+        include_str!("fixtures/unsafe_fail_outside.rs"),
+        false,
+    );
+    let hits = by_check(&f, "unsafe-audit");
+    assert_eq!(hits.len(), 1, "{f:?}");
+    assert_eq!(hits[0].line, 3);
+    assert!(hits[0].message.contains("allowlist"), "{}", hits[0].message);
+    assert_eq!(f.len(), 1, "no other checks should fire: {f:?}");
+}
+
+#[test]
+fn unsafe_without_safety_comment_fails_inside_allowlist() {
+    let f = lint_source(
+        "rust/src/runtime/kernels.rs",
+        include_str!("fixtures/unsafe_fail_nocomment.rs"),
+        false,
+    );
+    let hits = by_check(&f, "unsafe-audit");
+    assert_eq!(hits.len(), 1, "{f:?}");
+    assert_eq!(hits[0].line, 2);
+    assert!(hits[0].message.contains("SAFETY"), "{}", hits[0].message);
+}
+
+// ---------------------------------------------------------------------------
+// Check 2 — float-reassociation guard
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reassoc_pass_is_clean() {
+    let f = lint_source(
+        "rust/src/runtime/kernels.rs",
+        include_str!("fixtures/reassoc_pass.rs"),
+        false,
+    );
+    assert!(f.is_empty(), "expected no findings, got {f:?}");
+}
+
+#[test]
+fn reassoc_fail_flags_prim_and_head_call() {
+    let f = lint_source(
+        "rust/src/reduction/policy.rs",
+        include_str!("fixtures/reassoc_fail.rs"),
+        false,
+    );
+    let hits = by_check(&f, "float-reassoc");
+    assert_eq!(hits.len(), 2, "{f:?}");
+    assert_eq!(hits[0].line, 2, "mul_add outside kernels.rs");
+    assert!(hits[0].message.contains("mul_add"));
+    assert_eq!(hits[1].line, 6, "dot8( call from a non-whitelisted fn");
+    assert!(hits[1].message.contains("dot8"));
+    assert_eq!(f.len(), 2);
+}
+
+// ---------------------------------------------------------------------------
+// Check 3 — atomics-ordering audit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ordering_pass_is_clean() {
+    let f = lint_source(
+        "rust/src/runtime/counter.rs",
+        include_str!("fixtures/ordering_pass.rs"),
+        false,
+    );
+    assert!(f.is_empty(), "expected no findings, got {f:?}");
+}
+
+#[test]
+fn ordering_fail_flags_missing_comment_and_relaxed_seqlock() {
+    let f = lint_source(
+        "rust/src/coordinator/http.rs",
+        include_str!("fixtures/ordering_fail.rs"),
+        false,
+    );
+    let hits = by_check(&f, "atomics-ordering");
+    assert_eq!(hits.len(), 2, "{f:?}");
+    assert!(hits.iter().all(|h| h.line == 9));
+    assert!(
+        hits.iter().any(|h| h.message.contains("seqlock")),
+        "the targeted seqlock rule must fire: {f:?}"
+    );
+    assert!(
+        hits.iter().any(|h| h.message.contains("ORDERING:")),
+        "the missing-justification rule must fire: {f:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Check 4 — panic-freedom in serving paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panic_pass_is_clean() {
+    let f = lint_source(
+        "rust/src/coordinator/scheduler.rs",
+        include_str!("fixtures/panic_pass.rs"),
+        false,
+    );
+    assert!(f.is_empty(), "unwrap_or and test-mod panics must not flag: {f:?}");
+}
+
+#[test]
+fn panic_pass_file_outside_serving_paths_is_ignored() {
+    // The same panicking source under a non-serving label is out of scope.
+    let f = lint_source(
+        "rust/src/runtime/kernels_helpers.rs",
+        include_str!("fixtures/panic_fail.rs"),
+        false,
+    );
+    assert!(by_check(&f, "panic-serving").is_empty(), "{f:?}");
+}
+
+#[test]
+fn panic_fail_flags_each_site_exactly_once() {
+    let f = lint_source(
+        "rust/src/coordinator/http.rs",
+        include_str!("fixtures/panic_fail.rs"),
+        false,
+    );
+    let hits = by_check(&f, "panic-serving");
+    let lines: Vec<usize> = hits.iter().map(|h| h.line).collect();
+    assert_eq!(lines, vec![2, 3, 5, 7], "index, unwrap, panic!, expect: {f:?}");
+    assert_eq!(f.len(), 4);
+}
+
+// ---------------------------------------------------------------------------
+// Escape hatch — one annotation suppresses exactly one finding
+// ---------------------------------------------------------------------------
+
+#[test]
+fn allow_annotation_suppresses_exactly_one_finding() {
+    let f = lint_source(
+        "rust/src/coordinator/http.rs",
+        include_str!("fixtures/allow_one.rs"),
+        false,
+    );
+    assert_eq!(f.len(), 2, "{f:?}");
+    let kept: Vec<&Finding> = f.iter().filter(|x| !x.suppressed).collect();
+    let dropped: Vec<&Finding> = f.iter().filter(|x| x.suppressed).collect();
+    assert_eq!(dropped.len(), 1, "one annotation → one suppression: {f:?}");
+    assert_eq!(dropped[0].line, 3);
+    assert_eq!(
+        dropped[0].allow_reason.as_deref(),
+        Some("fixture: prove one annotation suppresses one finding")
+    );
+    assert_eq!(kept.len(), 1);
+    assert_eq!(kept[0].line, 4, "the second index on the next line stays live");
+}
+
+#[test]
+fn allow_with_wrong_check_id_does_not_suppress() {
+    let f = lint_source(
+        "rust/src/coordinator/http.rs",
+        include_str!("fixtures/allow_wrong_id.rs"),
+        false,
+    );
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(!f[0].suppressed, "annotation names a different check: {f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Check 5 — doc/knob drift (needs a tree → drive `run` over a temp root)
+// ---------------------------------------------------------------------------
+
+fn temp_root(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("tor-lint-fixtures-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(d.join("rust/src")).unwrap();
+    d
+}
+
+#[test]
+fn doc_drift_flags_stale_citation_missing_doc_and_undocumented_knob() {
+    let root = temp_root("drift");
+    std::fs::write(
+        root.join("rust/src/doc_drift_fail.rs"),
+        include_str!("fixtures/doc_drift_fail.rs"),
+    )
+    .unwrap();
+    std::fs::write(
+        root.join("rust/src/doc_drift_pass.rs"),
+        include_str!("fixtures/doc_drift_pass.rs"),
+    )
+    .unwrap();
+    std::fs::write(root.join("DESIGN.md"), "# Design\n\n## §1 Overview\n\nWords.\n").unwrap();
+    std::fs::write(
+        root.join("README.md"),
+        "Knobs: `TOR_SSM_DOCUMENTED_KNOB` controls the frobnicator.\n",
+    )
+    .unwrap();
+    // No PERFORMANCE.md on purpose — the fail fixture cites it.
+
+    let (findings, files_scanned) = tor_lint::run(&root).unwrap();
+    assert_eq!(files_scanned, 2);
+    assert!(
+        findings.iter().all(|f| f.check == "doc-drift"),
+        "only check 5 should fire on these sources: {findings:?}"
+    );
+    assert!(
+        findings.iter().all(|f| f.file.ends_with("doc_drift_fail.rs")),
+        "the pass fixture must stay clean: {findings:?}"
+    );
+    let msgs: Vec<&str> = findings.iter().map(|f| f.message.as_str()).collect();
+    assert_eq!(findings.len(), 3, "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("§99")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("PERFORMANCE.md")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("TOR_SSM_PHANTOM_KNOB")), "{msgs:?}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn doc_drift_pass_tree_is_clean() {
+    let root = temp_root("clean");
+    std::fs::write(
+        root.join("rust/src/doc_drift_pass.rs"),
+        include_str!("fixtures/doc_drift_pass.rs"),
+    )
+    .unwrap();
+    std::fs::write(root.join("DESIGN.md"), "# Design\n\n## §1 Overview\n\nWords.\n").unwrap();
+    std::fs::write(
+        root.join("README.md"),
+        "Knobs: `TOR_SSM_DOCUMENTED_KNOB` controls the frobnicator.\n",
+    )
+    .unwrap();
+
+    let (findings, files_scanned) = tor_lint::run(&root).unwrap();
+    assert_eq!(files_scanned, 1);
+    assert!(findings.is_empty(), "{findings:?}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// JSON report shape
+// ---------------------------------------------------------------------------
+
+#[test]
+fn json_report_has_stable_shape_counts_and_reasons() {
+    let findings = lint_source(
+        "rust/src/coordinator/http.rs",
+        include_str!("fixtures/allow_one.rs"),
+        false,
+    );
+    let json = report::to_json(&findings, 1);
+    assert!(json.contains("\"version\": 1"), "{json}");
+    assert!(json.contains("\"files_scanned\": 1"), "{json}");
+    // Every check id appears in counts even when zero.
+    for id in tor_lint::checks::CHECK_IDS {
+        assert!(json.contains(&format!("\"{id}\": ")), "missing count for {id}: {json}");
+    }
+    assert!(json.contains("\"panic-serving\": 1"), "one unsuppressed finding: {json}");
+    assert!(json.contains("\"suppressed\": 1"), "{json}");
+    assert!(
+        json.contains("\"allow_reason\": \"fixture: prove one annotation suppresses one finding\""),
+        "{json}"
+    );
+    assert_eq!(unsuppressed(&findings), 1);
+}
+
+#[test]
+fn json_report_sorts_findings_by_file_line_check() {
+    let findings = lint_source(
+        "rust/src/coordinator/http.rs",
+        include_str!("fixtures/panic_fail.rs"),
+        false,
+    );
+    let json = report::to_json(&findings, 1);
+    let positions: Vec<usize> = [2usize, 3, 5, 7]
+        .iter()
+        .map(|l| json.find(&format!("\"line\": {l},")).unwrap_or(usize::MAX))
+        .collect();
+    assert!(
+        positions.windows(2).all(|w| w[0] < w[1]),
+        "findings must render in (file, line, check) order: {json}"
+    );
+}
